@@ -1,0 +1,73 @@
+//! GraphRAG demo (§3.2, Figure 4): knowledge-graph question answering
+//! with structure-aware retrieval vs a text-similarity-only baseline,
+//! plus the TXT2KG ingestion path.
+//!
+//! Run: `cargo run --release --example graphrag`.
+
+use pyg2::datasets::kgqa::{self, KgqaConfig};
+use pyg2::rag::{GraphRag, Txt2Kg};
+use pyg2::runtime::Engine;
+
+fn main() -> pyg2::Result<()> {
+    pyg2::util::logging::init();
+    let engine = Engine::load("artifacts")?;
+
+    // TXT2KG: unstructured text -> triples (the ingestion front door).
+    let mut kg = Txt2Kg::new();
+    kg.ingest(
+        "the capital of france is paris. the capital of japan is tokyo. \
+         paris hosts louvre. tokyo hosts skytree. france borders spain.",
+    );
+    println!("TXT2KG ingested {} triples from free text", kg.num_triples());
+    println!("  query(capital of france) = {:?}", kg.query("france", "capital"));
+
+    // KGQA benchmark: 2-hop questions over a synthetic KG.
+    let ds = kgqa::generate(&KgqaConfig {
+        num_entities: 500,
+        num_questions: 150,
+        seed: 4,
+        ..Default::default()
+    })?;
+    println!(
+        "\nKGQA: {} entities, {} triples, {} two-hop questions",
+        ds.num_entities,
+        ds.triples.len(),
+        ds.questions.len()
+    );
+
+    let rag = GraphRag::new(&engine, &ds)?;
+    let (mut rag_hits, mut base_hits) = (0usize, 0usize);
+    for q in &ds.questions {
+        if rag.answer(&q.text)? == Some(q.answer) {
+            rag_hits += 1;
+        }
+        if rag.baseline_answer(&q.text) == Some(q.answer) {
+            base_hits += 1;
+        }
+    }
+    let n = ds.questions.len() as f64;
+    let base_acc = 100.0 * base_hits as f64 / n;
+    let rag_acc = 100.0 * rag_hits as f64 / n;
+    println!("\n  text-similarity baseline (agentic-RAG analog): {base_acc:.1}%");
+    println!("  GraphRAG (retrieval + GNN scorer HLO):          {rag_acc:.1}%");
+    println!(
+        "  (paper reports 16% -> 32% on WebQSP with a trained G-Retriever; \
+         the shape — structure-aware retrieval winning by >=2x — is the claim under test)"
+    );
+
+    // Show one worked example.
+    let q = &ds.questions[0];
+    println!("\nworked example:");
+    println!("  Q: {}", q.text);
+    let sub = rag.retrieve(q.anchor);
+    println!("  retrieved subgraph: {} nodes, {} edges", sub.nodes.len(), sub.row.len());
+    println!(
+        "  predicted: {:?}   ground truth: {}",
+        rag.answer(&q.text)?.map(|e| ds.entity_names[e as usize].clone()),
+        ds.entity_names[q.answer as usize]
+    );
+
+    assert!(rag_acc >= 2.0 * base_acc.max(2.0), "GraphRAG must at least double the baseline");
+    println!("graphrag OK");
+    Ok(())
+}

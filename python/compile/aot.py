@@ -1,0 +1,371 @@
+"""AOT lowering driver (build time): lowers every model variant and every
+micro-op to HLO *text* artifacts plus a `manifest.json` the Rust runtime
+consumes. Python never runs after this step.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact inventory (see DESIGN.md experiment index):
+* `{arch}_{mode}[_trim]_train`  — fused train-step HLOs (Tables 1-2)
+* `{arch}_infer`                — fused inference HLOs
+* `op_*`                        — micro-op HLOs for the eager executor
+* `gcn_explain`                 — gradient-based explainer step (Fig. 2)
+* `rdl_train`                   — hetero grouped-matmul model (§3.1)
+* `rag_scorer`                  — GraphRAG subgraph scorer (§3.2)
+* `kernel_*`                    — standalone Pallas kernel HLOs (C5)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import ops as O
+
+# ---------------------------------------------------------------------------
+# Defaults (the bench/quickstart bucket; Rust reads these from the manifest)
+# ---------------------------------------------------------------------------
+
+DEFAULT = dict(
+    num_seeds=64,
+    fanouts=[4, 4, 4],
+    feature_dim=64,
+    hidden_dim=64,
+    num_classes=7,
+    lr=0.15,
+)
+
+RDL = dict(num_types=4, nt_pad=256, f_in=16, hidden=32, s_pad=64, e_pad=4096, lr=0.05)
+RAG = dict(n_pad=64, e_pad=256, f_dim=32, hidden=32)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"programs": {}, "ops": {}, "buckets": {}, "config": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def write_hlo(self, name, fn, arg_specs):
+        # keep_unused: the Rust runtime passes every declared input, so
+        # arguments an architecture ignores (e.g. GCN never reads `mask`)
+        # must survive into the HLO entry signature.
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        return fname
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        n_prog = len(self.manifest["programs"])
+        n_ops = len(self.manifest["ops"])
+        print(f"wrote {n_prog} programs + {n_ops} op artifacts -> {self.out_dir}")
+
+
+# ---------------------------------------------------------------------------
+# Fused model artifacts
+# ---------------------------------------------------------------------------
+
+BATCH_INPUTS = [
+    ("x", lambda b: (b["node_cum"][-1], b["f"]), "f32"),
+    ("row", lambda b: (b["edge_cum"][-1],), "i32"),
+    ("col", lambda b: (b["edge_cum"][-1],), "i32"),
+    ("ew", lambda b: (b["edge_cum"][-1],), "f32"),
+    ("mask", lambda b: (b["edge_cum"][-1],), "f32"),
+    ("mask_bias", lambda b: (b["edge_cum"][-1],), "f32"),
+    ("labels", lambda b: (b["s"],), "i32"),
+    ("seed_mask", lambda b: (b["s"],), "f32"),
+]
+
+
+def emit_fused(em, bucket, lr):
+    for arch in M.ARCHS:
+        pspecs = M.param_specs(arch, bucket)
+        batch_specs = [spec(fn(bucket), dt) for _, fn, dt in BATCH_INPUTS]
+        infer_specs = batch_specs[:6]
+
+        for trim in (False, True):
+            step = M.fused_train_step(arch, bucket, trim, lr)
+
+            def flat_step(*args, _step=step, _np=len(pspecs)):
+                params = {name: a for (name, _), a in zip(pspecs, args[:_np])}
+                loss, logits, newp = _step(params, *args[_np:])
+                return (loss, logits, *[newp[name] for name, _ in pspecs])
+
+            name = f"{arch}_train" + ("_trim" if trim else "")
+            fname = em.write_hlo(
+                name, flat_step, [spec(s) for _, s in pspecs] + batch_specs
+            )
+            em.manifest["programs"][name] = {
+                "kind": "fused_train",
+                "file": fname,
+                "arch": arch,
+                "trim": trim,
+                "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+                "inputs": [
+                    {"name": n, "shape": list(fn(bucket)), "dtype": dt}
+                    for n, fn, dt in BATCH_INPUTS
+                ],
+                "outputs": ["loss", "logits"] + [n for n, _ in pspecs],
+            }
+
+        infer = M.fused_infer(arch, bucket, trim=False)
+
+        def flat_infer(*args, _infer=infer, _np=len(pspecs)):
+            params = {name: a for (name, _), a in zip(pspecs, args[:_np])}
+            return (_infer(params, *args[_np:]),)
+
+        fname = em.write_hlo(
+            f"{arch}_infer", flat_infer, [spec(s) for _, s in pspecs] + infer_specs
+        )
+        em.manifest["programs"][f"{arch}_infer"] = {
+            "kind": "fused_infer",
+            "file": fname,
+            "arch": arch,
+            "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+            "inputs": [
+                {"name": n, "shape": list(fn(bucket)), "dtype": dt}
+                for n, fn, dt in BATCH_INPUTS[:6]
+            ],
+            "outputs": ["logits"],
+        }
+        print(f"  fused {arch}: train, train_trim, infer")
+
+
+# ---------------------------------------------------------------------------
+# Eager plans + micro-op artifacts
+# ---------------------------------------------------------------------------
+
+def emit_eager(em, bucket, lr):
+    all_artifacts = {}
+    for arch in M.ARCHS:
+        for trim in (False, True):
+            plan = M.build_plan(arch, bucket, trim, lr)
+            name = f"{arch}_eager" + ("_trim" if trim else "")
+            m = plan.to_manifest()
+            m["kind"] = "eager_plan"
+            em.manifest["programs"][name] = m
+            all_artifacts.update(plan.unique_artifacts())
+    for aid, (kind, in_specs, meta) in sorted(all_artifacts.items()):
+        fn = functools.partial(_op_fn, kind, meta)
+        arg_specs = [spec(s, dt) for s, dt in in_specs]
+        fname = em.write_hlo(aid, fn, arg_specs)
+        em.manifest["ops"][aid] = {
+            "kind": kind,
+            "file": fname,
+            "inputs": [{"shape": list(s), "dtype": dt} for s, dt in in_specs],
+            "meta": meta,
+        }
+    print(f"  eager: {len(all_artifacts)} unique op artifacts")
+
+
+def _op_fn(kind, meta, *args):
+    return (O.run_op(kind, list(args), meta),)
+
+
+# ---------------------------------------------------------------------------
+# Explain / RDL / RAG / kernels
+# ---------------------------------------------------------------------------
+
+def emit_explain(em, bucket):
+    pspecs = M.param_specs("gcn", bucket)
+    batch_specs = [spec(fn(bucket), dt) for _, fn, dt in BATCH_INPUTS]
+    step = M.explain_step("gcn", bucket, trim=False)
+
+    def flat(*args, _np=len(pspecs)):
+        params = {n: a for (n, _), a in zip(pspecs, args[:_np])}
+        return step(params, *args[_np:])
+
+    fname = em.write_hlo("gcn_explain", flat, [spec(s) for _, s in pspecs] + batch_specs)
+    em.manifest["programs"]["gcn_explain"] = {
+        "kind": "explain",
+        "file": fname,
+        "arch": "gcn",
+        "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+        "inputs": [
+            {"name": n, "shape": list(fn(bucket)), "dtype": dt}
+            for n, fn, dt in BATCH_INPUTS
+        ],
+        "outputs": ["loss", "g_ew", "g_x"],
+    }
+    print("  explain: gcn_explain")
+
+
+def emit_rdl(em):
+    c = RDL
+    n_flat = c["num_types"] * c["nt_pad"]
+    pspecs = M.rdl_param_specs(c["num_types"], c["f_in"], c["hidden"])
+    step = M.rdl_train_step(
+        c["num_types"], c["nt_pad"], c["f_in"], c["hidden"], n_flat, c["e_pad"],
+        c["s_pad"], c["lr"], use_pallas=True,
+    )
+    inputs = [
+        ("x_typed", (c["num_types"], c["nt_pad"], c["f_in"]), "f32"),
+        ("row", (c["e_pad"],), "i32"),
+        ("col", (c["e_pad"],), "i32"),
+        ("ew", (c["e_pad"],), "f32"),
+        ("labels", (c["s_pad"],), "i32"),
+        ("seed_mask", (c["s_pad"],), "f32"),
+    ]
+
+    def flat(*args, _np=len(pspecs)):
+        params = {n: a for (n, _), a in zip(pspecs, args[:_np])}
+        loss, logits, newp = step(params, *args[_np:])
+        return (loss, logits, *[newp[n] for n, _ in pspecs])
+
+    fname = em.write_hlo(
+        "rdl_train", flat, [spec(s) for _, s in pspecs] + [spec(s, d) for _, s, d in inputs]
+    )
+    em.manifest["programs"]["rdl_train"] = {
+        "kind": "rdl_train",
+        "file": fname,
+        "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+        "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs],
+        "outputs": ["loss", "logits"] + [n for n, _ in pspecs],
+        "config": c,
+    }
+    print("  rdl: rdl_train (grouped-matmul Pallas encoder)")
+
+
+def emit_rag(em):
+    c = RAG
+    pspecs = M.rag_param_specs(c["f_dim"], c["hidden"])
+    score = M.rag_scorer(c["n_pad"], c["e_pad"], c["f_dim"], c["hidden"])
+    inputs = [
+        ("x", (c["n_pad"], c["f_dim"]), "f32"),
+        ("row", (c["e_pad"],), "i32"),
+        ("col", (c["e_pad"],), "i32"),
+        ("ew", (c["e_pad"],), "f32"),
+        ("q", (c["f_dim"],), "f32"),
+    ]
+
+    def flat(*args, _np=len(pspecs)):
+        params = {n: a for (n, _), a in zip(pspecs, args[:_np])}
+        return (score(params, *args[_np:]),)
+
+    fname = em.write_hlo(
+        "rag_scorer", flat, [spec(s) for _, s in pspecs] + [spec(s, d) for _, s, d in inputs]
+    )
+    em.manifest["programs"]["rag_scorer"] = {
+        "kind": "rag_scorer",
+        "file": fname,
+        "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+        "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs],
+        "outputs": ["scores"],
+        "config": c,
+    }
+    print("  rag: rag_scorer")
+
+
+def emit_kernels(em):
+    """Standalone kernel HLOs for the C5 bench: the Pallas grouped matmul
+    vs a per-type XLA loop at identical shapes, plus segment-sum."""
+    from .kernels.grouped_matmul import grouped_matmul
+    from .kernels import ref as R
+
+    t, n, f, h = 8, 256, 64, 64
+
+    fname = em.write_hlo(
+        "kernel_grouped_matmul",
+        lambda x, w: (grouped_matmul(x, w, tile_n=128),),
+        [spec((t, n, f)), spec((t, f, h))],
+    )
+    em.manifest["programs"]["kernel_grouped_matmul"] = {
+        "kind": "kernel",
+        "file": fname,
+        "inputs": [
+            {"name": "x", "shape": [t, n, f], "dtype": "f32"},
+            {"name": "w", "shape": [t, f, h], "dtype": "f32"},
+        ],
+        "outputs": ["y"],
+    }
+
+    def looped(x, w):
+        outs = [x[i] @ w[i] for i in range(t)]
+        return (jnp.stack(outs),)
+
+    fname = em.write_hlo("kernel_looped_matmul", looped, [spec((t, n, f)), spec((t, f, h))])
+    em.manifest["programs"]["kernel_looped_matmul"] = {
+        "kind": "kernel",
+        "file": fname,
+        "inputs": [
+            {"name": "x", "shape": [t, n, f], "dtype": "f32"},
+            {"name": "w", "shape": [t, f, h], "dtype": "f32"},
+        ],
+        "outputs": ["y"],
+    }
+
+    e, nseg = 1024, 256
+    fname = em.write_hlo(
+        "kernel_segment_sum_ref",
+        lambda m, i: (R.segment_sum_ref(m, i, nseg),),
+        [spec((e, f)), spec((e,), "i32")],
+    )
+    em.manifest["programs"]["kernel_segment_sum_ref"] = {
+        "kind": "kernel",
+        "file": fname,
+        "inputs": [
+            {"name": "messages", "shape": [e, f], "dtype": "f32"},
+            {"name": "ids", "shape": [e], "dtype": "i32"},
+        ],
+        "outputs": ["y"],
+    }
+    print("  kernels: grouped_matmul (pallas), looped_matmul, segment_sum_ref")
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seeds", type=int, default=DEFAULT["num_seeds"])
+    args = ap.parse_args()
+
+    bucket = M.make_bucket(
+        args.seeds,
+        DEFAULT["fanouts"],
+        DEFAULT["feature_dim"],
+        DEFAULT["hidden_dim"],
+        DEFAULT["num_classes"],
+    )
+    em = Emitter(args.out)
+    em.manifest["buckets"]["default"] = bucket
+    em.manifest["config"] = {"lr": DEFAULT["lr"], "rdl": RDL, "rag": RAG}
+
+    print("lowering fused variants ...")
+    emit_fused(em, bucket, DEFAULT["lr"])
+    print("lowering eager plans + micro-ops ...")
+    emit_eager(em, bucket, DEFAULT["lr"])
+    emit_explain(em, bucket)
+    emit_rdl(em)
+    emit_rag(em)
+    emit_kernels(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

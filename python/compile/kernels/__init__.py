@@ -1,0 +1,1 @@
+"""L1 Pallas kernels: segmented aggregation, grouped matmul, CSR SpMM."""

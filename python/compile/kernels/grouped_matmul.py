@@ -1,0 +1,92 @@
+"""Pallas grouped-matmul kernel (L1) — the CUTLASS grouped-GEMM analog.
+
+Heterogeneous message passing projects every node type with its own weight
+matrix: {H_T @ W_T}_{T in node types} (§2.2). The paper implements this
+with CUTLASS grouped GEMM on GPU; the TPU rethink is a 2-D grid over
+(type, row-tile) where each program issues one MXU-shaped matmul of its
+(TILE_N × F) block against the type's (F × H) weight slab. Types with few
+nodes are padded to the tile size by the caller (the type-bucketed layout
+the Rust loader produces).
+
+VMEM per program: TILE_N·F + F·H + TILE_N·H f32 words — independent of the
+number of types, which is the point: skewed type sizes do not fragment the
+schedule the way a per-type loop of XLA matmuls does.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 128
+
+
+def _grouped_matmul_kernel(x_ref, w_ref, o_ref):
+    # x_ref: [1, TILE_N, F], w_ref: [1, F, H] -> o_ref: [1, TILE_N, H]
+    x = x_ref[0]
+    w = w_ref[0]
+    o_ref[0, ...] = jnp.dot(x, w, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def grouped_matmul(x, w, tile_n=DEFAULT_TILE_N):
+    """x [T, N, F] @ w [T, F, H] -> [T, N, H] with a (T, N-tile) grid."""
+    t, orig_n, f = x.shape
+    _, _, h = w.shape
+    tile_n = min(tile_n, orig_n)
+    if orig_n % tile_n != 0:
+        pad = tile_n - orig_n % tile_n
+        x = jnp.concatenate([x, jnp.zeros((t, pad, f), x.dtype)], axis=1)
+    n_pad = x.shape[1]
+    out = pl.pallas_call(
+        _grouped_matmul_kernel,
+        grid=(t, n_pad // tile_n),
+        in_specs=[
+            pl.BlockSpec((1, tile_n, f), lambda ti, ni: (ti, ni, 0)),
+            pl.BlockSpec((1, f, h), lambda ti, ni: (ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n, h), lambda ti, ni: (ti, ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n_pad, h), x.dtype),
+        interpret=True,
+    )(x, w)
+    return out[:, :orig_n, :]
+
+
+@jax.custom_vjp
+def grouped_matmul_ad(x, w):
+    """Differentiable wrapper: pallas_call has no built-in reverse-mode
+    rule, but the VJP of a grouped matmul is two grouped matmuls — so the
+    backward pass reuses the same kernel (transposed slabs)."""
+    return grouped_matmul(x, w)
+
+
+def _gm_fwd(x, w):
+    return grouped_matmul(x, w), (x, w)
+
+
+def _gm_bwd(res, g):
+    x, w = res
+    g_x = grouped_matmul(g, jnp.swapaxes(w, 1, 2))  # [T,N,H] @ [T,H,F]
+    g_w = grouped_matmul(jnp.swapaxes(x, 1, 2), g)  # [T,F,N] @ [T,N,H]
+    return g_x, g_w
+
+
+grouped_matmul_ad.defvjp(_gm_fwd, _gm_bwd)
+
+
+def vmem_bytes(tile_n, f, h, dtype_bytes=4):
+    """Analytic VMEM footprint per program (perf estimate, DESIGN.md)."""
+    return dtype_bytes * (tile_n * f + f * h + tile_n * h)
+
+
+def mxu_utilization_estimate(tile_n, f, h, mxu=128):
+    """Fraction of MXU 128×128×128 macro-ops doing useful work for one
+    program's (tile_n × f) @ (f × h) matmul."""
+    import math
+
+    useful = tile_n * f * h
+    issued = (
+        math.ceil(tile_n / mxu) * math.ceil(f / mxu) * math.ceil(h / mxu) * mxu**3
+    )
+    return useful / issued

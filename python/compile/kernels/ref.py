@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package must agree with its oracle here to
+float tolerance; `python/tests/test_kernels.py` sweeps shapes/dtypes with
+hypothesis and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def segment_sum_ref(messages, segment_ids, num_segments):
+    """Sum rows of `messages` [E, F] into `num_segments` buckets.
+
+    `segment_ids` must be sorted ascending (the fused message-passing
+    contract: edges sorted by destination).
+    """
+    out = jnp.zeros((num_segments, messages.shape[1]), dtype=messages.dtype)
+    return out.at[segment_ids].add(messages)
+
+
+def segment_mean_ref(messages, segment_ids, num_segments):
+    """Mean-aggregate rows into buckets (empty buckets give 0)."""
+    s = segment_sum_ref(messages, segment_ids, num_segments)
+    cnt = jnp.zeros((num_segments, 1), dtype=messages.dtype).at[segment_ids].add(1.0)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def segment_max_ref(messages, segment_ids, num_segments):
+    """Max-aggregate rows into buckets (empty buckets give 0, matching the
+    relu-output convention used by the EdgeCNN aggregation)."""
+    out = jnp.zeros((num_segments, messages.shape[1]), dtype=messages.dtype)
+    return out.at[segment_ids].max(messages)
+
+
+def grouped_matmul_ref(x, w):
+    """Per-type projection: x [T, N, F] @ w [T, F, H] -> [T, N, H].
+
+    The heterogeneous-GNN workhorse (§2.2): one matmul per node type with
+    shared scheduling, the CUTLASS grouped-GEMM analog.
+    """
+    return jnp.einsum("tnf,tfh->tnh", x, w)
+
+
+def spmm_ref(indptr, indices, values, dense):
+    """CSR (indptr/indices/values over N rows) × dense [N, F] -> [N, F]."""
+    num_rows = indptr.shape[0] - 1
+    # Expand CSR to COO row ids: row r repeats degree(r) times.
+    row_ids = jnp.repeat(
+        jnp.arange(num_rows), jnp.diff(indptr), total_repeat_length=indices.shape[0]
+    )
+    gathered = dense[indices] * values[:, None]
+    out = jnp.zeros((num_rows, dense.shape[1]), dtype=dense.dtype)
+    return out.at[row_ids].add(gathered)

@@ -1,0 +1,149 @@
+"""Pallas segmented-aggregation kernels (L1).
+
+The paper's "accelerated message passing" replaces edge-level atomics with
+sorted segmented reductions (§2.2). On GPU that is a segmented scan; on TPU
+the natural mapping is:
+
+* sort edges by destination (done once by the sampler — its BFS output is
+  already dst-sorted),
+* stream tiles of the sorted message matrix HBM→VMEM via `BlockSpec`,
+* reduce each tile into the output block that lives in VMEM across the
+  whole (sequential) grid — the standard Pallas accumulation idiom, no
+  atomics anywhere.
+
+VMEM footprint per program: TILE_E·F (messages) + N·F (accumulator) f32
+words; see DESIGN.md §Perf for the utilization estimate.
+
+Kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness vehicle and the
+TPU numbers are estimated analytically (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_E = 128
+
+
+def _segment_sum_kernel(ids_ref, msg_ref, o_ref, *, tile_e):
+    """One grid step: accumulate `tile_e` sorted messages into the output."""
+    step = pl.program_id(0)
+
+    # Zero the accumulator on the first grid step only; it persists in
+    # VMEM across steps because every step maps to the same output block.
+    @pl.when(step == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    msg = msg_ref[...]  # [tile_e, F]
+    ids = ids_ref[...]  # [tile_e]
+
+    def body(i, _):
+        seg = ids[i]
+        row = pl.load(o_ref, (pl.dslice(seg, 1), slice(None)))
+        pl.store(o_ref, (pl.dslice(seg, 1), slice(None)), row + msg[i][None, :])
+        return 0
+
+    jax.lax.fori_loop(0, tile_e, body, 0)
+
+
+def _segment_max_kernel(ids_ref, msg_ref, o_ref, *, tile_e):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    msg = msg_ref[...]
+    ids = ids_ref[...]
+
+    def body(i, _):
+        seg = ids[i]
+        row = pl.load(o_ref, (pl.dslice(seg, 1), slice(None)))
+        pl.store(
+            o_ref,
+            (pl.dslice(seg, 1), slice(None)),
+            jnp.maximum(row, msg[i][None, :]),
+        )
+        return 0
+
+    jax.lax.fori_loop(0, tile_e, body, 0)
+
+
+def _pad_to_multiple(messages, segment_ids, tile_e, fill_id):
+    e = messages.shape[0]
+    e_pad = ((e + tile_e - 1) // tile_e) * tile_e
+    if e_pad == e:
+        return messages, segment_ids
+    pad = e_pad - e
+    messages = jnp.concatenate(
+        [messages, jnp.zeros((pad, messages.shape[1]), messages.dtype)]
+    )
+    segment_ids = jnp.concatenate(
+        [segment_ids, jnp.full((pad,), fill_id, segment_ids.dtype)]
+    )
+    return messages, segment_ids
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def segment_sum(messages, segment_ids, num_segments, tile_e=DEFAULT_TILE_E):
+    """Segmented sum of dst-sorted `messages` [E, F] into [N, F].
+
+    Padding rows (zero messages) may carry any valid segment id; we route
+    them to segment `num_segments - 1` where they add zero.
+    """
+    tile_e = min(tile_e, max(messages.shape[0], 1))
+    messages, segment_ids = _pad_to_multiple(
+        messages, segment_ids, tile_e, num_segments - 1
+    )
+    e_pad, f = messages.shape
+    grid = e_pad // tile_e
+    return pl.pallas_call(
+        functools.partial(_segment_sum_kernel, tile_e=tile_e),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+            pl.BlockSpec((tile_e, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, f), messages.dtype),
+        interpret=True,
+    )(segment_ids, messages)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def segment_max(messages, segment_ids, num_segments, tile_e=DEFAULT_TILE_E):
+    """Segmented max (with 0 init — the EdgeCNN/relu convention)."""
+    tile_e = min(tile_e, max(messages.shape[0], 1))
+    messages, segment_ids = _pad_to_multiple(
+        messages, segment_ids, tile_e, num_segments - 1
+    )
+    e_pad, f = messages.shape
+    grid = e_pad // tile_e
+    return pl.pallas_call(
+        functools.partial(_segment_max_kernel, tile_e=tile_e),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+            pl.BlockSpec((tile_e, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, f), messages.dtype),
+        interpret=True,
+    )(segment_ids, messages)
+
+
+def segment_mean(messages, segment_ids, num_segments, tile_e=DEFAULT_TILE_E):
+    """Segmented mean: sum kernel + count kernel + divide."""
+    s = segment_sum(messages, segment_ids, num_segments, tile_e)
+    ones = jnp.ones((messages.shape[0], 1), messages.dtype)
+    cnt = segment_sum(ones, segment_ids, num_segments, tile_e)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def vmem_bytes(tile_e, num_segments, feature_dim, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (perf estimate, DESIGN.md)."""
+    return dtype_bytes * (tile_e * feature_dim + num_segments * feature_dim + tile_e)

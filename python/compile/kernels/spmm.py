@@ -1,0 +1,74 @@
+"""Pallas CSR SpMM kernel (L1).
+
+Sparse matrix (CSR) × dense features — the cached-CSR fast path of §2.2:
+when `EdgeIndex` has its CSR cache filled, message passing with linear
+message functions becomes one SpMM per layer. Row-tiled: each grid step
+owns TILE_R output rows and walks their nnz ranges.
+
+TPU note: a production kernel would place `indptr` in SMEM via scalar
+prefetch and double-buffer the gathered rows; interpret mode keeps the
+whole operand set resident, which we document as the VMEM-estimate
+difference in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_R = 64
+
+
+def _spmm_kernel(indptr_ref, indices_ref, values_ref, dense_ref, o_ref, *, tile_r):
+    step = pl.program_id(0)
+    row0 = step * tile_r
+    indptr = indptr_ref[...]
+    dense = dense_ref[...]
+    values = values_ref[...]
+    indices = indices_ref[...]
+
+    def row_body(i, _):
+        r = row0 + i
+        lo = indptr[r]
+        hi = indptr[r + 1]
+
+        def nnz_body(j, acc):
+            c = indices[j]
+            v = values[j]
+            return acc + v * pl.load(dense_ref, (pl.dslice(c, 1), slice(None)))[0]
+
+        acc0 = jnp.zeros((dense.shape[1],), dense.dtype)
+        acc = jax.lax.fori_loop(lo, hi, nnz_body, acc0)
+        pl.store(o_ref, (pl.dslice(i, 1), slice(None)), acc[None, :])
+        return 0
+
+    jax.lax.fori_loop(0, tile_r, row_body, 0)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def spmm(indptr, indices, values, dense, tile_r=DEFAULT_TILE_R):
+    """CSR(indptr, indices, values) over N rows × dense [N, F] -> [N, F]."""
+    num_rows = indptr.shape[0] - 1
+    tile_r = min(tile_r, max(num_rows, 1))
+    rows_pad = ((num_rows + tile_r - 1) // tile_r) * tile_r
+    if rows_pad != num_rows:
+        # Pad indptr with repeats of the last offset: padded rows are empty.
+        indptr = jnp.concatenate(
+            [indptr, jnp.full((rows_pad - num_rows,), indptr[-1], indptr.dtype)]
+        )
+    f = dense.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, tile_r=tile_r),
+        grid=(rows_pad // tile_r,),
+        in_specs=[
+            pl.BlockSpec(indptr.shape, lambda i: (0,)),
+            pl.BlockSpec(indices.shape, lambda i: (0,)),
+            pl.BlockSpec(values.shape, lambda i: (0,)),
+            pl.BlockSpec(dense.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, f), dense.dtype),
+        interpret=True,
+    )(indptr, indices, values, dense)
+    return out[:num_rows]

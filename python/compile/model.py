@@ -1,0 +1,479 @@
+"""L2 JAX models: the paper's five benchmark GNNs (GCN, GraphSAGE, GIN,
+GAT, EdgeCNN) in both execution modes, plus the RDL hetero model, the
+GraphRAG scorer, and the explain step.
+
+Every architecture is defined twice from the same primitive semantics:
+
+* `build_plan(arch, ...)`  — the **eager** micro-op plan (see `ops.py`);
+* `fused_train_step(arch, ...)` — the **compile** mode: one jax function
+  (forward + cross-entropy + backward via `jax.grad` + SGD) lowered to a
+  single fused HLO.
+
+Static-shape contract with the Rust loader (hop-aligned padding): sampled
+nodes are laid out per BFS hop in fixed regions `node_cum`, edges per hop
+in regions `edge_cum`, so *progressive trimming* (Table 2) is pure static
+slicing: layer ℓ of L uses the first `edge_cum[L-ℓ-1]` edges and the first
+`node_cum[L-ℓ]` nodes — zero-copy, as in the paper.
+
+Inputs shared by all variants:
+  x         [N, F]   hop-aligned node features
+  row, col  [E] i32  local edge endpoints (messages flow row -> col)
+  ew        [E]      edge weights (mask × normalization; 0 on padding)
+  mask      [E]      binary edge mask
+  mask_bias [E]      0 on real edges, -1e9 on padding (GAT softmax)
+  labels    [S] i32  seed labels (-1 padding)
+  seed_mask [S]      1 on real seeds
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+from .ops import Builder
+
+ARCHS = ("gcn", "sage", "gin", "gat", "edgecnn")
+LEAKY_SLOPE = 0.2
+
+
+# --------------------------------------------------------------------------
+# Shape buckets (must mirror rust/src/loader/batch.rs hop-aligned layout)
+# --------------------------------------------------------------------------
+
+def make_bucket(num_seeds, fanouts, feature_dim, hidden_dim, num_classes):
+    """Worst-case per-hop cumulative node/edge counts."""
+    node_cum = [num_seeds]
+    edge_cum = []
+    frontier = num_seeds
+    edges = 0
+    for f in fanouts:
+        edges += frontier * f
+        frontier *= f
+        node_cum.append(node_cum[-1] + frontier)
+        edge_cum.append(edges)
+    return {
+        "s": num_seeds,
+        "fanouts": list(fanouts),
+        "node_cum": node_cum,
+        "edge_cum": edge_cum,
+        "f": feature_dim,
+        "h": hidden_dim,
+        "c": num_classes,
+    }
+
+
+def layer_schedule(bucket, trim):
+    """Per-layer (n_in, n_out, e) sizes. L == len(fanouts) layers."""
+    L = len(bucket["fanouts"])
+    n_full, e_full = bucket["node_cum"][-1], bucket["edge_cum"][-1]
+    out = []
+    for layer in range(L):
+        if trim:
+            n_in = bucket["node_cum"][L - layer]
+            n_out = bucket["node_cum"][L - layer - 1]
+            e = bucket["edge_cum"][L - layer - 1]
+        else:
+            n_in, n_out, e = n_full, n_full, e_full
+        out.append((n_in, n_out, e))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def param_specs(arch, bucket):
+    """Ordered (name, shape) parameter list for an architecture."""
+    f, h, c = bucket["f"], bucket["h"], bucket["c"]
+    L = len(bucket["fanouts"])
+    dims = [f] + [h] * (L - 1) + [c]
+    specs = []
+    for l in range(L):
+        i, o = dims[l], dims[l + 1]
+        if arch == "gcn":
+            specs += [(f"w{l}", (i, o)), (f"b{l}", (o,))]
+        elif arch == "sage":
+            specs += [(f"ws{l}", (i, o)), (f"wn{l}", (i, o)), (f"b{l}", (o,))]
+        elif arch == "gin":
+            # 2-layer MLP per GIN layer
+            specs += [
+                (f"w1_{l}", (i, o)),
+                (f"b1_{l}", (o,)),
+                (f"w2_{l}", (o, o)),
+                (f"b2_{l}", (o,)),
+            ]
+        elif arch == "gat":
+            specs += [
+                (f"w{l}", (i, o)),
+                (f"as{l}", (o, 1)),
+                (f"ad{l}", (o, 1)),
+                (f"b{l}", (o,)),
+            ]
+        elif arch == "edgecnn":
+            # EdgeConv: MLP over (h_dst, h_src - h_dst) — edge-level, the
+            # expensive one (paper: slowest row of Tables 1-2).
+            specs += [(f"wd{l}", (i, o)), (f"wr{l}", (i, o)), (f"b{l}", (o,))]
+        else:
+            raise ValueError(arch)
+    return specs
+
+
+def init_params(arch, bucket, seed=0):
+    """Glorot-ish init, returned as a dict name -> jnp array."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in param_specs(arch, bucket):
+        if len(shape) == 1:
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            out[name] = jnp.asarray(
+                rng.uniform(-limit, limit, size=shape).astype(np.float32)
+            )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Fused (compile-mode) forward — pure jnp, shared semantics with the plans
+# --------------------------------------------------------------------------
+
+def _agg_sum(msg, col, n):
+    return jnp.zeros((n, msg.shape[1]), msg.dtype).at[col].add(msg)
+
+
+def _agg_max(msg, col, n):
+    return jnp.zeros((n, msg.shape[1]), msg.dtype).at[col].max(msg)
+
+
+def _layer_fused(arch, p, l, h, row, col, ew, mask, mask_bias, n_out, last):
+    """One message-passing layer (fused semantics)."""
+    hs = h[row]
+    if arch == "gcn":
+        agg = _agg_sum(hs * ew[:, None], col, n_out)
+        z = agg @ p[f"w{l}"] + p[f"b{l}"][None, :]
+    elif arch == "sage":
+        agg = _agg_sum(hs * ew[:, None], col, n_out)
+        z = h[:n_out] @ p[f"ws{l}"] + agg @ p[f"wn{l}"] + p[f"b{l}"][None, :]
+    elif arch == "gin":
+        agg = _agg_sum(hs * mask[:, None], col, n_out)
+        s = h[:n_out] + agg
+        z1 = jnp.maximum(s @ p[f"w1_{l}"] + p[f"b1_{l}"][None, :], 0.0)
+        z = z1 @ p[f"w2_{l}"] + p[f"b2_{l}"][None, :]
+    elif arch == "gat":
+        hw = h @ p[f"w{l}"]
+        asv = (hw @ p[f"as{l}"])[:, 0]
+        adv = (hw @ p[f"ad{l}"])[:, 0]
+        e = asv[row] + adv[col]
+        e = jnp.where(e > 0, e, LEAKY_SLOPE * e) + mask_bias
+        mx = jnp.zeros((n_out,), e.dtype).at[col].max(e)
+        ex = jnp.exp(e - mx[col]) * mask
+        z_den = jnp.zeros((n_out,), e.dtype).at[col].add(ex) + 1e-16
+        alpha = ex / z_den[col]
+        agg = _agg_sum(hw[row] * alpha[:, None], col, n_out)
+        z = agg + p[f"b{l}"][None, :]
+    elif arch == "edgecnn":
+        hd = h[col]
+        d = hs - hd
+        zm = jnp.maximum(
+            hd @ p[f"wd{l}"] + d @ p[f"wr{l}"] + p[f"b{l}"][None, :], 0.0
+        )
+        z = _agg_max(zm * mask[:, None], col, n_out)
+        return z  # relu already applied edge-level; max-agg output
+    else:
+        raise ValueError(arch)
+    return z if last else jnp.maximum(z, 0.0)
+
+
+def fused_forward(arch, bucket, trim, params, x, row, col, ew, mask, mask_bias):
+    """Full forward to seed logits [S, C]."""
+    sched = layer_schedule(bucket, trim)
+    L = len(sched)
+    h = x
+    for l, (n_in, n_out, e) in enumerate(sched):
+        h = _layer_fused(
+            arch,
+            params,
+            l,
+            h[:n_in],
+            row[:e],
+            col[:e],
+            ew[:e],
+            mask[:e],
+            mask_bias[:e],
+            n_out,
+            last=(l == L - 1),
+        )
+    return h[: bucket["s"]]
+
+
+def loss_fn(arch, bucket, trim, params, x, row, col, ew, mask, mask_bias, labels, seed_mask):
+    logits = fused_forward(arch, bucket, trim, params, x, row, col, ew, mask, mask_bias)
+    return ops.run_op("xent_loss", [logits, labels, seed_mask], {}), logits
+
+
+def fused_train_step(arch, bucket, trim, lr):
+    """Returns f(params_dict, inputs...) -> (loss, logits, new_params_dict).
+
+    Lowered once to a single HLO: forward + backward + SGD fused.
+    """
+
+    def step(params, x, row, col, ew, mask, mask_bias, labels, seed_mask):
+        (loss, logits), grads = jax.value_and_grad(
+            lambda p: loss_fn(
+                arch, bucket, trim, p, x, row, col, ew, mask, mask_bias, labels, seed_mask
+            ),
+            has_aux=True,
+        )(params)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return loss, logits, new_params
+
+    return step
+
+
+def fused_infer(arch, bucket, trim):
+    def infer(params, x, row, col, ew, mask, mask_bias):
+        return fused_forward(arch, bucket, trim, params, x, row, col, ew, mask, mask_bias)
+
+    return infer
+
+
+# --------------------------------------------------------------------------
+# Eager plans (micro-op IR) — same math, op by op
+# --------------------------------------------------------------------------
+
+def build_plan(arch, bucket, trim, lr):
+    """Build the eager-mode plan for an architecture: forward micro-ops,
+    autodiff backward micro-ops, SGD updates."""
+    b = Builder()
+    n_full, e_full = bucket["node_cum"][-1], bucket["edge_cum"][-1]
+    s = bucket["s"]
+    x = b.input("x", (n_full, bucket["f"]))
+    row = b.input("row", (e_full,), "i32")
+    col = b.input("col", (e_full,), "i32")
+    ew = b.input("ew", (e_full,))
+    mask = b.input("mask", (e_full,))
+    mask_bias = b.input("mask_bias", (e_full,))
+    labels = b.input("labels", (s,), "i32")
+    seed_mask = b.input("seed_mask", (s,))
+
+    params = {name: b.param(name, shape) for name, shape in param_specs(arch, bucket)}
+    sched = layer_schedule(bucket, trim)
+    L = len(sched)
+
+    def slc(var, n):
+        """Static row-slice (no-op when already the right size)."""
+        if b.vars[var.name].shape[0] == n:
+            return var
+        return b.emit("slice_rows", var, meta={"n": n})
+
+    h = x
+    for l, (n_in, n_out, e) in enumerate(sched):
+        last = l == L - 1
+        h_in = slc(h, n_in)
+        row_l, col_l = slc(row, e), slc(col, e)
+        ew_l, mask_l, bias_l = slc(ew, e), slc(mask, e), slc(mask_bias, e)
+        if arch == "gcn":
+            m = b.emit("gather", h_in, row_l)
+            mw = b.emit("mul_vec", m, ew_l)
+            agg = b.emit("scatter_add", mw, col_l, meta={"n": n_out})
+            z = b.emit("matmul", agg, params[f"w{l}"])
+            z = b.emit("add_bias", z, params[f"b{l}"])
+        elif arch == "sage":
+            m = b.emit("gather", h_in, row_l)
+            mw = b.emit("mul_vec", m, ew_l)
+            agg = b.emit("scatter_add", mw, col_l, meta={"n": n_out})
+            zs = b.emit("matmul", slc(h_in, n_out), params[f"ws{l}"])
+            zn = b.emit("matmul", agg, params[f"wn{l}"])
+            z = b.emit("add", zs, zn)
+            z = b.emit("add_bias", z, params[f"b{l}"])
+        elif arch == "gin":
+            m = b.emit("gather", h_in, row_l)
+            mw = b.emit("mul_vec", m, mask_l)
+            agg = b.emit("scatter_add", mw, col_l, meta={"n": n_out})
+            ssum = b.emit("add", slc(h_in, n_out), agg)
+            z1 = b.emit("matmul", ssum, params[f"w1_{l}"])
+            z1 = b.emit("add_bias", z1, params[f"b1_{l}"])
+            z1 = b.emit("relu", z1)
+            z = b.emit("matmul", z1, params[f"w2_{l}"])
+            z = b.emit("add_bias", z, params[f"b2_{l}"])
+        elif arch == "gat":
+            hw = b.emit("matmul", h_in, params[f"w{l}"])
+            asv = b.emit("to_vec", b.emit("matmul", hw, params[f"as{l}"]))
+            adv = b.emit("to_vec", b.emit("matmul", hw, params[f"ad{l}"]))
+            e_s = b.emit("gather", asv, row_l)
+            e_d = b.emit("gather", slc(adv, n_out), col_l)
+            ee = b.emit("add", e_s, e_d)
+            ee = b.emit("leaky_relu", ee, meta={"slope": LEAKY_SLOPE})
+            ee = b.emit("add", ee, bias_l)
+            mx = b.emit("scatter_max", ee, col_l, meta={"n": n_out})
+            ec = b.emit("sub", ee, b.emit("gather", mx, col_l))
+            ex = b.emit("exp", ec)
+            ex = b.emit("mul", ex, mask_l)
+            zden = b.emit("scatter_add", ex, col_l, meta={"n": n_out})
+            zden = b.emit("add_eps", zden, meta={"eps": 1e-16})
+            alpha = b.emit("div", ex, b.emit("gather", zden, col_l))
+            hm = b.emit("gather", hw, row_l)
+            hma = b.emit("mul_vec", hm, alpha)
+            agg = b.emit("scatter_add", hma, col_l, meta={"n": n_out})
+            z = b.emit("add_bias", agg, params[f"b{l}"])
+        elif arch == "edgecnn":
+            hs = b.emit("gather", h_in, row_l)
+            hd = b.emit("gather", h_in, col_l)
+            d = b.emit("sub", hs, hd)
+            zd = b.emit("matmul", hd, params[f"wd{l}"])
+            zr = b.emit("matmul", d, params[f"wr{l}"])
+            zm = b.emit("add", zd, zr)
+            zm = b.emit("add_bias", zm, params[f"b{l}"])
+            zm = b.emit("relu", zm)
+            zm = b.emit("mul_vec", zm, mask_l)
+            z = b.emit("scatter_max", zm, col_l, meta={"n": n_out})
+            h = z
+            continue  # relu applied edge-level; no node-level activation
+        else:
+            raise ValueError(arch)
+        h = z if last else b.emit("relu", z)
+
+    logits = slc(h, s)
+    b.mark_output("logits", logits)
+    loss = b.emit("xent_loss", logits, labels, seed_mask)
+    b.mark_output("loss", loss)
+    b.backward(loss, lr)
+    return b
+
+
+# --------------------------------------------------------------------------
+# GAT note: in eager mode the scatter_max over `ee` (which includes the
+# -1e9 mask bias on padding edges) matches the fused `.at[col].max` with
+# zero init only because real seed nodes always have >= 1 real in-edge in
+# our samplers; nodes with no real edges produce garbage logits that the
+# seed mask removes. The plan/fused equivalence test in
+# python/tests/test_plans.py pins this behaviour.
+# --------------------------------------------------------------------------
+
+
+# --------------------------------------------------------------------------
+# Explain step (§2.4): gradients w.r.t. the edge weights and features —
+# what CaptumExplainer does after the callback makes edges differentiable.
+# --------------------------------------------------------------------------
+
+def explain_step(arch, bucket, trim):
+    def step(params, x, row, col, ew, mask, mask_bias, labels, seed_mask):
+        def f(ew_in, x_in):
+            loss, _ = loss_fn(
+                arch, bucket, trim, params, x_in, row, col, ew_in, mask, mask_bias, labels, seed_mask
+            )
+            return loss
+
+        loss, (g_ew, g_x) = jax.value_and_grad(f, argnums=(0, 1))(ew, x)
+        return loss, g_ew, g_x
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# RDL hetero model (§3.1): per-type encoder via the grouped-matmul Pallas
+# kernel, then 2 layers of sum-aggregation message passing over the
+# flattened typed graph, binary logits on seed rows.
+# --------------------------------------------------------------------------
+
+def rdl_train_step(num_types, nt_pad, f_in, hidden, n_flat, e_pad, s_pad, lr,
+                   use_pallas=True):
+    """Returns f(params, x_typed, row, col, ew, labels, seed_mask) ->
+    (loss, logits, new_params).
+
+    x_typed: [T, NT_pad, F] type-bucketed features. The flattened node
+    space is type-major: flat_id = t * NT_pad + i, matching the Rust-side
+    hetero batch layout.
+    """
+
+    def encode(p, x_typed):
+        if use_pallas:
+            from .kernels.grouped_matmul import grouped_matmul_ad
+
+            enc = grouped_matmul_ad(x_typed, p["w_enc"])
+        else:
+            enc = jnp.einsum("tnf,tfh->tnh", x_typed, p["w_enc"])
+        return jnp.maximum(enc.reshape(num_types * nt_pad, hidden), 0.0)
+
+    def forward(p, x_typed, row, col, ew):
+        h = encode(p, x_typed)
+        for l in range(2):
+            m = h[row] * ew[:, None]
+            agg = jnp.zeros((n_flat, hidden), h.dtype).at[col].add(m)
+            h = h @ p[f"ws{l}"] + agg @ p[f"wn{l}"] + p[f"b{l}"][None, :]
+            if l == 0:
+                h = jnp.maximum(h, 0.0)
+        return h[:s_pad] @ p["w_out"] + p["b_out"][None, :]
+
+    def step(p, x_typed, row, col, ew, labels, seed_mask):
+        def lf(p):
+            logits = forward(p, x_typed, row, col, ew)
+            return ops.run_op("xent_loss", [logits, labels, seed_mask], {}), logits
+
+        (loss, logits), grads = jax.value_and_grad(lf, has_aux=True)(p)
+        new_p = jax.tree_util.tree_map(lambda a, g: a - lr * g, p, grads)
+        return loss, logits, new_p
+
+    return step
+
+
+def rdl_param_specs(num_types, f_in, hidden, num_classes=2):
+    return [
+        ("w_enc", (num_types, f_in, hidden)),
+        ("ws0", (hidden, hidden)),
+        ("wn0", (hidden, hidden)),
+        ("b0", (hidden,)),
+        ("ws1", (hidden, hidden)),
+        ("wn1", (hidden, hidden)),
+        ("b1", (hidden,)),
+        ("w_out", (hidden, num_classes)),
+        ("b_out", (num_classes,)),
+    ]
+
+
+def rdl_init_params(num_types, f_in, hidden, num_classes=2, seed=0):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in rdl_param_specs(num_types, f_in, hidden, num_classes):
+        if len(shape) == 1:
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in, fan_out = shape[-2], shape[-1]
+            limit = (6.0 / (fan_in + fan_out)) ** 0.5
+            out[name] = jnp.asarray(rng.uniform(-limit, limit, shape).astype(np.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# GraphRAG scorer (§3.2): encode the retrieved subgraph with a 2-layer GNN
+# and score each node against the query embedding (inner product).
+# --------------------------------------------------------------------------
+
+def rag_scorer(n_pad, e_pad, f_dim, hidden):
+    def score(params, x, row, col, ew, q):
+        h = jnp.maximum(x @ params["w0"] + params["b0"][None, :], 0.0)
+        for l in (1, 2):
+            m = h[row] * ew[:, None]
+            agg = jnp.zeros((n_pad, hidden), h.dtype).at[col].add(m)
+            h = jnp.maximum(h @ params[f"ws{l}"] + agg @ params[f"wn{l}"], 0.0)
+        qh = jnp.maximum(q @ params["wq"], 0.0)
+        return h @ qh
+
+    return score
+
+
+def rag_param_specs(f_dim, hidden):
+    return [
+        ("w0", (f_dim, hidden)),
+        ("b0", (hidden,)),
+        ("ws1", (hidden, hidden)),
+        ("wn1", (hidden, hidden)),
+        ("ws2", (hidden, hidden)),
+        ("wn2", (hidden, hidden)),
+        ("wq", (f_dim, hidden)),
+    ]

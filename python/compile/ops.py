@@ -1,0 +1,394 @@
+"""Micro-op IR for the *eager* execution mode (L2, build time).
+
+PyTorch's eager mode pays per-op dispatch overhead; `torch.compile` fuses
+the whole model (§2.2 Model Compilation, Tables 1-2). We reproduce that
+contrast faithfully in the AOT world:
+
+* **eager**  — the GNN is decomposed into micro-ops (gather, matmul,
+  scatter-add, ...). Each unique (op kind, shape signature, constants)
+  pair is lowered to its *own* tiny HLO executable, and the Rust runtime
+  interprets a *plan* — an op sequence with named buffers — paying a
+  dispatch + host hand-off per op, exactly like eager PyTorch pays a
+  kernel launch per op.
+* **compile** — one fused HLO for the entire train step (XLA fuses
+  internally), built in `model.py` from the same primitive semantics.
+
+This module defines the op registry (forward jax fns + VJP rules), the
+plan `Builder`, reverse-mode autodiff over recorded tapes, and a Python
+plan interpreter used by the tests to prove eager == fused numerics.
+"""
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Op registry: forward semantics. `meta` holds baked-in constants that are
+# part of the artifact identity (scatter width N, learning rate, slopes...).
+# --------------------------------------------------------------------------
+
+def _onehot(labels, num_classes):
+    return (labels[:, None] == jnp.arange(num_classes, dtype=labels.dtype)[None, :]).astype(
+        jnp.float32
+    )
+
+
+def _log_softmax(logits):
+    z = logits - logits.max(axis=1, keepdims=True)
+    return z - jnp.log(jnp.exp(z).sum(axis=1, keepdims=True))
+
+
+OPS = {
+    # indexing
+    "gather": lambda x, idx, meta: x[idx],
+    "scatter_add": lambda m, idx, meta: jnp.zeros(
+        (meta["n"],) + m.shape[1:], m.dtype
+    ).at[idx].add(m),
+    "scatter_max": lambda m, idx, meta: jnp.zeros(
+        (meta["n"],) + m.shape[1:], m.dtype
+    ).at[idx].max(m),
+    "scatter_max_grad": lambda g, m, out, idx, meta: g[idx]
+    * (m == out[idx]).astype(m.dtype),
+    "slice_rows": lambda x, meta: x[: meta["n"]],
+    "pad_rows": lambda g, meta: jnp.concatenate(
+        [g, jnp.zeros((meta["n"] - g.shape[0],) + g.shape[1:], g.dtype)], axis=0
+    ),
+    # linear algebra
+    "matmul": lambda a, b, meta: a @ b,
+    "matmul_nt": lambda a, b, meta: a @ b.T,
+    "matmul_tn": lambda a, b, meta: a.T @ b,
+    "add_bias": lambda x, b, meta: x + b[None, :],
+    "sum_rows": lambda x, meta: x.sum(axis=0),
+    # elementwise
+    "add": lambda a, b, meta: a + b,
+    "sub": lambda a, b, meta: a - b,
+    "mul": lambda a, b, meta: a * b,
+    "div": lambda a, b, meta: a / b,
+    "neg": lambda a, meta: -a,
+    "exp": lambda a, meta: jnp.exp(a),
+    "add_eps": lambda a, meta: a + meta["eps"],
+    "relu": lambda x, meta: jnp.maximum(x, 0.0),
+    "relu_grad": lambda g, x, meta: g * (x > 0.0).astype(g.dtype),
+    "leaky_relu": lambda x, meta: jnp.where(x > 0.0, x, meta["slope"] * x),
+    "leaky_relu_grad": lambda g, x, meta: g
+    * jnp.where(x > 0.0, 1.0, meta["slope"]).astype(g.dtype),
+    "mul_vec": lambda x, v, meta: x * v[:, None],
+    "rowdot": lambda a, b, meta: (a * b).sum(axis=1),
+    "to_vec": lambda x, meta: x[:, 0],
+    "to_col": lambda v, meta: v[:, None],
+    # loss + optimizer (numerically stable log-softmax via max subtraction)
+    "xent_loss": lambda logits, labels, mask, meta: (
+        -(_onehot(labels, logits.shape[1]) * _log_softmax(logits)).sum(axis=1) * mask
+    ).sum()
+    / jnp.maximum(mask.sum(), 1.0),
+    "xent_grad": lambda logits, labels, mask, meta: (
+        jnp.exp(_log_softmax(logits)) - _onehot(labels, logits.shape[1])
+    )
+    * mask[:, None]
+    / jnp.maximum(mask.sum(), 1.0),
+    "sgd": lambda p, g, meta: p - meta["lr"] * g,
+}
+
+
+def run_op(kind, args, meta):
+    """Execute an op's forward semantics on jax arrays."""
+    return OPS[kind](*args, meta=meta or {})
+
+
+# --------------------------------------------------------------------------
+# Plan IR
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Var:
+    """A named buffer in a plan."""
+
+    name: str
+    shape: tuple
+    dtype: str  # "f32" | "i32"
+
+
+@dataclass
+class Step:
+    op: str
+    inputs: list  # Var names
+    output: str
+    meta: dict = field(default_factory=dict)
+    out_shape: tuple = ()
+    out_dtype: str = "f32"
+
+    def artifact_id(self, shapes):
+        """Unique artifact name for (kind, input shapes, meta)."""
+        sig = "_".join("x".join(map(str, s)) or "s" for s in shapes)
+        msig = "_".join(f"{k}{v}" for k, v in sorted(self.meta.items()))
+        return f"op_{self.op}__{sig}" + (f"__{msig}" if msig else "")
+
+
+class Builder:
+    """Records a forward tape; `backward()` emits the gradient plan."""
+
+    def __init__(self):
+        self.vars: dict[str, Var] = {}
+        self.inputs: list[str] = []
+        self.params: list[str] = []
+        self.steps: list[Step] = []
+        self.bwd_steps: list[Step] = []
+        self.updates: list[tuple[str, str]] = []  # (param, new value var)
+        self.outputs: dict[str, str] = {}
+        self._n = 0
+
+    # -- declaration ---------------------------------------------------
+    def _fresh(self, prefix="v"):
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def _declare(self, name, shape, dtype):
+        v = Var(name, tuple(shape), dtype)
+        self.vars[name] = v
+        return v
+
+    def input(self, name, shape, dtype="f32"):
+        self.inputs.append(name)
+        return self._declare(name, shape, dtype)
+
+    def param(self, name, shape):
+        self.params.append(name)
+        return self._declare(name, shape, "f32")
+
+    def mark_output(self, key, var):
+        self.outputs[key] = var.name
+
+    # -- emission --------------------------------------------------------
+    def emit(self, kind, *args, meta=None, out_shape=None, out_dtype=None, into=None):
+        meta = dict(meta or {})
+        if out_shape is None:
+            out_shape = _infer_shape(kind, [self.vars[a.name].shape for a in args], meta)
+        if out_dtype is None:
+            # Shape-preserving ops on index tensors stay integer; everything
+            # numeric is f32.
+            out_dtype = (
+                self.vars[args[0].name].dtype
+                if kind in ("slice_rows", "pad_rows", "add", "neg")
+                else "f32"
+            )
+        name = into or self._fresh()
+        step = Step(
+            op=kind,
+            inputs=[a.name for a in args],
+            output=name,
+            meta=meta,
+            out_shape=tuple(out_shape),
+            out_dtype=out_dtype,
+        )
+        self.steps.append(step)
+        return self._declare(name, out_shape, out_dtype)
+
+    # -- autodiff ----------------------------------------------------------
+    def backward(self, loss_var, lr):
+        """Reverse the tape, emitting backward steps and SGD updates.
+
+        The final forward step must be `xent_loss` producing `loss_var`
+        (its VJP ignores the incoming seed gradient, which is 1).
+        """
+        grads: dict[str, str] = {}
+
+        def emit_b(kind, in_names, out_shape, meta=None, out_dtype="f32"):
+            name = self._fresh("g")
+            step = Step(
+                op=kind,
+                inputs=list(in_names),
+                output=name,
+                meta=dict(meta or {}),
+                out_shape=tuple(out_shape),
+                out_dtype=out_dtype,
+            )
+            self.bwd_steps.append(step)
+            self._declare(name, out_shape, out_dtype)
+            return name
+
+        def accumulate(var_name, grad_name):
+            if var_name in grads:
+                prev = grads[var_name]
+                s = self.vars[prev].shape
+                grads[var_name] = emit_b("add", [prev, grad_name], s)
+            else:
+                grads[var_name] = grad_name
+
+        assert self.steps and self.steps[-1].op == "xent_loss", "loss must be last"
+        assert self.steps[-1].output == loss_var.name
+
+        for step in reversed(self.steps):
+            if step.op == "xent_loss":
+                logits, labels, mask = step.inputs
+                g = emit_b(
+                    "xent_grad", [logits, labels, mask], self.vars[logits].shape, step.meta
+                )
+                accumulate(logits, g)
+                continue
+            if step.output not in grads:
+                continue  # no gradient flows through this value
+            g = grads[step.output]
+            ins = step.inputs
+            shp = lambda n: self.vars[n].shape  # noqa: E731
+            if step.op == "gather":
+                x, idx = ins
+                gx = emit_b("scatter_add", [g, idx], shp(x), {"n": shp(x)[0]})
+                accumulate(x, gx)
+            elif step.op == "scatter_add":
+                m, idx = ins
+                gm = emit_b("gather", [g, idx], shp(m))
+                accumulate(m, gm)
+            elif step.op == "scatter_max":
+                m, idx = ins
+                gm = emit_b(
+                    "scatter_max_grad", [g, m, step.output, idx], shp(m)
+                )
+                accumulate(m, gm)
+            elif step.op == "matmul":
+                a, b = ins
+                accumulate(a, emit_b("matmul_nt", [g, b], shp(a)))
+                accumulate(b, emit_b("matmul_tn", [a, g], shp(b)))
+            elif step.op == "add_bias":
+                x, b = ins
+                accumulate(x, g)
+                accumulate(b, emit_b("sum_rows", [g], shp(b)))
+            elif step.op == "add":
+                accumulate(ins[0], g)
+                accumulate(ins[1], g)
+            elif step.op == "sub":
+                accumulate(ins[0], g)
+                accumulate(ins[1], emit_b("neg", [g], shp(ins[1])))
+            elif step.op == "mul":
+                a, b = ins
+                accumulate(a, emit_b("mul", [g, b], shp(a)))
+                accumulate(b, emit_b("mul", [g, a], shp(b)))
+            elif step.op == "div":
+                a, b = ins
+                accumulate(a, emit_b("div", [g, b], shp(a)))
+                t = emit_b("div", [step.output, b], shp(a))
+                t2 = emit_b("mul", [g, t], shp(a))
+                accumulate(b, emit_b("neg", [t2], shp(b)))
+            elif step.op == "neg":
+                accumulate(ins[0], emit_b("neg", [g], shp(ins[0])))
+            elif step.op == "exp":
+                accumulate(ins[0], emit_b("mul", [g, step.output], shp(ins[0])))
+            elif step.op in ("add_eps",):
+                accumulate(ins[0], g)
+            elif step.op == "relu":
+                accumulate(ins[0], emit_b("relu_grad", [g, ins[0]], shp(ins[0])))
+            elif step.op == "leaky_relu":
+                accumulate(
+                    ins[0],
+                    emit_b("leaky_relu_grad", [g, ins[0]], shp(ins[0]), step.meta),
+                )
+            elif step.op == "mul_vec":
+                x, v = ins
+                accumulate(x, emit_b("mul_vec", [g, v], shp(x)))
+                accumulate(v, emit_b("rowdot", [g, x], shp(v)))
+            elif step.op == "slice_rows":
+                x = ins[0]
+                accumulate(x, emit_b("pad_rows", [g], shp(x), {"n": shp(x)[0]}))
+            elif step.op == "to_vec":
+                accumulate(ins[0], emit_b("to_col", [g], shp(ins[0])))
+            elif step.op == "to_col":
+                accumulate(ins[0], emit_b("to_vec", [g], shp(ins[0])))
+            else:
+                raise NotImplementedError(f"no VJP for {step.op}")
+
+        # SGD updates for every param that received a gradient.
+        for p in self.params:
+            if p in grads:
+                new = emit_b("sgd", [p, grads[p]], self.vars[p].shape, {"lr": lr})
+                self.updates.append((p, new))
+        return grads
+
+    # -- serialization -----------------------------------------------------
+    def to_manifest(self):
+        """JSON-ready plan description (consumed by the Rust runtime)."""
+
+        def step_json(s):
+            return {
+                "op": s.op,
+                "artifact": s.artifact_id([self.vars[i].shape for i in s.inputs]),
+                "inputs": s.inputs,
+                "output": s.output,
+                "out_shape": list(s.out_shape),
+                "out_dtype": s.out_dtype,
+            }
+
+        return {
+            "inputs": [
+                {"name": n, "shape": list(self.vars[n].shape), "dtype": self.vars[n].dtype}
+                for n in self.inputs
+            ],
+            "params": [
+                {"name": n, "shape": list(self.vars[n].shape)} for n in self.params
+            ],
+            "forward": [step_json(s) for s in self.steps],
+            "backward": [step_json(s) for s in self.bwd_steps],
+            "updates": [{"param": p, "new": n} for p, n in self.updates],
+            "outputs": self.outputs,
+        }
+
+    def unique_artifacts(self):
+        """All (artifact_id, step) pairs needing lowering, deduplicated."""
+        seen = {}
+        for s in self.steps + self.bwd_steps:
+            aid = s.artifact_id([self.vars[i].shape for i in s.inputs])
+            if aid not in seen:
+                seen[aid] = (
+                    s.op,
+                    [(self.vars[i].shape, self.vars[i].dtype) for i in s.inputs],
+                    s.meta,
+                )
+        return seen
+
+
+def _infer_shape(kind, in_shapes, meta):
+    a = in_shapes[0]
+    if kind == "gather":
+        return (in_shapes[1][0],) + tuple(a[1:])
+    if kind in ("scatter_add", "scatter_max"):
+        return (meta["n"],) + tuple(a[1:])
+    if kind == "scatter_max_grad":
+        return in_shapes[1]
+    if kind == "slice_rows":
+        return (meta["n"],) + tuple(a[1:])
+    if kind == "pad_rows":
+        return (meta["n"],) + tuple(a[1:])
+    if kind == "matmul":
+        return (a[0], in_shapes[1][1])
+    if kind == "matmul_nt":
+        return (a[0], in_shapes[1][0])
+    if kind == "matmul_tn":
+        return (a[1], in_shapes[1][1])
+    if kind == "sum_rows":
+        return tuple(a[1:])
+    if kind == "rowdot":
+        return (a[0],)
+    if kind == "to_vec":
+        return (a[0],)
+    if kind == "to_col":
+        return (a[0], 1)
+    if kind == "xent_loss":
+        return ()
+    if kind == "xent_grad":
+        return a
+    # elementwise / unary / add_bias / sgd keep the first input's shape
+    return a
+
+
+# --------------------------------------------------------------------------
+# Python plan interpreter — the reference implementation of what the Rust
+# eager executor does. Tests run plans here and compare with fused jax.
+# --------------------------------------------------------------------------
+
+def run_plan(builder, bindings, with_backward=True):
+    """Execute a plan on jax arrays. `bindings` maps input/param names to
+    arrays. Returns the full buffer environment after execution."""
+    env = dict(bindings)
+    for step in builder.steps + (builder.bwd_steps if with_backward else []):
+        args = [env[n] for n in step.inputs]
+        env[step.output] = run_op(step.op, args, step.meta)
+    return env

@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles, with
+hypothesis sweeping shapes and data."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import grouped_matmul as GM
+from compile.kernels import ref as R
+from compile.kernels import segment as S
+from compile.kernels import spmm as SP
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _sorted_ids(rng, e, n):
+    return jnp.asarray(np.sort(rng.integers(0, n, size=e)).astype(np.int32))
+
+
+@given(
+    e=st.integers(1, 200),
+    n=st.integers(1, 40),
+    f=st.integers(1, 32),
+    tile=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_segment_sum_matches_ref(e, n, f, tile, seed):
+    rng = np.random.default_rng(seed)
+    msg = jnp.asarray(rng.normal(size=(e, f)).astype(np.float32))
+    ids = _sorted_ids(rng, e, n)
+    got = S.segment_sum(msg, ids, n, tile)
+    want = R.segment_sum_ref(msg, ids, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    e=st.integers(1, 150),
+    n=st.integers(1, 30),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+def test_segment_max_matches_ref(e, n, f, seed):
+    rng = np.random.default_rng(seed)
+    # Non-negative inputs: the kernel's zero-init convention (relu outputs).
+    msg = jnp.asarray(np.abs(rng.normal(size=(e, f))).astype(np.float32))
+    ids = _sorted_ids(rng, e, n)
+    got = S.segment_max(msg, ids, n, 16)
+    want = R.segment_max_ref(msg, ids, n)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    e=st.integers(1, 150),
+    n=st.integers(1, 30),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+def test_segment_mean_matches_ref(e, n, f, seed):
+    rng = np.random.default_rng(seed)
+    msg = jnp.asarray(rng.normal(size=(e, f)).astype(np.float32))
+    ids = _sorted_ids(rng, e, n)
+    got = S.segment_mean(msg, ids, n, 16)
+    want = R.segment_mean_ref(msg, ids, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_segment_sum_empty_segments_are_zero():
+    msg = jnp.ones((3, 2), jnp.float32)
+    ids = jnp.asarray([0, 0, 4], jnp.int32)
+    out = S.segment_sum(msg, ids, 6, 8)
+    np.testing.assert_allclose(out[1:4], 0.0)
+    np.testing.assert_allclose(out[5], 0.0)
+    np.testing.assert_allclose(out[0], [2.0, 2.0])
+
+
+@given(
+    t=st.integers(1, 6),
+    n=st.integers(1, 100),
+    f=st.integers(1, 24),
+    h=st.integers(1, 24),
+    tile=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_grouped_matmul_matches_ref(t, n, f, h, tile, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, n, f)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(t, f, h)).astype(np.float32))
+    got = GM.grouped_matmul(x, w, tile)
+    want = R.grouped_matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_grouped_matmul_ad_grads_match_einsum():
+    import jax
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 32, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 8, 5)).astype(np.float32))
+    f_pallas = lambda x, w: (GM.grouped_matmul_ad(x, w) ** 2).sum()
+    f_ref = lambda x, w: (R.grouped_matmul_ref(x, w) ** 2).sum()
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-3, atol=1e-3)
+
+
+@given(
+    n=st.integers(1, 40),
+    f=st.integers(1, 16),
+    density=st.floats(0.05, 0.9),
+    seed=st.integers(0, 10_000),
+)
+def test_spmm_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.uniform(size=(n, n)) < density
+    rows, cols = np.nonzero(mask)
+    order = np.argsort(rows, kind="stable")
+    rows, cols = rows[order], cols[order]
+    indptr = np.zeros(n + 1, np.int32)
+    for r in rows:
+        indptr[r + 1] += 1
+    indptr = np.cumsum(indptr).astype(np.int32)
+    if len(rows) == 0:
+        pytest.skip("empty matrix")
+    values = jnp.asarray(rng.normal(size=len(rows)).astype(np.float32))
+    indices = jnp.asarray(cols.astype(np.int32))
+    indptr = jnp.asarray(indptr)
+    dense = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    got = SP.spmm(indptr, indices, values, dense, 8)
+    want = R.spmm_ref(indptr, indices, values, dense)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimates_positive():
+    assert S.vmem_bytes(128, 1024, 64) > 0
+    assert GM.vmem_bytes(128, 64, 64) > 0
+    u = GM.mxu_utilization_estimate(128, 64, 64)
+    assert 0 < u <= 1

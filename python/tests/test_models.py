@@ -1,0 +1,157 @@
+"""Fused model behaviour: shapes, trim equivalence on fully-real batches,
+RDL and RAG models, manifest integrity."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import ops as O
+
+from util import small_bucket, synth_batch
+
+KEYS = ["x", "row", "col", "ew", "mask", "mask_bias", "labels", "seed_mask"]
+
+
+def test_bucket_math():
+    b = M.make_bucket(4, [3, 2], 8, 16, 3)
+    assert b["node_cum"] == [4, 16, 40]
+    assert b["edge_cum"] == [12, 36]
+    sched_full = M.layer_schedule(b, trim=False)
+    assert sched_full == [(40, 40, 36), (40, 40, 36)]
+    sched_trim = M.layer_schedule(b, trim=True)
+    assert sched_trim == [(40, 16, 36), (16, 4, 12)]
+
+
+@pytest.mark.parametrize("arch", M.ARCHS)
+def test_forward_shapes(arch):
+    bucket = small_bucket()
+    batch = synth_batch(bucket, seed=1)
+    params = M.init_params(arch, bucket)
+    logits = M.fused_forward(arch, bucket, False, params, *[batch[k] for k in KEYS[:6]])
+    assert logits.shape == (bucket["s"], bucket["c"])
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", M.ARCHS)
+def test_trim_equals_full_on_seed_logits(arch):
+    """Trimming only removes computation that cannot reach the seeds, so
+    seed logits must be identical (the paper's zero-copy slicing claim)."""
+    bucket = small_bucket()
+    batch = synth_batch(bucket, seed=2)
+    params = M.init_params(arch, bucket, seed=3)
+    full = M.fused_forward(arch, bucket, False, params, *[batch[k] for k in KEYS[:6]])
+    trim = M.fused_forward(arch, bucket, True, params, *[batch[k] for k in KEYS[:6]])
+    np.testing.assert_allclose(np.asarray(trim), np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_training_reduces_loss():
+    bucket = small_bucket()
+    batch = synth_batch(bucket, seed=4)
+    params = M.init_params("sage", bucket, seed=5)
+    step = M.fused_train_step("sage", bucket, False, lr=0.3)
+    first = None
+    for i in range(10):
+        loss, _, params = step(params, *[batch[k] for k in KEYS])
+        if i == 0:
+            first = float(loss)
+    assert float(loss) < first * 0.8
+
+
+def test_rdl_step_trains():
+    c = dict(num_types=3, nt_pad=16, f_in=4, hidden=8, s_pad=6, e_pad=32, lr=0.2)
+    n_flat = c["num_types"] * c["nt_pad"]
+    rng = np.random.default_rng(0)
+    params = M.rdl_init_params(c["num_types"], c["f_in"], c["hidden"])
+    x_typed = jnp.asarray(rng.normal(size=(c["num_types"], c["nt_pad"], c["f_in"])).astype(np.float32))
+    row = jnp.asarray(rng.integers(0, n_flat, size=c["e_pad"]).astype(np.int32))
+    col = jnp.asarray(rng.integers(0, c["s_pad"], size=c["e_pad"]).astype(np.int32))
+    ew = jnp.ones(c["e_pad"], jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 2, size=c["s_pad"]).astype(np.int32))
+    seed_mask = jnp.ones(c["s_pad"], jnp.float32)
+    step = M.rdl_train_step(
+        c["num_types"], c["nt_pad"], c["f_in"], c["hidden"], n_flat, c["e_pad"],
+        c["s_pad"], c["lr"], use_pallas=True,
+    )
+    loss0, logits, params = step(params, x_typed, row, col, ew, labels, seed_mask)
+    assert logits.shape == (c["s_pad"], 2)
+    for _ in range(15):
+        loss, _, params = step(params, x_typed, row, col, ew, labels, seed_mask)
+    assert float(loss) < float(loss0)
+
+
+def test_rdl_pallas_matches_einsum_path():
+    c = dict(num_types=2, nt_pad=8, f_in=4, hidden=8, s_pad=4, e_pad=16, lr=0.1)
+    n_flat = c["num_types"] * c["nt_pad"]
+    rng = np.random.default_rng(1)
+    params = M.rdl_init_params(c["num_types"], c["f_in"], c["hidden"])
+    args = (
+        jnp.asarray(rng.normal(size=(c["num_types"], c["nt_pad"], c["f_in"])).astype(np.float32)),
+        jnp.asarray(rng.integers(0, n_flat, size=c["e_pad"]).astype(np.int32)),
+        jnp.asarray(rng.integers(0, c["s_pad"], size=c["e_pad"]).astype(np.int32)),
+        jnp.ones(c["e_pad"], jnp.float32),
+        jnp.asarray(rng.integers(0, 2, size=c["s_pad"]).astype(np.int32)),
+        jnp.ones(c["s_pad"], jnp.float32),
+    )
+    mk = lambda pallas: M.rdl_train_step(
+        c["num_types"], c["nt_pad"], c["f_in"], c["hidden"], n_flat, c["e_pad"],
+        c["s_pad"], c["lr"], use_pallas=pallas,
+    )
+    lp, gp, pp = mk(True)(params, *args)
+    le, ge, pe = mk(False)(params, *args)
+    np.testing.assert_allclose(float(lp), float(le), rtol=1e-5)
+    for k in pp:
+        np.testing.assert_allclose(pp[k], pe[k], rtol=1e-4, atol=1e-5, err_msg=k)
+
+
+def test_rag_scorer_prefers_query_aligned_nodes():
+    c = dict(n_pad=8, e_pad=4, f_dim=6, hidden=8)
+    rng = np.random.default_rng(2)
+    params = {}
+    for name, shape in M.rag_param_specs(c["f_dim"], c["hidden"]):
+        params[name] = (
+            jnp.zeros(shape, jnp.float32)
+            if len(shape) == 1
+            else jnp.asarray(np.eye(shape[0], shape[1], dtype=np.float32))
+        )
+    score = M.rag_scorer(c["n_pad"], c["e_pad"], c["f_dim"], c["hidden"])
+    x = np.zeros((c["n_pad"], c["f_dim"]), np.float32)
+    x[3] = 1.0  # node 3 aligned with the query
+    q = np.ones(c["f_dim"], np.float32)
+    scores = score(
+        params,
+        jnp.asarray(x),
+        jnp.zeros(c["e_pad"], jnp.int32),
+        jnp.zeros(c["e_pad"], jnp.int32),
+        jnp.zeros(c["e_pad"], jnp.float32),
+        jnp.asarray(q),
+    )
+    assert int(np.argmax(np.asarray(scores))) == 3
+
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_integrity():
+    with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    # Every fused program's file exists; every eager plan's artifacts exist.
+    for name, prog in manifest["programs"].items():
+        if "file" in prog:
+            assert os.path.exists(os.path.join(ARTIFACT_DIR, prog["file"])), name
+        if prog.get("kind") == "eager_plan":
+            for step in prog["forward"] + prog["backward"]:
+                assert step["artifact"] in manifest["ops"], step["artifact"]
+    for aid, op in manifest["ops"].items():
+        assert os.path.exists(os.path.join(ARTIFACT_DIR, op["file"])), aid
+    # Tables 1-2 need all 5 archs in all 4 modes.
+    for arch in M.ARCHS:
+        for suffix in ("_train", "_train_trim", "_eager", "_eager_trim"):
+            assert f"{arch}{suffix}" in manifest["programs"], f"{arch}{suffix}"

@@ -1,0 +1,96 @@
+"""Shared test helpers: synthetic hop-aligned batches matching the Rust
+loader's static-shape layout."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+def synth_batch(bucket, seed=0, fill=0.7):
+    """Generate a random valid hop-aligned batch.
+
+    Layout contract (mirrors rust/src/loader/batch.rs):
+    * node region for hop h is [node_cum[h-1], node_cum[h]); real nodes
+      fill the region prefix, the rest is zero padding;
+    * edge region for hop h is [edge_cum[h-1], edge_cum[h]); a hop-h edge
+      has col in the real prefix of hop h-1's region and row in the real
+      prefix of regions <= h.
+    """
+    rng = np.random.default_rng(seed)
+    node_cum = bucket["node_cum"]
+    edge_cum = [0] + bucket["edge_cum"]
+    s = bucket["s"]
+    n_pad, e_pad, f = node_cum[-1], edge_cum[-1], bucket["f"]
+
+    # Real node counts per hop region (seeds always full).
+    real_nodes = [s]
+    for h in range(1, len(node_cum)):
+        cap = node_cum[h] - node_cum[h - 1]
+        real_nodes.append(max(1, int(cap * fill * rng.uniform(0.5, 1.0))))
+
+    x = np.zeros((n_pad, f), np.float32)
+    for h in range(len(node_cum)):
+        lo = 0 if h == 0 else node_cum[h - 1]
+        x[lo : lo + real_nodes[h]] = rng.normal(size=(real_nodes[h], f)).astype(np.float32)
+
+    row = np.zeros(e_pad, np.int32)
+    col = np.zeros(e_pad, np.int32)
+    mask = np.zeros(e_pad, np.float32)
+    for h in range(1, len(node_cum)):
+        lo_e, hi_e = edge_cum[h - 1], edge_cum[h]
+        cap = hi_e - lo_e
+        n_real_e = max(1, int(cap * fill * rng.uniform(0.5, 1.0)))
+        # col: real nodes of hop h-1; row: real nodes of hop h region.
+        # (row, col) pairs are kept distinct — the without-replacement
+        # sampler never emits duplicate edges, and duplicate edges create
+        # exact max-aggregation ties whose gradient is backend-defined.
+        col_lo = 0 if h == 1 else node_cum[h - 2]
+        r_lo = node_cum[h - 1]
+        seen = set()
+        k = 0
+        attempts = 0
+        while k < n_real_e and attempts < n_real_e * 20:
+            attempts += 1
+            c = col_lo + rng.integers(0, real_nodes[h - 1])
+            r = r_lo + rng.integers(0, real_nodes[h])
+            if (r, c) in seen:
+                continue
+            seen.add((r, c))
+            col[lo_e + k] = c
+            row[lo_e + k] = r
+            mask[lo_e + k] = 1.0
+            k += 1
+        n_real_e = k
+        # Padding edges: point at the first slot of the *current* hop's
+        # node region (always within every trim slice that uses them).
+        pad_target = node_cum[h - 1]
+        row[lo_e + n_real_e : hi_e] = pad_target
+        col[lo_e + n_real_e : hi_e] = 0 if h == 1 else node_cum[h - 2]
+
+    # Mean-normalized edge weights over real in-degrees.
+    deg = np.zeros(n_pad, np.float32)
+    for k in range(e_pad):
+        if mask[k] > 0:
+            deg[col[k]] += 1
+    ew = np.where(mask > 0, 1.0 / np.maximum(deg[col], 1.0), 0.0).astype(np.float32)
+    mask_bias = ((mask - 1.0) * 1e9).astype(np.float32)
+
+    labels = np.full(s, -1, np.int32)
+    labels[:] = rng.integers(0, bucket["c"], size=s)
+    seed_mask = np.ones(s, np.float32)
+
+    return {
+        "x": jnp.asarray(x),
+        "row": jnp.asarray(row),
+        "col": jnp.asarray(col),
+        "ew": jnp.asarray(ew),
+        "mask": jnp.asarray(mask),
+        "mask_bias": jnp.asarray(mask_bias),
+        "labels": jnp.asarray(labels),
+        "seed_mask": jnp.asarray(seed_mask),
+    }
+
+
+def small_bucket():
+    return M.make_bucket(num_seeds=4, fanouts=[3, 2], feature_dim=8, hidden_dim=16, num_classes=3)

@@ -1,0 +1,86 @@
+//! **C5** (§2.2): grouped matmul for heterogeneous per-type projections —
+//! the Pallas grouped-GEMM kernel artifact vs a per-type loop of XLA
+//! matmuls at identical shapes (T=8 types, N=256, F=H=64), plus the
+//! end-to-end RDL train step that embeds the kernel.
+//!
+//! Reminder: the Pallas kernel runs in *interpret mode* on CPU (DESIGN.md
+//! §Hardware-Adaptation) — its wall-clock here is an emulation artifact,
+//! not a TPU prediction; the VMEM/MXU estimates in DESIGN.md §Perf carry
+//! the performance argument, and this bench pins integration + numerics.
+
+mod common;
+
+use pyg2::runtime::Value;
+use pyg2::util::{BenchSuite, Rng};
+
+fn main() {
+    let engine = common::engine_or_exit();
+    let mut suite = BenchSuite::new("C5: grouped matmul for hetero types");
+
+    let (t, n, f, h) = (8usize, 256usize, 64usize, 64usize);
+    let mut rng = Rng::new(5);
+    let x = Value::F32 {
+        shape: vec![t, n, f],
+        data: (0..t * n * f).map(|_| rng.normal() as f32).collect(),
+    };
+    let w = Value::F32 {
+        shape: vec![t, f, h],
+        data: (0..t * f * h).map(|_| rng.normal() as f32).collect(),
+    };
+    let args = vec![x, w];
+
+    // Numerics: pallas kernel vs looped XLA agree.
+    let a = engine.run_fused("kernel_grouped_matmul", &[], &args).unwrap();
+    let b = engine.run_fused("kernel_looped_matmul", &[], &args).unwrap();
+    let (_, da) = a[0].as_f32().unwrap();
+    let (_, db) = b[0].as_f32().unwrap();
+    let max_diff = da
+        .iter()
+        .zip(db)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("numerics: pallas vs looped max |diff| = {max_diff:.2e}");
+    assert!(max_diff < 1e-3);
+
+    suite.bench("grouped_matmul/pallas_interpret", || {
+        engine.run_fused("kernel_grouped_matmul", &[], &args).unwrap();
+    });
+    suite.bench("grouped_matmul/xla_per_type_loop", || {
+        engine.run_fused("kernel_looped_matmul", &[], &args).unwrap();
+    });
+
+    // Segment-sum reference kernel (the fused aggregation path).
+    let e = 1024;
+    let msgs = Value::F32 {
+        shape: vec![e, f],
+        data: (0..e * f).map(|_| rng.normal() as f32).collect(),
+    };
+    let mut ids: Vec<i32> = (0..e).map(|_| rng.index(256) as i32).collect();
+    ids.sort_unstable();
+    let ids = Value::I32 { shape: vec![e], data: ids };
+    let seg_args = vec![msgs, ids];
+    suite.bench("segment_sum/xla_scatter", || {
+        engine.run_fused("kernel_segment_sum_ref", &[], &seg_args).unwrap();
+    });
+
+    // End-to-end: the rdl_train step that embeds the Pallas encoder.
+    let params = pyg2::nn::ParamStore::init_for(engine.manifest(), "rdl_train", 1).unwrap();
+    let c = pyg2::rdl::RdlShapes::default();
+    let inputs = vec![
+        Value::F32 {
+            shape: vec![c.num_types, c.nt_pad, c.f_in],
+            data: vec![0.1; c.num_types * c.nt_pad * c.f_in],
+        },
+        Value::I32 { shape: vec![c.e_pad], data: vec![0; c.e_pad] },
+        Value::I32 { shape: vec![c.e_pad], data: vec![0; c.e_pad] },
+        Value::F32 { shape: vec![c.e_pad], data: vec![0.0; c.e_pad] },
+        Value::I32 { shape: vec![c.s_pad], data: vec![0; c.s_pad] },
+        Value::F32 { shape: vec![c.s_pad], data: vec![1.0; c.s_pad] },
+    ];
+    engine.run_fused("rdl_train", &params.values(), &inputs).unwrap();
+    suite.bench("rdl_train_step/with_pallas_encoder", || {
+        engine.run_fused("rdl_train", &params.values(), &inputs).unwrap();
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,108 @@
+//! **C1 + C2** (§2.3 cuGraph claims): bulk sampling vs per-call sampling
+//! (paper: 2–8× loading speedup), and partitioned feature-store scaling.
+//!
+//! Note: the sandbox has 1 vCPU, so thread parallelism cannot exceed 1×
+//! wall-clock; the bulk-vs-per-call comparison below measures the
+//! *amortization* component (per-call dispatch, RNG setup, allocation),
+//! and the scaling section verifies work partitioning + per-shard
+//! batching rather than wall-clock speedup (see DESIGN.md §Substitutions).
+
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::dist::{PartitionedFeatureStore, PartitionedStoreConfig};
+use pyg2::partition::ldg_partition;
+use pyg2::sampler::{make_seed_batches, BulkSampler, NeighborSampler, NeighborSamplerConfig};
+use pyg2::storage::{FeatureKey, FeatureStore, GraphStore, InMemoryGraphStore};
+use pyg2::util::{BenchSuite, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut suite = BenchSuite::new("C1 C2: bulk sampling and distributed features");
+
+    // --- C1: per-call vs bulk sampling -------------------------------
+    let g = sbm::generate(&SbmConfig {
+        num_nodes: 100_000,
+        avg_intra_degree: 8.0,
+        avg_inter_degree: 2.0,
+        feature_dim: 64,
+        seed: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+    // Warm the CSC cache so we measure sampling, not conversion.
+    store.csc(&pyg2::storage::default_edge_type()).unwrap();
+    let cfg = NeighborSamplerConfig { fanouts: vec![10, 10], ..Default::default() };
+    let seeds: Vec<u32> = (0..2048).collect();
+    let batches = make_seed_batches(&seeds, 128);
+
+    // Per-call: a fresh sampler per batch (per-call dispatch, fresh RNG &
+    // allocations — the non-bulk API shape).
+    suite.bench("sampling/per_call (fresh sampler per batch)", || {
+        for (i, b) in batches.iter().enumerate() {
+            let s = NeighborSampler::new(Arc::clone(&store), cfg.clone());
+            std::hint::black_box(s.sample(b, i as u64).unwrap());
+        }
+    });
+
+    let bulk = BulkSampler::new(Arc::clone(&store), cfg.clone());
+    suite.bench("sampling/bulk (one pass, amortized)", || {
+        std::hint::black_box(bulk.sample_all(&batches).unwrap());
+    });
+    suite.bench("sampling/bulk_parallel (4 workers)", || {
+        std::hint::black_box(bulk.sample_all_parallel(&batches, 4).unwrap());
+    });
+
+    // --- C2: partitioned feature store, 1..4 shards -------------------
+    let latency = Duration::from_micros(50); // simulated network RPC
+    let key = FeatureKey::default_x();
+    let mut rng = Rng::new(3);
+    let requests: Vec<Vec<usize>> = (0..64)
+        .map(|_| (0..512).map(|_| rng.index(100_000)).collect())
+        .collect();
+    for shards in [1usize, 2, 4] {
+        let p = ldg_partition(&g.edge_index, shards, 1.1).unwrap();
+        let pstore =
+            PartitionedFeatureStore::build(key.clone(), &g.x, &p, PartitionedStoreConfig { latency })
+                .unwrap();
+        suite.bench(format!("features/{shards}_shards (50us RPC)"), || {
+            for r in &requests {
+                std::hint::black_box(pstore.get(&key, r).unwrap());
+            }
+        });
+    }
+
+    // The WholeGraph mechanism isolated: naive row-wise remote fetch (one
+    // RPC per row — what a KV-store-per-feature backend does) vs the
+    // per-shard *batched* fetch above. This is where the paper's
+    // "minimizes synchronization overhead, reduces memory transfers, and
+    // removes redundant data copies" factor lives.
+    {
+        let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        let pstore =
+            PartitionedFeatureStore::build(key.clone(), &g.x, &p, PartitionedStoreConfig { latency })
+                .unwrap();
+        let one_batch = &requests[0];
+        suite.bench("features/row_wise_rpc (512 RPCs per batch)", || {
+            for &r in one_batch {
+                std::hint::black_box(pstore.get(&key, &[r]).unwrap());
+            }
+        });
+        suite.bench("features/shard_batched (<=4 RPCs per batch)", || {
+            std::hint::black_box(pstore.get(&key, one_batch).unwrap());
+        });
+    }
+
+    suite.finish();
+    let ratio = suite
+        .speedup("sampling/per_call (fresh sampler per batch)", "sampling/bulk (one pass, amortized)")
+        .unwrap();
+    println!("\nC1: bulk sampling amortization speedup: {ratio:.2}x (paper: 2-8x incl. GPU effects)");
+    let s1 = suite.find("features/1_shards (50us RPC)").unwrap().mean_ms();
+    let s4 = suite.find("features/4_shards (50us RPC)").unwrap().mean_ms();
+    println!("C2: 4-shard distributed fetch vs 1 shard: {:.2}x (per-shard batching, 1 vCPU)", s1 / s4);
+    let batched = suite
+        .speedup("features/row_wise_rpc (512 RPCs per batch)", "features/shard_batched (<=4 RPCs per batch)")
+        .unwrap();
+    println!("C1/WholeGraph mechanism: shard-batched fetch vs row-wise RPC: {batched:.1}x");
+}

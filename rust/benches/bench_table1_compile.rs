@@ -1,0 +1,53 @@
+//! **Table 1**: forward+backward train-step runtime, Eager vs compile,
+//! across GIN / GraphSAGE / EdgeCNN / GCN / GAT.
+//!
+//! Paper: compile gives 2–3× over eager (PyTorch). Our analog: one fused
+//! HLO vs op-by-op micro-op dispatch with host hand-off (see DESIGN.md
+//! §Eager-vs-compile). Absolute ms differ (CPU PJRT, 1 vCPU); the *shape*
+//! — who wins and by what factor — is the claim under test.
+
+mod common;
+
+use pyg2::nn::ParamStore;
+use pyg2::runtime::{EagerExecutor, Engine};
+use pyg2::util::BenchSuite;
+
+const ARCHS: [&str; 5] = ["gin", "sage", "edgecnn", "gcn", "gat"];
+
+fn main() {
+    let engine = common::engine_or_exit();
+    let batch = common::default_batch(&engine, 1);
+    let inputs = Engine::batch_inputs(&batch);
+    let mut suite = BenchSuite::new("Table 1: eager vs compile");
+
+    for arch in ARCHS {
+        // compile mode: single fused train-step HLO.
+        let prog = format!("{arch}_train");
+        let store = ParamStore::init_for(engine.manifest(), &prog, 7).unwrap();
+        let params = store.values();
+        // warm the executable cache
+        engine.run_fused(&prog, &params, &inputs).unwrap();
+        suite.bench(format!("{arch}/compile"), || {
+            engine.run_fused(&prog, &params, &inputs).unwrap();
+        });
+
+        // eager mode: micro-op plan interpretation.
+        let eprog = format!("{arch}_eager");
+        let estore = ParamStore::init_for(engine.manifest(), &eprog, 7).unwrap();
+        let exec = EagerExecutor::new(&engine, &eprog).unwrap();
+        exec.warmup().unwrap();
+        let mut eparams = estore.as_map();
+        suite.bench(format!("{arch}/eager"), || {
+            exec.train_step(&mut eparams, &inputs).unwrap();
+        });
+    }
+
+    suite.finish();
+    println!("\nTable 1 reproduction (train-step ms, paper shape: compile 2-3x faster):");
+    println!("{:<10} {:>12} {:>12} {:>10}", "arch", "eager(ms)", "compile(ms)", "speedup");
+    for arch in ARCHS {
+        let e = suite.find(&format!("{arch}/eager")).unwrap().mean_ms();
+        let c = suite.find(&format!("{arch}/compile")).unwrap().mean_ms();
+        println!("{arch:<10} {e:>12.3} {c:>12.3} {:>9.2}x", e / c);
+    }
+}

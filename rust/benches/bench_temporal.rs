@@ -1,0 +1,91 @@
+//! **C6** (§2.3): temporal subgraph sampling — strategy overhead
+//! (uniform / most-recent / annealing) against plain non-temporal
+//! sampling, plus the no-future-leakage guarantee checked over every
+//! sampled batch.
+
+use pyg2::datasets::temporal::{self, TemporalConfig};
+use pyg2::sampler::{
+    NeighborSampler, NeighborSamplerConfig, TemporalNeighborSampler, TemporalSamplerConfig,
+    TemporalStrategy,
+};
+use pyg2::storage::{GraphStore, InMemoryGraphStore};
+use pyg2::util::{BenchSuite, Rng};
+use std::sync::Arc;
+
+fn main() {
+    let mut suite = BenchSuite::new("C6: temporal sampling strategies");
+
+    let g = temporal::generate(&TemporalConfig {
+        num_nodes: 20_000,
+        num_events: 200_000,
+        repeat_prob: 0.6,
+        feature_dim: 8,
+        seed: 6,
+    })
+    .unwrap();
+    let etimes = g.edge_time.clone().unwrap();
+    let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+    store.csc(&pyg2::storage::default_edge_type()).unwrap();
+
+    let mut rng = Rng::new(7);
+    let seeds: Vec<u32> = (0..256).map(|_| rng.index(20_000) as u32).collect();
+    let times: Vec<i64> = seeds.iter().map(|_| 100_000 + rng.next_below(100_000) as i64).collect();
+
+    // Non-temporal baseline (same fanouts, no constraints).
+    let plain = NeighborSampler::new(
+        Arc::clone(&store),
+        NeighborSamplerConfig { fanouts: vec![10, 10], disjoint: true, ..Default::default() },
+    );
+    suite.bench("sample_256_seeds/non_temporal", || {
+        std::hint::black_box(plain.sample(&seeds, 0).unwrap());
+    });
+
+    for (label, strategy) in [
+        ("uniform", TemporalStrategy::Uniform),
+        ("most_recent", TemporalStrategy::MostRecent),
+        ("annealing_tau1e4", TemporalStrategy::Annealing { tau: 1e4 }),
+    ] {
+        let sampler = TemporalNeighborSampler::new(
+            Arc::clone(&store),
+            TemporalSamplerConfig { fanouts: vec![10, 10], strategy, seed: 0 },
+        );
+        suite.bench(format!("sample_256_seeds/temporal_{label}"), || {
+            std::hint::black_box(sampler.sample(&seeds, &times, 0).unwrap());
+        });
+
+        // Leakage check on a fresh batch each strategy.
+        let sub = sampler.sample(&seeds, &times, 1).unwrap();
+        sub.check_invariants().unwrap();
+        let batch = sub.batch.as_ref().unwrap();
+        for (k, &eid) in sub.edge_ids.iter().enumerate() {
+            let tree = batch[sub.col[k] as usize] as usize;
+            assert!(
+                etimes[eid as usize] <= times[tree],
+                "future leak in {label}"
+            );
+        }
+    }
+
+    // Recency bias measurement: mean age of sampled edges per strategy.
+    println!("\nmean sampled-edge age (seed_time - edge_time), 256 seeds:");
+    for (label, strategy) in [
+        ("uniform", TemporalStrategy::Uniform),
+        ("most_recent", TemporalStrategy::MostRecent),
+        ("annealing_tau1e4", TemporalStrategy::Annealing { tau: 1e4 }),
+    ] {
+        let sampler = TemporalNeighborSampler::new(
+            Arc::clone(&store),
+            TemporalSamplerConfig { fanouts: vec![10, 10], strategy, seed: 0 },
+        );
+        let sub = sampler.sample(&seeds, &times, 2).unwrap();
+        let batch = sub.batch.as_ref().unwrap();
+        let mut age = 0f64;
+        for (k, &eid) in sub.edge_ids.iter().enumerate() {
+            let tree = batch[sub.col[k] as usize] as usize;
+            age += (times[tree] - etimes[eid as usize]) as f64;
+        }
+        println!("  {label:<18} {:>12.0}", age / sub.num_edges().max(1) as f64);
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,32 @@
+//! Shared bench scaffolding: engine + a default-bucket SBM batch.
+
+use pyg2::coordinator::default_loader;
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::loader::Batch;
+use pyg2::runtime::Engine;
+
+/// Load the engine or exit gracefully when artifacts are missing.
+pub fn engine_or_exit() -> Engine {
+    match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP bench: {e}");
+            std::process::exit(0);
+        }
+    }
+}
+
+/// A deterministic batch matching the manifest bucket.
+pub fn default_batch(engine: &Engine, seed: u64) -> Batch {
+    let b = engine.manifest().bucket.clone();
+    let g = sbm::generate(&SbmConfig {
+        num_nodes: 2000,
+        num_blocks: b.c,
+        feature_dim: b.f,
+        seed,
+        ..Default::default()
+    })
+    .expect("sbm");
+    let loader = default_loader(engine, &g, (0..b.s as u32).collect(), 1);
+    loader.iter_epoch(seed).next().unwrap().expect("batch")
+}

@@ -1,0 +1,111 @@
+//! Command-line interface (clap is unavailable offline; a small argparse
+//! covering subcommands + `--key value` flags).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        if let Some(cmd) = iter.next() {
+            if cmd.starts_with('-') {
+                return Err(format!("expected subcommand, got flag {cmd}"));
+            }
+            out.command = cmd;
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// The CLI help text.
+pub const USAGE: &str = "\
+pyg2 — PyG 2.0 reproduction (Rust + JAX + Pallas)
+
+USAGE: pyg2 <command> [--flags]
+
+COMMANDS:
+  train       train a GNN on a synthetic SBM graph
+              --arch gcn|sage|gin|gat|edgecnn  --mode compile|eager
+              --trim  --epochs N  --config file.toml  --workers N
+  partition   partition an SBM graph and report edge-cut/balance
+              --nodes N --parts K
+  explain     train then explain predictions (fidelity report)
+  rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
+  info        print manifest/artifact summary
+  help        show this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --arch gat --trim --epochs 5 --mode=eager");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("arch"), Some("gat"));
+        assert!(a.get_bool("trim"));
+        assert_eq!(a.get_usize("epochs", 0), 5);
+        assert_eq!(a.get("mode"), Some("eager"));
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let a = parse("train --trim");
+        assert!(a.get_bool("trim"));
+    }
+
+    #[test]
+    fn flag_before_command_rejected() {
+        assert!(Args::parse(vec!["--x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.get_or("arch", "gcn"), "gcn");
+        assert_eq!(a.get_usize("epochs", 3), 3);
+    }
+}

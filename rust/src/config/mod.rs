@@ -1,0 +1,151 @@
+//! Typed run configuration parsed from TOML-subset files (the framework's
+//! config system; see `configs/` for shipped examples).
+
+use crate::coordinator::{RunMode, TrainConfig};
+use crate::error::{Error, Result};
+use crate::util::toml::{self, Value};
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub artifacts_dir: String,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+    pub loader: LoaderSection,
+}
+
+/// Dataset section.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub num_nodes: usize,
+    pub feature_signal: f32,
+    pub seed: u64,
+}
+
+/// Loader section.
+#[derive(Clone, Debug)]
+pub struct LoaderSection {
+    pub num_workers: usize,
+    pub num_seeds: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            train: TrainConfig::default(),
+            data: DataConfig { num_nodes: 2708, feature_signal: 1.2, seed: 0 },
+            loader: LoaderSection { num_workers: 2, num_seeds: 512 },
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML-subset text; unknown keys are rejected (typo guard).
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = toml::parse(text).map_err(Error::Config)?;
+        let mut cfg = RunConfig::default();
+        for (section, entries) in &doc {
+            for (key, value) in entries {
+                cfg.apply(section, key, value)?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, value: &Value) -> Result<()> {
+        let bad = || Error::Config(format!("bad value for [{section}] {key}"));
+        match (section, key) {
+            ("", "artifacts_dir") => {
+                self.artifacts_dir = value.as_str().ok_or_else(bad)?.to_string()
+            }
+            ("train", "arch") => self.train.arch = value.as_str().ok_or_else(bad)?.to_string(),
+            ("train", "mode") => {
+                self.train.mode = match value.as_str().ok_or_else(bad)? {
+                    "eager" => RunMode::Eager,
+                    "compile" | "compiled" => RunMode::Compiled,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown mode {other} (eager|compile)"
+                        )))
+                    }
+                }
+            }
+            ("train", "trim") => self.train.trim = value.as_bool().ok_or_else(bad)?,
+            ("train", "epochs") => {
+                self.train.epochs = value.as_i64().ok_or_else(bad)? as usize
+            }
+            ("train", "param_seed") => {
+                self.train.param_seed = value.as_i64().ok_or_else(bad)? as u64
+            }
+            ("train", "log_every") => {
+                self.train.log_every = value.as_i64().ok_or_else(bad)? as usize
+            }
+            ("data", "num_nodes") => self.data.num_nodes = value.as_i64().ok_or_else(bad)? as usize,
+            ("data", "feature_signal") => {
+                self.data.feature_signal = value.as_f64().ok_or_else(bad)? as f32
+            }
+            ("data", "seed") => self.data.seed = value.as_i64().ok_or_else(bad)? as u64,
+            ("loader", "num_workers") => {
+                self.loader.num_workers = value.as_i64().ok_or_else(bad)? as usize
+            }
+            ("loader", "num_seeds") => {
+                self.loader.num_seeds = value.as_i64().ok_or_else(bad)? as usize
+            }
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown config key [{section}] {key}"
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            artifacts_dir = "artifacts"
+            [train]
+            arch = "gat"
+            mode = "eager"
+            trim = true
+            epochs = 5
+            [data]
+            num_nodes = 1000
+            [loader]
+            num_workers = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.train.arch, "gat");
+        assert_eq!(cfg.train.mode, RunMode::Eager);
+        assert!(cfg.train.trim);
+        assert_eq!(cfg.train.epochs, 5);
+        assert_eq!(cfg.data.num_nodes, 1000);
+        assert_eq!(cfg.loader.num_workers, 4);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(RunConfig::from_toml("[train]\nlearning_rate = 0.1").is_err());
+        assert!(RunConfig::from_toml("[train]\nmode = \"warp\"").is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.arch, "gcn");
+        assert_eq!(cfg.train.mode, RunMode::Compiled);
+    }
+}

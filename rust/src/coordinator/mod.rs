@@ -1,0 +1,320 @@
+//! Training coordinator: drives the loader → runtime pipeline for both
+//! execution modes, tracks metrics, and owns the parameter update cycle.
+//! This is the Rust-side "training loop that looks identical regardless
+//! of backend" promised by the FeatureStore/GraphStore split (§2.3).
+
+pub mod serve;
+
+pub use serve::{InferenceServer, Prediction, ServeConfig, ServeStats};
+
+use crate::error::Result;
+use crate::loader::{Batch, LoaderConfig, NeighborLoader};
+use crate::nn::ParamStore;
+use crate::runtime::{EagerExecutor, Engine, Value};
+use crate::storage::{FeatureStore, GraphStore};
+use crate::tensor::argmax_rows;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Execution mode for the neural layer (the Tables 1-2 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunMode {
+    /// Op-by-op micro-op dispatch (PyTorch-eager analog).
+    Eager,
+    /// Single fused HLO (torch.compile analog).
+    Compiled,
+}
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub arch: String,
+    pub mode: RunMode,
+    pub trim: bool,
+    pub epochs: usize,
+    pub param_seed: u64,
+    /// Log every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            arch: "gcn".into(),
+            mode: RunMode::Compiled,
+            trim: false,
+            epochs: 3,
+            param_seed: 7,
+            log_every: 10,
+        }
+    }
+}
+
+/// Per-step record of the training history.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub epoch: usize,
+    pub step: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+    pub millis: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub history: Vec<StepRecord>,
+    pub final_params: ParamStore,
+    pub mode: RunMode,
+    pub total_seconds: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.history.last().map(|r| r.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Mean accuracy over the last `n` steps.
+    pub fn recent_accuracy(&self, n: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|r| r.accuracy).sum::<f32>() / tail.len() as f32
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.history.is_empty() {
+            return f64::NAN;
+        }
+        self.history.iter().map(|r| r.millis).sum::<f64>() / self.history.len() as f64
+    }
+}
+
+/// Program name for (arch, mode, trim) per the manifest naming scheme.
+pub fn program_name(arch: &str, mode: RunMode, trim: bool) -> String {
+    let base = match mode {
+        RunMode::Eager => format!("{arch}_eager"),
+        RunMode::Compiled => format!("{arch}_train"),
+    };
+    if trim {
+        format!("{base}_trim")
+    } else {
+        base
+    }
+}
+
+/// The trainer.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: TrainConfig,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Self {
+        Self { engine, cfg }
+    }
+
+    /// Train over a loader; returns per-step history and final params.
+    pub fn train<G, F>(&self, loader: &NeighborLoader<G, F>) -> Result<TrainReport>
+    where
+        G: GraphStore + 'static,
+        F: FeatureStore + 'static,
+    {
+        let program = program_name(&self.cfg.arch, self.cfg.mode, self.cfg.trim);
+        let mut store = ParamStore::init_for(self.engine.manifest(), &program, self.cfg.param_seed)?;
+        let mut history = Vec::new();
+        let t0 = Instant::now();
+
+        match self.cfg.mode {
+            RunMode::Compiled => {
+                // Warm the executable cache outside the timed region.
+                if let crate::runtime::Program::Fused { file, .. } =
+                    self.engine.manifest().program(&program)?
+                {
+                    let file = file.clone();
+                    self.engine.executable(&file)?;
+                }
+                let mut step_idx = 0;
+                for epoch in 0..self.cfg.epochs {
+                    for batch in loader.iter_epoch(epoch as u64) {
+                        let batch = batch?;
+                        let t = Instant::now();
+                        let inputs = Engine::batch_inputs(&batch);
+                        let out = self.engine.run_fused(&program, store.values_ref(), &inputs)?;
+                        let millis = t.elapsed().as_secs_f64() * 1e3;
+                        let loss = out[0].scalar_f32()?;
+                        let accuracy = seed_accuracy(&out[1], &batch)?;
+                        store.update_from_fused_output(&out)?;
+                        self.log(epoch, step_idx, loss, accuracy);
+                        history.push(StepRecord { epoch, step: step_idx, loss, accuracy, millis });
+                        step_idx += 1;
+                    }
+                }
+            }
+            RunMode::Eager => {
+                let exec = EagerExecutor::new(self.engine, &program)?;
+                exec.warmup()?;
+                let mut params: HashMap<String, Value> = store.as_map();
+                let mut step_idx = 0;
+                for epoch in 0..self.cfg.epochs {
+                    for batch in loader.iter_epoch(epoch as u64) {
+                        let batch = batch?;
+                        let t = Instant::now();
+                        let inputs = Engine::batch_inputs(&batch);
+                        let (loss, logits) = exec.train_step(&mut params, &inputs)?;
+                        let millis = t.elapsed().as_secs_f64() * 1e3;
+                        let accuracy = seed_accuracy(&logits, &batch)?;
+                        self.log(epoch, step_idx, loss, accuracy);
+                        history.push(StepRecord { epoch, step: step_idx, loss, accuracy, millis });
+                        step_idx += 1;
+                    }
+                }
+                store.update_from_map(&params)?;
+            }
+        }
+
+        Ok(TrainReport {
+            history,
+            final_params: store,
+            mode: self.cfg.mode,
+            total_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn log(&self, epoch: usize, step: usize, loss: f32, acc: f32) {
+        if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+            log::info!(
+                "epoch {epoch} step {step}: loss={loss:.4} acc={acc:.3} ({:?} {})",
+                self.cfg.mode,
+                self.cfg.arch
+            );
+        }
+    }
+}
+
+/// Seed-level accuracy from a logits value `[S, C]`.
+pub fn seed_accuracy(logits: &Value, batch: &Batch) -> Result<f32> {
+    let t = logits.to_tensor()?;
+    let preds = argmax_rows(&t);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..batch.num_real_seeds() {
+        if batch.labels[i] >= 0 {
+            total += 1;
+            if preds[i] as i32 == batch.labels[i] {
+                correct += 1;
+            }
+        }
+    }
+    Ok(if total == 0 { 0.0 } else { correct as f32 / total as f32 })
+}
+
+/// Convenience: a loader matching the manifest's default bucket over an
+/// SBM graph (the quickstart / bench workload).
+pub fn default_loader(
+    engine: &Engine,
+    graph: &crate::graph::Graph,
+    seeds: Vec<u32>,
+    num_workers: usize,
+) -> NeighborLoader<crate::storage::InMemoryGraphStore, crate::storage::InMemoryFeatureStore> {
+    let bucket = engine.manifest().bucket.clone();
+    let gs = std::sync::Arc::new(crate::storage::InMemoryGraphStore::from_graph(graph));
+    let fs = std::sync::Arc::new(crate::storage::InMemoryFeatureStore::from_tensor(graph.x.clone()));
+    let mut loader = NeighborLoader::new(
+        gs,
+        fs,
+        seeds,
+        LoaderConfig {
+            batch_size: bucket.s,
+            num_workers,
+            shuffle: true,
+            sampler: crate::sampler::NeighborSamplerConfig {
+                fanouts: bucket.fanouts.clone(),
+                ..Default::default()
+            },
+            bucket: Some(bucket.to_shape_bucket()),
+            ..Default::default()
+        },
+    );
+    if let Some(y) = &graph.y {
+        loader = loader.with_labels(y.clone());
+    }
+    loader
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+
+    fn engine() -> Option<Engine> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Engine::load("artifacts").unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn compiled_training_learns_sbm() {
+        let Some(engine) = engine() else { return };
+        let b = &engine.manifest().bucket;
+        let g = sbm::generate(&SbmConfig {
+            num_nodes: 600,
+            num_blocks: b.c,
+            feature_dim: b.f,
+            feature_signal: 1.5,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
+        let loader = default_loader(&engine, &g, (0..256).collect(), 1);
+        let trainer = Trainer::new(
+            &engine,
+            TrainConfig { epochs: 15, log_every: 0, ..Default::default() },
+        );
+        let report = trainer.train(&loader).unwrap();
+        assert!(report.history.len() >= 60);
+        let first_acc = report.history[0].accuracy;
+        let final_acc = report.recent_accuracy(4);
+        assert!(
+            final_acc > 0.5 && final_acc > first_acc,
+            "acc {first_acc} -> {final_acc}"
+        );
+        assert!(report.final_loss() < report.history[0].loss);
+    }
+
+    #[test]
+    fn eager_and_compiled_agree_on_first_step() {
+        let Some(engine) = engine() else { return };
+        let b = &engine.manifest().bucket;
+        let g = sbm::generate(&SbmConfig {
+            num_nodes: 400,
+            num_blocks: b.c,
+            feature_dim: b.f,
+            seed: 9,
+            ..Default::default()
+        })
+        .unwrap();
+        let loader = default_loader(&engine, &g, (0..b.s as u32).collect(), 1);
+        let mk = |mode| {
+            Trainer::new(
+                &engine,
+                TrainConfig { mode, epochs: 1, log_every: 0, ..Default::default() },
+            )
+            .train(&loader)
+            .unwrap()
+        };
+        let compiled = mk(RunMode::Compiled);
+        let eager = mk(RunMode::Eager);
+        // Same params/batches -> same first-step loss across modes.
+        assert!(
+            (compiled.history[0].loss - eager.history[0].loss).abs() < 1e-4,
+            "compiled {} vs eager {}",
+            compiled.history[0].loss,
+            eager.history[0].loss
+        );
+    }
+}

@@ -1,0 +1,295 @@
+//! Inference serving: a request router with dynamic batching.
+//!
+//! The deployment half of the blueprint (TorchScript/serving in §2.1):
+//! clients submit single-node classification requests; the server
+//! accumulates them into a batch until `max_batch` seeds or `max_wait`
+//! elapses (whichever first), runs one sampled+padded batch through the
+//! inference HLO, and routes per-seed predictions back to their callers.
+//! The batching policy is the standard dynamic-batching tradeoff
+//! (throughput vs tail latency) of GNN serving systems.
+
+use crate::error::{Error, Result};
+use crate::nn::ParamStore;
+use crate::runtime::Engine;
+use crate::storage::{FeatureStore, GraphStore};
+use crate::tensor::softmax_row;
+use crate::util::BoundedQueue;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A classification request for one node.
+pub struct Request {
+    pub node: u32,
+    pub reply_to: mpsc::Sender<Result<Prediction>>,
+}
+
+/// A served prediction.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub node: u32,
+    pub class: usize,
+    pub probabilities: Vec<f32>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Flush a batch at this many pending requests…
+    pub max_batch: usize,
+    /// …or after this long, whichever comes first.
+    pub max_wait: Duration,
+    pub arch: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(5), arch: "gcn".into() }
+    }
+}
+
+/// Handle to a running inference server.
+pub struct InferenceServer {
+    inbox: Arc<BoundedQueue<Request>>,
+    handle: Option<JoinHandle<()>>,
+    pub stats: Arc<std::sync::Mutex<ServeStats>>,
+}
+
+/// Serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+}
+
+impl InferenceServer {
+    /// Spawn the server thread over a trained model + stores.
+    ///
+    /// The server thread constructs its *own* [`Engine`] from
+    /// `artifact_dir`: PJRT clients are not `Send` (Rc-internal), so each
+    /// serving thread owns one — the standard one-client-per-worker
+    /// serving topology.
+    pub fn spawn<G, F>(
+        artifact_dir: std::path::PathBuf,
+        graph: Arc<G>,
+        features: Arc<F>,
+        params: ParamStore,
+        cfg: ServeConfig,
+    ) -> Result<Self>
+    where
+        G: GraphStore + 'static,
+        F: FeatureStore + 'static,
+    {
+        let inbox: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.max_batch * 8);
+        let rx = Arc::clone(&inbox);
+        let stats = Arc::new(std::sync::Mutex::new(ServeStats::default()));
+        let stats_t = Arc::clone(&stats);
+        let program = format!("{}_infer", cfg.arch);
+        // Fail fast on config errors before spawning (bucket check needs
+        // the manifest; load it cheaply here).
+        let bucket_probe = crate::runtime::Manifest::load(&artifact_dir)?.bucket;
+        if cfg.max_batch > bucket_probe.s {
+            return Err(Error::Runtime(format!(
+                "max_batch {} exceeds the artifact seed region {}",
+                cfg.max_batch, bucket_probe.s
+            )));
+        }
+
+        let handle = std::thread::Builder::new()
+            .name("pyg2-serve".into())
+            .spawn(move || {
+                let engine = match Engine::load(&artifact_dir) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        log::error!("serve thread could not load engine: {e}");
+                        return;
+                    }
+                };
+                let bucket = engine.manifest().bucket.clone();
+                let sampler = crate::sampler::NeighborSampler::new(
+                    Arc::clone(&graph),
+                    crate::sampler::NeighborSamplerConfig {
+                        fanouts: bucket.fanouts.clone(),
+                        ..Default::default()
+                    },
+                );
+                let shape_bucket = bucket.to_shape_bucket();
+                let mut batch_id = 0u64;
+                loop {
+                    // Dynamic batching: block for the first request, then
+                    // drain until max_batch or max_wait.
+                    let Some(first) = rx.recv() else { break };
+                    let mut pending = vec![first];
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while pending.len() < cfg.max_batch && Instant::now() < deadline {
+                        match rx.try_recv() {
+                            Some(r) => pending.push(r),
+                            None => std::thread::yield_now(),
+                        }
+                    }
+
+                    let seeds: Vec<u32> = pending.iter().map(|r| r.node).collect();
+                    batch_id += 1;
+                    let result = sampler
+                        .sample(&seeds, batch_id)
+                        .and_then(|sub| {
+                            crate::loader::Batch::assemble(
+                                sub,
+                                features.as_ref(),
+                                &crate::storage::FeatureKey::default_x(),
+                                None,
+                                &shape_bucket,
+                            )
+                        })
+                        .and_then(|batch| {
+                            let inputs = Engine::infer_inputs(&batch);
+                            engine
+                                .run_fused(&program, params.values_ref(), &inputs)
+                                .map(|out| (batch, out))
+                        });
+
+                    {
+                        let mut s = stats_t.lock().unwrap();
+                        s.requests += pending.len() as u64;
+                        s.batches += 1;
+                        s.mean_batch_size = s.requests as f64 / s.batches as f64;
+                    }
+
+                    match result {
+                        Ok((_batch, out)) => {
+                            let logits = match out[0].to_tensor() {
+                                Ok(t) => t,
+                                Err(e) => {
+                                    for r in pending {
+                                        let _ = r
+                                            .reply_to
+                                            .send(Err(Error::Runtime(e.to_string())));
+                                    }
+                                    continue;
+                                }
+                            };
+                            for (i, r) in pending.into_iter().enumerate() {
+                                let probs = softmax_row(logits.row(i));
+                                let class = probs
+                                    .iter()
+                                    .enumerate()
+                                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                                    .map(|(c, _)| c)
+                                    .unwrap_or(0);
+                                let _ = r.reply_to.send(Ok(Prediction {
+                                    node: r.node,
+                                    class,
+                                    probabilities: probs,
+                                }));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for r in pending {
+                                let _ = r.reply_to.send(Err(Error::Runtime(msg.clone())));
+                            }
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn serve thread: {e}")))?;
+
+        Ok(Self { inbox, handle: Some(handle), stats })
+    }
+
+    /// Submit a request; returns the receiver for the prediction.
+    pub fn submit(&self, node: u32) -> mpsc::Receiver<Result<Prediction>> {
+        let (tx, rx) = mpsc::channel();
+        self.inbox
+            .send(Request { node, reply_to: tx })
+            .expect("server stopped");
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn predict(&self, node: u32) -> Result<Prediction> {
+        self.submit(node)
+            .recv()
+            .map_err(|_| Error::Runtime("server dropped request".into()))?
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.inbox.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{default_loader, TrainConfig, Trainer};
+    use crate::datasets::sbm::{self, SbmConfig};
+
+    #[test]
+    fn serves_batched_predictions() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::load("artifacts").unwrap();
+        let b = engine.manifest().bucket.clone();
+        let g = sbm::generate(&SbmConfig {
+            num_nodes: 500,
+            num_blocks: b.c,
+            feature_dim: b.f,
+            feature_signal: 1.5,
+            seed: 12,
+            ..Default::default()
+        })
+        .unwrap();
+        let labels = g.y.clone().unwrap();
+        let loader = default_loader(&engine, &g, (0..256).collect(), 1);
+        let report = Trainer::new(
+            &engine,
+            TrainConfig { epochs: 10, log_every: 0, ..Default::default() },
+        )
+        .train(&loader)
+        .unwrap();
+
+        let gs = Arc::new(crate::storage::InMemoryGraphStore::from_graph(&g));
+        let fs = Arc::new(crate::storage::InMemoryFeatureStore::from_tensor(g.x.clone()));
+        let server = InferenceServer::spawn(
+            "artifacts".into(),
+            gs,
+            fs,
+            report.final_params.clone(),
+            ServeConfig { max_batch: 8, ..Default::default() },
+        )
+        .unwrap();
+
+        // Concurrent clients.
+        let mut rxs = Vec::new();
+        for node in 300..340u32 {
+            rxs.push((node, server.submit(node)));
+        }
+        let mut correct = 0;
+        for (node, rx) in rxs {
+            let p = rx.recv().unwrap().unwrap();
+            assert_eq!(p.node, node);
+            assert!((p.probabilities.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            if p.class as i64 == labels[node as usize] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 20, "served accuracy too low: {correct}/40");
+
+        let stats = server.stats.lock().unwrap().clone();
+        assert_eq!(stats.requests, 40);
+        assert!(
+            stats.mean_batch_size > 1.5,
+            "dynamic batching should group requests (mean {})",
+            stats.mean_batch_size
+        );
+    }
+}

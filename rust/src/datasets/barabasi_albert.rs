@@ -1,0 +1,95 @@
+//! Barabási–Albert preferential-attachment generator.
+//!
+//! Produces the heavy-tailed degree distributions of web-scale graphs; used
+//! by the sampler/loader benchmarks where hub nodes stress the fanout
+//! logic (the regime PyG's C++ sampler is built for).
+
+use crate::error::Result;
+use crate::graph::{EdgeIndex, Graph};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Generate a BA graph: start from a small clique, attach each new node to
+/// `m` existing nodes chosen proportionally to degree.
+pub fn generate(num_nodes: usize, m: usize, feature_dim: usize, seed: u64) -> Result<Graph> {
+    assert!(num_nodes > m + 1, "need more nodes than attachment count");
+    let mut rng = Rng::new(seed);
+
+    // `targets` holds one entry per edge endpoint → sampling uniformly from
+    // it is exactly degree-proportional sampling.
+    let mut endpoint_pool: Vec<u32> = Vec::with_capacity(num_nodes * m * 2);
+    let mut src = Vec::with_capacity(num_nodes * m);
+    let mut dst = Vec::with_capacity(num_nodes * m);
+
+    // Seed clique over the first m+1 nodes.
+    for i in 0..=m {
+        for j in 0..i {
+            src.push(i as u32);
+            dst.push(j as u32);
+            endpoint_pool.push(i as u32);
+            endpoint_pool.push(j as u32);
+        }
+    }
+
+    for v in (m + 1)..num_nodes {
+        let mut chosen = Vec::with_capacity(m);
+        let mut guard = 0;
+        while chosen.len() < m && guard < m * 20 {
+            let t = endpoint_pool[rng.index(endpoint_pool.len())];
+            if t != v as u32 && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+            guard += 1;
+        }
+        for &t in &chosen {
+            src.push(v as u32);
+            dst.push(t);
+            endpoint_pool.push(v as u32);
+            endpoint_pool.push(t);
+        }
+    }
+
+    let edge_index = EdgeIndex::new(src, dst, num_nodes)?;
+    let mut x = Tensor::zeros(vec![num_nodes, feature_dim]);
+    for v in 0..num_nodes {
+        for val in x.row_mut(v) {
+            *val = rng.normal() as f32;
+        }
+    }
+    Graph::new(edge_index, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_count_matches_formula() {
+        let m = 3;
+        let n = 200;
+        let g = generate(n, m, 8, 1).unwrap();
+        // clique edges + m per new node (minus rare guard shortfalls)
+        let expected = m * (m + 1) / 2 + (n - m - 1) * m;
+        assert!(g.num_edges() as i64 >= expected as i64 - 5);
+        assert!(g.num_edges() <= expected);
+    }
+
+    #[test]
+    fn heavy_tail_exists() {
+        let g = generate(2000, 2, 4, 2).unwrap();
+        let deg = g.edge_index.in_degrees();
+        let max = *deg.iter().max().unwrap();
+        let mean = deg.iter().map(|&d| d as f64).sum::<f64>() / deg.len() as f64;
+        assert!(
+            (max as f64) > mean * 8.0,
+            "no hub: max={max} mean={mean:.2}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(100, 2, 4, 7).unwrap();
+        let b = generate(100, 2, 4, 7).unwrap();
+        assert_eq!(a.edge_index.src(), b.edge_index.src());
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic dataset generators substituting for the paper's real-world
+//! data (no network access in the sandbox — see DESIGN.md §Substitutions).
+
+pub mod barabasi_albert;
+pub mod kgqa;
+pub mod relational;
+pub mod sbm;
+pub mod temporal;
+
+pub use kgqa::{KgqaConfig, KgqaDataset};
+pub use relational::{Database, RelationalConfig};
+pub use sbm::SbmConfig;
+pub use temporal::TemporalConfig;

@@ -1,0 +1,38 @@
+//! Unified error type for the framework.
+
+/// Framework-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Framework-wide error enum.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("storage error: {0}")]
+    Storage(String),
+
+    #[error("sampler error: {0}")]
+    Sampler(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,391 @@
+//! `EdgeIndex`: COO edge tensor with sort-order metadata and lazily cached
+//! CSR/CSC conversions — the Rust port of PyG 2.0's `EdgeIndex` subclass
+//! (§2.2 "Accelerated Message Passing").
+//!
+//! The paper's observations carried over here:
+//! * if edges are sorted by row (source) or column (destination), message
+//!   passing can use segmented aggregation instead of atomic scatter;
+//! * repeated layer execution re-derives A and Aᵀ every step unless CSR
+//!   *and* CSC are cached across calls;
+//! * undirected graphs need only one of the two (A = Aᵀ).
+
+use crate::error::{Error, Result};
+use std::sync::OnceLock;
+
+/// Declared sort order of the COO pairs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SortOrder {
+    /// No known ordering.
+    None,
+    /// Sorted by source ("row") — CSR derivable by a single scan.
+    ByRow,
+    /// Sorted by destination ("col") — CSC derivable by a single scan.
+    ByCol,
+}
+
+/// Compressed sparse representation (CSR when built over rows, CSC when
+/// built over cols): `indptr.len() == num_nodes + 1`, `indices` are the
+/// opposing endpoints, `perm[i]` maps compressed position `i` back to the
+/// original COO edge id (needed to permute edge features consistently).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Compressed {
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub perm: Vec<u32>,
+}
+
+impl Compressed {
+    /// Neighbors of node `v` in this compressed layout.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    /// Original COO edge ids for node `v`'s incident edges.
+    pub fn edge_ids(&self, v: usize) -> &[u32] {
+        &self.perm[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// COO edge index `[2, E]` over `num_nodes` nodes with cached conversions.
+///
+/// Caches are filled on demand (`csr()` / `csc()`) and survive for the
+/// lifetime of the value; any mutation goes through rebuilding (edge
+/// indices are immutable once constructed, like PyG's tensors).
+#[derive(Debug)]
+pub struct EdgeIndex {
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    num_nodes: usize,
+    sort_order: SortOrder,
+    is_undirected: bool,
+    csr_cache: OnceLock<Compressed>,
+    csc_cache: OnceLock<Compressed>,
+}
+
+impl Clone for EdgeIndex {
+    fn clone(&self) -> Self {
+        // Clones share no cache state; caches refill on demand.
+        Self {
+            src: self.src.clone(),
+            dst: self.dst.clone(),
+            num_nodes: self.num_nodes,
+            sort_order: self.sort_order,
+            is_undirected: self.is_undirected,
+            csr_cache: OnceLock::new(),
+            csc_cache: OnceLock::new(),
+        }
+    }
+}
+
+impl EdgeIndex {
+    /// Build from COO pairs, validating ranges and detecting sort order.
+    pub fn new(src: Vec<u32>, dst: Vec<u32>, num_nodes: usize) -> Result<Self> {
+        if src.len() != dst.len() {
+            return Err(Error::Graph(format!(
+                "src/dst length mismatch: {} vs {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        for (&s, &d) in src.iter().zip(&dst) {
+            if s as usize >= num_nodes || d as usize >= num_nodes {
+                return Err(Error::Graph(format!(
+                    "edge ({s}, {d}) out of range for {num_nodes} nodes"
+                )));
+            }
+        }
+        let sort_order = detect_sort_order(&src, &dst);
+        Ok(Self {
+            src,
+            dst,
+            num_nodes,
+            sort_order,
+            is_undirected: false,
+            csr_cache: OnceLock::new(),
+            csc_cache: OnceLock::new(),
+        })
+    }
+
+    /// Like `new` but marks the edge set as symmetric (A = Aᵀ). The caller
+    /// asserts symmetry; `debug_assert_undirected` verifies in debug builds.
+    pub fn new_undirected(src: Vec<u32>, dst: Vec<u32>, num_nodes: usize) -> Result<Self> {
+        let mut e = Self::new(src, dst, num_nodes)?;
+        e.is_undirected = true;
+        debug_assert!(e.verify_undirected(), "edge set is not symmetric");
+        Ok(e)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn src(&self) -> &[u32] {
+        &self.src
+    }
+
+    pub fn dst(&self) -> &[u32] {
+        &self.dst
+    }
+
+    pub fn sort_order(&self) -> SortOrder {
+        self.sort_order
+    }
+
+    pub fn is_undirected(&self) -> bool {
+        self.is_undirected
+    }
+
+    /// True if both caches (or the one needed for undirected) are filled.
+    pub fn fully_cached(&self) -> bool {
+        if self.is_undirected {
+            self.csr_cache.get().is_some() || self.csc_cache.get().is_some()
+        } else {
+            self.csr_cache.get().is_some() && self.csc_cache.get().is_some()
+        }
+    }
+
+    /// CSR (grouped by source). Cached after first call.
+    ///
+    /// For undirected graphs with a filled CSC cache this *reuses* the CSC
+    /// arrays (A = Aᵀ), reproducing the paper's "caching the CSR format
+    /// becomes unnecessary" optimization.
+    pub fn csr(&self) -> &Compressed {
+        if self.is_undirected {
+            if let Some(csc) = self.csc_cache.get() {
+                return csc;
+            }
+        }
+        self.csr_cache
+            .get_or_init(|| compress(&self.src, &self.dst, self.num_nodes))
+    }
+
+    /// CSC (grouped by destination). Cached after first call.
+    pub fn csc(&self) -> &Compressed {
+        if self.is_undirected {
+            if let Some(csr) = self.csr_cache.get() {
+                return csr;
+            }
+        }
+        self.csc_cache
+            .get_or_init(|| compress(&self.dst, &self.src, self.num_nodes))
+    }
+
+    /// Out-degree of every node (scan; does not require the CSR cache).
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_nodes];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// In-degree of every node.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_nodes];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Return a copy sorted by destination (enables the fused segmented-
+    /// aggregation message-passing path). `perm[i]` gives, for position `i`
+    /// of the sorted edge list, the originating COO edge id.
+    pub fn sorted_by_dst(&self) -> (EdgeIndex, Vec<u32>) {
+        let mut perm: Vec<u32> = (0..self.num_edges() as u32).collect();
+        perm.sort_by_key(|&i| (self.dst[i as usize], self.src[i as usize]));
+        let src = perm.iter().map(|&i| self.src[i as usize]).collect();
+        let dst = perm.iter().map(|&i| self.dst[i as usize]).collect();
+        let mut e = EdgeIndex::new(src, dst, self.num_nodes).expect("valid by construction");
+        e.is_undirected = self.is_undirected;
+        (e, perm)
+    }
+
+    /// Symmetrize: add reverse edges (deduplicated) and mark undirected.
+    pub fn to_undirected(&self) -> EdgeIndex {
+        use std::collections::HashSet;
+        let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(self.num_edges() * 2);
+        let mut src = Vec::with_capacity(self.num_edges() * 2);
+        let mut dst = Vec::with_capacity(self.num_edges() * 2);
+        for (&s, &d) in self.src.iter().zip(&self.dst) {
+            for (a, b) in [(s, d), (d, s)] {
+                if seen.insert((a, b)) {
+                    src.push(a);
+                    dst.push(b);
+                }
+            }
+        }
+        let mut e = EdgeIndex::new(src, dst, self.num_nodes).expect("valid by construction");
+        e.is_undirected = true;
+        e
+    }
+
+    /// O(E log E) symmetry check (debug / test helper).
+    pub fn verify_undirected(&self) -> bool {
+        let mut fwd: Vec<(u32, u32)> = self.src.iter().cloned().zip(self.dst.iter().cloned()).collect();
+        let mut bwd: Vec<(u32, u32)> = self.dst.iter().cloned().zip(self.src.iter().cloned()).collect();
+        fwd.sort_unstable();
+        bwd.sort_unstable();
+        fwd == bwd
+    }
+}
+
+fn detect_sort_order(src: &[u32], dst: &[u32]) -> SortOrder {
+    if src.windows(2).all(|w| w[0] <= w[1]) {
+        SortOrder::ByRow
+    } else if dst.windows(2).all(|w| w[0] <= w[1]) {
+        SortOrder::ByCol
+    } else {
+        SortOrder::None
+    }
+}
+
+/// Counting-sort compression of COO into indptr/indices/perm, grouping by
+/// `group` (CSR: group = src; CSC: group = dst). O(N + E), stable.
+fn compress(group: &[u32], other: &[u32], num_nodes: usize) -> Compressed {
+    let mut indptr = vec![0usize; num_nodes + 1];
+    for &g in group {
+        indptr[g as usize + 1] += 1;
+    }
+    for i in 0..num_nodes {
+        indptr[i + 1] += indptr[i];
+    }
+    let mut cursor = indptr.clone();
+    let mut indices = vec![0u32; group.len()];
+    let mut perm = vec![0u32; group.len()];
+    for (e, (&g, &o)) in group.iter().zip(other).enumerate() {
+        let pos = cursor[g as usize];
+        indices[pos] = o;
+        perm[pos] = e as u32;
+        cursor[g as usize] += 1;
+    }
+    Compressed { indptr, indices, perm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> EdgeIndex {
+        // 0->1, 0->2, 1->2, 2->0
+        EdgeIndex::new(vec![0, 0, 1, 2], vec![1, 2, 2, 0], 3).unwrap()
+    }
+
+    #[test]
+    fn validates_ranges_and_lengths() {
+        assert!(EdgeIndex::new(vec![0], vec![5], 3).is_err());
+        assert!(EdgeIndex::new(vec![0, 1], vec![0], 3).is_err());
+    }
+
+    #[test]
+    fn detects_sort_order() {
+        assert_eq!(toy().sort_order(), SortOrder::ByRow);
+        let bycol = EdgeIndex::new(vec![2, 0, 1], vec![0, 1, 2], 3).unwrap();
+        assert_eq!(bycol.sort_order(), SortOrder::ByCol);
+        let none = EdgeIndex::new(vec![2, 0, 1], vec![1, 2, 0], 3).unwrap();
+        assert_eq!(none.sort_order(), SortOrder::None);
+    }
+
+    #[test]
+    fn csr_groups_by_source() {
+        let e = toy();
+        let csr = e.csr();
+        assert_eq!(csr.indptr, vec![0, 2, 3, 4]);
+        assert_eq!(csr.neighbors(0), &[1, 2]);
+        assert_eq!(csr.neighbors(1), &[2]);
+        assert_eq!(csr.neighbors(2), &[0]);
+        assert_eq!(csr.edge_ids(0), &[0, 1]);
+    }
+
+    #[test]
+    fn csc_groups_by_destination() {
+        let e = toy();
+        let csc = e.csc();
+        assert_eq!(csc.neighbors(0), &[2]); // in-neighbors of 0
+        assert_eq!(csc.neighbors(2), &[0, 1]);
+        assert_eq!(csc.edge_ids(2), &[1, 2]);
+    }
+
+    #[test]
+    fn caches_are_reused() {
+        let e = toy();
+        let p1 = e.csr() as *const Compressed;
+        let p2 = e.csr() as *const Compressed;
+        assert_eq!(p1, p2);
+        assert!(!e.fully_cached());
+        e.csc();
+        assert!(e.fully_cached());
+    }
+
+    #[test]
+    fn undirected_shares_one_cache() {
+        let e = toy().to_undirected();
+        assert!(e.is_undirected());
+        assert!(e.verify_undirected());
+        let csc = e.csc() as *const Compressed;
+        // CSR on an undirected graph must reuse the CSC arrays.
+        let csr = e.csr() as *const Compressed;
+        assert_eq!(csc, csr);
+        assert!(e.fully_cached());
+    }
+
+    #[test]
+    fn csr_csc_consistent_with_coo() {
+        let e = toy();
+        let csr = e.csr();
+        let mut rebuilt: Vec<(u32, u32)> = Vec::new();
+        for v in 0..e.num_nodes() {
+            for &n in csr.neighbors(v) {
+                rebuilt.push((v as u32, n));
+            }
+        }
+        let mut orig: Vec<(u32, u32)> =
+            e.src().iter().cloned().zip(e.dst().iter().cloned()).collect();
+        orig.sort_unstable();
+        rebuilt.sort_unstable();
+        assert_eq!(orig, rebuilt);
+    }
+
+    #[test]
+    fn sorted_by_dst_permutation_is_consistent() {
+        let e = toy();
+        let (s, perm) = e.sorted_by_dst();
+        assert!(s.dst().windows(2).all(|w| w[0] <= w[1]));
+        for (i, &p) in perm.iter().enumerate() {
+            assert_eq!(s.src()[i], e.src()[p as usize]);
+            assert_eq!(s.dst()[i], e.dst()[p as usize]);
+        }
+        assert_eq!(s.sort_order(), SortOrder::ByCol);
+    }
+
+    #[test]
+    fn degrees() {
+        let e = toy();
+        assert_eq!(e.out_degrees(), vec![2, 1, 1]);
+        assert_eq!(e.in_degrees(), vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn to_undirected_dedups() {
+        // 0->1 plus 1->0 already present: symmetrizing must not duplicate.
+        let e = EdgeIndex::new(vec![0, 1], vec![1, 0], 2).unwrap();
+        let u = e.to_undirected();
+        assert_eq!(u.num_edges(), 2);
+    }
+}

@@ -1,0 +1,287 @@
+//! Heterogeneous graph container (§2.2 "Heterogeneous Message Passing").
+//!
+//! A heterogeneous graph G = (V, E, φ, ψ) assigns every node a node type in
+//! 𝒯 and every edge a relation triple (src_type, rel, dst_type) in ℛ.
+//! Mirrors PyG's `HeteroData`: per-node-type feature/label stores and
+//! per-edge-type [`EdgeIndex`]es over *local* (per-type) node ids.
+
+use super::edge_index::EdgeIndex;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// A relation triple `(src_type, relation, dst_type)`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EdgeType {
+    pub src: String,
+    pub rel: String,
+    pub dst: String,
+}
+
+impl EdgeType {
+    pub fn new(src: &str, rel: &str, dst: &str) -> Self {
+        Self { src: src.into(), rel: rel.into(), dst: dst.into() }
+    }
+
+    /// Canonical string form `src__rel__dst` (artifact naming, logs).
+    pub fn key(&self) -> String {
+        format!("{}__{}__{}", self.src, self.rel, self.dst)
+    }
+}
+
+/// Per-node-type storage.
+#[derive(Clone, Debug)]
+pub struct NodeStore {
+    pub x: Tensor,
+    pub y: Option<Vec<i64>>,
+    /// Per-node timestamps; `None` for static types (paper: "for node and
+    /// edge types lacking timestamps sampling is performed without applying
+    /// temporal constraints").
+    pub time: Option<Vec<i64>>,
+}
+
+/// Per-edge-type storage.
+#[derive(Clone, Debug)]
+pub struct EdgeStore {
+    pub edge_index: EdgeIndex,
+    pub time: Option<Vec<i64>>,
+}
+
+/// Heterogeneous attributed graph.
+#[derive(Clone, Debug, Default)]
+pub struct HeteroGraph {
+    nodes: BTreeMap<String, NodeStore>,
+    edges: BTreeMap<EdgeType, EdgeStore>,
+}
+
+impl HeteroGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a node type with features.
+    pub fn add_node_type(&mut self, name: &str, x: Tensor) -> Result<()> {
+        if self.nodes.contains_key(name) {
+            return Err(Error::Graph(format!("duplicate node type {name}")));
+        }
+        self.nodes.insert(name.to_string(), NodeStore { x, y: None, time: None });
+        Ok(())
+    }
+
+    pub fn set_labels(&mut self, node_type: &str, y: Vec<i64>) -> Result<()> {
+        let store = self.node_store_mut(node_type)?;
+        if y.len() != store.x.rows() {
+            return Err(Error::Graph(format!(
+                "label count {} != node count {}",
+                y.len(),
+                store.x.rows()
+            )));
+        }
+        store.y = Some(y);
+        Ok(())
+    }
+
+    pub fn set_node_time(&mut self, node_type: &str, t: Vec<i64>) -> Result<()> {
+        let store = self.node_store_mut(node_type)?;
+        if t.len() != store.x.rows() {
+            return Err(Error::Graph(format!(
+                "time count {} != node count {}",
+                t.len(),
+                store.x.rows()
+            )));
+        }
+        store.time = Some(t);
+        Ok(())
+    }
+
+    /// Register an edge type. Endpoint node types must already exist and
+    /// the edge index must be consistent with their sizes.
+    pub fn add_edge_type(&mut self, et: EdgeType, edge_index: EdgeIndex) -> Result<()> {
+        let n_src = self.num_nodes(&et.src)?;
+        let n_dst = self.num_nodes(&et.dst)?;
+        // EdgeIndex is validated against a single node count; for bipartite
+        // edge types we validate endpoints explicitly.
+        for &s in edge_index.src() {
+            if s as usize >= n_src {
+                return Err(Error::Graph(format!("src {s} out of range for {}", et.src)));
+            }
+        }
+        for &d in edge_index.dst() {
+            if d as usize >= n_dst {
+                return Err(Error::Graph(format!("dst {d} out of range for {}", et.dst)));
+            }
+        }
+        if self.edges.contains_key(&et) {
+            return Err(Error::Graph(format!("duplicate edge type {}", et.key())));
+        }
+        self.edges.insert(et, EdgeStore { edge_index, time: None });
+        Ok(())
+    }
+
+    pub fn set_edge_time(&mut self, et: &EdgeType, t: Vec<i64>) -> Result<()> {
+        let store = self
+            .edges
+            .get_mut(et)
+            .ok_or_else(|| Error::Graph(format!("unknown edge type {}", et.key())))?;
+        if t.len() != store.edge_index.num_edges() {
+            return Err(Error::Graph(format!(
+                "edge time count {} != edge count {}",
+                t.len(),
+                store.edge_index.num_edges()
+            )));
+        }
+        store.time = Some(t);
+        Ok(())
+    }
+
+    pub fn node_types(&self) -> impl Iterator<Item = &str> {
+        self.nodes.keys().map(|s| s.as_str())
+    }
+
+    pub fn edge_types(&self) -> impl Iterator<Item = &EdgeType> {
+        self.edges.keys()
+    }
+
+    pub fn num_node_types(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edge_types(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn node_store(&self, node_type: &str) -> Result<&NodeStore> {
+        self.nodes
+            .get(node_type)
+            .ok_or_else(|| Error::Graph(format!("unknown node type {node_type}")))
+    }
+
+    fn node_store_mut(&mut self, node_type: &str) -> Result<&mut NodeStore> {
+        self.nodes
+            .get_mut(node_type)
+            .ok_or_else(|| Error::Graph(format!("unknown node type {node_type}")))
+    }
+
+    pub fn edge_store(&self, et: &EdgeType) -> Result<&EdgeStore> {
+        self.edges
+            .get(et)
+            .ok_or_else(|| Error::Graph(format!("unknown edge type {}", et.key())))
+    }
+
+    pub fn num_nodes(&self, node_type: &str) -> Result<usize> {
+        Ok(self.node_store(node_type)?.x.rows())
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.nodes.values().map(|s| s.x.rows()).sum()
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.edges.values().map(|s| s.edge_index.num_edges()).sum()
+    }
+
+    /// Edge types whose destination is `node_type` (the "incoming relations"
+    /// the nested hetero aggregation in Eq. (1) runs over).
+    pub fn incoming_edge_types(&self, node_type: &str) -> Vec<&EdgeType> {
+        self.edges.keys().filter(|et| et.dst == node_type).collect()
+    }
+
+    /// Flatten into a homogeneous graph with global contiguous node ids
+    /// (offset per type, in BTreeMap order). Returns the graph-wide
+    /// `EdgeIndex`, per-type offsets, and total node count. Used by
+    /// partitioning and full-graph analytics.
+    pub fn to_homogeneous_topology(&self) -> (EdgeIndex, BTreeMap<String, usize>, usize) {
+        let mut offsets = BTreeMap::new();
+        let mut total = 0usize;
+        for (name, store) in &self.nodes {
+            offsets.insert(name.clone(), total);
+            total += store.x.rows();
+        }
+        let mut src = Vec::with_capacity(self.total_edges());
+        let mut dst = Vec::with_capacity(self.total_edges());
+        for (et, store) in &self.edges {
+            let so = offsets[&et.src] as u32;
+            let do_ = offsets[&et.dst] as u32;
+            for (&s, &d) in store.edge_index.src().iter().zip(store.edge_index.dst()) {
+                src.push(so + s);
+                dst.push(do_ + d);
+            }
+        }
+        let ei = EdgeIndex::new(src, dst, total).expect("valid by construction");
+        (ei, offsets, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> HeteroGraph {
+        let mut g = HeteroGraph::new();
+        g.add_node_type("user", Tensor::zeros(vec![3, 4])).unwrap();
+        g.add_node_type("item", Tensor::zeros(vec![2, 4])).unwrap();
+        let ei = EdgeIndex::new(vec![0, 1, 2], vec![0, 1, 0], 3).unwrap();
+        g.add_edge_type(EdgeType::new("user", "buys", "item"), ei).unwrap();
+        g
+    }
+
+    #[test]
+    fn bipartite_range_validation() {
+        let mut g = toy();
+        // dst 5 out of range for "item" (2 nodes)
+        let bad = EdgeIndex::new(vec![0], vec![5], 6).unwrap();
+        assert!(g.add_edge_type(EdgeType::new("user", "views", "item"), bad).is_err());
+        // unknown node type
+        let ei = EdgeIndex::new(vec![0], vec![0], 1).unwrap();
+        assert!(g.add_edge_type(EdgeType::new("user", "x", "nope"), ei).is_err());
+    }
+
+    #[test]
+    fn counts() {
+        let g = toy();
+        assert_eq!(g.num_node_types(), 2);
+        assert_eq!(g.num_edge_types(), 1);
+        assert_eq!(g.total_nodes(), 5);
+        assert_eq!(g.total_edges(), 3);
+        assert_eq!(g.num_nodes("user").unwrap(), 3);
+    }
+
+    #[test]
+    fn incoming_edge_types() {
+        let g = toy();
+        let inc = g.incoming_edge_types("item");
+        assert_eq!(inc.len(), 1);
+        assert_eq!(inc[0].rel, "buys");
+        assert!(g.incoming_edge_types("user").is_empty());
+    }
+
+    #[test]
+    fn to_homogeneous_offsets() {
+        let g = toy();
+        let (ei, offsets, total) = g.to_homogeneous_topology();
+        assert_eq!(total, 5);
+        // BTreeMap order: "item" < "user"
+        assert_eq!(offsets["item"], 0);
+        assert_eq!(offsets["user"], 2);
+        // user 0 -> item 0 becomes 2 -> 0
+        assert_eq!(ei.src()[0], 2);
+        assert_eq!(ei.dst()[0], 0);
+    }
+
+    #[test]
+    fn duplicate_node_type_rejected() {
+        let mut g = toy();
+        assert!(g.add_node_type("user", Tensor::zeros(vec![1, 4])).is_err());
+    }
+
+    #[test]
+    fn labels_and_time_validation() {
+        let mut g = toy();
+        assert!(g.set_labels("user", vec![0, 1, 0]).is_ok());
+        assert!(g.set_labels("user", vec![0]).is_err());
+        assert!(g.set_node_time("item", vec![1, 2]).is_ok());
+        let et = EdgeType::new("user", "buys", "item");
+        assert!(g.set_edge_time(&et, vec![1, 2, 3]).is_ok());
+        assert!(g.set_edge_time(&et, vec![1]).is_err());
+    }
+}

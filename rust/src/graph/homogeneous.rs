@@ -1,0 +1,122 @@
+//! Homogeneous graph container: topology + node/edge features + labels +
+//! optional edge timestamps.
+
+use super::edge_index::EdgeIndex;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// A homogeneous (single node/edge type) attributed graph.
+///
+/// Mirrors PyG's `Data`: topology in an [`EdgeIndex`], dense node features
+/// `x`, optional labels `y`, optional per-edge timestamps `edge_time`.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub edge_index: EdgeIndex,
+    /// `[num_nodes, F]` node features.
+    pub x: Tensor,
+    /// Per-node integer labels (classification), if present.
+    pub y: Option<Vec<i64>>,
+    /// Per-edge event timestamps (temporal graphs), if present.
+    pub edge_time: Option<Vec<i64>>,
+    /// Per-node timestamps (first appearance), if present.
+    pub node_time: Option<Vec<i64>>,
+}
+
+impl Graph {
+    pub fn new(edge_index: EdgeIndex, x: Tensor) -> Result<Self> {
+        if x.rows() != edge_index.num_nodes() {
+            return Err(Error::Graph(format!(
+                "feature rows {} != num_nodes {}",
+                x.rows(),
+                edge_index.num_nodes()
+            )));
+        }
+        Ok(Self { edge_index, x, y: None, edge_time: None, node_time: None })
+    }
+
+    pub fn with_labels(mut self, y: Vec<i64>) -> Result<Self> {
+        if y.len() != self.num_nodes() {
+            return Err(Error::Graph(format!(
+                "label count {} != num_nodes {}",
+                y.len(),
+                self.num_nodes()
+            )));
+        }
+        self.y = Some(y);
+        Ok(self)
+    }
+
+    pub fn with_edge_time(mut self, t: Vec<i64>) -> Result<Self> {
+        if t.len() != self.num_edges() {
+            return Err(Error::Graph(format!(
+                "edge_time count {} != num_edges {}",
+                t.len(),
+                self.num_edges()
+            )));
+        }
+        self.edge_time = Some(t);
+        Ok(self)
+    }
+
+    pub fn with_node_time(mut self, t: Vec<i64>) -> Result<Self> {
+        if t.len() != self.num_nodes() {
+            return Err(Error::Graph(format!(
+                "node_time count {} != num_nodes {}",
+                t.len(),
+                self.num_nodes()
+            )));
+        }
+        self.node_time = Some(t);
+        Ok(self)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.edge_index.num_nodes()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edge_index.num_edges()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.y
+            .as_ref()
+            .map(|y| y.iter().copied().max().unwrap_or(-1) as usize + 1)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Graph {
+        let ei = EdgeIndex::new(vec![0, 1], vec![1, 2], 3).unwrap();
+        Graph::new(ei, Tensor::zeros(vec![3, 4])).unwrap()
+    }
+
+    #[test]
+    fn validates_feature_rows() {
+        let ei = EdgeIndex::new(vec![0], vec![1], 3).unwrap();
+        assert!(Graph::new(ei, Tensor::zeros(vec![2, 4])).is_err());
+    }
+
+    #[test]
+    fn labels_and_classes() {
+        let g = toy().with_labels(vec![0, 2, 1]).unwrap();
+        assert_eq!(g.num_classes(), 3);
+        assert!(toy().with_labels(vec![0]).is_err());
+    }
+
+    #[test]
+    fn temporal_attrs_validated() {
+        assert!(toy().with_edge_time(vec![1, 2]).is_ok());
+        assert!(toy().with_edge_time(vec![1]).is_err());
+        assert!(toy().with_node_time(vec![1, 2, 3]).is_ok());
+        assert!(toy().with_node_time(vec![1]).is_err());
+    }
+}

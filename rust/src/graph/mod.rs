@@ -1,0 +1,10 @@
+//! Graph data structures: `EdgeIndex` (COO with cached CSR/CSC — §2.2),
+//! homogeneous `Graph`, and `HeteroGraph` with typed node/edge stores.
+
+pub mod edge_index;
+pub mod hetero;
+pub mod homogeneous;
+
+pub use edge_index::{Compressed, EdgeIndex, SortOrder};
+pub use hetero::{EdgeStore, EdgeType, HeteroGraph, NodeStore};
+pub use homogeneous::Graph;

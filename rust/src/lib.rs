@@ -1,0 +1,44 @@
+//! # pyg2 — PyG 2.0 reproduction in Rust + JAX + Pallas
+//!
+//! A three-layer reproduction of *"PyG 2.0: Scalable Learning on Real
+//! World Graphs"* (Fey et al., 2025):
+//!
+//! * **Layer 3 (this crate)** — the scalable graph infrastructure:
+//!   [`graph::EdgeIndex`] with cached CSR/CSC, [`storage`] feature/graph
+//!   stores, multi-threaded [`sampler`]s (homogeneous / heterogeneous /
+//!   temporal / bulk), the [`loader`] pipeline with backpressure,
+//!   [`partition`]ing + [`dist`]ributed simulation, and post-processing
+//!   ([`explain`], [`metrics`], [`rag`]).
+//! * **Layer 2 (python/compile/model.py)** — JAX GNNs (GCN, SAGE, GIN,
+//!   GAT, EdgeCNN) AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for segmented
+//!   aggregation, grouped matmul and SpMM, verified against pure-jnp
+//!   oracles.
+//!
+//! Python runs once at build time (`make artifacts`); the [`runtime`]
+//! loads the HLO artifacts through PJRT and executes them from pure Rust.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod explain;
+pub mod metrics;
+pub mod rag;
+pub mod rdl;
+pub mod dist;
+pub mod loader;
+pub mod nn;
+pub mod partition;
+pub mod runtime;
+pub mod sampler;
+pub mod storage;
+pub mod error;
+pub mod graph;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Crate version string.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

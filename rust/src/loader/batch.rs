@@ -1,0 +1,385 @@
+//! Mini-batch assembly: join sampled topology with fetched features and
+//! pad everything to the **hop-aligned static layout** the AOT-compiled
+//! HLO expects.
+//!
+//! XLA executables have fixed input shapes, and progressive trimming
+//! (Table 2) additionally requires that "the first k hops" is a *static
+//! prefix*. So the bucket reserves a fixed region per BFS hop:
+//!
+//! ```text
+//! nodes: [ seeds | hop-1 region | hop-2 region | ... ]   (node_cum)
+//! edges: [ hop-1 region | hop-2 region | ... ]           (edge_cum)
+//! ```
+//!
+//! Real nodes/edges fill each region's prefix; the rest is padding with
+//! `mask == 0`, `ew == 0`, `mask_bias == -1e9`, and endpoints that point
+//! at in-range slots (contributing nothing through the masks — the L2
+//! models are verified against this exact convention in
+//! `python/tests/test_plans.py`).
+
+use crate::error::{Error, Result};
+use crate::sampler::SampledSubgraph;
+use crate::storage::{FeatureKey, FeatureStore};
+use crate::tensor::Tensor;
+
+/// Hop-aligned static shape bucket (mirrors `model.make_bucket`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeBucket {
+    /// Seed region size.
+    pub s: usize,
+    /// Per-hop fanouts (defines the worst case regions).
+    pub fanouts: Vec<usize>,
+    /// Cumulative node capacity after each hop: `[s, n1, ..., nL]`.
+    pub node_cum: Vec<usize>,
+    /// Cumulative edge capacity after each hop: `[e1, ..., eL]`.
+    pub edge_cum: Vec<usize>,
+}
+
+impl ShapeBucket {
+    /// Worst-case bucket for `batch_size` seeds expanded by `fanouts`.
+    pub fn for_sampling(batch_size: usize, fanouts: &[usize]) -> Self {
+        let mut node_cum = vec![batch_size];
+        let mut edge_cum = Vec::new();
+        let mut frontier = batch_size;
+        let mut edges = 0usize;
+        for &f in fanouts {
+            edges += frontier * f;
+            frontier *= f;
+            node_cum.push(node_cum.last().unwrap() + frontier);
+            edge_cum.push(edges);
+        }
+        Self { s: batch_size, fanouts: fanouts.to_vec(), node_cum, edge_cum }
+    }
+
+    pub fn n_pad(&self) -> usize {
+        *self.node_cum.last().unwrap()
+    }
+
+    pub fn e_pad(&self) -> usize {
+        *self.edge_cum.last().unwrap_or(&0)
+    }
+
+    pub fn num_hops(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Node region `[lo, hi)` of hop `h` (0 = seeds).
+    pub fn node_region(&self, h: usize) -> (usize, usize) {
+        let lo = if h == 0 { 0 } else { self.node_cum[h - 1] };
+        (lo, self.node_cum[h])
+    }
+
+    /// Edge region `[lo, hi)` of hop `h` (1-based).
+    pub fn edge_region(&self, h: usize) -> (usize, usize) {
+        let lo = if h == 1 { 0 } else { self.edge_cum[h - 2] };
+        (lo, self.edge_cum[h - 1])
+    }
+}
+
+/// A fully assembled, hop-aligned, padded mini-batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Raw sampled subgraph (kept for metadata and debugging).
+    pub sub: SampledSubgraph,
+    /// `[n_pad, F]` node features (hop-aligned; padding rows zero).
+    pub x: Tensor,
+    /// `[e_pad]` padded local source indices.
+    pub row: Vec<i32>,
+    /// `[e_pad]` padded local destination indices.
+    pub col: Vec<i32>,
+    /// `[e_pad]` mean-normalized edge weights (0 on padding).
+    pub ew: Vec<f32>,
+    /// `[e_pad]` binary edge mask.
+    pub mask: Vec<f32>,
+    /// `[e_pad]` 0 on real edges, -1e9 on padding (GAT softmax bias).
+    pub mask_bias: Vec<f32>,
+    /// `[s]` seed labels (-1 on padding).
+    pub labels: Vec<i32>,
+    /// `[s]` 1.0 on real seeds.
+    pub seed_mask: Vec<f32>,
+    /// padded position of each real node (indexed like `sub.nodes`).
+    pub node_pos: Vec<u32>,
+    pub bucket: ShapeBucket,
+}
+
+impl Batch {
+    /// Assemble a hop-aligned batch from a sampled subgraph.
+    ///
+    /// `labels`, if given, holds one label per *global node id*.
+    pub fn assemble(
+        sub: SampledSubgraph,
+        features: &dyn FeatureStore,
+        feature_key: &FeatureKey,
+        labels: Option<&[i64]>,
+        bucket: &ShapeBucket,
+    ) -> Result<Batch> {
+        let hops = bucket.num_hops();
+        if sub.num_hops() != hops {
+            return Err(Error::Shape(format!(
+                "subgraph has {} hops; bucket expects {hops}",
+                sub.num_hops()
+            )));
+        }
+        if sub.num_seeds > bucket.s {
+            return Err(Error::Shape(format!(
+                "{} seeds exceed bucket seed region {}",
+                sub.num_seeds, bucket.s
+            )));
+        }
+
+        // --- node placement: real node i -> padded slot node_pos[i] -----
+        let mut node_pos = vec![0u32; sub.num_nodes()];
+        for h in 0..=hops {
+            let (real_lo, real_hi) = if h == 0 {
+                (0, sub.node_offsets[0])
+            } else {
+                (sub.node_offsets[h - 1], sub.node_offsets[h])
+            };
+            let (pad_lo, pad_hi) = bucket.node_region(h);
+            if real_hi - real_lo > pad_hi - pad_lo {
+                return Err(Error::Shape(format!(
+                    "hop {h}: {} real nodes exceed region capacity {}",
+                    real_hi - real_lo,
+                    pad_hi - pad_lo
+                )));
+            }
+            for (k, i) in (real_lo..real_hi).enumerate() {
+                node_pos[i] = (pad_lo + k) as u32;
+            }
+        }
+
+        // --- features at padded positions ------------------------------
+        let f = features.feature_dim(feature_key)?;
+        let mut x = Tensor::zeros(vec![bucket.n_pad(), f]);
+        {
+            // Fetch all real node rows in one call (sub.nodes order), then
+            // place each at its padded slot.
+            let idx: Vec<usize> = sub.nodes.iter().map(|&v| v as usize).collect();
+            let fetched = features.get(feature_key, &idx)?;
+            for (i, &pos) in node_pos.iter().enumerate() {
+                x.row_mut(pos as usize).copy_from_slice(fetched.row(i));
+            }
+        }
+
+        // --- edges: hop-aligned, endpoints remapped ---------------------
+        let e_pad = bucket.e_pad();
+        let mut row = vec![0i32; e_pad];
+        let mut col = vec![0i32; e_pad];
+        let mut mask = vec![0.0f32; e_pad];
+        let mut in_deg = vec![0u32; bucket.n_pad()];
+        for h in 1..=hops {
+            let (real_lo, real_hi) = if h == 1 {
+                (0, sub.edge_offsets[0])
+            } else {
+                (sub.edge_offsets[h - 2], sub.edge_offsets[h - 1])
+            };
+            let (pad_lo, pad_hi) = bucket.edge_region(h);
+            if real_hi - real_lo > pad_hi - pad_lo {
+                return Err(Error::Shape(format!(
+                    "hop {h}: {} real edges exceed region capacity {}",
+                    real_hi - real_lo,
+                    pad_hi - pad_lo
+                )));
+            }
+            for (k, eidx) in (real_lo..real_hi).enumerate() {
+                let r = node_pos[sub.row[eidx] as usize] as i32;
+                let c = node_pos[sub.col[eidx] as usize] as i32;
+                row[pad_lo + k] = r;
+                col[pad_lo + k] = c;
+                mask[pad_lo + k] = 1.0;
+                in_deg[c as usize] += 1;
+            }
+            // Padding edges point at the start of in-range regions; their
+            // zero mask/ew makes them inert (verified by the L2 tests).
+            let pad_row_target = bucket.node_region(h).0 as i32;
+            let pad_col_target = bucket.node_region(h - 1).0 as i32;
+            for slot in (pad_lo + (real_hi - real_lo))..pad_hi {
+                row[slot] = pad_row_target;
+                col[slot] = pad_col_target;
+            }
+        }
+
+        // --- mean-normalized edge weights + GAT bias --------------------
+        let mut ew = vec![0.0f32; e_pad];
+        let mut mask_bias = vec![-1e9f32; e_pad];
+        for k in 0..e_pad {
+            if mask[k] > 0.0 {
+                ew[k] = 1.0 / in_deg[col[k] as usize].max(1) as f32;
+                mask_bias[k] = 0.0;
+            }
+        }
+
+        // --- labels ------------------------------------------------------
+        let mut y = vec![-1i32; bucket.s];
+        let mut seed_mask = vec![0.0f32; bucket.s];
+        for i in 0..sub.num_seeds {
+            seed_mask[i] = 1.0;
+            if let Some(all) = labels {
+                y[i] = all[sub.nodes[i] as usize] as i32;
+            }
+        }
+
+        Ok(Batch {
+            sub,
+            x,
+            row,
+            col,
+            ew,
+            mask,
+            mask_bias,
+            labels: y,
+            seed_mask,
+            node_pos,
+            bucket: bucket.clone(),
+        })
+    }
+
+    pub fn num_real_nodes(&self) -> usize {
+        self.sub.num_nodes()
+    }
+
+    pub fn num_real_edges(&self) -> usize {
+        self.sub.num_edges()
+    }
+
+    pub fn num_real_seeds(&self) -> usize {
+        self.sub.num_seeds
+    }
+
+    /// Structural invariants of the padded layout (property tests).
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let n = self.bucket.n_pad() as i32;
+        if self.row.iter().any(|&r| r < 0 || r >= n) {
+            return Err("row index out of padded range".into());
+        }
+        if self.col.iter().any(|&c| c < 0 || c >= n) {
+            return Err("col index out of padded range".into());
+        }
+        let real_edges = self.mask.iter().filter(|&&m| m > 0.0).count();
+        if real_edges != self.sub.num_edges() {
+            return Err(format!(
+                "mask count {} != real edges {}",
+                real_edges,
+                self.sub.num_edges()
+            ));
+        }
+        // Real edges' ew must be positive and mask_bias zero.
+        for k in 0..self.mask.len() {
+            if self.mask[k] > 0.0 {
+                if self.ew[k] <= 0.0 {
+                    return Err(format!("real edge {k} has ew {}", self.ew[k]));
+                }
+                if self.mask_bias[k] != 0.0 {
+                    return Err(format!("real edge {k} has bias {}", self.mask_bias[k]));
+                }
+            } else if self.ew[k] != 0.0 {
+                return Err(format!("padding edge {k} has ew {}", self.ew[k]));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::InMemoryFeatureStore;
+
+    fn toy_sub() -> SampledSubgraph {
+        // 1 seed (global 2); hop1: globals 0, 1; hop2: global 3.
+        SampledSubgraph {
+            nodes: vec![2, 0, 1, 3],
+            row: vec![1, 2, 3],
+            col: vec![0, 0, 1],
+            edge_ids: vec![0, 1, 2],
+            num_seeds: 1,
+            node_offsets: vec![1, 3, 4],
+            edge_offsets: vec![2, 3],
+            batch: None,
+            seed_times: None,
+        }
+    }
+
+    fn toy_features() -> InMemoryFeatureStore {
+        let s = InMemoryFeatureStore::new();
+        let data: Vec<f32> = (0..4).flat_map(|i| [i as f32, i as f32]).collect();
+        s.put(FeatureKey::default_x(), Tensor::new(vec![4, 2], data).unwrap());
+        s
+    }
+
+    fn bucket() -> ShapeBucket {
+        ShapeBucket::for_sampling(2, &[3, 2])
+        // node_cum [2, 8, 20], edge_cum [6, 18]
+    }
+
+    #[test]
+    fn bucket_regions() {
+        let b = bucket();
+        assert_eq!(b.node_cum, vec![2, 8, 20]);
+        assert_eq!(b.edge_cum, vec![6, 18]);
+        assert_eq!(b.node_region(0), (0, 2));
+        assert_eq!(b.node_region(1), (2, 8));
+        assert_eq!(b.edge_region(1), (0, 6));
+        assert_eq!(b.edge_region(2), (6, 18));
+    }
+
+    #[test]
+    fn hop_aligned_assembly() {
+        let b = bucket();
+        let batch = Batch::assemble(
+            toy_sub(),
+            &toy_features(),
+            &FeatureKey::default_x(),
+            Some(&[10, 11, 12, 13]),
+            &b,
+        )
+        .unwrap();
+        batch.check_invariants().unwrap();
+        // Seed (global 2) at slot 0; hop1 nodes at 2, 3; hop2 node at 8.
+        assert_eq!(batch.node_pos, vec![0, 2, 3, 8]);
+        assert_eq!(batch.x.row(0), &[2.0, 2.0]);
+        assert_eq!(batch.x.row(2), &[0.0, 0.0]); // global 0
+        assert_eq!(batch.x.row(8), &[3.0, 3.0]); // global 3
+        assert_eq!(batch.x.row(1), &[0.0, 0.0]); // padding seed slot
+        // Edges: hop1 edges at slots 0..2, hop2 edge at slot 6.
+        assert_eq!(&batch.row[0..2], &[2, 3]);
+        assert_eq!(&batch.col[0..2], &[0, 0]);
+        assert_eq!(batch.row[6], 8);
+        assert_eq!(batch.col[6], 2);
+        assert_eq!(batch.mask[0], 1.0);
+        assert_eq!(batch.mask[2], 0.0);
+        // ew: node 0 has in-degree 2 -> 0.5 each.
+        assert_eq!(batch.ew[0], 0.5);
+        assert_eq!(batch.ew[6], 1.0);
+        // Labels: seed's global label.
+        assert_eq!(batch.labels, vec![12, -1]);
+        assert_eq!(batch.seed_mask, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        // Bucket too small for hop-1 (only 1 slot, 2 real nodes).
+        let b = ShapeBucket::for_sampling(1, &[1, 1]);
+        let err = Batch::assemble(
+            toy_sub(),
+            &toy_features(),
+            &FeatureKey::default_x(),
+            None,
+            &b,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn hop_count_mismatch_rejected() {
+        let b = ShapeBucket::for_sampling(2, &[3]);
+        assert!(Batch::assemble(
+            toy_sub(),
+            &toy_features(),
+            &FeatureKey::default_x(),
+            None,
+            &b
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Data-loading pipeline (Figure 1): samplers + feature stores joined into
+//! padded mini-batches behind a prefetching, backpressured worker pool.
+
+pub mod batch;
+pub mod neighbor_loader;
+pub mod seed_table;
+
+pub use batch::{Batch, ShapeBucket};
+pub use neighbor_loader::{BatchIter, LoaderConfig, NeighborLoader, Transform};
+pub use seed_table::{SeedTable, SeedTableBatch, SeedTableLoader};

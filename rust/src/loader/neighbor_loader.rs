@@ -1,0 +1,314 @@
+//! `NeighborLoader`: the end-to-end data-loading pipeline of Figure 1.
+//!
+//! Seed batches → graph sampler (GraphStore) → feature fetch
+//! (FeatureStore) → join + pad → mini-batch queue. Worker threads run the
+//! sample+fetch+join stages; a bounded output queue provides prefetching
+//! with backpressure (workers block once `prefetch` batches are ready,
+//! like PyG's `prefetch_factor`).
+
+use super::batch::{Batch, ShapeBucket};
+use crate::error::Result;
+use crate::sampler::{NeighborSampler, NeighborSamplerConfig};
+use crate::storage::{FeatureKey, FeatureStore, GraphStore};
+use crate::util::{BoundedQueue, Rng, ThreadPool};
+use std::sync::Arc;
+
+/// Loader configuration.
+#[derive(Clone, Debug)]
+pub struct LoaderConfig {
+    pub batch_size: usize,
+    pub num_workers: usize,
+    /// Output queue capacity (prefetch depth).
+    pub prefetch: usize,
+    pub shuffle: bool,
+    pub sampler: NeighborSamplerConfig,
+    /// Optional explicit bucket; derived worst-case from sampling if None.
+    pub bucket: Option<ShapeBucket>,
+    pub seed: u64,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 64,
+            num_workers: 2,
+            prefetch: 4,
+            shuffle: true,
+            sampler: NeighborSamplerConfig::default(),
+            bucket: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Transform hook applied to every assembled batch (RDL label attachment,
+/// feature augmentation, ...).
+pub type Transform = Arc<dyn Fn(&mut Batch) + Send + Sync>;
+
+/// The neighbor loader.
+pub struct NeighborLoader<G: GraphStore + 'static, F: FeatureStore + 'static> {
+    graph: Arc<G>,
+    features: Arc<F>,
+    feature_key: FeatureKey,
+    labels: Option<Arc<Vec<i64>>>,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    bucket: ShapeBucket,
+    transforms: Vec<Transform>,
+}
+
+impl<G: GraphStore + 'static, F: FeatureStore + 'static> NeighborLoader<G, F> {
+    pub fn new(graph: Arc<G>, features: Arc<F>, seeds: Vec<u32>, cfg: LoaderConfig) -> Self {
+        let bucket = cfg
+            .bucket
+            .clone()
+            .unwrap_or_else(|| ShapeBucket::for_sampling(cfg.batch_size, &cfg.sampler.fanouts));
+        Self {
+            graph,
+            features,
+            feature_key: FeatureKey::default_x(),
+            labels: None,
+            seeds,
+            cfg,
+            bucket,
+            transforms: Vec::new(),
+        }
+    }
+
+    pub fn with_labels(mut self, labels: Vec<i64>) -> Self {
+        self.labels = Some(Arc::new(labels));
+        self
+    }
+
+    pub fn with_feature_key(mut self, key: FeatureKey) -> Self {
+        self.feature_key = key;
+        self
+    }
+
+    pub fn with_transform(mut self, t: Transform) -> Self {
+        self.transforms.push(t);
+        self
+    }
+
+    pub fn bucket(&self) -> &ShapeBucket {
+        &self.bucket
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.seeds.len().div_ceil(self.cfg.batch_size)
+    }
+
+    /// Build this epoch's seed batches (shuffled when configured).
+    fn epoch_batches(&self, epoch: u64) -> Vec<Vec<u32>> {
+        let mut seeds = self.seeds.clone();
+        if self.cfg.shuffle {
+            let mut rng = Rng::new(self.cfg.seed).fork(epoch);
+            rng.shuffle(&mut seeds);
+        }
+        seeds
+            .chunks(self.cfg.batch_size)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Iterate one epoch. Returns an iterator backed by worker threads;
+    /// dropping it early shuts the pipeline down cleanly.
+    pub fn iter_epoch(&self, epoch: u64) -> BatchIter {
+        let batches = self.epoch_batches(epoch);
+        let total = batches.len();
+        let queue: Arc<BoundedQueue<Result<(usize, Batch)>>> =
+            BoundedQueue::new(self.cfg.prefetch.max(1));
+        let pool = ThreadPool::with_queue_capacity(self.cfg.num_workers, total.max(1));
+
+        let sampler = Arc::new(NeighborSampler::new(
+            Arc::clone(&self.graph),
+            self.cfg.sampler.clone(),
+        ));
+        for (i, seeds) in batches.into_iter().enumerate() {
+            let sampler = Arc::clone(&sampler);
+            let features = Arc::clone(&self.features);
+            let key = self.feature_key.clone();
+            let labels = self.labels.clone();
+            let bucket = self.bucket.clone();
+            let queue = Arc::clone(&queue);
+            let transforms = self.transforms.clone();
+            let batch_seed = epoch.wrapping_mul(1_000_003).wrapping_add(i as u64);
+            pool.submit(move || {
+                let result = sampler.sample(&seeds, batch_seed).and_then(|sub| {
+                    Batch::assemble(sub, features.as_ref(), &key, labels.as_deref().map(|v| &v[..]), &bucket)
+                        .map(|mut b| {
+                            for t in &transforms {
+                                t(&mut b);
+                            }
+                            (i, b)
+                        })
+                });
+                // Receiver may have been dropped; ignore send failures.
+                let _ = queue.send(result);
+            });
+        }
+
+        BatchIter { queue, pool: Some(pool), remaining: total, pending: std::collections::BTreeMap::new(), next_idx: 0 }
+    }
+}
+
+/// Iterator over one epoch's batches, **in deterministic batch order**
+/// (workers may finish out of order; we reorder on the consumer side so
+/// training runs are reproducible regardless of thread scheduling).
+pub struct BatchIter {
+    queue: Arc<BoundedQueue<Result<(usize, Batch)>>>,
+    pool: Option<ThreadPool>,
+    remaining: usize,
+    pending: std::collections::BTreeMap<usize, Batch>,
+    next_idx: usize,
+}
+
+impl Iterator for BatchIter {
+    type Item = Result<Batch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            // Deliver the next in-order batch if already buffered.
+            if let Some(b) = self.pending.remove(&self.next_idx) {
+                self.next_idx += 1;
+                return Some(Ok(b));
+            }
+            if self.remaining == 0 {
+                return None;
+            }
+            match self.queue.recv() {
+                Some(Ok((i, b))) => {
+                    self.remaining -= 1;
+                    self.pending.insert(i, b);
+                }
+                Some(Err(e)) => {
+                    self.remaining -= 1;
+                    return Some(Err(e));
+                }
+                None => return None,
+            }
+        }
+    }
+}
+
+impl Drop for BatchIter {
+    fn drop(&mut self) {
+        // Close the queue first so in-flight workers' sends fail fast
+        // instead of blocking on a full queue, then join the pool.
+        self.queue.close();
+        self.pool.take(); // drop joins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::storage::{InMemoryFeatureStore, InMemoryGraphStore};
+
+    fn setup() -> (Arc<InMemoryGraphStore>, Arc<InMemoryFeatureStore>, Vec<i64>) {
+        let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 11, ..Default::default() }).unwrap();
+        let labels = g.y.clone().unwrap();
+        let gs = Arc::new(InMemoryGraphStore::from_graph(&g));
+        let fs = Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone()));
+        (gs, fs, labels)
+    }
+
+    #[test]
+    fn yields_all_batches_in_order() {
+        let (gs, fs, labels) = setup();
+        let loader = NeighborLoader::new(
+            gs,
+            fs,
+            (0..100).collect(),
+            LoaderConfig {
+                batch_size: 16,
+                num_workers: 3,
+                sampler: NeighborSamplerConfig { fanouts: vec![4, 2], ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .with_labels(labels);
+        let batches: Vec<Batch> = loader.iter_epoch(0).map(|b| b.unwrap()).collect();
+        assert_eq!(batches.len(), 7); // ceil(100/16)
+        let total_seeds: usize = batches.iter().map(|b| b.num_real_seeds()).sum();
+        assert_eq!(total_seeds, 100);
+        for b in &batches {
+            b.sub.check_invariants().unwrap();
+            assert_eq!(b.x.rows(), loader_bucket_rows(&b));
+        }
+    }
+
+    fn loader_bucket_rows(b: &Batch) -> usize {
+        b.bucket.n_pad()
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (gs, fs, labels) = setup();
+        let mk = |workers: usize| {
+            let loader = NeighborLoader::new(
+                Arc::clone(&gs),
+                Arc::clone(&fs),
+                (0..64).collect(),
+                LoaderConfig {
+                    batch_size: 16,
+                    num_workers: workers,
+                    shuffle: true,
+                    sampler: NeighborSamplerConfig { fanouts: vec![4, 2], ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .with_labels(labels.clone());
+            loader
+                .iter_epoch(3)
+                .map(|b| b.unwrap().sub.nodes)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(mk(1), mk(4), "loader output must not depend on worker count");
+    }
+
+    #[test]
+    fn shuffle_changes_across_epochs() {
+        let (gs, fs, _) = setup();
+        let loader = NeighborLoader::new(
+            gs,
+            fs,
+            (0..64).collect(),
+            LoaderConfig { batch_size: 64, ..Default::default() },
+        );
+        let e0: Vec<u32> = loader.iter_epoch(0).next().unwrap().unwrap().sub.nodes.clone();
+        let e1: Vec<u32> = loader.iter_epoch(1).next().unwrap().unwrap().sub.nodes.clone();
+        assert_ne!(e0[..10], e1[..10]);
+    }
+
+    #[test]
+    fn early_drop_shuts_down_cleanly() {
+        let (gs, fs, _) = setup();
+        let loader = NeighborLoader::new(
+            gs,
+            fs,
+            (0..200).collect(),
+            LoaderConfig { batch_size: 8, num_workers: 2, prefetch: 2, ..Default::default() },
+        );
+        let mut it = loader.iter_epoch(0);
+        let _first = it.next().unwrap().unwrap();
+        drop(it); // must not deadlock on the full queue
+    }
+
+    #[test]
+    fn transform_applies() {
+        let (gs, fs, _) = setup();
+        let loader = NeighborLoader::new(
+            gs,
+            fs,
+            (0..16).collect(),
+            LoaderConfig { batch_size: 16, ..Default::default() },
+        )
+        .with_transform(Arc::new(|b: &mut Batch| {
+            b.x.data_mut()[0] = 42.0;
+        }));
+        let b = loader.iter_epoch(0).next().unwrap().unwrap();
+        assert_eq!(b.x.data()[0], 42.0);
+    }
+}

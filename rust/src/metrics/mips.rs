@@ -1,0 +1,223 @@
+//! Maximum Inner Product Search — the FAISS substitute (§3.1 recommender
+//! support). Exact brute force plus an IVF-style coarse-quantized
+//! approximate index built from scratch.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Common MIPS interface.
+pub trait Mips {
+    /// Top-k item indices by inner product with `query`, descending.
+    fn search(&self, query: &[f32], k: usize) -> Vec<(u32, f32)>;
+}
+
+/// Exact brute-force MIPS.
+pub struct ExactMips {
+    items: Tensor,
+}
+
+impl ExactMips {
+    pub fn new(items: Tensor) -> Self {
+        Self { items }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.rows() == 0
+    }
+}
+
+impl Mips for ExactMips {
+    fn search(&self, query: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut scored: Vec<(u32, f32)> = (0..self.items.rows())
+            .map(|i| {
+                let s = self
+                    .items
+                    .row(i)
+                    .iter()
+                    .zip(query)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>();
+                (i as u32, s)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        scored.truncate(k);
+        scored
+    }
+}
+
+/// IVF-style MIPS: k-means coarse quantizer; queries probe the `nprobe`
+/// nearest centroids and scan only their lists.
+pub struct IvfMips {
+    items: Tensor,
+    centroids: Tensor,
+    lists: Vec<Vec<u32>>,
+    pub nprobe: usize,
+}
+
+impl IvfMips {
+    /// Build with `nlist` centroids via a few rounds of Lloyd's k-means.
+    pub fn build(items: Tensor, nlist: usize, nprobe: usize, seed: u64) -> Self {
+        let n = items.rows();
+        let d = items.cols();
+        let nlist = nlist.max(1).min(n.max(1));
+        let mut rng = Rng::new(seed);
+
+        // Init centroids from random items.
+        let mut centroids = Tensor::zeros(vec![nlist, d]);
+        let picks = rng.sample_distinct(n.max(1), nlist);
+        for (c, &i) in picks.iter().enumerate() {
+            centroids.row_mut(c).copy_from_slice(items.row(i.min(n.saturating_sub(1))));
+        }
+
+        let mut assign = vec![0usize; n];
+        for _round in 0..8 {
+            // Assign (L2).
+            for i in 0..n {
+                let mut best = 0;
+                let mut best_d = f32::INFINITY;
+                for c in 0..nlist {
+                    let dist: f32 = items
+                        .row(i)
+                        .iter()
+                        .zip(centroids.row(c))
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                assign[i] = best;
+            }
+            // Update.
+            let mut sums = Tensor::zeros(vec![nlist, d]);
+            let mut counts = vec![0usize; nlist];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                for (s, &v) in sums.row_mut(c).iter_mut().zip(items.row(i)) {
+                    *s += v;
+                }
+            }
+            for c in 0..nlist {
+                if counts[c] > 0 {
+                    for s in sums.row_mut(c) {
+                        *s /= counts[c] as f32;
+                    }
+                    centroids.row_mut(c).copy_from_slice(sums.row(c));
+                }
+            }
+        }
+
+        let mut lists = vec![Vec::new(); nlist];
+        for (i, &c) in assign.iter().enumerate() {
+            lists[c].push(i as u32);
+        }
+        Self { items, centroids, lists, nprobe: nprobe.max(1) }
+    }
+
+    /// Fraction of items scanned for a typical query (efficiency metric).
+    pub fn scan_fraction(&self) -> f64 {
+        let total: usize = self.lists.iter().map(|l| l.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut sizes: Vec<usize> = self.lists.iter().map(|l| l.len()).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let probed: usize = sizes.iter().take(self.nprobe).sum();
+        probed as f64 / total as f64
+    }
+}
+
+impl Mips for IvfMips {
+    fn search(&self, query: &[f32], k: usize) -> Vec<(u32, f32)> {
+        // Rank centroids by inner product with the query.
+        let mut cscores: Vec<(usize, f32)> = (0..self.centroids.rows())
+            .map(|c| {
+                let s = self
+                    .centroids
+                    .row(c)
+                    .iter()
+                    .zip(query)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>();
+                (c, s)
+            })
+            .collect();
+        cscores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+
+        let mut scored: Vec<(u32, f32)> = Vec::new();
+        for &(c, _) in cscores.iter().take(self.nprobe) {
+            for &i in &self.lists[c] {
+                let s = self
+                    .items
+                    .row(i as usize)
+                    .iter()
+                    .zip(query)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>();
+                scored.push((i, s));
+            }
+        }
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        scored.truncate(k);
+        scored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_items(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let data = (0..n * d).map(|_| rng.normal() as f32).collect();
+        Tensor::new(vec![n, d], data).unwrap()
+    }
+
+    #[test]
+    fn exact_finds_the_planted_item() {
+        let mut items = random_items(100, 8, 1);
+        let query = vec![1.0f32; 8];
+        items.row_mut(42).copy_from_slice(&[5.0; 8]); // huge inner product
+        let mips = ExactMips::new(items);
+        let top = mips.search(&query, 3);
+        assert_eq!(top[0].0, 42);
+        assert!(top[0].1 > top[1].1);
+    }
+
+    #[test]
+    fn ivf_recall_against_exact() {
+        let items = random_items(500, 16, 2);
+        let exact = ExactMips::new(items.clone());
+        let ivf = IvfMips::build(items, 16, 4, 3);
+        let mut rng = Rng::new(4);
+        let mut hits = 0;
+        let trials = 30;
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            let want = exact.search(&q, 1)[0].0;
+            let got: Vec<u32> = ivf.search(&q, 10).iter().map(|x| x.0).collect();
+            if got.contains(&want) {
+                hits += 1;
+            }
+        }
+        // nprobe=4 of 16 lists should recover the true top-1 most of the time.
+        assert!(hits as f64 / trials as f64 > 0.6, "recall@10 = {hits}/{trials}");
+        assert!(ivf.scan_fraction() < 0.8);
+    }
+
+    #[test]
+    fn ivf_probing_all_lists_is_exact() {
+        let items = random_items(200, 8, 5);
+        let exact = ExactMips::new(items.clone());
+        let ivf = IvfMips::build(items, 8, 8, 6);
+        let q = vec![0.5f32; 8];
+        assert_eq!(exact.search(&q, 5), ivf.search(&q, 5));
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation metrics and MIPS (§3.1): retrieval metrics (map@k, ndcg@k)
+//! per torchmetrics semantics, and a FAISS-substitute Maximum Inner
+//! Product Search (exact + IVF-style approximate).
+
+mod mips;
+mod retrieval;
+
+pub use mips::{ExactMips, IvfMips, Mips};
+pub use retrieval::{map_at_k, ndcg_at_k, precision_at_k, recall_at_k};

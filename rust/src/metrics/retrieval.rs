@@ -1,0 +1,110 @@
+//! Mini-batch-compatible retrieval metrics (map@k, ndcg@k, ...), following
+//! torchmetrics semantics: inputs are ranked candidate lists plus a
+//! relevance set per query.
+
+use std::collections::HashSet;
+
+/// Precision@k: fraction of the top-k that is relevant.
+pub fn precision_at_k(ranked: &[u32], relevant: &HashSet<u32>, k: usize) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let hits = ranked.iter().take(k).filter(|x| relevant.contains(x)).count();
+    hits as f64 / k as f64
+}
+
+/// Recall@k: fraction of the relevant set found in the top-k.
+pub fn recall_at_k(ranked: &[u32], relevant: &HashSet<u32>, k: usize) -> f64 {
+    if relevant.is_empty() {
+        return 0.0;
+    }
+    let hits = ranked.iter().take(k).filter(|x| relevant.contains(x)).count();
+    hits as f64 / relevant.len() as f64
+}
+
+/// Mean average precision at k for a single query (averaged over queries
+/// by the caller).
+pub fn map_at_k(ranked: &[u32], relevant: &HashSet<u32>, k: usize) -> f64 {
+    if relevant.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    let mut sum = 0.0;
+    for (i, x) in ranked.iter().take(k).enumerate() {
+        if relevant.contains(x) {
+            hits += 1;
+            sum += hits as f64 / (i + 1) as f64;
+        }
+    }
+    sum / relevant.len().min(k) as f64
+}
+
+/// Normalized discounted cumulative gain at k (binary relevance).
+pub fn ndcg_at_k(ranked: &[u32], relevant: &HashSet<u32>, k: usize) -> f64 {
+    let dcg: f64 = ranked
+        .iter()
+        .take(k)
+        .enumerate()
+        .filter(|(_, x)| relevant.contains(x))
+        .map(|(i, _)| 1.0 / ((i + 2) as f64).log2())
+        .sum();
+    let ideal: f64 = (0..relevant.len().min(k))
+        .map(|i| 1.0 / ((i + 2) as f64).log2())
+        .sum();
+    if ideal == 0.0 {
+        0.0
+    } else {
+        dcg / ideal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(xs: &[u32]) -> HashSet<u32> {
+        xs.iter().cloned().collect()
+    }
+
+    #[test]
+    fn perfect_ranking_is_one() {
+        let ranked = vec![1, 2, 3, 4];
+        let relevant = rel(&[1, 2]);
+        assert_eq!(map_at_k(&ranked, &relevant, 4), 1.0);
+        assert_eq!(ndcg_at_k(&ranked, &relevant, 4), 1.0);
+        assert_eq!(recall_at_k(&ranked, &relevant, 4), 1.0);
+        assert_eq!(precision_at_k(&ranked, &relevant, 2), 1.0);
+    }
+
+    #[test]
+    fn worst_ranking_is_zero() {
+        let ranked = vec![5, 6, 7];
+        let relevant = rel(&[1]);
+        assert_eq!(map_at_k(&ranked, &relevant, 3), 0.0);
+        assert_eq!(ndcg_at_k(&ranked, &relevant, 3), 0.0);
+    }
+
+    #[test]
+    fn map_penalizes_late_hits() {
+        let relevant = rel(&[9]);
+        let early = map_at_k(&[9, 1, 2], &relevant, 3);
+        let late = map_at_k(&[1, 2, 9], &relevant, 3);
+        assert!(early > late);
+        assert!((early - 1.0).abs() < 1e-12);
+        assert!((late - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ndcg_discounts_by_rank() {
+        let relevant = rel(&[1, 2]);
+        let best = ndcg_at_k(&[1, 2, 3], &relevant, 3);
+        let worse = ndcg_at_k(&[3, 1, 2], &relevant, 3);
+        assert!(best > worse);
+    }
+
+    #[test]
+    fn empty_relevance_is_zero() {
+        assert_eq!(map_at_k(&[1], &rel(&[]), 1), 0.0);
+        assert_eq!(recall_at_k(&[1], &rel(&[]), 1), 0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Host-side model parameter management: initialization matching the
+//! Python AOT conventions, ordered marshalling into runtime values, and
+//! the update cycle for both execution modes.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Manifest, Program, TensorSpec};
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Ordered parameter store for one program.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    specs: Vec<TensorSpec>,
+    values: Vec<Value>,
+}
+
+impl ParamStore {
+    /// Initialize parameters for `program` (Glorot weights, zero biases) —
+    /// the same scheme `model.init_params` uses in Python.
+    pub fn init_for(manifest: &Manifest, program: &str, seed: u64) -> Result<ParamStore> {
+        let specs = match manifest.program(program)? {
+            Program::Fused { params, .. } => params.clone(),
+            Program::Eager { params, .. } => params.clone(),
+        };
+        let mut rng = Rng::new(seed);
+        let values = specs
+            .iter()
+            .map(|s| {
+                let t = match s.shape.len() {
+                    1 => Tensor::zeros(s.shape.clone()),
+                    2 => Tensor::glorot(s.shape[0], s.shape[1], &mut rng),
+                    3 => {
+                        // Grouped weights [T, F, H]: glorot per slab.
+                        let (t_dim, f, h) = (s.shape[0], s.shape[1], s.shape[2]);
+                        let mut data = Vec::with_capacity(t_dim * f * h);
+                        for _ in 0..t_dim {
+                            data.extend(Tensor::glorot(f, h, &mut rng).into_data());
+                        }
+                        Tensor::new(s.shape.clone(), data).expect("shape ok")
+                    }
+                    _ => Tensor::zeros(s.shape.clone()),
+                };
+                Value::F32 { shape: s.shape.clone(), data: t.into_data() }
+            })
+            .collect();
+        Ok(ParamStore { specs, values })
+    }
+
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    /// Values in manifest order (the fused-artifact calling convention).
+    pub fn values(&self) -> Vec<Value> {
+        self.values.clone()
+    }
+
+    /// Borrowed values in manifest order (hot-path variant — the fused
+    /// trainer calls this every step; cloning ~all parameters per step
+    /// showed up in the §Perf profile).
+    pub fn values_ref(&self) -> &[Value] {
+        &self.values
+    }
+
+    /// Name-keyed map (the eager executor's convention).
+    pub fn as_map(&self) -> HashMap<String, Value> {
+        self.specs
+            .iter()
+            .zip(&self.values)
+            .map(|(s, v)| (s.name.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Number of scalar parameters.
+    pub fn num_parameters(&self) -> usize {
+        self.specs.iter().map(|s| s.shape.iter().product::<usize>()).sum()
+    }
+
+    /// Replace all values from a fused train-step output (which returns
+    /// `[loss, logits, *new_params]`).
+    pub fn update_from_fused_output(&mut self, outputs: &[Value]) -> Result<()> {
+        if outputs.len() != self.values.len() + 2 {
+            return Err(Error::Runtime(format!(
+                "expected {} outputs, got {}",
+                self.values.len() + 2,
+                outputs.len()
+            )));
+        }
+        for (i, v) in outputs[2..].iter().enumerate() {
+            self.values[i] = v.clone();
+        }
+        Ok(())
+    }
+
+    /// Replace all values from a name-keyed map (after eager updates).
+    pub fn update_from_map(&mut self, map: &HashMap<String, Value>) -> Result<()> {
+        for (i, s) in self.specs.iter().enumerate() {
+            let v = map
+                .get(&s.name)
+                .ok_or_else(|| Error::Runtime(format!("missing param {}", s.name)))?;
+            self.values[i] = v.clone();
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| &self.values[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_manifest_shapes() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        for prog in ["gcn_train", "gat_train", "edgecnn_eager", "rdl_train"] {
+            let store = ParamStore::init_for(&m, prog, 1).unwrap();
+            assert!(store.num_parameters() > 0, "{prog}");
+            for (s, v) in store.specs().iter().zip(store.values()) {
+                let Value::F32 { shape, data } = v else { panic!("params are f32") };
+                assert_eq!(&shape, &s.shape);
+                assert_eq!(data.len(), s.shape.iter().product::<usize>());
+            }
+        }
+    }
+
+    #[test]
+    fn update_cycle_roundtrip() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let mut store = ParamStore::init_for(&m, "gcn_train", 2).unwrap();
+        let map = store.as_map();
+        store.update_from_map(&map).unwrap();
+        assert_eq!(store.values().len(), map.len());
+    }
+}

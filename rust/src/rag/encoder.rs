@@ -1,0 +1,94 @@
+//! Feature-hashing text encoder — the LLM-embedding substitute.
+//!
+//! Tokenizes on non-alphanumerics and hashes each token into a dense
+//! vector with a sign trick (classic hashing-trick embedding). Two texts
+//! sharing tokens get correlated embeddings; that is all the retrieval
+//! pipeline needs.
+
+/// Hash-embedding encoder.
+#[derive(Clone, Debug)]
+pub struct HashEmbedder {
+    dim: usize,
+}
+
+impl HashEmbedder {
+    pub fn new(dim: usize) -> Self {
+        Self { dim }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Embed text: sum of hashed token vectors, L2-normalized. Stopwords
+    /// are dropped — with a small hash dimension their mass would drown
+    /// the discriminative tokens (an LLM embedder does this implicitly).
+    pub fn embed(&self, text: &str) -> Vec<f32> {
+        const STOPWORDS: &[&str] = &[
+            "a", "an", "and", "are", "be", "by", "for", "from", "in", "is", "it", "of",
+            "on", "or", "that", "the", "to", "was", "what", "when", "where", "which",
+            "who", "with",
+        ];
+        let mut out = vec![0.0f32; self.dim];
+        for token in text
+            .split(|c: char| !c.is_ascii_alphanumeric() && c != '_')
+            .filter(|t| !t.is_empty() && !STOPWORDS.contains(t))
+        {
+            // Non-negative hashing (no sign trick): the zero-shot GNN
+            // scorer applies relu to both sides, and signed embeddings
+            // would lose half the matched mass through it. With
+            // non-negative unit-norm embeddings, relu is the identity and
+            // the scorer's inner product *is* the cosine similarity.
+            let h = fnv1a(token.as_bytes());
+            let idx = (h % self.dim as u64) as usize;
+            out[idx] += 1.0;
+        }
+        let norm = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for x in &mut out {
+                *x /= norm;
+            }
+        }
+        out
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::cosine_similarity;
+
+    #[test]
+    fn shared_tokens_correlate() {
+        let e = HashEmbedder::new(64);
+        let a = e.embed("the red fox jumps");
+        let b = e.embed("the red fox sleeps");
+        let c = e.embed("quantum flux capacitor");
+        assert!(cosine_similarity(&a, &b) > cosine_similarity(&a, &c));
+    }
+
+    #[test]
+    fn deterministic_and_normalized() {
+        let e = HashEmbedder::new(32);
+        let a = e.embed("hello world");
+        let b = e.embed("hello world");
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_text_is_zero() {
+        let e = HashEmbedder::new(16);
+        assert_eq!(e.embed("!!!"), vec![0.0; 16]);
+    }
+}

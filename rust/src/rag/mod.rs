@@ -1,0 +1,303 @@
+//! GraphRAG pipeline (§3.2, Figure 4): natural-language query → retrieve a
+//! contextual subgraph from the knowledge graph → encode with the GNN
+//! scorer artifact → rank answer candidates.
+//!
+//! The paper's G-Retriever couples a trained GNN with an LLM; without one
+//! (no network), we substitute a hash-embedding text encoder and
+//! path-context features computed during retrieval (see DESIGN.md
+//! §Substitutions). The *mechanism* under test is preserved: the baseline
+//! ranks entities by text similarity alone and mostly fails on 2-hop
+//! questions, while structure-aware retrieval + subgraph scoring through
+//! the `rag_scorer` HLO answers them — reproducing the shape of the
+//! paper's 16% → 32% accuracy claim (experiment C7).
+
+mod encoder;
+mod txt2kg;
+
+pub use encoder::HashEmbedder;
+pub use txt2kg::Txt2Kg;
+
+use crate::datasets::kgqa::KgqaDataset;
+use crate::error::Result;
+use crate::nn::ParamStore;
+use crate::runtime::{Engine, Value};
+use std::collections::HashMap;
+
+/// A retrieved contextual subgraph with path-context embeddings.
+#[derive(Clone, Debug)]
+pub struct RetrievedSubgraph {
+    /// Entity ids, anchor first.
+    pub nodes: Vec<u32>,
+    /// Local edges (row -> col = toward anchor).
+    pub row: Vec<u32>,
+    pub col: Vec<u32>,
+    /// Per-node path-context text (entity name + relation names on the
+    /// path from the anchor).
+    pub contexts: Vec<String>,
+}
+
+/// The GraphRAG retriever over a KGQA dataset.
+pub struct GraphRag<'e> {
+    engine: &'e Engine,
+    params: ParamStore,
+    embedder: HashEmbedder,
+    ds: &'e KgqaDataset,
+    /// adjacency: head -> [(rel, tail)]
+    adj: HashMap<u32, Vec<(u32, u32)>>,
+    n_pad: usize,
+    e_pad: usize,
+}
+
+impl<'e> GraphRag<'e> {
+    pub fn new(engine: &'e Engine, ds: &'e KgqaDataset) -> Result<Self> {
+        // The scorer is used zero-shot (no trained LLM available): weights
+        // are *structured*, not random — identity feature paths with a
+        // small neighbor-mixing term — so the GNN computes a smoothed
+        // relevance of each node's path-context to the query. Random init
+        // would scramble the two sides through different projections and
+        // reduce scoring to chance (see DESIGN.md §Substitutions).
+        let mut params = ParamStore::init_for(engine.manifest(), "rag_scorer", 11)?;
+        let identity = |scale: f32, n: usize| {
+            let mut data = vec![0.0f32; n * n];
+            for i in 0..n {
+                data[i * n + i] = scale;
+            }
+            data
+        };
+        let specs: Vec<(String, Vec<usize>)> = params
+            .specs()
+            .iter()
+            .map(|s| (s.name.clone(), s.shape.clone()))
+            .collect();
+        let mut map = params.as_map();
+        for (name, shape) in &specs {
+            let scale = match name.as_str() {
+                "w0" | "wq" | "ws1" | "ws2" => 1.0,
+                // Neighbor mixing stays OFF for zero-shot scoring: edges point
+                // toward the anchor, so mixing would leak the answer's
+                // path-context into intermediate nodes and invert the
+                // ranking. (A trained G-Retriever learns to exploit the
+                // structure; zero-shot we only use it for retrieval.)
+                "wn1" | "wn2" => 0.0,
+                _ => 0.0,             // biases
+            };
+            let v = if shape.len() == 2 && shape[0] == shape[1] {
+                Value::F32 { shape: shape.clone(), data: identity(scale, shape[0]) }
+            } else {
+                Value::F32 { shape: shape.clone(), data: vec![0.0; shape.iter().product()] }
+            };
+            map.insert(name.clone(), v);
+        }
+        params.update_from_map(&map)?;
+        let mut adj: HashMap<u32, Vec<(u32, u32)>> = HashMap::new();
+        for t in &ds.triples {
+            adj.entry(t.head).or_default().push((t.rel, t.tail));
+        }
+        // Shapes baked into the rag_scorer artifact (manifest config).
+        Ok(Self {
+            engine,
+            params,
+            embedder: HashEmbedder::new(32),
+            ds,
+            adj,
+            n_pad: 64,
+            e_pad: 256,
+        })
+    }
+
+    /// Find the anchor entity mentioned in the question text.
+    pub fn match_anchor(&self, question: &str) -> Option<u32> {
+        // Longest entity name appearing verbatim wins.
+        let mut best: Option<(usize, u32)> = None;
+        for (i, name) in self.ds.entity_names.iter().enumerate() {
+            if question.contains(name.as_str()) {
+                // Guard against prefix collisions (entity_1 in entity_17):
+                // require a non-alphanumeric boundary after the match.
+                let pos = question.find(name.as_str()).unwrap();
+                let after = question[pos + name.len()..].chars().next();
+                if after.map(|c| c.is_ascii_alphanumeric()).unwrap_or(false) {
+                    continue;
+                }
+                if best.map(|(l, _)| name.len() > l).unwrap_or(true) {
+                    best = Some((name.len(), i as u32));
+                }
+            }
+        }
+        best.map(|(_, e)| e)
+    }
+
+    /// Retrieve the 2-hop contextual subgraph around the anchor, carrying
+    /// path-context strings.
+    pub fn retrieve(&self, anchor: u32) -> RetrievedSubgraph {
+        let mut nodes = vec![anchor];
+        let mut contexts = vec![self.ds.entity_names[anchor as usize].clone()];
+        let mut row = Vec::new();
+        let mut col = Vec::new();
+        let mut local: HashMap<u32, u32> = HashMap::new();
+        local.insert(anchor, 0);
+
+        let mut frontier = vec![(anchor, String::new())];
+        for _hop in 0..2 {
+            let mut next = Vec::new();
+            for (h, path) in frontier {
+                let h_local = local[&h];
+                let Some(outs) = self.adj.get(&h) else { continue };
+                for &(rel, tail) in outs {
+                    if nodes.len() >= self.n_pad || row.len() >= self.e_pad {
+                        break;
+                    }
+                    let rel_name = &self.ds.relation_names[rel as usize];
+                    let new_path = format!("{path} {rel_name}");
+                    let t_local = *local.entry(tail).or_insert_with(|| {
+                        nodes.push(tail);
+                        contexts.push(format!(
+                            "{}{new_path}",
+                            self.ds.entity_names[tail as usize]
+                        ));
+                        next.push((tail, new_path.clone()));
+                        nodes.len() as u32 - 1
+                    });
+                    // Edge toward the anchor (message flow tail -> head).
+                    row.push(t_local);
+                    col.push(h_local);
+                }
+            }
+            frontier = next;
+        }
+        RetrievedSubgraph { nodes, row, col, contexts }
+    }
+
+    /// Score the retrieved subgraph against the question through the
+    /// `rag_scorer` HLO and return the best entity.
+    pub fn answer(&self, question: &str) -> Result<Option<u32>> {
+        let Some(anchor) = self.match_anchor(question) else {
+            return Ok(None);
+        };
+        let sub = self.retrieve(anchor);
+
+        // Node features: hashed path-context embeddings.
+        let f_dim = 32;
+        let mut x = vec![0.0f32; self.n_pad * f_dim];
+        for (i, ctx) in sub.contexts.iter().enumerate() {
+            let emb = self.embedder.embed(ctx);
+            x[i * f_dim..(i + 1) * f_dim].copy_from_slice(&emb);
+        }
+        let mut row = vec![0i32; self.e_pad];
+        let mut col = vec![0i32; self.e_pad];
+        let mut ew = vec![0.0f32; self.e_pad];
+        for k in 0..sub.row.len() {
+            row[k] = sub.row[k] as i32;
+            col[k] = sub.col[k] as i32;
+            ew[k] = 1.0;
+        }
+        let q = self.embedder.embed(question);
+
+        let inputs = vec![
+            Value::F32 { shape: vec![self.n_pad, f_dim], data: x },
+            Value::I32 { shape: vec![self.e_pad], data: row },
+            Value::I32 { shape: vec![self.e_pad], data: col },
+            Value::F32 { shape: vec![self.e_pad], data: ew },
+            Value::F32 { shape: vec![f_dim], data: q },
+        ];
+        let out = self.engine.run_fused("rag_scorer", &self.params.values(), &inputs)?;
+        let (_, scores) = out[0].as_f32()?;
+
+        // Best *non-anchor* node among the retrieved ones.
+        let mut best = None;
+        let mut best_s = f32::NEG_INFINITY;
+        for i in 1..sub.nodes.len() {
+            if scores[i] > best_s {
+                best_s = scores[i];
+                best = Some(sub.nodes[i]);
+            }
+        }
+        Ok(best)
+    }
+
+    /// The "LLM-only / agentic RAG" baseline: rank all entities by text
+    /// similarity between the question and the entity's *local* context
+    /// (name + own relation names) — no multi-hop structure.
+    pub fn baseline_answer(&self, question: &str) -> Option<u32> {
+        let q = self.embedder.embed(question);
+        let mut best = None;
+        let mut best_s = f32::NEG_INFINITY;
+        // Exclude the anchor itself (the baseline also knows the question
+        // mentions it and the answer differs from it).
+        let anchor = self.match_anchor(question);
+        for (i, name) in self.ds.entity_names.iter().enumerate() {
+            if Some(i as u32) == anchor {
+                continue;
+            }
+            let mut ctx = name.clone();
+            if let Some(outs) = self.adj.get(&(i as u32)) {
+                for &(rel, _) in outs {
+                    ctx.push(' ');
+                    ctx.push_str(&self.ds.relation_names[rel as usize]);
+                }
+            }
+            let e = self.embedder.embed(&ctx);
+            let s = crate::tensor::cosine_similarity(&q, &e);
+            if s > best_s {
+                best_s = s;
+                best = Some(i as u32);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::kgqa::{self, KgqaConfig};
+
+    #[test]
+    fn graphrag_beats_text_baseline() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::load("artifacts").unwrap();
+        let ds = kgqa::generate(&KgqaConfig {
+            num_entities: 200,
+            num_questions: 40,
+            seed: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let rag = GraphRag::new(&engine, &ds).unwrap();
+
+        let mut rag_hits = 0;
+        let mut base_hits = 0;
+        for q in &ds.questions {
+            if rag.answer(&q.text).unwrap() == Some(q.answer) {
+                rag_hits += 1;
+            }
+            if rag.baseline_answer(&q.text) == Some(q.answer) {
+                base_hits += 1;
+            }
+        }
+        let n = ds.questions.len() as f64;
+        let (rag_acc, base_acc) = (rag_hits as f64 / n, base_hits as f64 / n);
+        // The paper's claim shape: structure-aware retrieval at least
+        // doubles accuracy over text-only ranking.
+        assert!(
+            rag_acc >= 2.0 * base_acc.max(0.025) && rag_acc > 0.25,
+            "rag {rag_acc:.2} vs baseline {base_acc:.2}"
+        );
+    }
+
+    #[test]
+    fn anchor_matching_resists_prefix_collision() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let engine = Engine::load("artifacts").unwrap();
+        let ds = kgqa::generate(&KgqaConfig { num_entities: 30, seed: 1, ..Default::default() })
+            .unwrap();
+        let rag = GraphRag::new(&engine, &ds).unwrap();
+        assert_eq!(rag.match_anchor("what about entity_17 ?"), Some(17));
+        assert_eq!(rag.match_anchor("what about entity_1 ?"), Some(1));
+        assert_eq!(rag.match_anchor("no entity here"), None);
+    }
+}

@@ -1,0 +1,125 @@
+//! TXT2KG (§3.2): convert unstructured text into knowledge-graph triples.
+//!
+//! The paper's class drives an LLM with prompt engineering; the
+//! substitution is a pattern-based extractor over simple declarative
+//! sentences ("X <rel> Y.", "the <rel> of X is Y"), which is enough to
+//! round-trip the synthetic corpora used in the examples.
+
+use std::collections::BTreeMap;
+
+/// A string-level triple before entity resolution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RawTriple {
+    pub head: String,
+    pub rel: String,
+    pub tail: String,
+}
+
+/// Extracted knowledge graph with interned entities/relations.
+#[derive(Clone, Debug, Default)]
+pub struct Txt2Kg {
+    pub entities: Vec<String>,
+    pub relations: Vec<String>,
+    pub triples: Vec<(u32, u32, u32)>,
+    entity_ids: BTreeMap<String, u32>,
+    relation_ids: BTreeMap<String, u32>,
+}
+
+impl Txt2Kg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn intern_entity(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.entity_ids.get(name) {
+            return id;
+        }
+        let id = self.entities.len() as u32;
+        self.entities.push(name.to_string());
+        self.entity_ids.insert(name.to_string(), id);
+        id
+    }
+
+    fn intern_relation(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.relation_ids.get(name) {
+            return id;
+        }
+        let id = self.relations.len() as u32;
+        self.relations.push(name.to_string());
+        self.relation_ids.insert(name.to_string(), id);
+        id
+    }
+
+    /// Parse a document: one sentence per `.`; supported patterns:
+    /// * `the <rel> of <head> is <tail>`
+    /// * `<head> <rel> <tail>` (3 tokens)
+    pub fn ingest(&mut self, text: &str) {
+        for sentence in text.split('.') {
+            let tokens: Vec<&str> = sentence.split_whitespace().collect();
+            if let Some(t) = parse_sentence(&tokens) {
+                let h = self.intern_entity(&t.head);
+                let r = self.intern_relation(&t.rel);
+                let tl = self.intern_entity(&t.tail);
+                if !self.triples.contains(&(h, r, tl)) {
+                    self.triples.push((h, r, tl));
+                }
+            }
+        }
+    }
+
+    pub fn num_triples(&self) -> usize {
+        self.triples.len()
+    }
+
+    /// Look up the tail of (head, rel) if present.
+    pub fn query(&self, head: &str, rel: &str) -> Option<&str> {
+        let h = *self.entity_ids.get(head)?;
+        let r = *self.relation_ids.get(rel)?;
+        self.triples
+            .iter()
+            .find(|(th, tr, _)| *th == h && *tr == r)
+            .map(|&(_, _, t)| self.entities[t as usize].as_str())
+    }
+}
+
+fn parse_sentence(tokens: &[&str]) -> Option<RawTriple> {
+    match tokens {
+        // the <rel> of <head> is <tail>
+        ["the", rel, "of", head, "is", tail] => Some(RawTriple {
+            head: head.to_string(),
+            rel: rel.to_string(),
+            tail: tail.to_string(),
+        }),
+        // <head> <rel> <tail>
+        [head, rel, tail] => Some(RawTriple {
+            head: head.to_string(),
+            rel: rel.to_string(),
+            tail: tail.to_string(),
+        }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_both_patterns() {
+        let mut kg = Txt2Kg::new();
+        kg.ingest("alice manages bob. the capital of france is paris. nonsense sentence here ignored entirely by the parser.");
+        assert_eq!(kg.num_triples(), 2);
+        assert_eq!(kg.query("alice", "manages"), Some("bob"));
+        assert_eq!(kg.query("france", "capital"), Some("paris"));
+        assert_eq!(kg.query("bob", "manages"), None);
+    }
+
+    #[test]
+    fn dedups_triples_and_interns_entities() {
+        let mut kg = Txt2Kg::new();
+        kg.ingest("a knows b. a knows b. b knows a.");
+        assert_eq!(kg.num_triples(), 2);
+        assert_eq!(kg.entities.len(), 2);
+        assert_eq!(kg.relations.len(), 1);
+    }
+}

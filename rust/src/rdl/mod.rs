@@ -1,0 +1,236 @@
+//! Relational Deep Learning (§3.1): relational database → heterogeneous
+//! temporal graph → training-table-driven loading → hetero GNN batches
+//! for the `rdl_train` artifact (grouped-matmul encoder).
+
+use crate::datasets::relational::{Column, Database};
+use crate::error::{Error, Result};
+use crate::graph::{EdgeIndex, EdgeType, HeteroGraph};
+use crate::loader::{SeedTable, SeedTableBatch};
+use crate::runtime::Value;
+use crate::storage::TableEncoder;
+use std::collections::BTreeMap;
+
+/// Build a heterogeneous temporal graph from a relational database:
+/// every table becomes a node type, every FK column an edge type
+/// (row -> referenced row), timestamp columns become edge/node times.
+/// Features are TensorFrame-encoded and padded to `f_dim`.
+pub fn database_to_graph(db: &Database, f_dim: usize) -> Result<HeteroGraph> {
+    let mut g = HeteroGraph::new();
+    // Node types + encoded features.
+    for table in &db.tables {
+        let enc = TableEncoder::fit(table);
+        if enc.out_dim() > f_dim {
+            return Err(Error::Graph(format!(
+                "table {} encodes to {} dims > budget {f_dim}",
+                table.name,
+                enc.out_dim()
+            )));
+        }
+        let x = enc.encode(table, Some(f_dim))?;
+        g.add_node_type(&table.name, x)?;
+        // Row-level timestamps become node times.
+        if let Some(Column::Time(t)) = table.column("time") {
+            g.set_node_time(&table.name, t.clone())?;
+        }
+    }
+    // FK columns become edge types (plus the reverse direction, as PyG's
+    // `ToUndirected` adds for RDL — without it, 2-hop expansion from the
+    // seed entity dead-ends at its fact rows). Both directions carry the
+    // fact row's timestamp.
+    for table in &db.tables {
+        let times = match table.column("time") {
+            Some(Column::Time(t)) => Some(t.clone()),
+            _ => None,
+        };
+        for (col_name, col) in &table.columns {
+            if let Column::Fk { table: target, rows } = col {
+                let src: Vec<u32> = (0..rows.len() as u32).collect();
+                let n = rows.len().max(g.num_nodes(target)?);
+                let ei = EdgeIndex::new(src.clone(), rows.clone(), n)?;
+                let et = EdgeType::new(&table.name, &format!("fk_{col_name}"), target);
+                g.add_edge_type(et.clone(), ei)?;
+                let rev = EdgeIndex::new(rows.clone(), src, n)?;
+                let ret = EdgeType::new(target, &format!("rev_fk_{col_name}"), &table.name);
+                g.add_edge_type(ret.clone(), rev)?;
+                if let Some(t) = &times {
+                    g.set_edge_time(&et, t.clone())?;
+                    g.set_edge_time(&ret, t.clone())?;
+                }
+            }
+        }
+    }
+    Ok(g)
+}
+
+/// Build the churn-style training table: one row per user, seed time =
+/// horizon, label = future activity.
+pub fn build_training_table(db: &Database) -> Result<SeedTable> {
+    let labels = crate::datasets::relational::future_activity_labels(db);
+    let n = labels.len();
+    SeedTable::new(
+        "users",
+        (0..n as u32).collect(),
+        vec![db.horizon; n],
+        labels,
+    )
+}
+
+/// Static shapes of the `rdl_train` artifact (mirrors aot.py `RDL`).
+#[derive(Clone, Copy, Debug)]
+pub struct RdlShapes {
+    pub num_types: usize,
+    pub nt_pad: usize,
+    pub f_in: usize,
+    pub s_pad: usize,
+    pub e_pad: usize,
+}
+
+impl Default for RdlShapes {
+    fn default() -> Self {
+        Self { num_types: 4, nt_pad: 256, f_in: 16, s_pad: 64, e_pad: 4096 }
+    }
+}
+
+/// Pack a hetero seed-table batch into `rdl_train` inputs:
+/// `(x_typed [T, NT, F], row, col, ew, labels, seed_mask)`.
+///
+/// Flat node space is type-major (`flat = t * NT + i`) with the **seed
+/// type first**, so the model's `h[:s_pad]` slice hits the seed rows.
+pub fn pack_rdl_batch(
+    graph: &HeteroGraph,
+    batch: &SeedTableBatch,
+    shapes: &RdlShapes,
+) -> Result<Vec<Value>> {
+    let seed_type = &batch.sub.seed_type;
+    // Type order: seed type first, the rest sorted.
+    let mut type_order: Vec<String> = vec![seed_type.clone()];
+    for nt in graph.node_types() {
+        if nt != seed_type {
+            type_order.push(nt.to_string());
+        }
+    }
+    if type_order.len() != shapes.num_types {
+        return Err(Error::Shape(format!(
+            "graph has {} node types; artifact expects {}",
+            type_order.len(),
+            shapes.num_types
+        )));
+    }
+    let type_idx: BTreeMap<&str, usize> = type_order
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.as_str(), i))
+        .collect();
+
+    // Features, type-bucketed.
+    let mut x = vec![0.0f32; shapes.num_types * shapes.nt_pad * shapes.f_in];
+    for (nt, nodes) in &batch.sub.nodes {
+        let t = type_idx[nt.as_str()];
+        if nodes.len() > shapes.nt_pad {
+            return Err(Error::Shape(format!(
+                "{nt}: {} nodes exceed NT_pad {}",
+                nodes.len(),
+                shapes.nt_pad
+            )));
+        }
+        let store = graph.node_store(nt)?;
+        if store.x.cols() != shapes.f_in {
+            return Err(Error::Shape(format!(
+                "{nt}: feature dim {} != {}",
+                store.x.cols(),
+                shapes.f_in
+            )));
+        }
+        for (i, &global) in nodes.iter().enumerate() {
+            let off = (t * shapes.nt_pad + i) * shapes.f_in;
+            x[off..off + shapes.f_in].copy_from_slice(store.x.row(global as usize));
+        }
+    }
+
+    // Edges flattened over the typed space, all edge types merged.
+    let mut row = vec![0i32; shapes.e_pad];
+    let mut col = vec![0i32; shapes.e_pad];
+    let mut ew = vec![0.0f32; shapes.e_pad];
+    let mut in_deg: BTreeMap<i32, u32> = BTreeMap::new();
+    let mut k = 0usize;
+    for (et, edges) in &batch.sub.edges {
+        let ts = type_idx[et.src.as_str()] as i32;
+        let td = type_idx[et.dst.as_str()] as i32;
+        for (&r, &c) in edges.row.iter().zip(&edges.col) {
+            if k >= shapes.e_pad {
+                return Err(Error::Shape(format!("batch exceeds e_pad {}", shapes.e_pad)));
+            }
+            row[k] = ts * shapes.nt_pad as i32 + r as i32;
+            col[k] = td * shapes.nt_pad as i32 + c as i32;
+            *in_deg.entry(col[k]).or_insert(0) += 1;
+            k += 1;
+        }
+    }
+    let real_edges = k;
+    for k in 0..real_edges {
+        ew[k] = 1.0 / in_deg[&col[k]].max(1) as f32;
+    }
+
+    // Seed labels.
+    if batch.seeds.len() > shapes.s_pad {
+        return Err(Error::Shape(format!(
+            "{} seeds exceed s_pad {}",
+            batch.seeds.len(),
+            shapes.s_pad
+        )));
+    }
+    let mut labels = vec![-1i32; shapes.s_pad];
+    let mut seed_mask = vec![0.0f32; shapes.s_pad];
+    for (i, &l) in batch.labels.iter().enumerate() {
+        labels[i] = l as i32;
+        seed_mask[i] = 1.0;
+    }
+
+    Ok(vec![
+        Value::F32 {
+            shape: vec![shapes.num_types, shapes.nt_pad, shapes.f_in],
+            data: x,
+        },
+        Value::I32 { shape: vec![shapes.e_pad], data: row },
+        Value::I32 { shape: vec![shapes.e_pad], data: col },
+        Value::F32 { shape: vec![shapes.e_pad], data: ew },
+        Value::I32 { shape: vec![shapes.s_pad], data: labels },
+        Value::F32 { shape: vec![shapes.s_pad], data: seed_mask },
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::relational::{self, RelationalConfig};
+
+    #[test]
+    fn database_roundtrips_to_hetero_graph() {
+        let db = relational::generate(&RelationalConfig::default()).unwrap();
+        let g = database_to_graph(&db, 16).unwrap();
+        assert_eq!(g.num_node_types(), 4);
+        // transactions + reviews each have 2 FKs -> 4 forward + 4 reverse.
+        assert_eq!(g.num_edge_types(), 8);
+        assert_eq!(g.num_nodes("users").unwrap(), 500);
+        // transactions edges are timestamped.
+        let et = EdgeType::new("transactions", "fk_user", "users");
+        assert!(g.edge_store(&et).unwrap().time.is_some());
+        let ret = EdgeType::new("users", "rev_fk_user", "transactions");
+        assert!(g.edge_store(&ret).unwrap().time.is_some());
+    }
+
+    #[test]
+    fn training_table_aligns_with_users() {
+        let db = relational::generate(&RelationalConfig::default()).unwrap();
+        let t = build_training_table(&db).unwrap();
+        assert_eq!(t.len(), 500);
+        assert!(t.times.iter().all(|&x| x == db.horizon));
+        assert_eq!(t.node_type, "users");
+    }
+
+    #[test]
+    fn feature_budget_enforced() {
+        let db = relational::generate(&RelationalConfig::default()).unwrap();
+        assert!(database_to_graph(&db, 2).is_err());
+    }
+}

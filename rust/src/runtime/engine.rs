@@ -1,0 +1,273 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them from the request path. Python is never involved.
+
+use super::manifest::{Manifest, Program, TensorSpec};
+use crate::error::{Error, Result};
+use crate::loader::Batch;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// A host-side value crossing the HLO boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn from_tensor(t: &Tensor) -> Value {
+        Value::F32 { shape: t.shape().to_vec(), data: t.data().to_vec() }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Value::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            _ => Err(Error::Runtime("expected f32 scalar".into())),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            Value::F32 { shape, data } => Ok((shape, data)),
+            _ => Err(Error::Runtime("expected f32 value".into())),
+        }
+    }
+
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        let (shape, data) = self.as_f32()?;
+        Tensor::new(shape.to_vec(), data.to_vec())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if shape.len() == 1 {
+                    l
+                } else {
+                    l.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+                }
+            }
+            Value::I32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if shape.len() == 1 {
+                    l
+                } else {
+                    l.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => Ok(Value::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::PrimitiveType::S32 => Ok(Value::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => Err(Error::Runtime(format!("unsupported output type {other:?}"))),
+        }
+    }
+}
+
+/// The engine: one PJRT client + a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable stored in `file`.
+    pub fn executable(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(file) {
+                return Ok(std::sync::Arc::clone(e));
+            }
+        }
+        let path = self.manifest.hlo_path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cache_size(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute an artifact file on `args`, returning the tuple elements.
+    pub fn run_file(&self, file: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let exe = self.executable(file)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // All artifacts are lowered with return_tuple=True.
+        let parts = lit.to_tuple()?;
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    /// Literal-resident execution for the eager hot path: arguments are
+    /// borrowed `Literal`s and outputs stay `Literal`s, avoiding the two
+    /// host `Vec` copies per op that `run_file` pays (§Perf L3
+    /// optimization; see EXPERIMENTS.md §Perf for before/after).
+    pub fn run_file_lit(&self, file: &str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let result = exe.execute::<&xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convert a host value into a Literal (used once per input/param by
+    /// the eager executor before entering the op loop).
+    pub fn value_to_literal(v: &Value) -> Result<xla::Literal> {
+        v.to_literal()
+    }
+
+    /// Convert a Literal back to a host value (loss/logits extraction).
+    pub fn literal_to_value(lit: &xla::Literal) -> Result<Value> {
+        Value::from_literal(lit)
+    }
+
+    /// Execute a *fused* program by name with `params` in manifest order
+    /// followed by batch inputs.
+    pub fn run_fused(&self, name: &str, params: &[Value], inputs: &[Value]) -> Result<Vec<Value>> {
+        let prog = self.manifest.program(name)?;
+        match prog {
+            Program::Fused { file, params: pspec, inputs: ispec, .. } => {
+                if params.len() != pspec.len() {
+                    return Err(Error::Runtime(format!(
+                        "{name}: {} params given, {} expected",
+                        params.len(),
+                        pspec.len()
+                    )));
+                }
+                check_specs(name, inputs, ispec)?;
+                let mut args = params.to_vec();
+                args.extend_from_slice(inputs);
+                self.run_file(&file.clone(), &args)
+            }
+            Program::Eager { .. } => Err(Error::Runtime(format!(
+                "{name} is an eager plan; use EagerExecutor"
+            ))),
+        }
+    }
+
+    /// Pack a loader batch into the standard model input order:
+    /// (x, row, col, ew, mask, mask_bias, labels, seed_mask).
+    pub fn batch_inputs(batch: &Batch) -> Vec<Value> {
+        vec![
+            Value::from_tensor(&batch.x),
+            Value::I32 { shape: vec![batch.row.len()], data: batch.row.clone() },
+            Value::I32 { shape: vec![batch.col.len()], data: batch.col.clone() },
+            Value::F32 { shape: vec![batch.ew.len()], data: batch.ew.clone() },
+            Value::F32 { shape: vec![batch.mask.len()], data: batch.mask.clone() },
+            Value::F32 { shape: vec![batch.mask_bias.len()], data: batch.mask_bias.clone() },
+            Value::I32 { shape: vec![batch.labels.len()], data: batch.labels.clone() },
+            Value::F32 { shape: vec![batch.seed_mask.len()], data: batch.seed_mask.clone() },
+        ]
+    }
+
+    /// Inference-only prefix (no labels/seed_mask).
+    pub fn infer_inputs(batch: &Batch) -> Vec<Value> {
+        let mut v = Self::batch_inputs(batch);
+        v.truncate(6);
+        v
+    }
+}
+
+fn check_specs(name: &str, values: &[Value], specs: &[TensorSpec]) -> Result<()> {
+    if values.len() != specs.len() {
+        return Err(Error::Runtime(format!(
+            "{name}: {} inputs given, {} expected",
+            values.len(),
+            specs.len()
+        )));
+    }
+    for (v, s) in values.iter().zip(specs) {
+        let (shape, dtype) = match v {
+            Value::F32 { shape, .. } => (shape, "f32"),
+            Value::I32 { shape, .. } => (shape, "i32"),
+        };
+        if shape != &s.shape || dtype != s.dtype {
+            return Err(Error::Runtime(format!(
+                "{name}: input {} expects {:?} {}, got {:?} {}",
+                s.name, s.shape, s.dtype, shape, dtype
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Engine::load("artifacts").unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn executes_an_op_artifact() {
+        let Some(eng) = engine() else { return };
+        // Find any matmul op artifact and run it with matching shapes.
+        let (name, op) = eng
+            .manifest()
+            .ops
+            .iter()
+            .find(|(_, o)| o.kind == "matmul")
+            .expect("a matmul op exists")
+            .clone();
+        // Parse shapes out of the artifact id: op_matmul__AxB_BxC
+        let sig = name.split("__").nth(1).unwrap();
+        let parts: Vec<Vec<usize>> = sig
+            .split('_')
+            .map(|p| p.split('x').map(|d| d.parse().unwrap()).collect())
+            .collect();
+        let (m, k) = (parts[0][0], parts[0][1]);
+        let n = parts[1][1];
+        let a = Value::F32 { shape: vec![m, k], data: vec![1.0; m * k] };
+        let b = Value::F32 { shape: vec![k, n], data: vec![2.0; k * n] };
+        let out = eng.run_file(&op.file, &[a, b]).unwrap();
+        let (shape, data) = out[0].as_f32().unwrap();
+        assert_eq!(shape, &[m, n]);
+        assert!((data[0] - (2.0 * k as f32)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        let op = eng.manifest().ops.values().next().unwrap().file.clone();
+        eng.executable(&op).unwrap();
+        let n = eng.cache_size();
+        eng.executable(&op).unwrap();
+        assert_eq!(eng.cache_size(), n);
+    }
+}

@@ -1,0 +1,296 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec: shape + dtype ("f32" | "i32").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One step of an eager plan.
+#[derive(Clone, Debug)]
+pub struct PlanStep {
+    pub op: String,
+    pub artifact: String,
+    pub inputs: Vec<String>,
+    pub output: String,
+}
+
+/// A program: either a fused HLO or an eager plan over op artifacts.
+#[derive(Clone, Debug)]
+pub enum Program {
+    Fused {
+        file: String,
+        params: Vec<TensorSpec>,
+        inputs: Vec<TensorSpec>,
+        outputs: Vec<String>,
+    },
+    Eager {
+        params: Vec<TensorSpec>,
+        inputs: Vec<TensorSpec>,
+        forward: Vec<PlanStep>,
+        backward: Vec<PlanStep>,
+        updates: Vec<(String, String)>,
+        outputs: BTreeMap<String, String>,
+    },
+}
+
+/// An op artifact (one micro-op HLO).
+#[derive(Clone, Debug)]
+pub struct OpArtifact {
+    pub kind: String,
+    pub file: String,
+}
+
+/// The hop-aligned shape bucket shared with the loader.
+#[derive(Clone, Debug)]
+pub struct ManifestBucket {
+    pub s: usize,
+    pub fanouts: Vec<usize>,
+    pub node_cum: Vec<usize>,
+    pub edge_cum: Vec<usize>,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+}
+
+impl ManifestBucket {
+    pub fn to_shape_bucket(&self) -> crate::loader::ShapeBucket {
+        crate::loader::ShapeBucket {
+            s: self.s,
+            fanouts: self.fanouts.clone(),
+            node_cum: self.node_cum.clone(),
+            edge_cum: self.edge_cum.clone(),
+        }
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub programs: BTreeMap<String, Program>,
+    pub ops: BTreeMap<String, OpArtifact>,
+    pub bucket: ManifestBucket,
+    pub lr: f64,
+}
+
+fn specs_of(v: &Json) -> Vec<TensorSpec> {
+    v.as_arr()
+        .map(|arr| {
+            arr.iter()
+                .map(|e| TensorSpec {
+                    name: e.get("name").and_then(|s| s.as_str()).unwrap_or("").to_string(),
+                    shape: e
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default(),
+                    dtype: e
+                        .get("dtype")
+                        .and_then(|s| s.as_str())
+                        .unwrap_or("f32")
+                        .to_string(),
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn steps_of(v: &Json) -> Vec<PlanStep> {
+    v.as_arr()
+        .map(|arr| {
+            arr.iter()
+                .map(|e| PlanStep {
+                    op: e.get("op").and_then(|s| s.as_str()).unwrap_or("").to_string(),
+                    artifact: e
+                        .get("artifact")
+                        .and_then(|s| s.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs: e
+                        .get("inputs")
+                        .and_then(|s| s.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|x| x.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    output: e
+                        .get("output")
+                        .and_then(|s| s.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn usizes_of(v: &Json) -> Vec<usize> {
+    v.as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let doc = json::parse(&text).map_err(Error::Runtime)?;
+
+        let mut programs = BTreeMap::new();
+        for (name, p) in doc
+            .get("programs")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| Error::Runtime("manifest missing programs".into()))?
+        {
+            let kind = p.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+            let prog = if kind == "eager_plan" {
+                Program::Eager {
+                    params: specs_of(p.get("params").unwrap_or(&Json::Null)),
+                    inputs: specs_of(p.get("inputs").unwrap_or(&Json::Null)),
+                    forward: steps_of(p.get("forward").unwrap_or(&Json::Null)),
+                    backward: steps_of(p.get("backward").unwrap_or(&Json::Null)),
+                    updates: p
+                        .get("updates")
+                        .and_then(|u| u.as_arr())
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|e| {
+                                    Some((
+                                        e.get("param")?.as_str()?.to_string(),
+                                        e.get("new")?.as_str()?.to_string(),
+                                    ))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    outputs: p
+                        .get("outputs")
+                        .and_then(|o| o.as_obj())
+                        .map(|o| {
+                            o.iter()
+                                .filter_map(|(k, v)| Some((k.clone(), v.as_str()?.to_string())))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                }
+            } else {
+                Program::Fused {
+                    file: p
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| Error::Runtime(format!("{name}: missing file")))?
+                        .to_string(),
+                    params: specs_of(p.get("params").unwrap_or(&Json::Null)),
+                    inputs: specs_of(p.get("inputs").unwrap_or(&Json::Null)),
+                    outputs: p
+                        .get("outputs")
+                        .and_then(|o| o.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|x| x.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                }
+            };
+            programs.insert(name.clone(), prog);
+        }
+
+        let mut ops = BTreeMap::new();
+        if let Some(o) = doc.get("ops").and_then(|o| o.as_obj()) {
+            for (name, op) in o {
+                ops.insert(
+                    name.clone(),
+                    OpArtifact {
+                        kind: op.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string(),
+                        file: op.get("file").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                    },
+                );
+            }
+        }
+
+        let b = doc
+            .get("buckets")
+            .and_then(|b| b.get("default"))
+            .ok_or_else(|| Error::Runtime("manifest missing default bucket".into()))?;
+        let bucket = ManifestBucket {
+            s: b.get("s").and_then(|v| v.as_usize()).unwrap_or(0),
+            fanouts: usizes_of(b.get("fanouts").unwrap_or(&Json::Null)),
+            node_cum: usizes_of(b.get("node_cum").unwrap_or(&Json::Null)),
+            edge_cum: usizes_of(b.get("edge_cum").unwrap_or(&Json::Null)),
+            f: b.get("f").and_then(|v| v.as_usize()).unwrap_or(0),
+            h: b.get("h").and_then(|v| v.as_usize()).unwrap_or(0),
+            c: b.get("c").and_then(|v| v.as_usize()).unwrap_or(0),
+        };
+        let lr = doc
+            .get("config")
+            .and_then(|c| c.get("lr"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.05);
+
+        Ok(Manifest { dir, programs, ops, bucket, lr })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&Program> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no program {name} in manifest")))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(m.programs.contains_key("gcn_train"));
+        assert!(m.programs.contains_key("gcn_eager"));
+        assert!(!m.ops.is_empty());
+        assert_eq!(m.bucket.node_cum.len(), m.bucket.fanouts.len() + 1);
+        match m.program("gcn_eager").unwrap() {
+            Program::Eager { forward, backward, updates, .. } => {
+                assert!(!forward.is_empty());
+                assert!(!backward.is_empty());
+                assert!(!updates.is_empty());
+            }
+            _ => panic!("gcn_eager should be an eager plan"),
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_clear_error() {
+        let err = Manifest::load("/nonexistent").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime: PJRT client wrapper loading `artifacts/*.hlo.txt`, the
+//! executable cache, and the two execution modes (fused vs eager).
+
+pub mod eager;
+pub mod engine;
+pub mod manifest;
+
+pub use eager::EagerExecutor;
+pub use engine::{Engine, Value};
+pub use manifest::{Manifest, Program};

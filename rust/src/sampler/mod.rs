@@ -1,0 +1,14 @@
+//! Subgraph samplers (§2.3): homogeneous, heterogeneous, temporal, bulk —
+//! all multi-hop, all emitting per-hop offsets (the trimming metadata).
+
+pub mod bulk;
+pub mod hetero;
+pub mod neighbor;
+pub mod subgraph;
+pub mod temporal;
+
+pub use bulk::{make_seed_batches, BulkSampler};
+pub use hetero::{HeteroNeighborSampler, HeteroSampledSubgraph, HeteroSamplerConfig};
+pub use neighbor::{Direction, NeighborSampler, NeighborSamplerConfig};
+pub use subgraph::SampledSubgraph;
+pub use temporal::{TemporalNeighborSampler, TemporalSamplerConfig, TemporalStrategy};

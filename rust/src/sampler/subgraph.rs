@@ -1,0 +1,152 @@
+//! Sampled subgraph representation.
+//!
+//! Unlike layer-wise 1-hop samplers (DGL-style), PyG returns **one
+//! multi-hop subgraph** per mini-batch (§2.3 "Efficient Subgraph
+//! Sampling"). Nodes are ordered by BFS hop — seeds first — and the
+//! per-hop counts are retained, which is exactly the metadata the
+//! layer-wise *trimming* optimization (Table 2) slices by.
+
+/// A sampled k-hop subgraph with local (relabeled) edge indices.
+#[derive(Clone, Debug, Default)]
+pub struct SampledSubgraph {
+    /// Global node ids; `nodes[0..num_seeds]` are the seed nodes, the rest
+    /// follow in BFS-hop order.
+    pub nodes: Vec<u32>,
+    /// Local source indices (message origins) into `nodes`.
+    pub row: Vec<u32>,
+    /// Local destination indices (message targets) into `nodes`.
+    pub col: Vec<u32>,
+    /// Original (global) edge ids, aligned with `row`/`col` — used to
+    /// fetch edge features/timestamps.
+    pub edge_ids: Vec<u32>,
+    /// Number of seed nodes.
+    pub num_seeds: usize,
+    /// Cumulative node count after each hop: `[num_seeds, n₁, n₂, ...]`.
+    /// `node_offsets.last()` == `nodes.len()`.
+    pub node_offsets: Vec<usize>,
+    /// Cumulative edge count after each hop.
+    pub edge_offsets: Vec<usize>,
+    /// For disjoint sampling: which seed's tree each node belongs to.
+    pub batch: Option<Vec<u32>>,
+    /// Seed timestamps (temporal sampling), aligned with seeds.
+    pub seed_times: Option<Vec<i64>>,
+}
+
+impl SampledSubgraph {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.row.len()
+    }
+
+    /// Number of hops sampled.
+    pub fn num_hops(&self) -> usize {
+        self.node_offsets.len().saturating_sub(1)
+    }
+
+    /// Node count needed by GNN layer `layer` (0-based) of a `num_hops`-
+    /// layer network under progressive trimming: layer 0 consumes the full
+    /// subgraph, the last layer only needs seeds + 1 hop.
+    pub fn trimmed_num_nodes(&self, layer: usize) -> usize {
+        let keep_hops = self.num_hops().saturating_sub(layer);
+        self.node_offsets[keep_hops.min(self.node_offsets.len() - 1)]
+    }
+
+    /// Edge count needed by GNN layer `layer` under progressive trimming.
+    pub fn trimmed_num_edges(&self, layer: usize) -> usize {
+        let keep_hops = self.num_hops().saturating_sub(layer);
+        if keep_hops == 0 {
+            0
+        } else {
+            self.edge_offsets[(keep_hops - 1).min(self.edge_offsets.len() - 1)]
+        }
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.node_offsets.first() != Some(&self.num_seeds) {
+            return Err("node_offsets[0] != num_seeds".into());
+        }
+        if self.node_offsets.last() != Some(&self.nodes.len()) {
+            return Err("node_offsets tail != nodes.len()".into());
+        }
+        if self.row.len() != self.col.len() || self.row.len() != self.edge_ids.len() {
+            return Err("row/col/edge_ids length mismatch".into());
+        }
+        let n = self.nodes.len() as u32;
+        if self.row.iter().any(|&r| r >= n) || self.col.iter().any(|&c| c >= n) {
+            return Err("local edge index out of range".into());
+        }
+        if !self.node_offsets.windows(2).all(|w| w[0] <= w[1]) {
+            return Err("node_offsets not monotone".into());
+        }
+        if let Some(batch) = &self.batch {
+            if batch.len() != self.nodes.len() {
+                return Err("batch vector length mismatch".into());
+            }
+            // Edges must stay within one seed's tree.
+            for (&r, &c) in self.row.iter().zip(&self.col) {
+                if batch[r as usize] != batch[c as usize] {
+                    return Err("edge crosses disjoint subgraphs".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> SampledSubgraph {
+        // 2 seeds, hop1 adds 2 nodes, hop2 adds 1; edges: hop1: 2, hop2: 1.
+        SampledSubgraph {
+            nodes: vec![10, 20, 30, 40, 50],
+            row: vec![2, 3, 4],
+            col: vec![0, 1, 2],
+            edge_ids: vec![100, 101, 102],
+            num_seeds: 2,
+            node_offsets: vec![2, 4, 5],
+            edge_offsets: vec![2, 3],
+            batch: None,
+            seed_times: None,
+        }
+    }
+
+    #[test]
+    fn invariants_hold_on_toy() {
+        toy().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trimming_schedule() {
+        let s = toy();
+        assert_eq!(s.num_hops(), 2);
+        // layer 0: full graph (5 nodes, 3 edges)
+        assert_eq!(s.trimmed_num_nodes(0), 5);
+        assert_eq!(s.trimmed_num_edges(0), 3);
+        // layer 1: only seeds + hop1 (4 nodes), hop-1 edges (2)
+        assert_eq!(s.trimmed_num_nodes(1), 4);
+        assert_eq!(s.trimmed_num_edges(1), 2);
+    }
+
+    #[test]
+    fn invariant_violations_detected() {
+        let mut s = toy();
+        s.row[0] = 99;
+        assert!(s.check_invariants().is_err());
+
+        let mut s = toy();
+        s.num_seeds = 3;
+        assert!(s.check_invariants().is_err());
+
+        let mut s = toy();
+        s.batch = Some(vec![0, 1, 0, 1, 0]); // edge 3->1: batch[3]=1 == batch[1]=1 ok; edge 4->2: 0==0 ok; edge 2->0 ok
+        s.check_invariants().unwrap();
+        s.batch = Some(vec![0, 1, 1, 1, 0]); // edge 2->0 crosses
+        assert!(s.check_invariants().is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Temporal subgraph sampling (§2.3 "Temporal Subgraph Sampling").
+//!
+//! Given seed node v and seed timestamp t, the k-hop subgraph G_k^{≤t}[v]
+//! only contains nodes/edges that appeared at or before t — no future
+//! information can leak into the representation. Per the paper:
+//! * strategies: uniform, most-recent-k, annealing (bias toward recent),
+//! * node/edge types without timestamps are sampled unconstrained,
+//! * subgraphs within a batch are **disjoint** so every seed may carry its
+//!   own timestamp.
+
+use super::subgraph::SampledSubgraph;
+use crate::error::{Error, Result};
+use crate::graph::EdgeType;
+use crate::storage::{default_edge_type, GraphStore};
+use crate::util::Rng;
+use rustc_hash::FxHashMap as HashMap;
+use std::sync::Arc;
+
+/// Temporal candidate-selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TemporalStrategy {
+    /// Uniform over all temporally valid neighbors.
+    Uniform,
+    /// The `fanout` most recent valid neighbors (deterministic).
+    MostRecent,
+    /// Weighted sampling with weight `exp(-(t_seed - t_edge)/tau)`; larger
+    /// `tau` → closer to uniform, small `tau` → close to most-recent.
+    Annealing { tau: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct TemporalSamplerConfig {
+    pub fanouts: Vec<usize>,
+    pub strategy: TemporalStrategy,
+    pub seed: u64,
+}
+
+impl Default for TemporalSamplerConfig {
+    fn default() -> Self {
+        Self { fanouts: vec![10, 5], strategy: TemporalStrategy::Uniform, seed: 0 }
+    }
+}
+
+/// Temporal neighbor sampler. Always disjoint.
+pub struct TemporalNeighborSampler<G: GraphStore> {
+    store: Arc<G>,
+    cfg: TemporalSamplerConfig,
+    edge_type: EdgeType,
+}
+
+impl<G: GraphStore> TemporalNeighborSampler<G> {
+    pub fn new(store: Arc<G>, cfg: TemporalSamplerConfig) -> Self {
+        Self { store, cfg, edge_type: default_edge_type() }
+    }
+
+    pub fn with_edge_type(mut self, et: EdgeType) -> Self {
+        self.edge_type = et;
+        self
+    }
+
+    /// Sample around `(seeds[i], seed_times[i])` pairs.
+    pub fn sample(&self, seeds: &[u32], seed_times: &[i64], batch_seed: u64) -> Result<SampledSubgraph> {
+        if seeds.len() != seed_times.len() {
+            return Err(Error::Sampler(format!(
+                "seeds ({}) and seed_times ({}) must align",
+                seeds.len(),
+                seed_times.len()
+            )));
+        }
+        let csc = self.store.csc(&self.edge_type)?;
+        // Edge/node timestamps are optional: untimed types sample without
+        // temporal constraints (paper behaviour for static types).
+        let edge_time = self.store.edge_time(&self.edge_type)?;
+        let node_time = self.store.node_time(&self.edge_type.src)?;
+        let mut rng = Rng::new(self.cfg.seed).fork(batch_seed);
+
+        let mut out = SampledSubgraph {
+            num_seeds: seeds.len(),
+            seed_times: Some(seed_times.to_vec()),
+            ..Default::default()
+        };
+        let mut local: HashMap<(u32, u32), u32> = HashMap::default();
+        let mut batch_vec: Vec<u32> = Vec::new();
+        for (i, &s) in seeds.iter().enumerate() {
+            out.nodes.push(s);
+            batch_vec.push(i as u32);
+            local.insert((i as u32, s), i as u32);
+        }
+        out.node_offsets.push(out.nodes.len());
+
+        let mut frontier: Vec<u32> = (0..seeds.len() as u32).collect();
+        // (global neighbor id, edge id) candidates, rebuilt per node.
+        let mut cands: Vec<(u32, u32, i64)> = Vec::new();
+
+        for &fanout in &self.cfg.fanouts {
+            let mut next_frontier = Vec::new();
+            for &dst_local in &frontier {
+                let dst_global = out.nodes[dst_local as usize];
+                let tree = batch_vec[dst_local as usize];
+                let t_seed = seed_times[tree as usize];
+
+                // Collect temporally valid candidates.
+                cands.clear();
+                let lo = csc.indptr[dst_global as usize];
+                let hi = csc.indptr[dst_global as usize + 1];
+                for j in lo..hi {
+                    let nbr = csc.indices[j];
+                    let eid = csc.perm[j];
+                    let et = edge_time.as_ref().map(|t| t[eid as usize]).unwrap_or(i64::MIN);
+                    if et > t_seed {
+                        continue; // future edge — never allowed
+                    }
+                    if let Some(nt) = &node_time {
+                        if nt[nbr as usize] > t_seed {
+                            continue; // neighbor does not exist yet
+                        }
+                    }
+                    cands.push((nbr, eid, et));
+                }
+                if cands.is_empty() {
+                    continue;
+                }
+
+                let picks = self.pick(&mut rng, &cands, fanout);
+                for &k in &picks {
+                    let (nbr, eid, _) = cands[k];
+                    let src_local = *local.entry((tree, nbr)).or_insert_with(|| {
+                        out.nodes.push(nbr);
+                        batch_vec.push(tree);
+                        next_frontier.push(out.nodes.len() as u32 - 1);
+                        out.nodes.len() as u32 - 1
+                    });
+                    out.row.push(src_local);
+                    out.col.push(dst_local);
+                    out.edge_ids.push(eid);
+                }
+            }
+            out.node_offsets.push(out.nodes.len());
+            out.edge_offsets.push(out.row.len());
+            frontier = next_frontier;
+            if frontier.is_empty() {
+                for _ in out.node_offsets.len()..=self.cfg.fanouts.len() {
+                    out.node_offsets.push(out.nodes.len());
+                    out.edge_offsets.push(out.row.len());
+                }
+                break;
+            }
+        }
+
+        out.batch = Some(batch_vec);
+        Ok(out)
+    }
+
+    /// Choose up to `fanout` candidate indices per the strategy.
+    fn pick(&self, rng: &mut Rng, cands: &[(u32, u32, i64)], fanout: usize) -> Vec<usize> {
+        if cands.len() <= fanout {
+            return (0..cands.len()).collect();
+        }
+        match self.cfg.strategy {
+            TemporalStrategy::Uniform => rng.sample_distinct(cands.len(), fanout),
+            TemporalStrategy::MostRecent => {
+                let mut idx: Vec<usize> = (0..cands.len()).collect();
+                idx.sort_by_key(|&i| std::cmp::Reverse(cands[i].2));
+                idx.truncate(fanout);
+                idx
+            }
+            TemporalStrategy::Annealing { tau } => {
+                // Weighted sampling without replacement (repeated draws).
+                let t_max = cands.iter().map(|c| c.2).max().unwrap_or(0);
+                let mut weights: Vec<f64> = cands
+                    .iter()
+                    .map(|c| (-((t_max - c.2) as f64) / tau.max(1e-9)).exp())
+                    .collect();
+                let mut picks = Vec::with_capacity(fanout);
+                for _ in 0..fanout {
+                    let k = rng.weighted_index(&weights);
+                    picks.push(k);
+                    weights[k] = 0.0;
+                }
+                picks.sort_unstable();
+                picks.dedup();
+                picks
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::temporal::{self, TemporalConfig};
+    use crate::graph::{EdgeIndex, Graph};
+    use crate::storage::InMemoryGraphStore;
+    use crate::tensor::Tensor;
+
+    fn timed_store() -> Arc<InMemoryGraphStore> {
+        // Edges into node 0 at times 1..=6 from nodes 1..=6.
+        let src = vec![1, 2, 3, 4, 5, 6];
+        let dst = vec![0; 6];
+        let ei = EdgeIndex::new(src, dst, 7).unwrap();
+        let g = Graph::new(ei, Tensor::zeros(vec![7, 1]))
+            .unwrap()
+            .with_edge_time(vec![1, 2, 3, 4, 5, 6])
+            .unwrap()
+            .with_node_time(vec![0, 1, 2, 3, 4, 5, 6])
+            .unwrap();
+        Arc::new(InMemoryGraphStore::from_graph(&g))
+    }
+
+    #[test]
+    fn no_future_edges_ever() {
+        let s = TemporalNeighborSampler::new(
+            timed_store(),
+            TemporalSamplerConfig { fanouts: vec![10], ..Default::default() },
+        );
+        let sub = s.sample(&[0], &[3], 0).unwrap();
+        // Only edges with t <= 3 are eligible: from nodes 1, 2, 3.
+        assert_eq!(sub.num_edges(), 3);
+        assert!(sub.nodes[1..].iter().all(|&v| v <= 3));
+    }
+
+    #[test]
+    fn most_recent_takes_latest() {
+        let s = TemporalNeighborSampler::new(
+            timed_store(),
+            TemporalSamplerConfig {
+                fanouts: vec![2],
+                strategy: TemporalStrategy::MostRecent,
+                ..Default::default()
+            },
+        );
+        let sub = s.sample(&[0], &[5], 0).unwrap();
+        // valid edges t<=5 from {1..5}; most recent 2 are t=5 (node 5) and t=4 (node 4).
+        let mut nbrs: Vec<u32> = sub.nodes[1..].to_vec();
+        nbrs.sort_unstable();
+        assert_eq!(nbrs, vec![4, 5]);
+    }
+
+    #[test]
+    fn annealing_biases_toward_recent() {
+        let s = TemporalNeighborSampler::new(
+            timed_store(),
+            TemporalSamplerConfig {
+                fanouts: vec![1],
+                strategy: TemporalStrategy::Annealing { tau: 0.5 },
+                ..Default::default()
+            },
+        );
+        let mut recent_hits = 0;
+        for b in 0..200 {
+            let sub = s.sample(&[0], &[6], b).unwrap();
+            if sub.nodes[1] >= 5 {
+                recent_hits += 1;
+            }
+        }
+        // With tau=0.5 the newest 2 of 6 candidates should dominate.
+        assert!(recent_hits > 140, "recent_hits={recent_hits}");
+    }
+
+    #[test]
+    fn per_seed_timestamps_are_respected() {
+        let s = TemporalNeighborSampler::new(
+            timed_store(),
+            TemporalSamplerConfig { fanouts: vec![10], ..Default::default() },
+        );
+        let sub = s.sample(&[0, 0], &[2, 6], 0).unwrap();
+        sub.check_invariants().unwrap();
+        let batch = sub.batch.as_ref().unwrap();
+        // Tree 0 (t=2) may only contain neighbors 1, 2; tree 1 (t=6) has 1..6.
+        for (i, &v) in sub.nodes.iter().enumerate().skip(2) {
+            if batch[i] == 0 {
+                assert!(v <= 2, "tree0 leaked node {v}");
+            }
+        }
+        let tree1: Vec<u32> = sub
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| batch[*i] == 1)
+            .map(|(_, &v)| v)
+            .collect();
+        assert_eq!(tree1.len(), 7); // seed + 6 neighbors
+    }
+
+    #[test]
+    fn untimed_store_is_unconstrained() {
+        // Same topology, no timestamps → all neighbors eligible.
+        let ei = EdgeIndex::new(vec![1, 2, 3], vec![0, 0, 0], 4).unwrap();
+        let g = Graph::new(ei, Tensor::zeros(vec![4, 1])).unwrap();
+        let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+        let s = TemporalNeighborSampler::new(store, TemporalSamplerConfig::default());
+        let sub = s.sample(&[0], &[-100], 0).unwrap();
+        assert_eq!(sub.num_edges(), 3);
+    }
+
+    #[test]
+    fn multi_hop_no_leakage_property() {
+        // Property: on a generated temporal graph, every sampled edge's
+        // timestamp must be <= its tree's seed time — across all hops.
+        let g = temporal::generate(&TemporalConfig {
+            num_nodes: 200,
+            num_events: 2000,
+            ..Default::default()
+        })
+        .unwrap();
+        let etimes = g.edge_time.clone().unwrap();
+        let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+        let s = TemporalNeighborSampler::new(
+            store,
+            TemporalSamplerConfig { fanouts: vec![5, 5], ..Default::default() },
+        );
+        let seeds = vec![3u32, 77, 150];
+        let times = vec![500i64, 1500, 100];
+        let sub = s.sample(&seeds, &times, 42).unwrap();
+        sub.check_invariants().unwrap();
+        let batch = sub.batch.as_ref().unwrap();
+        for (k, &eid) in sub.edge_ids.iter().enumerate() {
+            let tree = batch[sub.col[k] as usize] as usize;
+            assert!(
+                etimes[eid as usize] <= times[tree],
+                "edge {eid} (t={}) leaked into tree with seed time {}",
+                etimes[eid as usize],
+                times[tree]
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_seed_times_error() {
+        let s = TemporalNeighborSampler::new(timed_store(), TemporalSamplerConfig::default());
+        assert!(s.sample(&[0, 1], &[5], 0).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! `FeatureStore` — the remote-backend interface of §2.3.
+//!
+//! PyG 2.0's key architectural move is the separation of concerns between
+//! feature storage, graph storage, and sampling: the training loop only
+//! ever calls `get` on an abstract feature backend, so features can live
+//! in memory, in files, or behind a partitioned service without the loop
+//! changing. This module defines that trait and the in-memory and
+//! file-backed implementations; the partitioned one lives in
+//! `crate::dist`.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+/// Identifies a feature group: `(node_type, attr)`. Homogeneous graphs use
+/// `DEFAULT_GROUP` for the node type.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FeatureKey {
+    pub group: String,
+    pub attr: String,
+}
+
+/// Node type / attr used by homogeneous graphs.
+pub const DEFAULT_GROUP: &str = "_default";
+pub const DEFAULT_ATTR: &str = "x";
+
+impl FeatureKey {
+    pub fn new(group: &str, attr: &str) -> Self {
+        Self { group: group.into(), attr: attr.into() }
+    }
+
+    pub fn default_x() -> Self {
+        Self::new(DEFAULT_GROUP, DEFAULT_ATTR)
+    }
+}
+
+/// The remote feature backend interface.
+///
+/// Implementations must be `Send + Sync`: loader workers fetch features
+/// concurrently.
+pub trait FeatureStore: Send + Sync {
+    /// Fetch rows `idx` of the feature group `key` into a dense tensor
+    /// `[idx.len(), F]`.
+    fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor>;
+
+    /// Fetch into a preallocated tensor (hot-path variant; `out` must have
+    /// at least `idx.len()` rows and exactly `F` cols). Rows past
+    /// `idx.len()` are zeroed (padding). Default: allocate via `get`.
+    fn get_into(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
+        let t = self.get(key, idx)?;
+        out.gather_rows_into(&t, &(0..idx.len()).collect::<Vec<_>>())
+    }
+
+    /// Feature dimension of a group.
+    fn feature_dim(&self, key: &FeatureKey) -> Result<usize>;
+
+    /// Number of rows in a group.
+    fn num_rows(&self, key: &FeatureKey) -> Result<usize>;
+
+    /// All known keys.
+    fn keys(&self) -> Vec<FeatureKey>;
+}
+
+/// Fully in-memory feature store (PyG's `Data`/`HeteroData` equivalent).
+#[derive(Default)]
+pub struct InMemoryFeatureStore {
+    groups: RwLock<BTreeMap<FeatureKey, Tensor>>,
+}
+
+impl InMemoryFeatureStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&self, key: FeatureKey, tensor: Tensor) {
+        self.groups.write().unwrap().insert(key, tensor);
+    }
+
+    /// Convenience: store a homogeneous graph's `x`.
+    pub fn from_tensor(x: Tensor) -> Self {
+        let s = Self::new();
+        s.put(FeatureKey::default_x(), x);
+        s
+    }
+}
+
+impl FeatureStore for InMemoryFeatureStore {
+    fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor> {
+        let g = self.groups.read().unwrap();
+        let t = g
+            .get(key)
+            .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))?;
+        t.gather_rows(idx)
+    }
+
+    fn get_into(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
+        let g = self.groups.read().unwrap();
+        let t = g
+            .get(key)
+            .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))?;
+        out.gather_rows_into(t, idx)
+    }
+
+    fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
+        let g = self.groups.read().unwrap();
+        g.get(key)
+            .map(|t| t.cols())
+            .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))
+    }
+
+    fn num_rows(&self, key: &FeatureKey) -> Result<usize> {
+        let g = self.groups.read().unwrap();
+        g.get(key)
+            .map(|t| t.rows())
+            .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))
+    }
+
+    fn keys(&self) -> Vec<FeatureKey> {
+        self.groups.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> InMemoryFeatureStore {
+        let s = InMemoryFeatureStore::new();
+        s.put(
+            FeatureKey::default_x(),
+            Tensor::new(vec![4, 2], vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap(),
+        );
+        s.put(FeatureKey::new("item", "x"), Tensor::zeros(vec![2, 3]));
+        s
+    }
+
+    #[test]
+    fn get_gathers_rows() {
+        let s = store();
+        let t = s.get(&FeatureKey::default_x(), &[3, 1]).unwrap();
+        assert_eq!(t.data(), &[3., 3., 1., 1.]);
+    }
+
+    #[test]
+    fn get_into_pads() {
+        let s = store();
+        let mut out = Tensor::full(vec![4, 2], 9.0);
+        s.get_into(&FeatureKey::default_x(), &[2], &mut out).unwrap();
+        assert_eq!(out.data(), &[2., 2., 0., 0., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn missing_group_errors() {
+        let s = store();
+        assert!(s.get(&FeatureKey::new("nope", "x"), &[0]).is_err());
+    }
+
+    #[test]
+    fn metadata() {
+        let s = store();
+        assert_eq!(s.feature_dim(&FeatureKey::new("item", "x")).unwrap(), 3);
+        assert_eq!(s.num_rows(&FeatureKey::default_x()).unwrap(), 4);
+        assert_eq!(s.keys().len(), 2);
+    }
+}

@@ -1,0 +1,265 @@
+//! File-backed feature store — the "embedded database" backend of §2.3.
+//!
+//! Features are persisted in a simple binary format (`.pygf`): a JSON-ish
+//! header with group metadata followed by raw little-endian f32 blocks.
+//! Reads use positioned I/O (`pread`-style seek + read per row batch), so
+//! memory stays O(batch), exactly what a remote backend needs when the
+//! graph's features do not fit in RAM.
+
+use super::feature_store::{FeatureKey, FeatureStore};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+const MAGIC: &[u8; 8] = b"PYGFEAT1";
+
+#[derive(Clone, Debug)]
+struct GroupMeta {
+    rows: usize,
+    cols: usize,
+    /// Byte offset of the group's data block.
+    offset: u64,
+}
+
+/// Writer: collect groups then `finish()` to a file.
+pub struct FileFeatureWriter {
+    path: PathBuf,
+    groups: Vec<(FeatureKey, Tensor)>,
+}
+
+impl FileFeatureWriter {
+    pub fn new(path: impl AsRef<Path>) -> Self {
+        Self { path: path.as_ref().to_path_buf(), groups: Vec::new() }
+    }
+
+    pub fn put(&mut self, key: FeatureKey, tensor: Tensor) {
+        self.groups.push((key, tensor));
+    }
+
+    pub fn finish(self) -> Result<()> {
+        // Header JSON: {"groups": [{"group","attr","rows","cols","offset"}]}
+        let mut metas = Vec::new();
+        // First pass to compute offsets: header size depends on the JSON,
+        // so write data at a fixed offset after a length-prefixed header.
+        let mut data_sizes = Vec::new();
+        for (_, t) in &self.groups {
+            data_sizes.push((t.rows(), t.cols(), t.numel() * 4));
+        }
+        // Build header with placeholder offsets, then fix up: compute
+        // header length with final integer offsets by iterating to a fixed
+        // point (offsets are computed from a fixed data start instead).
+        // Simpler: data starts at MAGIC + 8-byte header_len + header bytes.
+        // We compute header with offsets relative to data start, then add.
+        let mut rel = 0u64;
+        let mut rel_offsets = Vec::new();
+        for (_, _, bytes) in &data_sizes {
+            rel_offsets.push(rel);
+            rel += *bytes as u64;
+        }
+        for ((key, _), ((rows, cols, _), rel_off)) in
+            self.groups.iter().zip(data_sizes.iter().zip(&rel_offsets))
+        {
+            metas.push(Json::obj(vec![
+                ("group", Json::str(key.group.clone())),
+                ("attr", Json::str(key.attr.clone())),
+                ("rows", Json::num(*rows as f64)),
+                ("cols", Json::num(*cols as f64)),
+                ("offset", Json::num(*rel_off as f64)),
+            ]));
+        }
+        let header = Json::obj(vec![("groups", Json::Arr(metas))]).to_string();
+        let mut f = File::create(&self.path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in &self.groups {
+            let bytes: Vec<u8> = t.data().iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        f.sync_all()?;
+        Ok(())
+    }
+}
+
+/// Read-side store. Thread-safe via an internal mutex around the file
+/// handle (positioned reads; contention is visible in loader benches and
+/// is part of what the partitioned store amortizes).
+pub struct FileFeatureStore {
+    file: Mutex<File>,
+    data_start: u64,
+    groups: BTreeMap<FeatureKey, GroupMeta>,
+}
+
+impl FileFeatureStore {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = File::open(path.as_ref())?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Storage(format!(
+                "{} is not a pyg2 feature file",
+                path.as_ref().display()
+            )));
+        }
+        let mut len_bytes = [0u8; 8];
+        f.read_exact(&mut len_bytes)?;
+        let header_len = u64::from_le_bytes(len_bytes);
+        let mut header = vec![0u8; header_len as usize];
+        f.read_exact(&mut header)?;
+        let header_str = String::from_utf8(header)
+            .map_err(|e| Error::Storage(format!("bad header utf8: {e}")))?;
+        let doc = json::parse(&header_str).map_err(Error::Storage)?;
+        let data_start = 8 + 8 + header_len;
+        let mut groups = BTreeMap::new();
+        for g in doc
+            .get("groups")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| Error::Storage("missing groups".into()))?
+        {
+            let key = FeatureKey::new(
+                g.get("group").and_then(|v| v.as_str()).unwrap_or_default(),
+                g.get("attr").and_then(|v| v.as_str()).unwrap_or_default(),
+            );
+            groups.insert(
+                key,
+                GroupMeta {
+                    rows: g.get("rows").and_then(|v| v.as_usize()).unwrap_or(0),
+                    cols: g.get("cols").and_then(|v| v.as_usize()).unwrap_or(0),
+                    offset: data_start + g.get("offset").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                },
+            );
+        }
+        Ok(Self { file: Mutex::new(f), data_start, groups })
+    }
+
+    /// Byte offset where feature blocks begin (diagnostics).
+    pub fn data_start(&self) -> u64 {
+        self.data_start
+    }
+
+    fn meta(&self, key: &FeatureKey) -> Result<&GroupMeta> {
+        self.groups
+            .get(key)
+            .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))
+    }
+
+    /// Read one row's bytes. Coalesces nothing — the benchmark story for
+    /// why bulk/partitioned stores exist.
+    fn read_row(&self, meta: &GroupMeta, row: usize, buf: &mut [f32]) -> Result<()> {
+        let mut f = self.file.lock().unwrap();
+        let byte_off = meta.offset + (row * meta.cols * 4) as u64;
+        f.seek(SeekFrom::Start(byte_off))?;
+        let mut bytes = vec![0u8; meta.cols * 4];
+        f.read_exact(&mut bytes)?;
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            buf[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+impl FeatureStore for FileFeatureStore {
+    fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor> {
+        let meta = self.meta(key)?.clone();
+        let mut out = Tensor::zeros(vec![idx.len(), meta.cols]);
+        for (r, &i) in idx.iter().enumerate() {
+            if i >= meta.rows {
+                return Err(Error::Storage(format!("row {i} out of {}", meta.rows)));
+            }
+            self.read_row(&meta, i, out.row_mut(r))?;
+        }
+        Ok(out)
+    }
+
+    fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
+        Ok(self.meta(key)?.cols)
+    }
+
+    fn num_rows(&self, key: &FeatureKey) -> Result<usize> {
+        Ok(self.meta(key)?.rows)
+    }
+
+    fn keys(&self) -> Vec<FeatureKey> {
+        self.groups.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pyg2_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let path = tmpfile("roundtrip.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        w.put(FeatureKey::default_x(), t);
+        w.put(FeatureKey::new("item", "emb"), Tensor::full(vec![2, 4], 7.0));
+        w.finish().unwrap();
+
+        let s = FileFeatureStore::open(&path).unwrap();
+        assert_eq!(s.keys().len(), 2);
+        let got = s.get(&FeatureKey::default_x(), &[2, 0]).unwrap();
+        assert_eq!(got.data(), &[5., 6., 1., 2.]);
+        let emb = s.get(&FeatureKey::new("item", "emb"), &[1]).unwrap();
+        assert_eq!(emb.data(), &[7.0; 4]);
+        assert_eq!(s.feature_dim(&FeatureKey::new("item", "emb")).unwrap(), 4);
+        assert_eq!(s.num_rows(&FeatureKey::default_x()).unwrap(), 3);
+        assert_eq!(s.data_start, 8 + 8 + {
+            // header length is whatever was written; sanity only
+            s.data_start - 16
+        });
+    }
+
+    #[test]
+    fn out_of_range_row_errors() {
+        let path = tmpfile("oor.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        w.put(FeatureKey::default_x(), Tensor::zeros(vec![2, 2]));
+        w.finish().unwrap();
+        let s = FileFeatureStore::open(&path).unwrap();
+        assert!(s.get(&FeatureKey::default_x(), &[5]).is_err());
+    }
+
+    #[test]
+    fn rejects_non_feature_file() {
+        let path = tmpfile("bad.pygf");
+        std::fs::write(&path, b"definitely not a feature file").unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn concurrent_reads_are_consistent() {
+        let path = tmpfile("conc.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        let data: Vec<f32> = (0..100 * 8).map(|i| i as f32).collect();
+        w.put(FeatureKey::default_x(), Tensor::new(vec![100, 8], data).unwrap());
+        w.finish().unwrap();
+        let s = std::sync::Arc::new(FileFeatureStore::open(&path).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = std::sync::Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let row = (t * 13 + i * 7) % 100;
+                    let got = s.get(&FeatureKey::default_x(), &[row]).unwrap();
+                    assert_eq!(got.data()[0], (row * 8) as f32);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

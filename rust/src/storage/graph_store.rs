@@ -1,0 +1,301 @@
+//! `GraphStore` — the topology half of the remote-backend interface.
+//!
+//! The sampler asks the graph store for adjacency (CSR views per edge
+//! type); where the edges physically live (memory, file, partition) is the
+//! store's business. Mirrors PyG 2.0's `GraphStore` with COO/CSR/CSC
+//! layout negotiation.
+
+use crate::error::{Error, Result};
+use crate::graph::{Compressed, EdgeIndex, EdgeType};
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+use std::sync::Arc;
+
+/// Homogeneous edge type key.
+pub fn default_edge_type() -> EdgeType {
+    EdgeType::new("_default", "to", "_default")
+}
+
+/// The remote graph backend interface.
+pub trait GraphStore: Send + Sync {
+    /// All edge types stored.
+    fn edge_types(&self) -> Vec<EdgeType>;
+
+    /// Number of nodes of a node type.
+    fn num_nodes(&self, node_type: &str) -> Result<usize>;
+
+    /// CSR view (grouped by source) of one edge type. Implementations are
+    /// expected to cache; callers may hold the Arc across batches.
+    fn csr(&self, et: &EdgeType) -> Result<Arc<Compressed>>;
+
+    /// CSC view (grouped by destination) — the direction neighbor sampling
+    /// traverses (sampling *incoming* neighbors of seed nodes, so that
+    /// messages flow seed-ward).
+    fn csc(&self, et: &EdgeType) -> Result<Arc<Compressed>>;
+
+    /// Per-edge timestamps in *original COO order* (aligned with the
+    /// `perm` of the compressed views), if this edge type is temporal.
+    fn edge_time(&self, et: &EdgeType) -> Result<Option<Arc<Vec<i64>>>>;
+
+    /// Per-node timestamps for a node type, if temporal.
+    fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>>;
+}
+
+/// In-memory graph store over one or many edge types.
+#[derive(Default)]
+pub struct InMemoryGraphStore {
+    inner: RwLock<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    num_nodes: BTreeMap<String, usize>,
+    edges: BTreeMap<EdgeType, EdgeEntry>,
+    node_time: BTreeMap<String, Arc<Vec<i64>>>,
+}
+
+struct EdgeEntry {
+    edge_index: EdgeIndex,
+    csr: Option<Arc<Compressed>>,
+    csc: Option<Arc<Compressed>>,
+    time: Option<Arc<Vec<i64>>>,
+}
+
+impl InMemoryGraphStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a homogeneous store from a [`crate::graph::Graph`].
+    pub fn from_graph(g: &crate::graph::Graph) -> Self {
+        let s = Self::new();
+        s.set_num_nodes("_default", g.num_nodes());
+        s.put_edges(default_edge_type(), g.edge_index.clone());
+        if let Some(t) = &g.edge_time {
+            s.set_edge_time(&default_edge_type(), t.clone()).unwrap();
+        }
+        if let Some(t) = &g.node_time {
+            s.set_node_time("_default", t.clone());
+        }
+        s
+    }
+
+    /// Build a heterogeneous store from a [`crate::graph::HeteroGraph`].
+    pub fn from_hetero(g: &crate::graph::HeteroGraph) -> Self {
+        let s = Self::new();
+        for nt in g.node_types() {
+            s.set_num_nodes(nt, g.num_nodes(nt).unwrap());
+            if let Some(t) = &g.node_store(nt).unwrap().time {
+                s.set_node_time(nt, t.clone());
+            }
+        }
+        for et in g.edge_types() {
+            let store = g.edge_store(et).unwrap();
+            s.put_edges_bipartite(et.clone(), store.edge_index.clone());
+            if let Some(t) = &store.time {
+                s.set_edge_time(et, t.clone()).unwrap();
+            }
+        }
+        s
+    }
+
+    pub fn set_num_nodes(&self, node_type: &str, n: usize) {
+        self.inner.write().unwrap().num_nodes.insert(node_type.into(), n);
+    }
+
+    /// Insert edges for a (homogeneous) edge type.
+    pub fn put_edges(&self, et: EdgeType, edge_index: EdgeIndex) {
+        let mut g = self.inner.write().unwrap();
+        g.num_nodes.entry(et.src.clone()).or_insert(edge_index.num_nodes());
+        g.num_nodes.entry(et.dst.clone()).or_insert(edge_index.num_nodes());
+        g.edges.insert(et, EdgeEntry { edge_index, csr: None, csc: None, time: None });
+    }
+
+    /// Insert edges for a bipartite edge type whose endpoints were already
+    /// registered via `set_num_nodes`.
+    pub fn put_edges_bipartite(&self, et: EdgeType, edge_index: EdgeIndex) {
+        let mut g = self.inner.write().unwrap();
+        g.edges.insert(et, EdgeEntry { edge_index, csr: None, csc: None, time: None });
+    }
+
+    pub fn set_edge_time(&self, et: &EdgeType, time: Vec<i64>) -> Result<()> {
+        let mut g = self.inner.write().unwrap();
+        let e = g
+            .edges
+            .get_mut(et)
+            .ok_or_else(|| Error::Storage(format!("unknown edge type {}", et.key())))?;
+        if time.len() != e.edge_index.num_edges() {
+            return Err(Error::Storage("edge_time length mismatch".into()));
+        }
+        e.time = Some(Arc::new(time));
+        Ok(())
+    }
+
+    pub fn set_node_time(&self, node_type: &str, time: Vec<i64>) {
+        self.inner
+            .write()
+            .unwrap()
+            .node_time
+            .insert(node_type.into(), Arc::new(time));
+    }
+}
+
+impl GraphStore for InMemoryGraphStore {
+    fn edge_types(&self) -> Vec<EdgeType> {
+        self.inner.read().unwrap().edges.keys().cloned().collect()
+    }
+
+    fn num_nodes(&self, node_type: &str) -> Result<usize> {
+        self.inner
+            .read()
+            .unwrap()
+            .num_nodes
+            .get(node_type)
+            .copied()
+            .ok_or_else(|| Error::Storage(format!("unknown node type {node_type}")))
+    }
+
+    fn csr(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
+        // Fast path: cached.
+        {
+            let g = self.inner.read().unwrap();
+            if let Some(e) = g.edges.get(et) {
+                if let Some(c) = &e.csr {
+                    return Ok(Arc::clone(c));
+                }
+            } else {
+                return Err(Error::Storage(format!("unknown edge type {}", et.key())));
+            }
+        }
+        // Slow path: build under the write lock.
+        let mut g = self.inner.write().unwrap();
+        let n_src = *g.num_nodes.get(&et.src).unwrap_or(&0);
+        let e = g.edges.get_mut(et).unwrap();
+        if e.csr.is_none() {
+            e.csr = Some(Arc::new(compress_bipartite(
+                e.edge_index.src(),
+                e.edge_index.dst(),
+                n_src,
+            )));
+        }
+        Ok(Arc::clone(e.csr.as_ref().unwrap()))
+    }
+
+    fn csc(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
+        {
+            let g = self.inner.read().unwrap();
+            if let Some(e) = g.edges.get(et) {
+                if let Some(c) = &e.csc {
+                    return Ok(Arc::clone(c));
+                }
+            } else {
+                return Err(Error::Storage(format!("unknown edge type {}", et.key())));
+            }
+        }
+        let mut g = self.inner.write().unwrap();
+        let n_dst = *g.num_nodes.get(&et.dst).unwrap_or(&0);
+        let e = g.edges.get_mut(et).unwrap();
+        if e.csc.is_none() {
+            e.csc = Some(Arc::new(compress_bipartite(
+                e.edge_index.dst(),
+                e.edge_index.src(),
+                n_dst,
+            )));
+        }
+        Ok(Arc::clone(e.csc.as_ref().unwrap()))
+    }
+
+    fn edge_time(&self, et: &EdgeType) -> Result<Option<Arc<Vec<i64>>>> {
+        let g = self.inner.read().unwrap();
+        g.edges
+            .get(et)
+            .map(|e| e.time.clone())
+            .ok_or_else(|| Error::Storage(format!("unknown edge type {}", et.key())))
+    }
+
+    fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>> {
+        Ok(self.inner.read().unwrap().node_time.get(node_type).cloned())
+    }
+}
+
+/// Counting-sort compression by `group` over `n_group` buckets (bipartite-
+/// safe version of `EdgeIndex`'s internal compress).
+pub(crate) fn compress_bipartite(group: &[u32], other: &[u32], n_group: usize) -> Compressed {
+    let mut indptr = vec![0usize; n_group + 1];
+    for &g in group {
+        indptr[g as usize + 1] += 1;
+    }
+    for i in 0..n_group {
+        indptr[i + 1] += indptr[i];
+    }
+    let mut cursor = indptr.clone();
+    let mut indices = vec![0u32; group.len()];
+    let mut perm = vec![0u32; group.len()];
+    for (e, (&g, &o)) in group.iter().zip(other).enumerate() {
+        let pos = cursor[g as usize];
+        indices[pos] = o;
+        perm[pos] = e as u32;
+        cursor[g as usize] += 1;
+    }
+    Compressed { indptr, indices, perm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::tensor::Tensor;
+
+    fn toy_store() -> InMemoryGraphStore {
+        let ei = EdgeIndex::new(vec![0, 0, 1, 2], vec![1, 2, 2, 0], 3).unwrap();
+        let g = Graph::new(ei, Tensor::zeros(vec![3, 2])).unwrap();
+        InMemoryGraphStore::from_graph(&g)
+    }
+
+    #[test]
+    fn csc_gives_in_neighbors() {
+        let s = toy_store();
+        let csc = s.csc(&default_edge_type()).unwrap();
+        assert_eq!(csc.neighbors(2), &[0, 1]); // in-neighbors of node 2
+        assert_eq!(csc.neighbors(0), &[2]);
+    }
+
+    #[test]
+    fn caches_return_same_arc() {
+        let s = toy_store();
+        let a = s.csr(&default_edge_type()).unwrap();
+        let b = s.csr(&default_edge_type()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn unknown_edge_type_errors() {
+        let s = toy_store();
+        assert!(s.csr(&EdgeType::new("a", "b", "c")).is_err());
+    }
+
+    #[test]
+    fn bipartite_compress() {
+        // 2 users -> 3 items: edges (0->2), (1->0), (0->1)
+        let c = compress_bipartite(&[0, 1, 0], &[2, 0, 1], 2);
+        assert_eq!(c.indptr, vec![0, 2, 3]);
+        assert_eq!(c.neighbors(0), &[2, 1]);
+        assert_eq!(c.edge_ids(0), &[0, 2]);
+    }
+
+    #[test]
+    fn hetero_roundtrip() {
+        use crate::graph::HeteroGraph;
+        let mut hg = HeteroGraph::new();
+        hg.add_node_type("u", Tensor::zeros(vec![2, 2])).unwrap();
+        hg.add_node_type("i", Tensor::zeros(vec![3, 2])).unwrap();
+        let ei = EdgeIndex::new(vec![0, 1], vec![2, 0], 3).unwrap();
+        hg.add_edge_type(EdgeType::new("u", "buys", "i"), ei).unwrap();
+        let s = InMemoryGraphStore::from_hetero(&hg);
+        assert_eq!(s.num_nodes("u").unwrap(), 2);
+        assert_eq!(s.num_nodes("i").unwrap(), 3);
+        let csc = s.csc(&EdgeType::new("u", "buys", "i")).unwrap();
+        assert_eq!(csc.num_nodes(), 3); // grouped by destination type "i"
+        assert_eq!(csc.neighbors(2), &[0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Storage layer: the FeatureStore / GraphStore separation of concerns
+//! (§2.3) with in-memory, file-backed, and multi-modal implementations.
+//! The partitioned/distributed variants build on these in [`crate::dist`].
+
+pub mod feature_store;
+pub mod file_store;
+pub mod graph_store;
+pub mod tensor_frame;
+
+pub use feature_store::{FeatureKey, FeatureStore, InMemoryFeatureStore, DEFAULT_ATTR, DEFAULT_GROUP};
+pub use file_store::{FileFeatureStore, FileFeatureWriter};
+pub use graph_store::{default_edge_type, GraphStore, InMemoryGraphStore};
+pub use tensor_frame::{ColumnEncoder, TableEncoder};

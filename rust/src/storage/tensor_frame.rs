@@ -1,0 +1,185 @@
+//! TensorFrame-style multi-modal feature encoding (§3.1, PyTorch Frame).
+//!
+//! RDL nodes carry heterogeneous column types (numericals, categoricals,
+//! timestamps). The paper integrates PyTorch Frame into the FeatureStore so
+//! each row is encoded into a dense vector before message passing. This
+//! module provides that encoding: per-column encoders fused into one dense
+//! feature matrix, which then feeds an `InMemoryFeatureStore`.
+
+use crate::datasets::relational::{Column, Table};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Column encoding spec.
+#[derive(Clone, Debug)]
+pub enum ColumnEncoder {
+    /// z-score normalized scalar → 1 dim.
+    Numerical { mean: f32, std: f32 },
+    /// one-hot with given cardinality → `cardinality` dims.
+    OneHot { cardinality: u32 },
+    /// cyclic time encoding (sin/cos over the given period) + linear age →
+    /// 3 dims.
+    Timestamp { t_min: i64, t_max: i64 },
+}
+
+impl ColumnEncoder {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            ColumnEncoder::Numerical { .. } => 1,
+            ColumnEncoder::OneHot { cardinality } => *cardinality as usize,
+            ColumnEncoder::Timestamp { .. } => 3,
+        }
+    }
+
+    /// Fit an encoder to a column.
+    pub fn fit(col: &Column) -> Option<ColumnEncoder> {
+        match col {
+            Column::Num(v) => {
+                let n = v.len().max(1) as f32;
+                let mean = v.iter().sum::<f32>() / n;
+                let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+                Some(ColumnEncoder::Numerical { mean, std: var.sqrt().max(1e-6) })
+            }
+            Column::Cat { cardinality, .. } => {
+                Some(ColumnEncoder::OneHot { cardinality: *cardinality })
+            }
+            Column::Time(v) => {
+                let t_min = v.iter().copied().min().unwrap_or(0);
+                let t_max = v.iter().copied().max().unwrap_or(1);
+                Some(ColumnEncoder::Timestamp { t_min, t_max })
+            }
+            Column::Fk { .. } => None, // FKs become graph edges, not features
+        }
+    }
+
+    /// Encode one value (by row index) into `out`.
+    fn encode_into(&self, col: &Column, row: usize, out: &mut [f32]) {
+        match (self, col) {
+            (ColumnEncoder::Numerical { mean, std }, Column::Num(v)) => {
+                out[0] = (v[row] - mean) / std;
+            }
+            (ColumnEncoder::OneHot { cardinality }, Column::Cat { values, .. }) => {
+                let c = values[row].min(cardinality - 1) as usize;
+                out[c] = 1.0;
+            }
+            (ColumnEncoder::Timestamp { t_min, t_max }, Column::Time(v)) => {
+                let span = (*t_max - *t_min).max(1) as f32;
+                let rel = (v[row] - t_min) as f32 / span;
+                out[0] = rel;
+                out[1] = (rel * 2.0 * std::f32::consts::PI).sin();
+                out[2] = (rel * 2.0 * std::f32::consts::PI).cos();
+            }
+            _ => unreachable!("encoder/column type mismatch"),
+        }
+    }
+}
+
+/// A fitted multi-column encoder for one table.
+#[derive(Clone, Debug)]
+pub struct TableEncoder {
+    encoders: Vec<(String, ColumnEncoder)>,
+    out_dim: usize,
+}
+
+impl TableEncoder {
+    /// Fit to a table (FK columns are skipped — they become edges).
+    pub fn fit(table: &Table) -> Self {
+        let mut encoders = Vec::new();
+        let mut out_dim = 0;
+        for (name, col) in &table.columns {
+            if let Some(enc) = ColumnEncoder::fit(col) {
+                out_dim += enc.out_dim();
+                encoders.push((name.clone(), enc));
+            }
+        }
+        Self { encoders, out_dim }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Encode the whole table into a dense `[rows, out_dim]` matrix,
+    /// optionally padding the feature dim to `pad_dim`.
+    pub fn encode(&self, table: &Table, pad_dim: Option<usize>) -> Result<Tensor> {
+        let rows = table.num_rows();
+        let dim = pad_dim.unwrap_or(self.out_dim).max(self.out_dim);
+        let mut out = Tensor::zeros(vec![rows, dim]);
+        for r in 0..rows {
+            let mut off = 0;
+            for (name, enc) in &self.encoders {
+                let col = table
+                    .column(name)
+                    .ok_or_else(|| Error::Storage(format!("missing column {name}")))?;
+                enc.encode_into(col, r, &mut out.row_mut(r)[off..off + enc.out_dim()]);
+                off += enc.out_dim();
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_table() -> Table {
+        Table {
+            name: "t".into(),
+            columns: vec![
+                ("amount".into(), Column::Num(vec![1.0, 2.0, 3.0])),
+                (
+                    "kind".into(),
+                    Column::Cat { values: vec![0, 2, 1], cardinality: 3 },
+                ),
+                ("when".into(), Column::Time(vec![0, 50, 100])),
+                (
+                    "owner".into(),
+                    Column::Fk { table: "users".into(), rows: vec![0, 0, 1] },
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn fk_columns_are_skipped() {
+        let enc = TableEncoder::fit(&toy_table());
+        assert_eq!(enc.out_dim(), 1 + 3 + 3);
+    }
+
+    #[test]
+    fn encoding_layout() {
+        let t = toy_table();
+        let enc = TableEncoder::fit(&t);
+        let x = enc.encode(&t, None).unwrap();
+        assert_eq!(x.shape(), &[3, 7]);
+        // Numerical: z-scored mean 2 std sqrt(2/3)
+        assert!(x.at(1, 0).abs() < 1e-6);
+        // OneHot: row 1 has category 2 → position 1+2
+        assert_eq!(x.at(1, 3), 1.0);
+        assert_eq!(x.at(1, 1), 0.0);
+        // Timestamp rel for row 2 is 1.0
+        assert!((x.at(2, 4) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn padding_extends_dim() {
+        let t = toy_table();
+        let enc = TableEncoder::fit(&t);
+        let x = enc.encode(&t, Some(16)).unwrap();
+        assert_eq!(x.shape(), &[3, 16]);
+        assert_eq!(x.at(0, 15), 0.0);
+    }
+
+    #[test]
+    fn zscore_is_standardized() {
+        let col = Column::Num(vec![10.0, 20.0, 30.0, 40.0]);
+        let enc = ColumnEncoder::fit(&col).unwrap();
+        if let ColumnEncoder::Numerical { mean, std } = enc {
+            assert!((mean - 25.0).abs() < 1e-5);
+            assert!(std > 0.0);
+        } else {
+            panic!("wrong encoder");
+        }
+    }
+}

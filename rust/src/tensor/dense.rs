@@ -1,0 +1,268 @@
+//! Row-major dense tensors (`f32` and `i64`) for host-side batch assembly.
+
+use crate::error::{Error, Result};
+
+/// Row-major `f32` tensor with arbitrary rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        Self { shape, data: vec![0.0; numel] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let numel = shape.iter().product();
+        Self { shape, data: vec![v; numel] }
+    }
+
+    /// Glorot-style uniform init in `[-limit, limit]` (weight init for the
+    /// host-owned model parameters that feed the train-step HLO).
+    pub fn glorot(rows: usize, cols: usize, rng: &mut crate::util::Rng) -> Self {
+        let limit = (6.0 / (rows + cols) as f64).sqrt() as f32;
+        let data = (0..rows * cols)
+            .map(|_| (rng.f32() * 2.0 - 1.0) * limit)
+            .collect();
+        Self { shape: vec![rows, cols], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows (first dimension); 2-D accessors below.
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape.get(1).copied().unwrap_or(1)
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols() + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let cols = self.cols();
+        self.data[r * cols + c] = v;
+    }
+
+    /// Gather rows by index into a new tensor (feature fetch join).
+    pub fn gather_rows(&self, idx: &[usize]) -> Result<Tensor> {
+        let c = self.cols();
+        let mut data = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            if i >= self.rows() {
+                return Err(Error::Shape(format!("row {} out of {}", i, self.rows())));
+            }
+            data.extend_from_slice(self.row(i));
+        }
+        Tensor::new(vec![idx.len(), c], data)
+    }
+
+    /// Zero-pad (or truncate) the first dimension to exactly `n` rows —
+    /// the static-shape bucketing step before HLO execution.
+    pub fn pad_rows(&self, n: usize) -> Tensor {
+        let c = self.cols();
+        let mut data = self.data.clone();
+        data.resize(n * c, 0.0);
+        Tensor { shape: vec![n, c], data }
+    }
+
+    /// Write rows gathered from `src` at `idx` into `self[0..idx.len()]`
+    /// without allocating (loader hot-path variant of `gather_rows`).
+    pub fn gather_rows_into(&mut self, src: &Tensor, idx: &[usize]) -> Result<()> {
+        let c = self.cols();
+        if src.cols() != c {
+            return Err(Error::Shape(format!("cols {} != {}", src.cols(), c)));
+        }
+        if idx.len() > self.rows() {
+            return Err(Error::Shape(format!("{} rows > capacity {}", idx.len(), self.rows())));
+        }
+        for (out_r, &i) in idx.iter().enumerate() {
+            let dst_off = out_r * c;
+            self.data[dst_off..dst_off + c].copy_from_slice(src.row(i));
+        }
+        // Zero the padding tail so stale rows never leak across batches.
+        for r in idx.len()..self.rows() {
+            self.row_mut(r).fill(0.0);
+        }
+        Ok(())
+    }
+
+    /// Stack tensors along a new leading axis.
+    pub fn stack(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| Error::Shape("stack of nothing".into()))?;
+        let mut data = Vec::with_capacity(parts.len() * first.numel());
+        for p in parts {
+            if p.shape != first.shape {
+                return Err(Error::Shape("stack shape mismatch".into()));
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&first.shape);
+        Tensor::new(shape, data)
+    }
+
+    pub fn reshape(&self, shape: Vec<usize>) -> Result<Tensor> {
+        Tensor::new(shape, self.data.clone())
+    }
+}
+
+/// Row-major `i64` tensor (edge indices, node ids, labels, masks).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI64 {
+    shape: Vec<usize>,
+    data: Vec<i64>,
+}
+
+impl TensorI64 {
+    pub fn new(shape: Vec<usize>, data: Vec<i64>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        Self { shape, data: vec![0; numel] }
+    }
+
+    pub fn from_vec(data: Vec<i64>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i64] {
+        &mut self.data
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Pad (with `fill`) or truncate the last dimension to `n`.
+    pub fn pad_to(&self, n: usize, fill: i64) -> TensorI64 {
+        let mut data = self.data.clone();
+        data.resize(n, fill);
+        TensorI64 { shape: vec![n], data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn gather_and_pad() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let g = t.gather_rows(&[2, 0]).unwrap();
+        assert_eq!(g.data(), &[5., 6., 1., 2.]);
+        let p = g.pad_rows(4);
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(&p.data()[4..], &[0.0; 4]);
+        assert!(t.gather_rows(&[3]).is_err());
+    }
+
+    #[test]
+    fn gather_rows_into_zeroes_tail() {
+        let src = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let mut dst = Tensor::full(vec![3, 2], 9.0);
+        dst.gather_rows_into(&src, &[1]).unwrap();
+        assert_eq!(dst.data(), &[3., 4., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn stack_checks_shapes() {
+        let a = Tensor::zeros(vec![2, 2]);
+        let b = Tensor::zeros(vec![2, 2]);
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        let c = Tensor::zeros(vec![3, 2]);
+        assert!(Tensor::stack(&[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn glorot_within_limit() {
+        let mut rng = crate::util::Rng::new(1);
+        let w = Tensor::glorot(16, 32, &mut rng);
+        let limit = (6.0f64 / 48.0).sqrt() as f32 + 1e-6;
+        assert!(w.data().iter().all(|x| x.abs() <= limit));
+    }
+
+    #[test]
+    fn i64_pad() {
+        let t = TensorI64::from_vec(vec![5, 6]);
+        let p = t.pad_to(4, -1);
+        assert_eq!(p.data(), &[5, 6, -1, -1]);
+    }
+}

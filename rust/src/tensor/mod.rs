@@ -1,0 +1,13 @@
+//! Host-side dense tensors.
+//!
+//! The coordinator needs a small tensor type to slice features, pad
+//! mini-batches to the static shapes the AOT-compiled HLO expects, and to
+//! marshal data into `xla::Literal`s. Only the operations the pipeline hot
+//! path needs are implemented; anything numerical beyond that lives in the
+//! compiled HLO (L2/L1), never on the host.
+
+mod dense;
+mod ops;
+
+pub use dense::{Tensor, TensorI64};
+pub use ops::{argmax_rows, cosine_similarity, l2_normalize_rows, softmax_row, topk};

@@ -1,0 +1,104 @@
+//! Host-side numeric helpers used by post-processing (metrics, MIPS, RAG).
+//!
+//! Deliberately small: the training/inference math runs inside compiled
+//! HLO; these exist for evaluation and retrieval bookkeeping only.
+
+use super::Tensor;
+
+/// Argmax per row (predictions from a logits matrix).
+pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
+    (0..t.rows())
+        .map(|r| {
+            let row = t.row(r);
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// In-place row-wise L2 normalization (embedding preprocessing for MIPS).
+pub fn l2_normalize_rows(t: &mut Tensor) {
+    for r in 0..t.rows() {
+        let row = t.row_mut(r);
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for x in row {
+                *x /= norm;
+            }
+        }
+    }
+}
+
+/// Softmax of a single row/slice.
+pub fn softmax_row(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / s.max(1e-12)).collect()
+}
+
+/// Cosine similarity of two equal-length vectors.
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+}
+
+/// Indices of the `k` largest scores, descending (stable for ties by index).
+pub fn topk(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_per_row() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 2.0, -1.0, 1.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+
+    #[test]
+    fn l2_norm_makes_unit_rows() {
+        let mut t = Tensor::new(vec![1, 2], vec![3.0, 4.0]).unwrap();
+        l2_normalize_rows(&mut t);
+        assert!((t.row(0)[0] - 0.6).abs() < 1e-6);
+        assert!((t.row(0)[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let p = softmax_row(&[1000.0, 1000.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!((p[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosine_of_parallel_is_one() {
+        assert!((cosine_similarity(&[1.0, 2.0], &[2.0, 4.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine_similarity(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_descending_stable() {
+        assert_eq!(topk(&[0.1, 0.9, 0.5, 0.9], 3), vec![1, 3, 2]);
+        assert_eq!(topk(&[0.1], 5), vec![0]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, calibrated iteration counts, percentile reporting and a
+//! machine-readable JSON report, which the `rust/benches/*` binaries use to
+//! regenerate the paper's tables.
+
+use super::json::Json;
+use super::stats::Samples;
+use std::time::{Duration, Instant};
+
+/// One benchmark's configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock budget for the warmup phase.
+    pub warmup: Duration,
+    /// Wall-clock budget for the measurement phase.
+    pub measure: Duration,
+    /// Minimum number of measured samples regardless of budget.
+    pub min_samples: usize,
+    /// Maximum number of measured samples.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 1000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI/tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+
+    /// Honour `PYG2_BENCH_QUICK=1` for fast smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("PYG2_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of a single benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Samples,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.samples.mean() * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("n", Json::num(self.samples.len() as f64)),
+            ("mean_ms", Json::num(self.samples.mean() * 1e3)),
+            ("p50_ms", Json::num(self.samples.median() * 1e3)),
+            ("p95_ms", Json::num(self.samples.percentile(95.0) * 1e3)),
+            ("min_ms", Json::num(self.samples.min() * 1e3)),
+            ("max_ms", Json::num(self.samples.max() * 1e3)),
+        ])
+    }
+}
+
+/// A group of benchmarks printed as an aligned table plus JSON report.
+pub struct BenchSuite {
+    pub title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), cfg: BenchConfig::from_env(), results: Vec::new() }
+    }
+
+    pub fn with_config(title: impl Into<String>, cfg: BenchConfig) -> Self {
+        Self { title: title.into(), cfg, results: Vec::new() }
+    }
+
+    /// Run `f` under warmup + measurement and record the result.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        let name = name.into();
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Samples::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.cfg.measure || samples.len() < self.cfg.min_samples)
+            && samples.len() < self.cfg.max_samples
+        {
+            let t = Instant::now();
+            f();
+            samples.push_duration(t.elapsed());
+        }
+        eprintln!("  {:<44} {}", name, samples.summary_ms());
+        self.results.push(BenchResult { name, samples });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally computed scalar metric (e.g. accuracy) so it
+    /// lands in the JSON report alongside the timings.
+    pub fn record_metric(&mut self, name: impl Into<String>, value: f64) {
+        let mut s = Samples::new();
+        s.push(value);
+        self.results.push(BenchResult { name: name.into(), samples: s });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn find(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Ratio of two benches' mean times: `a / b` (how much slower a is).
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        Some(self.find(slow)?.samples.mean() / self.find(fast)?.samples.mean())
+    }
+
+    /// Print the summary table and write the JSON report file.
+    pub fn finish(&self) {
+        println!("\n== {} ==", self.title);
+        println!("{:<44} {:>10} {:>10} {:>10}", "benchmark", "mean(ms)", "p50(ms)", "p95(ms)");
+        for r in &self.results {
+            println!(
+                "{:<44} {:>10.3} {:>10.3} {:>10.3}",
+                r.name,
+                r.samples.mean() * 1e3,
+                r.samples.median() * 1e3,
+                r.samples.percentile(95.0) * 1e3
+            );
+        }
+        let report = Json::obj(vec![
+            ("suite", Json::str(self.title.clone())),
+            ("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+        ]);
+        let dir = std::path::Path::new("bench_reports");
+        let _ = std::fs::create_dir_all(dir);
+        let fname = dir.join(format!(
+            "{}.json",
+            self.title.to_lowercase().replace([' ', ':', '/'], "_")
+        ));
+        if let Err(e) = std::fs::write(&fname, report.to_string()) {
+            eprintln!("warn: could not write {}: {e}", fname.display());
+        } else {
+            println!("report: {}", fname.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut suite = BenchSuite::with_config(
+            "unit test suite",
+            BenchConfig {
+                warmup: Duration::from_millis(5),
+                measure: Duration::from_millis(20),
+                min_samples: 3,
+                max_samples: 50,
+            },
+        );
+        suite.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let r = suite.find("spin").unwrap();
+        assert!(r.samples.len() >= 3);
+        assert!(r.samples.mean() > 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut suite = BenchSuite::with_config(
+            "ratio",
+            BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                min_samples: 3,
+                max_samples: 20,
+            },
+        );
+        suite.bench("slow", || std::thread::sleep(Duration::from_micros(500)));
+        suite.bench("fast", || std::thread::sleep(Duration::from_micros(100)));
+        let s = suite.speedup("slow", "fast").unwrap();
+        assert!(s > 1.5, "speedup={s}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Foundation utilities built from scratch for the offline sandbox:
+//! PRNG, statistics, JSON, a TOML-subset config parser, thread pool +
+//! bounded channels, a micro-bench harness, and a property-test framework.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+
+pub use bench::{BenchConfig, BenchResult, BenchSuite};
+pub use pool::{BoundedQueue, ThreadPool};
+pub use rng::Rng;
+pub use stats::{Histogram, Samples};

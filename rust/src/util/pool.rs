@@ -1,0 +1,270 @@
+//! Thread pool and bounded channels for the data-loading pipeline.
+//!
+//! `tokio`/`rayon` are unavailable offline; the loader's concurrency model
+//! (PyG's DataLoader workers + prefetch queue) maps cleanly onto OS threads
+//! plus a bounded MPMC queue, which doubles as the backpressure mechanism:
+//! producers block when the queue is full, exactly like a prefetch factor.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Error returned when sending to a closed channel.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError;
+
+/// A bounded multi-producer multi-consumer channel.
+///
+/// `send` blocks while full (backpressure); `recv` blocks while empty and
+/// returns `None` once the channel is closed *and* drained.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueInner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Arc<Self> {
+        assert!(cap > 0, "queue capacity must be positive");
+        Arc::new(Self {
+            inner: Mutex::new(QueueInner { q: VecDeque::with_capacity(cap), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        })
+    }
+
+    /// Blocking send. Errors if the channel was closed.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(SendError);
+        }
+        g.q.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; `None` when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.q.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the channel: senders error, receivers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current queue depth (for instrumentation).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A fixed-size worker pool executing boxed jobs.
+///
+/// Jobs are `FnOnce() + Send`; results flow through caller-owned channels
+/// (the loader wires a `BoundedQueue<Batch>` through its jobs).
+pub struct ThreadPool {
+    job_tx: Arc<BoundedQueue<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        Self::with_queue_capacity(workers, workers.max(1) * 4)
+    }
+
+    pub fn with_queue_capacity(workers: usize, cap: usize) -> Self {
+        let workers = workers.max(1);
+        let job_tx = BoundedQueue::<Job>::new(cap);
+        let pending = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&job_tx);
+            let pend = Arc::clone(&pending);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pyg2-worker-{w}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                            pend.fetch_sub(1, Ordering::Release);
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { job_tx, handles, pending }
+    }
+
+    /// Submit a job; blocks if the job queue is full (backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.pending.fetch_add(1, Ordering::Acquire);
+        if self.job_tx.send(Box::new(job)).is_err() {
+            self.pending.fetch_sub(1, Ordering::Release);
+            panic!("submit on closed pool");
+        }
+    }
+
+    /// Number of submitted-but-unfinished jobs.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.job_tx.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn queue_fifo_and_close() {
+        let q = BoundedQueue::new(4);
+        q.send(1).unwrap();
+        q.send(2).unwrap();
+        assert_eq!(q.recv(), Some(1));
+        q.close();
+        assert_eq!(q.recv(), Some(2)); // drain after close
+        assert_eq!(q.recv(), None);
+        assert_eq!(q.send(3), Err(SendError));
+    }
+
+    #[test]
+    fn queue_blocks_when_full_until_consumed() {
+        let q = BoundedQueue::new(1);
+        q.send(0u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.send(1).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.recv(), Some(0));
+        t.join().unwrap();
+        assert_eq!(q.recv(), Some(1));
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_threads() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop closes + joins
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn mpmc_many_producers_consumers() {
+        let q = BoundedQueue::new(8);
+        let n_items = 1000;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 4 {
+                        q.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let got = Arc::new(AtomicU64::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let g = Arc::clone(&got);
+                std::thread::spawn(move || {
+                    while q.recv().is_some() {
+                        g.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(got.load(Ordering::Relaxed), n_items as u64);
+    }
+}

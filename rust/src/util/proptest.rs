@@ -1,0 +1,186 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Supports seeded case generation and greedy shrinking of failing inputs.
+//! Used by the coordinator-invariant tests (routing, batching, sampler
+//! state) per the repro mandate.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `PYG2_PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PYG2_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator of random test inputs with an optional shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values, tried in order during shrinking.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `cases` generated inputs; on failure, shrink and panic
+/// with the minimal failing case.
+pub fn check<G: Gen>(seed: u64, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    for case in 0..default_cases() {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(gen, input, msg, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}): {min_msg}\nminimal input: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut input: G::Value,
+    mut msg: String,
+    prop: &impl Fn(&G::Value) -> Result<(), String>,
+) -> (G::Value, String) {
+    // Greedy: keep taking the first failing shrink candidate; bail after a
+    // bounded number of rounds to stay fast.
+    for _ in 0..200 {
+        let mut progressed = false;
+        for cand in gen.shrink(&input) {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    (input, msg)
+}
+
+/// Generator: `usize` in `[lo, hi]`, shrinking toward `lo`.
+pub struct UsizeRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.index(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: vector with length in `[0, max_len]` of elements from `elem`,
+/// shrinking by halving the vector then shrinking elements.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.index(self.max_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[1..].to_vec());
+        // Shrink the first element as a representative.
+        for s in self.elem.shrink(&v[0]) {
+            let mut c = v.clone();
+            c[0] = s;
+            out.push(c);
+        }
+        out
+    }
+}
+
+/// Generator: pair of independent generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, &UsizeRange { lo: 0, hi: 100 }, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 51")]
+    fn failing_property_shrinks_to_minimum() {
+        // Fails for x > 50; minimal failing case is 51.
+        check(2, &UsizeRange { lo: 0, hi: 1000 }, |&x| {
+            if x <= 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} > 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let g = VecGen { elem: UsizeRange { lo: 0, hi: 9 }, max_len: 7 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() <= 7);
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+}

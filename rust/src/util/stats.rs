@@ -1,0 +1,192 @@
+//! Timing statistics for the bench harness and pipeline metrics.
+
+use std::time::Duration;
+
+/// Accumulates samples (in seconds) and reports summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn push_duration(&mut self, d: Duration) {
+        self.xs.push(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let v = self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.xs.len() - 1) as f64;
+        v.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Render as a one-line human summary in milliseconds.
+    pub fn summary_ms(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms min={:.3}ms max={:.3}ms",
+            self.len(),
+            self.mean() * 1e3,
+            self.median() * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.min() * 1e3,
+            self.max() * 1e3,
+        )
+    }
+}
+
+/// Online counter histogram with power-of-two buckets; cheap enough for
+/// hot-loop instrumentation (loader queue depths, batch sizes, ...).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64], count: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = (64 - v.leading_zeros()).min(63) as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v as f64;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the q-quantile.
+    pub fn quantile_upper_bound(&self, q: f64) -> u64 {
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target && self.count > 0 {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_of_known_values() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Samples::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!(s.percentile(95.0) > 94.0 && s.percentile(95.0) < 96.5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 499.5).abs() < 1e-9);
+        assert!(h.quantile_upper_bound(0.5) >= 256);
+        assert!(h.quantile_upper_bound(1.0) >= 512);
+    }
+
+    #[test]
+    fn empty_samples_are_nan_safe() {
+        let s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.is_empty());
+    }
+}

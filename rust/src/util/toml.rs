@@ -1,0 +1,221 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! The config system (see `crate::config`) consumes `[section]` tables with
+//! `key = value` entries where values are strings, integers, floats, bools,
+//! or flat arrays thereof. That subset covers every config this framework
+//! ships; nested tables-in-arrays and datetimes are intentionally not
+//! supported and produce a clear error.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`. Keys outside any `[section]` live under "".
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Document, String> {
+    let mut doc: Document = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        let val_src = line[eq + 1..].trim();
+        if key.is_empty() || val_src.is_empty() {
+            return Err(format!("line {}: empty key or value", lineno + 1));
+        }
+        let value = parse_value(val_src).map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(src: &str) -> Result<Value, String> {
+    let src = src.trim();
+    if let Some(inner) = src.strip_prefix('"') {
+        let end = inner
+            .find('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if !inner[end + 1..].trim().is_empty() {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(Value::Str(inner[..end].to_string()));
+    }
+    if let Some(inner) = src.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut out = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(out));
+    }
+    match src {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = src.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = src.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unsupported value `{src}` (subset: str/int/float/bool/flat array)"))
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if !s[start..].trim().is_empty() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            title = "run1"   # top-level
+            [train]
+            steps = 300
+            lr = 0.01
+            use_trim = true
+            fanouts = [10, 5]
+            names = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"].as_str(), Some("run1"));
+        assert_eq!(doc["train"]["steps"].as_i64(), Some(300));
+        assert_eq!(doc["train"]["lr"].as_f64(), Some(0.01));
+        assert_eq!(doc["train"]["use_trim"].as_bool(), Some(true));
+        let f = doc["train"]["fanouts"].as_arr().unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].as_i64(), Some(10));
+        assert_eq!(doc["train"]["names"].as_arr().unwrap()[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn hash_in_string_is_not_comment() {
+        let doc = parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["x"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = parse("a = 1\nb ==").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(parse("x = 1979-05-27").is_err());
+        assert!(parse("[a\nb = 1").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("n = 1_000_000").unwrap();
+        assert_eq!(doc[""]["n"].as_i64(), Some(1_000_000));
+    }
+}

@@ -1,0 +1,225 @@
+//! Property-based tests over the data pipeline using the in-crate
+//! mini-proptest framework: sampler invariants, batch layout invariants,
+//! loader determinism, partition coverage — the coordinator-state
+//! guarantees the paper's infrastructure relies on.
+
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::datasets::temporal::{self, TemporalConfig};
+use pyg2::loader::{Batch, ShapeBucket};
+use pyg2::partition::ldg_partition;
+use pyg2::sampler::{
+    NeighborSampler, NeighborSamplerConfig, TemporalNeighborSampler, TemporalSamplerConfig,
+    TemporalStrategy,
+};
+use pyg2::storage::{FeatureKey, GraphStore, InMemoryFeatureStore, InMemoryGraphStore};
+use pyg2::util::proptest::{check, Gen, PairGen, UsizeRange, VecGen};
+use pyg2::util::Rng;
+use std::sync::Arc;
+
+/// Generator for random sampler configurations.
+struct SamplerCfgGen;
+
+impl Gen for SamplerCfgGen {
+    type Value = (Vec<usize>, bool, u64);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let hops = 1 + rng.index(3);
+        let fanouts = (0..hops).map(|_| 1 + rng.index(6)).collect();
+        (fanouts, rng.index(2) == 0, rng.next_u64())
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0.len() > 1 {
+            out.push((v.0[..1].to_vec(), v.1, v.2));
+        }
+        if v.0.iter().any(|&f| f > 1) {
+            out.push((v.0.iter().map(|_| 1).collect(), v.1, v.2));
+        }
+        out
+    }
+}
+
+#[test]
+fn sampler_output_always_satisfies_invariants() {
+    let g = sbm::generate(&SbmConfig { num_nodes: 400, seed: 1, ..Default::default() }).unwrap();
+    let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+    check(11, &SamplerCfgGen, |(fanouts, disjoint, seed)| {
+        let sampler = NeighborSampler::new(
+            Arc::clone(&store),
+            NeighborSamplerConfig {
+                fanouts: fanouts.clone(),
+                disjoint: *disjoint,
+                seed: *seed,
+                ..Default::default()
+            },
+        );
+        let seeds: Vec<u32> = vec![seed.wrapping_mul(7) as u32 % 400, 3, 77];
+        let sub = sampler.sample(&seeds, 0).map_err(|e| e.to_string())?;
+        sub.check_invariants()?;
+        // Fanout bound: each hop adds at most frontier * fanout edges.
+        if sub.num_hops() != fanouts.len() {
+            return Err(format!("hops {} != {}", sub.num_hops(), fanouts.len()));
+        }
+        // Every sampled edge id must reference a real graph edge whose
+        // endpoints match the local relabeling.
+        for (k, &eid) in sub.edge_ids.iter().enumerate() {
+            let gs = g.edge_index.src()[eid as usize];
+            let gd = g.edge_index.dst()[eid as usize];
+            if sub.nodes[sub.row[k] as usize] != gs || sub.nodes[sub.col[k] as usize] != gd {
+                return Err(format!("edge {eid} endpoint mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_assembly_respects_bucket_for_any_fanouts() {
+    let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 2, ..Default::default() }).unwrap();
+    let labels = g.y.clone().unwrap();
+    let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+    let features = InMemoryFeatureStore::from_tensor(g.x.clone());
+    check(13, &SamplerCfgGen, |(fanouts, _, seed)| {
+        let bucket = ShapeBucket::for_sampling(4, fanouts);
+        let sampler = NeighborSampler::new(
+            Arc::clone(&store),
+            NeighborSamplerConfig { fanouts: fanouts.clone(), seed: *seed, ..Default::default() },
+        );
+        let sub = sampler.sample(&[1, 2, 3, 4], 9).map_err(|e| e.to_string())?;
+        let batch = Batch::assemble(sub, &features, &FeatureKey::default_x(), Some(&labels), &bucket)
+            .map_err(|e| e.to_string())?;
+        batch.check_invariants()?;
+        // Trim prefix property: the first edge_cum[h] edge slots contain
+        // exactly the real edges of hops <= h+1 (plus padding).
+        for h in 1..=bucket.num_hops() {
+            let (lo, hi) = bucket.edge_region(h);
+            let real_in_region = batch.mask[lo..hi].iter().filter(|&&m| m > 0.0).count();
+            let expected = if h == 1 {
+                batch.sub.edge_offsets[0]
+            } else {
+                batch.sub.edge_offsets[h - 1] - batch.sub.edge_offsets[h - 2]
+            };
+            if real_in_region != expected {
+                return Err(format!("hop {h}: {real_in_region} real edges, want {expected}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn temporal_sampler_never_leaks_future_for_any_strategy() {
+    let g = temporal::generate(&TemporalConfig {
+        num_nodes: 150,
+        num_events: 1500,
+        ..Default::default()
+    })
+    .unwrap();
+    let etimes = g.edge_time.clone().unwrap();
+    let store = Arc::new(InMemoryGraphStore::from_graph(&g));
+    let gen = PairGen(
+        VecGen { elem: UsizeRange { lo: 0, hi: 149 }, max_len: 6 },
+        UsizeRange { lo: 0, hi: 1500 },
+    );
+    check(17, &gen, |(seed_nodes, t0)| {
+        if seed_nodes.is_empty() {
+            return Ok(());
+        }
+        for strategy in [
+            TemporalStrategy::Uniform,
+            TemporalStrategy::MostRecent,
+            TemporalStrategy::Annealing { tau: 100.0 },
+        ] {
+            let sampler = TemporalNeighborSampler::new(
+                Arc::clone(&store),
+                TemporalSamplerConfig { fanouts: vec![4, 4], strategy, seed: 3 },
+            );
+            let seeds: Vec<u32> = seed_nodes.iter().map(|&s| s as u32).collect();
+            let times: Vec<i64> = seeds
+                .iter()
+                .enumerate()
+                .map(|(i, _)| (*t0 as i64 + i as i64 * 37) % 1500)
+                .collect();
+            let sub = sampler.sample(&seeds, &times, 5).map_err(|e| e.to_string())?;
+            sub.check_invariants()?;
+            let batch = sub.batch.as_ref().ok_or("temporal must be disjoint")?;
+            for (k, &eid) in sub.edge_ids.iter().enumerate() {
+                let tree = batch[sub.col[k] as usize] as usize;
+                if etimes[eid as usize] > times[tree] {
+                    return Err(format!(
+                        "strategy {strategy:?}: edge t={} leaked past seed t={}",
+                        etimes[eid as usize], times[tree]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_covers_all_nodes_for_any_part_count() {
+    let g = sbm::generate(&SbmConfig { num_nodes: 500, seed: 3, ..Default::default() }).unwrap();
+    check(19, &UsizeRange { lo: 1, hi: 16 }, |&parts| {
+        let p = ldg_partition(&g.edge_index, parts, 1.2).map_err(|e| e.to_string())?;
+        if p.assignment.len() != 500 {
+            return Err("missing assignments".into());
+        }
+        if p.assignment.iter().any(|&a| a as usize >= parts) {
+            return Err("assignment out of range".into());
+        }
+        let sizes = p.part_sizes();
+        if sizes.iter().sum::<usize>() != 500 {
+            return Err("sizes don't sum to n".into());
+        }
+        if parts > 1 && p.balance() > 1.35 {
+            return Err(format!("imbalance {}", p.balance()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn csc_view_matches_naive_transpose_on_random_graphs() {
+    struct GraphGen;
+    impl Gen for GraphGen {
+        type Value = (usize, Vec<(usize, usize)>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let n = 2 + rng.index(30);
+            let e = rng.index(80);
+            let edges = (0..e).map(|_| (rng.index(n), rng.index(n))).collect();
+            (n, edges)
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out = Vec::new();
+            if !v.1.is_empty() {
+                out.push((v.0, v.1[..v.1.len() / 2].to_vec()));
+                out.push((v.0, v.1[1..].to_vec()));
+            }
+            out
+        }
+    }
+    check(23, &GraphGen, |(n, edges)| {
+        let src: Vec<u32> = edges.iter().map(|&(s, _)| s as u32).collect();
+        let dst: Vec<u32> = edges.iter().map(|&(_, d)| d as u32).collect();
+        let ei = pyg2::graph::EdgeIndex::new(src.clone(), dst.clone(), *n)
+            .map_err(|e| e.to_string())?;
+        let csc = ei.csc();
+        // Naive: in-neighbors of v = all src where dst == v.
+        for v in 0..*n {
+            let mut want: Vec<u32> = edges
+                .iter()
+                .filter(|&&(_, d)| d == v)
+                .map(|&(s, _)| s as u32)
+                .collect();
+            let mut got: Vec<u32> = csc.neighbors(v).to_vec();
+            want.sort_unstable();
+            got.sort_unstable();
+            if want != got {
+                return Err(format!("node {v}: {got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
