@@ -1,0 +1,110 @@
+//! **D1** (§2.3): distributed loading over partitioned stores vs the
+//! single-store pipeline.
+//!
+//! Measures epoch throughput of the `DistNeighborLoader` at 2/4/8
+//! partitions against the local `NeighborLoader` baseline on the same
+//! seed set (outputs are batch-identical by construction, so this is a
+//! pure overhead/routing comparison), and reports the cross-partition
+//! message counts the `PartitionRouter` accumulates — the quantity a
+//! real deployment pays network latency for. LDG vs random partitioning
+//! traffic is reported for the rank-local-seed workload, where partition
+//! quality is what keeps sampling local.
+
+use pyg2::coordinator::partitioned_loader;
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::loader::{LoaderConfig, NeighborLoader};
+use pyg2::partition::{ldg_partition, random_partition};
+use pyg2::sampler::NeighborSamplerConfig;
+use pyg2::storage::{InMemoryFeatureStore, InMemoryGraphStore};
+use pyg2::util::BenchSuite;
+use std::sync::Arc;
+
+fn cfg() -> LoaderConfig {
+    LoaderConfig {
+        batch_size: 64,
+        num_workers: 2,
+        shuffle: false,
+        sampler: NeighborSamplerConfig { fanouts: vec![10, 5], ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("D1: dist partitioned loading");
+
+    let n = 10_000usize;
+    let g = sbm::generate(&SbmConfig { num_nodes: n, seed: 1, ..Default::default() }).unwrap();
+    let seeds: Vec<u32> = (0..1024).collect();
+
+    // Local single-store baseline.
+    let local = NeighborLoader::new(
+        Arc::new(InMemoryGraphStore::from_graph(&g)),
+        Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone())),
+        seeds.clone(),
+        cfg(),
+    );
+    let mut local_nodes = 0usize;
+    for b in local.iter_epoch(0) {
+        local_nodes += b.unwrap().num_real_nodes();
+    }
+    suite.bench("epoch_1024_seeds/local", || {
+        for b in local.iter_epoch(0) {
+            std::hint::black_box(b.unwrap());
+        }
+    });
+
+    // Partitioned pipeline at increasing partition counts.
+    for parts in [2usize, 4, 8] {
+        let partitioning = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let cut = partitioning.edge_cut(&g.edge_index);
+        let dist = partitioned_loader(&g, &partitioning, 0, seeds.clone(), cfg()).unwrap();
+        suite.bench(format!("epoch_1024_seeds/{parts}_partitions"), || {
+            for b in dist.iter_epoch(0) {
+                std::hint::black_box(b.unwrap());
+            }
+        });
+        // Traffic of exactly one epoch.
+        dist.reset_router_stats();
+        for b in dist.iter_epoch(0) {
+            std::hint::black_box(b.unwrap());
+        }
+        let stats = dist.router_stats();
+        println!(
+            "  {parts} partitions: edge-cut {cut:.3}, remote msgs {} ({} payload rows, \
+             {:.1}% of accesses remote)",
+            stats.remote_msgs,
+            stats.remote_rows,
+            100.0 * stats.remote_fraction()
+        );
+        suite.record_metric(format!("remote_msgs/{parts}_partitions"), stats.remote_msgs as f64);
+        suite.record_metric(format!("remote_rows/{parts}_partitions"), stats.remote_rows as f64);
+    }
+
+    // Partition quality -> traffic, on the realistic rank-local seed set.
+    for (name, partitioning) in [
+        ("ldg", ldg_partition(&g.edge_index, 4, 1.1).unwrap()),
+        ("random", random_partition(n, 4, 7)),
+    ] {
+        let mut rank_seeds = partitioning.nodes_of(0);
+        rank_seeds.truncate(1024);
+        let dist = partitioned_loader(&g, &partitioning, 0, rank_seeds, cfg()).unwrap();
+        for b in dist.iter_epoch(0) {
+            std::hint::black_box(b.unwrap());
+        }
+        let stats = dist.router_stats();
+        println!(
+            "  rank-local seeds, {name}-partitioned (cut {:.3}): {stats}",
+            partitioning.edge_cut(&g.edge_index)
+        );
+        suite.record_metric(format!("rank_local_remote_rows/{name}"), stats.remote_rows as f64);
+    }
+
+    suite.finish();
+    let t_local = suite.find("epoch_1024_seeds/local").unwrap().samples.mean();
+    println!(
+        "\nD1: local pipeline {:.2}M sampled-nodes/s; partitioned runs produce identical \
+         batches (tests/test_dist_equivalence.rs) while the message counts above quantify \
+         what a real cluster would ship over the network.",
+        local_nodes as f64 / t_local / 1e6
+    );
+}

@@ -67,6 +67,9 @@ COMMANDS:
               --trim  --epochs N  --config file.toml  --workers N
   partition   partition an SBM graph and report edge-cut/balance
               --nodes N --parts K
+  dist        run the distributed loading pipeline over a partitioned
+              SBM graph and report cross-partition traffic
+              --nodes N --parts K --batch N --workers N --epochs N
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
   info        print manifest/artifact summary

@@ -243,6 +243,35 @@ pub fn default_loader(
     loader
 }
 
+/// The partitioned serving path (§2.3): wire a graph through the full
+/// distributed stack — one shared [`crate::dist::PartitionRouter`],
+/// partitioned feature + graph stores, and a
+/// [`crate::dist::DistNeighborLoader`] — viewed from `local_rank`.
+///
+/// With the same [`LoaderConfig`] this yields batches identical to the
+/// single-store loader; the returned loader's `router_stats()` report the
+/// cross-partition traffic the partitioning saved or cost.
+pub fn partitioned_loader(
+    graph: &crate::graph::Graph,
+    partitioning: &crate::partition::Partitioning,
+    local_rank: u32,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+) -> Result<crate::dist::DistNeighborLoader> {
+    use crate::dist::{DistNeighborLoader, PartitionRouter, PartitionedFeatureStore, PartitionedGraphStore};
+    use std::sync::Arc;
+
+    let router = Arc::new(PartitionRouter::new(partitioning, local_rank)?);
+    let gs = Arc::new(PartitionedGraphStore::from_graph(graph, Arc::clone(&router))?);
+    let src_features = crate::storage::InMemoryFeatureStore::from_tensor(graph.x.clone());
+    let fs = Arc::new(PartitionedFeatureStore::partition(&src_features, router)?);
+    let mut loader = DistNeighborLoader::new(gs, fs, seeds, cfg);
+    if let Some(y) = &graph.y {
+        loader = loader.with_labels(y.clone());
+    }
+    Ok(loader)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,315 @@
+//! `PartitionedFeatureStore` — the feature half of §2.3's distributed
+//! backend: rows are sharded across partitions by node ownership and
+//! every `get` routes each requested row to its owning shard through the
+//! [`PartitionRouter`], reassembling results in request order.
+//!
+//! Requests are *coalesced*: one simulated RPC per remote partition
+//! touched per call (the payload rows are counted separately), matching
+//! how a real RPC-backed store batches its fetches. The local partition
+//! is served first and costs no RPC.
+
+use super::PartitionRouter;
+use crate::error::{Error, Result};
+use crate::storage::{FeatureKey, FeatureStore};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Tuning knobs of the partitioned store's simulated cluster.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PartitionedStoreConfig {
+    /// Simulated network round-trip cost charged per remote RPC (each
+    /// coalesced per-partition fetch sleeps this long). Zero by default
+    /// so the seed-fixed equivalence pipeline pays no wall-clock tax.
+    pub latency: Duration,
+}
+
+/// A feature store sharded row-wise across partitions.
+///
+/// Implements [`FeatureStore`], so the loader/trainer/server stack works
+/// unchanged on top of it — the §2.3 "swap the backend, keep the loop"
+/// property the paper builds its scalability story on.
+pub struct PartitionedFeatureStore {
+    shards: Vec<Arc<dyn FeatureStore>>,
+    router: Arc<PartitionRouter>,
+    /// Row of global node `v` within its owning shard.
+    local_row: Vec<u32>,
+    /// Simulated per-RPC latency (see [`PartitionedStoreConfig`]).
+    latency: Duration,
+}
+
+impl PartitionedFeatureStore {
+    /// Shard every feature group of `src` by the router's ownership
+    /// vector. Every group must have exactly one row per partitioned
+    /// node (this store models node-aligned features; differently sized
+    /// groups would need their own partitioning and are rejected).
+    pub fn partition(src: &dyn FeatureStore, router: Arc<PartitionRouter>) -> Result<Self> {
+        let n = router.num_nodes();
+        let parts = router.num_parts();
+
+        // Owned global rows per partition (ascending) + global->local map.
+        let mut owned: Vec<Vec<usize>> = vec![Vec::new(); parts];
+        let mut local_row = vec![0u32; n];
+        for v in 0..n {
+            let p = router.owner(v as u32) as usize;
+            local_row[v] = owned[p].len() as u32;
+            owned[p].push(v);
+        }
+
+        let shard_stores: Vec<crate::storage::InMemoryFeatureStore> =
+            (0..parts).map(|_| crate::storage::InMemoryFeatureStore::new()).collect();
+        for key in src.keys() {
+            let rows = src.num_rows(&key)?;
+            if rows != n {
+                return Err(Error::Storage(format!(
+                    "cannot partition group {key:?}: {rows} rows != {n} partitioned nodes"
+                )));
+            }
+            for (p, idx) in owned.iter().enumerate() {
+                shard_stores[p].put(key.clone(), src.get(&key, idx)?);
+            }
+        }
+
+        Ok(Self {
+            shards: shard_stores
+                .into_iter()
+                .map(|s| Arc::new(s) as Arc<dyn FeatureStore>)
+                .collect(),
+            router,
+            local_row,
+            latency: Duration::ZERO,
+        })
+    }
+
+    /// Self-contained constructor used by benches and quick experiments:
+    /// shard one feature group `(key, x)` by `partitioning`, viewed from
+    /// rank 0, with the configured simulated RPC latency charged on every
+    /// coalesced remote fetch.
+    pub fn build(
+        key: FeatureKey,
+        x: &Tensor,
+        partitioning: &crate::partition::Partitioning,
+        cfg: PartitionedStoreConfig,
+    ) -> Result<Self> {
+        let router = Arc::new(PartitionRouter::new(partitioning, 0)?);
+        let src = crate::storage::InMemoryFeatureStore::new();
+        src.put(key, x.clone());
+        let mut store = Self::partition(&src, router)?;
+        store.latency = cfg.latency;
+        Ok(store)
+    }
+
+    /// The shared router (traffic counters live here).
+    pub fn router(&self) -> &Arc<PartitionRouter> {
+        &self.router
+    }
+
+    /// Number of partitions backing this store.
+    pub fn num_parts(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Route `idx` to owning shards and write row `k` of the result into
+    /// `out` row `k` for `k < idx.len()`. `out` must already be `[>=
+    /// idx.len(), F]`; rows past `idx.len()` are left untouched.
+    fn fetch_rows(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
+        let parts = self.shards.len();
+        let local = self.router.local_rank() as usize;
+
+        // Bucket request positions by owning partition (order-preserving;
+        // validates every row id).
+        let buckets = self.router.group_positions_by_owner(idx)?;
+
+        // Local-first: the local shard is read directly, then one
+        // coalesced (simulated) RPC per remote partition touched.
+        for p in std::iter::once(local).chain((0..parts).filter(|&p| p != local)) {
+            let positions = &buckets[p];
+            if positions.is_empty() {
+                continue;
+            }
+            let shard_idx: Vec<usize> = positions
+                .iter()
+                .map(|&pos| self.local_row[idx[pos]] as usize)
+                .collect();
+            let fetched = self.shards[p].get(key, &shard_idx)?;
+            for (k, &pos) in positions.iter().enumerate() {
+                out.row_mut(pos).copy_from_slice(fetched.row(k));
+            }
+            if p == local {
+                self.router.record_local();
+            } else {
+                self.router.record_remote(positions.len() as u64);
+                if !self.latency.is_zero() {
+                    // Simulated network round trip for this RPC.
+                    std::thread::sleep(self.latency);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FeatureStore for PartitionedFeatureStore {
+    fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor> {
+        let f = self.feature_dim(key)?;
+        let mut out = Tensor::zeros(vec![idx.len(), f]);
+        self.fetch_rows(key, idx, &mut out)?;
+        Ok(out)
+    }
+
+    fn get_into(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
+        let f = self.feature_dim(key)?;
+        if out.cols() != f {
+            return Err(Error::Shape(format!("cols {} != {}", out.cols(), f)));
+        }
+        if idx.len() > out.rows() {
+            return Err(Error::Shape(format!(
+                "{} rows > capacity {}",
+                idx.len(),
+                out.rows()
+            )));
+        }
+        self.fetch_rows(key, idx, out)?;
+        // Padding contract: rows past idx.len() are zeroed.
+        for r in idx.len()..out.rows() {
+            out.row_mut(r).fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
+        self.shards[0].feature_dim(key)
+    }
+
+    fn num_rows(&self, key: &FeatureKey) -> Result<usize> {
+        // Validate the key exists, then report the global row count.
+        self.shards[0].feature_dim(key)?;
+        Ok(self.local_row.len())
+    }
+
+    fn keys(&self) -> Vec<FeatureKey> {
+        self.shards[0].keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Partitioning;
+    use crate::storage::InMemoryFeatureStore;
+
+    fn src_store(n: usize, f: usize) -> InMemoryFeatureStore {
+        let data: Vec<f32> = (0..n * f).map(|i| i as f32).collect();
+        InMemoryFeatureStore::from_tensor(Tensor::new(vec![n, f], data).unwrap())
+    }
+
+    fn partitioned(n: usize, parts: usize) -> PartitionedFeatureStore {
+        let assignment = (0..n).map(|v| (v % parts) as u32).collect();
+        let p = Partitioning { assignment, num_parts: parts };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        PartitionedFeatureStore::partition(&src_store(n, 3), router).unwrap()
+    }
+
+    #[test]
+    fn get_matches_unpartitioned_source() {
+        let n = 20;
+        let src = src_store(n, 3);
+        let part = partitioned(n, 4);
+        let idx = [7usize, 0, 13, 13, 19, 2];
+        let a = src.get(&FeatureKey::default_x(), &idx).unwrap();
+        let b = part.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_eq!(part.feature_dim(&FeatureKey::default_x()).unwrap(), 3);
+        assert_eq!(part.num_rows(&FeatureKey::default_x()).unwrap(), n);
+    }
+
+    #[test]
+    fn routes_count_coalesced_messages() {
+        let part = partitioned(12, 3); // local rank 0 owns 0,3,6,9
+        part.router().reset_stats();
+        // Rows 0, 3 are local; 1, 4 live on part 1; 2 on part 2.
+        part.get(&FeatureKey::default_x(), &[0, 1, 2, 3, 4]).unwrap();
+        let s = part.router().stats();
+        assert_eq!(s.local_msgs, 1, "one local access");
+        assert_eq!(s.remote_msgs, 2, "one coalesced RPC per remote partition");
+        assert_eq!(s.remote_rows, 3, "rows 1, 4 and 2");
+    }
+
+    #[test]
+    fn purely_local_requests_cost_no_rpc() {
+        let part = partitioned(12, 3);
+        part.router().reset_stats();
+        part.get(&FeatureKey::default_x(), &[0, 3, 6, 9]).unwrap();
+        let s = part.router().stats();
+        assert_eq!(s.remote_msgs, 0);
+        assert_eq!(s.local_msgs, 1);
+    }
+
+    #[test]
+    fn get_into_pads_and_validates() {
+        let part = partitioned(10, 2);
+        let mut out = Tensor::full(vec![4, 3], 9.0);
+        part.get_into(&FeatureKey::default_x(), &[5], &mut out).unwrap();
+        // Row 0 = features of node 5 (source values 15, 16, 17).
+        assert_eq!(out.row(0), &[15.0, 16.0, 17.0]);
+        for r in 1..4 {
+            assert_eq!(out.row(r), &[0.0; 3], "row {r} must be zero padding");
+        }
+        // Capacity / shape violations error.
+        let mut small = Tensor::zeros(vec![1, 3]);
+        assert!(part
+            .get_into(&FeatureKey::default_x(), &[1, 2], &mut small)
+            .is_err());
+        let mut wrong_cols = Tensor::zeros(vec![4, 2]);
+        assert!(part
+            .get_into(&FeatureKey::default_x(), &[1], &mut wrong_cols)
+            .is_err());
+    }
+
+    #[test]
+    fn out_of_range_row_errors() {
+        let part = partitioned(10, 2);
+        assert!(part.get(&FeatureKey::default_x(), &[10]).is_err());
+        let mut out = Tensor::zeros(vec![2, 3]);
+        assert!(part
+            .get_into(&FeatureKey::default_x(), &[10], &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn build_shards_one_group_with_latency_config() {
+        let n = 12;
+        let x = src_store(n, 3).get(&FeatureKey::default_x(), &(0..n).collect::<Vec<_>>()).unwrap();
+        let p = Partitioning {
+            assignment: (0..n).map(|v| (v % 4) as u32).collect(),
+            num_parts: 4,
+        };
+        let store = PartitionedFeatureStore::build(
+            FeatureKey::default_x(),
+            &x,
+            &p,
+            PartitionedStoreConfig { latency: std::time::Duration::from_micros(1) },
+        )
+        .unwrap();
+        assert_eq!(store.num_parts(), 4);
+        let got = store.get(&FeatureKey::default_x(), &[11, 0, 5]).unwrap();
+        assert_eq!(got.row(0), x.row(11));
+        assert_eq!(got.row(1), x.row(0));
+        assert_eq!(got.row(2), x.row(5));
+        assert!(store.router().stats().remote_msgs > 0);
+    }
+
+    #[test]
+    fn missing_key_and_misaligned_group_error() {
+        let part = partitioned(10, 2);
+        assert!(part.get(&FeatureKey::new("nope", "x"), &[0]).is_err());
+
+        // A group whose row count differs from the node count is rejected
+        // at partition time.
+        let src = src_store(10, 3);
+        src.put(FeatureKey::new("item", "x"), Tensor::zeros(vec![4, 2]));
+        let p = Partitioning { assignment: vec![0; 10], num_parts: 1 };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        assert!(PartitionedFeatureStore::partition(&src, router).is_err());
+    }
+}

@@ -1,0 +1,297 @@
+//! `PartitionedGraphStore` — the topology half of §2.3's distributed
+//! backend.
+//!
+//! Edges are sharded by node ownership the way PyG's `torch_geometric.
+//! distributed` partitions its adjacency: a partition holds the
+//! *in-edges* of the destinations it owns (the direction neighbor
+//! sampling traverses) and the *out-edges* of the sources it owns (for
+//! bidirectional expansion). Each shard keys its compressed views by
+//! **global** node id and stores **global** edge ids, so a shard-local
+//! adjacency slice is bit-identical to the corresponding range of the
+//! merged global CSC/CSR — the property the seed-fixed local/distributed
+//! equivalence rests on.
+//!
+//! The store also implements [`GraphStore`] by serving merged global
+//! views, so non-partition-aware components (plain `NeighborSampler`,
+//! the inference server) can run over it unchanged.
+
+use super::PartitionRouter;
+use crate::error::{Error, Result};
+use crate::graph::{Compressed, EdgeIndex, EdgeType};
+use crate::storage::graph_store::compress_bipartite;
+use crate::storage::{default_edge_type, GraphStore};
+use std::sync::{Arc, OnceLock};
+
+/// One partition's share of the topology.
+struct GraphShard {
+    /// In-edges of owned destinations: CSC keyed by global dst id
+    /// (`indptr` spans all nodes; only owned nodes have entries),
+    /// `indices` = global src ids, `perm` = global edge ids.
+    csc: Compressed,
+    /// Out-edges of owned sources: CSR keyed by global src id.
+    csr: Compressed,
+}
+
+/// Graph topology sharded across partitions, with merged global views.
+pub struct PartitionedGraphStore {
+    shards: Vec<GraphShard>,
+    router: Arc<PartitionRouter>,
+    num_nodes: usize,
+    /// Original COO (kept to build the merged views exactly as the
+    /// single-store path would).
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    edge_time: Option<Arc<Vec<i64>>>,
+    node_time: Option<Arc<Vec<i64>>>,
+    global_csr: OnceLock<Arc<Compressed>>,
+    global_csc: OnceLock<Arc<Compressed>>,
+}
+
+impl PartitionedGraphStore {
+    /// Shard a homogeneous edge index by the router's ownership vector.
+    pub fn from_edge_index(edges: &EdgeIndex, router: Arc<PartitionRouter>) -> Result<Self> {
+        let n = edges.num_nodes();
+        if router.num_nodes() != n {
+            return Err(Error::Storage(format!(
+                "partitioning covers {} nodes, graph has {n}",
+                router.num_nodes()
+            )));
+        }
+        let parts = router.num_parts();
+        let src = edges.src().to_vec();
+        let dst = edges.dst().to_vec();
+
+        // One pass over the edge list, bucketed by owner. Bucketing
+        // preserves original edge order within each partition, so the
+        // per-node neighbor lists produced by the stable counting sort
+        // match the global views slice-for-slice.
+        let mut in_buckets: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> =
+            (0..parts).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        let mut out_buckets: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> =
+            (0..parts).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        for (e, (&s, &d)) in src.iter().zip(&dst).enumerate() {
+            let (in_src, in_dst, in_eid) = &mut in_buckets[router.owner(d) as usize];
+            in_src.push(s);
+            in_dst.push(d);
+            in_eid.push(e as u32);
+            let (out_src, out_dst, out_eid) = &mut out_buckets[router.owner(s) as usize];
+            out_src.push(s);
+            out_dst.push(d);
+            out_eid.push(e as u32);
+        }
+        let mut shards = Vec::with_capacity(parts);
+        for ((in_src, in_dst, in_eid), (out_src, out_dst, out_eid)) in
+            in_buckets.into_iter().zip(out_buckets)
+        {
+            let mut csc = compress_bipartite(&in_dst, &in_src, n);
+            for slot in csc.perm.iter_mut() {
+                *slot = in_eid[*slot as usize];
+            }
+            let mut csr = compress_bipartite(&out_src, &out_dst, n);
+            for slot in csr.perm.iter_mut() {
+                *slot = out_eid[*slot as usize];
+            }
+            shards.push(GraphShard { csc, csr });
+        }
+
+        Ok(Self {
+            shards,
+            router,
+            num_nodes: n,
+            src,
+            dst,
+            edge_time: None,
+            node_time: None,
+            global_csr: OnceLock::new(),
+            global_csc: OnceLock::new(),
+        })
+    }
+
+    /// Shard a [`crate::graph::Graph`], carrying its temporal attributes.
+    pub fn from_graph(g: &crate::graph::Graph, router: Arc<PartitionRouter>) -> Result<Self> {
+        let mut s = Self::from_edge_index(&g.edge_index, router)?;
+        s.edge_time = g.edge_time.clone().map(Arc::new);
+        s.node_time = g.node_time.clone().map(Arc::new);
+        Ok(s)
+    }
+
+    /// The shared router (traffic counters live here).
+    pub fn router(&self) -> &Arc<PartitionRouter> {
+        &self.router
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// In-neighbors of `v` served by its owning shard:
+    /// `(global src ids, global edge ids)`. Does **not** touch the
+    /// traffic counters — the caller decides how accesses coalesce into
+    /// messages (see [`crate::dist::DistNeighborSampler`]).
+    pub fn in_slice(&self, v: u32) -> (&[u32], &[u32]) {
+        let shard = &self.shards[self.router.owner(v) as usize];
+        let (lo, hi) = (shard.csc.indptr[v as usize], shard.csc.indptr[v as usize + 1]);
+        (&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi])
+    }
+
+    /// Out-neighbors of `v` served by its owning shard.
+    pub fn out_slice(&self, v: u32) -> (&[u32], &[u32]) {
+        let shard = &self.shards[self.router.owner(v) as usize];
+        let (lo, hi) = (shard.csr.indptr[v as usize], shard.csr.indptr[v as usize + 1]);
+        (&shard.csr.indices[lo..hi], &shard.csr.perm[lo..hi])
+    }
+
+    /// Number of edges whose endpoints live on different partitions (the
+    /// traffic-generating edges; equals `edge_cut * num_edges`).
+    pub fn num_cut_edges(&self) -> usize {
+        self.src
+            .iter()
+            .zip(&self.dst)
+            .filter(|(&s, &d)| self.router.owner(s) != self.router.owner(d))
+            .count()
+    }
+
+    fn check_edge_type(&self, et: &EdgeType) -> Result<()> {
+        if *et != default_edge_type() {
+            return Err(Error::Storage(format!(
+                "partitioned store only holds the homogeneous edge type, not {}",
+                et.key()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl GraphStore for PartitionedGraphStore {
+    fn edge_types(&self) -> Vec<EdgeType> {
+        vec![default_edge_type()]
+    }
+
+    fn num_nodes(&self, node_type: &str) -> Result<usize> {
+        if node_type == default_edge_type().src {
+            Ok(self.num_nodes)
+        } else {
+            Err(Error::Storage(format!("unknown node type {node_type}")))
+        }
+    }
+
+    fn csr(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
+        self.check_edge_type(et)?;
+        Ok(Arc::clone(self.global_csr.get_or_init(|| {
+            Arc::new(compress_bipartite(&self.src, &self.dst, self.num_nodes))
+        })))
+    }
+
+    fn csc(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
+        self.check_edge_type(et)?;
+        Ok(Arc::clone(self.global_csc.get_or_init(|| {
+            Arc::new(compress_bipartite(&self.dst, &self.src, self.num_nodes))
+        })))
+    }
+
+    fn edge_time(&self, et: &EdgeType) -> Result<Option<Arc<Vec<i64>>>> {
+        self.check_edge_type(et)?;
+        Ok(self.edge_time.clone())
+    }
+
+    fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>> {
+        if node_type == default_edge_type().src {
+            Ok(self.node_time.clone())
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::partition::{ldg_partition, Partitioning};
+    use crate::storage::InMemoryGraphStore;
+
+    fn sbm_stores(parts: usize) -> (InMemoryGraphStore, PartitionedGraphStore) {
+        let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 21, ..Default::default() })
+            .unwrap();
+        let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        let part = PartitionedGraphStore::from_graph(&g, router).unwrap();
+        (InMemoryGraphStore::from_graph(&g), part)
+    }
+
+    #[test]
+    fn merged_views_match_in_memory_store() {
+        let (mem, part) = sbm_stores(4);
+        let et = default_edge_type();
+        assert_eq!(*mem.csc(&et).unwrap(), *part.csc(&et).unwrap());
+        assert_eq!(*mem.csr(&et).unwrap(), *part.csr(&et).unwrap());
+        assert_eq!(
+            mem.num_nodes("_default").unwrap(),
+            part.num_nodes("_default").unwrap()
+        );
+    }
+
+    #[test]
+    fn shard_slices_equal_global_ranges() {
+        let (mem, part) = sbm_stores(4);
+        let csc = mem.csc(&default_edge_type()).unwrap();
+        let csr = mem.csr(&default_edge_type()).unwrap();
+        for v in 0..300u32 {
+            let (nbrs, eids) = part.in_slice(v);
+            assert_eq!(nbrs, csc.neighbors(v as usize), "in-nbrs of {v}");
+            assert_eq!(eids, csc.edge_ids(v as usize), "in-eids of {v}");
+            let (nbrs, eids) = part.out_slice(v);
+            assert_eq!(nbrs, csr.neighbors(v as usize), "out-nbrs of {v}");
+            assert_eq!(eids, csr.edge_ids(v as usize), "out-eids of {v}");
+        }
+    }
+
+    #[test]
+    fn every_edge_assigned_to_exactly_one_in_shard() {
+        let (_, part) = sbm_stores(3);
+        let mut total = 0usize;
+        for shard in &part.shards {
+            total += shard.csc.num_edges();
+        }
+        assert_eq!(total, part.src.len());
+    }
+
+    #[test]
+    fn cut_edge_count_matches_partitioning() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 200, seed: 5, ..Default::default() })
+            .unwrap();
+        let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        let part = PartitionedGraphStore::from_edge_index(&g.edge_index, router).unwrap();
+        let expect = (p.edge_cut(&g.edge_index) * g.num_edges() as f64).round() as usize;
+        assert_eq!(part.num_cut_edges(), expect);
+    }
+
+    #[test]
+    fn single_partition_is_degenerate_but_valid() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 50, seed: 1, ..Default::default() })
+            .unwrap();
+        let p = Partitioning { assignment: vec![0; 50], num_parts: 1 };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        let part = PartitionedGraphStore::from_graph(&g, router).unwrap();
+        assert_eq!(part.num_cut_edges(), 0);
+        let csc = part.csc(&default_edge_type()).unwrap();
+        assert_eq!(csc.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn foreign_edge_and_node_types_rejected() {
+        let (_, part) = sbm_stores(2);
+        assert!(part.csr(&EdgeType::new("a", "b", "c")).is_err());
+        assert!(part.num_nodes("user").is_err());
+    }
+
+    #[test]
+    fn mismatched_partitioning_rejected() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 50, seed: 2, ..Default::default() })
+            .unwrap();
+        let p = Partitioning { assignment: vec![0; 49], num_parts: 1 };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        assert!(PartitionedGraphStore::from_edge_index(&g.edge_index, router).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! `DistNeighborLoader`: the distributed end of Figure 1's pipeline.
+//!
+//! Seed batches → partition-aware sampling ([`DistNeighborSampler`]) →
+//! routed feature fetch ([`PartitionedFeatureStore`]) → join + pad →
+//! prefetch queue. The worker-pool / bounded-queue / in-order-delivery
+//! machinery is shared with [`crate::loader::NeighborLoader`] (same
+//! [`crate::loader::BatchIter`]), and the epoch shuffling and per-batch
+//! seeding are reproduced exactly, so a `DistNeighborLoader` with the
+//! same [`LoaderConfig`] yields batches identical to the single-store
+//! loader — while every cross-partition row/edge transfer is accounted
+//! on the shared [`crate::dist::PartitionRouter`].
+
+use super::feature_store::PartitionedFeatureStore;
+use super::graph_store::PartitionedGraphStore;
+use super::sampler::DistNeighborSampler;
+use super::RouterStats;
+use crate::error::Result;
+use crate::loader::neighbor_loader::{batch_seed, epoch_seed_batches};
+use crate::loader::{Batch, BatchIter, LoaderConfig, ShapeBucket, Transform};
+use crate::storage::FeatureKey;
+use crate::util::{BoundedQueue, ThreadPool};
+use std::sync::Arc;
+
+/// Neighbor loader over partitioned feature + graph stores.
+pub struct DistNeighborLoader {
+    graph: Arc<PartitionedGraphStore>,
+    features: Arc<PartitionedFeatureStore>,
+    feature_key: FeatureKey,
+    labels: Option<Arc<Vec<i64>>>,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    bucket: ShapeBucket,
+    transforms: Vec<Transform>,
+}
+
+impl DistNeighborLoader {
+    pub fn new(
+        graph: Arc<PartitionedGraphStore>,
+        features: Arc<PartitionedFeatureStore>,
+        seeds: Vec<u32>,
+        cfg: LoaderConfig,
+    ) -> Self {
+        let bucket = cfg
+            .bucket
+            .clone()
+            .unwrap_or_else(|| ShapeBucket::for_sampling(cfg.batch_size, &cfg.sampler.fanouts));
+        Self {
+            graph,
+            features,
+            feature_key: FeatureKey::default_x(),
+            labels: None,
+            seeds,
+            cfg,
+            bucket,
+            transforms: Vec::new(),
+        }
+    }
+
+    pub fn with_labels(mut self, labels: Vec<i64>) -> Self {
+        self.labels = Some(Arc::new(labels));
+        self
+    }
+
+    pub fn with_feature_key(mut self, key: FeatureKey) -> Self {
+        self.feature_key = key;
+        self
+    }
+
+    pub fn with_transform(mut self, t: Transform) -> Self {
+        self.transforms.push(t);
+        self
+    }
+
+    pub fn bucket(&self) -> &ShapeBucket {
+        &self.bucket
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.seeds.len().div_ceil(self.cfg.batch_size)
+    }
+
+    /// The graph-side store (also carries the shared router).
+    pub fn graph(&self) -> &Arc<PartitionedGraphStore> {
+        &self.graph
+    }
+
+    /// Cross-partition traffic accumulated so far, covering both sampling
+    /// and feature-fetch traffic. Graph and feature stores normally share
+    /// one [`crate::dist::PartitionRouter`] (as
+    /// [`crate::coordinator::partitioned_loader`] wires them); if they
+    /// were built with distinct routers, the two counters are summed.
+    pub fn router_stats(&self) -> RouterStats {
+        let g = self.graph.router().stats();
+        if Arc::ptr_eq(self.graph.router(), self.features.router()) {
+            g
+        } else {
+            let f = self.features.router().stats();
+            RouterStats {
+                local_msgs: g.local_msgs + f.local_msgs,
+                remote_msgs: g.remote_msgs + f.remote_msgs,
+                remote_rows: g.remote_rows + f.remote_rows,
+            }
+        }
+    }
+
+    pub fn reset_router_stats(&self) {
+        self.graph.router().reset_stats();
+        if !Arc::ptr_eq(self.graph.router(), self.features.router()) {
+            self.features.router().reset_stats();
+        }
+    }
+
+    /// Iterate one epoch through the distributed pipeline. Batches arrive
+    /// in deterministic order; dropping the iterator early shuts the
+    /// worker pool down cleanly. Epoch shuffling and per-batch seeding
+    /// come from the same helpers as [`crate::loader::NeighborLoader`],
+    /// so batch content is identical by construction.
+    pub fn iter_epoch(&self, epoch: u64) -> BatchIter {
+        let batches = epoch_seed_batches(&self.seeds, &self.cfg, epoch);
+        let total = batches.len();
+        let queue: Arc<BoundedQueue<Result<(usize, Batch)>>> =
+            BoundedQueue::new(self.cfg.prefetch.max(1));
+        let pool = ThreadPool::with_queue_capacity(self.cfg.num_workers, total.max(1));
+
+        let sampler = Arc::new(DistNeighborSampler::new(
+            Arc::clone(&self.graph),
+            self.cfg.sampler.clone(),
+        ));
+        for (i, seeds) in batches.into_iter().enumerate() {
+            let sampler = Arc::clone(&sampler);
+            let features = Arc::clone(&self.features);
+            let key = self.feature_key.clone();
+            let labels = self.labels.clone();
+            let bucket = self.bucket.clone();
+            let queue = Arc::clone(&queue);
+            let transforms = self.transforms.clone();
+            let batch_seed = batch_seed(epoch, i);
+            pool.submit(move || {
+                let result = sampler.sample(&seeds, batch_seed).and_then(|sub| {
+                    Batch::assemble(
+                        sub,
+                        features.as_ref(),
+                        &key,
+                        labels.as_deref().map(|v| &v[..]),
+                        &bucket,
+                    )
+                    .map(|mut b| {
+                        for t in &transforms {
+                            t(&mut b);
+                        }
+                        (i, b)
+                    })
+                });
+                // Receiver may have been dropped; ignore send failures.
+                let _ = queue.send(result);
+            });
+        }
+
+        BatchIter::from_parts(queue, pool, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::dist::PartitionRouter;
+    use crate::partition::ldg_partition;
+    use crate::sampler::NeighborSamplerConfig;
+    use crate::storage::InMemoryFeatureStore;
+
+    fn dist_loader(parts: usize, workers: usize) -> (DistNeighborLoader, Vec<i64>) {
+        let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 11, ..Default::default() })
+            .unwrap();
+        let labels = g.y.clone().unwrap();
+        let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        let gs = Arc::new(PartitionedGraphStore::from_graph(&g, Arc::clone(&router)).unwrap());
+        let src_fs = InMemoryFeatureStore::from_tensor(g.x.clone());
+        let fs = Arc::new(PartitionedFeatureStore::partition(&src_fs, router).unwrap());
+        let loader = DistNeighborLoader::new(
+            gs,
+            fs,
+            (0..100).collect(),
+            LoaderConfig {
+                batch_size: 16,
+                num_workers: workers,
+                sampler: NeighborSamplerConfig { fanouts: vec![4, 2], ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .with_labels(labels.clone());
+        (loader, labels)
+    }
+
+    #[test]
+    fn yields_all_batches_with_valid_invariants() {
+        let (loader, _) = dist_loader(4, 3);
+        let batches: Vec<Batch> = loader.iter_epoch(0).map(|b| b.unwrap()).collect();
+        assert_eq!(batches.len(), 7); // ceil(100/16)
+        let total_seeds: usize = batches.iter().map(|b| b.num_real_seeds()).sum();
+        assert_eq!(total_seeds, 100);
+        for b in &batches {
+            b.sub.check_invariants().unwrap();
+            b.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let run = |workers: usize| {
+            let (loader, _) = dist_loader(4, workers);
+            loader
+                .iter_epoch(3)
+                .map(|b| b.unwrap().sub.nodes)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4), "output must not depend on worker count");
+    }
+
+    #[test]
+    fn epoch_traffic_is_recorded() {
+        let (loader, _) = dist_loader(4, 2);
+        loader.reset_router_stats();
+        let n: usize = loader.iter_epoch(0).map(|b| b.unwrap().num_real_nodes()).sum();
+        assert!(n > 0);
+        let stats = loader.router_stats();
+        assert!(
+            stats.remote_msgs > 0,
+            "a 4-way partitioned epoch must cross partitions: {stats}"
+        );
+        assert!(stats.remote_rows > 0);
+    }
+
+    #[test]
+    fn early_drop_shuts_down_cleanly() {
+        let (loader, _) = dist_loader(2, 2);
+        let mut it = loader.iter_epoch(0);
+        let _first = it.next().unwrap().unwrap();
+        drop(it); // must not deadlock on the full prefetch queue
+    }
+
+    #[test]
+    fn transform_applies() {
+        let (loader, _) = dist_loader(2, 1);
+        let loader = loader.with_transform(Arc::new(|b: &mut Batch| {
+            b.x.data_mut()[0] = 42.0;
+        }));
+        let b = loader.iter_epoch(0).next().unwrap().unwrap();
+        assert_eq!(b.x.data()[0], 42.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Distributed-loading simulation (§2.3): partitioned feature/graph
+//! stores behind the same remote-backend interfaces, plus a
+//! partition-aware sampler and loader.
+//!
+//! PyG 2.0's scalability story is that the training loop only ever talks
+//! to abstract [`crate::storage::FeatureStore`] /
+//! [`crate::storage::GraphStore`] backends, so swapping the in-memory
+//! stores for *partitioned* ones (METIS-partitioned in PyG, LDG-
+//! partitioned here — see [`crate::partition`]) changes nothing above the
+//! storage layer. This module builds that layer for a simulated cluster:
+//!
+//! * [`PartitionRouter`] — ownership lookups plus message-count
+//!   instrumentation. Every access to a non-local partition is accounted
+//!   as a simulated RPC (one coalesced request per partition touched,
+//!   payload counted in rows/edges), so cross-partition traffic — the
+//!   quantity real deployments optimize — is measurable from tests and
+//!   benches (`bench_dist_partition`).
+//! * [`PartitionedFeatureStore`] — shards a feature store row-wise by
+//!   node ownership; `get`/`get_into` route each row to its owning shard
+//!   and reassemble in request order.
+//! * [`PartitionedGraphStore`] — shards the topology edge-wise (in-edges
+//!   live with the destination's owner, out-edges with the source's) and
+//!   can still serve the merged global CSR/CSC views, so it is a drop-in
+//!   [`crate::storage::GraphStore`].
+//! * [`DistNeighborSampler`] — neighbor expansion that fetches each
+//!   frontier node's adjacency from the owning shard, local partition
+//!   first and one coalesced fetch per remote partition per hop.
+//! * [`DistNeighborLoader`] — the full distributed pipeline with the same
+//!   worker-pool + prefetch-backpressure machinery as
+//!   [`crate::loader::NeighborLoader`].
+//!
+//! **Correctness anchor:** under a fixed seed the distributed pipeline
+//! produces batches *identical* to the single-store pipeline (same node
+//! ids, edge index, features, labels). The samplers share one RNG
+//! consumption pattern and the shard-local adjacency slices are
+//! bit-identical to the corresponding global CSC/CSR ranges, so this
+//! holds by construction and is enforced end-to-end by
+//! `tests/test_dist_equivalence.rs`.
+
+pub mod feature_store;
+pub mod graph_store;
+pub mod loader;
+pub mod sampler;
+
+pub use feature_store::{PartitionedFeatureStore, PartitionedStoreConfig};
+pub use graph_store::PartitionedGraphStore;
+pub use loader::DistNeighborLoader;
+pub use sampler::DistNeighborSampler;
+
+use crate::error::{Error, Result};
+use crate::partition::Partitioning;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Snapshot of a router's traffic counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Accesses served by the local partition (no RPC).
+    pub local_msgs: u64,
+    /// Simulated RPCs to remote partitions (coalesced: one per partition
+    /// touched per routed operation).
+    pub remote_msgs: u64,
+    /// Payload rows/edges carried by those remote RPCs.
+    pub remote_rows: u64,
+}
+
+impl RouterStats {
+    pub fn total_msgs(&self) -> u64 {
+        self.local_msgs + self.remote_msgs
+    }
+
+    /// Fraction of accesses that crossed a partition boundary.
+    pub fn remote_fraction(&self) -> f64 {
+        let total = self.total_msgs();
+        if total == 0 {
+            0.0
+        } else {
+            self.remote_msgs as f64 / total as f64
+        }
+    }
+}
+
+impl fmt::Display for RouterStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "local={} remote={} ({:.1}% remote, {} payload rows)",
+            self.local_msgs,
+            self.remote_msgs,
+            100.0 * self.remote_fraction(),
+            self.remote_rows
+        )
+    }
+}
+
+/// Routes node-keyed operations to owning partitions and accounts the
+/// resulting (simulated) RPC traffic.
+///
+/// One router instance is shared by the partitioned feature store, graph
+/// store and sampler of a pipeline, so [`PartitionRouter::stats`] reports
+/// the pipeline's total cross-partition traffic.
+pub struct PartitionRouter {
+    assignment: Arc<Vec<u32>>,
+    num_parts: usize,
+    local_rank: u32,
+    local_msgs: AtomicU64,
+    remote_msgs: AtomicU64,
+    remote_rows: AtomicU64,
+}
+
+impl PartitionRouter {
+    /// Build a router from a [`Partitioning`], viewing the cluster from
+    /// `local_rank` (accesses to that partition are free).
+    pub fn new(partitioning: &Partitioning, local_rank: u32) -> Result<Self> {
+        Self::from_assignment(
+            Arc::new(partitioning.assignment.clone()),
+            partitioning.num_parts,
+            local_rank,
+        )
+    }
+
+    /// Build directly from an ownership vector.
+    pub fn from_assignment(
+        assignment: Arc<Vec<u32>>,
+        num_parts: usize,
+        local_rank: u32,
+    ) -> Result<Self> {
+        if num_parts == 0 {
+            return Err(Error::Storage("router needs at least one partition".into()));
+        }
+        if local_rank as usize >= num_parts {
+            return Err(Error::Storage(format!(
+                "local rank {local_rank} out of {num_parts} partitions"
+            )));
+        }
+        if let Some(&bad) = assignment.iter().find(|&&p| p as usize >= num_parts) {
+            return Err(Error::Storage(format!(
+                "assignment references partition {bad} (only {num_parts} exist)"
+            )));
+        }
+        Ok(Self {
+            assignment,
+            num_parts,
+            local_rank,
+            local_msgs: AtomicU64::new(0),
+            remote_msgs: AtomicU64::new(0),
+            remote_rows: AtomicU64::new(0),
+        })
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    pub fn local_rank(&self) -> u32 {
+        self.local_rank
+    }
+
+    /// Number of nodes the ownership vector covers.
+    pub fn num_nodes(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Owning partition of node `v`. Panics if `v` is out of range; use
+    /// [`PartitionRouter::try_owner`] on unvalidated input.
+    pub fn owner(&self, v: u32) -> u32 {
+        self.assignment[v as usize]
+    }
+
+    pub fn try_owner(&self, v: u32) -> Option<u32> {
+        self.assignment.get(v as usize).copied()
+    }
+
+    pub fn is_local(&self, v: u32) -> bool {
+        self.owner(v) == self.local_rank
+    }
+
+    /// Account one access served by the local partition.
+    pub fn record_local(&self) {
+        self.local_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one simulated RPC to a remote partition carrying
+    /// `payload_rows` rows/edges.
+    pub fn record_remote(&self, payload_rows: u64) {
+        self.remote_msgs.fetch_add(1, Ordering::Relaxed);
+        self.remote_rows.fetch_add(payload_rows, Ordering::Relaxed);
+    }
+
+    /// Current traffic counters.
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            local_msgs: self.local_msgs.load(Ordering::Relaxed),
+            remote_msgs: self.remote_msgs.load(Ordering::Relaxed),
+            remote_rows: self.remote_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the traffic counters (benches measure per-phase traffic).
+    pub fn reset_stats(&self) {
+        self.local_msgs.store(0, Ordering::Relaxed);
+        self.remote_msgs.store(0, Ordering::Relaxed);
+        self.remote_rows.store(0, Ordering::Relaxed);
+    }
+
+    /// Group input *positions* by the owner of the node at that position,
+    /// preserving input order within each group — the routing step of
+    /// every coalesced multi-node operation (feature fetches, halo
+    /// lookups). Any out-of-range node id is an error.
+    pub fn group_positions_by_owner(&self, nodes: &[usize]) -> Result<Vec<Vec<usize>>> {
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.num_parts];
+        for (pos, &v) in nodes.iter().enumerate() {
+            if v >= self.num_nodes() {
+                return Err(Error::Storage(format!(
+                    "node {v} out of range ({} partitioned nodes)",
+                    self.num_nodes()
+                )));
+            }
+            buckets[self.owner(v as u32) as usize].push(pos);
+        }
+        Ok(buckets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> PartitionRouter {
+        let p = Partitioning { assignment: vec![0, 1, 2, 0, 1, 2, 0], num_parts: 3 };
+        PartitionRouter::new(&p, 0).unwrap()
+    }
+
+    #[test]
+    fn ownership_lookups() {
+        let r = router();
+        assert_eq!(r.num_nodes(), 7);
+        assert_eq!(r.owner(4), 1);
+        assert!(r.is_local(3));
+        assert!(!r.is_local(5));
+        assert_eq!(r.try_owner(99), None);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let p = Partitioning { assignment: vec![0, 1], num_parts: 2 };
+        assert!(PartitionRouter::new(&p, 2).is_err());
+        let bad = Partitioning { assignment: vec![0, 5], num_parts: 2 };
+        assert!(PartitionRouter::new(&bad, 0).is_err());
+        let empty = Partitioning { assignment: vec![], num_parts: 0 };
+        assert!(PartitionRouter::new(&empty, 0).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate_and_reset() {
+        let r = router();
+        r.record_local();
+        r.record_remote(10);
+        r.record_remote(5);
+        let s = r.stats();
+        assert_eq!(s.local_msgs, 1);
+        assert_eq!(s.remote_msgs, 2);
+        assert_eq!(s.remote_rows, 15);
+        assert_eq!(s.total_msgs(), 3);
+        assert!((s.remote_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        r.reset_stats();
+        assert_eq!(r.stats(), RouterStats::default());
+    }
+
+    #[test]
+    fn grouping_preserves_order() {
+        let r = router();
+        let buckets = r.group_positions_by_owner(&[6, 1, 2, 0, 4]).unwrap();
+        assert_eq!(buckets[0], vec![0, 3]); // nodes 6, 0 owned by part 0
+        assert_eq!(buckets[1], vec![1, 4]); // nodes 1, 4
+        assert_eq!(buckets[2], vec![2]); // node 2
+        assert!(r.group_positions_by_owner(&[7]).is_err());
+        assert!(r.group_positions_by_owner(&[]).unwrap().iter().all(|b| b.is_empty()));
+    }
+}

@@ -1,0 +1,286 @@
+//! Partition-aware multi-hop neighbor sampling.
+//!
+//! Mirrors [`crate::sampler::NeighborSampler`] hop for hop, but every
+//! frontier node's adjacency slice is fetched from the shard of its
+//! *owning* partition ([`PartitionedGraphStore::in_slice`]) with
+//! local-first fan-out: the local partition is served in-process while
+//! each remote partition touched in a hop costs one coalesced simulated
+//! RPC (payload = edges pulled from it), accounted on the shared
+//! [`PartitionRouter`].
+//!
+//! **Equivalence invariant:** this sampler draws from the same
+//! [`crate::util::Rng`] stream through the same
+//! [`crate::sampler::neighbor::sample_from`] helper, over shard slices
+//! that are bit-identical to the global CSC/CSR ranges, in the same
+//! frontier order. For any `(config, seeds, batch_seed)` it therefore
+//! returns exactly the subgraph `NeighborSampler` would — the
+//! correctness anchor of the distributed pipeline, enforced by the unit
+//! tests below and `tests/test_dist_equivalence.rs`.
+
+use super::graph_store::PartitionedGraphStore;
+use crate::error::{Error, Result};
+use crate::sampler::neighbor::sample_from;
+use crate::sampler::{Direction, NeighborSamplerConfig, SampledSubgraph};
+use crate::util::Rng;
+use rustc_hash::FxHashMap as HashMap;
+use std::sync::Arc;
+
+/// Uniform neighbor sampler over a [`PartitionedGraphStore`].
+pub struct DistNeighborSampler {
+    store: Arc<PartitionedGraphStore>,
+    cfg: NeighborSamplerConfig,
+}
+
+impl DistNeighborSampler {
+    pub fn new(store: Arc<PartitionedGraphStore>, cfg: NeighborSamplerConfig) -> Self {
+        Self { store, cfg }
+    }
+
+    pub fn config(&self) -> &NeighborSamplerConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> &Arc<PartitionedGraphStore> {
+        &self.store
+    }
+
+    /// Sample the multi-hop subgraph around `seeds`; identical output to
+    /// `NeighborSampler::sample` under the same `(config, batch_seed)`.
+    pub fn sample(&self, seeds: &[u32], batch_seed: u64) -> Result<SampledSubgraph> {
+        let router = Arc::clone(self.store.router());
+        // Seeds come from user input; frontier nodes beyond hop 0 are edge
+        // endpoints and always in range.
+        for &s in seeds {
+            if router.try_owner(s).is_none() {
+                return Err(Error::Sampler(format!(
+                    "seed {s} out of range ({} partitioned nodes)",
+                    router.num_nodes()
+                )));
+            }
+        }
+        let bidirectional = self.cfg.direction == Direction::Bidirectional;
+        let mut rng = Rng::new(self.cfg.seed).fork(batch_seed);
+
+        let mut out = SampledSubgraph {
+            num_seeds: seeds.len(),
+            seed_times: None,
+            ..Default::default()
+        };
+        // Local id assignment — same keying as the single-store sampler:
+        // shared mode collapses duplicates per global id, disjoint mode
+        // keys by (tree, global id).
+        let mut local: HashMap<(u32, u32), u32> =
+            HashMap::with_capacity_and_hasher(seeds.len() * 4, Default::default());
+        let mut batch_vec: Vec<u32> = Vec::new();
+        for (i, &s) in seeds.iter().enumerate() {
+            let tree = if self.cfg.disjoint { i as u32 } else { 0 };
+            out.nodes.push(s);
+            batch_vec.push(tree);
+            local.insert((tree, s), i as u32);
+        }
+        out.node_offsets.push(out.nodes.len());
+
+        let mut frontier: Vec<u32> = (0..seeds.len() as u32).collect();
+        let mut scratch: Vec<u32> = Vec::new();
+
+        // Per-hop routing ledger: which partitions served this hop's
+        // expansions and how many edges each shipped.
+        let parts = router.num_parts();
+        let local_rank = router.local_rank() as usize;
+        let mut hop_edges = vec![0u64; parts];
+        let mut hop_touched = vec![false; parts];
+
+        for &fanout in &self.cfg.fanouts {
+            hop_edges.iter_mut().for_each(|e| *e = 0);
+            hop_touched.iter_mut().for_each(|t| *t = false);
+            let mut next_frontier = Vec::new();
+            for &dst_local in &frontier {
+                let dst_global = out.nodes[dst_local as usize];
+                let tree = batch_vec[dst_local as usize];
+                let owner = router.owner(dst_global) as usize;
+                // In-neighbors from the owning shard.
+                let (nbrs, eids) = self.store.in_slice(dst_global);
+                sample_from(
+                    nbrs,
+                    eids,
+                    0,
+                    nbrs.len(),
+                    fanout,
+                    self.cfg.replace,
+                    &mut rng,
+                    &mut scratch,
+                );
+                hop_touched[owner] = true;
+                hop_edges[owner] += (scratch.len() / 2) as u64;
+                for k in 0..scratch.len() / 2 {
+                    let nbr = scratch[k * 2];
+                    let eid = scratch[k * 2 + 1];
+                    let src_local = *local.entry((tree, nbr)).or_insert_with(|| {
+                        out.nodes.push(nbr);
+                        batch_vec.push(tree);
+                        next_frontier.push(out.nodes.len() as u32 - 1);
+                        out.nodes.len() as u32 - 1
+                    });
+                    out.row.push(src_local);
+                    out.col.push(dst_local);
+                    out.edge_ids.push(eid);
+                }
+                // Out-neighbors (bidirectional mode), same shard routing.
+                if bidirectional {
+                    let (nbrs, eids) = self.store.out_slice(dst_global);
+                    sample_from(
+                        nbrs,
+                        eids,
+                        0,
+                        nbrs.len(),
+                        fanout,
+                        self.cfg.replace,
+                        &mut rng,
+                        &mut scratch,
+                    );
+                    hop_edges[owner] += (scratch.len() / 2) as u64;
+                    for k in 0..scratch.len() / 2 {
+                        let nbr = scratch[k * 2];
+                        let eid = scratch[k * 2 + 1];
+                        let src_local = *local.entry((tree, nbr)).or_insert_with(|| {
+                            out.nodes.push(nbr);
+                            batch_vec.push(tree);
+                            next_frontier.push(out.nodes.len() as u32 - 1);
+                            out.nodes.len() as u32 - 1
+                        });
+                        out.row.push(src_local);
+                        out.col.push(dst_local);
+                        out.edge_ids.push(eid);
+                    }
+                }
+            }
+            // Local-first fan-out accounting: the local shard is read
+            // in-process (one "message" marks the access), each remote
+            // partition touched costs one coalesced RPC with its payload.
+            if hop_touched[local_rank] {
+                router.record_local();
+            }
+            for p in 0..parts {
+                if p != local_rank && hop_touched[p] {
+                    router.record_remote(hop_edges[p]);
+                }
+            }
+            out.node_offsets.push(out.nodes.len());
+            out.edge_offsets.push(out.row.len());
+            frontier = next_frontier;
+            if frontier.is_empty() {
+                // Graph exhausted early; pad offsets so num_hops ==
+                // fanouts.len(), exactly like the single-store sampler.
+                for _ in out.node_offsets.len()..=self.cfg.fanouts.len() {
+                    out.node_offsets.push(out.nodes.len());
+                    out.edge_offsets.push(out.row.len());
+                }
+                break;
+            }
+        }
+
+        if self.cfg.disjoint {
+            out.batch = Some(batch_vec);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::dist::PartitionRouter;
+    use crate::partition::{ldg_partition, Partitioning};
+    use crate::sampler::NeighborSampler;
+    use crate::storage::InMemoryGraphStore;
+
+    fn stores(
+        parts: usize,
+        local_rank: u32,
+    ) -> (Arc<InMemoryGraphStore>, Arc<PartitionedGraphStore>) {
+        let g = sbm::generate(&SbmConfig { num_nodes: 400, seed: 31, ..Default::default() })
+            .unwrap();
+        let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let router = Arc::new(PartitionRouter::new(&p, local_rank).unwrap());
+        (
+            Arc::new(InMemoryGraphStore::from_graph(&g)),
+            Arc::new(PartitionedGraphStore::from_graph(&g, router).unwrap()),
+        )
+    }
+
+    fn assert_same_subgraph(a: &SampledSubgraph, b: &SampledSubgraph) {
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.row, b.row);
+        assert_eq!(a.col, b.col);
+        assert_eq!(a.edge_ids, b.edge_ids);
+        assert_eq!(a.node_offsets, b.node_offsets);
+        assert_eq!(a.edge_offsets, b.edge_offsets);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.num_seeds, b.num_seeds);
+    }
+
+    #[test]
+    fn matches_single_store_sampler_across_configs() {
+        let (mem, part) = stores(4, 0);
+        let configs = [
+            NeighborSamplerConfig { fanouts: vec![5, 3], ..Default::default() },
+            NeighborSamplerConfig { fanouts: vec![4, 4, 2], disjoint: true, seed: 9, ..Default::default() },
+            NeighborSamplerConfig { fanouts: vec![3], replace: true, seed: 2, ..Default::default() },
+            NeighborSamplerConfig {
+                fanouts: vec![4, 2],
+                direction: Direction::Bidirectional,
+                seed: 5,
+                ..Default::default()
+            },
+        ];
+        for cfg in configs {
+            let single = NeighborSampler::new(Arc::clone(&mem), cfg.clone());
+            let dist = DistNeighborSampler::new(Arc::clone(&part), cfg.clone());
+            for batch_seed in [0u64, 7, 1_000_003] {
+                let a = single.sample(&[1, 42, 399, 17], batch_seed).unwrap();
+                let b = dist.sample(&[1, 42, 399, 17], batch_seed).unwrap();
+                a.check_invariants().unwrap();
+                assert_same_subgraph(&a, &b);
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_generates_no_remote_traffic() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 100, seed: 3, ..Default::default() })
+            .unwrap();
+        let p = Partitioning { assignment: vec![0; 100], num_parts: 1 };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        let store = Arc::new(PartitionedGraphStore::from_graph(&g, router).unwrap());
+        let s = DistNeighborSampler::new(Arc::clone(&store), NeighborSamplerConfig::default());
+        s.sample(&[0, 1, 2], 0).unwrap();
+        let stats = store.router().stats();
+        assert_eq!(stats.remote_msgs, 0);
+        assert!(stats.local_msgs > 0);
+    }
+
+    #[test]
+    fn multi_partition_traffic_is_bounded_by_hops_times_parts() {
+        let (_, part) = stores(4, 0);
+        part.router().reset_stats();
+        let s = DistNeighborSampler::new(
+            Arc::clone(&part),
+            NeighborSamplerConfig { fanouts: vec![5, 5], ..Default::default() },
+        );
+        let sub = s.sample(&(0..32u32).collect::<Vec<_>>(), 1).unwrap();
+        let stats = part.router().stats();
+        // At most (parts - 1) coalesced RPCs per hop.
+        assert!(stats.remote_msgs <= 2 * 3, "remote_msgs={}", stats.remote_msgs);
+        assert!(stats.remote_msgs > 0, "4-way partition must generate traffic");
+        // Payload can never exceed the sampled edge count.
+        assert!(stats.remote_rows <= sub.num_edges() as u64);
+    }
+
+    #[test]
+    fn out_of_range_seed_errors() {
+        let (_, part) = stores(2, 0);
+        let s = DistNeighborSampler::new(part, NeighborSamplerConfig::default());
+        assert!(s.sample(&[400], 0).is_err());
+    }
+}

@@ -1,34 +1,54 @@
 //! Unified error type for the framework.
+//!
+//! Hand-rolled `Display`/`Error` impls (the `thiserror` derive macro is
+//! unavailable in the offline sandbox).
+
+use std::fmt;
 
 /// Framework-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Framework-wide error enum.
-#[derive(thiserror::Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape error: {0}")]
     Shape(String),
-
-    #[error("graph error: {0}")]
     Graph(String),
-
-    #[error("storage error: {0}")]
     Storage(String),
-
-    #[error("sampler error: {0}")]
     Sampler(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Storage(m) => write!(f, "storage error: {m}"),
+            Error::Sampler(m) => write!(f, "sampler error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -45,6 +45,28 @@ impl Default for LoaderConfig {
 /// feature augmentation, ...).
 pub type Transform = Arc<dyn Fn(&mut Batch) + Send + Sync>;
 
+/// One epoch's seed batches: shuffled (when configured) with the
+/// `(cfg.seed, epoch)`-forked stream, then chunked. Shared by every
+/// loader variant — the local/distributed batch-equivalence guarantee
+/// requires a single definition of this ordering.
+pub(crate) fn epoch_seed_batches(seeds: &[u32], cfg: &LoaderConfig, epoch: u64) -> Vec<Vec<u32>> {
+    let mut seeds = seeds.to_vec();
+    if cfg.shuffle {
+        let mut rng = Rng::new(cfg.seed).fork(epoch);
+        rng.shuffle(&mut seeds);
+    }
+    seeds
+        .chunks(cfg.batch_size)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+/// Per-batch sampler seed for batch `i` of `epoch`. Shared by every
+/// loader variant (see [`epoch_seed_batches`]).
+pub(crate) fn batch_seed(epoch: u64, i: usize) -> u64 {
+    epoch.wrapping_mul(1_000_003).wrapping_add(i as u64)
+}
+
 /// The neighbor loader.
 pub struct NeighborLoader<G: GraphStore + 'static, F: FeatureStore + 'static> {
     graph: Arc<G>,
@@ -98,23 +120,10 @@ impl<G: GraphStore + 'static, F: FeatureStore + 'static> NeighborLoader<G, F> {
         self.seeds.len().div_ceil(self.cfg.batch_size)
     }
 
-    /// Build this epoch's seed batches (shuffled when configured).
-    fn epoch_batches(&self, epoch: u64) -> Vec<Vec<u32>> {
-        let mut seeds = self.seeds.clone();
-        if self.cfg.shuffle {
-            let mut rng = Rng::new(self.cfg.seed).fork(epoch);
-            rng.shuffle(&mut seeds);
-        }
-        seeds
-            .chunks(self.cfg.batch_size)
-            .map(|c| c.to_vec())
-            .collect()
-    }
-
     /// Iterate one epoch. Returns an iterator backed by worker threads;
     /// dropping it early shuts the pipeline down cleanly.
     pub fn iter_epoch(&self, epoch: u64) -> BatchIter {
-        let batches = self.epoch_batches(epoch);
+        let batches = epoch_seed_batches(&self.seeds, &self.cfg, epoch);
         let total = batches.len();
         let queue: Arc<BoundedQueue<Result<(usize, Batch)>>> =
             BoundedQueue::new(self.cfg.prefetch.max(1));
@@ -132,7 +141,7 @@ impl<G: GraphStore + 'static, F: FeatureStore + 'static> NeighborLoader<G, F> {
             let bucket = self.bucket.clone();
             let queue = Arc::clone(&queue);
             let transforms = self.transforms.clone();
-            let batch_seed = epoch.wrapping_mul(1_000_003).wrapping_add(i as u64);
+            let batch_seed = batch_seed(epoch, i);
             pool.submit(move || {
                 let result = sampler.sample(&seeds, batch_seed).and_then(|sub| {
                     Batch::assemble(sub, features.as_ref(), &key, labels.as_deref().map(|v| &v[..]), &bucket)
@@ -148,7 +157,7 @@ impl<G: GraphStore + 'static, F: FeatureStore + 'static> NeighborLoader<G, F> {
             });
         }
 
-        BatchIter { queue, pool: Some(pool), remaining: total, pending: std::collections::BTreeMap::new(), next_idx: 0 }
+        BatchIter::from_parts(queue, pool, total)
     }
 }
 
@@ -161,6 +170,26 @@ pub struct BatchIter {
     remaining: usize,
     pending: std::collections::BTreeMap<usize, Batch>,
     next_idx: usize,
+}
+
+impl BatchIter {
+    /// Assemble an iterator over `total` in-flight batches. Crate-internal:
+    /// loader variants (e.g. [`crate::dist::DistNeighborLoader`]) share the
+    /// ordered-delivery / backpressure / clean-shutdown semantics by
+    /// submitting their jobs and handing the queue + pool here.
+    pub(crate) fn from_parts(
+        queue: Arc<BoundedQueue<Result<(usize, Batch)>>>,
+        pool: ThreadPool,
+        total: usize,
+    ) -> Self {
+        Self {
+            queue,
+            pool: Some(pool),
+            remaining: total,
+            pending: std::collections::BTreeMap::new(),
+            next_idx: 0,
+        }
+    }
 }
 
 impl Iterator for BatchIter {

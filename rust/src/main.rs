@@ -21,6 +21,7 @@ fn main() {
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
         "partition" => cmd_partition(&args),
+        "dist" => cmd_dist(&args),
         "explain" => cmd_explain(&args),
         "rag" => cmd_rag(&args),
         "info" => cmd_info(&args),
@@ -113,6 +114,51 @@ fn cmd_partition(args: &Args) -> pyg2::Result<()> {
         r.edge_cut(&g.edge_index),
         r.balance()
     );
+    Ok(())
+}
+
+fn cmd_dist(args: &Args) -> pyg2::Result<()> {
+    let nodes = args.get_usize("nodes", 5000);
+    let parts = args.get_usize("parts", 4);
+    let batch = args.get_usize("batch", 64);
+    let workers = args.get_usize("workers", 2);
+    let epochs = args.get_usize("epochs", 1);
+    let g = sbm::generate(&SbmConfig { num_nodes: nodes, seed: 0, ..Default::default() })?;
+    let p = pyg2::partition::ldg_partition(&g.edge_index, parts, 1.1)?;
+    let loader = pyg2::coordinator::partitioned_loader(
+        &g,
+        &p,
+        0,
+        (0..nodes as u32).collect(),
+        pyg2::loader::LoaderConfig {
+            batch_size: batch,
+            num_workers: workers,
+            ..Default::default()
+        },
+    )?;
+    log::info!(
+        "dist loading over {parts} partitions (edge-cut {:.3}): n={nodes} e={}",
+        p.edge_cut(&g.edge_index),
+        g.num_edges()
+    );
+    let t0 = std::time::Instant::now();
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    for epoch in 0..epochs {
+        for b in loader.iter_epoch(epoch as u64) {
+            let b = b?;
+            batches += 1;
+            sampled_nodes += b.num_real_nodes();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = loader.router_stats();
+    println!(
+        "dist: {batches} batches / {sampled_nodes} sampled nodes in {secs:.2}s \
+         ({:.0} nodes/s)",
+        sampled_nodes as f64 / secs
+    );
+    println!("cross-partition traffic: {stats}");
     Ok(())
 }
 

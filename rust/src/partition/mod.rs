@@ -63,6 +63,43 @@ impl Partitioning {
             .map(|(v, _)| v as u32)
             .collect()
     }
+
+    /// Owning partition of node `v` (`None` when out of range).
+    pub fn owner(&self, v: u32) -> Option<u32> {
+        self.assignment.get(v as usize).copied()
+    }
+
+    /// The 1-hop *halo* of partition `p`: distinct nodes **not** owned by
+    /// `p` that are endpoints of edges incident to `p`'s nodes. These are
+    /// exactly the foreign rows partition `p` must fetch (or cache) to
+    /// expand its own nodes — the working set behind the cross-partition
+    /// traffic the [`crate::dist::PartitionRouter`] measures. Returned
+    /// sorted ascending.
+    pub fn halo_nodes(&self, edges: &EdgeIndex, p: u32) -> Vec<u32> {
+        let mut in_halo = vec![false; self.assignment.len()];
+        for (&s, &d) in edges.src().iter().zip(edges.dst()) {
+            let (os, od) = (self.assignment[s as usize], self.assignment[d as usize]);
+            if od == p && os != p {
+                in_halo[s as usize] = true;
+            }
+            if os == p && od != p {
+                in_halo[d as usize] = true;
+            }
+        }
+        in_halo
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h)
+            .map(|(v, _)| v as u32)
+            .collect()
+    }
+}
+
+/// Per-partition node capacity the LDG partitioner enforces:
+/// `ceil(ideal_size * slack)`. Exposed so tests and capacity planning can
+/// state the bound the partitioner promises.
+pub fn ldg_capacity(num_nodes: usize, num_parts: usize, slack: f64) -> usize {
+    ((num_nodes as f64 / num_parts as f64) * slack).ceil() as usize
 }
 
 /// LDG streaming partitioner.
@@ -73,7 +110,7 @@ pub fn ldg_partition(edges: &EdgeIndex, num_parts: usize, slack: f64) -> Result<
         return Err(Error::Graph("num_parts must be positive".into()));
     }
     let n = edges.num_nodes();
-    let capacity = ((n as f64 / num_parts as f64) * slack).ceil() as usize;
+    let capacity = ldg_capacity(n, num_parts, slack);
     let csr = edges.csr();
     let csc = edges.csc();
 
@@ -171,5 +208,45 @@ mod tests {
         let p = Partitioning { assignment: vec![0, 1, 0, 1, 1], num_parts: 2 };
         assert_eq!(p.nodes_of(0), vec![0, 2]);
         assert_eq!(p.nodes_of(1), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn owner_lookup() {
+        let p = Partitioning { assignment: vec![0, 1, 0], num_parts: 2 };
+        assert_eq!(p.owner(1), Some(1));
+        assert_eq!(p.owner(3), None);
+    }
+
+    #[test]
+    fn halo_is_foreign_boundary_nodes() {
+        // 0 -> 1 -> 2 -> 3, parts: {0, 1} and {2, 3}.
+        let ei = EdgeIndex::new(vec![0, 1, 2], vec![1, 2, 3], 4).unwrap();
+        let p = Partitioning { assignment: vec![0, 0, 1, 1], num_parts: 2 };
+        // Part 0's halo: node 2 (1 -> 2 leaves the partition).
+        assert_eq!(p.halo_nodes(&ei, 0), vec![2]);
+        // Part 1's halo: node 1 (1 -> 2 enters the partition).
+        assert_eq!(p.halo_nodes(&ei, 1), vec![1]);
+    }
+
+    #[test]
+    fn halo_empty_when_no_cut() {
+        let ei = EdgeIndex::new(vec![0, 2], vec![1, 3], 4).unwrap();
+        let p = Partitioning { assignment: vec![0, 0, 1, 1], num_parts: 2 };
+        assert!(p.halo_nodes(&ei, 0).is_empty());
+        assert!(p.halo_nodes(&ei, 1).is_empty());
+    }
+
+    #[test]
+    fn capacity_bound_is_enforced() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 777, seed: 8, ..Default::default() }).unwrap();
+        for parts in [2usize, 3, 5] {
+            let cap = ldg_capacity(777, parts, 1.1);
+            let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+            assert!(
+                p.part_sizes().into_iter().all(|s| s <= cap),
+                "{parts} parts: sizes {:?} exceed capacity {cap}",
+                p.part_sizes()
+            );
+        }
     }
 }

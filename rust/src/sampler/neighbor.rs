@@ -189,8 +189,12 @@ impl<G: GraphStore> NeighborSampler<G> {
 
 /// Sample up to `fanout` (neighbor, edge_id) pairs from the compressed
 /// range `[lo, hi)`; writes pairs flat into `scratch`.
+///
+/// Crate-visible so [`crate::dist`]'s partition-aware sampler draws from
+/// the *identical* RNG consumption pattern — the seed-fixed equivalence
+/// between local and distributed pipelines depends on it.
 #[allow(clippy::too_many_arguments)]
-fn sample_from(
+pub(crate) fn sample_from(
     indices: &[u32],
     perm: &[u32],
     lo: usize,

@@ -5,8 +5,10 @@
 //! ever calls `get` on an abstract feature backend, so features can live
 //! in memory, in files, or behind a partitioned service without the loop
 //! changing. This module defines that trait and the in-memory and
-//! file-backed implementations; the partitioned one lives in
-//! `crate::dist`.
+//! file-backed implementations; the partitioned one is
+//! [`crate::dist::PartitionedFeatureStore`], which shards rows by node
+//! ownership and routes each `get` to the owning shard through the
+//! [`crate::dist::PartitionRouter`].
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;

@@ -1,6 +1,13 @@
 //! Storage layer: the FeatureStore / GraphStore separation of concerns
 //! (§2.3) with in-memory, file-backed, and multi-modal implementations.
-//! The partitioned/distributed variants build on these in [`crate::dist`].
+//!
+//! The partitioned variants live in [`crate::dist`]:
+//! [`crate::dist::PartitionedFeatureStore`] shards feature rows by node
+//! ownership and [`crate::dist::PartitionedGraphStore`] shards adjacency
+//! by endpoint ownership; both implement the traits below, routing every
+//! access through a message-count-instrumented
+//! [`crate::dist::PartitionRouter`], so the loader/trainer/server stack
+//! runs unchanged on top of a (simulated) cluster.
 
 pub mod feature_store;
 pub mod file_store;

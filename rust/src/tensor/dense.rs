@@ -127,6 +127,10 @@ impl Tensor {
         if idx.len() > self.rows() {
             return Err(Error::Shape(format!("{} rows > capacity {}", idx.len(), self.rows())));
         }
+        // Validate before writing so errors leave `self` untouched.
+        if let Some(&bad) = idx.iter().find(|&&i| i >= src.rows()) {
+            return Err(Error::Shape(format!("row {} out of {}", bad, src.rows())));
+        }
         for (out_r, &i) in idx.iter().enumerate() {
             let dst_off = out_r * c;
             self.data[dst_off..dst_off + c].copy_from_slice(src.row(i));

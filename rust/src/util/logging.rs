@@ -1,9 +1,14 @@
 //! Tiny `log` backend printing to stderr with timestamps.
 
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger;
 
@@ -16,7 +21,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -43,7 +48,7 @@ pub fn init() {
     };
     // Ignore the error if a logger is already set (tests call init repeatedly).
     let _ = log::set_logger(&LOGGER).map(|()| log::set_max_level(level));
-    once_cell::sync::Lazy::force(&START);
+    start();
 }
 
 #[cfg(test)]

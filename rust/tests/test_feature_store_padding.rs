@@ -1,0 +1,143 @@
+//! `FeatureStore::get_into` contract across every backend (§2.3: the
+//! training loop must be able to swap backends without semantic drift):
+//! rows past `idx.len()` are zeroed (padding for the static-shape
+//! buckets), out-of-range indices error without corrupting the output
+//! buffer, and column mismatches are rejected.
+
+use pyg2::dist::{PartitionRouter, PartitionedFeatureStore};
+use pyg2::partition::Partitioning;
+use pyg2::storage::{
+    FeatureKey, FeatureStore, FileFeatureStore, FileFeatureWriter, InMemoryFeatureStore,
+};
+use pyg2::tensor::Tensor;
+use std::sync::Arc;
+
+const N: usize = 10;
+const F: usize = 3;
+
+fn source_tensor() -> Tensor {
+    let data: Vec<f32> = (0..N * F).map(|i| i as f32).collect();
+    Tensor::new(vec![N, F], data).unwrap()
+}
+
+/// All three backends over identical data: in-memory, file-backed,
+/// 3-way partitioned.
+fn backends() -> Vec<(&'static str, Box<dyn FeatureStore>)> {
+    let mem = InMemoryFeatureStore::from_tensor(source_tensor());
+
+    let path = std::env::temp_dir().join("pyg2_padding_contract.pygf");
+    let mut w = FileFeatureWriter::new(&path);
+    w.put(FeatureKey::default_x(), source_tensor());
+    w.finish().unwrap();
+    let file = FileFeatureStore::open(&path).unwrap();
+
+    let partitioning = Partitioning {
+        assignment: (0..N).map(|v| (v % 3) as u32).collect(),
+        num_parts: 3,
+    };
+    let router = Arc::new(PartitionRouter::new(&partitioning, 0).unwrap());
+    let part = PartitionedFeatureStore::partition(
+        &InMemoryFeatureStore::from_tensor(source_tensor()),
+        router,
+    )
+    .unwrap();
+
+    vec![
+        ("in-memory", Box::new(mem)),
+        ("file-backed", Box::new(file)),
+        ("partitioned", Box::new(part)),
+    ]
+}
+
+fn row_of(v: usize) -> Vec<f32> {
+    (0..F).map(|c| (v * F + c) as f32).collect()
+}
+
+#[test]
+fn rows_past_idx_len_are_zeroed() {
+    for (name, store) in backends() {
+        let mut out = Tensor::full(vec![5, F], 9.0);
+        store
+            .get_into(&FeatureKey::default_x(), &[4, 2], &mut out)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.row(0), row_of(4).as_slice(), "{name}: fetched row 0");
+        assert_eq!(out.row(1), row_of(2).as_slice(), "{name}: fetched row 1");
+        for r in 2..5 {
+            assert_eq!(out.row(r), &[0.0; F], "{name}: row {r} must be zero padding");
+        }
+    }
+}
+
+#[test]
+fn empty_fetch_zeroes_everything() {
+    for (name, store) in backends() {
+        let mut out = Tensor::full(vec![3, F], 7.0);
+        store
+            .get_into(&FeatureKey::default_x(), &[], &mut out)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            out.data().iter().all(|&x| x == 0.0),
+            "{name}: all rows are padding"
+        );
+    }
+}
+
+#[test]
+fn out_of_range_index_errors_and_leaves_buffer_untouched() {
+    for (name, store) in backends() {
+        // get: plain error.
+        assert!(
+            store.get(&FeatureKey::default_x(), &[N]).is_err(),
+            "{name}: get past the last row must error"
+        );
+        assert!(
+            store.get(&FeatureKey::default_x(), &[0, N + 5]).is_err(),
+            "{name}: any out-of-range index must error"
+        );
+        // get_into: error without partial writes.
+        let mut out = Tensor::full(vec![2, F], 5.0);
+        assert!(
+            store.get_into(&FeatureKey::default_x(), &[0, N], &mut out).is_err(),
+            "{name}: get_into past the last row must error"
+        );
+        assert!(
+            out.data().iter().all(|&x| x == 5.0),
+            "{name}: failed get_into must not write partial rows"
+        );
+    }
+}
+
+#[test]
+fn shape_violations_rejected() {
+    for (name, store) in backends() {
+        // Wrong column count.
+        let mut wrong_cols = Tensor::zeros(vec![4, F + 1]);
+        assert!(
+            store
+                .get_into(&FeatureKey::default_x(), &[0], &mut wrong_cols)
+                .is_err(),
+            "{name}: column mismatch must error"
+        );
+        // More indices than output rows.
+        let mut small = Tensor::zeros(vec![1, F]);
+        assert!(
+            store
+                .get_into(&FeatureKey::default_x(), &[0, 1], &mut small)
+                .is_err(),
+            "{name}: capacity overflow must error"
+        );
+    }
+}
+
+#[test]
+fn missing_group_errors() {
+    for (name, store) in backends() {
+        let mut out = Tensor::zeros(vec![1, F]);
+        assert!(
+            store
+                .get_into(&FeatureKey::new("ghost", "x"), &[0], &mut out)
+                .is_err(),
+            "{name}: unknown group must error"
+        );
+    }
+}

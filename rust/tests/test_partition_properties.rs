@@ -1,0 +1,132 @@
+//! Property-based tests for `partition::ldg_partition` (the METIS
+//! substitute the distributed stack routes by), via the in-crate
+//! mini-proptest harness: total single assignment, the slack capacity
+//! bound, and the edge-cut advantage over the random baseline.
+
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::graph::EdgeIndex;
+use pyg2::partition::{ldg_capacity, ldg_partition, random_partition};
+use pyg2::util::proptest::{check, Gen};
+use pyg2::util::Rng;
+
+/// Generator for (num_nodes, num_parts, slack-in-hundredths, graph seed).
+struct PartitionCaseGen;
+
+#[derive(Clone, Debug)]
+struct PartitionCase {
+    num_nodes: usize,
+    num_parts: usize,
+    /// Slack stored as integer percent (105..=150) so shrinking stays
+    /// exact; `slack()` converts.
+    slack_pct: usize,
+    seed: u64,
+}
+
+impl PartitionCase {
+    fn slack(&self) -> f64 {
+        self.slack_pct as f64 / 100.0
+    }
+
+    fn graph(&self) -> EdgeIndex {
+        sbm::generate(&SbmConfig {
+            num_nodes: self.num_nodes,
+            seed: self.seed,
+            ..Default::default()
+        })
+        .unwrap()
+        .edge_index
+    }
+}
+
+impl Gen for PartitionCaseGen {
+    type Value = PartitionCase;
+
+    fn generate(&self, rng: &mut Rng) -> PartitionCase {
+        PartitionCase {
+            num_nodes: 150 + rng.index(450),
+            num_parts: 1 + rng.index(8),
+            slack_pct: 105 + rng.index(46),
+            seed: rng.next_u64() % 1000,
+        }
+    }
+
+    fn shrink(&self, v: &PartitionCase) -> Vec<PartitionCase> {
+        let mut out = Vec::new();
+        if v.num_parts > 1 {
+            out.push(PartitionCase { num_parts: v.num_parts / 2, ..v.clone() });
+            out.push(PartitionCase { num_parts: v.num_parts - 1, ..v.clone() });
+        }
+        if v.num_nodes > 150 {
+            out.push(PartitionCase { num_nodes: 150, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn every_node_assigned_exactly_once() {
+    check(41, &PartitionCaseGen, |case| {
+        let edges = case.graph();
+        let p = ldg_partition(&edges, case.num_parts, case.slack())
+            .map_err(|e| e.to_string())?;
+        if p.assignment.len() != case.num_nodes {
+            return Err(format!(
+                "{} assignments for {} nodes",
+                p.assignment.len(),
+                case.num_nodes
+            ));
+        }
+        if let Some(&bad) = p.assignment.iter().find(|&&a| a as usize >= case.num_parts) {
+            return Err(format!("assignment {bad} out of {} parts", case.num_parts));
+        }
+        // "Exactly once" means the per-part sizes tile the node set.
+        if p.part_sizes().iter().sum::<usize>() != case.num_nodes {
+            return Err("part sizes do not sum to num_nodes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slack_capacity_bound_respected() {
+    check(43, &PartitionCaseGen, |case| {
+        let edges = case.graph();
+        let cap = ldg_capacity(case.num_nodes, case.num_parts, case.slack());
+        let p = ldg_partition(&edges, case.num_parts, case.slack())
+            .map_err(|e| e.to_string())?;
+        for (part, size) in p.part_sizes().into_iter().enumerate() {
+            if size > cap {
+                return Err(format!(
+                    "part {part} holds {size} nodes, capacity {cap} \
+                     (n={}, parts={}, slack={})",
+                    case.num_nodes,
+                    case.num_parts,
+                    case.slack()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn edge_cut_beats_random_baseline_on_sbm() {
+    check(47, &PartitionCaseGen, |case| {
+        let edges = case.graph();
+        let ldg = ldg_partition(&edges, case.num_parts, case.slack())
+            .map_err(|e| e.to_string())?;
+        let rnd = random_partition(case.num_nodes, case.num_parts, case.seed ^ 0x5a5a);
+        let (c_ldg, c_rnd) = (ldg.edge_cut(&edges), rnd.edge_cut(&edges));
+        // Streaming LDG must never do worse than random placement on a
+        // community-structured graph (tiny epsilon for the parts=1 /
+        // zero-cut equality case).
+        if c_ldg > c_rnd + 1e-9 {
+            return Err(format!(
+                "LDG cut {c_ldg:.4} worse than random {c_rnd:.4} \
+                 (n={}, parts={})",
+                case.num_nodes, case.num_parts
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,117 @@
+//! Minimal vendored stand-in for `rustc-hash`.
+//!
+//! Provides `FxHashMap`/`FxHashSet`/`FxHasher` with the same API shape:
+//! a fast, non-cryptographic, multiply-mix hasher for small keys (the
+//! sampler's `(tree, node_id)` relabeling maps). The mixing constants
+//! follow the splitmix64 finalizer; exact hash values do not need to
+//! match the upstream crate — only determinism within a build matters.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// A `HashMap` keyed by [`FxHasher`].
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// A `HashSet` keyed by [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+/// Fast multiply-mix hasher for small integer-like keys.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        let mut z = self.hash.rotate_left(5) ^ word;
+        z = z.wrapping_mul(SEED);
+        z ^= z >> 32;
+        self.hash = z;
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(tail) | ((rem.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add_to_hash(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basic_ops() {
+        let mut m: FxHashMap<(u32, u32), u32> =
+            FxHashMap::with_capacity_and_hasher(16, Default::default());
+        for i in 0..100u32 {
+            m.insert((i % 7, i), i * 2);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&(3, 52)), Some(&104));
+    }
+
+    #[test]
+    fn deterministic_within_process() {
+        let mut a = FxHasher::default();
+        let mut b = FxHasher::default();
+        a.write_u64(12345);
+        b.write_u64(12345);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = FxHasher::default();
+        c.write_u64(12346);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn set_dedups() {
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        for i in 0..50 {
+            s.insert(i % 10);
+        }
+        assert_eq!(s.len(), 10);
+    }
+}

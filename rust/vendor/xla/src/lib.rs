@@ -1,0 +1,270 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links the XLA C++ runtime, which is not available in
+//! this sandbox. This stub keeps the host-side surface fully functional
+//! (`Literal` construction, reshape, readback) so `runtime::Value`
+//! conversions work, while device-side entry points
+//! ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) return a
+//! descriptive [`Error`]. `Engine::load` therefore fails cleanly at
+//! runtime when no XLA runtime is present — exactly the path the
+//! artifact-gated tests and benches already handle by skipping.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the shape of `xla::Error` (Display + std::error).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: pyg2 was built against the offline xla stub \
+         (vendor/xla); install the real XLA/PJRT runtime to execute HLO artifacts"
+    ))
+}
+
+/// XLA element types (subset + catch-all variants used in dispatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    F16,
+    F32,
+    F64,
+    Tuple,
+}
+
+/// Shape of an array literal: dimensions + element type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug)]
+enum LiteralData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-resident literal value (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const PRIMITIVE_TYPE: PrimitiveType;
+    fn wrap(data: Vec<Self>) -> LiteralDataOpaque;
+    fn unwrap(data: &LiteralDataOpaque) -> Option<Vec<Self>>;
+}
+
+/// Opaque wrapper so `LiteralData` stays private while `NativeType` is
+/// implementable on the public trait surface.
+pub struct LiteralDataOpaque(LiteralData);
+
+macro_rules! native {
+    ($t:ty, $variant:ident, $ptype:ident) => {
+        impl NativeType for $t {
+            const PRIMITIVE_TYPE: PrimitiveType = PrimitiveType::$ptype;
+            fn wrap(data: Vec<Self>) -> LiteralDataOpaque {
+                LiteralDataOpaque(LiteralData::$variant(data))
+            }
+            fn unwrap(data: &LiteralDataOpaque) -> Option<Vec<Self>> {
+                match &data.0 {
+                    LiteralData::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32, F32);
+native!(f64, F64, F64);
+native!(i32, I32, S32);
+native!(i64, I64, S64);
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()).0,
+        }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.element_count() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::F64(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::I64(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Shape of an array (non-tuple) literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => PrimitiveType::F32,
+            LiteralData::F64(_) => PrimitiveType::F64,
+            LiteralData::I32(_) => PrimitiveType::S32,
+            LiteralData::I64(_) => PrimitiveType::S64,
+            LiteralData::Tuple(_) => {
+                return Err(Error("array_shape on a tuple literal".into()))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements back to a host `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&LiteralDataOpaque(self.data.clone()))
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple on a non-tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text ({path})")))
+    }
+}
+
+/// A computation handle built from an [`HloModuleProto`].
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client (construction always fails in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu (the PJRT CPU runtime)"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn i32_literals() {
+        let l = Literal::vec1(&[5i32, 6]);
+        assert_eq!(l.array_shape().unwrap().primitive_type(), PrimitiveType::S32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, 6]);
+    }
+
+    #[test]
+    fn device_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("offline xla stub"));
+    }
+}
