@@ -6,18 +6,31 @@
 //! seed set (outputs are batch-identical by construction, so this is a
 //! pure overhead/routing comparison), and reports the cross-partition
 //! message counts the `PartitionRouter` accumulates — the quantity a
-//! real deployment pays network latency for. LDG vs random partitioning
-//! traffic is reported for the rank-local-seed workload, where partition
-//! quality is what keeps sampling local.
+//! real deployment pays network latency for. On top (PR 2):
+//!
+//! * **cached vs uncached**: the rank-local *boundary* workload (seeds
+//!   the rank owns, 1-hop fanout) re-fetches halo rows every batch; the
+//!   `HaloCache` serves them locally, so the async+halo-cache pipeline's
+//!   message count must fall strictly below the synchronous/uncached
+//!   PR 1 baseline at 4 and 8 partitions (the 2-hop series additionally
+//!   reports the payload-row reduction when misses remain).
+//! * **sync vs async**: with a simulated per-RPC latency, the
+//!   `AsyncRouter` overlaps the per-partition round trips that the
+//!   synchronous path pays back to back.
+//!
+//! LDG vs random partitioning traffic is reported for the
+//! rank-local-seed workload, where partition quality is what keeps
+//! sampling local.
 
-use pyg2::coordinator::partitioned_loader;
+use pyg2::coordinator::{partitioned_loader, partitioned_loader_with, DistOptions};
 use pyg2::datasets::sbm::{self, SbmConfig};
 use pyg2::loader::{LoaderConfig, NeighborLoader};
-use pyg2::partition::{ldg_partition, random_partition};
+use pyg2::partition::{ldg_partition, random_partition, Partitioning};
 use pyg2::sampler::NeighborSamplerConfig;
 use pyg2::storage::{InMemoryFeatureStore, InMemoryGraphStore};
 use pyg2::util::BenchSuite;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn cfg() -> LoaderConfig {
     LoaderConfig {
@@ -27,6 +40,26 @@ fn cfg() -> LoaderConfig {
         sampler: NeighborSamplerConfig { fanouts: vec![10, 5], ..Default::default() },
         ..Default::default()
     }
+}
+
+/// The rank-0-local workload: seeds rank 0 owns, capped for bench time.
+fn rank_seeds(partitioning: &Partitioning) -> Vec<u32> {
+    let mut seeds = partitioning.nodes_of(0);
+    seeds.truncate(1024);
+    seeds
+}
+
+/// Run one epoch, returning (remote msgs, remote rows).
+fn epoch_traffic(loader: &pyg2::dist::DistNeighborLoader) -> (u64, u64) {
+    loader.reset_router_stats();
+    if let Some(cache) = loader.features().halo_cache() {
+        cache.reset_stats();
+    }
+    for b in loader.iter_epoch(0) {
+        std::hint::black_box(b.unwrap());
+    }
+    let stats = loader.router_stats();
+    (stats.remote_msgs, stats.remote_rows)
 }
 
 fn main() {
@@ -64,20 +97,125 @@ fn main() {
             }
         });
         // Traffic of exactly one epoch.
-        dist.reset_router_stats();
-        for b in dist.iter_epoch(0) {
-            std::hint::black_box(b.unwrap());
-        }
-        let stats = dist.router_stats();
+        let (msgs, rows) = epoch_traffic(&dist);
         println!(
-            "  {parts} partitions: edge-cut {cut:.3}, remote msgs {} ({} payload rows, \
-             {:.1}% of accesses remote)",
-            stats.remote_msgs,
-            stats.remote_rows,
-            100.0 * stats.remote_fraction()
+            "  {parts} partitions: edge-cut {cut:.3}, remote msgs {msgs} ({rows} payload \
+             rows, {:.1}% of accesses remote)",
+            100.0 * dist.router_stats().remote_fraction()
         );
-        suite.record_metric(format!("remote_msgs/{parts}_partitions"), stats.remote_msgs as f64);
-        suite.record_metric(format!("remote_rows/{parts}_partitions"), stats.remote_rows as f64);
+        suite.record_metric(format!("remote_msgs/{parts}_partitions"), msgs as f64);
+        suite.record_metric(format!("remote_rows/{parts}_partitions"), rows as f64);
+    }
+
+    // --- cached vs uncached (the PR 2 acceptance series) ---------------
+    // Boundary workload: rank-local seeds expanded one hop touch exactly
+    // the halo, so the async+halo-cache pipeline's message count must be
+    // strictly below the synchronous/uncached baseline.
+    let boundary_cfg = LoaderConfig {
+        batch_size: 64,
+        num_workers: 2,
+        shuffle: false,
+        sampler: NeighborSamplerConfig { fanouts: vec![10], ..Default::default() },
+        ..Default::default()
+    };
+    let cached_opts = DistOptions { halo_cache: true, async_fetch: true, ..Default::default() };
+    for parts in [4usize, 8] {
+        let partitioning = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let seeds = rank_seeds(&partitioning);
+
+        let base = partitioned_loader(&g, &partitioning, 0, seeds.clone(), boundary_cfg.clone())
+            .unwrap();
+        let (base_msgs, base_rows) = epoch_traffic(&base);
+
+        let cached = partitioned_loader_with(
+            &g,
+            &partitioning,
+            0,
+            seeds.clone(),
+            boundary_cfg.clone(),
+            cached_opts,
+        )
+        .unwrap();
+        let (cached_msgs, cached_rows) = epoch_traffic(&cached);
+        let cache = cached.features().halo_cache().unwrap();
+        println!(
+            "  boundary epoch, {parts} partitions: {base_msgs} msgs/{base_rows} rows \
+             sync+uncached -> {cached_msgs} msgs/{cached_rows} rows async+halo-cache \
+             ({}, replica {} rows / {} bytes)",
+            cache.stats(),
+            cache.num_cached(),
+            cache.replicated_bytes()
+        );
+        assert!(
+            cached_msgs < base_msgs,
+            "{parts} partitions: async+halo-cache msgs {cached_msgs} must be strictly \
+             below the sync/uncached baseline {base_msgs}"
+        );
+        suite.record_metric(format!("boundary_msgs/{parts}p_sync_uncached"), base_msgs as f64);
+        suite.record_metric(
+            format!("boundary_msgs/{parts}p_async_halo_cache"),
+            cached_msgs as f64,
+        );
+
+        // 2-hop series: misses remain (halo-of-halo expansions), but the
+        // payload rows crossing partitions still drop.
+        let deep_base =
+            partitioned_loader(&g, &partitioning, 0, seeds.clone(), cfg()).unwrap();
+        let (deep_base_msgs, deep_base_rows) = epoch_traffic(&deep_base);
+        let deep_cached =
+            partitioned_loader_with(&g, &partitioning, 0, seeds, cfg(), cached_opts).unwrap();
+        let (deep_cached_msgs, deep_cached_rows) = epoch_traffic(&deep_cached);
+        let deep_stats = deep_cached.cache_stats().unwrap();
+        println!(
+            "  2-hop epoch, {parts} partitions: {deep_base_msgs} msgs/{deep_base_rows} rows \
+             -> {deep_cached_msgs} msgs/{deep_cached_rows} rows ({deep_stats})"
+        );
+        suite.record_metric(format!("rank_local_rows/{parts}p_uncached"), deep_base_rows as f64);
+        suite.record_metric(
+            format!("rank_local_rows/{parts}p_halo_cache"),
+            deep_cached_rows as f64,
+        );
+    }
+
+    // --- sync vs async under simulated RPC latency ---------------------
+    // 200us per coalesced remote *feature* RPC (adjacency reads are
+    // counted but latency-free): the synchronous path pays the remote
+    // partitions back to back inside each batch; the async router
+    // overlaps them with each other and with other batches' sampling.
+    {
+        let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        let latency = Duration::from_micros(200);
+        let sync = partitioned_loader_with(
+            &g,
+            &partitioning,
+            0,
+            seeds.clone(),
+            cfg(),
+            DistOptions { latency, ..Default::default() },
+        )
+        .unwrap();
+        suite.bench("epoch_200us_rpc/sync", || {
+            for b in sync.iter_epoch(0) {
+                std::hint::black_box(b.unwrap());
+            }
+        });
+        let asynch = partitioned_loader_with(
+            &g,
+            &partitioning,
+            0,
+            seeds.clone(),
+            cfg(),
+            DistOptions { async_fetch: true, latency, ..Default::default() },
+        )
+        .unwrap();
+        suite.bench("epoch_200us_rpc/async", || {
+            for b in asynch.iter_epoch(0) {
+                std::hint::black_box(b.unwrap());
+            }
+        });
+        if let Some(overlap) = suite.speedup("epoch_200us_rpc/sync", "epoch_200us_rpc/async") {
+            println!("  async routing hides {overlap:.2}x of the 200us-RPC epoch time");
+        }
     }
 
     // Partition quality -> traffic, on the realistic rank-local seed set.
@@ -85,18 +223,15 @@ fn main() {
         ("ldg", ldg_partition(&g.edge_index, 4, 1.1).unwrap()),
         ("random", random_partition(n, 4, 7)),
     ] {
-        let mut rank_seeds = partitioning.nodes_of(0);
-        rank_seeds.truncate(1024);
-        let dist = partitioned_loader(&g, &partitioning, 0, rank_seeds, cfg()).unwrap();
-        for b in dist.iter_epoch(0) {
-            std::hint::black_box(b.unwrap());
-        }
-        let stats = dist.router_stats();
+        let dist =
+            partitioned_loader(&g, &partitioning, 0, rank_seeds(&partitioning), cfg()).unwrap();
+        let (_, rows) = epoch_traffic(&dist);
         println!(
-            "  rank-local seeds, {name}-partitioned (cut {:.3}): {stats}",
-            partitioning.edge_cut(&g.edge_index)
+            "  rank-local seeds, {name}-partitioned (cut {:.3}): {}",
+            partitioning.edge_cut(&g.edge_index),
+            dist.router_stats()
         );
-        suite.record_metric(format!("rank_local_remote_rows/{name}"), stats.remote_rows as f64);
+        suite.record_metric(format!("rank_local_remote_rows/{name}"), rows as f64);
     }
 
     suite.finish();
@@ -104,7 +239,8 @@ fn main() {
     println!(
         "\nD1: local pipeline {:.2}M sampled-nodes/s; partitioned runs produce identical \
          batches (tests/test_dist_equivalence.rs) while the message counts above quantify \
-         what a real cluster would ship over the network.",
+         what a real cluster would ship over the network — and the cached/async series \
+         what halo replication + overlap save.",
         local_nodes as f64 / t_local / 1e6
     );
 }

@@ -1,5 +1,9 @@
 //! Shared bench scaffolding: engine + a default-bucket SBM batch.
 
+// Each bench binary compiles its own copy of this module and most use
+// only a subset of it.
+#![allow(dead_code)]
+
 use pyg2::coordinator::default_loader;
 use pyg2::datasets::sbm::{self, SbmConfig};
 use pyg2::loader::Batch;

@@ -243,6 +243,26 @@ pub fn default_loader(
     loader
 }
 
+/// Optional layers of the distributed pipeline (PR 2): halo caching and
+/// async routing, plus the simulated per-RPC latency they hide.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistOptions {
+    /// Pre-replicate `Partitioning::halo_nodes` feature rows on the
+    /// local rank and serve them without an RPC.
+    pub halo_cache: bool,
+    /// Serve remote feature fetch plans on an
+    /// [`crate::dist::AsyncRouter`] pool, overlapping per-partition RPCs
+    /// with sampling.
+    pub async_fetch: bool,
+    /// Worker threads of the async fetch pool (0 = one per remote
+    /// partition).
+    pub async_workers: usize,
+    /// Simulated network round trip charged per coalesced remote
+    /// *feature* RPC (the payload-heavy path; sampler adjacency reads
+    /// are accounted as messages but pay no simulated latency).
+    pub latency: std::time::Duration,
+}
+
 /// The partitioned serving path (§2.3): wire a graph through the full
 /// distributed stack — one shared [`crate::dist::PartitionRouter`],
 /// partitioned feature + graph stores, and a
@@ -258,24 +278,222 @@ pub fn partitioned_loader(
     seeds: Vec<u32>,
     cfg: LoaderConfig,
 ) -> Result<crate::dist::DistNeighborLoader> {
-    use crate::dist::{DistNeighborLoader, PartitionRouter, PartitionedFeatureStore, PartitionedGraphStore};
+    partitioned_loader_with(graph, partitioning, local_rank, seeds, cfg, DistOptions::default())
+}
+
+/// [`partitioned_loader`] with the halo-cache / async-routing layers of
+/// [`DistOptions`]. Neither layer changes batch content (enforced by
+/// `tests/test_dist_equivalence.rs`); they change what the epoch *costs*:
+/// cached halo rows ship no RPC, async plans overlap the RPCs that
+/// remain.
+pub fn partitioned_loader_with(
+    graph: &crate::graph::Graph,
+    partitioning: &crate::partition::Partitioning,
+    local_rank: u32,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    opts: DistOptions,
+) -> Result<crate::dist::DistNeighborLoader> {
+    build_partitioned_loader(graph, partitioning, local_rank, seeds, cfg, opts, None)
+}
+
+/// Shared builder: `halo` overrides the cache's node list when the
+/// caller already computed it (the multi-rank simulation sweeps every
+/// partition's halo once via [`crate::partition::Partitioning::halos`]
+/// instead of re-scanning the edge list per rank).
+fn build_partitioned_loader(
+    graph: &crate::graph::Graph,
+    partitioning: &crate::partition::Partitioning,
+    local_rank: u32,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    opts: DistOptions,
+    halo: Option<&[u32]>,
+) -> Result<crate::dist::DistNeighborLoader> {
+    use crate::dist::{
+        AsyncRouter, DistNeighborLoader, HaloCache, PartitionRouter, PartitionedFeatureStore,
+        PartitionedGraphStore,
+    };
     use std::sync::Arc;
 
     let router = Arc::new(PartitionRouter::new(partitioning, local_rank)?);
     let gs = Arc::new(PartitionedGraphStore::from_graph(graph, Arc::clone(&router))?);
     let src_features = crate::storage::InMemoryFeatureStore::from_tensor(graph.x.clone());
-    let fs = Arc::new(PartitionedFeatureStore::partition(&src_features, router)?);
-    let mut loader = DistNeighborLoader::new(gs, fs, seeds, cfg);
+    let mut fs = PartitionedFeatureStore::partition(&src_features, router)?
+        .with_latency(opts.latency);
+    if opts.halo_cache {
+        let computed;
+        let halo = match halo {
+            Some(h) => h,
+            None => {
+                computed = partitioning.halo_nodes(&graph.edge_index, local_rank);
+                computed.as_slice()
+            }
+        };
+        let cache = HaloCache::build(halo, &src_features, graph.num_nodes(), local_rank)?;
+        fs = fs.with_halo_cache(Arc::new(cache))?;
+    }
+    if opts.async_fetch {
+        let workers = if opts.async_workers > 0 {
+            opts.async_workers
+        } else {
+            partitioning.num_parts.saturating_sub(1).max(1)
+        };
+        fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
+    }
+    let mut loader = DistNeighborLoader::new(gs, Arc::new(fs), seeds, cfg);
     if let Some(y) = &graph.y {
         loader = loader.with_labels(y.clone());
     }
     Ok(loader)
 }
 
+/// Result of a [`multi_rank_epoch`] simulation: the `rank × partition`
+/// traffic matrix plus per-rank cache counters and epoch totals.
+#[derive(Debug)]
+pub struct MultiRankReport {
+    pub matrix: crate::dist::TrafficMatrix,
+    /// Per-rank halo-cache counters (`None` when caching was off).
+    pub cache: Vec<Option<crate::dist::CacheStats>>,
+    /// Per-partition `(in_edges, out_edges)` shard sizes — the storage
+    /// side of the simulation (identical from every rank's view).
+    pub shard_edges: Vec<(usize, usize)>,
+    pub batches: usize,
+    pub sampled_nodes: usize,
+}
+
+/// Multi-rank simulation: one [`crate::dist::DistNeighborLoader`] per
+/// rank over that rank's *own* seed shard (the nodes its partition
+/// owns — the realistic distributed workload, where partition quality
+/// keeps sampling local), each viewing the cluster from its rank. Runs
+/// `epochs` epochs per rank and aggregates every router's
+/// per-destination counters into a [`crate::dist::TrafficMatrix`].
+///
+/// `ranks` must not exceed `partitioning.num_parts` (pass
+/// `partitioning.num_parts` for the full cluster; fewer simulates a
+/// partially deployed one).
+pub fn multi_rank_epoch(
+    graph: &crate::graph::Graph,
+    partitioning: &crate::partition::Partitioning,
+    ranks: usize,
+    cfg: &LoaderConfig,
+    opts: DistOptions,
+    epochs: u64,
+) -> Result<MultiRankReport> {
+    use crate::error::Error;
+
+    if ranks == 0 || ranks > partitioning.num_parts {
+        return Err(Error::Config(format!(
+            "{ranks} ranks over {} partitions (need 1..=num_parts)",
+            partitioning.num_parts
+        )));
+    }
+    let mut matrix = crate::dist::TrafficMatrix::new(ranks, partitioning.num_parts);
+    let mut cache = Vec::with_capacity(ranks);
+    let mut shard_edges = Vec::new();
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    // One edge sweep computes every rank's halo (vs one sweep per rank).
+    let halos = if opts.halo_cache {
+        Some(partitioning.halos(&graph.edge_index))
+    } else {
+        None
+    };
+    for rank in 0..ranks as u32 {
+        let seeds = partitioning.nodes_of(rank);
+        let loader = build_partitioned_loader(
+            graph,
+            partitioning,
+            rank,
+            seeds,
+            cfg.clone(),
+            opts,
+            halos.as_ref().map(|h| h[rank as usize].as_slice()),
+        )?;
+        for epoch in 0..epochs {
+            for batch in loader.iter_epoch(epoch) {
+                let b = batch?;
+                batches += 1;
+                sampled_nodes += b.num_real_nodes();
+            }
+        }
+        matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
+        cache.push(loader.cache_stats());
+        if rank == 0 {
+            shard_edges = loader.graph().shard_edge_counts();
+        }
+    }
+    Ok(MultiRankReport { matrix, cache, shard_edges, batches, sampled_nodes })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datasets::sbm::{self, SbmConfig};
+
+    #[test]
+    fn multi_rank_matrix_covers_all_ranks_and_cache_cuts_rows() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 400, seed: 3, ..Default::default() })
+            .unwrap();
+        let p = crate::partition::ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        let cfg = LoaderConfig {
+            batch_size: 32,
+            num_workers: 1,
+            shuffle: false,
+            sampler: crate::sampler::NeighborSamplerConfig {
+                fanouts: vec![4, 2],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let base =
+            multi_rank_epoch(&g, &p, 4, &cfg, DistOptions::default(), 1).unwrap();
+        assert_eq!(base.matrix.num_ranks(), 4);
+        assert_eq!(base.matrix.num_parts(), 4);
+        assert!(base.batches >= 4, "every rank ran at least one batch");
+        assert!(base.sampled_nodes > 0);
+        for r in 0..4 {
+            assert!(base.matrix.msgs(r, r) > 0, "rank {r} made local accesses");
+        }
+        assert!(base.matrix.total_remote_msgs() > 0, "4-way epoch crosses partitions");
+        assert!(base.cache.iter().all(|c| c.is_none()), "caching was off");
+        assert_eq!(base.shard_edges.len(), 4);
+        let stored: usize = base.shard_edges.iter().map(|&(i, _)| i).sum();
+        assert_eq!(stored, g.num_edges(), "in-shards tile the edge set");
+
+        // Same workload with halo caching + async routing: strictly fewer
+        // payload rows cross partitions (halo hits ship nothing), and the
+        // per-rank caches report the hits.
+        let cached = multi_rank_epoch(
+            &g,
+            &p,
+            4,
+            &cfg,
+            DistOptions { halo_cache: true, async_fetch: true, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        assert!(
+            cached.matrix.total_remote_rows() < base.matrix.total_remote_rows(),
+            "halo cache must cut cross-partition rows: {} vs {}",
+            cached.matrix.total_remote_rows(),
+            base.matrix.total_remote_rows()
+        );
+        for (r, stats) in cached.cache.iter().enumerate() {
+            let stats = stats.expect("cache stats present");
+            assert!(stats.hits > 0, "rank {r} served halo rows locally");
+        }
+    }
+
+    #[test]
+    fn multi_rank_rejects_bad_rank_counts() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 100, seed: 1, ..Default::default() })
+            .unwrap();
+        let p = crate::partition::ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+        let cfg = LoaderConfig { batch_size: 16, num_workers: 1, ..Default::default() };
+        assert!(multi_rank_epoch(&g, &p, 0, &cfg, DistOptions::default(), 1).is_err());
+        assert!(multi_rank_epoch(&g, &p, 3, &cfg, DistOptions::default(), 1).is_err());
+    }
 
     fn engine() -> Option<Engine> {
         if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -1,0 +1,195 @@
+//! Async routing: per-remote-partition fetch plans served on
+//! [`crate::util::ThreadPool`] workers and joined as futures at batch
+//! assembly.
+//!
+//! The synchronous PR 1 fetch path walked the remote partitions one at a
+//! time, paying each simulated RPC round trip back to back. The
+//! [`AsyncRouter`] instead dispatches each remote partition's coalesced
+//! fetch as a job on its own worker pool and returns a
+//! [`PendingFetch`] — a future joined when the batch is assembled. The
+//! per-partition RPCs of one batch therefore overlap each other *and*
+//! the sampling/assembly work the loader's own workers are doing on
+//! other batches (the fetches of batch N+1 run while batch N is still
+//! being sampled), which is exactly the latency-hiding overlap real
+//! distributed loaders use.
+//!
+//! The router carries no policy: routing decisions (which rows go to
+//! which partition, what gets filtered by the
+//! [`super::HaloCache`]) stay in [`super::PartitionedFeatureStore`];
+//! this module only turns a ready-made [`FetchPlan`] into an in-flight
+//! fetch. Dedicated pool: fetch jobs must never queue behind the
+//! loader's own batch jobs, or a batch job joining its fetches could
+//! wait on a worker that is itself blocked — a classic self-deadlock.
+//! Fetch jobs only read a shard and sleep the simulated latency, so
+//! they always drain.
+
+use crate::error::Result;
+use crate::storage::{FeatureKey, FeatureStore};
+use crate::tensor::Tensor;
+use crate::util::{TaskHandle, ThreadPool};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One remote partition's share of a routed multi-row fetch: the result
+/// rows it must fill (`positions`, indices into the caller's output
+/// tensor) and the shard-local rows to read (`shard_idx`, parallel to
+/// `positions`).
+#[derive(Clone, Debug)]
+pub struct FetchPlan {
+    /// Destination partition the plan is routed to.
+    pub part: u32,
+    pub positions: Vec<usize>,
+    pub shard_idx: Vec<usize>,
+}
+
+/// An in-flight remote fetch: join it to copy the fetched rows into the
+/// output tensor at the planned positions.
+pub struct PendingFetch {
+    positions: Vec<usize>,
+    handle: TaskHandle<Result<Tensor>>,
+}
+
+impl PendingFetch {
+    /// Block until the fetch lands and scatter its rows into `out`
+    /// (row `k` of the fetched tensor → `out` row `positions[k]`).
+    pub fn join_into(self, out: &mut Tensor) -> Result<()> {
+        let fetched = self.handle.join()?;
+        for (k, &pos) in self.positions.iter().enumerate() {
+            out.row_mut(pos).copy_from_slice(fetched.row(k));
+        }
+        Ok(())
+    }
+}
+
+/// Serves [`FetchPlan`]s asynchronously on a dedicated worker pool.
+pub struct AsyncRouter {
+    pool: ThreadPool,
+}
+
+impl AsyncRouter {
+    /// A router with `workers` fetch threads (clamped to ≥ 1). Size it
+    /// near the remote-partition count so one batch's plans can all be
+    /// in flight at once.
+    pub fn new(workers: usize) -> Self {
+        Self { pool: ThreadPool::new(workers) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Dispatch `plan` against `shard`: the coalesced read (plus the
+    /// simulated RPC `latency`) runs on a router worker while the caller
+    /// keeps sampling/assembling. Join the returned [`PendingFetch`] at
+    /// batch assembly.
+    pub fn dispatch(
+        &self,
+        shard: Arc<dyn FeatureStore>,
+        key: FeatureKey,
+        plan: FetchPlan,
+        latency: Duration,
+    ) -> PendingFetch {
+        let FetchPlan { part: _, positions, shard_idx } = plan;
+        let handle = self.pool.spawn(move || {
+            let fetched = shard.get(&key, &shard_idx);
+            if !latency.is_zero() {
+                // Simulated network round trip, paid on the router worker
+                // so it overlaps the caller's other work.
+                std::thread::sleep(latency);
+            }
+            fetched
+        });
+        PendingFetch { positions, handle }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::InMemoryFeatureStore;
+    use std::time::Instant;
+
+    fn shard(n: usize, f: usize, offset: f32) -> Arc<dyn FeatureStore> {
+        let data: Vec<f32> = (0..n * f).map(|i| offset + i as f32).collect();
+        Arc::new(InMemoryFeatureStore::from_tensor(
+            Tensor::new(vec![n, f], data).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn dispatched_plans_fill_planned_positions() {
+        let router = AsyncRouter::new(2);
+        let key = FeatureKey::default_x();
+        let a = shard(4, 2, 0.0);
+        let b = shard(4, 2, 100.0);
+        let mut out = Tensor::zeros(vec![4, 2]);
+        let pending = vec![
+            router.dispatch(
+                Arc::clone(&a),
+                key.clone(),
+                FetchPlan { part: 1, positions: vec![3, 0], shard_idx: vec![1, 2] },
+                Duration::ZERO,
+            ),
+            router.dispatch(
+                b,
+                key.clone(),
+                FetchPlan { part: 2, positions: vec![2], shard_idx: vec![0] },
+                Duration::ZERO,
+            ),
+        ];
+        for p in pending {
+            p.join_into(&mut out).unwrap();
+        }
+        // Shard a row 1 -> out row 3; shard a row 2 -> out row 0.
+        assert_eq!(out.row(3), &[2.0, 3.0]);
+        assert_eq!(out.row(0), &[4.0, 5.0]);
+        // Shard b row 0 -> out row 2.
+        assert_eq!(out.row(2), &[100.0, 101.0]);
+        // Row 1 untouched.
+        assert_eq!(out.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn fetch_errors_surface_at_join() {
+        let router = AsyncRouter::new(1);
+        let s = shard(4, 2, 0.0);
+        let mut out = Tensor::zeros(vec![2, 2]);
+        let p = router.dispatch(
+            s,
+            FeatureKey::default_x(),
+            FetchPlan { part: 1, positions: vec![0], shard_idx: vec![9] }, // out of range
+            Duration::ZERO,
+        );
+        assert!(p.join_into(&mut out).is_err());
+        assert_eq!(out.data(), &[0.0; 4], "failed fetch must not write");
+    }
+
+    #[test]
+    fn concurrent_latencies_overlap() {
+        // Two 50ms RPCs on two workers should take ~50ms, not ~100ms —
+        // the whole point of async routing. Generous bound for CI noise.
+        let router = AsyncRouter::new(2);
+        let key = FeatureKey::default_x();
+        let s = shard(4, 2, 0.0);
+        let t0 = Instant::now();
+        let pending: Vec<PendingFetch> = (0..2)
+            .map(|p| {
+                router.dispatch(
+                    Arc::clone(&s),
+                    key.clone(),
+                    FetchPlan { part: p, positions: vec![p as usize], shard_idx: vec![0] },
+                    Duration::from_millis(50),
+                )
+            })
+            .collect();
+        let mut out = Tensor::zeros(vec![2, 2]);
+        for p in pending {
+            p.join_into(&mut out).unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(95),
+            "two overlapped 50ms RPCs took {elapsed:?}"
+        );
+    }
+}

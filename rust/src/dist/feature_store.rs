@@ -6,8 +6,21 @@
 //! Requests are *coalesced*: one simulated RPC per remote partition
 //! touched per call (the payload rows are counted separately), matching
 //! how a real RPC-backed store batches its fetches. The local partition
-//! is served first and costs no RPC.
+//! is served first and costs no RPC. Two optional layers sit on the
+//! remote path:
+//!
+//! * a [`HaloCache`] filters the remote rows first — replicated halo
+//!   rows are copied locally (hit) and only the misses remain in the
+//!   per-partition fetch plans, so a fully cached partition costs no
+//!   RPC at all;
+//! * an [`AsyncRouter`] serves the remaining plans on its own worker
+//!   pool, overlapping the per-partition RPC latencies with each other
+//!   and with sampling of other batches; the futures are joined before
+//!   `get` returns, so results are bit-identical to the synchronous
+//!   path.
 
+use super::async_router::{AsyncRouter, FetchPlan, PendingFetch};
+use super::halo_cache::HaloCache;
 use super::PartitionRouter;
 use crate::error::{Error, Result};
 use crate::storage::{FeatureKey, FeatureStore};
@@ -36,6 +49,10 @@ pub struct PartitionedFeatureStore {
     local_row: Vec<u32>,
     /// Simulated per-RPC latency (see [`PartitionedStoreConfig`]).
     latency: Duration,
+    /// Optional halo replica filtering the remote path.
+    halo_cache: Option<Arc<HaloCache>>,
+    /// Optional async fetch service for the remaining remote plans.
+    async_router: Option<Arc<AsyncRouter>>,
 }
 
 impl PartitionedFeatureStore {
@@ -78,6 +95,8 @@ impl PartitionedFeatureStore {
             router,
             local_row,
             latency: Duration::ZERO,
+            halo_cache: None,
+            async_router: None,
         })
     }
 
@@ -99,9 +118,63 @@ impl PartitionedFeatureStore {
         Ok(store)
     }
 
+    /// Charge `latency` per coalesced remote RPC from now on.
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Install a halo replica on the remote path. The cache must cover
+    /// the same node set, view the same rank, and hold only foreign
+    /// rows — local rows never consult it.
+    pub fn with_halo_cache(mut self, cache: Arc<HaloCache>) -> Result<Self> {
+        if cache.num_nodes() != self.router.num_nodes() {
+            return Err(Error::Storage(format!(
+                "halo cache covers {} nodes, store has {}",
+                cache.num_nodes(),
+                self.router.num_nodes()
+            )));
+        }
+        if cache.local_rank() != self.router.local_rank() {
+            return Err(Error::Storage(format!(
+                "halo cache built for rank {}, store views rank {}",
+                cache.local_rank(),
+                self.router.local_rank()
+            )));
+        }
+        if let Some(v) = cache
+            .cached_nodes()
+            .into_iter()
+            .find(|&v| self.router.owner(v) == self.router.local_rank())
+        {
+            return Err(Error::Storage(format!(
+                "halo cache replicates locally owned node {v}"
+            )));
+        }
+        self.halo_cache = Some(cache);
+        Ok(self)
+    }
+
+    /// Serve the remaining remote fetch plans through `router`'s worker
+    /// pool instead of synchronously in the calling thread.
+    pub fn with_async_router(mut self, router: Arc<AsyncRouter>) -> Self {
+        self.async_router = Some(router);
+        self
+    }
+
     /// The shared router (traffic counters live here).
     pub fn router(&self) -> &Arc<PartitionRouter> {
         &self.router
+    }
+
+    /// The halo replica, if one is installed.
+    pub fn halo_cache(&self) -> Option<&Arc<HaloCache>> {
+        self.halo_cache.as_ref()
+    }
+
+    /// Whether remote fetches are served asynchronously.
+    pub fn is_async(&self) -> bool {
+        self.async_router.is_some()
     }
 
     /// Number of partitions backing this store.
@@ -120,32 +193,85 @@ impl PartitionedFeatureStore {
         // validates every row id).
         let buckets = self.router.group_positions_by_owner(idx)?;
 
-        // Local-first: the local shard is read directly, then one
-        // coalesced (simulated) RPC per remote partition touched.
-        for p in std::iter::once(local).chain((0..parts).filter(|&p| p != local)) {
-            let positions = &buckets[p];
-            if positions.is_empty() {
-                continue;
-            }
+        // Local-first: the local shard is read directly and costs no RPC.
+        if !buckets[local].is_empty() {
+            let positions = &buckets[local];
             let shard_idx: Vec<usize> = positions
                 .iter()
                 .map(|&pos| self.local_row[idx[pos]] as usize)
                 .collect();
-            let fetched = self.shards[p].get(key, &shard_idx)?;
+            let fetched = self.shards[local].get(key, &shard_idx)?;
             for (k, &pos) in positions.iter().enumerate() {
                 out.row_mut(pos).copy_from_slice(fetched.row(k));
             }
-            if p == local {
-                self.router.record_local();
-            } else {
-                self.router.record_remote(positions.len() as u64);
-                if !self.latency.is_zero() {
-                    // Simulated network round trip for this RPC.
-                    std::thread::sleep(self.latency);
+            self.router.record_local();
+        }
+
+        // Remote partitions: halo-cache filter first, then one coalesced
+        // RPC per partition still holding misses — dispatched async when
+        // an AsyncRouter is installed, served inline otherwise.
+        let mut pending: Vec<PendingFetch> = Vec::new();
+        for (p, positions) in buckets.iter().enumerate() {
+            if p == local || positions.is_empty() {
+                continue;
+            }
+            let miss_positions: Vec<usize> = match &self.halo_cache {
+                Some(cache) => {
+                    let mut misses = Vec::new();
+                    for &pos in positions {
+                        let v = idx[pos] as u32;
+                        if !cache.try_serve(key, v, out.row_mut(pos))? {
+                            misses.push(pos);
+                        }
+                    }
+                    misses
+                }
+                None => positions.clone(),
+            };
+            if miss_positions.is_empty() {
+                // Every row served from the replica: the RPC is avoided
+                // entirely (the strict message reduction the halo cache
+                // exists for).
+                continue;
+            }
+            let shard_idx: Vec<usize> = miss_positions
+                .iter()
+                .map(|&pos| self.local_row[idx[pos]] as usize)
+                .collect();
+            self.router.record_remote_to(p as u32, miss_positions.len() as u64);
+            match &self.async_router {
+                Some(ar) => pending.push(ar.dispatch(
+                    Arc::clone(&self.shards[p]),
+                    key.clone(),
+                    FetchPlan { part: p as u32, positions: miss_positions, shard_idx },
+                    self.latency,
+                )),
+                None => {
+                    let fetched = self.shards[p].get(key, &shard_idx)?;
+                    for (k, &pos) in miss_positions.iter().enumerate() {
+                        out.row_mut(pos).copy_from_slice(fetched.row(k));
+                    }
+                    if !self.latency.is_zero() {
+                        // Simulated network round trip for this RPC.
+                        std::thread::sleep(self.latency);
+                    }
                 }
             }
         }
-        Ok(())
+
+        // Join the in-flight fetches (batch-assembly point): the
+        // per-partition RPC latencies overlapped above.
+        let mut first_err = None;
+        for fetch in pending {
+            if let Err(e) = fetch.join_into(out) {
+                // Keep joining so no fetch is left writing after return.
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -233,6 +359,10 @@ mod tests {
         assert_eq!(s.local_msgs, 1, "one local access");
         assert_eq!(s.remote_msgs, 2, "one coalesced RPC per remote partition");
         assert_eq!(s.remote_rows, 3, "rows 1, 4 and 2");
+        // Per-partition breakdown matches.
+        let t = part.router().traffic_by_partition();
+        assert_eq!(t.msgs, vec![1, 1, 1]);
+        assert_eq!(t.rows, vec![0, 2, 1]);
     }
 
     #[test]
@@ -311,5 +441,120 @@ mod tests {
         let p = Partitioning { assignment: vec![0; 10], num_parts: 1 };
         let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
         assert!(PartitionedFeatureStore::partition(&src, router).is_err());
+    }
+
+    // --- halo cache + async router layers ------------------------------
+
+    /// Every node is halo of every foreign partition in the `v % parts`
+    /// round-robin layout over a complete-ish access pattern, so caching
+    /// all foreign rows is legal for these tests.
+    fn cached_store(n: usize, parts: usize) -> PartitionedFeatureStore {
+        let src = src_store(n, 3);
+        let assignment: Vec<u32> = (0..n).map(|v| (v % parts) as u32).collect();
+        let p = Partitioning { assignment, num_parts: parts };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        let halo: Vec<u32> = (0..n as u32).filter(|&v| v as usize % parts != 0).collect();
+        let cache = Arc::new(HaloCache::build(&halo, &src, n, 0).unwrap());
+        PartitionedFeatureStore::partition(&src, router)
+            .unwrap()
+            .with_halo_cache(cache)
+            .unwrap()
+    }
+
+    #[test]
+    fn fully_cached_remote_rows_cost_no_rpc_and_match_source() {
+        let n = 12;
+        let store = cached_store(n, 3);
+        let src = src_store(n, 3);
+        store.router().reset_stats();
+        let idx = [1usize, 2, 4, 5, 0, 3];
+        let got = store.get(&FeatureKey::default_x(), &idx).unwrap();
+        let want = src.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(got.data(), want.data(), "cached rows byte-identical");
+        let s = store.router().stats();
+        assert_eq!(s.remote_msgs, 0, "all remote rows were halo hits");
+        assert_eq!(s.local_msgs, 1);
+        let c = store.halo_cache().unwrap().stats();
+        assert_eq!(c.hits, 4, "rows 1, 2, 4, 5");
+        assert_eq!(c.misses, 0);
+    }
+
+    #[test]
+    fn partial_cache_still_coalesces_misses() {
+        let n = 12;
+        let src = src_store(n, 3);
+        let assignment: Vec<u32> = (0..n).map(|v| (v % 3) as u32).collect();
+        let p = Partitioning { assignment, num_parts: 3 };
+        let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
+        // Cache only node 1 of partition 1; nodes 4, 7 stay remote.
+        let cache = Arc::new(HaloCache::build(&[1], &src, n, 0).unwrap());
+        let store = PartitionedFeatureStore::partition(&src, router)
+            .unwrap()
+            .with_halo_cache(cache)
+            .unwrap();
+        let idx = [1usize, 4, 7, 2, 0];
+        let got = store.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(got.data(), src.get(&FeatureKey::default_x(), &idx).unwrap().data());
+        let s = store.router().stats();
+        // Partition 1 still pays one RPC (misses 4, 7); partition 2 pays
+        // one (row 2); the hit shrank partition 1's payload to 2 rows.
+        assert_eq!(s.remote_msgs, 2);
+        assert_eq!(s.remote_rows, 3);
+        let c = store.halo_cache().unwrap().stats();
+        // Every remote row consulted the cache: 1 hit, misses 4, 7 and 2.
+        assert_eq!((c.hits, c.misses), (1, 3));
+        assert_eq!(c.total_requests(), 4, "hits + misses = remote row requests");
+    }
+
+    #[test]
+    fn async_router_yields_identical_results() {
+        let n = 24;
+        let src = src_store(n, 3);
+        let sync_store = partitioned(n, 4);
+        let async_store = partitioned(n, 4)
+            .with_latency(Duration::from_micros(50))
+            .with_async_router(Arc::new(AsyncRouter::new(3)));
+        assert!(async_store.is_async());
+        let idx = [23usize, 0, 7, 7, 11, 16, 3, 9];
+        let a = sync_store.get(&FeatureKey::default_x(), &idx).unwrap();
+        let b = async_store.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_eq!(a.data(), src.get(&FeatureKey::default_x(), &idx).unwrap().data());
+        // Same accounting as the synchronous path.
+        assert_eq!(
+            sync_store.router().stats().remote_msgs,
+            async_store.router().stats().remote_msgs
+        );
+        // get_into keeps the padding contract through the async path.
+        let mut out = Tensor::full(vec![4, 3], 9.0);
+        async_store.get_into(&FeatureKey::default_x(), &[5], &mut out).unwrap();
+        assert_eq!(out.row(0), src.get(&FeatureKey::default_x(), &[5]).unwrap().row(0));
+        for r in 1..4 {
+            assert_eq!(out.row(r), &[0.0; 3]);
+        }
+    }
+
+    #[test]
+    fn async_errors_surface() {
+        // Unknown key reaches feature_dim before any dispatch; the error
+        // path with in-flight fetches is covered by async_router tests.
+        let store = partitioned(12, 3).with_async_router(Arc::new(AsyncRouter::new(2)));
+        assert!(store.get(&FeatureKey::new("nope", "x"), &[0]).is_err());
+        assert!(store.get(&FeatureKey::default_x(), &[12]).is_err());
+    }
+
+    #[test]
+    fn mismatched_cache_rejected() {
+        let n = 12;
+        let src = src_store(n, 3);
+        // Wrong node count.
+        let small = Arc::new(HaloCache::build(&[1], &src_store(6, 3), 6, 0).unwrap());
+        assert!(partitioned(n, 3).with_halo_cache(small).is_err());
+        // Wrong rank.
+        let wrong_rank = Arc::new(HaloCache::build(&[1], &src, n, 1).unwrap());
+        assert!(partitioned(n, 3).with_halo_cache(wrong_rank).is_err());
+        // Replicating a locally owned row is a wiring bug.
+        let local_row = Arc::new(HaloCache::build(&[0], &src, n, 0).unwrap());
+        assert!(partitioned(n, 3).with_halo_cache(local_row).is_err());
     }
 }

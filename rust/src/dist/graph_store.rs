@@ -141,6 +141,17 @@ impl PartitionedGraphStore {
         (&shard.csr.indices[lo..hi], &shard.csr.perm[lo..hi])
     }
 
+    /// Per-partition `(in_edges, out_edges)` shard sizes — the storage
+    /// each simulated node actually holds. Together with
+    /// [`crate::dist::HaloCache::replicated_bytes`] this is the memory
+    /// side of the halo-caching trade-off the multi-rank CLI reports.
+    pub fn shard_edge_counts(&self) -> Vec<(usize, usize)> {
+        self.shards
+            .iter()
+            .map(|s| (s.csc.num_edges(), s.csr.num_edges()))
+            .collect()
+    }
+
     /// Number of edges whose endpoints live on different partitions (the
     /// traffic-generating edges; equals `edge_cut * num_edges`).
     pub fn num_cut_edges(&self) -> usize {
@@ -254,6 +265,18 @@ mod tests {
             total += shard.csc.num_edges();
         }
         assert_eq!(total, part.src.len());
+    }
+
+    #[test]
+    fn shard_edge_counts_tile_the_edge_set() {
+        let (_, part) = sbm_stores(4);
+        let counts = part.shard_edge_counts();
+        assert_eq!(counts.len(), 4);
+        let in_total: usize = counts.iter().map(|&(i, _)| i).sum();
+        let out_total: usize = counts.iter().map(|&(_, o)| o).sum();
+        // Every edge lives in exactly one in-shard and one out-shard.
+        assert_eq!(in_total, part.src.len());
+        assert_eq!(out_total, part.src.len());
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Halo caching: pre-replicate the feature rows of
+//! [`crate::partition::Partitioning::halo_nodes`] on the local rank and
+//! serve them without an RPC.
+//!
+//! The 1-hop halo of a partition is exactly the set of foreign rows its
+//! sampler touches when expanding locally owned nodes by one hop, so
+//! replicating those rows converts the dominant share of remote feature
+//! traffic into local reads — the locality/overlap trade PyG 2.0's
+//! distributed story (§2.3) and TF-GNN both rely on. The cache is a pure
+//! read-through filter in front of the [`super::PartitionRouter`]ed fetch
+//! path: a hit copies the replicated row (byte-identical to what the
+//! owning shard would return) and costs no message; a miss falls through
+//! to the routed fetch. Hits, misses and bytes are instrumented so the
+//! traffic saved and the replication cost are both measurable
+//! (`bench_dist_partition` reports cached vs uncached series).
+
+use crate::error::{Error, Result};
+use crate::storage::{FeatureKey, FeatureStore};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sentinel for "node not cached" in the slot map.
+const NOT_CACHED: u32 = u32::MAX;
+
+/// Snapshot of a cache's hit/miss/bytes counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Remote row requests served from the replica (no RPC).
+    pub hits: u64,
+    /// Remote row requests that fell through to the routed fetch.
+    pub misses: u64,
+    /// Feature bytes served locally by the hits.
+    pub bytes_served: u64,
+}
+
+impl CacheStats {
+    /// Total remote row requests the cache saw (hits + misses).
+    pub fn total_requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of remote row requests served locally.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total_requests();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} ({:.1}% hit rate, {} bytes served locally)",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.bytes_served
+        )
+    }
+}
+
+/// Replicated halo feature rows of one rank.
+pub struct HaloCache {
+    local_rank: u32,
+    /// Replica row of global node `v`, [`NOT_CACHED`] when absent.
+    slot: Vec<u32>,
+    /// Cached halo node count.
+    num_cached: usize,
+    /// Replicated rows per feature group, in halo order.
+    rows: BTreeMap<FeatureKey, Tensor>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_served: AtomicU64,
+}
+
+impl HaloCache {
+    /// Replicate the rows of `halo` (ascending global node ids, as
+    /// [`crate::partition::Partitioning::halo_nodes`] returns them) from
+    /// `src` for every feature group. `src` must be the *unpartitioned*
+    /// source store — the same one the shards were cut from — so cached
+    /// rows are byte-identical to routed fetches by construction.
+    pub fn build(
+        halo: &[u32],
+        src: &dyn FeatureStore,
+        num_nodes: usize,
+        local_rank: u32,
+    ) -> Result<Self> {
+        let mut slot = vec![NOT_CACHED; num_nodes];
+        for (i, &v) in halo.iter().enumerate() {
+            if v as usize >= num_nodes {
+                return Err(Error::Storage(format!(
+                    "halo node {v} out of range ({num_nodes} nodes)"
+                )));
+            }
+            slot[v as usize] = i as u32;
+        }
+        let idx: Vec<usize> = halo.iter().map(|&v| v as usize).collect();
+        let mut rows = BTreeMap::new();
+        for key in src.keys() {
+            if src.num_rows(&key)? != num_nodes {
+                return Err(Error::Storage(format!(
+                    "cannot cache group {key:?}: not node-aligned"
+                )));
+            }
+            rows.insert(key.clone(), src.get(&key, &idx)?);
+        }
+        Ok(Self {
+            local_rank,
+            slot,
+            num_cached: halo.len(),
+            rows,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+        })
+    }
+
+    /// The rank whose halo this cache replicates.
+    pub fn local_rank(&self) -> u32 {
+        self.local_rank
+    }
+
+    /// Number of nodes the slot map covers.
+    pub fn num_nodes(&self) -> usize {
+        self.slot.len()
+    }
+
+    /// Replicated halo rows (per feature group).
+    pub fn num_cached(&self) -> usize {
+        self.num_cached
+    }
+
+    /// Whether node `v` is replicated here.
+    pub fn contains(&self, v: u32) -> bool {
+        self.slot.get(v as usize).is_some_and(|&s| s != NOT_CACHED)
+    }
+
+    /// Global node ids of every replicated row (ascending).
+    pub fn cached_nodes(&self) -> Vec<u32> {
+        self.slot
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s != NOT_CACHED)
+            .map(|(v, _)| v as u32)
+            .collect()
+    }
+
+    /// Memory cost of the replica: bytes held across all feature groups.
+    pub fn replicated_bytes(&self) -> u64 {
+        self.rows
+            .values()
+            .map(|t| (t.numel() * std::mem::size_of::<f32>()) as u64)
+            .sum()
+    }
+
+    /// Try to serve the feature row of node `v` from the replica,
+    /// copying it into `dst` (`[F]`). Returns `true` on a hit. Every
+    /// call is accounted, so `hits + misses` equals the total remote row
+    /// requests that passed through the cache.
+    pub fn try_serve(&self, key: &FeatureKey, v: u32, dst: &mut [f32]) -> Result<bool> {
+        let slot = self.slot.get(v as usize).copied().unwrap_or(NOT_CACHED);
+        if slot == NOT_CACHED {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(false);
+        }
+        let t = self
+            .rows
+            .get(key)
+            .ok_or_else(|| Error::Storage(format!("halo cache has no group {key:?}")))?;
+        let row = t.row(slot as usize);
+        if row.len() != dst.len() {
+            return Err(Error::Shape(format!(
+                "cached row has {} cols, destination {}",
+                row.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(row);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.bytes_served
+            .fetch_add((row.len() * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Current hit/miss/bytes counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_served: self.bytes_served.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the counters (benches measure per-phase behaviour).
+    pub fn reset_stats(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.bytes_served.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::InMemoryFeatureStore;
+
+    fn src(n: usize, f: usize) -> InMemoryFeatureStore {
+        let data: Vec<f32> = (0..n * f).map(|i| i as f32).collect();
+        InMemoryFeatureStore::from_tensor(Tensor::new(vec![n, f], data).unwrap())
+    }
+
+    #[test]
+    fn hits_copy_source_rows_and_account_bytes() {
+        let store = src(10, 3);
+        let cache = HaloCache::build(&[2, 5, 7], &store, 10, 0).unwrap();
+        assert_eq!(cache.num_cached(), 3);
+        assert_eq!(cache.cached_nodes(), vec![2, 5, 7]);
+        assert!(cache.contains(5));
+        assert!(!cache.contains(4));
+        assert_eq!(cache.replicated_bytes(), 3 * 3 * 4);
+
+        let key = FeatureKey::default_x();
+        let mut row = [0.0f32; 3];
+        assert!(cache.try_serve(&key, 5, &mut row).unwrap());
+        assert_eq!(row, [15.0, 16.0, 17.0]); // source row 5
+        assert!(!cache.try_serve(&key, 4, &mut row).unwrap());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_served, 12);
+        assert_eq!(s.total_requests(), 2);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        cache.reset_stats();
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn unknown_group_and_bad_halo_rejected() {
+        let store = src(10, 3);
+        assert!(HaloCache::build(&[10], &store, 10, 0).is_err());
+        let cache = HaloCache::build(&[1], &store, 10, 0).unwrap();
+        let mut row = [0.0f32; 3];
+        assert!(cache.try_serve(&FeatureKey::new("ghost", "x"), 1, &mut row).is_err());
+        // Wrong destination width errors instead of corrupting.
+        let mut narrow = [0.0f32; 2];
+        assert!(cache.try_serve(&FeatureKey::default_x(), 1, &mut narrow).is_err());
+    }
+
+    #[test]
+    fn misaligned_group_rejected_at_build() {
+        let store = src(10, 3);
+        store.put(FeatureKey::new("item", "x"), Tensor::zeros(vec![4, 2]));
+        assert!(HaloCache::build(&[1], &store, 10, 0).is_err());
+    }
+
+    #[test]
+    fn empty_halo_is_valid_and_never_hits() {
+        let store = src(6, 2);
+        let cache = HaloCache::build(&[], &store, 6, 1).unwrap();
+        assert_eq!(cache.num_cached(), 0);
+        let mut row = [0.0f32; 2];
+        assert!(!cache.try_serve(&FeatureKey::default_x(), 3, &mut row).unwrap());
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.local_rank(), 1);
+        assert_eq!(cache.num_nodes(), 6);
+    }
+}

@@ -9,6 +9,16 @@
 //! same [`LoaderConfig`] yields batches identical to the single-store
 //! loader — while every cross-partition row/edge transfer is accounted
 //! on the shared [`crate::dist::PartitionRouter`].
+//!
+//! When the feature store carries a [`crate::dist::HaloCache`] and/or an
+//! [`crate::dist::AsyncRouter`] (see
+//! [`crate::coordinator::partitioned_loader_with`]), the batch jobs
+//! running on this loader's workers dispatch their remote feature plans
+//! to the async pool and join them at `Batch::assemble` time: batch
+//! N+1's remote fetches overlap batch N's sampling, and the cache
+//! serves halo rows with no RPC at all. Neither layer changes batch
+//! content — `tests/test_dist_equivalence.rs` pins the async+cached
+//! pipeline to the single-store loader seed for seed.
 
 use super::feature_store::PartitionedFeatureStore;
 use super::graph_store::PartitionedGraphStore;
@@ -82,6 +92,17 @@ impl DistNeighborLoader {
     /// The graph-side store (also carries the shared router).
     pub fn graph(&self) -> &Arc<PartitionedGraphStore> {
         &self.graph
+    }
+
+    /// The feature-side store (carries the halo cache / async router
+    /// when [`crate::coordinator::DistOptions`] enabled them).
+    pub fn features(&self) -> &Arc<PartitionedFeatureStore> {
+        &self.features
+    }
+
+    /// Halo-cache hit/miss/bytes counters, when a cache is installed.
+    pub fn cache_stats(&self) -> Option<super::CacheStats> {
+        self.features.halo_cache().map(|c| c.stats())
     }
 
     /// Cross-partition traffic accumulated so far, covering both sampling

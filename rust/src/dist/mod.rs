@@ -37,13 +37,17 @@
 //! holds by construction and is enforced end-to-end by
 //! `tests/test_dist_equivalence.rs`.
 
+pub mod async_router;
 pub mod feature_store;
 pub mod graph_store;
+pub mod halo_cache;
 pub mod loader;
 pub mod sampler;
 
+pub use async_router::{AsyncRouter, FetchPlan, PendingFetch};
 pub use feature_store::{PartitionedFeatureStore, PartitionedStoreConfig};
 pub use graph_store::PartitionedGraphStore;
+pub use halo_cache::{CacheStats, HaloCache};
 pub use loader::DistNeighborLoader;
 pub use sampler::DistNeighborSampler;
 
@@ -107,6 +111,22 @@ pub struct PartitionRouter {
     local_msgs: AtomicU64,
     remote_msgs: AtomicU64,
     remote_rows: AtomicU64,
+    /// Per-destination-partition breakdown of the remote counters
+    /// (`msgs_to[local_rank]` / `rows_to[local_rank]` stay zero; local
+    /// accesses are tracked by `local_msgs`).
+    msgs_to: Vec<AtomicU64>,
+    rows_to: Vec<AtomicU64>,
+}
+
+/// Per-destination-partition traffic snapshot of one router, the row a
+/// rank contributes to a [`TrafficMatrix`]. Index = destination
+/// partition; the local rank's slot carries its local access count (and
+/// zero rows, since local accesses ship nothing).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PartitionTraffic {
+    pub local_rank: u32,
+    pub msgs: Vec<u64>,
+    pub rows: Vec<u64>,
 }
 
 impl PartitionRouter {
@@ -146,6 +166,8 @@ impl PartitionRouter {
             local_msgs: AtomicU64::new(0),
             remote_msgs: AtomicU64::new(0),
             remote_rows: AtomicU64::new(0),
+            msgs_to: (0..num_parts).map(|_| AtomicU64::new(0)).collect(),
+            rows_to: (0..num_parts).map(|_| AtomicU64::new(0)).collect(),
         })
     }
 
@@ -181,11 +203,13 @@ impl PartitionRouter {
         self.local_msgs.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Account one simulated RPC to a remote partition carrying
+    /// Account one simulated RPC to remote partition `part` carrying
     /// `payload_rows` rows/edges.
-    pub fn record_remote(&self, payload_rows: u64) {
+    pub fn record_remote_to(&self, part: u32, payload_rows: u64) {
         self.remote_msgs.fetch_add(1, Ordering::Relaxed);
         self.remote_rows.fetch_add(payload_rows, Ordering::Relaxed);
+        self.msgs_to[part as usize].fetch_add(1, Ordering::Relaxed);
+        self.rows_to[part as usize].fetch_add(payload_rows, Ordering::Relaxed);
     }
 
     /// Current traffic counters.
@@ -197,11 +221,26 @@ impl PartitionRouter {
         }
     }
 
+    /// Per-destination-partition traffic (this rank's row of the
+    /// `rank × partition` matrix). The local rank's slot reports the
+    /// local access count with zero payload.
+    pub fn traffic_by_partition(&self) -> PartitionTraffic {
+        let mut msgs: Vec<u64> =
+            self.msgs_to.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let rows: Vec<u64> =
+            self.rows_to.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        msgs[self.local_rank as usize] = self.local_msgs.load(Ordering::Relaxed);
+        PartitionTraffic { local_rank: self.local_rank, msgs, rows }
+    }
+
     /// Zero the traffic counters (benches measure per-phase traffic).
     pub fn reset_stats(&self) {
         self.local_msgs.store(0, Ordering::Relaxed);
         self.remote_msgs.store(0, Ordering::Relaxed);
         self.remote_rows.store(0, Ordering::Relaxed);
+        for c in self.msgs_to.iter().chain(&self.rows_to) {
+            c.store(0, Ordering::Relaxed);
+        }
     }
 
     /// Group input *positions* by the owner of the node at that position,
@@ -220,6 +259,116 @@ impl PartitionRouter {
             buckets[self.owner(v as u32) as usize].push(pos);
         }
         Ok(buckets)
+    }
+}
+
+/// Aggregated `rank × partition` traffic of a multi-rank simulation:
+/// cell `(r, p)` counts the messages rank `r` sent to partition `p`
+/// (diagonal = rank-local accesses, which cost no network) and the
+/// payload rows they carried. Built by
+/// [`crate::coordinator::multi_rank_epoch`] from each rank's
+/// [`PartitionRouter::traffic_by_partition`].
+#[derive(Clone, Debug)]
+pub struct TrafficMatrix {
+    num_ranks: usize,
+    num_parts: usize,
+    msgs: Vec<u64>,
+    rows: Vec<u64>,
+}
+
+impl TrafficMatrix {
+    pub fn new(num_ranks: usize, num_parts: usize) -> Self {
+        Self {
+            num_ranks,
+            num_parts,
+            msgs: vec![0; num_ranks * num_parts],
+            rows: vec![0; num_ranks * num_parts],
+        }
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.num_ranks
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    /// Install rank `rank`'s router snapshot as row `rank`.
+    pub fn set_rank(&mut self, rank: usize, traffic: &PartitionTraffic) -> Result<()> {
+        if rank >= self.num_ranks || traffic.msgs.len() != self.num_parts {
+            return Err(Error::Storage(format!(
+                "traffic row for rank {rank} ({} partitions) does not fit a {}x{} matrix",
+                traffic.msgs.len(),
+                self.num_ranks,
+                self.num_parts
+            )));
+        }
+        let base = rank * self.num_parts;
+        self.msgs[base..base + self.num_parts].copy_from_slice(&traffic.msgs);
+        self.rows[base..base + self.num_parts].copy_from_slice(&traffic.rows);
+        Ok(())
+    }
+
+    /// Messages rank `r` sent to partition `p` (diagonal: local accesses).
+    pub fn msgs(&self, r: usize, p: usize) -> u64 {
+        self.msgs[r * self.num_parts + p]
+    }
+
+    /// Payload rows rank `r` pulled from partition `p`.
+    pub fn rows(&self, r: usize, p: usize) -> u64 {
+        self.rows[r * self.num_parts + p]
+    }
+
+    /// Total off-diagonal messages — what the cluster ships over the wire.
+    pub fn total_remote_msgs(&self) -> u64 {
+        self.off_diagonal().map(|(r, p)| self.msgs(r, p)).sum()
+    }
+
+    /// Total off-diagonal payload rows.
+    pub fn total_remote_rows(&self) -> u64 {
+        self.off_diagonal().map(|(r, p)| self.rows(r, p)).sum()
+    }
+
+    fn off_diagonal(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let parts = self.num_parts;
+        (0..self.num_ranks)
+            .flat_map(move |r| (0..parts).map(move |p| (r, p)))
+            .filter(|&(r, p)| r != p)
+    }
+}
+
+impl fmt::Display for TrafficMatrix {
+    /// Grid format (documented in `rust/README.md`): one row per rank,
+    /// one column per partition, `msgs(rows)` per cell, diagonal suffixed
+    /// `*` because those accesses are rank-local (no network).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:>9}", "rank\\part")?;
+        for p in 0..self.num_parts {
+            let head = format!("p{p}");
+            write!(f, " {head:>16}")?;
+        }
+        writeln!(f)?;
+        for r in 0..self.num_ranks {
+            let head = format!("r{r}");
+            write!(f, "{head:>9}")?;
+            for p in 0..self.num_parts {
+                let cell = format!(
+                    "{}({}){}",
+                    self.msgs(r, p),
+                    self.rows(r, p),
+                    if r == p { "*" } else { "" }
+                );
+                write!(f, " {cell:>16}")?;
+            }
+            writeln!(f)?;
+        }
+        write!(
+            f,
+            "remote total: {} msgs / {} rows (* = rank-local, free)",
+            self.total_remote_msgs(),
+            self.total_remote_rows()
+        )
     }
 }
 
@@ -256,8 +405,8 @@ mod tests {
     fn stats_accumulate_and_reset() {
         let r = router();
         r.record_local();
-        r.record_remote(10);
-        r.record_remote(5);
+        r.record_remote_to(1, 10);
+        r.record_remote_to(2, 5);
         let s = r.stats();
         assert_eq!(s.local_msgs, 1);
         assert_eq!(s.remote_msgs, 2);
@@ -266,6 +415,55 @@ mod tests {
         assert!((s.remote_fraction() - 2.0 / 3.0).abs() < 1e-12);
         r.reset_stats();
         assert_eq!(r.stats(), RouterStats::default());
+        assert!(r.traffic_by_partition().msgs.iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn per_partition_breakdown_sums_to_aggregate() {
+        let r = router();
+        r.record_local();
+        r.record_local();
+        r.record_remote_to(1, 10);
+        r.record_remote_to(1, 4);
+        r.record_remote_to(2, 5);
+        let t = r.traffic_by_partition();
+        assert_eq!(t.local_rank, 0);
+        // Local slot reports local accesses, zero payload.
+        assert_eq!(t.msgs, vec![2, 2, 1]);
+        assert_eq!(t.rows, vec![0, 14, 5]);
+        let s = r.stats();
+        assert_eq!(t.msgs[1] + t.msgs[2], s.remote_msgs);
+        assert_eq!(t.rows.iter().sum::<u64>(), s.remote_rows);
+    }
+
+    #[test]
+    fn traffic_matrix_aggregates_and_formats() {
+        let mut m = TrafficMatrix::new(2, 2);
+        m.set_rank(
+            0,
+            &PartitionTraffic { local_rank: 0, msgs: vec![3, 2], rows: vec![0, 20] },
+        )
+        .unwrap();
+        m.set_rank(
+            1,
+            &PartitionTraffic { local_rank: 1, msgs: vec![4, 7], rows: vec![9, 0] },
+        )
+        .unwrap();
+        assert_eq!(m.msgs(0, 1), 2);
+        assert_eq!(m.rows(1, 0), 9);
+        assert_eq!(m.total_remote_msgs(), 6); // off-diagonal 2 + 4
+        assert_eq!(m.total_remote_rows(), 29); // 20 + 9
+        let shown = m.to_string();
+        assert!(shown.contains("rank\\part"));
+        assert!(shown.contains("3(0)*"), "diagonal marked local: {shown}");
+        assert!(shown.contains("2(20)"), "off-diagonal cell: {shown}");
+        // A mismatched row is rejected.
+        assert!(m
+            .set_rank(2, &PartitionTraffic { local_rank: 0, msgs: vec![0; 2], rows: vec![0; 2] })
+            .is_err());
+        assert!(m
+            .set_rank(0, &PartitionTraffic { local_rank: 0, msgs: vec![0; 3], rows: vec![0; 3] })
+            .is_err());
     }
 
     #[test]

@@ -162,7 +162,7 @@ impl DistNeighborSampler {
             }
             for p in 0..parts {
                 if p != local_rank && hop_touched[p] {
-                    router.record_remote(hop_edges[p]);
+                    router.record_remote_to(p as u32, hop_edges[p]);
                 }
             }
             out.node_offsets.push(out.nodes.len());

@@ -249,10 +249,10 @@ impl Batch {
     /// Structural invariants of the padded layout (property tests).
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         let n = self.bucket.n_pad() as i32;
-        if self.row.iter().any(|&r| r < 0 || r >= n) {
+        if self.row.iter().any(|r| !(0..n).contains(r)) {
             return Err("row index out of padded range".into());
         }
-        if self.col.iter().any(|&c| c < 0 || c >= n) {
+        if self.col.iter().any(|c| !(0..n).contains(c)) {
             return Err("col index out of padded range".into());
         }
         let real_edges = self.mask.iter().filter(|&&m| m > 0.0).count();

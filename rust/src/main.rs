@@ -123,18 +123,58 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
     let batch = args.get_usize("batch", 64);
     let workers = args.get_usize("workers", 2);
     let epochs = args.get_usize("epochs", 1);
+    let opts = pyg2::coordinator::DistOptions {
+        halo_cache: args.get_bool("halo-cache"),
+        async_fetch: args.get_bool("async"),
+        async_workers: args.get_usize("async-workers", 0),
+        latency: std::time::Duration::from_micros(args.get_usize("latency-us", 0) as u64),
+    };
     let g = sbm::generate(&SbmConfig { num_nodes: nodes, seed: 0, ..Default::default() })?;
     let p = pyg2::partition::ldg_partition(&g.edge_index, parts, 1.1)?;
-    let loader = pyg2::coordinator::partitioned_loader(
+    let cfg = pyg2::loader::LoaderConfig {
+        batch_size: batch,
+        num_workers: workers,
+        ..Default::default()
+    };
+
+    // Multi-rank simulation: one loader per rank over its own seed
+    // shard, aggregated into the rank × partition traffic matrix.
+    if let Some(ranks) = args.get("ranks") {
+        let ranks: usize = ranks
+            .parse()
+            .map_err(|_| pyg2::error::Error::Config(format!("bad --ranks {ranks}")))?;
+        log::info!(
+            "multi-rank dist: {ranks} ranks over {parts} partitions (edge-cut {:.3})",
+            p.edge_cut(&g.edge_index)
+        );
+        let t0 = std::time::Instant::now();
+        let report =
+            pyg2::coordinator::multi_rank_epoch(&g, &p, ranks, &cfg, opts, epochs as u64)?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "multi-rank dist: {} batches / {} sampled nodes in {secs:.2}s",
+            report.batches, report.sampled_nodes
+        );
+        println!("traffic matrix (msgs(payload rows) per rank -> partition):");
+        println!("{}", report.matrix);
+        for (part, (in_e, out_e)) in report.shard_edges.iter().enumerate() {
+            println!("partition {part}: {in_e} in-edges / {out_e} out-edges stored");
+        }
+        for (rank, stats) in report.cache.iter().enumerate() {
+            if let Some(stats) = stats {
+                println!("rank {rank} halo cache: {stats}");
+            }
+        }
+        return Ok(());
+    }
+
+    let loader = pyg2::coordinator::partitioned_loader_with(
         &g,
         &p,
         0,
         (0..nodes as u32).collect(),
-        pyg2::loader::LoaderConfig {
-            batch_size: batch,
-            num_workers: workers,
-            ..Default::default()
-        },
+        cfg,
+        opts,
     )?;
     log::info!(
         "dist loading over {parts} partitions (edge-cut {:.3}): n={nodes} e={}",
@@ -159,6 +199,9 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
         sampled_nodes as f64 / secs
     );
     println!("cross-partition traffic: {stats}");
+    if let Some(cache) = loader.cache_stats() {
+        println!("halo cache: {cache}");
+    }
     Ok(())
 }
 

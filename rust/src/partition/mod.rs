@@ -93,6 +93,31 @@ impl Partitioning {
             .map(|(v, _)| v as u32)
             .collect()
     }
+
+    /// The 1-hop halo of *every* partition in one edge sweep (entry `p`
+    /// equals [`Partitioning::halo_nodes`]`(edges, p)`). The multi-rank
+    /// simulation builds one [`crate::dist::HaloCache`] per rank from
+    /// this, without re-scanning the edge list per rank.
+    pub fn halos(&self, edges: &EdgeIndex) -> Vec<Vec<u32>> {
+        let n = self.assignment.len();
+        let mut in_halo = vec![false; n * self.num_parts];
+        for (&s, &d) in edges.src().iter().zip(edges.dst()) {
+            let (os, od) = (self.assignment[s as usize], self.assignment[d as usize]);
+            if os != od {
+                // s is foreign boundary of d's partition and vice versa.
+                in_halo[od as usize * n + s as usize] = true;
+                in_halo[os as usize * n + d as usize] = true;
+            }
+        }
+        (0..self.num_parts)
+            .map(|p| {
+                (0..n)
+                    .filter(|&v| in_halo[p * n + v])
+                    .map(|v| v as u32)
+                    .collect()
+            })
+            .collect()
+    }
 }
 
 /// Per-partition node capacity the LDG partitioner enforces:
@@ -226,6 +251,23 @@ mod tests {
         assert_eq!(p.halo_nodes(&ei, 0), vec![2]);
         // Part 1's halo: node 1 (1 -> 2 enters the partition).
         assert_eq!(p.halo_nodes(&ei, 1), vec![1]);
+    }
+
+    #[test]
+    fn halos_sweep_matches_per_partition_queries() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 6, ..Default::default() }).unwrap();
+        let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        let all = p.halos(&g.edge_index);
+        assert_eq!(all.len(), 4);
+        for (part, halo) in all.iter().enumerate() {
+            assert_eq!(
+                *halo,
+                p.halo_nodes(&g.edge_index, part as u32),
+                "halo of partition {part}"
+            );
+            // Halo rows are foreign by definition.
+            assert!(halo.iter().all(|&v| p.assignment[v as usize] != part as u32));
+        }
     }
 
     #[test]

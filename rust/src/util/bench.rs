@@ -43,9 +43,22 @@ impl BenchConfig {
         }
     }
 
-    /// Honour `PYG2_BENCH_QUICK=1` for fast smoke runs.
+    /// Honour `PYG2_BENCH_QUICK` for fast smoke runs (see
+    /// `rust/README.md`): any truthy value — `1`, `true`, `yes`, `on`,
+    /// or anything else non-empty that is not an explicit falsy
+    /// `0`/`false`/`no`/`off` — selects [`BenchConfig::quick`].
     pub fn from_env() -> Self {
-        if std::env::var("PYG2_BENCH_QUICK").ok().as_deref() == Some("1") {
+        Self::from_env_value(std::env::var("PYG2_BENCH_QUICK").ok().as_deref())
+    }
+
+    /// [`BenchConfig::from_env`]'s decision, factored out of the process
+    /// environment for testability.
+    fn from_env_value(value: Option<&str>) -> Self {
+        let truthy = value.is_some_and(|v| {
+            let v = v.trim().to_ascii_lowercase();
+            !v.is_empty() && !matches!(v.as_str(), "0" | "false" | "no" | "off")
+        });
+        if truthy {
             Self::quick()
         } else {
             Self::default()
@@ -190,6 +203,21 @@ mod tests {
         let r = suite.find("spin").unwrap();
         assert!(r.samples.len() >= 3);
         assert!(r.samples.mean() > 0.0);
+    }
+
+    #[test]
+    fn env_quick_accepts_any_truthy_value() {
+        let quick = BenchConfig::quick();
+        for v in ["1", "true", "TRUE", "yes", "on", " 1 ", "quick", "2"] {
+            let got = BenchConfig::from_env_value(Some(v));
+            assert_eq!(got.measure, quick.measure, "{v:?} must select quick");
+            assert_eq!(got.max_samples, quick.max_samples, "{v:?} must select quick");
+        }
+        let full = BenchConfig::default();
+        for v in [None, Some(""), Some("0"), Some("false"), Some("No"), Some("OFF"), Some("  ")] {
+            let got = BenchConfig::from_env_value(v);
+            assert_eq!(got.measure, full.measure, "{v:?} must select default");
+        }
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod stats;
 pub mod toml;
 
 pub use bench::{BenchConfig, BenchResult, BenchSuite};
-pub use pool::{BoundedQueue, ThreadPool};
+pub use pool::{BoundedQueue, TaskHandle, ThreadPool};
 pub use rng::Rng;
 pub use stats::{Histogram, Samples};

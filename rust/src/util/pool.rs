@@ -101,11 +101,43 @@ impl<T> BoundedQueue<T> {
 /// A fixed-size worker pool executing boxed jobs.
 ///
 /// Jobs are `FnOnce() + Send`; results flow through caller-owned channels
-/// (the loader wires a `BoundedQueue<Batch>` through its jobs).
+/// (the loader wires a `BoundedQueue<Batch>` through its jobs), or through
+/// the [`TaskHandle`] returned by [`ThreadPool::spawn`] for jobs whose
+/// single result is joined later (the async-routing fetch futures of
+/// [`crate::dist::AsyncRouter`]).
 pub struct ThreadPool {
     job_tx: Arc<BoundedQueue<Job>>,
     handles: Vec<JoinHandle<()>>,
     pending: Arc<AtomicUsize>,
+}
+
+/// A join handle for one value produced on a pool worker — the minimal
+/// future: `join` blocks until the job has run and yields its result. A
+/// job that panicked resumes its panic at `join` (the unwind is caught
+/// on the worker, which stays alive) instead of hanging the joiner.
+pub struct TaskHandle<T> {
+    slot: Arc<(Mutex<Option<std::thread::Result<T>>>, Condvar)>,
+}
+
+impl<T: Send + 'static> TaskHandle<T> {
+    /// Block until the spawned job finishes and take its result,
+    /// resuming the job's panic if it had one.
+    pub fn join(self) -> T {
+        let (lock, cv) = &*self.slot;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            match guard.take() {
+                Some(Ok(v)) => return v,
+                Some(Err(payload)) => std::panic::resume_unwind(payload),
+                None => guard = cv.wait(guard).unwrap(),
+            }
+        }
+    }
+
+    /// Whether the result is already available (`join` would not block).
+    pub fn is_ready(&self) -> bool {
+        self.slot.0.lock().unwrap().is_some()
+    }
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -145,6 +177,27 @@ impl ThreadPool {
             self.pending.fetch_sub(1, Ordering::Release);
             panic!("submit on closed pool");
         }
+    }
+
+    /// Submit a job that produces a value; returns a [`TaskHandle`] that
+    /// joins it. Blocks like [`ThreadPool::submit`] when the job queue is
+    /// full.
+    pub fn spawn<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new((Mutex::new(None), Condvar::new()));
+        let out = Arc::clone(&slot);
+        self.submit(move || {
+            // Contain a panicking job so the worker survives and the
+            // joiner sees the panic instead of blocking forever.
+            let v = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let (lock, cv) = &*out;
+            *lock.lock().unwrap() = Some(v);
+            cv.notify_all();
+        });
+        TaskHandle { slot }
     }
 
     /// Number of submitted-but-unfinished jobs.
@@ -230,6 +283,39 @@ mod tests {
             }
         } // drop closes + joins
         assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn spawn_joins_results_in_any_order() {
+        let pool = ThreadPool::new(3);
+        let handles: Vec<_> = (0..20u64)
+            .map(|i| pool.spawn(move || i * i))
+            .collect();
+        // Join in reverse submission order: handles must not require FIFO
+        // consumption (the async router joins per-partition fetches in
+        // partition order, not completion order).
+        for (i, h) in handles.into_iter().enumerate().rev() {
+            assert_eq!(h.join(), (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn spawn_result_becomes_ready() {
+        let pool = ThreadPool::new(1);
+        let h = pool.spawn(|| 7u32);
+        pool.wait_idle();
+        assert!(h.is_ready());
+        assert_eq!(h.join(), 7);
+    }
+
+    #[test]
+    fn spawn_panic_propagates_at_join_and_worker_survives() {
+        let pool = ThreadPool::new(1);
+        let h = pool.spawn(|| -> u32 { panic!("job panic") });
+        let joined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || h.join()));
+        assert!(joined.is_err(), "join must resume the job's panic");
+        // The worker caught the unwind: the pool still serves jobs.
+        assert_eq!(pool.spawn(|| 5u32).join(), 5);
     }
 
     #[test]
