@@ -70,12 +70,15 @@ COMMANDS:
   dist        run the distributed loading pipeline over a partitioned
               SBM graph and report cross-partition traffic
               --nodes N --parts K --batch N --workers N --epochs N
+              --hetero          typed pipeline over a user/item/tag
+                                hetero SBM: per-node-type partitioning,
+                                per-edge-type traffic, typed halo caches
               --halo-cache      replicate halo feature rows locally
               --async           overlap remote fetches (async routing)
               --async-workers N --latency-us U  (simulated RPC latency)
               --ranks N         one loader per rank over its own seed
                                 shard; prints the rank x partition
-                                traffic matrix
+                                traffic matrix + per-rank wall-clock skew
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
   info        print manifest/artifact summary

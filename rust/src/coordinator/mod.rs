@@ -348,8 +348,56 @@ fn build_partitioned_loader(
     Ok(loader)
 }
 
+/// Per-rank wall-clock summary of a multi-rank simulation: today the
+/// ranks run sequentially for determinism (see ROADMAP "truly parallel
+/// ranks"), so the *skew* — how unevenly the per-rank epoch times would
+/// load a real cluster — is the early signal this reports alongside the
+/// [`crate::dist::TrafficMatrix`].
+#[derive(Clone, Copy, Debug)]
+pub struct RankSkew {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl RankSkew {
+    pub fn from_seconds(secs: &[f64]) -> Self {
+        if secs.is_empty() {
+            return Self { min: 0.0, max: 0.0, mean: 0.0 };
+        }
+        let min = secs.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = secs.iter().copied().fold(0.0f64, f64::max);
+        let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+        Self { min, max, mean }
+    }
+
+    /// `max / min` ratio (1.0 = perfectly balanced ranks; the slowest
+    /// rank gates a synchronous cluster).
+    pub fn imbalance(&self) -> f64 {
+        if self.min > 0.0 {
+            self.max / self.min
+        } else {
+            1.0
+        }
+    }
+}
+
+impl std::fmt::Display for RankSkew {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "per-rank epoch wall-clock: min {:.3}s / mean {:.3}s / max {:.3}s ({:.2}x max/min)",
+            self.min,
+            self.mean,
+            self.max,
+            self.imbalance()
+        )
+    }
+}
+
 /// Result of a [`multi_rank_epoch`] simulation: the `rank × partition`
-/// traffic matrix plus per-rank cache counters and epoch totals.
+/// traffic matrix plus per-rank cache counters, wall-clock, and epoch
+/// totals.
 #[derive(Debug)]
 pub struct MultiRankReport {
     pub matrix: crate::dist::TrafficMatrix,
@@ -358,8 +406,18 @@ pub struct MultiRankReport {
     /// Per-partition `(in_edges, out_edges)` shard sizes — the storage
     /// side of the simulation (identical from every rank's view).
     pub shard_edges: Vec<(usize, usize)>,
+    /// Wall-clock seconds each rank spent on its epochs (ranks run
+    /// sequentially; see [`RankSkew`]).
+    pub rank_seconds: Vec<f64>,
     pub batches: usize,
     pub sampled_nodes: usize,
+}
+
+impl MultiRankReport {
+    /// Min/max/mean of [`MultiRankReport::rank_seconds`].
+    pub fn skew(&self) -> RankSkew {
+        RankSkew::from_seconds(&self.rank_seconds)
+    }
 }
 
 /// Multi-rank simulation: one [`crate::dist::DistNeighborLoader`] per
@@ -391,6 +449,7 @@ pub fn multi_rank_epoch(
     let mut matrix = crate::dist::TrafficMatrix::new(ranks, partitioning.num_parts);
     let mut cache = Vec::with_capacity(ranks);
     let mut shard_edges = Vec::new();
+    let mut rank_seconds = Vec::with_capacity(ranks);
     let mut batches = 0usize;
     let mut sampled_nodes = 0usize;
     // One edge sweep computes every rank's halo (vs one sweep per rank).
@@ -410,6 +469,7 @@ pub fn multi_rank_epoch(
             opts,
             halos.as_ref().map(|h| h[rank as usize].as_slice()),
         )?;
+        let t_rank = Instant::now();
         for epoch in 0..epochs {
             for batch in loader.iter_epoch(epoch) {
                 let b = batch?;
@@ -417,13 +477,263 @@ pub fn multi_rank_epoch(
                 sampled_nodes += b.num_real_nodes();
             }
         }
+        rank_seconds.push(t_rank.elapsed().as_secs_f64());
         matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
         cache.push(loader.cache_stats());
         if rank == 0 {
             shard_edges = loader.graph().shard_edge_counts();
         }
     }
-    Ok(MultiRankReport { matrix, cache, shard_edges, batches, sampled_nodes })
+    Ok(MultiRankReport { matrix, cache, shard_edges, rank_seconds, batches, sampled_nodes })
+}
+
+/// Wire a heterogeneous graph through the full typed distributed stack —
+/// one shared [`crate::dist::TypedRouter`], per-type partitioned feature
+/// + graph stores, and a [`crate::dist::HeteroDistNeighborLoader`] —
+/// viewed from `local_rank`, seeding on `seed_type`.
+///
+/// With the same [`crate::loader::HeteroLoaderConfig`] this yields
+/// batches identical to the in-memory
+/// [`crate::loader::HeteroNeighborLoader`]; the returned loader's
+/// `router_stats()` / `edge_traffic()` report the cross-partition
+/// traffic per node type and per relation.
+pub fn hetero_partitioned_loader(
+    graph: &crate::graph::HeteroGraph,
+    partitioning: &crate::partition::TypedPartitioning,
+    local_rank: u32,
+    seed_type: &str,
+    seeds: Vec<u32>,
+    cfg: crate::loader::HeteroLoaderConfig,
+) -> Result<crate::dist::HeteroDistNeighborLoader> {
+    hetero_partitioned_loader_with(
+        graph,
+        partitioning,
+        local_rank,
+        seed_type,
+        seeds,
+        cfg,
+        DistOptions::default(),
+    )
+}
+
+/// [`hetero_partitioned_loader`] with the halo-cache / async-routing
+/// layers of [`DistOptions`]: per-node-type halo replicas
+/// ([`crate::partition::TypedPartitioning::halo_nodes`]) filter the
+/// remote feature path, an [`crate::dist::AsyncRouter`] overlaps the
+/// RPCs that remain. Neither layer changes batch content (enforced by
+/// `tests/test_dist_hetero_equivalence.rs`).
+pub fn hetero_partitioned_loader_with(
+    graph: &crate::graph::HeteroGraph,
+    partitioning: &crate::partition::TypedPartitioning,
+    local_rank: u32,
+    seed_type: &str,
+    seeds: Vec<u32>,
+    cfg: crate::loader::HeteroLoaderConfig,
+    opts: DistOptions,
+) -> Result<crate::dist::HeteroDistNeighborLoader> {
+    build_hetero_partitioned_loader(
+        graph,
+        partitioning,
+        local_rank,
+        seed_type,
+        seeds,
+        cfg,
+        opts,
+        None,
+    )
+}
+
+/// Shared typed builder: `halos` overrides the per-type halo node lists
+/// when the caller already computed them (the multi-rank simulation
+/// sweeps every `(type, partition)` halo once via
+/// [`crate::partition::TypedPartitioning::halos`] instead of re-scanning
+/// the edge lists per rank).
+#[allow(clippy::too_many_arguments)]
+fn build_hetero_partitioned_loader(
+    graph: &crate::graph::HeteroGraph,
+    partitioning: &crate::partition::TypedPartitioning,
+    local_rank: u32,
+    seed_type: &str,
+    seeds: Vec<u32>,
+    cfg: crate::loader::HeteroLoaderConfig,
+    opts: DistOptions,
+    halos: Option<&std::collections::BTreeMap<String, Vec<Vec<u32>>>>,
+) -> Result<crate::dist::HeteroDistNeighborLoader> {
+    use crate::dist::{
+        AsyncRouter, HaloCache, HeteroDistNeighborLoader, PartitionedFeatureStore,
+        PartitionedGraphStore, TypedRouter,
+    };
+    use crate::storage::{FeatureKey, DEFAULT_ATTR};
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    let router = TypedRouter::new(partitioning, local_rank)?;
+    let gs = Arc::new(PartitionedGraphStore::from_hetero(graph, router.clone())?);
+    let mut fs =
+        PartitionedFeatureStore::partition_hetero(graph, &router)?.with_latency(opts.latency);
+    if opts.halo_cache {
+        let mut caches = BTreeMap::new();
+        for nt in graph.node_types() {
+            // The multi-rank simulation hands in the all-ranks sweep;
+            // the single-rank path computes only its own rank's typed
+            // halo per type.
+            let computed;
+            let halo: &[u32] = match halos {
+                Some(h) => &h[nt][local_rank as usize],
+                None => {
+                    computed = partitioning.halo_nodes(graph, nt, local_rank)?;
+                    &computed
+                }
+            };
+            // Gather only the halo rows (straight off the graph's
+            // tensor, the same one the shards were cut from) — no full
+            // per-type source store materialized per rank.
+            let idx: Vec<usize> = halo.iter().map(|&v| v as usize).collect();
+            let rows = graph.node_store(nt)?.x.gather_rows(&idx)?;
+            caches.insert(
+                nt.to_string(),
+                Arc::new(HaloCache::from_group(
+                    FeatureKey::new(nt, DEFAULT_ATTR),
+                    halo,
+                    rows,
+                    graph.num_nodes(nt)?,
+                    local_rank,
+                )?),
+            );
+        }
+        fs = fs.with_halo_caches(caches)?;
+    }
+    if opts.async_fetch {
+        let workers = if opts.async_workers > 0 {
+            opts.async_workers
+        } else {
+            partitioning.num_parts.saturating_sub(1).max(1)
+        };
+        fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
+    }
+    let mut loader = HeteroDistNeighborLoader::new(gs, Arc::new(fs), seed_type, seeds, cfg);
+    if let Some(y) = &graph.node_store(seed_type)?.y {
+        loader = loader.with_labels(y.clone());
+    }
+    Ok(loader)
+}
+
+/// Result of a [`multi_rank_epoch_hetero`] simulation: the combined
+/// `rank × partition` traffic matrix, its per-node-type breakdown, the
+/// per-edge-type message counts summed over ranks, per-`(rank, type)`
+/// cache counters, and per-rank wall-clock.
+#[derive(Debug)]
+pub struct HeteroMultiRankReport {
+    /// Traffic summed over node types.
+    pub matrix: crate::dist::TrafficMatrix,
+    /// Per-node-type `rank × partition` matrices (the typed traffic the
+    /// tentpole threads through the coordinator).
+    pub per_type: std::collections::BTreeMap<String, crate::dist::TrafficMatrix>,
+    /// Per-edge-type traffic summed over ranks (adjacency reads,
+    /// attributed to the relation that caused them).
+    pub edge_traffic: std::collections::BTreeMap<crate::graph::EdgeType, crate::dist::RouterStats>,
+    /// Per-rank, per-node-type halo-cache counters (empty maps when
+    /// caching was off).
+    pub cache: Vec<std::collections::BTreeMap<String, crate::dist::CacheStats>>,
+    /// Wall-clock seconds each rank spent on its epochs.
+    pub rank_seconds: Vec<f64>,
+    pub batches: usize,
+    pub sampled_nodes: usize,
+}
+
+impl HeteroMultiRankReport {
+    /// Min/max/mean of [`HeteroMultiRankReport::rank_seconds`].
+    pub fn skew(&self) -> RankSkew {
+        RankSkew::from_seconds(&self.rank_seconds)
+    }
+}
+
+/// Multi-rank simulation of the typed pipeline: one
+/// [`crate::dist::HeteroDistNeighborLoader`] per rank over the
+/// `seed_type` seeds that rank *owns* (the realistic distributed
+/// workload), each viewing the cluster from its rank. Runs `epochs`
+/// epochs per rank and aggregates every rank's per-type routers into a
+/// combined and a per-type [`crate::dist::TrafficMatrix`].
+pub fn multi_rank_epoch_hetero(
+    graph: &crate::graph::HeteroGraph,
+    partitioning: &crate::partition::TypedPartitioning,
+    seed_type: &str,
+    ranks: usize,
+    cfg: &crate::loader::HeteroLoaderConfig,
+    opts: DistOptions,
+    epochs: u64,
+) -> Result<HeteroMultiRankReport> {
+    use crate::error::Error;
+    use std::collections::BTreeMap;
+
+    if ranks == 0 || ranks > partitioning.num_parts {
+        return Err(Error::Config(format!(
+            "{ranks} ranks over {} partitions (need 1..=num_parts)",
+            partitioning.num_parts
+        )));
+    }
+    partitioning.partitioning(seed_type)?; // validate the seed type early
+    let parts = partitioning.num_parts;
+    let mut matrix = crate::dist::TrafficMatrix::new(ranks, parts);
+    let mut per_type: BTreeMap<String, crate::dist::TrafficMatrix> = partitioning
+        .node_types()
+        .map(|nt| (nt.to_string(), crate::dist::TrafficMatrix::new(ranks, parts)))
+        .collect();
+    let mut edge_traffic: BTreeMap<crate::graph::EdgeType, crate::dist::RouterStats> =
+        BTreeMap::new();
+    let mut cache = Vec::with_capacity(ranks);
+    let mut rank_seconds = Vec::with_capacity(ranks);
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    // One sweep computes every (type, rank) halo.
+    let halos = if opts.halo_cache {
+        Some(partitioning.halos(graph)?)
+    } else {
+        None
+    };
+    for rank in 0..ranks as u32 {
+        let seeds = partitioning.nodes_of(seed_type, rank);
+        let loader = build_hetero_partitioned_loader(
+            graph,
+            partitioning,
+            rank,
+            seed_type,
+            seeds,
+            cfg.clone(),
+            opts,
+            halos.as_ref(),
+        )?;
+        let t_rank = Instant::now();
+        for epoch in 0..epochs {
+            for batch in loader.iter_epoch(epoch) {
+                let b = batch?;
+                batches += 1;
+                sampled_nodes += b.total_nodes();
+            }
+        }
+        rank_seconds.push(t_rank.elapsed().as_secs_f64());
+        let router = loader.graph().typed_router();
+        matrix.set_rank(rank as usize, &router.traffic_by_partition())?;
+        for (nt, traffic) in router.traffic_by_type() {
+            per_type
+                .get_mut(&nt)
+                .expect("type known to the partitioning")
+                .set_rank(rank as usize, &traffic)?;
+        }
+        for (et, stats) in loader.edge_traffic() {
+            *edge_traffic.entry(et).or_default() += stats;
+        }
+        cache.push(loader.cache_stats());
+    }
+    Ok(HeteroMultiRankReport {
+        matrix,
+        per_type,
+        edge_traffic,
+        cache,
+        rank_seconds,
+        batches,
+        sampled_nodes,
+    })
 }
 
 #[cfg(test)]
@@ -483,6 +793,96 @@ mod tests {
             let stats = stats.expect("cache stats present");
             assert!(stats.hits > 0, "rank {r} served halo rows locally");
         }
+    }
+
+    #[test]
+    fn multi_rank_reports_per_rank_wall_clock_skew() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 200, seed: 2, ..Default::default() })
+            .unwrap();
+        let p = crate::partition::ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+        let cfg = LoaderConfig { batch_size: 32, num_workers: 1, ..Default::default() };
+        let report = multi_rank_epoch(&g, &p, 2, &cfg, DistOptions::default(), 1).unwrap();
+        assert_eq!(report.rank_seconds.len(), 2);
+        assert!(report.rank_seconds.iter().all(|&s| s >= 0.0));
+        let skew = report.skew();
+        assert!(skew.min <= skew.mean && skew.mean <= skew.max);
+        assert!(skew.imbalance() >= 1.0);
+        let shown = skew.to_string();
+        assert!(shown.contains("max/min"), "{shown}");
+        assert!(RankSkew::from_seconds(&[]).imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn hetero_multi_rank_aggregates_typed_traffic() {
+        let g = crate::datasets::hetero::generate(&crate::datasets::HeteroSbmConfig {
+            num_users: 200,
+            num_items: 120,
+            num_tags: 40,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
+        let tp = crate::partition::TypedPartitioning::ldg_hetero(&g, 4, 1.1).unwrap();
+        let cfg = crate::loader::HeteroLoaderConfig {
+            batch_size: 32,
+            num_workers: 1,
+            shuffle: false,
+            sampler: crate::sampler::HeteroSamplerConfig {
+                default_fanouts: vec![3, 2],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let base =
+            multi_rank_epoch_hetero(&g, &tp, "user", 4, &cfg, DistOptions::default(), 1).unwrap();
+        assert_eq!(base.matrix.num_ranks(), 4);
+        assert!(base.batches >= 4);
+        assert!(base.sampled_nodes > 0);
+        assert_eq!(base.rank_seconds.len(), 4);
+        assert!(base.matrix.total_remote_msgs() > 0, "typed epoch crosses partitions");
+        // Per-type matrices tile the combined one.
+        assert_eq!(base.per_type.len(), 3);
+        for r in 0..4 {
+            for p in 0..4 {
+                let sum: u64 = base.per_type.values().map(|m| m.msgs(r, p)).sum();
+                assert_eq!(sum, base.matrix.msgs(r, p), "cell ({r}, {p})");
+            }
+        }
+        // Per-edge-type attribution covers every relation.
+        assert_eq!(base.edge_traffic.len(), 4);
+        assert!(base.cache.iter().all(|c| c.is_empty()), "caching was off");
+
+        // Caching strictly cuts cross-partition payload, per type.
+        let cached = multi_rank_epoch_hetero(
+            &g,
+            &tp,
+            "user",
+            4,
+            &cfg,
+            DistOptions { halo_cache: true, async_fetch: true, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        assert!(
+            cached.matrix.total_remote_rows() < base.matrix.total_remote_rows(),
+            "typed halo caches must cut cross-partition rows: {} vs {}",
+            cached.matrix.total_remote_rows(),
+            base.matrix.total_remote_rows()
+        );
+        for (rank, stats) in cached.cache.iter().enumerate() {
+            assert!(!stats.is_empty(), "rank {rank} has per-type caches");
+            assert!(
+                stats.values().any(|s| s.hits > 0),
+                "rank {rank} served halo rows locally"
+            );
+        }
+        // Bad rank counts / seed types rejected.
+        assert!(multi_rank_epoch_hetero(&g, &tp, "user", 0, &cfg, DistOptions::default(), 1)
+            .is_err());
+        assert!(multi_rank_epoch_hetero(&g, &tp, "user", 5, &cfg, DistOptions::default(), 1)
+            .is_err());
+        assert!(multi_rank_epoch_hetero(&g, &tp, "ghost", 2, &cfg, DistOptions::default(), 1)
+            .is_err());
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //! data (no network access in the sandbox — see DESIGN.md §Substitutions).
 
 pub mod barabasi_albert;
+pub mod hetero;
 pub mod kgqa;
 pub mod relational;
 pub mod sbm;
 pub mod temporal;
 
+pub use hetero::HeteroSbmConfig;
 pub use kgqa::{KgqaConfig, KgqaDataset};
 pub use relational::{Database, RelationalConfig};
 pub use sbm::SbmConfig;

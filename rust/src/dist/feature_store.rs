@@ -1,7 +1,15 @@
 //! `PartitionedFeatureStore` — the feature half of §2.3's distributed
-//! backend: rows are sharded across partitions by node ownership and
-//! every `get` routes each requested row to its owning shard through the
-//! [`PartitionRouter`], reassembling results in request order.
+//! backend: rows are sharded across partitions **per node type** by node
+//! ownership, i.e. shards are keyed by `(node_type, partition)`, and
+//! every `get` routes each requested row to its owning shard through
+//! that type's [`PartitionRouter`], reassembling results in request
+//! order. The homogeneous store is the **single-type special case** of
+//! this structure (one type, one router), not a separate code path.
+//!
+//! A [`crate::storage::FeatureKey`]'s `group` names the node type, so
+//! the typed store resolves every request to its type's shard family;
+//! with a single type all groups share the one id space (the
+//! homogeneous behaviour).
 //!
 //! Requests are *coalesced*: one simulated RPC per remote partition
 //! touched per call (the payload rows are counted separately), matching
@@ -9,9 +17,9 @@
 //! is served first and costs no RPC. Two optional layers sit on the
 //! remote path:
 //!
-//! * a [`HaloCache`] filters the remote rows first — replicated halo
-//!   rows are copied locally (hit) and only the misses remain in the
-//!   per-partition fetch plans, so a fully cached partition costs no
+//! * a per-type [`HaloCache`] filters the remote rows first — replicated
+//!   halo rows are copied locally (hit) and only the misses remain in
+//!   the per-partition fetch plans, so a fully cached partition costs no
 //!   RPC at all;
 //! * an [`AsyncRouter`] serves the remaining plans on its own worker
 //!   pool, overlapping the per-partition RPC latencies with each other
@@ -21,10 +29,12 @@
 
 use super::async_router::{AsyncRouter, FetchPlan, PendingFetch};
 use super::halo_cache::HaloCache;
-use super::PartitionRouter;
+use super::{PartitionRouter, TypedRouter};
 use crate::error::{Error, Result};
-use crate::storage::{FeatureKey, FeatureStore};
+use crate::graph::HeteroGraph;
+use crate::storage::{FeatureKey, FeatureStore, DEFAULT_ATTR, DEFAULT_GROUP};
 use crate::tensor::Tensor;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -37,44 +47,44 @@ pub struct PartitionedStoreConfig {
     pub latency: Duration,
 }
 
-/// A feature store sharded row-wise across partitions.
-///
-/// Implements [`FeatureStore`], so the loader/trainer/server stack works
-/// unchanged on top of it — the §2.3 "swap the backend, keep the loop"
-/// property the paper builds its scalability story on.
-pub struct PartitionedFeatureStore {
+/// One node type's shard family: per-partition stores, the
+/// global→shard-local row map, the type's router, and an optional halo
+/// replica.
+struct TypeShards {
     shards: Vec<Arc<dyn FeatureStore>>,
-    router: Arc<PartitionRouter>,
-    /// Row of global node `v` within its owning shard.
+    /// Row of type-global node `v` within its owning shard.
     local_row: Vec<u32>,
-    /// Simulated per-RPC latency (see [`PartitionedStoreConfig`]).
-    latency: Duration,
-    /// Optional halo replica filtering the remote path.
+    router: Arc<PartitionRouter>,
+    /// Optional halo replica filtering this type's remote path.
     halo_cache: Option<Arc<HaloCache>>,
-    /// Optional async fetch service for the remaining remote plans.
-    async_router: Option<Arc<AsyncRouter>>,
 }
 
-impl PartitionedFeatureStore {
-    /// Shard every feature group of `src` by the router's ownership
-    /// vector. Every group must have exactly one row per partitioned
-    /// node (this store models node-aligned features; differently sized
-    /// groups would need their own partitioning and are rejected).
-    pub fn partition(src: &dyn FeatureStore, router: Arc<PartitionRouter>) -> Result<Self> {
+impl TypeShards {
+    /// Owned global rows per partition (ascending) + the global → shard-
+    /// local row map of one node type's id space.
+    fn ownership(router: &PartitionRouter) -> (Vec<Vec<usize>>, Vec<u32>) {
         let n = router.num_nodes();
-        let parts = router.num_parts();
-
-        // Owned global rows per partition (ascending) + global->local map.
-        let mut owned: Vec<Vec<usize>> = vec![Vec::new(); parts];
+        let mut owned: Vec<Vec<usize>> = vec![Vec::new(); router.num_parts()];
         let mut local_row = vec![0u32; n];
         for v in 0..n {
             let p = router.owner(v as u32) as usize;
             local_row[v] = owned[p].len() as u32;
             owned[p].push(v);
         }
+        (owned, local_row)
+    }
 
-        let shard_stores: Vec<crate::storage::InMemoryFeatureStore> =
-            (0..parts).map(|_| crate::storage::InMemoryFeatureStore::new()).collect();
+    /// Shard every feature group of `src` by the router's ownership
+    /// vector. Every group must have exactly one row per partitioned
+    /// node (this store models node-aligned features; differently sized
+    /// groups would need their own partitioning and are rejected).
+    fn build(src: &dyn FeatureStore, router: Arc<PartitionRouter>) -> Result<Self> {
+        let n = router.num_nodes();
+        let (owned, local_row) = Self::ownership(&router);
+
+        let shard_stores: Vec<crate::storage::InMemoryFeatureStore> = (0..router.num_parts())
+            .map(|_| crate::storage::InMemoryFeatureStore::new())
+            .collect();
         for key in src.keys() {
             let rows = src.num_rows(&key)?;
             if rows != n {
@@ -87,15 +97,132 @@ impl PartitionedFeatureStore {
             }
         }
 
-        Ok(Self {
+        Ok(Self::from_shard_stores(shard_stores, local_row, router))
+    }
+
+    /// Shard one node type's feature tensor directly (the typed path):
+    /// each partition gathers only the rows it owns — no intermediate
+    /// full-size source store is materialized.
+    fn build_from_tensor(
+        key: FeatureKey,
+        x: &Tensor,
+        router: Arc<PartitionRouter>,
+    ) -> Result<Self> {
+        let n = router.num_nodes();
+        if x.rows() != n {
+            return Err(Error::Storage(format!(
+                "cannot partition group {key:?}: {} rows != {n} partitioned nodes",
+                x.rows()
+            )));
+        }
+        let (owned, local_row) = Self::ownership(&router);
+        let mut shard_stores = Vec::with_capacity(router.num_parts());
+        for idx in &owned {
+            let store = crate::storage::InMemoryFeatureStore::new();
+            store.put(key.clone(), x.gather_rows(idx)?);
+            shard_stores.push(store);
+        }
+        Ok(Self::from_shard_stores(shard_stores, local_row, router))
+    }
+
+    fn from_shard_stores(
+        shard_stores: Vec<crate::storage::InMemoryFeatureStore>,
+        local_row: Vec<u32>,
+        router: Arc<PartitionRouter>,
+    ) -> Self {
+        Self {
             shards: shard_stores
                 .into_iter()
                 .map(|s| Arc::new(s) as Arc<dyn FeatureStore>)
                 .collect(),
-            router,
             local_row,
-            latency: Duration::ZERO,
+            router,
             halo_cache: None,
+        }
+    }
+
+    fn install_cache(&mut self, cache: Arc<HaloCache>) -> Result<()> {
+        if cache.num_nodes() != self.router.num_nodes() {
+            return Err(Error::Storage(format!(
+                "halo cache covers {} nodes, store has {}",
+                cache.num_nodes(),
+                self.router.num_nodes()
+            )));
+        }
+        if cache.local_rank() != self.router.local_rank() {
+            return Err(Error::Storage(format!(
+                "halo cache built for rank {}, store views rank {}",
+                cache.local_rank(),
+                self.router.local_rank()
+            )));
+        }
+        if let Some(v) = cache
+            .cached_nodes()
+            .into_iter()
+            .find(|&v| self.router.owner(v) == self.router.local_rank())
+        {
+            return Err(Error::Storage(format!(
+                "halo cache replicates locally owned node {v}"
+            )));
+        }
+        self.halo_cache = Some(cache);
+        Ok(())
+    }
+}
+
+/// A feature store sharded row-wise across partitions, per node type.
+///
+/// Implements [`FeatureStore`], so the loader/trainer/server stack works
+/// unchanged on top of it — the §2.3 "swap the backend, keep the loop"
+/// property the paper builds its scalability story on.
+pub struct PartitionedFeatureStore {
+    router: TypedRouter,
+    types: BTreeMap<String, TypeShards>,
+    /// Simulated per-RPC latency (see [`PartitionedStoreConfig`]).
+    latency: Duration,
+    /// Optional async fetch service for the remaining remote plans
+    /// (shared across node types).
+    async_router: Option<Arc<AsyncRouter>>,
+}
+
+impl PartitionedFeatureStore {
+    /// Shard every feature group of `src` by the router's ownership
+    /// vector — the single-type special case of
+    /// [`PartitionedFeatureStore::partition_hetero`]. All groups share
+    /// the one node id space and must be node-aligned to it.
+    pub fn partition(src: &dyn FeatureStore, router: Arc<PartitionRouter>) -> Result<Self> {
+        let typed = TypedRouter::single(DEFAULT_GROUP, Arc::clone(&router));
+        let mut types = BTreeMap::new();
+        types.insert(DEFAULT_GROUP.to_string(), TypeShards::build(src, router)?);
+        Ok(Self {
+            router: typed,
+            types,
+            latency: Duration::ZERO,
+            async_router: None,
+        })
+    }
+
+    /// Shard a [`HeteroGraph`]'s per-type features: node type `nt`'s
+    /// rows live under key `(nt, "x")` and are sharded by `nt`'s router,
+    /// so shards are keyed by `(node_type, partition)`.
+    pub fn partition_hetero(g: &HeteroGraph, router: &TypedRouter) -> Result<Self> {
+        let mut types = BTreeMap::new();
+        for nt in g.node_types() {
+            let r = Arc::clone(router.router(nt)?);
+            let shards = TypeShards::build_from_tensor(
+                FeatureKey::new(nt, DEFAULT_ATTR),
+                &g.node_store(nt)?.x,
+                r,
+            )?;
+            types.insert(nt.to_string(), shards);
+        }
+        if types.is_empty() {
+            return Err(Error::Storage("hetero graph has no node types".into()));
+        }
+        Ok(Self {
+            router: router.clone(),
+            types,
+            latency: Duration::ZERO,
             async_router: None,
         })
     }
@@ -124,34 +251,39 @@ impl PartitionedFeatureStore {
         self
     }
 
-    /// Install a halo replica on the remote path. The cache must cover
-    /// the same node set, view the same rank, and hold only foreign
-    /// rows — local rows never consult it.
+    /// Install a halo replica on the remote path of the *only* node type
+    /// (the homogeneous case; typed pipelines use
+    /// [`PartitionedFeatureStore::with_halo_caches`]). The cache must
+    /// cover the same node set, view the same rank, and hold only
+    /// foreign rows — local rows never consult it.
     pub fn with_halo_cache(mut self, cache: Arc<HaloCache>) -> Result<Self> {
-        if cache.num_nodes() != self.router.num_nodes() {
+        if self.types.len() != 1 {
             return Err(Error::Storage(format!(
-                "halo cache covers {} nodes, store has {}",
-                cache.num_nodes(),
-                self.router.num_nodes()
+                "with_halo_cache on a {}-type store; use with_halo_caches",
+                self.types.len()
             )));
         }
-        if cache.local_rank() != self.router.local_rank() {
-            return Err(Error::Storage(format!(
-                "halo cache built for rank {}, store views rank {}",
-                cache.local_rank(),
-                self.router.local_rank()
-            )));
+        self.types
+            .values_mut()
+            .next()
+            .expect("non-empty")
+            .install_cache(cache)?;
+        Ok(self)
+    }
+
+    /// Install one halo replica per node type (typed layout). Types
+    /// absent from `caches` keep an uncached remote path.
+    pub fn with_halo_caches(
+        mut self,
+        caches: BTreeMap<String, Arc<HaloCache>>,
+    ) -> Result<Self> {
+        for (nt, cache) in caches {
+            let ts = self
+                .types
+                .get_mut(&nt)
+                .ok_or_else(|| Error::Storage(format!("no node type {nt} to cache")))?;
+            ts.install_cache(cache)?;
         }
-        if let Some(v) = cache
-            .cached_nodes()
-            .into_iter()
-            .find(|&v| self.router.owner(v) == self.router.local_rank())
-        {
-            return Err(Error::Storage(format!(
-                "halo cache replicates locally owned node {v}"
-            )));
-        }
-        self.halo_cache = Some(cache);
         Ok(self)
     }
 
@@ -162,14 +294,43 @@ impl PartitionedFeatureStore {
         self
     }
 
-    /// The shared router (traffic counters live here).
-    pub fn router(&self) -> &Arc<PartitionRouter> {
+    /// The shared per-type routing (traffic counters live here).
+    pub fn typed_router(&self) -> &TypedRouter {
         &self.router
     }
 
-    /// The halo replica, if one is installed.
+    /// The router of the only node type — the homogeneous accessor (see
+    /// [`TypedRouter::sole`]).
+    pub fn router(&self) -> &Arc<PartitionRouter> {
+        self.router.sole()
+    }
+
+    /// The halo replica of the only node type, if one is installed
+    /// (`None` on multi-type stores — use
+    /// [`PartitionedFeatureStore::cache_stats_by_type`]).
     pub fn halo_cache(&self) -> Option<&Arc<HaloCache>> {
-        self.halo_cache.as_ref()
+        if self.types.len() == 1 {
+            self.types.values().next().and_then(|t| t.halo_cache.as_ref())
+        } else {
+            None
+        }
+    }
+
+    /// Hit/miss/bytes counters of every installed per-type halo replica.
+    pub fn cache_stats_by_type(&self) -> BTreeMap<String, super::CacheStats> {
+        self.types
+            .iter()
+            .filter_map(|(nt, t)| t.halo_cache.as_ref().map(|c| (nt.clone(), c.stats())))
+            .collect()
+    }
+
+    /// Zero every installed cache's counters.
+    pub fn reset_cache_stats(&self) {
+        for t in self.types.values() {
+            if let Some(c) = &t.halo_cache {
+                c.reset_stats();
+            }
+        }
     }
 
     /// Whether remote fetches are served asynchronously.
@@ -179,32 +340,45 @@ impl PartitionedFeatureStore {
 
     /// Number of partitions backing this store.
     pub fn num_parts(&self) -> usize {
-        self.shards.len()
+        self.router.num_parts()
+    }
+
+    /// Resolve a feature key to its node type's shard family: with a
+    /// single type every group shares its id space (homogeneous); with
+    /// many, the key's `group` names the type.
+    fn type_state(&self, key: &FeatureKey) -> Result<&TypeShards> {
+        if self.types.len() == 1 {
+            return Ok(self.types.values().next().expect("non-empty"));
+        }
+        self.types.get(&key.group).ok_or_else(|| {
+            Error::Storage(format!("no node type {} for feature group {key:?}", key.group))
+        })
     }
 
     /// Route `idx` to owning shards and write row `k` of the result into
     /// `out` row `k` for `k < idx.len()`. `out` must already be `[>=
     /// idx.len(), F]`; rows past `idx.len()` are left untouched.
     fn fetch_rows(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
-        let parts = self.shards.len();
-        let local = self.router.local_rank() as usize;
+        let ts = self.type_state(key)?;
+        let parts = ts.shards.len();
+        let local = ts.router.local_rank() as usize;
 
         // Bucket request positions by owning partition (order-preserving;
         // validates every row id).
-        let buckets = self.router.group_positions_by_owner(idx)?;
+        let buckets = ts.router.group_positions_by_owner(idx)?;
 
         // Local-first: the local shard is read directly and costs no RPC.
         if !buckets[local].is_empty() {
             let positions = &buckets[local];
             let shard_idx: Vec<usize> = positions
                 .iter()
-                .map(|&pos| self.local_row[idx[pos]] as usize)
+                .map(|&pos| ts.local_row[idx[pos]] as usize)
                 .collect();
-            let fetched = self.shards[local].get(key, &shard_idx)?;
+            let fetched = ts.shards[local].get(key, &shard_idx)?;
             for (k, &pos) in positions.iter().enumerate() {
                 out.row_mut(pos).copy_from_slice(fetched.row(k));
             }
-            self.router.record_local();
+            ts.router.record_local();
         }
 
         // Remote partitions: halo-cache filter first, then one coalesced
@@ -215,7 +389,7 @@ impl PartitionedFeatureStore {
             if p == local || positions.is_empty() {
                 continue;
             }
-            let miss_positions: Vec<usize> = match &self.halo_cache {
+            let miss_positions: Vec<usize> = match &ts.halo_cache {
                 Some(cache) => {
                     let mut misses = Vec::new();
                     for &pos in positions {
@@ -236,18 +410,18 @@ impl PartitionedFeatureStore {
             }
             let shard_idx: Vec<usize> = miss_positions
                 .iter()
-                .map(|&pos| self.local_row[idx[pos]] as usize)
+                .map(|&pos| ts.local_row[idx[pos]] as usize)
                 .collect();
-            self.router.record_remote_to(p as u32, miss_positions.len() as u64);
+            ts.router.record_remote_to(p as u32, miss_positions.len() as u64);
             match &self.async_router {
                 Some(ar) => pending.push(ar.dispatch(
-                    Arc::clone(&self.shards[p]),
+                    Arc::clone(&ts.shards[p]),
                     key.clone(),
                     FetchPlan { part: p as u32, positions: miss_positions, shard_idx },
                     self.latency,
                 )),
                 None => {
-                    let fetched = self.shards[p].get(key, &shard_idx)?;
+                    let fetched = ts.shards[p].get(key, &shard_idx)?;
                     for (k, &pos) in miss_positions.iter().enumerate() {
                         out.row_mut(pos).copy_from_slice(fetched.row(k));
                     }
@@ -304,24 +478,29 @@ impl FeatureStore for PartitionedFeatureStore {
     }
 
     fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
-        self.shards[0].feature_dim(key)
+        self.type_state(key)?.shards[0].feature_dim(key)
     }
 
     fn num_rows(&self, key: &FeatureKey) -> Result<usize> {
-        // Validate the key exists, then report the global row count.
-        self.shards[0].feature_dim(key)?;
-        Ok(self.local_row.len())
+        let ts = self.type_state(key)?;
+        // Validate the key exists, then report the type-global row count.
+        ts.shards[0].feature_dim(key)?;
+        Ok(ts.local_row.len())
     }
 
     fn keys(&self) -> Vec<FeatureKey> {
-        self.shards[0].keys()
+        self.types
+            .values()
+            .flat_map(|t| t.shards[0].keys())
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::partition::Partitioning;
+    use crate::graph::{EdgeIndex, EdgeType};
+    use crate::partition::{Partitioning, TypedPartitioning};
     use crate::storage::InMemoryFeatureStore;
 
     fn src_store(n: usize, f: usize) -> InMemoryFeatureStore {
@@ -556,5 +735,120 @@ mod tests {
         // Replicating a locally owned row is a wiring bug.
         let local_row = Arc::new(HaloCache::build(&[0], &src, n, 0).unwrap());
         assert!(partitioned(n, 3).with_halo_cache(local_row).is_err());
+    }
+
+    // --- typed (hetero) sharding ----------------------------------------
+
+    /// users [4 x 2] and items [3 x 3], distinct dims so cross-type mixups
+    /// would be caught by shape checks too.
+    fn hetero_graph() -> HeteroGraph {
+        let mut g = HeteroGraph::new();
+        let ux: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        g.add_node_type("user", Tensor::new(vec![4, 2], ux).unwrap()).unwrap();
+        let ix: Vec<f32> = (0..9).map(|i| 100.0 + i as f32).collect();
+        g.add_node_type("item", Tensor::new(vec![3, 3], ix).unwrap()).unwrap();
+        let ei = EdgeIndex::new(vec![0, 1, 2, 3], vec![0, 1, 2, 0], 4).unwrap();
+        g.add_edge_type(EdgeType::new("user", "rates", "item"), ei).unwrap();
+        g
+    }
+
+    fn hetero_router(local_rank: u32) -> TypedRouter {
+        let mut parts = BTreeMap::new();
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![0, 1, 0, 1], num_parts: 2 },
+        );
+        parts.insert(
+            "item".to_string(),
+            Partitioning { assignment: vec![1, 0, 1], num_parts: 2 },
+        );
+        TypedRouter::new(&TypedPartitioning::from_parts(parts).unwrap(), local_rank).unwrap()
+    }
+
+    #[test]
+    fn hetero_store_routes_per_type() {
+        let g = hetero_graph();
+        let router = hetero_router(0);
+        let store = PartitionedFeatureStore::partition_hetero(&g, &router).unwrap();
+        assert_eq!(store.num_parts(), 2);
+        assert_eq!(store.keys().len(), 2);
+
+        let users = store.get(&FeatureKey::new("user", "x"), &[3, 0]).unwrap();
+        assert_eq!(users.row(0), &[6.0, 7.0]);
+        assert_eq!(users.row(1), &[0.0, 1.0]);
+        let items = store.get(&FeatureKey::new("item", "x"), &[2, 1]).unwrap();
+        assert_eq!(items.row(0), &[106.0, 107.0, 108.0]);
+        assert_eq!(items.row(1), &[103.0, 104.0, 105.0]);
+        assert_eq!(store.feature_dim(&FeatureKey::new("item", "x")).unwrap(), 3);
+        assert_eq!(store.num_rows(&FeatureKey::new("user", "x")).unwrap(), 4);
+        assert_eq!(store.num_rows(&FeatureKey::new("item", "x")).unwrap(), 3);
+
+        // Traffic landed on the per-type routers.
+        let user_stats = router.router("user").unwrap().stats();
+        assert_eq!(user_stats.local_msgs, 1, "users 0 (local) coalesced");
+        assert_eq!(user_stats.remote_msgs, 1, "user 3 on partition 1");
+        let item_stats = router.router("item").unwrap().stats();
+        assert_eq!(item_stats.local_msgs, 1, "item 1 local");
+        assert_eq!(item_stats.remote_msgs, 1, "item 2 on partition 1");
+
+        // Unknown type / per-type bounds enforced.
+        assert!(store.get(&FeatureKey::new("ghost", "x"), &[0]).is_err());
+        assert!(store.get(&FeatureKey::new("item", "x"), &[3]).is_err());
+        // The multi-type homogeneous cache installer is rejected.
+        let src = src_store(4, 2);
+        let cache = Arc::new(HaloCache::build(&[1], &src, 4, 0).unwrap());
+        assert!(PartitionedFeatureStore::partition_hetero(&g, &router)
+            .unwrap()
+            .with_halo_cache(cache)
+            .is_err());
+    }
+
+    #[test]
+    fn hetero_typed_caches_serve_per_type_halos() {
+        let g = hetero_graph();
+        let router = hetero_router(0);
+        // Rank 0's foreign rows: users 1, 3 (partition 1), items 0, 2.
+        let user_src = InMemoryFeatureStore::new();
+        user_src.put(FeatureKey::new("user", "x"), g.node_store("user").unwrap().x.clone());
+        let item_src = InMemoryFeatureStore::new();
+        item_src.put(FeatureKey::new("item", "x"), g.node_store("item").unwrap().x.clone());
+        let mut caches = BTreeMap::new();
+        caches.insert(
+            "user".to_string(),
+            Arc::new(HaloCache::build(&[1, 3], &user_src, 4, 0).unwrap()),
+        );
+        caches.insert(
+            "item".to_string(),
+            Arc::new(HaloCache::build(&[0, 2], &item_src, 3, 0).unwrap()),
+        );
+        let store = PartitionedFeatureStore::partition_hetero(&g, &router)
+            .unwrap()
+            .with_halo_caches(caches)
+            .unwrap();
+        router.reset_stats();
+
+        let users = store.get(&FeatureKey::new("user", "x"), &[1, 3, 0]).unwrap();
+        assert_eq!(users.row(0), &[2.0, 3.0]);
+        assert_eq!(users.row(1), &[6.0, 7.0]);
+        let items = store.get(&FeatureKey::new("item", "x"), &[0, 2]).unwrap();
+        assert_eq!(items.row(0), &[100.0, 101.0, 102.0]);
+        assert_eq!(items.row(1), &[106.0, 107.0, 108.0]);
+
+        // Every foreign row was a hit: zero RPCs.
+        assert_eq!(router.stats().remote_msgs, 0);
+        let by_type = store.cache_stats_by_type();
+        assert_eq!(by_type["user"].hits, 2);
+        assert_eq!(by_type["item"].hits, 2);
+        store.reset_cache_stats();
+        assert_eq!(store.cache_stats_by_type()["user"].hits, 0);
+        // Caching an unknown type is rejected.
+        let bad = BTreeMap::from([(
+            "ghost".to_string(),
+            Arc::new(HaloCache::build(&[1], &user_src, 4, 0).unwrap()),
+        )]);
+        assert!(PartitionedFeatureStore::partition_hetero(&g, &router)
+            .unwrap()
+            .with_halo_caches(bad)
+            .is_err());
     }
 }

@@ -1,80 +1,109 @@
 //! `PartitionedGraphStore` — the topology half of §2.3's distributed
-//! backend.
+//! backend, keyed by `(edge_type, partition)`.
 //!
 //! Edges are sharded by node ownership the way PyG's `torch_geometric.
-//! distributed` partitions its adjacency: a partition holds the
-//! *in-edges* of the destinations it owns (the direction neighbor
-//! sampling traverses) and the *out-edges* of the sources it owns (for
-//! bidirectional expansion). Each shard keys its compressed views by
-//! **global** node id and stores **global** edge ids, so a shard-local
+//! distributed` partitions its adjacency: for every edge type, a
+//! partition holds the *in-edges* of the destinations it owns (the
+//! direction neighbor sampling traverses, under the destination type's
+//! [`PartitionRouter`]) and the *out-edges* of the sources it owns
+//! (under the source type's router — the two differ for bipartite
+//! relations). Each shard keys its compressed views by **type-global**
+//! node id and stores **type-global** edge ids, so a shard-local
 //! adjacency slice is bit-identical to the corresponding range of the
-//! merged global CSC/CSR — the property the seed-fixed local/distributed
-//! equivalence rests on.
+//! merged per-edge-type CSC/CSR — the property the seed-fixed
+//! local/distributed equivalence rests on, for the homogeneous and the
+//! heterogeneous pipeline alike.
+//!
+//! The homogeneous store is the **single-type special case**: one node
+//! type (`_default`), one edge type, one router — not a parallel code
+//! path. [`PartitionedGraphStore::from_edge_index`] simply wraps the
+//! caller's router into a single-type [`TypedRouter`] and builds the one
+//! [`EdgeShards`] entry.
 //!
 //! The store also implements [`GraphStore`] by serving merged global
-//! views, so non-partition-aware components (plain `NeighborSampler`,
-//! the inference server) can run over it unchanged.
+//! views per edge type, so non-partition-aware components (plain
+//! `NeighborSampler`, `HeteroNeighborSampler`, the inference server) can
+//! run over it unchanged.
 
-use super::PartitionRouter;
+use super::{PartitionRouter, RouterStats, TypedRouter};
 use crate::error::{Error, Result};
-use crate::graph::{Compressed, EdgeIndex, EdgeType};
+use crate::graph::{Compressed, EdgeIndex, EdgeType, HeteroGraph};
 use crate::storage::graph_store::compress_bipartite;
-use crate::storage::{default_edge_type, GraphStore};
+use crate::storage::{default_edge_type, GraphStore, DEFAULT_GROUP};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
-/// One partition's share of the topology.
+/// One partition's share of one edge type's topology.
 struct GraphShard {
-    /// In-edges of owned destinations: CSC keyed by global dst id
-    /// (`indptr` spans all nodes; only owned nodes have entries),
-    /// `indices` = global src ids, `perm` = global edge ids.
+    /// In-edges of owned destinations: CSC keyed by type-global dst id
+    /// (`indptr` spans the whole dst type; only owned nodes have
+    /// entries), `indices` = type-global src ids, `perm` = type-global
+    /// edge ids.
     csc: Compressed,
-    /// Out-edges of owned sources: CSR keyed by global src id.
+    /// Out-edges of owned sources: CSR keyed by type-global src id.
     csr: Compressed,
 }
 
-/// Graph topology sharded across partitions, with merged global views.
-pub struct PartitionedGraphStore {
+/// One edge type's sharded topology: per-partition shards, the original
+/// COO (for the merged views), and per-edge-type traffic counters.
+pub struct EdgeShards {
+    src_router: Arc<PartitionRouter>,
+    dst_router: Arc<PartitionRouter>,
     shards: Vec<GraphShard>,
-    router: Arc<PartitionRouter>,
-    num_nodes: usize,
-    /// Original COO (kept to build the merged views exactly as the
-    /// single-store path would).
     src: Vec<u32>,
     dst: Vec<u32>,
+    n_src: usize,
+    n_dst: usize,
     edge_time: Option<Arc<Vec<i64>>>,
-    node_time: Option<Arc<Vec<i64>>>,
     global_csr: OnceLock<Arc<Compressed>>,
     global_csc: OnceLock<Arc<Compressed>>,
+    // Per-edge-type traffic (the bench_dist_hetero breakdown). Routed
+    // messages are *also* recorded on the dst-type router; these counters
+    // attribute them to the relation that caused them.
+    local_msgs: AtomicU64,
+    remote_msgs: AtomicU64,
+    remote_rows: AtomicU64,
 }
 
-impl PartitionedGraphStore {
-    /// Shard a homogeneous edge index by the router's ownership vector.
-    pub fn from_edge_index(edges: &EdgeIndex, router: Arc<PartitionRouter>) -> Result<Self> {
-        let n = edges.num_nodes();
-        if router.num_nodes() != n {
+impl EdgeShards {
+    fn build(
+        src: Vec<u32>,
+        dst: Vec<u32>,
+        n_src: usize,
+        n_dst: usize,
+        src_router: Arc<PartitionRouter>,
+        dst_router: Arc<PartitionRouter>,
+        edge_time: Option<Arc<Vec<i64>>>,
+    ) -> Result<Self> {
+        if src_router.num_nodes() != n_src {
             return Err(Error::Storage(format!(
-                "partitioning covers {} nodes, graph has {n}",
-                router.num_nodes()
+                "src partitioning covers {} nodes, edge type has {n_src}",
+                src_router.num_nodes()
             )));
         }
-        let parts = router.num_parts();
-        let src = edges.src().to_vec();
-        let dst = edges.dst().to_vec();
+        if dst_router.num_nodes() != n_dst {
+            return Err(Error::Storage(format!(
+                "dst partitioning covers {} nodes, edge type has {n_dst}",
+                dst_router.num_nodes()
+            )));
+        }
+        let parts = dst_router.num_parts();
 
         // One pass over the edge list, bucketed by owner. Bucketing
         // preserves original edge order within each partition, so the
         // per-node neighbor lists produced by the stable counting sort
-        // match the global views slice-for-slice.
+        // match the merged views slice-for-slice.
         let mut in_buckets: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> =
             (0..parts).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
         let mut out_buckets: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> =
             (0..parts).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
         for (e, (&s, &d)) in src.iter().zip(&dst).enumerate() {
-            let (in_src, in_dst, in_eid) = &mut in_buckets[router.owner(d) as usize];
+            let (in_src, in_dst, in_eid) = &mut in_buckets[dst_router.owner(d) as usize];
             in_src.push(s);
             in_dst.push(d);
             in_eid.push(e as u32);
-            let (out_src, out_dst, out_eid) = &mut out_buckets[router.owner(s) as usize];
+            let (out_src, out_dst, out_eid) = &mut out_buckets[src_router.owner(s) as usize];
             out_src.push(s);
             out_dst.push(d);
             out_eid.push(e as u32);
@@ -83,11 +112,11 @@ impl PartitionedGraphStore {
         for ((in_src, in_dst, in_eid), (out_src, out_dst, out_eid)) in
             in_buckets.into_iter().zip(out_buckets)
         {
-            let mut csc = compress_bipartite(&in_dst, &in_src, n);
+            let mut csc = compress_bipartite(&in_dst, &in_src, n_dst);
             for slot in csc.perm.iter_mut() {
                 *slot = in_eid[*slot as usize];
             }
-            let mut csr = compress_bipartite(&out_src, &out_dst, n);
+            let mut csr = compress_bipartite(&out_src, &out_dst, n_src);
             for slot in csr.perm.iter_mut() {
                 *slot = out_eid[*slot as usize];
             }
@@ -95,122 +124,289 @@ impl PartitionedGraphStore {
         }
 
         Ok(Self {
+            src_router,
+            dst_router,
             shards,
-            router,
-            num_nodes: n,
             src,
             dst,
-            edge_time: None,
-            node_time: None,
+            n_src,
+            n_dst,
+            edge_time,
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
+            local_msgs: AtomicU64::new(0),
+            remote_msgs: AtomicU64::new(0),
+            remote_rows: AtomicU64::new(0),
+        })
+    }
+
+    /// In-neighbors of dst node `v` served by its owning shard:
+    /// `(type-global src ids, type-global edge ids)`. Does **not** touch
+    /// the traffic counters — the caller decides how accesses coalesce
+    /// into messages (see [`EdgeShards::record_hop`]).
+    pub fn in_slice(&self, v: u32) -> (&[u32], &[u32]) {
+        let shard = &self.shards[self.dst_router.owner(v) as usize];
+        let (lo, hi) = (shard.csc.indptr[v as usize], shard.csc.indptr[v as usize + 1]);
+        (&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi])
+    }
+
+    /// Out-neighbors of src node `v` served by its owning shard.
+    pub fn out_slice(&self, v: u32) -> (&[u32], &[u32]) {
+        let shard = &self.shards[self.src_router.owner(v) as usize];
+        let (lo, hi) = (shard.csr.indptr[v as usize], shard.csr.indptr[v as usize + 1]);
+        (&shard.csr.indices[lo..hi], &shard.csr.perm[lo..hi])
+    }
+
+    /// Owning partition of dst node `v` (the shard `in_slice` reads).
+    pub fn dst_owner(&self, v: u32) -> u32 {
+        self.dst_router.owner(v)
+    }
+
+    /// The destination type's router (adjacency reads are accounted on
+    /// it — the in-edges live with the destination's owner).
+    pub fn dst_router(&self) -> &Arc<PartitionRouter> {
+        &self.dst_router
+    }
+
+    /// Account one hop's shard accesses for this edge type: the local
+    /// shard costs one local message when touched, each remote partition
+    /// touched costs one coalesced RPC carrying its sampled edges.
+    /// Recorded on the destination type's router *and* the per-edge-type
+    /// counters, so traffic can be read per rank, per node type, or per
+    /// relation.
+    pub fn record_hop(&self, touched: &[bool], edges: &[u64]) {
+        let local = self.dst_router.local_rank() as usize;
+        if touched[local] {
+            self.dst_router.record_local();
+            self.local_msgs.fetch_add(1, Ordering::Relaxed);
+        }
+        for (p, &hit) in touched.iter().enumerate() {
+            if p != local && hit {
+                self.dst_router.record_remote_to(p as u32, edges[p]);
+                self.remote_msgs.fetch_add(1, Ordering::Relaxed);
+                self.remote_rows.fetch_add(edges[p], Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// This edge type's share of the traffic (payload counted in edges).
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            local_msgs: self.local_msgs.load(Ordering::Relaxed),
+            remote_msgs: self.remote_msgs.load(Ordering::Relaxed),
+            remote_rows: self.remote_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset_stats(&self) {
+        self.local_msgs.store(0, Ordering::Relaxed);
+        self.remote_msgs.store(0, Ordering::Relaxed);
+        self.remote_rows.store(0, Ordering::Relaxed);
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Edges whose endpoints live on different partitions (under the
+    /// src/dst types' respective partitionings).
+    pub fn num_cut_edges(&self) -> usize {
+        self.src
+            .iter()
+            .zip(&self.dst)
+            .filter(|(&s, &d)| self.src_router.owner(s) != self.dst_router.owner(d))
+            .count()
+    }
+}
+
+/// Graph topology sharded across partitions, keyed by
+/// `(edge_type, partition)`, with merged per-edge-type global views.
+pub struct PartitionedGraphStore {
+    router: TypedRouter,
+    num_nodes: BTreeMap<String, usize>,
+    node_time: BTreeMap<String, Arc<Vec<i64>>>,
+    edges: BTreeMap<EdgeType, EdgeShards>,
+}
+
+impl PartitionedGraphStore {
+    /// Shard a homogeneous edge index by the router's ownership vector —
+    /// the single-type special case of [`PartitionedGraphStore::from_hetero`].
+    pub fn from_edge_index(edges: &EdgeIndex, router: Arc<PartitionRouter>) -> Result<Self> {
+        let n = edges.num_nodes();
+        if router.num_nodes() != n {
+            return Err(Error::Storage(format!(
+                "partitioning covers {} nodes, graph has {n}",
+                router.num_nodes()
+            )));
+        }
+        let typed = TypedRouter::single(DEFAULT_GROUP, router);
+        let shards = EdgeShards::build(
+            edges.src().to_vec(),
+            edges.dst().to_vec(),
+            n,
+            n,
+            Arc::clone(typed.sole()),
+            Arc::clone(typed.sole()),
+            None,
+        )?;
+        let mut num_nodes = BTreeMap::new();
+        num_nodes.insert(DEFAULT_GROUP.to_string(), n);
+        let mut edge_map = BTreeMap::new();
+        edge_map.insert(default_edge_type(), shards);
+        Ok(Self {
+            router: typed,
+            num_nodes,
+            node_time: BTreeMap::new(),
+            edges: edge_map,
         })
     }
 
     /// Shard a [`crate::graph::Graph`], carrying its temporal attributes.
     pub fn from_graph(g: &crate::graph::Graph, router: Arc<PartitionRouter>) -> Result<Self> {
         let mut s = Self::from_edge_index(&g.edge_index, router)?;
-        s.edge_time = g.edge_time.clone().map(Arc::new);
-        s.node_time = g.node_time.clone().map(Arc::new);
+        if let Some(t) = &g.edge_time {
+            s.edges
+                .get_mut(&default_edge_type())
+                .expect("default edge type present")
+                .edge_time = Some(Arc::new(t.clone()));
+        }
+        if let Some(t) = &g.node_time {
+            s.node_time.insert(DEFAULT_GROUP.to_string(), Arc::new(t.clone()));
+        }
         Ok(s)
     }
 
-    /// The shared router (traffic counters live here).
-    pub fn router(&self) -> &Arc<PartitionRouter> {
+    /// Shard a [`HeteroGraph`]: every edge type's in-edges live with the
+    /// destination's owner (under the destination type's partitioning),
+    /// its out-edges with the source's owner. `router` must cover every
+    /// node type of the graph.
+    pub fn from_hetero(g: &HeteroGraph, router: TypedRouter) -> Result<Self> {
+        let mut num_nodes = BTreeMap::new();
+        let mut node_time = BTreeMap::new();
+        for nt in g.node_types() {
+            let n = g.num_nodes(nt)?;
+            if router.router(nt)?.num_nodes() != n {
+                return Err(Error::Storage(format!(
+                    "partitioning covers {} {nt} nodes, graph has {n}",
+                    router.router(nt)?.num_nodes()
+                )));
+            }
+            num_nodes.insert(nt.to_string(), n);
+            if let Some(t) = &g.node_store(nt)?.time {
+                node_time.insert(nt.to_string(), Arc::new(t.clone()));
+            }
+        }
+        let mut edges = BTreeMap::new();
+        for et in g.edge_types() {
+            let store = g.edge_store(et)?;
+            let shards = EdgeShards::build(
+                store.edge_index.src().to_vec(),
+                store.edge_index.dst().to_vec(),
+                g.num_nodes(&et.src)?,
+                g.num_nodes(&et.dst)?,
+                Arc::clone(router.router(&et.src)?),
+                Arc::clone(router.router(&et.dst)?),
+                store.time.clone().map(Arc::new),
+            )?;
+            edges.insert(et.clone(), shards);
+        }
+        Ok(Self { router, num_nodes, node_time, edges })
+    }
+
+    /// The shared per-type routing (traffic counters live here).
+    pub fn typed_router(&self) -> &TypedRouter {
         &self.router
     }
 
+    /// The router of the only node type — the homogeneous accessor (see
+    /// [`TypedRouter::sole`]).
+    pub fn router(&self) -> &Arc<PartitionRouter> {
+        self.router.sole()
+    }
+
     pub fn num_parts(&self) -> usize {
-        self.shards.len()
+        self.router.num_parts()
     }
 
-    /// In-neighbors of `v` served by its owning shard:
-    /// `(global src ids, global edge ids)`. Does **not** touch the
-    /// traffic counters — the caller decides how accesses coalesce into
-    /// messages (see [`crate::dist::DistNeighborSampler`]).
-    pub fn in_slice(&self, v: u32) -> (&[u32], &[u32]) {
-        let shard = &self.shards[self.router.owner(v) as usize];
-        let (lo, hi) = (shard.csc.indptr[v as usize], shard.csc.indptr[v as usize + 1]);
-        (&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi])
+    /// The sharded topology of one edge type.
+    pub fn edges_of(&self, et: &EdgeType) -> Result<&EdgeShards> {
+        self.edges
+            .get(et)
+            .ok_or_else(|| Error::Storage(format!("unknown edge type {}", et.key())))
     }
 
-    /// Out-neighbors of `v` served by its owning shard.
-    pub fn out_slice(&self, v: u32) -> (&[u32], &[u32]) {
-        let shard = &self.shards[self.router.owner(v) as usize];
-        let (lo, hi) = (shard.csr.indptr[v as usize], shard.csr.indptr[v as usize + 1]);
-        (&shard.csr.indices[lo..hi], &shard.csr.perm[lo..hi])
-    }
-
-    /// Per-partition `(in_edges, out_edges)` shard sizes — the storage
-    /// each simulated node actually holds. Together with
-    /// [`crate::dist::HaloCache::replicated_bytes`] this is the memory
-    /// side of the halo-caching trade-off the multi-rank CLI reports.
+    /// Per-partition `(in_edges, out_edges)` shard sizes summed over edge
+    /// types — the storage each simulated node actually holds. Together
+    /// with [`crate::dist::HaloCache::replicated_bytes`] this is the
+    /// memory side of the halo-caching trade-off the multi-rank CLI
+    /// reports.
     pub fn shard_edge_counts(&self) -> Vec<(usize, usize)> {
-        self.shards
+        let mut counts = vec![(0usize, 0usize); self.num_parts()];
+        for es in self.edges.values() {
+            for (p, shard) in es.shards.iter().enumerate() {
+                counts[p].0 += shard.csc.num_edges();
+                counts[p].1 += shard.csr.num_edges();
+            }
+        }
+        counts
+    }
+
+    /// Edges whose endpoints live on different partitions, summed over
+    /// edge types (the traffic-generating edges).
+    pub fn num_cut_edges(&self) -> usize {
+        self.edges.values().map(|es| es.num_cut_edges()).sum()
+    }
+
+    /// Per-edge-type traffic snapshot (messages attributed to the
+    /// relation whose expansion caused them).
+    pub fn edge_traffic(&self) -> BTreeMap<EdgeType, RouterStats> {
+        self.edges
             .iter()
-            .map(|s| (s.csc.num_edges(), s.csr.num_edges()))
+            .map(|(et, es)| (et.clone(), es.stats()))
             .collect()
     }
 
-    /// Number of edges whose endpoints live on different partitions (the
-    /// traffic-generating edges; equals `edge_cut * num_edges`).
-    pub fn num_cut_edges(&self) -> usize {
-        self.src
-            .iter()
-            .zip(&self.dst)
-            .filter(|(&s, &d)| self.router.owner(s) != self.router.owner(d))
-            .count()
-    }
-
-    fn check_edge_type(&self, et: &EdgeType) -> Result<()> {
-        if *et != default_edge_type() {
-            return Err(Error::Storage(format!(
-                "partitioned store only holds the homogeneous edge type, not {}",
-                et.key()
-            )));
+    /// Zero the per-edge-type counters (the per-type routers are reset
+    /// through [`TypedRouter::reset_stats`]).
+    pub fn reset_edge_traffic(&self) {
+        for es in self.edges.values() {
+            es.reset_stats();
         }
-        Ok(())
     }
 }
 
 impl GraphStore for PartitionedGraphStore {
     fn edge_types(&self) -> Vec<EdgeType> {
-        vec![default_edge_type()]
+        self.edges.keys().cloned().collect()
     }
 
     fn num_nodes(&self, node_type: &str) -> Result<usize> {
-        if node_type == default_edge_type().src {
-            Ok(self.num_nodes)
-        } else {
-            Err(Error::Storage(format!("unknown node type {node_type}")))
-        }
+        self.num_nodes
+            .get(node_type)
+            .copied()
+            .ok_or_else(|| Error::Storage(format!("unknown node type {node_type}")))
     }
 
     fn csr(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
-        self.check_edge_type(et)?;
-        Ok(Arc::clone(self.global_csr.get_or_init(|| {
-            Arc::new(compress_bipartite(&self.src, &self.dst, self.num_nodes))
+        let es = self.edges_of(et)?;
+        Ok(Arc::clone(es.global_csr.get_or_init(|| {
+            Arc::new(compress_bipartite(&es.src, &es.dst, es.n_src))
         })))
     }
 
     fn csc(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
-        self.check_edge_type(et)?;
-        Ok(Arc::clone(self.global_csc.get_or_init(|| {
-            Arc::new(compress_bipartite(&self.dst, &self.src, self.num_nodes))
+        let es = self.edges_of(et)?;
+        Ok(Arc::clone(es.global_csc.get_or_init(|| {
+            Arc::new(compress_bipartite(&es.dst, &es.src, es.n_dst))
         })))
     }
 
     fn edge_time(&self, et: &EdgeType) -> Result<Option<Arc<Vec<i64>>>> {
-        self.check_edge_type(et)?;
-        Ok(self.edge_time.clone())
+        Ok(self.edges_of(et)?.edge_time.clone())
     }
 
     fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>> {
-        if node_type == default_edge_type().src {
-            Ok(self.node_time.clone())
-        } else {
-            Ok(None)
-        }
+        Ok(self.node_time.get(node_type).cloned())
     }
 }
 
@@ -218,8 +414,9 @@ impl GraphStore for PartitionedGraphStore {
 mod tests {
     use super::*;
     use crate::datasets::sbm::{self, SbmConfig};
-    use crate::partition::{ldg_partition, Partitioning};
+    use crate::partition::{ldg_partition, Partitioning, TypedPartitioning};
     use crate::storage::InMemoryGraphStore;
+    use crate::tensor::Tensor;
 
     fn sbm_stores(parts: usize) -> (InMemoryGraphStore, PartitionedGraphStore) {
         let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 21, ..Default::default() })
@@ -247,11 +444,12 @@ mod tests {
         let (mem, part) = sbm_stores(4);
         let csc = mem.csc(&default_edge_type()).unwrap();
         let csr = mem.csr(&default_edge_type()).unwrap();
+        let es = part.edges_of(&default_edge_type()).unwrap();
         for v in 0..300u32 {
-            let (nbrs, eids) = part.in_slice(v);
+            let (nbrs, eids) = es.in_slice(v);
             assert_eq!(nbrs, csc.neighbors(v as usize), "in-nbrs of {v}");
             assert_eq!(eids, csc.edge_ids(v as usize), "in-eids of {v}");
-            let (nbrs, eids) = part.out_slice(v);
+            let (nbrs, eids) = es.out_slice(v);
             assert_eq!(nbrs, csr.neighbors(v as usize), "out-nbrs of {v}");
             assert_eq!(eids, csr.edge_ids(v as usize), "out-eids of {v}");
         }
@@ -260,11 +458,10 @@ mod tests {
     #[test]
     fn every_edge_assigned_to_exactly_one_in_shard() {
         let (_, part) = sbm_stores(3);
-        let mut total = 0usize;
-        for shard in &part.shards {
-            total += shard.csc.num_edges();
-        }
-        assert_eq!(total, part.src.len());
+        let counts = part.shard_edge_counts();
+        let total: usize = counts.iter().map(|&(i, _)| i).sum();
+        let es = part.edges_of(&default_edge_type()).unwrap();
+        assert_eq!(total, es.num_edges());
     }
 
     #[test]
@@ -274,9 +471,10 @@ mod tests {
         assert_eq!(counts.len(), 4);
         let in_total: usize = counts.iter().map(|&(i, _)| i).sum();
         let out_total: usize = counts.iter().map(|&(_, o)| o).sum();
+        let num_edges = part.edges_of(&default_edge_type()).unwrap().num_edges();
         // Every edge lives in exactly one in-shard and one out-shard.
-        assert_eq!(in_total, part.src.len());
-        assert_eq!(out_total, part.src.len());
+        assert_eq!(in_total, num_edges);
+        assert_eq!(out_total, num_edges);
     }
 
     #[test]
@@ -307,6 +505,7 @@ mod tests {
         let (_, part) = sbm_stores(2);
         assert!(part.csr(&EdgeType::new("a", "b", "c")).is_err());
         assert!(part.num_nodes("user").is_err());
+        assert!(part.edges_of(&EdgeType::new("a", "b", "c")).is_err());
     }
 
     #[test]
@@ -316,5 +515,97 @@ mod tests {
         let p = Partitioning { assignment: vec![0; 49], num_parts: 1 };
         let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
         assert!(PartitionedGraphStore::from_edge_index(&g.edge_index, router).is_err());
+    }
+
+    /// users --rates--> items (bipartite, typed ownership).
+    fn hetero_graph() -> HeteroGraph {
+        let mut g = HeteroGraph::new();
+        g.add_node_type("user", Tensor::zeros(vec![4, 2])).unwrap();
+        g.add_node_type("item", Tensor::zeros(vec![3, 2])).unwrap();
+        let rates = EdgeIndex::new(vec![0, 1, 2, 3, 0], vec![0, 1, 2, 0, 2], 4).unwrap();
+        g.add_edge_type(EdgeType::new("user", "rates", "item"), rates).unwrap();
+        g
+    }
+
+    fn hetero_partitioning() -> TypedPartitioning {
+        let mut parts = std::collections::BTreeMap::new();
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![0, 0, 1, 1], num_parts: 2 },
+        );
+        parts.insert(
+            "item".to_string(),
+            Partitioning { assignment: vec![0, 1, 1], num_parts: 2 },
+        );
+        TypedPartitioning::from_parts(parts).unwrap()
+    }
+
+    #[test]
+    fn hetero_shard_slices_equal_merged_views() {
+        let g = hetero_graph();
+        let router = TypedRouter::new(&hetero_partitioning(), 0).unwrap();
+        let part = PartitionedGraphStore::from_hetero(&g, router).unwrap();
+        let mem = InMemoryGraphStore::from_hetero(&g);
+        let et = EdgeType::new("user", "rates", "item");
+        assert_eq!(*mem.csc(&et).unwrap(), *part.csc(&et).unwrap());
+        assert_eq!(*mem.csr(&et).unwrap(), *part.csr(&et).unwrap());
+        let csc = mem.csc(&et).unwrap();
+        let csr = mem.csr(&et).unwrap();
+        let es = part.edges_of(&et).unwrap();
+        for v in 0..3u32 {
+            let (nbrs, eids) = es.in_slice(v);
+            assert_eq!(nbrs, csc.neighbors(v as usize), "in-nbrs of item {v}");
+            assert_eq!(eids, csc.edge_ids(v as usize), "in-eids of item {v}");
+        }
+        for v in 0..4u32 {
+            let (nbrs, eids) = es.out_slice(v);
+            assert_eq!(nbrs, csr.neighbors(v as usize), "out-nbrs of user {v}");
+            assert_eq!(eids, csr.edge_ids(v as usize), "out-eids of user {v}");
+        }
+        // Typed ownership: item 2's in-edges live on partition 1.
+        assert_eq!(es.dst_owner(2), 1);
+        assert_eq!(part.num_nodes("user").unwrap(), 4);
+        assert_eq!(part.num_nodes("item").unwrap(), 3);
+        // Cut edges under typed ownership: user0(p0)->item2(p1),
+        // user2(p1)->item... user2(p1)->item2(p1) local; user3(p1)->item0(p0) cut;
+        // user1(p0)->item1(p1) cut.
+        assert_eq!(part.num_cut_edges(), 3);
+    }
+
+    #[test]
+    fn hetero_edge_traffic_attributes_per_relation() {
+        let g = hetero_graph();
+        let router = TypedRouter::new(&hetero_partitioning(), 0).unwrap();
+        let part = PartitionedGraphStore::from_hetero(&g, router).unwrap();
+        let et = EdgeType::new("user", "rates", "item");
+        let es = part.edges_of(&et).unwrap();
+        es.record_hop(&[true, true], &[0, 4]);
+        let t = part.edge_traffic();
+        assert_eq!(t[&et].local_msgs, 1);
+        assert_eq!(t[&et].remote_msgs, 1);
+        assert_eq!(t[&et].remote_rows, 4);
+        // The same messages landed on the item (dst-type) router.
+        let item_stats = part.typed_router().router("item").unwrap().stats();
+        assert_eq!(item_stats.local_msgs, 1);
+        assert_eq!(item_stats.remote_msgs, 1);
+        part.reset_edge_traffic();
+        assert_eq!(part.edge_traffic()[&et], RouterStats::default());
+    }
+
+    #[test]
+    fn hetero_mismatched_partitioning_rejected() {
+        let g = hetero_graph();
+        let mut parts = std::collections::BTreeMap::new();
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![0, 0, 1], num_parts: 2 }, // 3 != 4 users
+        );
+        parts.insert(
+            "item".to_string(),
+            Partitioning { assignment: vec![0, 1, 1], num_parts: 2 },
+        );
+        let tp = TypedPartitioning::from_parts(parts).unwrap();
+        let router = TypedRouter::new(&tp, 0).unwrap();
+        assert!(PartitionedGraphStore::from_hetero(&g, router).is_err());
     }
 }

@@ -120,6 +120,49 @@ impl HaloCache {
         })
     }
 
+    /// Build from pre-gathered halo rows of a *single* feature group:
+    /// `rows` is `[halo.len(), F]` with row `i` holding the features of
+    /// node `halo[i]`. The typed pipeline uses this to replicate only
+    /// the halo rows of each node type (gathered straight off the
+    /// `HeteroGraph`) instead of materializing a full per-type source
+    /// store first; the rows must come from the same tensor the shards
+    /// were cut from, so hits stay byte-identical to routed fetches.
+    pub fn from_group(
+        key: FeatureKey,
+        halo: &[u32],
+        rows: Tensor,
+        num_nodes: usize,
+        local_rank: u32,
+    ) -> Result<Self> {
+        let mut slot = vec![NOT_CACHED; num_nodes];
+        for (i, &v) in halo.iter().enumerate() {
+            if v as usize >= num_nodes {
+                return Err(Error::Storage(format!(
+                    "halo node {v} out of range ({num_nodes} nodes)"
+                )));
+            }
+            slot[v as usize] = i as u32;
+        }
+        if rows.rows() != halo.len() {
+            return Err(Error::Storage(format!(
+                "{} replica rows for {} halo nodes",
+                rows.rows(),
+                halo.len()
+            )));
+        }
+        let mut groups = BTreeMap::new();
+        groups.insert(key, rows);
+        Ok(Self {
+            local_rank,
+            slot,
+            num_cached: halo.len(),
+            rows: groups,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+        })
+    }
+
     /// The rank whose halo this cache replicates.
     pub fn local_rank(&self) -> u32 {
         self.local_rank
@@ -248,6 +291,30 @@ mod tests {
         // Wrong destination width errors instead of corrupting.
         let mut narrow = [0.0f32; 2];
         assert!(cache.try_serve(&FeatureKey::default_x(), 1, &mut narrow).is_err());
+    }
+
+    #[test]
+    fn from_group_matches_full_store_build() {
+        let store = src(10, 3);
+        let full = HaloCache::build(&[2, 5, 7], &store, 10, 1).unwrap();
+        let key = FeatureKey::default_x();
+        let rows = store.get(&key, &[2, 5, 7]).unwrap();
+        let gathered = HaloCache::from_group(key.clone(), &[2, 5, 7], rows, 10, 1).unwrap();
+        assert_eq!(gathered.num_cached(), full.num_cached());
+        assert_eq!(gathered.cached_nodes(), full.cached_nodes());
+        assert_eq!(gathered.replicated_bytes(), full.replicated_bytes());
+        let mut a = [0.0f32; 3];
+        let mut b = [0.0f32; 3];
+        for v in [2u32, 5, 7] {
+            assert!(gathered.try_serve(&key, v, &mut a).unwrap());
+            assert!(full.try_serve(&key, v, &mut b).unwrap());
+            assert_eq!(a, b, "node {v} replica rows byte-identical");
+        }
+        // Misaligned rows / out-of-range halo rejected.
+        let bad_rows = store.get(&key, &[2]).unwrap();
+        assert!(HaloCache::from_group(key.clone(), &[2, 5], bad_rows, 10, 1).is_err());
+        let rows = store.get(&key, &[2]).unwrap();
+        assert!(HaloCache::from_group(key, &[10], rows, 10, 1).is_err());
     }
 
     #[test]

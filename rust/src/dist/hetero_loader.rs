@@ -1,0 +1,295 @@
+//! `HeteroDistNeighborLoader`: the heterogeneous end of the distributed
+//! pipeline (§2.2 meets §2.3).
+//!
+//! Seed batches of one node type → typed partition-aware sampling
+//! ([`HeteroDistNeighborSampler`]) → per-node-type routed feature fetch
+//! ([`PartitionedFeatureStore`], shards keyed by
+//! `(node_type, partition)`) → [`HeteroBatch`] assembly → prefetch
+//! queue. The worker-pool / bounded-queue / in-order-delivery machinery
+//! is shared with every other loader
+//! ([`crate::loader::OrderedIter`]), and the epoch shuffling and
+//! per-batch seeding are reproduced exactly, so a
+//! `HeteroDistNeighborLoader` with the same
+//! [`crate::loader::HeteroLoaderConfig`] yields batches identical to the
+//! in-memory [`crate::loader::HeteroNeighborLoader`] — while every
+//! cross-partition row/edge transfer is accounted per node type on the
+//! shared [`crate::dist::TypedRouter`] and per edge type on the graph
+//! store's counters.
+//!
+//! Per-type [`crate::dist::HaloCache`]s and/or an
+//! [`crate::dist::AsyncRouter`] (see
+//! [`crate::coordinator::hetero_partitioned_loader_with`]) layer onto
+//! the feature path exactly as in the homogeneous pipeline: neither
+//! changes batch content, only what the epoch costs —
+//! `tests/test_dist_hetero_equivalence.rs` pins the async+cached typed
+//! pipeline to the in-memory loader seed for seed.
+
+use super::feature_store::PartitionedFeatureStore;
+use super::graph_store::PartitionedGraphStore;
+use super::hetero_sampler::HeteroDistNeighborSampler;
+use super::{CacheStats, RouterStats};
+use crate::graph::EdgeType;
+use crate::loader::neighbor_loader::{epoch_seed_batches, spawn_ordered};
+use crate::loader::{HeteroBatch, HeteroLoaderConfig, OrderedIter};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Heterogeneous neighbor loader over partitioned feature + graph stores.
+pub struct HeteroDistNeighborLoader {
+    graph: Arc<PartitionedGraphStore>,
+    features: Arc<PartitionedFeatureStore>,
+    seed_type: String,
+    seeds: Vec<u32>,
+    labels: Option<Arc<Vec<i64>>>,
+    cfg: HeteroLoaderConfig,
+}
+
+impl HeteroDistNeighborLoader {
+    pub fn new(
+        graph: Arc<PartitionedGraphStore>,
+        features: Arc<PartitionedFeatureStore>,
+        seed_type: &str,
+        seeds: Vec<u32>,
+        cfg: HeteroLoaderConfig,
+    ) -> Self {
+        Self {
+            graph,
+            features,
+            seed_type: seed_type.to_string(),
+            seeds,
+            labels: None,
+            cfg,
+        }
+    }
+
+    /// Attach per-node labels of the seed type (indexed by global id).
+    pub fn with_labels(mut self, labels: Vec<i64>) -> Self {
+        self.labels = Some(Arc::new(labels));
+        self
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.seeds.len().div_ceil(self.cfg.batch_size)
+    }
+
+    pub fn seed_type(&self) -> &str {
+        &self.seed_type
+    }
+
+    /// The graph-side store (also carries the shared typed router and
+    /// the per-edge-type traffic counters).
+    pub fn graph(&self) -> &Arc<PartitionedGraphStore> {
+        &self.graph
+    }
+
+    /// The feature-side store (carries the per-type halo caches / async
+    /// router when [`crate::coordinator::DistOptions`] enabled them).
+    pub fn features(&self) -> &Arc<PartitionedFeatureStore> {
+        &self.features
+    }
+
+    /// Per-node-type halo-cache counters (empty when caching is off).
+    pub fn cache_stats(&self) -> BTreeMap<String, CacheStats> {
+        self.features.cache_stats_by_type()
+    }
+
+    /// Per-edge-type cross-partition traffic (sampler adjacency reads,
+    /// attributed to the relation that caused them).
+    pub fn edge_traffic(&self) -> BTreeMap<EdgeType, RouterStats> {
+        self.graph.edge_traffic()
+    }
+
+    /// Cross-partition traffic accumulated so far, covering both
+    /// sampling and feature-fetch traffic, summed over node types. Graph
+    /// and feature stores normally share one
+    /// [`crate::dist::TypedRouter`] (as
+    /// [`crate::coordinator::hetero_partitioned_loader`] wires them); if
+    /// they were built with distinct routers, the two are summed.
+    pub fn router_stats(&self) -> RouterStats {
+        self.graph
+            .typed_router()
+            .stats_with(self.features.typed_router())
+    }
+
+    /// Zero every traffic ledger: per-type routers, per-edge-type
+    /// counters, and installed cache counters (benches measure per-phase
+    /// traffic).
+    pub fn reset_traffic(&self) {
+        self.graph
+            .typed_router()
+            .reset_with(self.features.typed_router());
+        self.graph.reset_edge_traffic();
+        self.features.reset_cache_stats();
+    }
+
+    /// Iterate one epoch through the typed distributed pipeline. Batches
+    /// arrive in deterministic order; dropping the iterator early shuts
+    /// the worker pool down cleanly. Epoch shuffling and per-batch
+    /// seeding come from the same helpers as every other loader, so
+    /// batch content is identical to the in-memory hetero loader by
+    /// construction.
+    pub fn iter_epoch(&self, epoch: u64) -> OrderedIter<HeteroBatch> {
+        let batches = epoch_seed_batches(
+            &self.seeds,
+            self.cfg.batch_size,
+            self.cfg.shuffle,
+            self.cfg.seed,
+            epoch,
+        );
+        let sampler = Arc::new(HeteroDistNeighborSampler::new(
+            Arc::clone(&self.graph),
+            self.cfg.sampler.clone(),
+        ));
+        let features = Arc::clone(&self.features);
+        let labels = self.labels.clone();
+        let seed_type = self.seed_type.clone();
+        spawn_ordered(
+            batches,
+            self.cfg.num_workers,
+            self.cfg.prefetch,
+            epoch,
+            move |seeds, batch_seed| {
+                sampler
+                    .sample(&seed_type, &seeds, None, batch_seed)
+                    .and_then(|sub| {
+                        HeteroBatch::assemble(
+                            sub,
+                            features.as_ref(),
+                            labels.as_deref().map(|v| &v[..]),
+                        )
+                    })
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::TypedRouter;
+    use crate::graph::{EdgeIndex, HeteroGraph};
+    use crate::partition::TypedPartitioning;
+    use crate::sampler::HeteroSamplerConfig;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    /// A small random bipartite-ish hetero graph: users follow users,
+    /// items point back at the users who rate them.
+    fn graph() -> HeteroGraph {
+        let mut rng = Rng::new(42);
+        let (nu, ni) = (40u32, 30u32);
+        let mut g = HeteroGraph::new();
+        let ux: Vec<f32> = (0..nu * 4).map(|i| i as f32).collect();
+        g.add_node_type("user", Tensor::new(vec![nu as usize, 4], ux).unwrap()).unwrap();
+        let ix: Vec<f32> = (0..ni * 4).map(|i| 1000.0 + i as f32).collect();
+        g.add_node_type("item", Tensor::new(vec![ni as usize, 4], ix).unwrap()).unwrap();
+        let mut fs = (Vec::new(), Vec::new());
+        for d in 0..nu {
+            for _ in 0..3 {
+                fs.0.push(rng.index(nu as usize) as u32);
+                fs.1.push(d);
+            }
+        }
+        g.add_edge_type(
+            EdgeType::new("user", "follows", "user"),
+            EdgeIndex::new(fs.0, fs.1, nu as usize).unwrap(),
+        )
+        .unwrap();
+        let mut rb = (Vec::new(), Vec::new());
+        for d in 0..nu {
+            for _ in 0..2 {
+                rb.0.push(rng.index(ni as usize) as u32);
+                rb.1.push(d);
+            }
+        }
+        g.add_edge_type(
+            EdgeType::new("item", "rated_by", "user"),
+            EdgeIndex::new(rb.0, rb.1, nu as usize).unwrap(),
+        )
+        .unwrap();
+        g.set_labels("user", (0..nu as i64).map(|i| i % 3).collect()).unwrap();
+        g
+    }
+
+    fn dist_loader(parts: usize, workers: usize) -> HeteroDistNeighborLoader {
+        let g = graph();
+        let typed = TypedPartitioning::ldg_hetero(&g, parts, 1.2).unwrap();
+        let router = TypedRouter::new(&typed, 0).unwrap();
+        let gs = Arc::new(PartitionedGraphStore::from_hetero(&g, router.clone()).unwrap());
+        let fs = Arc::new(PartitionedFeatureStore::partition_hetero(&g, &router).unwrap());
+        let labels = g.node_store("user").unwrap().y.clone().unwrap();
+        HeteroDistNeighborLoader::new(
+            gs,
+            fs,
+            "user",
+            (0..40).collect(),
+            HeteroLoaderConfig {
+                batch_size: 8,
+                num_workers: workers,
+                sampler: HeteroSamplerConfig {
+                    default_fanouts: vec![3, 2],
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .with_labels(labels)
+    }
+
+    #[test]
+    fn yields_all_batches_with_valid_invariants() {
+        let loader = dist_loader(3, 2);
+        assert_eq!(loader.seed_type(), "user");
+        let batches: Vec<HeteroBatch> = loader.iter_epoch(0).map(|b| b.unwrap()).collect();
+        assert_eq!(batches.len(), 5); // ceil(40/8)
+        let total_seeds: usize = batches.iter().map(|b| b.sub.num_seeds).sum();
+        assert_eq!(total_seeds, 40);
+        for b in &batches {
+            b.check_invariants().unwrap();
+            assert_eq!(b.labels.as_ref().unwrap().len(), b.sub.num_seeds);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let run = |workers: usize| {
+            dist_loader(3, workers)
+                .iter_epoch(3)
+                .map(|b| b.unwrap().sub.nodes)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4), "output must not depend on worker count");
+    }
+
+    #[test]
+    fn epoch_traffic_is_recorded_per_type_and_per_edge_type() {
+        let loader = dist_loader(3, 2);
+        loader.reset_traffic();
+        let n: usize = loader.iter_epoch(0).map(|b| b.unwrap().total_nodes()).sum();
+        assert!(n > 0);
+        let stats = loader.router_stats();
+        assert!(
+            stats.remote_msgs > 0,
+            "a 3-way typed epoch must cross partitions: {stats}"
+        );
+        let by_edge = loader.edge_traffic();
+        assert_eq!(by_edge.len(), 2);
+        let sampled_remote: u64 = by_edge.values().map(|t| t.remote_msgs).sum();
+        assert!(sampled_remote > 0, "adjacency reads crossed partitions");
+        assert!(
+            sampled_remote <= stats.remote_msgs,
+            "edge-type msgs are a subset of total msgs (features add more)"
+        );
+        loader.reset_traffic();
+        assert_eq!(loader.router_stats(), RouterStats::default());
+        assert!(loader.edge_traffic().values().all(|t| t.remote_msgs == 0));
+    }
+
+    #[test]
+    fn early_drop_shuts_down_cleanly() {
+        let loader = dist_loader(2, 2);
+        let mut it = loader.iter_epoch(0);
+        let _first = it.next().unwrap().unwrap();
+        drop(it); // must not deadlock on the full prefetch queue
+    }
+}

@@ -1,0 +1,415 @@
+//! Partition-aware heterogeneous multi-hop neighbor sampling.
+//!
+//! Mirrors [`crate::sampler::HeteroNeighborSampler`] hop for hop and
+//! edge type for edge type, but every frontier node's adjacency slice is
+//! fetched from the shard of its *owning* partition
+//! ([`crate::dist::EdgeShards::in_slice`], keyed by
+//! `(edge_type, partition)`) with local-first fan-out: the local
+//! partition is served in-process while each remote partition touched by
+//! an edge type in a hop costs one coalesced simulated RPC (payload =
+//! edges pulled from it), accounted on the destination type's
+//! [`crate::dist::PartitionRouter`] *and* the per-edge-type counters
+//! ([`crate::dist::PartitionedGraphStore::edge_traffic`]).
+//!
+//! **Equivalence invariant:** this sampler draws from the same
+//! [`crate::util::Rng`] stream in the same order — edge types in their
+//! sorted store order, frontier nodes in discovery order, one
+//! `sample_distinct` per over-full candidate set — over shard slices
+//! that are bit-identical to the corresponding per-edge-type CSC ranges.
+//! For any `(config, seed_type, seeds, seed_times, batch_seed)` it
+//! therefore returns exactly the subgraph `HeteroNeighborSampler` would
+//! — the correctness anchor of the typed distributed pipeline, enforced
+//! by the unit tests below and `tests/test_dist_hetero_equivalence.rs`.
+
+use super::graph_store::PartitionedGraphStore;
+use crate::error::{Error, Result};
+use crate::graph::EdgeType;
+use crate::sampler::hetero::filter_pick;
+use crate::sampler::{HeteroSampledSubgraph, HeteroSamplerConfig};
+use crate::storage::GraphStore;
+use crate::util::Rng;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+/// Heterogeneous neighbor sampler over a [`PartitionedGraphStore`].
+pub struct HeteroDistNeighborSampler {
+    store: Arc<PartitionedGraphStore>,
+    cfg: HeteroSamplerConfig,
+}
+
+impl HeteroDistNeighborSampler {
+    pub fn new(store: Arc<PartitionedGraphStore>, cfg: HeteroSamplerConfig) -> Self {
+        Self { store, cfg }
+    }
+
+    pub fn config(&self) -> &HeteroSamplerConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> &Arc<PartitionedGraphStore> {
+        &self.store
+    }
+
+    fn fanout(&self, et: &EdgeType, hop: usize) -> usize {
+        let f = self
+            .cfg
+            .fanouts_per_edge_type
+            .get(et)
+            .unwrap_or(&self.cfg.default_fanouts);
+        f.get(hop).copied().unwrap_or(0)
+    }
+
+    fn num_hops(&self) -> usize {
+        self.cfg
+            .fanouts_per_edge_type
+            .values()
+            .map(|f| f.len())
+            .chain(std::iter::once(self.cfg.default_fanouts.len()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sample around seeds of `seed_type`; identical output to
+    /// [`crate::sampler::HeteroNeighborSampler::sample`] under the same
+    /// `(config, seeds, seed_times, batch_seed)`.
+    pub fn sample(
+        &self,
+        seed_type: &str,
+        seeds: &[u32],
+        seed_times: Option<&[i64]>,
+        batch_seed: u64,
+    ) -> Result<HeteroSampledSubgraph> {
+        if let Some(times) = seed_times {
+            if times.len() != seeds.len() {
+                return Err(Error::Sampler("seed_times misaligned".into()));
+            }
+            if !self.cfg.disjoint {
+                return Err(Error::Sampler(
+                    "temporal hetero sampling requires disjoint mode (per-seed timestamps)".into(),
+                ));
+            }
+        }
+        let edge_types = self.store.edge_types();
+        let mut rng = Rng::new(self.cfg.seed).fork(batch_seed);
+
+        let mut out = HeteroSampledSubgraph {
+            seed_type: seed_type.to_string(),
+            num_seeds: seeds.len(),
+            ..Default::default()
+        };
+        // Per node type: local assignment keyed by (tree, global id).
+        let mut local: BTreeMap<String, HashMap<(u32, u32), u32>> = BTreeMap::new();
+        let mut batch: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+        // Initialize all node types present in the store — in the same
+        // edge-type-derived order as the in-memory sampler.
+        let mut node_types: Vec<String> = Vec::new();
+        for et in &edge_types {
+            for nt in [&et.src, &et.dst] {
+                if !node_types.contains(nt) {
+                    node_types.push(nt.clone());
+                }
+            }
+        }
+        if !node_types.contains(&seed_type.to_string()) {
+            return Err(Error::Sampler(format!("seed type {seed_type} not in graph")));
+        }
+        // Seeds come from user input; frontier nodes beyond hop 0 are
+        // edge endpoints and always in range.
+        {
+            let seed_router = self.store.typed_router().router(seed_type)?;
+            for &s in seeds {
+                if seed_router.try_owner(s).is_none() {
+                    return Err(Error::Sampler(format!(
+                        "seed {s} out of range ({} {seed_type} nodes)",
+                        seed_router.num_nodes()
+                    )));
+                }
+            }
+        }
+        for nt in &node_types {
+            out.nodes.insert(nt.clone(), Vec::new());
+            out.node_offsets.insert(nt.clone(), Vec::new());
+            local.insert(nt.clone(), HashMap::default());
+            batch.insert(nt.clone(), Vec::new());
+        }
+        for et in &edge_types {
+            out.edges.insert(et.clone(), crate::sampler::hetero::HeteroEdges::default());
+        }
+
+        // Seed placement.
+        {
+            let nv = out.nodes.get_mut(seed_type).unwrap();
+            let lv = local.get_mut(seed_type).unwrap();
+            let bv = batch.get_mut(seed_type).unwrap();
+            for (i, &s) in seeds.iter().enumerate() {
+                let tree = if self.cfg.disjoint { i as u32 } else { 0 };
+                nv.push(s);
+                bv.push(tree);
+                lv.insert((tree, s), i as u32);
+            }
+        }
+        for nt in &node_types {
+            out.node_offsets
+                .get_mut(nt)
+                .unwrap()
+                .push(out.nodes[nt].len());
+        }
+
+        // Typed frontier: node type -> local ids to expand this hop.
+        let mut frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+        frontier.insert(seed_type.to_string(), (0..seeds.len() as u32).collect());
+
+        // Per-(hop, edge type) routing ledger: which partitions served
+        // the expansions and how many edges each shipped.
+        let parts = self.store.num_parts();
+        let mut hop_edges = vec![0u64; parts];
+        let mut hop_touched = vec![false; parts];
+
+        for hop in 0..self.num_hops() {
+            let mut next_frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+            // Expand every edge type whose *destination* type has frontier
+            // nodes (messages flow src -> dst toward the seeds).
+            for et in &edge_types {
+                let Some(front) = frontier.get(&et.dst) else { continue };
+                if front.is_empty() {
+                    continue;
+                }
+                let fanout = self.fanout(et, hop);
+                if fanout == 0 {
+                    continue;
+                }
+                let es = self.store.edges_of(et)?;
+                let edge_time = self.store.edge_time(et)?;
+                let node_time = self.store.node_time(&et.src)?;
+                hop_edges.iter_mut().for_each(|e| *e = 0);
+                hop_touched.iter_mut().for_each(|t| *t = false);
+
+                for &dst_local in front {
+                    let dst_global = out.nodes[&et.dst][dst_local as usize];
+                    let tree = batch[&et.dst][dst_local as usize];
+                    let t_seed = seed_times.map(|t| t[tree as usize]);
+
+                    // Adjacency from the owning shard — bit-identical to
+                    // the global CSC range of this edge type, expanded
+                    // through the shared `filter_pick` helper (the single
+                    // definition of the RNG-consumption contract both
+                    // hetero samplers draw from).
+                    let owner = es.dst_owner(dst_global) as usize;
+                    hop_touched[owner] = true;
+                    let (nbrs, eids) = es.in_slice(dst_global);
+                    let picks = filter_pick(
+                        nbrs,
+                        eids,
+                        t_seed,
+                        edge_time.as_deref().map(|v| &v[..]),
+                        node_time.as_deref().map(|v| &v[..]),
+                        fanout,
+                        &mut rng,
+                    );
+                    if picks.is_empty() {
+                        continue;
+                    }
+                    hop_edges[owner] += picks.len() as u64;
+                    let nv = out.nodes.get_mut(&et.src).unwrap();
+                    let lv = local.get_mut(&et.src).unwrap();
+                    let bv = batch.get_mut(&et.src).unwrap();
+                    let ev = out.edges.get_mut(et).unwrap();
+                    for (nbr, eid) in picks {
+                        let src_local = *lv.entry((tree, nbr)).or_insert_with(|| {
+                            nv.push(nbr);
+                            bv.push(tree);
+                            next_frontier
+                                .entry(et.src.clone())
+                                .or_default()
+                                .push(nv.len() as u32 - 1);
+                            nv.len() as u32 - 1
+                        });
+                        ev.row.push(src_local);
+                        ev.col.push(dst_local);
+                        ev.edge_ids.push(eid);
+                    }
+                }
+                // Local-first fan-out accounting, per edge type: one
+                // local access when the local shard served expansions,
+                // one coalesced RPC per remote partition touched.
+                es.record_hop(&hop_touched, &hop_edges);
+            }
+            for nt in &node_types {
+                out.node_offsets
+                    .get_mut(nt)
+                    .unwrap()
+                    .push(out.nodes[nt].len());
+            }
+            frontier = next_frontier;
+            if frontier.is_empty() {
+                for nt in &node_types {
+                    let off = out.node_offsets.get_mut(nt).unwrap();
+                    let last = *off.last().unwrap();
+                    while off.len() <= self.num_hops() {
+                        off.push(last);
+                    }
+                }
+                break;
+            }
+        }
+
+        if self.cfg.disjoint {
+            out.batch = Some(batch);
+        }
+        // Same hot-path guard as the in-memory sampler.
+        #[cfg(debug_assertions)]
+        if let Err(e) = out.check_invariants() {
+            panic!("HeteroDistNeighborSampler produced an invalid subgraph: {e}");
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::TypedRouter;
+    use crate::graph::{EdgeIndex, HeteroGraph};
+    use crate::partition::{Partitioning, TypedPartitioning};
+    use crate::sampler::HeteroNeighborSampler;
+    use crate::storage::InMemoryGraphStore;
+    use crate::tensor::Tensor;
+
+    /// users --writes--> posts, posts --cites--> posts (same topology as
+    /// the in-memory sampler's tests).
+    fn toy_graph() -> HeteroGraph {
+        let mut g = HeteroGraph::new();
+        g.add_node_type("user", Tensor::zeros(vec![3, 2])).unwrap();
+        g.add_node_type("post", Tensor::zeros(vec![4, 2])).unwrap();
+        let writes = EdgeIndex::new(vec![0, 1, 2, 0], vec![0, 1, 2, 3], 4).unwrap();
+        g.add_edge_type(EdgeType::new("user", "writes", "post"), writes).unwrap();
+        let cites = EdgeIndex::new(vec![1, 2, 3], vec![0, 1, 1], 4).unwrap();
+        g.add_edge_type(EdgeType::new("post", "cites", "post"), cites).unwrap();
+        g
+    }
+
+    fn typed_partitioning() -> TypedPartitioning {
+        let mut parts = BTreeMap::new();
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![0, 1, 0], num_parts: 2 },
+        );
+        parts.insert(
+            "post".to_string(),
+            Partitioning { assignment: vec![0, 1, 1, 0], num_parts: 2 },
+        );
+        TypedPartitioning::from_parts(parts).unwrap()
+    }
+
+    fn dist_store(local_rank: u32) -> Arc<PartitionedGraphStore> {
+        let router = TypedRouter::new(&typed_partitioning(), local_rank).unwrap();
+        Arc::new(PartitionedGraphStore::from_hetero(&toy_graph(), router).unwrap())
+    }
+
+    fn assert_same_subgraph(a: &HeteroSampledSubgraph, b: &HeteroSampledSubgraph) {
+        assert_eq!(a.nodes, b.nodes, "per-type node ids");
+        assert_eq!(a.seed_type, b.seed_type);
+        assert_eq!(a.num_seeds, b.num_seeds);
+        assert_eq!(a.node_offsets, b.node_offsets);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(
+            a.edges.keys().collect::<Vec<_>>(),
+            b.edges.keys().collect::<Vec<_>>()
+        );
+        for (et, ea) in &a.edges {
+            let eb = &b.edges[et];
+            assert_eq!(ea.row, eb.row, "{} rows", et.key());
+            assert_eq!(ea.col, eb.col, "{} cols", et.key());
+            assert_eq!(ea.edge_ids, eb.edge_ids, "{} edge ids", et.key());
+        }
+    }
+
+    #[test]
+    fn matches_in_memory_sampler_across_configs() {
+        let mem = Arc::new(InMemoryGraphStore::from_hetero(&toy_graph()));
+        let mut per_type = BTreeMap::new();
+        per_type.insert(EdgeType::new("post", "cites", "post"), vec![1usize, 1]);
+        let configs = [
+            HeteroSamplerConfig { default_fanouts: vec![10], ..Default::default() },
+            HeteroSamplerConfig { default_fanouts: vec![10, 10], seed: 3, ..Default::default() },
+            HeteroSamplerConfig { default_fanouts: vec![1, 1, 1], seed: 9, ..Default::default() },
+            HeteroSamplerConfig {
+                fanouts_per_edge_type: per_type,
+                default_fanouts: vec![2, 2],
+                disjoint: true,
+                seed: 5,
+            },
+        ];
+        for cfg in configs {
+            let single = HeteroNeighborSampler::new(Arc::clone(&mem), cfg.clone());
+            for rank in [0u32, 1] {
+                let dist = HeteroDistNeighborSampler::new(dist_store(rank), cfg.clone());
+                for batch_seed in [0u64, 7, 1_000_003] {
+                    let a = single.sample("post", &[0, 3], None, batch_seed).unwrap();
+                    let b = dist.sample("post", &[0, 3], None, batch_seed).unwrap();
+                    a.check_invariants().unwrap();
+                    assert_same_subgraph(&a, &b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn temporal_constraints_match_in_memory_sampler() {
+        let mut g = toy_graph();
+        g.set_edge_time(&EdgeType::new("post", "cites", "post"), vec![10, 20, 30]).unwrap();
+        let mem = Arc::new(InMemoryGraphStore::from_hetero(&g));
+        let router = TypedRouter::new(&typed_partitioning(), 0).unwrap();
+        let part = Arc::new(PartitionedGraphStore::from_hetero(&g, router).unwrap());
+        let cfg = HeteroSamplerConfig {
+            default_fanouts: vec![10, 10],
+            disjoint: true,
+            ..Default::default()
+        };
+        let single = HeteroNeighborSampler::new(mem, cfg.clone());
+        let dist = HeteroDistNeighborSampler::new(part, cfg);
+        let a = single.sample("post", &[0, 1], Some(&[15, 25]), 2).unwrap();
+        let b = dist.sample("post", &[0, 1], Some(&[15, 25]), 2).unwrap();
+        assert_same_subgraph(&a, &b);
+        // The constraint actually bit: cites@20 is invisible to seed@15.
+        assert!(a.edges[&EdgeType::new("post", "cites", "post")].num_edges() < 3);
+    }
+
+    #[test]
+    fn traffic_lands_on_dst_type_router_and_edge_counters() {
+        let store = dist_store(0);
+        let s = HeteroDistNeighborSampler::new(
+            Arc::clone(&store),
+            HeteroSamplerConfig { default_fanouts: vec![10], ..Default::default() },
+        );
+        let sub = s.sample("post", &[0, 1, 2, 3], None, 0).unwrap();
+        assert!(sub.total_edges() > 0);
+        // All expansions read post in-edges: traffic lands on the post
+        // router (posts 1, 2 are foreign to rank 0).
+        let post_stats = store.typed_router().router("post").unwrap().stats();
+        assert!(post_stats.local_msgs > 0);
+        assert!(post_stats.remote_msgs > 0, "posts on partition 1 cost RPCs");
+        let user_stats = store.typed_router().router("user").unwrap().stats();
+        assert_eq!(
+            user_stats.remote_msgs, 0,
+            "no user adjacency was expanded in one hop"
+        );
+        // Per-edge-type attribution covers the same messages.
+        let traffic = store.edge_traffic();
+        let total_remote: u64 = traffic.values().map(|t| t.remote_msgs).sum();
+        assert_eq!(total_remote, post_stats.remote_msgs);
+        // Payload never exceeds sampled edges.
+        let total_rows: u64 = traffic.values().map(|t| t.remote_rows).sum();
+        assert!(total_rows <= sub.total_edges() as u64);
+    }
+
+    #[test]
+    fn invalid_inputs_error() {
+        let s = HeteroDistNeighborSampler::new(dist_store(0), HeteroSamplerConfig::default());
+        assert!(s.sample("nope", &[0], None, 0).is_err());
+        assert!(s.sample("post", &[99], None, 0).is_err());
+        // Temporal sampling requires disjoint mode.
+        assert!(s.sample("post", &[0], Some(&[5]), 0).is_err());
+        assert!(s.sample("post", &[0], Some(&[5, 6]), 0).is_err());
+    }
+}

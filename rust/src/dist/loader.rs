@@ -24,11 +24,9 @@ use super::feature_store::PartitionedFeatureStore;
 use super::graph_store::PartitionedGraphStore;
 use super::sampler::DistNeighborSampler;
 use super::RouterStats;
-use crate::error::Result;
-use crate::loader::neighbor_loader::{batch_seed, epoch_seed_batches};
+use crate::loader::neighbor_loader::{epoch_seed_batches, spawn_ordered};
 use crate::loader::{Batch, BatchIter, LoaderConfig, ShapeBucket, Transform};
 use crate::storage::FeatureKey;
-use crate::util::{BoundedQueue, ThreadPool};
 use std::sync::Arc;
 
 /// Neighbor loader over partitioned feature + graph stores.
@@ -111,24 +109,16 @@ impl DistNeighborLoader {
     /// [`crate::coordinator::partitioned_loader`] wires them); if they
     /// were built with distinct routers, the two counters are summed.
     pub fn router_stats(&self) -> RouterStats {
-        let g = self.graph.router().stats();
-        if Arc::ptr_eq(self.graph.router(), self.features.router()) {
-            g
-        } else {
-            let f = self.features.router().stats();
-            RouterStats {
-                local_msgs: g.local_msgs + f.local_msgs,
-                remote_msgs: g.remote_msgs + f.remote_msgs,
-                remote_rows: g.remote_rows + f.remote_rows,
-            }
-        }
+        self.graph
+            .typed_router()
+            .stats_with(self.features.typed_router())
     }
 
     pub fn reset_router_stats(&self) {
-        self.graph.router().reset_stats();
-        if !Arc::ptr_eq(self.graph.router(), self.features.router()) {
-            self.features.router().reset_stats();
-        }
+        self.graph
+            .typed_router()
+            .reset_with(self.features.typed_router());
+        self.graph.reset_edge_traffic();
     }
 
     /// Iterate one epoch through the distributed pipeline. Batches arrive
@@ -137,27 +127,29 @@ impl DistNeighborLoader {
     /// come from the same helpers as [`crate::loader::NeighborLoader`],
     /// so batch content is identical by construction.
     pub fn iter_epoch(&self, epoch: u64) -> BatchIter {
-        let batches = epoch_seed_batches(&self.seeds, &self.cfg, epoch);
-        let total = batches.len();
-        let queue: Arc<BoundedQueue<Result<(usize, Batch)>>> =
-            BoundedQueue::new(self.cfg.prefetch.max(1));
-        let pool = ThreadPool::with_queue_capacity(self.cfg.num_workers, total.max(1));
-
+        let batches = epoch_seed_batches(
+            &self.seeds,
+            self.cfg.batch_size,
+            self.cfg.shuffle,
+            self.cfg.seed,
+            epoch,
+        );
         let sampler = Arc::new(DistNeighborSampler::new(
             Arc::clone(&self.graph),
             self.cfg.sampler.clone(),
         ));
-        for (i, seeds) in batches.into_iter().enumerate() {
-            let sampler = Arc::clone(&sampler);
-            let features = Arc::clone(&self.features);
-            let key = self.feature_key.clone();
-            let labels = self.labels.clone();
-            let bucket = self.bucket.clone();
-            let queue = Arc::clone(&queue);
-            let transforms = self.transforms.clone();
-            let batch_seed = batch_seed(epoch, i);
-            pool.submit(move || {
-                let result = sampler.sample(&seeds, batch_seed).and_then(|sub| {
+        let features = Arc::clone(&self.features);
+        let key = self.feature_key.clone();
+        let labels = self.labels.clone();
+        let bucket = self.bucket.clone();
+        let transforms = self.transforms.clone();
+        spawn_ordered(
+            batches,
+            self.cfg.num_workers,
+            self.cfg.prefetch,
+            epoch,
+            move |seeds, batch_seed| {
+                sampler.sample(&seeds, batch_seed).and_then(|sub| {
                     Batch::assemble(
                         sub,
                         features.as_ref(),
@@ -169,15 +161,11 @@ impl DistNeighborLoader {
                         for t in &transforms {
                             t(&mut b);
                         }
-                        (i, b)
+                        b
                     })
-                });
-                // Receiver may have been dropped; ignore send failures.
-                let _ = queue.send(result);
-            });
-        }
-
-        BatchIter::from_parts(queue, pool, total)
+                })
+            },
+        )
     }
 }
 

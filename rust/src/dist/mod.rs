@@ -29,30 +29,46 @@
 //!   worker-pool + prefetch-backpressure machinery as
 //!   [`crate::loader::NeighborLoader`].
 //!
+//! The layer is **type-aware** throughout: a [`TypedRouter`] holds one
+//! [`PartitionRouter`] per node type id space
+//! ([`crate::partition::TypedPartitioning`]), feature shards are keyed
+//! by `(node_type, partition)` and edge shards by
+//! `(edge_type, partition)`. The homogeneous pipeline above is the
+//! *single-type special case* of this structure; the heterogeneous one
+//! ([`HeteroDistNeighborSampler`] + [`HeteroDistNeighborLoader`]) runs
+//! the §2.2 typed representation through the same stores, with per-type
+//! halo caches and per-edge-type traffic attribution.
+//!
 //! **Correctness anchor:** under a fixed seed the distributed pipeline
 //! produces batches *identical* to the single-store pipeline (same node
 //! ids, edge index, features, labels). The samplers share one RNG
 //! consumption pattern and the shard-local adjacency slices are
-//! bit-identical to the corresponding global CSC/CSR ranges, so this
-//! holds by construction and is enforced end-to-end by
-//! `tests/test_dist_equivalence.rs`.
+//! bit-identical to the corresponding global (per-edge-type) CSC/CSR
+//! ranges, so this holds by construction and is enforced end-to-end by
+//! `tests/test_dist_equivalence.rs` (homogeneous) and
+//! `tests/test_dist_hetero_equivalence.rs` (typed).
 
 pub mod async_router;
 pub mod feature_store;
 pub mod graph_store;
 pub mod halo_cache;
+pub mod hetero_loader;
+pub mod hetero_sampler;
 pub mod loader;
 pub mod sampler;
 
 pub use async_router::{AsyncRouter, FetchPlan, PendingFetch};
 pub use feature_store::{PartitionedFeatureStore, PartitionedStoreConfig};
-pub use graph_store::PartitionedGraphStore;
+pub use graph_store::{EdgeShards, PartitionedGraphStore};
 pub use halo_cache::{CacheStats, HaloCache};
+pub use hetero_loader::HeteroDistNeighborLoader;
+pub use hetero_sampler::HeteroDistNeighborSampler;
 pub use loader::DistNeighborLoader;
 pub use sampler::DistNeighborSampler;
 
 use crate::error::{Error, Result};
-use crate::partition::Partitioning;
+use crate::partition::{Partitioning, TypedPartitioning};
+use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -67,6 +83,17 @@ pub struct RouterStats {
     pub remote_msgs: u64,
     /// Payload rows/edges carried by those remote RPCs.
     pub remote_rows: u64,
+}
+
+impl std::ops::AddAssign for RouterStats {
+    /// Counter-wise accumulation — the single definition used wherever
+    /// stats are summed (across node types, stores, or ranks), so a new
+    /// counter only has to be added here.
+    fn add_assign(&mut self, rhs: RouterStats) {
+        self.local_msgs += rhs.local_msgs;
+        self.remote_msgs += rhs.remote_msgs;
+        self.remote_rows += rhs.remote_rows;
+    }
 }
 
 impl RouterStats {
@@ -259,6 +286,154 @@ impl PartitionRouter {
             buckets[self.owner(v as u32) as usize].push(pos);
         }
         Ok(buckets)
+    }
+}
+
+/// Per-node-type partition routing: one [`PartitionRouter`] per node
+/// type id space, sharing a partition count and a local rank.
+///
+/// This is the routing structure of a *typed* layout
+/// ([`crate::partition::TypedPartitioning`]); the homogeneous stores are
+/// the single-type special case ([`TypedRouter::single`]) rather than a
+/// separate code path. Cloning is cheap and **shares the traffic
+/// counters** (the per-type routers are `Arc`s), which is how one
+/// pipeline's graph store, feature store and sampler account onto the
+/// same ledger.
+#[derive(Clone)]
+pub struct TypedRouter {
+    routers: BTreeMap<String, Arc<PartitionRouter>>,
+    num_parts: usize,
+    local_rank: u32,
+}
+
+impl TypedRouter {
+    /// One router per node type of `partitioning`, viewed from
+    /// `local_rank`.
+    pub fn new(partitioning: &TypedPartitioning, local_rank: u32) -> Result<Self> {
+        let mut routers = BTreeMap::new();
+        for nt in partitioning.node_types() {
+            routers.insert(
+                nt.to_string(),
+                Arc::new(PartitionRouter::new(partitioning.partitioning(nt)?, local_rank)?),
+            );
+        }
+        Ok(Self { routers, num_parts: partitioning.num_parts, local_rank })
+    }
+
+    /// The homogeneous special case: one node type, one router.
+    pub fn single(node_type: &str, router: Arc<PartitionRouter>) -> Self {
+        let num_parts = router.num_parts();
+        let local_rank = router.local_rank();
+        let mut routers = BTreeMap::new();
+        routers.insert(node_type.to_string(), router);
+        Self { routers, num_parts, local_rank }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    pub fn local_rank(&self) -> u32 {
+        self.local_rank
+    }
+
+    pub fn node_types(&self) -> impl Iterator<Item = &str> {
+        self.routers.keys().map(|s| s.as_str())
+    }
+
+    pub fn num_node_types(&self) -> usize {
+        self.routers.len()
+    }
+
+    /// The router of one node type.
+    pub fn router(&self, node_type: &str) -> Result<&Arc<PartitionRouter>> {
+        self.routers
+            .get(node_type)
+            .ok_or_else(|| Error::Storage(format!("no router for node type {node_type}")))
+    }
+
+    /// The router of the *only* node type — the homogeneous accessor.
+    /// Panics on a multi-type router (a wiring bug: typed pipelines must
+    /// route per type).
+    pub fn sole(&self) -> &Arc<PartitionRouter> {
+        assert_eq!(
+            self.routers.len(),
+            1,
+            "sole() on a {}-type router; use router(node_type)",
+            self.routers.len()
+        );
+        self.routers.values().next().expect("non-empty")
+    }
+
+    /// Whether `other` shares every per-type counter with `self` (same
+    /// `Arc`s) — i.e. traffic recorded through either is visible in both.
+    pub fn shares_counters_with(&self, other: &TypedRouter) -> bool {
+        self.routers.len() == other.routers.len()
+            && self.routers.iter().all(|(nt, r)| {
+                other.routers.get(nt).is_some_and(|o| Arc::ptr_eq(r, o))
+            })
+    }
+
+    /// Aggregate traffic counters, summed over node types.
+    pub fn stats(&self) -> RouterStats {
+        let mut total = RouterStats::default();
+        for r in self.routers.values() {
+            total += r.stats();
+        }
+        total
+    }
+
+    /// This router's stats summed with `other`'s, counting shared
+    /// counters once — the graph/feature store pair of one pipeline
+    /// normally shares them, but manually wired stores may not. The one
+    /// definition both loaders' `router_stats` delegate to.
+    pub fn stats_with(&self, other: &TypedRouter) -> RouterStats {
+        let mut stats = self.stats();
+        if !self.shares_counters_with(other) {
+            stats += other.stats();
+        }
+        stats
+    }
+
+    /// Zero this router's counters and `other`'s (once, when shared).
+    pub fn reset_with(&self, other: &TypedRouter) {
+        self.reset_stats();
+        if !self.shares_counters_with(other) {
+            other.reset_stats();
+        }
+    }
+
+    /// Per-destination-partition traffic summed over node types (this
+    /// rank's row of the combined `rank × partition` matrix).
+    pub fn traffic_by_partition(&self) -> PartitionTraffic {
+        let mut msgs = vec![0u64; self.num_parts];
+        let mut rows = vec![0u64; self.num_parts];
+        for r in self.routers.values() {
+            let t = r.traffic_by_partition();
+            for (acc, v) in msgs.iter_mut().zip(&t.msgs) {
+                *acc += v;
+            }
+            for (acc, v) in rows.iter_mut().zip(&t.rows) {
+                *acc += v;
+            }
+        }
+        PartitionTraffic { local_rank: self.local_rank, msgs, rows }
+    }
+
+    /// Per-node-type traffic rows — the typed breakdown the hetero
+    /// multi-rank report aggregates into per-type [`TrafficMatrix`]es.
+    pub fn traffic_by_type(&self) -> BTreeMap<String, PartitionTraffic> {
+        self.routers
+            .iter()
+            .map(|(nt, r)| (nt.clone(), r.traffic_by_partition()))
+            .collect()
+    }
+
+    /// Zero every per-type counter.
+    pub fn reset_stats(&self) {
+        for r in self.routers.values() {
+            r.reset_stats();
+        }
     }
 }
 
@@ -464,6 +639,61 @@ mod tests {
         assert!(m
             .set_rank(0, &PartitionTraffic { local_rank: 0, msgs: vec![0; 3], rows: vec![0; 3] })
             .is_err());
+    }
+
+    #[test]
+    fn typed_router_aggregates_per_type_counters() {
+        let mut parts = std::collections::BTreeMap::new();
+        parts.insert(
+            "item".to_string(),
+            Partitioning { assignment: vec![0, 1, 0], num_parts: 2 },
+        );
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![1, 0], num_parts: 2 },
+        );
+        let tp = TypedPartitioning::from_parts(parts).unwrap();
+        let tr = TypedRouter::new(&tp, 0).unwrap();
+        assert_eq!(tr.num_parts(), 2);
+        assert_eq!(tr.num_node_types(), 2);
+        assert_eq!(tr.node_types().collect::<Vec<_>>(), vec!["item", "user"]);
+        assert!(tr.router("ghost").is_err());
+
+        tr.router("item").unwrap().record_local();
+        tr.router("item").unwrap().record_remote_to(1, 5);
+        tr.router("user").unwrap().record_remote_to(1, 2);
+        let s = tr.stats();
+        assert_eq!((s.local_msgs, s.remote_msgs, s.remote_rows), (1, 2, 7));
+        let t = tr.traffic_by_partition();
+        assert_eq!(t.msgs, vec![1, 2]);
+        assert_eq!(t.rows, vec![0, 7]);
+        let by_type = tr.traffic_by_type();
+        assert_eq!(by_type["item"].rows, vec![0, 5]);
+        assert_eq!(by_type["user"].rows, vec![0, 2]);
+
+        // Clones share counters; fresh routers do not. stats_with counts
+        // shared counters once and distinct ones twice.
+        let clone = tr.clone();
+        assert!(tr.shares_counters_with(&clone));
+        assert_eq!(tr.stats_with(&clone), s);
+        let fresh = TypedRouter::new(&tp, 0).unwrap();
+        assert!(!tr.shares_counters_with(&fresh));
+        fresh.router("item").unwrap().record_local();
+        assert_eq!(tr.stats_with(&fresh).local_msgs, s.local_msgs + 1);
+
+        tr.reset_with(&fresh);
+        assert_eq!(clone.stats(), RouterStats::default());
+        assert_eq!(fresh.stats(), RouterStats::default());
+    }
+
+    #[test]
+    fn single_type_router_is_the_homogeneous_case() {
+        let p = Partitioning { assignment: vec![0, 1, 0], num_parts: 2 };
+        let inner = Arc::new(PartitionRouter::new(&p, 1).unwrap());
+        let tr = TypedRouter::single("_default", Arc::clone(&inner));
+        assert_eq!(tr.local_rank(), 1);
+        assert!(Arc::ptr_eq(tr.sole(), &inner));
+        assert!(Arc::ptr_eq(tr.router("_default").unwrap(), &inner));
     }
 
     #[test]

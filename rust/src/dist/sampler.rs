@@ -2,7 +2,7 @@
 //!
 //! Mirrors [`crate::sampler::NeighborSampler`] hop for hop, but every
 //! frontier node's adjacency slice is fetched from the shard of its
-//! *owning* partition ([`PartitionedGraphStore::in_slice`]) with
+//! *owning* partition ([`crate::dist::EdgeShards::in_slice`]) with
 //! local-first fan-out: the local partition is served in-process while
 //! each remote partition touched in a hop costs one coalesced simulated
 //! RPC (payload = edges pulled from it), accounted on the shared
@@ -21,6 +21,7 @@ use super::graph_store::PartitionedGraphStore;
 use crate::error::{Error, Result};
 use crate::sampler::neighbor::sample_from;
 use crate::sampler::{Direction, NeighborSamplerConfig, SampledSubgraph};
+use crate::storage::default_edge_type;
 use crate::util::Rng;
 use rustc_hash::FxHashMap as HashMap;
 use std::sync::Arc;
@@ -47,7 +48,18 @@ impl DistNeighborSampler {
     /// Sample the multi-hop subgraph around `seeds`; identical output to
     /// `NeighborSampler::sample` under the same `(config, batch_seed)`.
     pub fn sample(&self, seeds: &[u32], batch_seed: u64) -> Result<SampledSubgraph> {
-        let router = Arc::clone(self.store.router());
+        // The homogeneous sampler is the single-type special case: a
+        // multi-type store must go through HeteroDistNeighborSampler
+        // (clean error, not the TypedRouter::sole panic).
+        let typed = self.store.typed_router();
+        if typed.num_node_types() != 1 {
+            return Err(Error::Sampler(format!(
+                "homogeneous sampler over a {}-type store; use HeteroDistNeighborSampler",
+                typed.num_node_types()
+            )));
+        }
+        let router = Arc::clone(typed.sole());
+        let es = self.store.edges_of(&default_edge_type())?;
         // Seeds come from user input; frontier nodes beyond hop 0 are edge
         // endpoints and always in range.
         for &s in seeds {
@@ -86,7 +98,6 @@ impl DistNeighborSampler {
         // Per-hop routing ledger: which partitions served this hop's
         // expansions and how many edges each shipped.
         let parts = router.num_parts();
-        let local_rank = router.local_rank() as usize;
         let mut hop_edges = vec![0u64; parts];
         let mut hop_touched = vec![false; parts];
 
@@ -99,7 +110,7 @@ impl DistNeighborSampler {
                 let tree = batch_vec[dst_local as usize];
                 let owner = router.owner(dst_global) as usize;
                 // In-neighbors from the owning shard.
-                let (nbrs, eids) = self.store.in_slice(dst_global);
+                let (nbrs, eids) = es.in_slice(dst_global);
                 sample_from(
                     nbrs,
                     eids,
@@ -127,7 +138,7 @@ impl DistNeighborSampler {
                 }
                 // Out-neighbors (bidirectional mode), same shard routing.
                 if bidirectional {
-                    let (nbrs, eids) = self.store.out_slice(dst_global);
+                    let (nbrs, eids) = es.out_slice(dst_global);
                     sample_from(
                         nbrs,
                         eids,
@@ -156,15 +167,9 @@ impl DistNeighborSampler {
             }
             // Local-first fan-out accounting: the local shard is read
             // in-process (one "message" marks the access), each remote
-            // partition touched costs one coalesced RPC with its payload.
-            if hop_touched[local_rank] {
-                router.record_local();
-            }
-            for p in 0..parts {
-                if p != local_rank && hop_touched[p] {
-                    router.record_remote_to(p as u32, hop_edges[p]);
-                }
-            }
+            // partition touched costs one coalesced RPC with its payload
+            // — recorded on the router and the per-edge-type counters.
+            es.record_hop(&hop_touched, &hop_edges);
             out.node_offsets.push(out.nodes.len());
             out.edge_offsets.push(out.row.len());
             frontier = next_frontier;
@@ -282,5 +287,32 @@ mod tests {
         let (_, part) = stores(2, 0);
         let s = DistNeighborSampler::new(part, NeighborSamplerConfig::default());
         assert!(s.sample(&[400], 0).is_err());
+    }
+
+    #[test]
+    fn multi_type_store_errors_instead_of_panicking() {
+        use crate::dist::TypedRouter;
+        use crate::graph::{EdgeType, HeteroGraph};
+        use crate::partition::TypedPartitioning;
+        use crate::tensor::Tensor;
+
+        let mut g = HeteroGraph::new();
+        g.add_node_type("user", Tensor::zeros(vec![2, 2])).unwrap();
+        g.add_node_type("item", Tensor::zeros(vec![2, 2])).unwrap();
+        let ei = crate::graph::EdgeIndex::new(vec![0, 1], vec![0, 1], 2).unwrap();
+        g.add_edge_type(EdgeType::new("user", "rates", "item"), ei).unwrap();
+        let mut parts = std::collections::BTreeMap::new();
+        for nt in ["user", "item"] {
+            parts.insert(
+                nt.to_string(),
+                Partitioning { assignment: vec![0, 0], num_parts: 1 },
+            );
+        }
+        let tp = TypedPartitioning::from_parts(parts).unwrap();
+        let router = TypedRouter::new(&tp, 0).unwrap();
+        let store = Arc::new(PartitionedGraphStore::from_hetero(&g, router).unwrap());
+        let s = DistNeighborSampler::new(store, NeighborSamplerConfig::default());
+        // A typed store through the homogeneous sampler is a clean error.
+        assert!(s.sample(&[0], 0).is_err());
     }
 }

@@ -2,9 +2,11 @@
 //! padded mini-batches behind a prefetching, backpressured worker pool.
 
 pub mod batch;
+pub mod hetero_loader;
 pub mod neighbor_loader;
 pub mod seed_table;
 
 pub use batch::{Batch, ShapeBucket};
-pub use neighbor_loader::{BatchIter, LoaderConfig, NeighborLoader, Transform};
+pub use hetero_loader::{HeteroBatch, HeteroLoaderConfig, HeteroNeighborLoader};
+pub use neighbor_loader::{BatchIter, LoaderConfig, NeighborLoader, OrderedIter, Transform};
 pub use seed_table::{SeedTable, SeedTableBatch, SeedTableLoader};

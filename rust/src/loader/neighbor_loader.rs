@@ -46,25 +46,63 @@ impl Default for LoaderConfig {
 pub type Transform = Arc<dyn Fn(&mut Batch) + Send + Sync>;
 
 /// One epoch's seed batches: shuffled (when configured) with the
-/// `(cfg.seed, epoch)`-forked stream, then chunked. Shared by every
-/// loader variant — the local/distributed batch-equivalence guarantee
-/// requires a single definition of this ordering.
-pub(crate) fn epoch_seed_batches(seeds: &[u32], cfg: &LoaderConfig, epoch: u64) -> Vec<Vec<u32>> {
+/// `(seed, epoch)`-forked stream, then chunked. Shared by every loader
+/// variant — homogeneous and heterogeneous, local and distributed — the
+/// local/distributed batch-equivalence guarantee requires a single
+/// definition of this ordering.
+pub(crate) fn epoch_seed_batches(
+    seeds: &[u32],
+    batch_size: usize,
+    shuffle: bool,
+    seed: u64,
+    epoch: u64,
+) -> Vec<Vec<u32>> {
     let mut seeds = seeds.to_vec();
-    if cfg.shuffle {
-        let mut rng = Rng::new(cfg.seed).fork(epoch);
+    if shuffle {
+        let mut rng = Rng::new(seed).fork(epoch);
         rng.shuffle(&mut seeds);
     }
-    seeds
-        .chunks(cfg.batch_size)
-        .map(|c| c.to_vec())
-        .collect()
+    seeds.chunks(batch_size).map(|c| c.to_vec()).collect()
 }
 
 /// Per-batch sampler seed for batch `i` of `epoch`. Shared by every
 /// loader variant (see [`epoch_seed_batches`]).
 pub(crate) fn batch_seed(epoch: u64, i: usize) -> u64 {
     epoch.wrapping_mul(1_000_003).wrapping_add(i as u64)
+}
+
+/// Submit one epoch's seed batches to a fresh worker pool and return the
+/// in-order iterator over the produced items — the single submission-side
+/// implementation behind every loader variant (homogeneous /
+/// heterogeneous, local / distributed). `job` runs on a worker per
+/// batch, receiving `(seeds, batch_seed)`; delivery order, prefetch
+/// backpressure and clean early-drop shutdown come from [`OrderedIter`].
+pub(crate) fn spawn_ordered<T, F>(
+    batches: Vec<Vec<u32>>,
+    num_workers: usize,
+    prefetch: usize,
+    epoch: u64,
+    job: F,
+) -> OrderedIter<T>
+where
+    T: Send + 'static,
+    F: Fn(Vec<u32>, u64) -> Result<T> + Send + Sync + 'static,
+{
+    let total = batches.len();
+    let queue: Arc<BoundedQueue<Result<(usize, T)>>> = BoundedQueue::new(prefetch.max(1));
+    let pool = ThreadPool::with_queue_capacity(num_workers, total.max(1));
+    let job = Arc::new(job);
+    for (i, seeds) in batches.into_iter().enumerate() {
+        let job = Arc::clone(&job);
+        let queue = Arc::clone(&queue);
+        let seed = batch_seed(epoch, i);
+        pool.submit(move || {
+            let result = job(seeds, seed).map(|b| (i, b));
+            // Receiver may have been dropped; ignore send failures.
+            let _ = queue.send(result);
+        });
+    }
+    OrderedIter::from_parts(queue, pool, total)
 }
 
 /// The neighbor loader.
@@ -123,62 +161,73 @@ impl<G: GraphStore + 'static, F: FeatureStore + 'static> NeighborLoader<G, F> {
     /// Iterate one epoch. Returns an iterator backed by worker threads;
     /// dropping it early shuts the pipeline down cleanly.
     pub fn iter_epoch(&self, epoch: u64) -> BatchIter {
-        let batches = epoch_seed_batches(&self.seeds, &self.cfg, epoch);
-        let total = batches.len();
-        let queue: Arc<BoundedQueue<Result<(usize, Batch)>>> =
-            BoundedQueue::new(self.cfg.prefetch.max(1));
-        let pool = ThreadPool::with_queue_capacity(self.cfg.num_workers, total.max(1));
-
+        let batches = epoch_seed_batches(
+            &self.seeds,
+            self.cfg.batch_size,
+            self.cfg.shuffle,
+            self.cfg.seed,
+            epoch,
+        );
         let sampler = Arc::new(NeighborSampler::new(
             Arc::clone(&self.graph),
             self.cfg.sampler.clone(),
         ));
-        for (i, seeds) in batches.into_iter().enumerate() {
-            let sampler = Arc::clone(&sampler);
-            let features = Arc::clone(&self.features);
-            let key = self.feature_key.clone();
-            let labels = self.labels.clone();
-            let bucket = self.bucket.clone();
-            let queue = Arc::clone(&queue);
-            let transforms = self.transforms.clone();
-            let batch_seed = batch_seed(epoch, i);
-            pool.submit(move || {
-                let result = sampler.sample(&seeds, batch_seed).and_then(|sub| {
-                    Batch::assemble(sub, features.as_ref(), &key, labels.as_deref().map(|v| &v[..]), &bucket)
-                        .map(|mut b| {
-                            for t in &transforms {
-                                t(&mut b);
-                            }
-                            (i, b)
-                        })
-                });
-                // Receiver may have been dropped; ignore send failures.
-                let _ = queue.send(result);
-            });
-        }
-
-        BatchIter::from_parts(queue, pool, total)
+        let features = Arc::clone(&self.features);
+        let key = self.feature_key.clone();
+        let labels = self.labels.clone();
+        let bucket = self.bucket.clone();
+        let transforms = self.transforms.clone();
+        spawn_ordered(
+            batches,
+            self.cfg.num_workers,
+            self.cfg.prefetch,
+            epoch,
+            move |seeds, batch_seed| {
+                sampler.sample(&seeds, batch_seed).and_then(|sub| {
+                    Batch::assemble(
+                        sub,
+                        features.as_ref(),
+                        &key,
+                        labels.as_deref().map(|v| &v[..]),
+                        &bucket,
+                    )
+                    .map(|mut b| {
+                        for t in &transforms {
+                            t(&mut b);
+                        }
+                        b
+                    })
+                })
+            },
+        )
     }
 }
 
-/// Iterator over one epoch's batches, **in deterministic batch order**
-/// (workers may finish out of order; we reorder on the consumer side so
-/// training runs are reproducible regardless of thread scheduling).
-pub struct BatchIter {
-    queue: Arc<BoundedQueue<Result<(usize, Batch)>>>,
+/// Iterator over one epoch's worker-produced items, **in deterministic
+/// submission order** (workers may finish out of order; we reorder on
+/// the consumer side so training runs are reproducible regardless of
+/// thread scheduling). Generic over the batch type: the homogeneous
+/// loaders yield [`Batch`]es ([`BatchIter`]), the heterogeneous ones
+/// [`crate::loader::HeteroBatch`]es — one delivery/backpressure/shutdown
+/// implementation for every pipeline.
+pub struct OrderedIter<T> {
+    queue: Arc<BoundedQueue<Result<(usize, T)>>>,
     pool: Option<ThreadPool>,
     remaining: usize,
-    pending: std::collections::BTreeMap<usize, Batch>,
+    pending: std::collections::BTreeMap<usize, T>,
     next_idx: usize,
 }
 
-impl BatchIter {
+/// Iterator over one epoch's homogeneous [`Batch`]es.
+pub type BatchIter = OrderedIter<Batch>;
+
+impl<T> OrderedIter<T> {
     /// Assemble an iterator over `total` in-flight batches. Crate-internal:
     /// loader variants (e.g. [`crate::dist::DistNeighborLoader`]) share the
     /// ordered-delivery / backpressure / clean-shutdown semantics by
     /// submitting their jobs and handing the queue + pool here.
     pub(crate) fn from_parts(
-        queue: Arc<BoundedQueue<Result<(usize, Batch)>>>,
+        queue: Arc<BoundedQueue<Result<(usize, T)>>>,
         pool: ThreadPool,
         total: usize,
     ) -> Self {
@@ -192,8 +241,8 @@ impl BatchIter {
     }
 }
 
-impl Iterator for BatchIter {
-    type Item = Result<Batch>;
+impl<T> Iterator for OrderedIter<T> {
+    type Item = Result<T>;
 
     fn next(&mut self) -> Option<Self::Item> {
         loop {
@@ -220,7 +269,7 @@ impl Iterator for BatchIter {
     }
 }
 
-impl Drop for BatchIter {
+impl<T> Drop for OrderedIter<T> {
     fn drop(&mut self) {
         // Close the queue first so in-flight workers' sends fail fast
         // instead of blocking on a full queue, then join the pool.

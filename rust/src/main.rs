@@ -129,6 +129,9 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
         async_workers: args.get_usize("async-workers", 0),
         latency: std::time::Duration::from_micros(args.get_usize("latency-us", 0) as u64),
     };
+    if args.get_bool("hetero") {
+        return cmd_dist_hetero(args, parts, batch, workers, epochs, opts);
+    }
     let g = sbm::generate(&SbmConfig { num_nodes: nodes, seed: 0, ..Default::default() })?;
     let p = pyg2::partition::ldg_partition(&g.edge_index, parts, 1.1)?;
     let cfg = pyg2::loader::LoaderConfig {
@@ -157,6 +160,7 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
         );
         println!("traffic matrix (msgs(payload rows) per rank -> partition):");
         println!("{}", report.matrix);
+        println!("{}", report.skew());
         for (part, (in_e, out_e)) in report.shard_edges.iter().enumerate() {
             println!("partition {part}: {in_e} in-edges / {out_e} out-edges stored");
         }
@@ -201,6 +205,119 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
     println!("cross-partition traffic: {stats}");
     if let Some(cache) = loader.cache_stats() {
         println!("halo cache: {cache}");
+    }
+    Ok(())
+}
+
+/// The typed distributed pipeline (`pyg2 dist --hetero`): a
+/// user/item/tag hetero SBM partitioned per node type, loaded through
+/// `HeteroDistNeighborSampler` + per-type routed feature fetch, with the
+/// same `--halo-cache` / `--async` / `--ranks` layers as the
+/// homogeneous path.
+fn cmd_dist_hetero(
+    args: &Args,
+    parts: usize,
+    batch: usize,
+    workers: usize,
+    epochs: usize,
+    opts: pyg2::coordinator::DistOptions,
+) -> pyg2::Result<()> {
+    use pyg2::datasets::hetero::{self, HeteroSbmConfig};
+
+    let users = args.get_usize("nodes", 5000);
+    let g = hetero::generate(&HeteroSbmConfig {
+        num_users: users,
+        num_items: users * 2 / 3,
+        num_tags: users / 10,
+        seed: 0,
+        ..Default::default()
+    })?;
+    let tp = pyg2::partition::TypedPartitioning::ldg_hetero(&g, parts, 1.1)?;
+    let cuts = tp.cut_edges(&g)?;
+    let cfg = pyg2::loader::HeteroLoaderConfig {
+        batch_size: batch,
+        num_workers: workers,
+        ..Default::default()
+    };
+    log::info!(
+        "hetero dist over {parts} typed partitions: {} node types / {} edge types, \
+         {} nodes / {} edges",
+        g.num_node_types(),
+        g.num_edge_types(),
+        g.total_nodes(),
+        g.total_edges()
+    );
+    for (et, cut) in &cuts {
+        println!("edge type {}: {cut} cut edges", et.key());
+    }
+
+    // Multi-rank simulation: one typed loader per rank over the user
+    // seeds it owns, aggregated per node type.
+    if let Some(ranks) = args.get("ranks") {
+        let ranks: usize = ranks
+            .parse()
+            .map_err(|_| pyg2::error::Error::Config(format!("bad --ranks {ranks}")))?;
+        let t0 = std::time::Instant::now();
+        let report = pyg2::coordinator::multi_rank_epoch_hetero(
+            &g,
+            &tp,
+            "user",
+            ranks,
+            &cfg,
+            opts,
+            epochs as u64,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "hetero multi-rank dist: {} batches / {} sampled nodes in {secs:.2}s",
+            report.batches, report.sampled_nodes
+        );
+        println!("combined traffic matrix (msgs(payload rows) per rank -> partition):");
+        println!("{}", report.matrix);
+        println!("{}", report.skew());
+        for (nt, m) in &report.per_type {
+            println!(
+                "node type {nt}: {} remote msgs / {} remote rows",
+                m.total_remote_msgs(),
+                m.total_remote_rows()
+            );
+        }
+        for (et, stats) in &report.edge_traffic {
+            println!("edge type {}: {stats}", et.key());
+        }
+        for (rank, stats) in report.cache.iter().enumerate() {
+            for (nt, s) in stats {
+                println!("rank {rank} {nt} halo cache: {s}");
+            }
+        }
+        return Ok(());
+    }
+
+    let seeds: Vec<u32> = (0..g.num_nodes("user")? as u32).collect();
+    let loader =
+        pyg2::coordinator::hetero_partitioned_loader_with(&g, &tp, 0, "user", seeds, cfg, opts)?;
+    let t0 = std::time::Instant::now();
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    for epoch in 0..epochs {
+        for b in loader.iter_epoch(epoch as u64) {
+            let b = b?;
+            batches += 1;
+            sampled_nodes += b.total_nodes();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "hetero dist: {batches} batches / {sampled_nodes} sampled nodes in {secs:.2}s \
+         ({:.0} nodes/s)",
+        sampled_nodes as f64 / secs
+    );
+    println!("cross-partition traffic: {}", loader.router_stats());
+    for (et, stats) in loader.edge_traffic() {
+        println!("edge type {}: {stats}", et.key());
+    }
+    for (nt, stats) in loader.cache_stats() {
+        println!("{nt} halo cache: {stats}");
     }
     Ok(())
 }

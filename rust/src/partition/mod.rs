@@ -8,6 +8,10 @@
 //! invariants (balanced parts, heuristically minimized edge cut) — see
 //! DESIGN.md §Substitutions.
 
+pub mod typed;
+
+pub use typed::TypedPartitioning;
+
 use crate::error::{Error, Result};
 use crate::graph::EdgeIndex;
 
@@ -73,8 +77,12 @@ impl Partitioning {
     /// `p` that are endpoints of edges incident to `p`'s nodes. These are
     /// exactly the foreign rows partition `p` must fetch (or cache) to
     /// expand its own nodes — the working set behind the cross-partition
-    /// traffic the [`crate::dist::PartitionRouter`] measures. Returned
-    /// sorted ascending.
+    /// traffic the [`crate::dist::PartitionRouter`] measures.
+    ///
+    /// **Guaranteed sorted ascending and deduplicated**: each node id
+    /// appears at most once no matter how many cut edges reach it. The
+    /// [`crate::dist::HaloCache`] replicates one row per returned id and
+    /// relies on this (a duplicate would corrupt its slot map).
     pub fn halo_nodes(&self, edges: &EdgeIndex, p: u32) -> Vec<u32> {
         let mut in_halo = vec![false; self.assignment.len()];
         for (&s, &d) in edges.src().iter().zip(edges.dst()) {
@@ -267,6 +275,30 @@ mod tests {
             );
             // Halo rows are foreign by definition.
             assert!(halo.iter().all(|&v| p.assignment[v as usize] != part as u32));
+        }
+    }
+
+    #[test]
+    fn halo_nodes_sorted_and_deduplicated() {
+        // A multigraph with many parallel cut edges reaching the same
+        // foreign nodes, listed out of order: the halo must still come
+        // back strictly ascending with one entry per node (the HaloCache
+        // slot-map contract).
+        let ei = EdgeIndex::new(
+            vec![3, 2, 3, 2, 3, 0, 2],
+            vec![0, 1, 0, 0, 1, 3, 1],
+            4,
+        )
+        .unwrap();
+        let p = Partitioning { assignment: vec![0, 0, 1, 1], num_parts: 2 };
+        let h0 = p.halo_nodes(&ei, 0);
+        assert_eq!(h0, vec![2, 3], "five inbound cut edges collapse to two ids");
+        assert!(h0.windows(2).all(|w| w[0] < w[1]), "strictly ascending");
+        let h1 = p.halo_nodes(&ei, 1);
+        assert_eq!(h1, vec![0, 1]);
+        // The one-sweep variant honours the same contract.
+        for (part, halo) in p.halos(&ei).iter().enumerate() {
+            assert_eq!(*halo, p.halo_nodes(&ei, part as u32));
         }
     }
 

@@ -1,0 +1,371 @@
+//! Type-aware partitioning (§2.1 + §2.3): per-node-type ownership over a
+//! [`HeteroGraph`].
+//!
+//! A heterogeneous graph has one id space *per node type*, so its
+//! distributed layout is a family of per-type [`Partitioning`]s sharing
+//! one partition count: partition `p` owns `nodes_of(nt, p)` for every
+//! type `nt` and stores the in-edges of the destinations it owns for
+//! every edge type. The homogeneous case is exactly the single-type
+//! special case of this structure (see [`crate::dist::TypedRouter`]),
+//! which is how the `dist` stores treat it.
+//!
+//! [`TypedPartitioning::ldg_hetero`] builds the assignment by flattening
+//! the typed topology into one global id space
+//! ([`HeteroGraph::to_homogeneous_topology`]), running the LDG streaming
+//! partitioner over it (so cross-type locality — a user and the items it
+//! rates — is respected, like METIS on PyG's flattened hetero graphs),
+//! and slicing the assignment back per type.
+
+use super::{ldg_partition, Partitioning};
+use crate::error::{Error, Result};
+use crate::graph::{EdgeType, HeteroGraph};
+use std::collections::BTreeMap;
+
+/// Per-node-type partition ownership with a shared partition count.
+#[derive(Clone, Debug)]
+pub struct TypedPartitioning {
+    parts: BTreeMap<String, Partitioning>,
+    pub num_parts: usize,
+}
+
+impl TypedPartitioning {
+    /// Assemble from per-type [`Partitioning`]s. All types must agree on
+    /// the partition count and at least one type must be present.
+    pub fn from_parts(parts: BTreeMap<String, Partitioning>) -> Result<Self> {
+        let num_parts = match parts.values().next() {
+            Some(p) => p.num_parts,
+            None => {
+                return Err(Error::Graph(
+                    "typed partitioning needs at least one node type".into(),
+                ))
+            }
+        };
+        for (nt, p) in &parts {
+            if p.num_parts != num_parts {
+                return Err(Error::Graph(format!(
+                    "node type {nt} partitioned {} ways, expected {num_parts}",
+                    p.num_parts
+                )));
+            }
+        }
+        Ok(Self { parts, num_parts })
+    }
+
+    /// The single-type special case (the homogeneous layout, typed).
+    pub fn single(node_type: &str, partitioning: Partitioning) -> Self {
+        let num_parts = partitioning.num_parts;
+        let mut parts = BTreeMap::new();
+        parts.insert(node_type.to_string(), partitioning);
+        Self { parts, num_parts }
+    }
+
+    /// LDG-partition a heterogeneous graph: flatten every type into one
+    /// global id space, stream-partition it (cross-type edges keep
+    /// related nodes of different types together), then slice the
+    /// assignment back into per-type [`Partitioning`]s.
+    pub fn ldg_hetero(g: &HeteroGraph, num_parts: usize, slack: f64) -> Result<Self> {
+        if g.num_node_types() == 0 {
+            return Err(Error::Graph("cannot partition an empty hetero graph".into()));
+        }
+        let (flat, offsets, _total) = g.to_homogeneous_topology();
+        let global = ldg_partition(&flat, num_parts, slack)?;
+        let mut parts = BTreeMap::new();
+        for nt in g.node_types() {
+            let off = offsets[nt];
+            let n = g.num_nodes(nt)?;
+            let assignment = global.assignment[off..off + n].to_vec();
+            parts.insert(nt.to_string(), Partitioning { assignment, num_parts });
+        }
+        Ok(Self { parts, num_parts })
+    }
+
+    /// Node types covered by this partitioning (sorted).
+    pub fn node_types(&self) -> impl Iterator<Item = &str> {
+        self.parts.keys().map(|s| s.as_str())
+    }
+
+    pub fn num_node_types(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// The per-type [`Partitioning`] of `node_type`.
+    pub fn partitioning(&self, node_type: &str) -> Result<&Partitioning> {
+        self.parts
+            .get(node_type)
+            .ok_or_else(|| Error::Graph(format!("unknown node type {node_type} in partitioning")))
+    }
+
+    /// Owning partition of node `v` of `node_type` (`None` when the type
+    /// or id is unknown).
+    pub fn owner(&self, node_type: &str, v: u32) -> Option<u32> {
+        self.parts.get(node_type).and_then(|p| p.owner(v))
+    }
+
+    /// Nodes of `node_type` owned by partition `p`, ascending.
+    pub fn nodes_of(&self, node_type: &str, p: u32) -> Vec<u32> {
+        self.parts
+            .get(node_type)
+            .map(|part| part.nodes_of(p))
+            .unwrap_or_default()
+    }
+
+    /// Total nodes across all types.
+    pub fn total_nodes(&self) -> usize {
+        self.parts.values().map(|p| p.assignment.len()).sum()
+    }
+
+    /// The typed 1-hop halo of `(node_type, p)`: distinct nodes of
+    /// `node_type` **not** owned by `p` that are endpoints of edges (of
+    /// any edge type touching `node_type`) whose other endpoint *is*
+    /// owned by `p` — exactly the foreign feature rows of that type the
+    /// rank must fetch or cache when expanding its own nodes one hop.
+    /// Returned sorted ascending and deduplicated (the
+    /// [`crate::dist::HaloCache`] contract; see
+    /// [`Partitioning::halo_nodes`]).
+    ///
+    /// On a single-type graph this equals the untyped
+    /// [`Partitioning::halo_nodes`] (enforced by
+    /// `tests/test_partition_properties.rs`).
+    pub fn halo_nodes(&self, g: &HeteroGraph, node_type: &str, p: u32) -> Result<Vec<u32>> {
+        let own = self.partitioning(node_type)?;
+        let mut in_halo = vec![false; own.assignment.len()];
+        for et in g.edge_types() {
+            if et.src != node_type && et.dst != node_type {
+                continue;
+            }
+            let store = g.edge_store(et)?;
+            let src_part = self.partitioning(&et.src)?;
+            let dst_part = self.partitioning(&et.dst)?;
+            for (&s, &d) in store.edge_index.src().iter().zip(store.edge_index.dst()) {
+                let (os, od) = (src_part.assignment[s as usize], dst_part.assignment[d as usize]);
+                if et.src == node_type && od == p && os != p {
+                    in_halo[s as usize] = true;
+                }
+                if et.dst == node_type && os == p && od != p {
+                    in_halo[d as usize] = true;
+                }
+            }
+        }
+        Ok(in_halo
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h)
+            .map(|(v, _)| v as u32)
+            .collect())
+    }
+
+    /// Every `(node_type, partition)` halo in one sweep per edge type:
+    /// `halos(g)?[nt][p]` equals [`TypedPartitioning::halo_nodes`]`(g,
+    /// nt, p)`. The multi-rank hetero simulation builds one
+    /// [`crate::dist::HaloCache`] per `(rank, type)` from this without
+    /// re-scanning the edge lists per rank.
+    pub fn halos(&self, g: &HeteroGraph) -> Result<BTreeMap<String, Vec<Vec<u32>>>> {
+        // Per type: num_parts x num_nodes membership bitmaps.
+        let mut marks: BTreeMap<String, Vec<bool>> = BTreeMap::new();
+        for (nt, p) in &self.parts {
+            marks.insert(nt.clone(), vec![false; p.assignment.len() * self.num_parts]);
+        }
+        for et in g.edge_types() {
+            let store = g.edge_store(et)?;
+            let src_part = self.partitioning(&et.src)?;
+            let dst_part = self.partitioning(&et.dst)?;
+            // Two passes (src marks, then dst marks) keep the borrows of
+            // the per-type bitmaps disjoint even for self-relations.
+            {
+                let n_src = src_part.assignment.len();
+                let m = marks.get_mut(&et.src).expect("type registered");
+                for (&s, &d) in store.edge_index.src().iter().zip(store.edge_index.dst()) {
+                    let (os, od) =
+                        (src_part.assignment[s as usize], dst_part.assignment[d as usize]);
+                    if os != od {
+                        m[od as usize * n_src + s as usize] = true;
+                    }
+                }
+            }
+            {
+                let n_dst = dst_part.assignment.len();
+                let m = marks.get_mut(&et.dst).expect("type registered");
+                for (&s, &d) in store.edge_index.src().iter().zip(store.edge_index.dst()) {
+                    let (os, od) =
+                        (src_part.assignment[s as usize], dst_part.assignment[d as usize]);
+                    if os != od {
+                        m[os as usize * n_dst + d as usize] = true;
+                    }
+                }
+            }
+        }
+        let mut out = BTreeMap::new();
+        for (nt, p) in &self.parts {
+            let n = p.assignment.len();
+            let m = &marks[nt];
+            let per_part: Vec<Vec<u32>> = (0..self.num_parts)
+                .map(|part| {
+                    (0..n)
+                        .filter(|&v| m[part * n + v])
+                        .map(|v| v as u32)
+                        .collect()
+                })
+                .collect();
+            out.insert(nt.clone(), per_part);
+        }
+        Ok(out)
+    }
+
+    /// Cross-partition edges per edge type — the traffic-generating edges
+    /// of the typed layout (reported by `bench_dist_hetero`).
+    pub fn cut_edges(&self, g: &HeteroGraph) -> Result<BTreeMap<EdgeType, usize>> {
+        let mut out = BTreeMap::new();
+        for et in g.edge_types() {
+            let store = g.edge_store(et)?;
+            let src_part = self.partitioning(&et.src)?;
+            let dst_part = self.partitioning(&et.dst)?;
+            let cut = store
+                .edge_index
+                .src()
+                .iter()
+                .zip(store.edge_index.dst())
+                .filter(|(&s, &d)| {
+                    src_part.assignment[s as usize] != dst_part.assignment[d as usize]
+                })
+                .count();
+            out.insert(et.clone(), cut);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeIndex;
+    use crate::tensor::Tensor;
+
+    /// users --rates--> items; items --rated_by--> users.
+    fn toy() -> HeteroGraph {
+        let mut g = HeteroGraph::new();
+        g.add_node_type("user", Tensor::zeros(vec![4, 2])).unwrap();
+        g.add_node_type("item", Tensor::zeros(vec![3, 2])).unwrap();
+        let rates = EdgeIndex::new(vec![0, 1, 2, 3], vec![0, 1, 2, 0], 4).unwrap();
+        g.add_edge_type(EdgeType::new("user", "rates", "item"), rates).unwrap();
+        let rated = EdgeIndex::new(vec![0, 2], vec![1, 3], 4).unwrap();
+        g.add_edge_type(EdgeType::new("item", "rated_by", "user"), rated).unwrap();
+        g
+    }
+
+    fn toy_partitioning() -> TypedPartitioning {
+        let mut parts = BTreeMap::new();
+        // users 0,1 -> p0; users 2,3 -> p1. items 0,1 -> p0; item 2 -> p1.
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![0, 0, 1, 1], num_parts: 2 },
+        );
+        parts.insert(
+            "item".to_string(),
+            Partitioning { assignment: vec![0, 0, 1], num_parts: 2 },
+        );
+        TypedPartitioning::from_parts(parts).unwrap()
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(TypedPartitioning::from_parts(BTreeMap::new()).is_err());
+        let mut bad = BTreeMap::new();
+        bad.insert("a".to_string(), Partitioning { assignment: vec![0], num_parts: 1 });
+        bad.insert("b".to_string(), Partitioning { assignment: vec![0, 1], num_parts: 2 });
+        assert!(TypedPartitioning::from_parts(bad).is_err());
+    }
+
+    #[test]
+    fn ownership_lookups() {
+        let tp = toy_partitioning();
+        assert_eq!(tp.num_parts, 2);
+        assert_eq!(tp.num_node_types(), 2);
+        assert_eq!(tp.owner("user", 2), Some(1));
+        assert_eq!(tp.owner("item", 0), Some(0));
+        assert_eq!(tp.owner("nope", 0), None);
+        assert_eq!(tp.owner("user", 9), None);
+        assert_eq!(tp.nodes_of("user", 0), vec![0, 1]);
+        assert_eq!(tp.nodes_of("item", 1), vec![2]);
+        assert_eq!(tp.total_nodes(), 7);
+        assert!(tp.partitioning("ghost").is_err());
+    }
+
+    #[test]
+    fn typed_halos_are_foreign_boundary_nodes_per_type() {
+        let g = toy();
+        let tp = toy_partitioning();
+        // Edges crossing partitions:
+        //   rates:   user 2 (p1) -> item 2 (p1): local. user 3 (p1) -> item 0 (p0): cut.
+        //            user 0,1 (p0) -> items 0,1 (p0): local.
+        //   rated_by: item 0 (p0) -> user 1 (p0): local. item 2 (p1) -> user 3 (p1): local.
+        // p0's halos: user 3 (rates edge into p0-owned item 0); no items.
+        assert_eq!(tp.halo_nodes(&g, "user", 0).unwrap(), vec![3]);
+        assert_eq!(tp.halo_nodes(&g, "item", 0).unwrap(), Vec::<u32>::new());
+        // p1's halos: item 0 (user 3 owns its rates edge endpoint... from
+        // p1's view, item 0 is the foreign endpoint of user 3's edge).
+        assert_eq!(tp.halo_nodes(&g, "item", 1).unwrap(), vec![0]);
+        assert_eq!(tp.halo_nodes(&g, "user", 1).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn halos_sweep_matches_per_type_queries() {
+        let g = toy();
+        let tp = toy_partitioning();
+        let all = tp.halos(&g).unwrap();
+        for nt in ["user", "item"] {
+            for p in 0..2u32 {
+                assert_eq!(
+                    all[nt][p as usize],
+                    tp.halo_nodes(&g, nt, p).unwrap(),
+                    "halo of ({nt}, {p})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ldg_hetero_partitions_every_type_exactly_once() {
+        let g = toy();
+        let tp = TypedPartitioning::ldg_hetero(&g, 2, 1.2).unwrap();
+        assert_eq!(tp.num_parts, 2);
+        for nt in ["user", "item"] {
+            let p = tp.partitioning(nt).unwrap();
+            assert_eq!(p.assignment.len(), g.num_nodes(nt).unwrap());
+            assert!(p.assignment.iter().all(|&a| a < 2));
+        }
+    }
+
+    #[test]
+    fn cut_edges_counts_per_edge_type() {
+        let g = toy();
+        let tp = toy_partitioning();
+        let cuts = tp.cut_edges(&g).unwrap();
+        assert_eq!(cuts[&EdgeType::new("user", "rates", "item")], 1); // user 3 -> item 0
+        assert_eq!(cuts[&EdgeType::new("item", "rated_by", "user")], 0);
+    }
+
+    #[test]
+    fn halo_nodes_sorted_and_deduplicated_across_edge_types() {
+        // user 3 reaches p0 through *both* edge types; it must appear once.
+        let mut g = toy();
+        let extra = EdgeIndex::new(vec![1, 1], vec![3, 3], 4).unwrap();
+        g.add_edge_type(EdgeType::new("item", "also_rated_by", "user"), extra).unwrap();
+        let mut parts = BTreeMap::new();
+        parts.insert(
+            "user".to_string(),
+            Partitioning { assignment: vec![0, 0, 1, 1], num_parts: 2 },
+        );
+        parts.insert(
+            "item".to_string(),
+            Partitioning { assignment: vec![0, 0, 1], num_parts: 2 },
+        );
+        let tp = TypedPartitioning::from_parts(parts).unwrap();
+        // p1's user halo: duplicate edges item1(p0)->user3(p1)? No — that
+        // makes item 1 halo of p1 and user 3 halo of p0.
+        let h = tp.halo_nodes(&g, "user", 0).unwrap();
+        assert_eq!(h, vec![3], "duplicate cut edges collapse to one halo entry");
+        assert!(h.windows(2).all(|w| w[0] < w[1]));
+        let h = tp.halo_nodes(&g, "item", 1).unwrap();
+        assert_eq!(h, vec![0, 1]);
+    }
+}

@@ -38,6 +38,31 @@ pub struct HeteroEdges {
     pub edge_ids: Vec<u32>,
 }
 
+impl HeteroEdges {
+    pub fn num_edges(&self) -> usize {
+        self.row.len()
+    }
+
+    /// Structural invariants of one edge type's sampled COO: aligned
+    /// row/col/edge-id columns and local indices within the `n_src` /
+    /// `n_dst` node counts of the endpoint types. Called per edge type
+    /// by [`HeteroSampledSubgraph::check_invariants`] and, under
+    /// `debug_assertions`, on every sampler/loader output (hot-path
+    /// guard against cross-type index mixups).
+    pub fn check_invariants(&self, n_src: u32, n_dst: u32) -> std::result::Result<(), String> {
+        if self.row.len() != self.col.len() || self.row.len() != self.edge_ids.len() {
+            return Err("row/col/edge_ids mismatch".into());
+        }
+        if self.row.iter().any(|&r| r >= n_src) {
+            return Err(format!("row out of range ({n_src} src nodes)"));
+        }
+        if self.col.iter().any(|&c| c >= n_dst) {
+            return Err(format!("col out of range ({n_dst} dst nodes)"));
+        }
+        Ok(())
+    }
+}
+
 impl HeteroSampledSubgraph {
     pub fn num_nodes(&self, node_type: &str) -> usize {
         self.nodes.get(node_type).map(|v| v.len()).unwrap_or(0)
@@ -51,20 +76,16 @@ impl HeteroSampledSubgraph {
         self.edges.values().map(|e| e.row.len()).sum()
     }
 
-    /// Structural invariants (property tests).
+    /// Structural invariants (property tests + `debug_assertions`-mode
+    /// hot-path checks): per-edge-type COO validity
+    /// ([`HeteroEdges::check_invariants`]) and, in disjoint mode, that no
+    /// edge crosses sampling trees.
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         for (et, e) in &self.edges {
-            if e.row.len() != e.col.len() || e.row.len() != e.edge_ids.len() {
-                return Err(format!("{}: row/col/edge_ids mismatch", et.key()));
-            }
             let n_src = self.num_nodes(&et.src) as u32;
             let n_dst = self.num_nodes(&et.dst) as u32;
-            if e.row.iter().any(|&r| r >= n_src) {
-                return Err(format!("{}: row out of range", et.key()));
-            }
-            if e.col.iter().any(|&c| c >= n_dst) {
-                return Err(format!("{}: col out of range", et.key()));
-            }
+            e.check_invariants(n_src, n_dst)
+                .map_err(|m| format!("{}: {m}", et.key()))?;
             if let Some(batch) = &self.batch {
                 let bs = &batch[&et.src];
                 let bd = &batch[&et.dst];
@@ -98,6 +119,58 @@ impl Default for HeteroSamplerConfig {
             seed: 0,
         }
     }
+}
+
+/// Filter one node's in-neighbor slice by the temporal constraints and
+/// pick up to `fanout` of the survivors — **the single definition of
+/// the hetero samplers' RNG-consumption contract**. Both
+/// [`HeteroNeighborSampler`] and
+/// [`crate::dist::HeteroDistNeighborSampler`] expand through this
+/// helper (over slices that are bit-identical between the global CSC
+/// and the owning shard), which is what makes them seed-for-seed
+/// interchangeable: one `sample_distinct` draw iff more than `fanout`
+/// candidates survive, none otherwise. Returns the picked
+/// `(neighbor, edge id)` pairs.
+pub(crate) fn filter_pick(
+    nbrs: &[u32],
+    eids: &[u32],
+    t_seed: Option<i64>,
+    edge_time: Option<&[i64]>,
+    node_time: Option<&[i64]>,
+    fanout: usize,
+    rng: &mut Rng,
+) -> Vec<(u32, u32)> {
+    let mut cands: Vec<usize> = Vec::with_capacity(nbrs.len());
+    for (j, (&nbr, &eid)) in nbrs.iter().zip(eids).enumerate() {
+        if let Some(ts) = t_seed {
+            if let Some(etimes) = edge_time {
+                if etimes[eid as usize] > ts {
+                    continue;
+                }
+            }
+            if let Some(ntimes) = node_time {
+                if ntimes[nbr as usize] > ts {
+                    continue;
+                }
+            }
+        }
+        cands.push(j);
+    }
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let picks: Vec<usize> = if cands.len() <= fanout {
+        (0..cands.len()).collect()
+    } else {
+        rng.sample_distinct(cands.len(), fanout)
+    };
+    picks
+        .into_iter()
+        .map(|p| {
+            let j = cands[p];
+            (nbrs[j], eids[j])
+        })
+        .collect()
 }
 
 /// Heterogeneous neighbor sampler.
@@ -230,39 +303,23 @@ impl<G: GraphStore> HeteroNeighborSampler<G> {
 
                     let lo = csc.indptr[dst_global as usize];
                     let hi = csc.indptr[dst_global as usize + 1];
-                    // Collect valid candidate positions.
-                    let mut cands: Vec<usize> = Vec::with_capacity(hi - lo);
-                    for j in lo..hi {
-                        if let Some(ts) = t_seed {
-                            if let Some(etimes) = &edge_time {
-                                if etimes[csc.perm[j] as usize] > ts {
-                                    continue;
-                                }
-                            }
-                            if let Some(ntimes) = &node_time {
-                                if ntimes[csc.indices[j] as usize] > ts {
-                                    continue;
-                                }
-                            }
-                        }
-                        cands.push(j);
-                    }
-                    if cands.is_empty() {
+                    let picks = filter_pick(
+                        &csc.indices[lo..hi],
+                        &csc.perm[lo..hi],
+                        t_seed,
+                        edge_time.as_deref().map(|v| &v[..]),
+                        node_time.as_deref().map(|v| &v[..]),
+                        fanout,
+                        &mut rng,
+                    );
+                    if picks.is_empty() {
                         continue;
                     }
-                    let picks: Vec<usize> = if cands.len() <= fanout {
-                        (0..cands.len()).collect()
-                    } else {
-                        rng.sample_distinct(cands.len(), fanout)
-                    };
                     let nv = out.nodes.get_mut(&et.src).unwrap();
                     let lv = local.get_mut(&et.src).unwrap();
                     let bv = batch.get_mut(&et.src).unwrap();
                     let ev = out.edges.get_mut(et).unwrap();
-                    for &p in &picks {
-                        let j = cands[p];
-                        let nbr = csc.indices[j];
-                        let eid = csc.perm[j];
+                    for (nbr, eid) in picks {
                         let src_local = *lv.entry((tree, nbr)).or_insert_with(|| {
                             nv.push(nbr);
                             bv.push(tree);
@@ -299,6 +356,13 @@ impl<G: GraphStore> HeteroNeighborSampler<G> {
 
         if self.cfg.disjoint {
             out.batch = Some(batch);
+        }
+        // Debug builds verify every sampled subgraph on the hot path
+        // (release builds skip the scan; the property tests keep it
+        // honest there).
+        #[cfg(debug_assertions)]
+        if let Err(e) = out.check_invariants() {
+            panic!("HeteroNeighborSampler produced an invalid subgraph: {e}");
         }
         Ok(out)
     }

@@ -8,7 +8,7 @@ pub mod subgraph;
 pub mod temporal;
 
 pub use bulk::{make_seed_batches, BulkSampler};
-pub use hetero::{HeteroNeighborSampler, HeteroSampledSubgraph, HeteroSamplerConfig};
+pub use hetero::{HeteroEdges, HeteroNeighborSampler, HeteroSampledSubgraph, HeteroSamplerConfig};
 pub use neighbor::{Direction, NeighborSampler, NeighborSamplerConfig};
 pub use subgraph::SampledSubgraph;
 pub use temporal::{TemporalNeighborSampler, TemporalSamplerConfig, TemporalStrategy};

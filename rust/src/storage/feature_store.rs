@@ -85,6 +85,19 @@ impl InMemoryFeatureStore {
         s.put(FeatureKey::default_x(), x);
         s
     }
+
+    /// Store every node type's features of a heterogeneous graph under
+    /// `(node_type, "x")` — the in-memory feature side of the hetero
+    /// pipeline (the graph side is
+    /// [`crate::storage::InMemoryGraphStore::from_hetero`]).
+    pub fn from_hetero(g: &crate::graph::HeteroGraph) -> Self {
+        let s = Self::new();
+        for nt in g.node_types() {
+            let store = g.node_store(nt).expect("listed node type exists");
+            s.put(FeatureKey::new(nt, DEFAULT_ATTR), store.x.clone());
+        }
+        s
+    }
 }
 
 impl FeatureStore for InMemoryFeatureStore {
@@ -156,6 +169,19 @@ mod tests {
     fn missing_group_errors() {
         let s = store();
         assert!(s.get(&FeatureKey::new("nope", "x"), &[0]).is_err());
+    }
+
+    #[test]
+    fn from_hetero_keys_groups_by_node_type() {
+        use crate::graph::HeteroGraph;
+        let mut g = HeteroGraph::new();
+        g.add_node_type("user", Tensor::zeros(vec![2, 3])).unwrap();
+        g.add_node_type("item", Tensor::full(vec![4, 2], 7.0)).unwrap();
+        let s = InMemoryFeatureStore::from_hetero(&g);
+        assert_eq!(s.num_rows(&FeatureKey::new("user", "x")).unwrap(), 2);
+        assert_eq!(s.feature_dim(&FeatureKey::new("item", "x")).unwrap(), 2);
+        assert_eq!(s.get(&FeatureKey::new("item", "x"), &[3]).unwrap().row(0), &[7.0, 7.0]);
+        assert_eq!(s.keys().len(), 2);
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! Property-based tests for `partition::ldg_partition` (the METIS
-//! substitute the distributed stack routes by), via the in-crate
-//! mini-proptest harness: total single assignment, the slack capacity
-//! bound, and the edge-cut advantage over the random baseline.
+//! substitute the distributed stack routes by) and the typed
+//! `partition::TypedPartitioning` on top of it, via the in-crate
+//! mini-proptest harness: total single assignment (per type), the slack
+//! capacity bound, the edge-cut advantage over the random baseline, and
+//! typed-halo / untyped-halo agreement on single-type graphs.
 
+use pyg2::datasets::hetero::{self, HeteroSbmConfig};
 use pyg2::datasets::sbm::{self, SbmConfig};
-use pyg2::graph::EdgeIndex;
-use pyg2::partition::{ldg_capacity, ldg_partition, random_partition};
+use pyg2::graph::{EdgeIndex, EdgeType, HeteroGraph};
+use pyg2::partition::{ldg_capacity, ldg_partition, random_partition, TypedPartitioning};
+use pyg2::tensor::Tensor;
 use pyg2::util::proptest::{check, Gen};
 use pyg2::util::Rng;
+use std::collections::BTreeMap;
 
 /// Generator for (num_nodes, num_parts, slack-in-hundredths, graph seed).
 struct PartitionCaseGen;
@@ -103,6 +108,91 @@ fn slack_capacity_bound_respected() {
                     case.num_parts,
                     case.slack()
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn typed_ownership_partitions_each_type_exactly_once() {
+    check(53, &PartitionCaseGen, |case| {
+        let g = hetero::generate(&HeteroSbmConfig {
+            num_users: case.num_nodes,
+            num_items: case.num_nodes / 2 + 8,
+            num_tags: case.num_nodes / 5 + 4,
+            seed: case.seed,
+            ..Default::default()
+        })
+        .map_err(|e| e.to_string())?;
+        let tp = TypedPartitioning::ldg_hetero(&g, case.num_parts, case.slack())
+            .map_err(|e| e.to_string())?;
+        if tp.num_parts != case.num_parts {
+            return Err(format!("{} parts, wanted {}", tp.num_parts, case.num_parts));
+        }
+        let mut total = 0usize;
+        for nt in ["user", "item", "tag"] {
+            let n = g.num_nodes(nt).map_err(|e| e.to_string())?;
+            let p = tp.partitioning(nt).map_err(|e| e.to_string())?;
+            if p.assignment.len() != n {
+                return Err(format!("{nt}: {} assignments for {n} nodes", p.assignment.len()));
+            }
+            if let Some(&bad) = p.assignment.iter().find(|&&a| a as usize >= case.num_parts) {
+                return Err(format!("{nt}: assignment {bad} out of {} parts", case.num_parts));
+            }
+            // "Exactly once": per-partition node lists tile the type.
+            let covered: usize = (0..case.num_parts)
+                .map(|part| tp.nodes_of(nt, part as u32).len())
+                .sum();
+            if covered != n {
+                return Err(format!("{nt}: nodes_of covers {covered} of {n} nodes"));
+            }
+            total += n;
+        }
+        if tp.total_nodes() != total {
+            return Err(format!("total_nodes {} != {total}", tp.total_nodes()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn typed_halos_match_untyped_halos_on_single_type_graph() {
+    check(59, &PartitionCaseGen, |case| {
+        let edges = case.graph();
+        let p = ldg_partition(&edges, case.num_parts, case.slack())
+            .map_err(|e| e.to_string())?;
+        // Wrap the same topology as a single-type hetero graph.
+        let mut g = HeteroGraph::new();
+        g.add_node_type("n", Tensor::zeros(vec![case.num_nodes, 1]))
+            .map_err(|e| e.to_string())?;
+        g.add_edge_type(
+            EdgeType::new("n", "to", "n"),
+            EdgeIndex::new(edges.src().to_vec(), edges.dst().to_vec(), case.num_nodes)
+                .map_err(|e| e.to_string())?,
+        )
+        .map_err(|e| e.to_string())?;
+        let mut parts = BTreeMap::new();
+        parts.insert("n".to_string(), p.clone());
+        let tp = TypedPartitioning::from_parts(parts).map_err(|e| e.to_string())?;
+        let swept = tp.halos(&g).map_err(|e| e.to_string())?;
+        for part in 0..case.num_parts as u32 {
+            let untyped = p.halo_nodes(&edges, part);
+            let typed = tp.halo_nodes(&g, "n", part).map_err(|e| e.to_string())?;
+            if typed != untyped {
+                return Err(format!(
+                    "partition {part}: typed halo ({} nodes) != untyped halo ({} nodes)",
+                    typed.len(),
+                    untyped.len()
+                ));
+            }
+            // Sorted + deduplicated (the HaloCache contract) and the
+            // one-sweep variant agrees.
+            if !typed.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("partition {part}: halo not strictly ascending"));
+            }
+            if swept["n"][part as usize] != typed {
+                return Err(format!("partition {part}: halos() sweep disagrees"));
             }
         }
         Ok(())
