@@ -67,6 +67,11 @@ COMMANDS:
               --trim  --epochs N  --config file.toml  --workers N
   partition   partition an SBM graph and report edge-cut/balance
               --nodes N --parts K
+              --hetero          typed partitioning of the user/item/tag
+                                hetero SBM (per-edge-type cut report)
+              --write DIR       materialize the partitioning as an
+                                on-disk partition bundle (manifest +
+                                per-partition feature/adjacency shards)
   dist        run the distributed loading pipeline over a partitioned
               SBM graph and report cross-partition traffic
               --nodes N --parts K --batch N --workers N --epochs N
@@ -79,6 +84,11 @@ COMMANDS:
               --ranks N         one loader per rank over its own seed
                                 shard; prints the rank x partition
                                 traffic matrix + per-rank wall-clock skew
+              --mount DIR       run out-of-core over a partition bundle
+                                (typed bundles auto-detected): topology
+                                from binary adjacency shards, feature
+                                rows demand-paged through a bounded LRU
+              --rank R --cache-mb M --seed-type T  (mount knobs)
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
   info        print manifest/artifact summary

@@ -618,6 +618,245 @@ fn build_hetero_partitioned_loader(
     Ok(loader)
 }
 
+/// Wire a mounted [`crate::persist::Bundle`] through the full
+/// out-of-core distributed stack, viewed from `local_rank`: the
+/// topology comes from the bundle's binary adjacency shards
+/// ([`crate::dist::PartitionedGraphStore::mount`]), feature rows are
+/// demand-paged from its `.pygf` shards through the bounded LRU
+/// ([`crate::dist::PartitionedFeatureStore::mount_with_router`], budget
+/// from `lru`), and labels come from the bundle. Yields batches
+/// identical to [`partitioned_loader_with`] over the original graph
+/// under the same [`LoaderConfig`] (`tests/test_persist_equivalence.rs`).
+///
+/// The [`DistOptions`] layers compose unchanged: a halo replica (built
+/// by reading the halo rows *from the mounted shard files* through a
+/// cache/latency/counter-free raw view, so it is byte-identical to
+/// routed fetches without polluting the row cache) filters the remote
+/// path before the LRU ever sees a request, and an async router
+/// overlaps what remains. Construction costs nothing on the loader's
+/// ledgers: traffic counters, cache stats and disk reads all start at
+/// zero.
+pub fn mounted_loader(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+) -> Result<crate::dist::DistNeighborLoader> {
+    use crate::dist::{
+        AsyncRouter, DistNeighborLoader, HaloCache, PartitionedFeatureStore,
+        PartitionedGraphStore,
+    };
+    use crate::error::Error;
+    use crate::storage::DEFAULT_GROUP;
+    use std::sync::Arc;
+
+    if bundle.is_typed() {
+        return Err(Error::Config(
+            "bundle is typed (heterogeneous): use hetero_mounted_loader".into(),
+        ));
+    }
+    let gs = Arc::new(PartitionedGraphStore::mount(bundle, local_rank)?);
+    let mut fs =
+        PartitionedFeatureStore::mount_with_router(bundle, gs.typed_router().clone(), lru)?
+            .with_latency(opts.latency);
+    if opts.halo_cache {
+        let halo = gs.halo_nodes(DEFAULT_GROUP)?;
+        let n = bundle.node_type(DEFAULT_GROUP)?.num_nodes;
+        // Build the replica through the raw (cache/latency/counter-free)
+        // view: halo rows are intercepted by the replica forever after,
+        // so inserting them into the bounded row cache would only evict
+        // capacity from rows that can still miss.
+        let cache = {
+            let raw = fs.raw_reader().expect("mounted store");
+            HaloCache::build(&halo, &raw, n, local_rank)?
+        };
+        fs = fs.with_halo_cache(Arc::new(cache))?;
+    }
+    if opts.async_fetch {
+        let workers = if opts.async_workers > 0 {
+            opts.async_workers
+        } else {
+            bundle.num_parts().saturating_sub(1).max(1)
+        };
+        fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
+    }
+    let mut loader = DistNeighborLoader::new(gs, Arc::new(fs), seeds, cfg);
+    if let Some(y) = bundle.load_labels(DEFAULT_GROUP)? {
+        loader = loader.with_labels(y);
+    }
+    // Replica construction read its rows off disk (bypassing the row
+    // cache); zero the I/O ledgers so they report epoch costs only.
+    loader.features().reset_io_stats();
+    Ok(loader)
+}
+
+/// The typed counterpart of [`mounted_loader`]: mount a heterogeneous
+/// bundle and drive the [`crate::dist::HeteroDistNeighborLoader`] over
+/// it, seeding on `seed_type`. Homogeneous bundles work too (their one
+/// `_default` type is the single-type special case). Batch content is
+/// identical to [`hetero_partitioned_loader_with`] over the original
+/// graph (`tests/test_persist_equivalence.rs`).
+pub fn hetero_mounted_loader(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    seed_type: &str,
+    seeds: Vec<u32>,
+    cfg: crate::loader::HeteroLoaderConfig,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+) -> Result<crate::dist::HeteroDistNeighborLoader> {
+    use crate::dist::{
+        AsyncRouter, HaloCache, HeteroDistNeighborLoader, PartitionedFeatureStore,
+        PartitionedGraphStore,
+    };
+    use crate::storage::{FeatureKey, FeatureStore, DEFAULT_ATTR};
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    bundle.node_type(seed_type)?; // validate the seed type early
+    let gs = Arc::new(PartitionedGraphStore::mount(bundle, local_rank)?);
+    let mut fs =
+        PartitionedFeatureStore::mount_with_router(bundle, gs.typed_router().clone(), lru)?
+            .with_latency(opts.latency);
+    if opts.halo_cache {
+        let mut caches = BTreeMap::new();
+        for nt in &bundle.manifest().node_types {
+            // Gather the typed halo rows straight off the shard files
+            // (cache/latency/counter-free raw view) — the same bytes a
+            // routed fetch would return, so hits stay bit-identical to
+            // the uncached path, without polluting the bounded row
+            // cache with rows the replica will intercept forever after.
+            let halo = gs.halo_nodes(&nt.name)?;
+            let idx: Vec<usize> = halo.iter().map(|&v| v as usize).collect();
+            let key = FeatureKey::new(&nt.name, DEFAULT_ATTR);
+            let rows = fs.raw_reader().expect("mounted store").get(&key, &idx)?;
+            caches.insert(
+                nt.name.clone(),
+                Arc::new(HaloCache::from_group(key, &halo, rows, nt.num_nodes, local_rank)?),
+            );
+        }
+        fs = fs.with_halo_caches(caches)?;
+    }
+    if opts.async_fetch {
+        let workers = if opts.async_workers > 0 {
+            opts.async_workers
+        } else {
+            bundle.num_parts().saturating_sub(1).max(1)
+        };
+        fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
+    }
+    let mut loader = HeteroDistNeighborLoader::new(gs, Arc::new(fs), seed_type, seeds, cfg);
+    if let Some(y) = bundle.load_labels(seed_type)? {
+        loader = loader.with_labels(y);
+    }
+    // Replica construction read its rows off disk (bypassing the row
+    // cache); zero the I/O ledgers so they report epoch costs only.
+    loader.features().reset_io_stats();
+    Ok(loader)
+}
+
+/// Result of a [`multi_rank_epoch_mounted`] simulation: the
+/// `rank × partition` traffic matrix plus, per rank, the halo-cache
+/// counters, the bounded row cache's hit/miss/evict/byte counters, the
+/// positioned disk reads its misses cost, and wall-clock.
+#[derive(Debug)]
+pub struct MountedMultiRankReport {
+    pub matrix: crate::dist::TrafficMatrix,
+    /// Per-rank halo-cache counters (`None` when caching was off).
+    pub halo: Vec<Option<crate::dist::CacheStats>>,
+    /// Per-rank bounded-LRU row cache counters.
+    pub row_cache: Vec<crate::persist::RowCacheStats>,
+    /// Per-rank positioned disk reads over the bundle's shard files.
+    pub disk_reads: Vec<u64>,
+    pub rank_seconds: Vec<f64>,
+    pub batches: usize,
+    pub sampled_nodes: usize,
+}
+
+impl MountedMultiRankReport {
+    /// Min/max/mean of [`MountedMultiRankReport::rank_seconds`].
+    pub fn skew(&self) -> RankSkew {
+        RankSkew::from_seconds(&self.rank_seconds)
+    }
+}
+
+/// Multi-rank simulation over a mounted bundle: one out-of-core
+/// [`crate::dist::DistNeighborLoader`] per rank, each mounting the
+/// bundle from its own rank's view and training on the seeds its
+/// partition owns — the full distributed pipeline with **no rank ever
+/// holding the unpartitioned feature matrix in memory** (feature rows
+/// are demand-paged; adjacency shards, compact next to features, are
+/// loaded at mount — see the ROADMAP's demand-paged-adjacency
+/// follow-up). Aggregates every rank's traffic row into a
+/// [`crate::dist::TrafficMatrix`] alongside the per-rank cache and
+/// disk-I/O ledgers.
+pub fn multi_rank_epoch_mounted(
+    bundle: &crate::persist::Bundle,
+    ranks: usize,
+    cfg: &LoaderConfig,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+    epochs: u64,
+) -> Result<MountedMultiRankReport> {
+    use crate::error::Error;
+    use crate::storage::DEFAULT_GROUP;
+
+    if bundle.is_typed() {
+        return Err(Error::Config(
+            "multi-rank mounted simulation covers homogeneous bundles only; \
+             run typed bundles one rank at a time (hetero_mounted_loader / --rank R)"
+                .into(),
+        ));
+    }
+    let parts = bundle.num_parts();
+    if ranks == 0 || ranks > parts {
+        return Err(Error::Config(format!(
+            "{ranks} ranks over {parts} partitions (need 1..=num_parts)"
+        )));
+    }
+    let assignment = bundle.load_assignment(DEFAULT_GROUP)?;
+    let mut matrix = crate::dist::TrafficMatrix::new(ranks, parts);
+    let mut halo = Vec::with_capacity(ranks);
+    let mut row_cache = Vec::with_capacity(ranks);
+    let mut disk_reads = Vec::with_capacity(ranks);
+    let mut rank_seconds = Vec::with_capacity(ranks);
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    for rank in 0..ranks as u32 {
+        let seeds: Vec<u32> = assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == rank)
+            .map(|(v, _)| v as u32)
+            .collect();
+        let loader = mounted_loader(bundle, rank, seeds, cfg.clone(), opts, lru)?;
+        let t_rank = Instant::now();
+        for epoch in 0..epochs {
+            for batch in loader.iter_epoch(epoch) {
+                let b = batch?;
+                batches += 1;
+                sampled_nodes += b.num_real_nodes();
+            }
+        }
+        rank_seconds.push(t_rank.elapsed().as_secs_f64());
+        matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
+        halo.push(loader.cache_stats());
+        row_cache.push(loader.features().row_cache_stats().expect("mounted store"));
+        disk_reads.push(loader.features().disk_reads().expect("mounted store"));
+    }
+    Ok(MountedMultiRankReport {
+        matrix,
+        halo,
+        row_cache,
+        disk_reads,
+        rank_seconds,
+        batches,
+        sampled_nodes,
+    })
+}
+
 /// Result of a [`multi_rank_epoch_hetero`] simulation: the combined
 /// `rank × partition` traffic matrix, its per-node-type breakdown, the
 /// per-edge-type message counts summed over ranks, per-`(rank, type)`

@@ -57,6 +57,10 @@ struct TypeShards {
     router: Arc<PartitionRouter>,
     /// Optional halo replica filtering this type's remote path.
     halo_cache: Option<Arc<HaloCache>>,
+    /// Mounted stores only: the raw per-partition shard files, for
+    /// cache/latency/counter-free construction-time reads
+    /// ([`RawMountedReader`]).
+    raw_files: Option<Vec<Arc<crate::storage::FileFeatureStore>>>,
 }
 
 impl TypeShards {
@@ -138,7 +142,90 @@ impl TypeShards {
             local_row,
             router,
             halo_cache: None,
+            raw_files: None,
         }
+    }
+
+    /// One node type's disk-backed shard family (the mount path): the
+    /// shards are [`crate::persist::PagedFeatureStore`]s over the
+    /// bundle's `.pygf` files, validated against the router's ownership
+    /// — every group of shard `p` must hold exactly one row per node
+    /// partition `p` owns.
+    fn mount(
+        bundle: &crate::persist::Bundle,
+        node_type: &str,
+        type_index: usize,
+        router: Arc<PartitionRouter>,
+        cache: &Arc<crate::persist::RowCache>,
+        files: &mut Vec<Arc<crate::storage::FileFeatureStore>>,
+    ) -> Result<Self> {
+        let (owned, local_row) = Self::ownership(&router);
+        let mut shards: Vec<Arc<dyn FeatureStore>> = Vec::with_capacity(router.num_parts());
+        let mut type_files = Vec::with_capacity(router.num_parts());
+        // Every shard of the type must expose the same groups with the
+        // same feature dims as shard 0 — a stamped, row-aligned shard
+        // with a different width would otherwise be read wrongly by
+        // width-trusting consumers.
+        let mut schema: Option<BTreeMap<FeatureKey, usize>> = None;
+        for (p, idx) in owned.iter().enumerate() {
+            let path = bundle.feature_shard_path(node_type, p)?;
+            let file = Arc::new(crate::storage::FileFeatureStore::open(&path)?);
+            // The shard's identity stamp must say it really is
+            // (node_type, partition) — a tampered manifest pointing at a
+            // different (shape-compatible) shard file is caught here.
+            let stamp_key =
+                FeatureKey::new(node_type, crate::persist::bundle::STAMP_ATTR);
+            let mut stamp = [0.0f32; 2];
+            file.read_row_into(&stamp_key, 0, &mut stamp)?;
+            if stamp != [type_index as f32, p as f32] {
+                return Err(Error::Storage(format!(
+                    "feature shard {} is stamped (type {}, partition {}), expected \
+                     ({node_type} = type {type_index}, partition {p})",
+                    path.display(),
+                    stamp[0],
+                    stamp[1]
+                )));
+            }
+            let mut this_schema = BTreeMap::new();
+            for key in file.keys() {
+                if key.attr.starts_with("__") {
+                    continue; // bundle-internal metadata, not node-aligned
+                }
+                let rows = file.num_rows(&key)?;
+                if rows != idx.len() {
+                    return Err(Error::Storage(format!(
+                        "shard ({node_type}, {p}) group {key:?} holds {rows} rows, \
+                         partition owns {}",
+                        idx.len()
+                    )));
+                }
+                this_schema.insert(key.clone(), file.feature_dim(&key)?);
+            }
+            match &schema {
+                None => schema = Some(this_schema),
+                Some(expect) if *expect != this_schema => {
+                    return Err(Error::Storage(format!(
+                        "shard ({node_type}, {p}) groups/dims disagree with shard 0: \
+                         {this_schema:?} vs {expect:?}"
+                    )));
+                }
+                Some(_) => {}
+            }
+            files.push(Arc::clone(&file));
+            type_files.push(Arc::clone(&file));
+            shards.push(Arc::new(crate::persist::PagedFeatureStore::new(
+                file,
+                Arc::clone(cache),
+                (type_index * router.num_parts() + p) as u32,
+            )?));
+        }
+        Ok(Self {
+            shards,
+            local_row,
+            router,
+            halo_cache: None,
+            raw_files: Some(type_files),
+        })
     }
 
     fn install_cache(&mut self, cache: Arc<HaloCache>) -> Result<()> {
@@ -183,6 +270,15 @@ pub struct PartitionedFeatureStore {
     /// Optional async fetch service for the remaining remote plans
     /// (shared across node types).
     async_router: Option<Arc<AsyncRouter>>,
+    /// Present on mounted (out-of-core) stores: the shared bounded row
+    /// cache and the raw shard files (for disk-read accounting).
+    mounted: Option<MountedState>,
+}
+
+/// The disk-side state of a mounted store.
+struct MountedState {
+    cache: Arc<crate::persist::RowCache>,
+    files: Vec<Arc<crate::storage::FileFeatureStore>>,
 }
 
 impl PartitionedFeatureStore {
@@ -199,6 +295,7 @@ impl PartitionedFeatureStore {
             types,
             latency: Duration::ZERO,
             async_router: None,
+            mounted: None,
         })
     }
 
@@ -224,7 +321,118 @@ impl PartitionedFeatureStore {
             types,
             latency: Duration::ZERO,
             async_router: None,
+            mounted: None,
         })
+    }
+
+    /// Mount a [`crate::persist::Bundle`]'s feature shards from disk,
+    /// viewed from `local_rank`: every `(node_type, partition)` shard is
+    /// a [`crate::persist::PagedFeatureStore`] over its `.pygf` file, so
+    /// `get` keeps O(batch) memory no matter how large the graph is,
+    /// with the hottest rows held by a bounded LRU
+    /// ([`crate::persist::RowCache`], budget from `lru`) shared across
+    /// all shards of the mount.
+    pub fn mount(
+        bundle: &crate::persist::Bundle,
+        local_rank: u32,
+        lru: crate::persist::LruConfig,
+    ) -> Result<Self> {
+        let mut routers = BTreeMap::new();
+        for nt in &bundle.manifest().node_types {
+            routers.insert(
+                nt.name.clone(),
+                Arc::new(PartitionRouter::from_assignment(
+                    Arc::new(bundle.load_assignment(&nt.name)?),
+                    bundle.num_parts(),
+                    local_rank,
+                )?),
+            );
+        }
+        Self::mount_with_router(bundle, TypedRouter::from_routers(routers)?, lru)
+    }
+
+    /// [`PartitionedFeatureStore::mount`] sharing an existing
+    /// [`TypedRouter`] — how [`crate::coordinator::mounted_loader`]
+    /// wires the feature store onto the mounted graph store's routers so
+    /// one pipeline accounts all traffic on one ledger.
+    pub fn mount_with_router(
+        bundle: &crate::persist::Bundle,
+        router: TypedRouter,
+        lru: crate::persist::LruConfig,
+    ) -> Result<Self> {
+        let m = bundle.manifest();
+        if router.num_parts() != m.num_parts {
+            return Err(Error::Storage(format!(
+                "router views {} partitions, bundle has {}",
+                router.num_parts(),
+                m.num_parts
+            )));
+        }
+        let cache = Arc::new(crate::persist::RowCache::new(lru));
+        let mut files = Vec::new();
+        let mut types = BTreeMap::new();
+        for (ti, nt) in m.node_types.iter().enumerate() {
+            let r = Arc::clone(router.router(&nt.name)?);
+            if r.num_nodes() != nt.num_nodes {
+                return Err(Error::Storage(format!(
+                    "router covers {} {} nodes, bundle has {}",
+                    r.num_nodes(),
+                    nt.name,
+                    nt.num_nodes
+                )));
+            }
+            let shards = TypeShards::mount(bundle, &nt.name, ti, r, &cache, &mut files)?;
+            types.insert(nt.name.clone(), shards);
+        }
+        Ok(Self {
+            router,
+            types,
+            latency: Duration::ZERO,
+            async_router: None,
+            mounted: Some(MountedState { cache, files }),
+        })
+    }
+
+    /// The bounded row cache of a mounted store (`None` on in-memory
+    /// stores).
+    pub fn row_cache(&self) -> Option<&Arc<crate::persist::RowCache>> {
+        self.mounted.as_ref().map(|m| &m.cache)
+    }
+
+    /// Hit/miss/evict/byte counters of the mounted row cache.
+    pub fn row_cache_stats(&self) -> Option<crate::persist::RowCacheStats> {
+        self.mounted.as_ref().map(|m| m.cache.stats())
+    }
+
+    /// Positioned disk reads issued so far across every mounted shard
+    /// file (`None` on in-memory stores).
+    pub fn disk_reads(&self) -> Option<u64> {
+        self.mounted
+            .as_ref()
+            .map(|m| m.files.iter().map(|f| f.disk_reads()).sum())
+    }
+
+    /// Zero the mounted I/O counters — row-cache stats and per-shard
+    /// disk reads — without dropping cached rows (benches measure
+    /// cold-vs-warm phases).
+    pub fn reset_io_stats(&self) {
+        if let Some(m) = &self.mounted {
+            m.cache.reset_stats();
+            for f in &m.files {
+                f.reset_disk_reads();
+            }
+        }
+    }
+
+    /// A cache/latency/counter-free view of a mounted store (`None` on
+    /// in-memory stores): reads go straight to the owning shard file by
+    /// type-global id. Construction-time machinery — the halo replica
+    /// is built through this so its one-shot reads neither pollute the
+    /// bounded row cache with rows the replica will intercept forever
+    /// after, nor pay simulated RPC latency, nor count as traffic.
+    pub(crate) fn raw_reader(&self) -> Option<RawMountedReader<'_>> {
+        self.mounted.as_ref()?;
+        Some(RawMountedReader { store: self })
     }
 
     /// Self-contained constructor used by benches and quick experiments:
@@ -446,6 +654,72 @@ impl PartitionedFeatureStore {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+}
+
+/// See [`PartitionedFeatureStore::raw_reader`]. Implements
+/// [`FeatureStore`] so [`HaloCache::build`] can consume it directly;
+/// the rows it returns are byte-identical to routed fetches (same
+/// shard files), just without the cache/latency/counter side effects.
+pub(crate) struct RawMountedReader<'a> {
+    store: &'a PartitionedFeatureStore,
+}
+
+impl RawMountedReader<'_> {
+    fn type_state(&self, key: &FeatureKey) -> Result<&TypeShards> {
+        self.store.type_state(key)
+    }
+}
+
+impl FeatureStore for RawMountedReader<'_> {
+    fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor> {
+        let ts = self.type_state(key)?;
+        let files = ts
+            .raw_files
+            .as_ref()
+            .ok_or_else(|| Error::Storage("raw reads need a mounted store".into()))?;
+        let cols = files[0].feature_dim(key)?;
+        let mut out = Tensor::zeros(vec![idx.len(), cols]);
+        // Route by owner, then coalesce shard-contiguous runs into
+        // single positioned reads — halo node lists arrive ascending,
+        // and owned rows are laid out ascending per shard, so boundary
+        // regions collapse into few syscalls.
+        let buckets = ts.router.group_positions_by_owner(idx)?;
+        for (p, positions) in buckets.iter().enumerate() {
+            let mut k = 0usize;
+            while k < positions.len() {
+                let start = ts.local_row[idx[positions[k]]] as usize;
+                let mut run = 1usize;
+                while k + run < positions.len()
+                    && ts.local_row[idx[positions[k + run]]] as usize == start + run
+                {
+                    run += 1;
+                }
+                let mut buf = vec![0.0f32; run * cols];
+                files[p].read_rows_into(key, start, &mut buf)?;
+                for j in 0..run {
+                    out.row_mut(positions[k + j])
+                        .copy_from_slice(&buf[j * cols..(j + 1) * cols]);
+                }
+                k += run;
+            }
+        }
+        Ok(out)
+    }
+
+    fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
+        self.store.feature_dim(key)
+    }
+
+    fn num_rows(&self, key: &FeatureKey) -> Result<usize> {
+        self.store.num_rows(key)
+    }
+
+    fn keys(&self) -> Vec<FeatureKey> {
+        // Delegates to the paged shards, which hide bundle-internal
+        // `__`-prefixed groups — exactly the node-aligned key set a
+        // halo replica should cover.
+        self.store.keys()
     }
 }
 

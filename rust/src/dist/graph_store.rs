@@ -204,6 +204,145 @@ impl EdgeShards {
         self.remote_rows.store(0, Ordering::Relaxed);
     }
 
+    /// The per-partition `(csc, csr)` halves, in partition order — what
+    /// the [`crate::persist`] bundle writer serializes shard for shard.
+    pub(crate) fn shard_views(&self) -> Vec<(&Compressed, &Compressed)> {
+        self.shards.iter().map(|s| (&s.csc, &s.csr)).collect()
+    }
+
+    /// `(n_src, n_dst)` of this edge type's id spaces.
+    pub(crate) fn dims(&self) -> (usize, usize) {
+        (self.n_src, self.n_dst)
+    }
+
+    /// Edge timestamps in global edge-id order, if present.
+    pub(crate) fn edge_time_slice(&self) -> Option<&[i64]> {
+        self.edge_time.as_ref().map(|t| t.as_slice())
+    }
+
+    /// Rebuild from shard halves loaded off a [`crate::persist::Bundle`]
+    /// (already structurally validated by the bundle reader). The COO is
+    /// reconstructed from the in-edge shards — every edge lives in
+    /// exactly one, carrying its type-global edge id — which doubles as
+    /// an integrity check: a shard set that is not a disjoint cover of
+    /// `0..num_edges` is rejected.
+    pub(crate) fn from_mounted(
+        shards: Vec<(Compressed, Compressed)>,
+        n_src: usize,
+        n_dst: usize,
+        num_edges: usize,
+        src_router: Arc<PartitionRouter>,
+        dst_router: Arc<PartitionRouter>,
+        edge_time: Option<Arc<Vec<i64>>>,
+    ) -> Result<Self> {
+        if shards.len() != dst_router.num_parts() {
+            return Err(Error::Storage(format!(
+                "{} adjacency shards for {} partitions",
+                shards.len(),
+                dst_router.num_parts()
+            )));
+        }
+        if src_router.num_nodes() != n_src || dst_router.num_nodes() != n_dst {
+            return Err(Error::Storage(
+                "adjacency shard dimensions do not match the routers".into(),
+            ));
+        }
+        const UNSET: u32 = u32::MAX;
+        let mut src = vec![UNSET; num_edges];
+        let mut dst = vec![UNSET; num_edges];
+        for (csc, _) in &shards {
+            if csc.indptr.len() != n_dst + 1 {
+                return Err(Error::Storage("csc shard does not span the dst id space".into()));
+            }
+            for v in 0..n_dst {
+                for (s, e) in csc.neighbors(v).iter().zip(csc.edge_ids(v)) {
+                    let e = *e as usize;
+                    if src[e] != UNSET {
+                        return Err(Error::Storage(format!(
+                            "edge id {e} appears in more than one in-shard"
+                        )));
+                    }
+                    src[e] = *s;
+                    dst[e] = v as u32;
+                }
+            }
+        }
+        if src.iter().any(|&s| s == UNSET) {
+            return Err(Error::Storage(format!(
+                "adjacency shards do not cover all {num_edges} edges"
+            )));
+        }
+        // Shard contents must agree with the routers' ownership (shard
+        // `p` may only hold in-edges of destinations `p` owns and
+        // out-edges of sources `p` owns — catching a tampered manifest
+        // pointing a shard slot at another partition's structurally
+        // valid file), and the CSR halves must agree edge-for-edge with
+        // the CSC-derived COO: every out-edge entry `(v, d, e)` must be
+        // the same edge some in-shard recorded, each edge id exactly
+        // once. Bounds-valid payload corruption of either half is
+        // caught by the disagreement.
+        let mut seen_out = vec![false; num_edges];
+        for (p, (csc, csr)) in shards.iter().enumerate() {
+            if csr.indptr.len() != n_src + 1 {
+                return Err(Error::Storage("csr shard does not span the src id space".into()));
+            }
+            for v in 0..n_dst {
+                if csc.degree(v) > 0 && dst_router.owner(v as u32) != p as u32 {
+                    return Err(Error::Storage(format!(
+                        "in-shard {p} holds edges of dst {v}, owned by partition {}",
+                        dst_router.owner(v as u32)
+                    )));
+                }
+            }
+            for v in 0..n_src {
+                if csr.degree(v) > 0 && src_router.owner(v as u32) != p as u32 {
+                    return Err(Error::Storage(format!(
+                        "out-shard {p} holds edges of src {v}, owned by partition {}",
+                        src_router.owner(v as u32)
+                    )));
+                }
+                for (d, e) in csr.neighbors(v).iter().zip(csr.edge_ids(v)) {
+                    let e = *e as usize;
+                    if seen_out[e] {
+                        return Err(Error::Storage(format!(
+                            "edge id {e} appears in more than one out-shard"
+                        )));
+                    }
+                    seen_out[e] = true;
+                    if src[e] != v as u32 || dst[e] != *d {
+                        return Err(Error::Storage(format!(
+                            "out-shard {p} disagrees with the in-shards on edge {e}"
+                        )));
+                    }
+                }
+            }
+        }
+        if seen_out.iter().any(|&s| !s) {
+            return Err(Error::Storage(format!(
+                "out-shards do not cover all {num_edges} edges"
+            )));
+        }
+        let shards = shards
+            .into_iter()
+            .map(|(csc, csr)| GraphShard { csc, csr })
+            .collect::<Vec<_>>();
+        Ok(Self {
+            src_router,
+            dst_router,
+            shards,
+            src,
+            dst,
+            n_src,
+            n_dst,
+            edge_time,
+            global_csr: OnceLock::new(),
+            global_csc: OnceLock::new(),
+            local_msgs: AtomicU64::new(0),
+            remote_msgs: AtomicU64::new(0),
+            remote_rows: AtomicU64::new(0),
+        })
+    }
+
     pub fn num_edges(&self) -> usize {
         self.src.len()
     }
@@ -311,6 +450,88 @@ impl PartitionedGraphStore {
             edges.insert(et.clone(), shards);
         }
         Ok(Self { router, num_nodes, node_time, edges })
+    }
+
+    /// Mount a [`crate::persist::Bundle`]'s topology, viewed from
+    /// `local_rank`: per-type routers come from the bundle's ownership
+    /// vectors, and every `(edge_type, partition)` CSC/CSR shard is
+    /// loaded from its binary shard file — no original dataset, no
+    /// re-partitioning. Shard slices are bit-identical to what
+    /// [`PartitionedGraphStore::from_graph`] /
+    /// [`PartitionedGraphStore::from_hetero`] build in memory, so the
+    /// mounted sampler pipeline is seed-for-seed identical
+    /// (`tests/test_persist_equivalence.rs`).
+    pub fn mount(bundle: &crate::persist::Bundle, local_rank: u32) -> Result<Self> {
+        let m = bundle.manifest();
+        let mut routers = BTreeMap::new();
+        let mut num_nodes = BTreeMap::new();
+        let mut node_time = BTreeMap::new();
+        for nt in &m.node_types {
+            let assignment = bundle.load_assignment(&nt.name)?;
+            routers.insert(
+                nt.name.clone(),
+                Arc::new(PartitionRouter::from_assignment(
+                    Arc::new(assignment),
+                    m.num_parts,
+                    local_rank,
+                )?),
+            );
+            num_nodes.insert(nt.name.clone(), nt.num_nodes);
+            if let Some(t) = bundle.load_node_time(&nt.name)? {
+                node_time.insert(nt.name.clone(), Arc::new(t));
+            }
+        }
+        let router = TypedRouter::from_routers(routers)?;
+        let mut edges = BTreeMap::new();
+        for et in &m.edge_types {
+            let shards = bundle.load_adjacency(&et.ty)?;
+            let es = EdgeShards::from_mounted(
+                shards,
+                num_nodes[&et.ty.src],
+                num_nodes[&et.ty.dst],
+                et.num_edges,
+                Arc::clone(router.router(&et.ty.src)?),
+                Arc::clone(router.router(&et.ty.dst)?),
+                bundle.load_edge_time(&et.ty)?.map(Arc::new),
+            )?;
+            edges.insert(et.ty.clone(), es);
+        }
+        Ok(Self { router, num_nodes, node_time, edges })
+    }
+
+    /// The local rank's 1-hop halo of one node type, computed from the
+    /// sharded topology: distinct foreign nodes of `node_type` that are
+    /// endpoints of edges whose other endpoint the local rank owns —
+    /// sorted ascending and deduplicated (the
+    /// [`crate::dist::HaloCache`] contract). Equals
+    /// [`crate::partition::TypedPartitioning::halo_nodes`] /
+    /// [`crate::partition::Partitioning::halo_nodes`] without needing
+    /// the original graph, which is what the mounted pipeline has to
+    /// work with.
+    pub fn halo_nodes(&self, node_type: &str) -> Result<Vec<u32>> {
+        let own = self.router.router(node_type)?;
+        let rank = own.local_rank();
+        let mut in_halo = vec![false; own.num_nodes()];
+        for (et, es) in &self.edges {
+            if et.src != node_type && et.dst != node_type {
+                continue;
+            }
+            for (&s, &d) in es.src.iter().zip(&es.dst) {
+                let (os, od) = (es.src_router.owner(s), es.dst_router.owner(d));
+                if et.src == node_type && od == rank && os != rank {
+                    in_halo[s as usize] = true;
+                }
+                if et.dst == node_type && os == rank && od != rank {
+                    in_halo[d as usize] = true;
+                }
+            }
+        }
+        Ok(in_halo
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h)
+            .map(|(v, _)| v as u32)
+            .collect())
     }
 
     /// The shared per-type routing (traffic counters live here).

@@ -329,6 +329,27 @@ impl TypedRouter {
         Self { routers, num_parts, local_rank }
     }
 
+    /// Assemble from already-built per-type routers (the mount path:
+    /// ownership vectors come from a [`crate::persist::Bundle`], not a
+    /// [`TypedPartitioning`]). All routers must agree on partition count
+    /// and local rank, and at least one type must be present.
+    pub fn from_routers(routers: BTreeMap<String, Arc<PartitionRouter>>) -> Result<Self> {
+        let Some(first) = routers.values().next() else {
+            return Err(Error::Storage("typed router needs at least one node type".into()));
+        };
+        let (num_parts, local_rank) = (first.num_parts(), first.local_rank());
+        for (nt, r) in &routers {
+            if r.num_parts() != num_parts || r.local_rank() != local_rank {
+                return Err(Error::Storage(format!(
+                    "router of {nt} views rank {}/{} parts, expected {local_rank}/{num_parts}",
+                    r.local_rank(),
+                    r.num_parts()
+                )));
+            }
+        }
+        Ok(Self { routers, num_parts, local_rank })
+    }
+
     pub fn num_parts(&self) -> usize {
         self.num_parts
     }

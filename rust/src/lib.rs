@@ -7,7 +7,8 @@
 //!   [`graph::EdgeIndex`] with cached CSR/CSC, [`storage`] feature/graph
 //!   stores, multi-threaded [`sampler`]s (homogeneous / heterogeneous /
 //!   temporal / bulk), the [`loader`] pipeline with backpressure,
-//!   [`partition`]ing + [`dist`]ributed simulation, and post-processing
+//!   [`partition`]ing + [`dist`]ributed simulation with out-of-core
+//!   [`persist`] partition bundles, and post-processing
 //!   ([`explain`], [`metrics`], [`rag`]).
 //! * **Layer 2 (python/compile/model.py)** — JAX GNNs (GCN, SAGE, GIN,
 //!   GAT, EdgeCNN) AOT-lowered to HLO text artifacts.
@@ -30,6 +31,7 @@ pub mod dist;
 pub mod loader;
 pub mod nn;
 pub mod partition;
+pub mod persist;
 pub mod runtime;
 pub mod sampler;
 pub mod storage;

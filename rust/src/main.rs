@@ -100,6 +100,30 @@ fn cmd_train(args: &Args) -> pyg2::Result<()> {
 fn cmd_partition(args: &Args) -> pyg2::Result<()> {
     let nodes = args.get_usize("nodes", 5000);
     let parts = args.get_usize("parts", 4);
+
+    // Typed partitioning: the user/item/tag hetero SBM `pyg2 dist
+    // --hetero` loads, LDG-partitioned per node type and optionally
+    // materialized as a typed partition bundle.
+    if args.get_bool("hetero") {
+        use pyg2::datasets::hetero::{self, HeteroSbmConfig};
+        let g = hetero::generate(&HeteroSbmConfig {
+            num_users: nodes,
+            num_items: nodes * 2 / 3,
+            num_tags: nodes / 10,
+            seed: 0,
+            ..Default::default()
+        })?;
+        let tp = pyg2::partition::TypedPartitioning::ldg_hetero(&g, parts, 1.1)?;
+        for (et, cut) in tp.cut_edges(&g)? {
+            println!("edge type {}: {cut} cut edges", et.key());
+        }
+        if let Some(dir) = args.get("write") {
+            let bundle = pyg2::persist::write_bundle_hetero(dir, &g, &tp)?;
+            report_bundle(&bundle);
+        }
+        return Ok(());
+    }
+
     let g = sbm::generate(&SbmConfig { num_nodes: nodes, seed: 0, ..Default::default() })?;
     let p = pyg2::partition::ldg_partition(&g.edge_index, parts, 1.1)?;
     let r = pyg2::partition::random_partition(nodes, parts, 1);
@@ -114,7 +138,50 @@ fn cmd_partition(args: &Args) -> pyg2::Result<()> {
         r.edge_cut(&g.edge_index),
         r.balance()
     );
+    if let Some(dir) = args.get("write") {
+        let bundle = pyg2::persist::write_bundle(dir, &g, &p)?;
+        report_bundle(&bundle);
+    }
     Ok(())
+}
+
+/// Summarize a just-written partition bundle: per-type/per-relation
+/// shard layout plus total bytes on disk.
+fn report_bundle(bundle: &pyg2::persist::Bundle) {
+    let m = bundle.manifest();
+    println!(
+        "wrote bundle {} ({} partitions, {} node types, {} edge types)",
+        bundle.dir().display(),
+        m.num_parts,
+        m.node_types.len(),
+        m.edge_types.len()
+    );
+    for nt in &m.node_types {
+        println!("  node type {}: {} nodes, {} feature shards", nt.name, nt.num_nodes, m.num_parts);
+    }
+    for et in &m.edge_types {
+        println!(
+            "  edge type {}: {} edges, {} adjacency shards",
+            et.ty.key(),
+            et.num_edges,
+            m.num_parts
+        );
+    }
+    let mut bytes = 0u64;
+    let mut stack = vec![bundle.dir().to_path_buf()];
+    while let Some(d) = stack.pop() {
+        if let Ok(entries) = std::fs::read_dir(&d) {
+            for e in entries.flatten() {
+                let path = e.path();
+                if path.is_dir() {
+                    stack.push(path);
+                } else if let Ok(meta) = e.metadata() {
+                    bytes += meta.len();
+                }
+            }
+        }
+    }
+    println!("  {bytes} bytes on disk");
 }
 
 fn cmd_dist(args: &Args) -> pyg2::Result<()> {
@@ -129,6 +196,9 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
         async_workers: args.get_usize("async-workers", 0),
         latency: std::time::Duration::from_micros(args.get_usize("latency-us", 0) as u64),
     };
+    if let Some(dir) = args.get("mount") {
+        return cmd_dist_mounted(args, dir, batch, workers, epochs, opts);
+    }
     if args.get_bool("hetero") {
         return cmd_dist_hetero(args, parts, batch, workers, epochs, opts);
     }
@@ -205,6 +275,156 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
     println!("cross-partition traffic: {stats}");
     if let Some(cache) = loader.cache_stats() {
         println!("halo cache: {cache}");
+    }
+    Ok(())
+}
+
+/// The out-of-core distributed pipeline (`pyg2 dist --mount DIR`): run
+/// the loader over a partition bundle written by `pyg2 partition
+/// --write DIR`, with the topology served from binary adjacency shards
+/// and feature rows demand-paged from disk through the bounded LRU —
+/// the original dataset is never reloaded. Typed bundles route through
+/// the hetero loader automatically; `--ranks N` runs the multi-rank
+/// simulation over homogeneous bundles.
+fn cmd_dist_mounted(
+    args: &Args,
+    dir: &str,
+    batch: usize,
+    workers: usize,
+    epochs: usize,
+    opts: pyg2::coordinator::DistOptions,
+) -> pyg2::Result<()> {
+    let bundle = pyg2::persist::Bundle::open(dir)?;
+    let rank = args.get_usize("rank", 0) as u32;
+    let lru = pyg2::persist::LruConfig {
+        capacity_bytes: args.get_usize("cache-mb", 64) as u64 * 1024 * 1024,
+    };
+    log::info!(
+        "mounted bundle {dir}: {} partitions, {} node types, {} edge types, \
+         row-cache budget {} bytes",
+        bundle.num_parts(),
+        bundle.manifest().node_types.len(),
+        bundle.manifest().edge_types.len(),
+        lru.capacity_bytes
+    );
+
+    if let Some(ranks) = args.get("ranks") {
+        let ranks: usize = ranks
+            .parse()
+            .map_err(|_| pyg2::error::Error::Config(format!("bad --ranks {ranks}")))?;
+        let cfg = pyg2::loader::LoaderConfig {
+            batch_size: batch,
+            num_workers: workers,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let report = pyg2::coordinator::multi_rank_epoch_mounted(
+            &bundle,
+            ranks,
+            &cfg,
+            opts,
+            lru,
+            epochs as u64,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "mounted multi-rank dist: {} batches / {} sampled nodes in {secs:.2}s",
+            report.batches, report.sampled_nodes
+        );
+        println!("traffic matrix (msgs(payload rows) per rank -> partition):");
+        println!("{}", report.matrix);
+        println!("{}", report.skew());
+        for (r, rc) in report.row_cache.iter().enumerate() {
+            println!("rank {r} row cache: {rc}");
+            println!("rank {r} disk reads: {}", report.disk_reads[r]);
+            if let Some(h) = &report.halo[r] {
+                println!("rank {r} halo cache: {h}");
+            }
+        }
+        return Ok(());
+    }
+
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    let t0 = std::time::Instant::now();
+    if bundle.is_typed() {
+        let seed_type = match args.get("seed-type") {
+            Some(st) => st.to_string(),
+            None => bundle.manifest().node_types[0].name.clone(),
+        };
+        let seeds: Vec<u32> = (0..bundle.node_type(&seed_type)?.num_nodes as u32).collect();
+        let cfg = pyg2::loader::HeteroLoaderConfig {
+            batch_size: batch,
+            num_workers: workers,
+            ..Default::default()
+        };
+        let loader = pyg2::coordinator::hetero_mounted_loader(
+            &bundle, rank, &seed_type, seeds, cfg, opts, lru,
+        )?;
+        for epoch in 0..epochs {
+            for b in loader.iter_epoch(epoch as u64) {
+                let b = b?;
+                batches += 1;
+                sampled_nodes += b.total_nodes();
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "mounted hetero dist: {batches} batches / {sampled_nodes} sampled nodes \
+             in {secs:.2}s ({:.0} nodes/s)",
+            sampled_nodes as f64 / secs
+        );
+        println!("cross-partition traffic: {}", loader.router_stats());
+        for (et, stats) in loader.edge_traffic() {
+            println!("edge type {}: {stats}", et.key());
+        }
+        for (nt, stats) in loader.cache_stats() {
+            println!("{nt} halo cache: {stats}");
+        }
+        if let Some(rc) = loader.features().row_cache_stats() {
+            println!("row cache: {rc}");
+        }
+        if let Some(reads) = loader.features().disk_reads() {
+            println!("disk reads: {reads}");
+        }
+    } else {
+        let n = bundle.node_type(pyg2::storage::DEFAULT_GROUP)?.num_nodes;
+        let cfg = pyg2::loader::LoaderConfig {
+            batch_size: batch,
+            num_workers: workers,
+            ..Default::default()
+        };
+        let loader = pyg2::coordinator::mounted_loader(
+            &bundle,
+            rank,
+            (0..n as u32).collect(),
+            cfg,
+            opts,
+            lru,
+        )?;
+        for epoch in 0..epochs {
+            for b in loader.iter_epoch(epoch as u64) {
+                let b = b?;
+                batches += 1;
+                sampled_nodes += b.num_real_nodes();
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "mounted dist: {batches} batches / {sampled_nodes} sampled nodes in {secs:.2}s \
+             ({:.0} nodes/s)",
+            sampled_nodes as f64 / secs
+        );
+        println!("cross-partition traffic: {}", loader.router_stats());
+        if let Some(cache) = loader.cache_stats() {
+            println!("halo cache: {cache}");
+        }
+        if let Some(rc) = loader.features().row_cache_stats() {
+            println!("row cache: {rc}");
+        }
+        if let Some(reads) = loader.features().disk_reads() {
+            println!("disk reads: {reads}");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,656 @@
+//! Partition bundles: the on-disk layout of a partitioned graph.
+//!
+//! A bundle is a directory holding everything a rank needs to join a
+//! distributed run without reloading or re-partitioning the original
+//! dataset — feature rows stay on disk (demand-paged at mount time with
+//! O(batch) memory), adjacency travels as compact per-partition binary
+//! shards:
+//!
+//! ```text
+//! bundle/
+//!   manifest.json             format, num_parts, node/edge type metadata
+//!   nodes/<nt>.assign         per-type ownership vector (u32 per node)
+//!   nodes/<nt>.y              optional labels (i64 per node)
+//!   nodes/<nt>.time           optional node timestamps
+//!   features/<nt>.p<p>.pygf   feature shard of (node_type, partition)
+//!   adj/<et>.p<p>.pyga        CSC/CSR adjacency shard of (edge_type, partition)
+//!   adj/<et>.time             optional edge timestamps (global edge-id order)
+//! ```
+//!
+//! Feature shards reuse the positioned-I/O `.pygf` format of
+//! [`crate::storage::FileFeatureStore`]: shard `(nt, p)` holds the rows
+//! of the nodes partition `p` owns, in ascending type-global id order —
+//! exactly the layout [`crate::dist::PartitionedFeatureStore`]'s
+//! in-memory shards use, so a mounted pipeline is seed-for-seed
+//! identical to the in-memory one. Adjacency shards serialize the same
+//! per-partition CSC/CSR halves [`crate::dist::EdgeShards`] builds
+//! (in-edges with the destination's owner, out-edges with the source's,
+//! type-global ids throughout). Homogeneous graphs are the single-type
+//! special case: one `_default` node type, one edge type.
+//!
+//! Every file is validated on open — magic, exact sizes, id bounds, path
+//! safety — so corrupt bundles fail with [`Error`]s, never panics.
+
+use super::io;
+use crate::dist::{PartitionRouter, PartitionedGraphStore, TypedRouter};
+use crate::error::{Error, Result};
+use crate::graph::{EdgeType, Graph, HeteroGraph};
+use crate::partition::{Partitioning, TypedPartitioning};
+use crate::storage::{FeatureKey, FileFeatureWriter, DEFAULT_ATTR, DEFAULT_GROUP};
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const FORMAT: &str = "pyg2-partition-bundle";
+const VERSION: f64 = 1.0;
+
+/// Hidden group stamped into every feature shard: a `[1, 2]` tensor
+/// holding `(node_type_index, partition)`. The mount verifies it, so a
+/// tampered manifest cannot silently point a shard slot at another
+/// (shape-compatible) shard file. Double-underscore attrs are filtered
+/// out of [`crate::persist::PagedFeatureStore`]'s key space, so the
+/// stamp is invisible to the pipeline.
+pub(crate) const STAMP_ATTR: &str = "__bundle_shard";
+
+/// Manifest entry of one node type.
+#[derive(Clone, Debug)]
+pub struct NodeTypeMeta {
+    pub name: String,
+    pub num_nodes: usize,
+    assignment: String,
+    labels: Option<String>,
+    time: Option<String>,
+    /// One feature shard path per partition.
+    features: Vec<String>,
+}
+
+/// Manifest entry of one edge type.
+#[derive(Clone, Debug)]
+pub struct EdgeTypeMeta {
+    pub ty: EdgeType,
+    pub num_edges: usize,
+    time: Option<String>,
+    /// One adjacency shard path per partition.
+    shards: Vec<String>,
+}
+
+/// Parsed and validated `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub num_parts: usize,
+    pub node_types: Vec<NodeTypeMeta>,
+    pub edge_types: Vec<EdgeTypeMeta>,
+}
+
+/// An opened partition bundle: the manifest plus the directory the
+/// relative paths resolve against. Opening only reads the manifest —
+/// shard files are opened lazily by the mount constructors.
+pub struct Bundle {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+/// Reject absolute paths and `..` components: a manifest must not be
+/// able to read outside its bundle directory.
+fn safe_path(p: &str) -> Result<&str> {
+    let path = Path::new(p);
+    let escapes = path.is_absolute()
+        || path
+            .components()
+            .any(|c| !matches!(c, std::path::Component::Normal(_)));
+    if p.is_empty() || escapes {
+        return Err(Error::Storage(format!("manifest path {p:?} escapes the bundle")));
+    }
+    Ok(p)
+}
+
+fn req_str<'a>(v: &'a Json, field: &str) -> Result<&'a str> {
+    v.get(field)
+        .and_then(|f| f.as_str())
+        .ok_or_else(|| Error::Storage(format!("manifest missing string field {field}")))
+}
+
+/// Required size field (shared strict validation: [`json::uint_field`]).
+fn req_usize(v: &Json, field: &str) -> Result<usize> {
+    json::uint_field(v, field)
+        .map(|n| n as usize)
+        .map_err(|e| Error::Storage(format!("manifest: {e}")))
+}
+
+fn opt_path(v: &Json, field: &str) -> Result<Option<String>> {
+    match v.get(field) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(safe_path(s)?.to_string())),
+        Some(other) => Err(Error::Storage(format!(
+            "manifest field {field} is not a path: {other:?}"
+        ))),
+    }
+}
+
+/// Strict-schema check: a manifest object carrying a key outside its
+/// schema is treated as corrupt (a bit flip in a key name must not
+/// silently drop the field it renamed).
+fn check_keys(v: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| Error::Storage(format!("manifest {what} entry is not an object")))?;
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(Error::Storage(format!("unknown manifest {what} field {k}")));
+        }
+    }
+    Ok(())
+}
+
+fn path_list(v: &Json, field: &str, expect: usize) -> Result<Vec<String>> {
+    let arr = v
+        .get(field)
+        .and_then(|f| f.as_arr())
+        .ok_or_else(|| Error::Storage(format!("manifest missing path list {field}")))?;
+    if arr.len() != expect {
+        return Err(Error::Storage(format!(
+            "manifest lists {} {field} shards, bundle has {expect} partitions",
+            arr.len()
+        )));
+    }
+    arr.iter()
+        .map(|p| {
+            p.as_str()
+                .ok_or_else(|| Error::Storage(format!("non-string path in {field}")))
+                .and_then(|s| safe_path(s).map(str::to_string))
+        })
+        .collect()
+}
+
+impl Bundle {
+    /// Open a bundle directory: parse and validate its manifest.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Storage(format!("{}: cannot read manifest.json: {e}", dir.display()))
+        })?;
+        let doc = json::parse(&text)
+            .map_err(|e| Error::Storage(format!("{}: bad manifest json: {e}", dir.display())))?;
+        check_keys(
+            &doc,
+            &["format", "version", "num_parts", "node_types", "edge_types"],
+            "top-level",
+        )?;
+        if req_str(&doc, "format")? != FORMAT {
+            return Err(Error::Storage(format!("{} is not a partition bundle", dir.display())));
+        }
+        if doc.get("version").and_then(|v| v.as_f64()) != Some(VERSION) {
+            return Err(Error::Storage("unsupported bundle version".into()));
+        }
+        let num_parts = req_usize(&doc, "num_parts")?;
+        if num_parts == 0 {
+            return Err(Error::Storage("bundle needs at least one partition".into()));
+        }
+
+        let mut node_types = Vec::new();
+        let mut names = BTreeSet::new();
+        for nt in doc
+            .get("node_types")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Storage("manifest missing node_types".into()))?
+        {
+            check_keys(
+                nt,
+                &["name", "num_nodes", "assignment", "labels", "time", "features"],
+                "node-type",
+            )?;
+            let name = req_str(nt, "name")?.to_string();
+            if !names.insert(name.clone()) {
+                return Err(Error::Storage(format!("duplicate node type {name}")));
+            }
+            node_types.push(NodeTypeMeta {
+                num_nodes: req_usize(nt, "num_nodes")?,
+                assignment: safe_path(req_str(nt, "assignment")?)?.to_string(),
+                labels: opt_path(nt, "labels")?,
+                time: opt_path(nt, "time")?,
+                features: path_list(nt, "features", num_parts)?,
+                name,
+            });
+        }
+        if node_types.is_empty() {
+            return Err(Error::Storage("bundle has no node types".into()));
+        }
+
+        let mut edge_types = Vec::new();
+        let mut edge_keys = BTreeSet::new();
+        for et in doc
+            .get("edge_types")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Storage("manifest missing edge_types".into()))?
+        {
+            check_keys(
+                et,
+                &["src", "rel", "dst", "num_edges", "time", "shards"],
+                "edge-type",
+            )?;
+            let ty = EdgeType::new(req_str(et, "src")?, req_str(et, "rel")?, req_str(et, "dst")?);
+            for endpoint in [&ty.src, &ty.dst] {
+                if !names.contains(endpoint) {
+                    return Err(Error::Storage(format!(
+                        "edge type {} references unknown node type {endpoint}",
+                        ty.key()
+                    )));
+                }
+            }
+            if !edge_keys.insert(ty.key()) {
+                return Err(Error::Storage(format!("duplicate edge type {}", ty.key())));
+            }
+            edge_types.push(EdgeTypeMeta {
+                num_edges: req_usize(et, "num_edges")?,
+                time: opt_path(et, "time")?,
+                shards: path_list(et, "shards", num_parts)?,
+                ty,
+            });
+        }
+
+        Ok(Self { dir, manifest: Manifest { num_parts, node_types, edge_types } })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.manifest.num_parts
+    }
+
+    /// Whether this is a typed (heterogeneous) bundle rather than the
+    /// single-`_default`-type homogeneous special case.
+    pub fn is_typed(&self) -> bool {
+        self.manifest.node_types.len() != 1 || self.manifest.node_types[0].name != DEFAULT_GROUP
+    }
+
+    pub fn node_type(&self, name: &str) -> Result<&NodeTypeMeta> {
+        self.manifest
+            .node_types
+            .iter()
+            .find(|nt| nt.name == name)
+            .ok_or_else(|| Error::Storage(format!("bundle has no node type {name}")))
+    }
+
+    pub fn edge_type(&self, ty: &EdgeType) -> Result<&EdgeTypeMeta> {
+        self.manifest
+            .edge_types
+            .iter()
+            .find(|et| &et.ty == ty)
+            .ok_or_else(|| Error::Storage(format!("bundle has no edge type {}", ty.key())))
+    }
+
+    /// The ownership vector of one node type, validated against the
+    /// manifest's node count and partition count.
+    pub fn load_assignment(&self, node_type: &str) -> Result<Vec<u32>> {
+        let meta = self.node_type(node_type)?;
+        let assignment = io::read_u32_array(&self.dir.join(&meta.assignment))?;
+        if assignment.len() != meta.num_nodes {
+            return Err(Error::Storage(format!(
+                "{node_type} assignment covers {} nodes, manifest says {}",
+                assignment.len(),
+                meta.num_nodes
+            )));
+        }
+        if let Some(&bad) = assignment.iter().find(|&&p| p as usize >= self.manifest.num_parts) {
+            return Err(Error::Storage(format!(
+                "{node_type} assignment references partition {bad} of {}",
+                self.manifest.num_parts
+            )));
+        }
+        Ok(assignment)
+    }
+
+    /// Labels of one node type, if the bundle carries them.
+    pub fn load_labels(&self, node_type: &str) -> Result<Option<Vec<i64>>> {
+        let meta = self.node_type(node_type)?;
+        self.load_aligned_i64(meta.labels.as_deref(), meta.num_nodes, "labels")
+    }
+
+    /// Node timestamps of one node type, if present.
+    pub fn load_node_time(&self, node_type: &str) -> Result<Option<Vec<i64>>> {
+        let meta = self.node_type(node_type)?;
+        self.load_aligned_i64(meta.time.as_deref(), meta.num_nodes, "node time")
+    }
+
+    /// Edge timestamps of one edge type (global edge-id order), if
+    /// present.
+    pub fn load_edge_time(&self, ty: &EdgeType) -> Result<Option<Vec<i64>>> {
+        let meta = self.edge_type(ty)?;
+        self.load_aligned_i64(meta.time.as_deref(), meta.num_edges, "edge time")
+    }
+
+    fn load_aligned_i64(
+        &self,
+        path: Option<&str>,
+        expect: usize,
+        what: &str,
+    ) -> Result<Option<Vec<i64>>> {
+        let Some(path) = path else { return Ok(None) };
+        let data = io::read_i64_array(&self.dir.join(path))?;
+        if data.len() != expect {
+            return Err(Error::Storage(format!(
+                "{what} file holds {} entries, expected {expect}",
+                data.len()
+            )));
+        }
+        Ok(Some(data))
+    }
+
+    /// Load and validate every partition's adjacency shard of one edge
+    /// type: `(csc, csr)` per partition, in partition order.
+    pub fn load_adjacency(
+        &self,
+        ty: &EdgeType,
+    ) -> Result<Vec<(crate::graph::Compressed, crate::graph::Compressed)>> {
+        let meta = self.edge_type(ty)?;
+        let n_src = self.node_type(&ty.src)?.num_nodes;
+        let n_dst = self.node_type(&ty.dst)?.num_nodes;
+        meta.shards
+            .iter()
+            .map(|p| io::read_adjacency_shard(&self.dir.join(p), n_src, n_dst, meta.num_edges))
+            .collect()
+    }
+
+    /// Path of the feature shard of `(node_type, partition)`.
+    pub fn feature_shard_path(&self, node_type: &str, part: usize) -> Result<PathBuf> {
+        let meta = self.node_type(node_type)?;
+        let rel = meta.features.get(part).ok_or_else(|| {
+            Error::Storage(format!("partition {part} out of {}", self.manifest.num_parts))
+        })?;
+        Ok(self.dir.join(rel))
+    }
+}
+
+/// File-name-safe rendering of a type name.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_') { c } else { '_' })
+        .collect()
+}
+
+/// Everything the writer needs about one node type.
+struct NodeSpec<'a> {
+    name: &'a str,
+    x: &'a Tensor,
+    y: Option<&'a [i64]>,
+    time: Option<&'a [i64]>,
+    assignment: &'a [u32],
+}
+
+/// Write a homogeneous graph as a partition bundle (the single-type
+/// special case: node type `_default`, the default edge type). Returns
+/// the re-opened bundle so callers can mount what was just written.
+pub fn write_bundle(
+    dir: impl AsRef<Path>,
+    g: &Graph,
+    partitioning: &Partitioning,
+) -> Result<Bundle> {
+    if partitioning.assignment.len() != g.num_nodes() {
+        return Err(Error::Storage(format!(
+            "partitioning covers {} nodes, graph has {}",
+            partitioning.assignment.len(),
+            g.num_nodes()
+        )));
+    }
+    let router = Arc::new(PartitionRouter::new(partitioning, 0)?);
+    let gs = PartitionedGraphStore::from_graph(g, router)?;
+    let specs = [NodeSpec {
+        name: DEFAULT_GROUP,
+        x: &g.x,
+        y: g.y.as_deref(),
+        time: g.node_time.as_deref(),
+        assignment: &partitioning.assignment,
+    }];
+    write_impl(dir.as_ref(), partitioning.num_parts, &specs, &gs)
+}
+
+/// Write a heterogeneous graph as a typed partition bundle: feature
+/// shards keyed `(node_type, partition)`, adjacency shards
+/// `(edge_type, partition)`, per-type ownership vectors.
+pub fn write_bundle_hetero(
+    dir: impl AsRef<Path>,
+    g: &HeteroGraph,
+    partitioning: &TypedPartitioning,
+) -> Result<Bundle> {
+    let router = TypedRouter::new(partitioning, 0)?;
+    let gs = PartitionedGraphStore::from_hetero(g, router)?;
+    let mut specs = Vec::new();
+    for nt in g.node_types() {
+        let store = g.node_store(nt)?;
+        specs.push(NodeSpec {
+            name: nt,
+            x: &store.x,
+            y: store.y.as_deref(),
+            time: store.time.as_deref(),
+            assignment: &partitioning.partitioning(nt)?.assignment,
+        });
+    }
+    write_impl(dir.as_ref(), partitioning.num_parts, &specs, &gs)
+}
+
+fn write_impl(
+    dir: &Path,
+    num_parts: usize,
+    specs: &[NodeSpec<'_>],
+    gs: &PartitionedGraphStore,
+) -> Result<Bundle> {
+    // Re-writing over an existing bundle must not leave stale shards
+    // from a previous (e.g. wider) partitioning mixed into the
+    // directory. Only directories that actually hold a bundle (a
+    // manifest is present) are cleared.
+    if dir.join("manifest.json").exists() {
+        for sub in ["nodes", "features", "adj"] {
+            let _ = std::fs::remove_dir_all(dir.join(sub));
+        }
+        std::fs::remove_file(dir.join("manifest.json"))?;
+    }
+    for sub in ["nodes", "features", "adj"] {
+        std::fs::create_dir_all(dir.join(sub))?;
+    }
+
+    let mut node_metas = Vec::new();
+    for (ti, spec) in specs.iter().enumerate() {
+        // Index-prefixed stems keep files distinct even when two type
+        // names sanitize to the same string.
+        let stem = format!("{ti}_{}", sanitize(spec.name));
+        let assign_rel = format!("nodes/{stem}.assign");
+        io::write_u32_array(&dir.join(&assign_rel), spec.assignment)?;
+        let labels_rel = match spec.y {
+            Some(y) => {
+                let rel = format!("nodes/{stem}.y");
+                io::write_i64_array(&dir.join(&rel), y)?;
+                Some(rel)
+            }
+            None => None,
+        };
+        let time_rel = match spec.time {
+            Some(t) => {
+                let rel = format!("nodes/{stem}.time");
+                io::write_i64_array(&dir.join(&rel), t)?;
+                Some(rel)
+            }
+            None => None,
+        };
+        // One feature shard per partition: the owned rows, ascending by
+        // type-global id — the exact layout the in-memory partitioned
+        // store shards into, so a mount reproduces it bit for bit.
+        // (Single bucketing pass; the assignment was validated against
+        // num_parts when the graph store's routers were built.)
+        let mut owned: Vec<Vec<usize>> = vec![Vec::new(); num_parts];
+        for (v, &a) in spec.assignment.iter().enumerate() {
+            owned[a as usize].push(v);
+        }
+        let mut feature_rels = Vec::with_capacity(num_parts);
+        for (p, idx) in owned.iter().enumerate() {
+            let rel = format!("features/{stem}.p{p}.pygf");
+            let mut w = FileFeatureWriter::new(dir.join(&rel));
+            w.put(FeatureKey::new(spec.name, DEFAULT_ATTR), spec.x.gather_rows(idx)?);
+            // Shard identity stamp (see [`STAMP_ATTR`]): which
+            // (node_type, partition) this file is, verified at mount.
+            w.put(
+                FeatureKey::new(spec.name, STAMP_ATTR),
+                Tensor::new(vec![1, 2], vec![ti as f32, p as f32])?,
+            );
+            w.finish()?;
+            feature_rels.push(rel);
+        }
+        node_metas.push(Json::obj(vec![
+            ("name", Json::str(spec.name)),
+            ("num_nodes", Json::num(spec.assignment.len() as f64)),
+            ("assignment", Json::str(assign_rel)),
+            ("labels", labels_rel.map(Json::str).unwrap_or(Json::Null)),
+            ("time", time_rel.map(Json::str).unwrap_or(Json::Null)),
+            (
+                "features",
+                Json::Arr(feature_rels.into_iter().map(Json::str).collect()),
+            ),
+        ]));
+    }
+
+    let mut edge_metas = Vec::new();
+    for (ei, ty) in crate::storage::GraphStore::edge_types(gs).iter().enumerate() {
+        let es = gs.edges_of(ty)?;
+        let (n_src, n_dst) = es.dims();
+        let stem = format!(
+            "{ei}_{}__{}__{}",
+            sanitize(&ty.src),
+            sanitize(&ty.rel),
+            sanitize(&ty.dst)
+        );
+        let mut shard_rels = Vec::with_capacity(num_parts);
+        for (p, (csc, csr)) in es.shard_views().into_iter().enumerate() {
+            let rel = format!("adj/{stem}.p{p}.pyga");
+            io::write_adjacency_shard(&dir.join(&rel), n_src, n_dst, csc, csr)?;
+            shard_rels.push(rel);
+        }
+        let time_rel = match es.edge_time_slice() {
+            Some(t) => {
+                let rel = format!("adj/{stem}.time");
+                io::write_i64_array(&dir.join(&rel), t)?;
+                Some(rel)
+            }
+            None => None,
+        };
+        edge_metas.push(Json::obj(vec![
+            ("src", Json::str(ty.src.clone())),
+            ("rel", Json::str(ty.rel.clone())),
+            ("dst", Json::str(ty.dst.clone())),
+            ("num_edges", Json::num(es.num_edges() as f64)),
+            ("time", time_rel.map(Json::str).unwrap_or(Json::Null)),
+            ("shards", Json::Arr(shard_rels.into_iter().map(Json::str).collect())),
+        ]));
+    }
+
+    let manifest = Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("version", Json::num(VERSION)),
+        ("num_parts", Json::num(num_parts as f64)),
+        ("node_types", Json::Arr(node_metas)),
+        ("edge_types", Json::Arr(edge_metas)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Bundle::open(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::partition::ldg_partition;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pyg2_bundle_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn toy_bundle(name: &str) -> (Graph, Partitioning, Bundle) {
+        let g = sbm::generate(&SbmConfig { num_nodes: 120, seed: 3, ..Default::default() })
+            .unwrap();
+        let p = ldg_partition(&g.edge_index, 3, 1.1).unwrap();
+        let bundle = write_bundle(tmp(name), &g, &p).unwrap();
+        (g, p, bundle)
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_validates() {
+        let (g, p, bundle) = toy_bundle("roundtrip");
+        assert_eq!(bundle.num_parts(), 3);
+        assert!(!bundle.is_typed());
+        let m = bundle.manifest();
+        assert_eq!(m.node_types.len(), 1);
+        assert_eq!(m.node_types[0].num_nodes, 120);
+        assert_eq!(m.edge_types.len(), 1);
+        assert_eq!(m.edge_types[0].num_edges, g.num_edges());
+        assert_eq!(bundle.load_assignment(DEFAULT_GROUP).unwrap(), p.assignment);
+        assert_eq!(bundle.load_labels(DEFAULT_GROUP).unwrap(), g.y);
+        assert!(bundle.load_node_time(DEFAULT_GROUP).unwrap().is_none());
+        let ty = m.edge_types[0].ty.clone();
+        let shards = bundle.load_adjacency(&ty).unwrap();
+        assert_eq!(shards.len(), 3);
+        let stored: usize = shards.iter().map(|(csc, _)| csc.num_edges()).sum();
+        assert_eq!(stored, g.num_edges(), "in-shards tile the edge set");
+        assert!(bundle.node_type("ghost").is_err());
+        assert!(bundle
+            .edge_type(&EdgeType::new("a", "b", "c"))
+            .is_err());
+        assert!(bundle.feature_shard_path(DEFAULT_GROUP, 0).unwrap().exists());
+        assert!(bundle.feature_shard_path(DEFAULT_GROUP, 3).is_err());
+    }
+
+    #[test]
+    fn unsafe_manifest_paths_rejected() {
+        let (_, _, bundle) = toy_bundle("unsafe");
+        let path = bundle.dir().join("manifest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        for evil in [
+            text.replace("nodes/0__default.assign", "../outside.assign"),
+            text.replace("nodes/0__default.assign", "/etc/passwd"),
+        ] {
+            std::fs::write(&path, evil).unwrap();
+            assert!(Bundle::open(bundle.dir()).is_err());
+        }
+    }
+
+    #[test]
+    fn rewriting_a_bundle_clears_stale_shards() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 60, seed: 2, ..Default::default() })
+            .unwrap();
+        let dir = tmp("rewrite");
+        let p3 = ldg_partition(&g.edge_index, 3, 1.1).unwrap();
+        write_bundle(&dir, &g, &p3).unwrap();
+        let stale = dir.join("features/0__default.p2.pygf");
+        assert!(stale.exists());
+        let p2 = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+        let bundle = write_bundle(&dir, &g, &p2).unwrap();
+        assert_eq!(bundle.num_parts(), 2);
+        assert!(!stale.exists(), "wider-partitioning shard must be cleared");
+    }
+
+    #[test]
+    fn mismatched_partitioning_rejected_at_write() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 50, seed: 1, ..Default::default() })
+            .unwrap();
+        let p = Partitioning { assignment: vec![0; 49], num_parts: 1 };
+        assert!(write_bundle(tmp("mismatch"), &g, &p).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_and_garbage_rejected() {
+        let dir = tmp("absent");
+        assert!(Bundle::open(&dir).is_err());
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Bundle::open(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"other"}"#).unwrap();
+        assert!(Bundle::open(&dir).is_err());
+    }
+}

@@ -1,0 +1,459 @@
+//! Bounded LRU feature-row cache — the ROADMAP's "adaptive/bounded
+//! caches" item, made concrete for out-of-core mounts.
+//!
+//! A mounted [`crate::dist::PartitionedFeatureStore`] serves every shard
+//! from disk; this cache sits between the shards and their `.pygf` files
+//! and keeps the hottest rows resident under a strict **byte budget**.
+//! One cache is shared by *all* shards of a mount (the budget is
+//! per-process, like a page cache), keyed by `(shard, group, row)`.
+//! Hits copy the resident row; misses fall through to a positioned disk
+//! read and insert the row, evicting from the cold end until the budget
+//! holds again. Hit/miss/eviction/byte counters make the I/O saved and
+//! the memory spent both measurable (`bench_dist_disk`), and
+//! `tests/test_persist_equivalence.rs` pins the byte accounting under
+//! the configured budget while requiring strictly fewer disk reads on a
+//! repeated epoch.
+//!
+//! Large caches are **striped**: the budget is split across several
+//! independently locked LRU stripes (keys hashed to stripes), so
+//! concurrent loader workers do not serialize on one mutex — the same
+//! reason [`crate::storage::FileFeatureStore`] reads with lock-free
+//! `pread`. Each stripe enforces its share of the budget, so the total
+//! ceiling still holds; tiny budgets collapse to a single stripe (exact
+//! global LRU order), which is also what the unit tests pin.
+//!
+//! The cache *composes* with the [`crate::dist::HaloCache`]: halo hits
+//! never reach the shards at all; everything else — local reads and
+//! remote misses alike — pages through here.
+
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sentinel for "no slot" in the intrusive list.
+const NIL: usize = usize::MAX;
+
+/// One stripe per this many budget bytes (up to [`MAX_STRIPES`]): big
+/// caches get concurrency, tiny ones keep exact global LRU order.
+const BYTES_PER_STRIPE: u64 = 4 * 1024 * 1024;
+const MAX_STRIPES: u64 = 8;
+
+/// Tuning knob of a mounted store's row cache.
+#[derive(Clone, Copy, Debug)]
+pub struct LruConfig {
+    /// Byte budget for resident row payloads (f32 data only; the
+    /// per-entry index overhead is not charged). Rows wider than a
+    /// stripe's share of the budget are served straight from disk and
+    /// never cached.
+    pub capacity_bytes: u64,
+}
+
+impl Default for LruConfig {
+    fn default() -> Self {
+        // 64 MiB — roomy for the simulated workloads, tiny next to the
+        // graphs the out-of-core path exists for.
+        Self { capacity_bytes: 64 * 1024 * 1024 }
+    }
+}
+
+/// Snapshot of a [`RowCache`]'s counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RowCacheStats {
+    /// Row requests served from the cache (no disk read).
+    pub hits: u64,
+    /// Row requests that fell through to a disk read.
+    pub misses: u64,
+    /// Rows evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Resident payload bytes right now (summed over stripes).
+    pub bytes_cached: u64,
+    /// High-water mark since the last reset: the sum of per-stripe
+    /// peaks, an upper bound on simultaneous residency (and still below
+    /// the budget).
+    pub peak_bytes: u64,
+    /// Resident rows right now.
+    pub entries: u64,
+    /// The configured budget.
+    pub capacity_bytes: u64,
+}
+
+impl RowCacheStats {
+    pub fn total_requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of row requests served without a disk read.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total_requests();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for RowCacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} ({:.1}% hit rate), {} rows / {} bytes resident \
+             (peak {} of {} budget), {} evictions",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.entries,
+            self.bytes_cached,
+            self.peak_bytes,
+            self.capacity_bytes,
+            self.evictions
+        )
+    }
+}
+
+struct Entry {
+    key: u64,
+    prev: usize,
+    next: usize,
+    data: Box<[f32]>,
+}
+
+struct Inner {
+    map: FxHashMap<u64, usize>,
+    entries: Vec<Entry>,
+    free: Vec<usize>,
+    /// Most-recently used slot.
+    head: usize,
+    /// Least-recently used slot (eviction end).
+    tail: usize,
+    bytes: u64,
+    peak_bytes: u64,
+    evictions: u64,
+}
+
+impl Inner {
+    fn new() -> Self {
+        Self {
+            map: FxHashMap::default(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+            peak_bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.entries[i].prev, self.entries[i].next);
+        if prev != NIL {
+            self.entries[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.entries[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.entries[i].prev = NIL;
+        self.entries[i].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn evict_tail(&mut self) {
+        let i = self.tail;
+        debug_assert_ne!(i, NIL, "evict on an empty stripe");
+        self.detach(i);
+        let e = &mut self.entries[i];
+        self.bytes -= (e.data.len() * 4) as u64;
+        self.map.remove(&e.key);
+        e.data = Box::new([]);
+        self.free.push(i);
+        self.evictions += 1;
+    }
+}
+
+/// One independently locked LRU stripe with its share of the budget.
+struct Stripe {
+    capacity: u64,
+    inner: Mutex<Inner>,
+}
+
+/// Bounded, thread-safe LRU over feature rows, shared by every shard of
+/// one mounted store. Keys are opaque `u64`s packed by the
+/// [`crate::persist::PagedFeatureStore`]s sharing the cache.
+pub struct RowCache {
+    capacity: u64,
+    stripes: Vec<Stripe>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RowCache {
+    pub fn new(cfg: LruConfig) -> Self {
+        let n = (cfg.capacity_bytes / BYTES_PER_STRIPE).clamp(1, MAX_STRIPES);
+        let stripes = (0..n)
+            .map(|_| Stripe {
+                capacity: cfg.capacity_bytes / n,
+                inner: Mutex::new(Inner::new()),
+            })
+            .collect();
+        Self {
+            capacity: cfg.capacity_bytes,
+            stripes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Lock stripes this cache spreads its budget over.
+    pub fn num_stripes(&self) -> usize {
+        self.stripes.len()
+    }
+
+    fn stripe(&self, key: u64) -> &Stripe {
+        // Fibonacci-hash the packed key so shard/group/row bits all
+        // influence stripe choice.
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.stripes[(h >> 32) as usize % self.stripes.len()]
+    }
+
+    /// Copy the cached row for `key` into `dst` and promote it to
+    /// most-recently-used in its stripe. Returns `false` (a counted
+    /// miss) when absent.
+    pub fn try_copy(&self, key: u64, dst: &mut [f32]) -> bool {
+        let mut inner = self.stripe(key).inner.lock().unwrap();
+        let Some(&slot) = inner.map.get(&key) else {
+            drop(inner);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        debug_assert_eq!(inner.entries[slot].data.len(), dst.len());
+        dst.copy_from_slice(&inner.entries[slot].data);
+        inner.detach(slot);
+        inner.push_front(slot);
+        drop(inner);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Insert a row just read from disk, evicting cold rows from its
+    /// stripe until that stripe's share of the budget holds. Rows wider
+    /// than the stripe share are not cached; a key already present (a
+    /// racing reader beat us) is promoted instead of duplicated.
+    pub fn insert(&self, key: u64, row: &[f32]) {
+        let bytes = (row.len() * 4) as u64;
+        let stripe = self.stripe(key);
+        if bytes > stripe.capacity {
+            return;
+        }
+        let mut inner = stripe.inner.lock().unwrap();
+        if let Some(&slot) = inner.map.get(&key) {
+            inner.detach(slot);
+            inner.push_front(slot);
+            return;
+        }
+        while inner.bytes + bytes > stripe.capacity {
+            inner.evict_tail();
+        }
+        let slot = match inner.free.pop() {
+            Some(i) => {
+                inner.entries[i] = Entry { key, prev: NIL, next: NIL, data: row.into() };
+                i
+            }
+            None => {
+                inner.entries.push(Entry { key, prev: NIL, next: NIL, data: row.into() });
+                inner.entries.len() - 1
+            }
+        };
+        inner.map.insert(key, slot);
+        inner.push_front(slot);
+        inner.bytes += bytes;
+        inner.peak_bytes = inner.peak_bytes.max(inner.bytes);
+    }
+
+    /// Current counters, aggregated over stripes.
+    pub fn stats(&self) -> RowCacheStats {
+        let mut stats = RowCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            capacity_bytes: self.capacity,
+            ..Default::default()
+        };
+        for stripe in &self.stripes {
+            let inner = stripe.inner.lock().unwrap();
+            stats.evictions += inner.evictions;
+            stats.bytes_cached += inner.bytes;
+            stats.peak_bytes += inner.peak_bytes;
+            stats.entries += inner.map.len() as u64;
+        }
+        stats
+    }
+
+    /// Zero the hit/miss/eviction counters and rebase each stripe's
+    /// peak to its current residency. Cached rows stay resident
+    /// (benches measure warm phases).
+    pub fn reset_stats(&self) {
+        for stripe in &self.stripes {
+            let mut inner = stripe.inner.lock().unwrap();
+            inner.evictions = 0;
+            inner.peak_bytes = inner.bytes;
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(budget: u64) -> RowCache {
+        RowCache::new(LruConfig { capacity_bytes: budget })
+    }
+
+    #[test]
+    fn hit_miss_and_promotion() {
+        let c = cache(1024);
+        assert_eq!(c.num_stripes(), 1, "small budgets stay single-striped");
+        let mut buf = [0.0f32; 2];
+        assert!(!c.try_copy(1, &mut buf));
+        c.insert(1, &[1.0, 2.0]);
+        assert!(c.try_copy(1, &mut buf));
+        assert_eq!(buf, [1.0, 2.0]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.bytes_cached), (1, 1, 1, 8));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.total_requests(), 2);
+    }
+
+    #[test]
+    fn byte_budget_is_a_hard_ceiling() {
+        // Budget of 3 two-f32 rows (24 bytes); insert 10 rows.
+        let c = cache(24);
+        for k in 0..10u64 {
+            c.insert(k, &[k as f32, 0.0]);
+            assert!(c.stats().bytes_cached <= 24, "budget violated at {k}");
+        }
+        let s = c.stats();
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.evictions, 7);
+        assert_eq!(s.peak_bytes, 24);
+        // The three most recent survive; the cold ones are gone.
+        let mut buf = [0.0f32; 2];
+        for k in 7..10u64 {
+            assert!(c.try_copy(k, &mut buf), "row {k} should be resident");
+        }
+        assert!(!c.try_copy(0, &mut buf));
+    }
+
+    #[test]
+    fn lru_order_respects_recency_not_insertion() {
+        let c = cache(24);
+        c.insert(0, &[0.0, 0.0]);
+        c.insert(1, &[1.0, 0.0]);
+        c.insert(2, &[2.0, 0.0]);
+        // Touch 0 so it becomes most recent, then overflow by one.
+        let mut buf = [0.0f32; 2];
+        assert!(c.try_copy(0, &mut buf));
+        c.insert(3, &[3.0, 0.0]);
+        // 1 (the LRU) was evicted; 0 survived its touch.
+        assert!(c.try_copy(0, &mut buf));
+        assert!(!c.try_copy(1, &mut buf));
+        assert!(c.try_copy(2, &mut buf));
+        assert!(c.try_copy(3, &mut buf));
+    }
+
+    #[test]
+    fn oversized_rows_are_never_cached() {
+        let c = cache(8);
+        c.insert(1, &[0.0; 4]); // 16 bytes > 8 budget
+        assert_eq!(c.stats().entries, 0);
+        let mut buf = [0.0f32; 4];
+        assert!(!c.try_copy(1, &mut buf));
+    }
+
+    #[test]
+    fn duplicate_insert_promotes_instead_of_duplicating() {
+        let c = cache(1024);
+        c.insert(1, &[1.0]);
+        c.insert(1, &[1.0]);
+        let s = c.stats();
+        assert_eq!((s.entries, s.bytes_cached), (1, 4));
+    }
+
+    #[test]
+    fn reset_keeps_contents_but_zeroes_counters() {
+        let c = cache(1024);
+        c.insert(1, &[1.0, 2.0]);
+        let mut buf = [0.0f32; 2];
+        assert!(c.try_copy(1, &mut buf));
+        c.reset_stats();
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 0, 0));
+        assert_eq!(s.bytes_cached, 8, "rows stay resident");
+        assert_eq!(s.peak_bytes, 8, "peak rebased to residency");
+        assert!(c.try_copy(1, &mut buf), "contents survive the reset");
+    }
+
+    #[test]
+    fn striped_cache_keeps_the_global_ceiling() {
+        // A budget big enough to stripe: the per-stripe shares must sum
+        // to at most the configured budget and contention spreads.
+        let c = cache(32 * 1024 * 1024);
+        assert!(c.num_stripes() > 1, "large budgets stripe");
+        for k in 0..10_000u64 {
+            c.insert(k, &[k as f32; 16]);
+        }
+        let s = c.stats();
+        assert_eq!(s.entries, 10_000, "64-byte rows all fit");
+        assert!(s.bytes_cached <= c.capacity_bytes());
+        assert!(s.peak_bytes <= c.capacity_bytes());
+        // Rows stay retrievable wherever they were striped to.
+        let mut buf = [0.0f32; 16];
+        for k in [0u64, 5_000, 9_999] {
+            assert!(c.try_copy(k, &mut buf), "row {k} resident");
+            assert_eq!(buf[0], k as f32);
+        }
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let c = std::sync::Arc::new(cache(256));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = std::sync::Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let mut buf = [0.0f32; 2];
+                for i in 0..500u64 {
+                    let k = (t * 31 + i) % 64;
+                    if !c.try_copy(k, &mut buf) {
+                        c.insert(k, &[k as f32, t as f32]);
+                    } else {
+                        assert_eq!(buf[0], k as f32, "row content keyed correctly");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(c.stats().bytes_cached <= 256);
+    }
+}

@@ -1,0 +1,46 @@
+//! Out-of-core persistence (§2.3 taken to disk): partition bundles and
+//! the machinery to run the distributed pipeline without holding the
+//! graph in RAM.
+//!
+//! PyG 2.0's distributed training materializes partition files offline
+//! (`torch_geometric.distributed`'s `Partitioner`) and lets each rank
+//! serve its shard from storage; TF-GNN makes the same bet with on-disk
+//! sharded graph tensors. This module is that layer for the simulated
+//! cluster:
+//!
+//! * [`Bundle`] / [`write_bundle`] / [`write_bundle_hetero`] — the
+//!   on-disk **partition bundle**: a JSON manifest plus per-partition
+//!   shard files (feature rows in the positioned-I/O `.pygf` format,
+//!   binary CSC/CSR adjacency), keyed `(node_type, partition)` /
+//!   `(edge_type, partition)` so homogeneous and typed partitionings
+//!   share one format. `pyg2 partition --write DIR` produces bundles
+//!   from the CLI.
+//! * [`RowCache`] — a bounded LRU over feature rows with
+//!   hit/miss/evict/byte counters, shared by all shards of a mount (the
+//!   ROADMAP's adaptive/bounded-caches item). It composes with the
+//!   [`crate::dist::HaloCache`]: halo hits never reach a shard, and
+//!   everything else pages through the LRU.
+//! * [`PagedFeatureStore`] — one disk shard behind the
+//!   [`crate::storage::FeatureStore`] trait, demand-paging rows through
+//!   the shared cache with O(batch) memory.
+//!
+//! The mount constructors live on the stores they produce —
+//! [`crate::dist::PartitionedFeatureStore::mount`] and
+//! [`crate::dist::PartitionedGraphStore::mount`] — and
+//! [`crate::coordinator::mounted_loader`] wires a full loader from a
+//! bundle. **Correctness anchor:** a mounted pipeline yields batches
+//! identical to the in-memory distributed pipeline (and hence to the
+//! single-store pipeline) for the homogeneous and typed loaders, with
+//! and without async routing + halo caching — enforced end to end by
+//! `tests/test_persist_equivalence.rs`, with corrupt-input hardening in
+//! `tests/test_persist_corruption.rs` and cold/warm I/O measured by
+//! `bench_dist_disk`.
+
+pub mod bundle;
+pub mod io;
+pub mod lru;
+pub mod paged;
+
+pub use bundle::{write_bundle, write_bundle_hetero, Bundle, EdgeTypeMeta, Manifest, NodeTypeMeta};
+pub use lru::{LruConfig, RowCache, RowCacheStats};
+pub use paged::PagedFeatureStore;

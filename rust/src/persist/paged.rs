@@ -1,0 +1,285 @@
+//! `PagedFeatureStore` — one on-disk feature shard of a mounted bundle,
+//! served row-by-row through the shared bounded [`RowCache`].
+//!
+//! This is the [`FeatureStore`] the mounted
+//! [`crate::dist::PartitionedFeatureStore`] plugs in per
+//! `(node_type, partition)`: `get`/`get_into` keep O(batch) memory — a
+//! row is either copied out of the cache or `pread` from the `.pygf`
+//! shard and inserted (runs of consecutive misses coalesce into one
+//! [`FileFeatureStore::read_rows_into`] call), with the cache's byte
+//! budget bounding total residency across *all* shards of the mount.
+
+use super::lru::RowCache;
+use crate::error::{Error, Result};
+use crate::storage::{FeatureKey, FeatureStore, FileFeatureStore};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Shard ids are packed into the top 24 bits of the cache key.
+const MAX_SHARDS: u32 = 1 << 24;
+/// Group ids into the next 8 bits; rows take the low 32.
+const MAX_GROUPS: usize = 1 << 8;
+
+/// A disk-backed feature shard paging rows through a shared [`RowCache`].
+pub struct PagedFeatureStore {
+    file: Arc<FileFeatureStore>,
+    cache: Arc<RowCache>,
+    shard_id: u32,
+    /// Cache-key group index of every group in the shard file.
+    group_ids: BTreeMap<FeatureKey, u8>,
+}
+
+impl PagedFeatureStore {
+    /// Wrap an opened shard file. `shard_id` must be unique among every
+    /// store sharing `cache` — the mount assigns one per
+    /// `(node_type, partition)`. Groups whose attr starts with `__` are
+    /// bundle-internal metadata (e.g. the shard identity stamp) and are
+    /// hidden: they do not appear in [`FeatureStore::keys`] and cannot
+    /// be fetched.
+    pub fn new(file: Arc<FileFeatureStore>, cache: Arc<RowCache>, shard_id: u32) -> Result<Self> {
+        if shard_id >= MAX_SHARDS {
+            return Err(Error::Storage(format!(
+                "shard id {shard_id} exceeds the cache-key space ({MAX_SHARDS} shards)"
+            )));
+        }
+        let keys: Vec<FeatureKey> = file
+            .keys()
+            .into_iter()
+            .filter(|k| !k.attr.starts_with("__"))
+            .collect();
+        if keys.len() > MAX_GROUPS {
+            return Err(Error::Storage(format!(
+                "shard holds {} feature groups, cache keys allow {MAX_GROUPS}",
+                keys.len()
+            )));
+        }
+        // `keys()` comes from a BTreeMap, so the enumeration is stable.
+        let group_ids = keys
+            .into_iter()
+            .enumerate()
+            .map(|(i, k)| (k, i as u8))
+            .collect();
+        Ok(Self { file, cache, shard_id, group_ids })
+    }
+
+    /// The underlying shard file (disk-read counters live there).
+    pub fn file(&self) -> &Arc<FileFeatureStore> {
+        &self.file
+    }
+
+    fn cache_key(&self, group: u8, row: usize) -> u64 {
+        ((self.shard_id as u64) << 40) | ((group as u64) << 32) | row as u64
+    }
+
+    fn group_id(&self, key: &FeatureKey) -> Result<u8> {
+        self.group_ids
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))
+    }
+
+    /// Serve rows `idx` into the first `idx.len()` rows of `out`:
+    /// cache hits copy straight in; runs of *consecutive* rows that all
+    /// miss are read with one positioned read
+    /// ([`FileFeatureStore::read_rows_into`]) and inserted row by row,
+    /// so a cold scan of shard-contiguous rows costs one syscall per
+    /// run, not per row. All indices must be pre-validated.
+    fn fill(
+        &self,
+        key: &FeatureKey,
+        group: u8,
+        cols: usize,
+        idx: &[usize],
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let mut k = 0usize;
+        while k < idx.len() {
+            let row = idx[k];
+            if self.cache.try_copy(self.cache_key(group, row), out.row_mut(k)) {
+                k += 1;
+                continue;
+            }
+            // Extend the miss run over consecutive rows; a hit along the
+            // way is served immediately and ends the run.
+            let mut run = 1usize;
+            let mut served_next = false;
+            while k + run < idx.len() && idx[k + run] == row + run {
+                let next_key = self.cache_key(group, idx[k + run]);
+                if self.cache.try_copy(next_key, out.row_mut(k + run)) {
+                    served_next = true;
+                    break;
+                }
+                run += 1;
+            }
+            let mut buf = vec![0.0f32; run * cols];
+            self.file.read_rows_into(key, row, &mut buf)?;
+            for j in 0..run {
+                let r = &buf[j * cols..(j + 1) * cols];
+                out.row_mut(k + j).copy_from_slice(r);
+                self.cache.insert(self.cache_key(group, row + j), r);
+            }
+            k += run + served_next as usize;
+        }
+        Ok(())
+    }
+}
+
+impl FeatureStore for PagedFeatureStore {
+    fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor> {
+        let group = self.group_id(key)?;
+        let rows = self.file.num_rows(key)?;
+        if let Some(&oor) = idx.iter().find(|&&i| i >= rows) {
+            return Err(Error::Storage(format!("row {oor} out of {rows}")));
+        }
+        let cols = self.file.feature_dim(key)?;
+        let mut out = Tensor::zeros(vec![idx.len(), cols]);
+        self.fill(key, group, cols, idx, &mut out)?;
+        Ok(out)
+    }
+
+    fn get_into(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
+        let group = self.group_id(key)?;
+        let cols = self.file.feature_dim(key)?;
+        if out.cols() != cols {
+            return Err(Error::Shape(format!("cols {} != {cols}", out.cols())));
+        }
+        if idx.len() > out.rows() {
+            return Err(Error::Shape(format!(
+                "{} rows > capacity {}",
+                idx.len(),
+                out.rows()
+            )));
+        }
+        // Validate before the first write so a failed call leaves `out`
+        // untouched (the shared get_into contract).
+        let rows = self.file.num_rows(key)?;
+        if let Some(&oor) = idx.iter().find(|&&i| i >= rows) {
+            return Err(Error::Storage(format!("row {oor} out of {rows}")));
+        }
+        self.fill(key, group, cols, idx, out)?;
+        for r in idx.len()..out.rows() {
+            out.row_mut(r).fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
+        self.group_id(key)?;
+        self.file.feature_dim(key)
+    }
+
+    fn num_rows(&self, key: &FeatureKey) -> Result<usize> {
+        self.group_id(key)?;
+        self.file.num_rows(key)
+    }
+
+    fn keys(&self) -> Vec<FeatureKey> {
+        self.group_ids.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::LruConfig;
+    use crate::storage::FileFeatureWriter;
+
+    fn shard(name: &str, n: usize, f: usize) -> Arc<FileFeatureStore> {
+        let dir = std::env::temp_dir().join("pyg2_paged_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut w = FileFeatureWriter::new(&path);
+        let data: Vec<f32> = (0..n * f).map(|i| i as f32).collect();
+        w.put(FeatureKey::default_x(), Tensor::new(vec![n, f], data).unwrap());
+        w.finish().unwrap();
+        Arc::new(FileFeatureStore::open(&path).unwrap())
+    }
+
+    #[test]
+    fn repeated_reads_hit_the_cache_not_the_disk() {
+        let file = shard("hot.pygf", 10, 3);
+        let cache = Arc::new(RowCache::new(LruConfig::default()));
+        let s = PagedFeatureStore::new(Arc::clone(&file), Arc::clone(&cache), 0).unwrap();
+
+        let a = s.get(&FeatureKey::default_x(), &[4, 2, 4]).unwrap();
+        assert_eq!(a.row(0), &[12.0, 13.0, 14.0]);
+        assert_eq!(a.row(2), &[12.0, 13.0, 14.0]);
+        // Row 4 was read once and served from cache the second time.
+        assert_eq!(file.disk_reads(), 2);
+        let before = file.disk_reads();
+        let b = s.get(&FeatureKey::default_x(), &[4, 2]).unwrap();
+        assert_eq!(b.data(), &[12.0, 13.0, 14.0, 6.0, 7.0, 8.0]);
+        assert_eq!(file.disk_reads(), before, "warm reads touch no disk");
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (3, 2));
+    }
+
+    #[test]
+    fn consecutive_miss_runs_coalesce_into_one_read() {
+        let file = shard("runs.pygf", 12, 3);
+        let cache = Arc::new(RowCache::new(LruConfig::default()));
+        let s = PagedFeatureStore::new(Arc::clone(&file), Arc::clone(&cache), 0).unwrap();
+
+        // Cold fetch of one contiguous run: one positioned read, four
+        // counted misses.
+        let got = s.get(&FeatureKey::default_x(), &[4, 5, 6, 7]).unwrap();
+        assert_eq!(got.row(0), &[12.0, 13.0, 14.0]);
+        assert_eq!(got.row(3), &[21.0, 22.0, 23.0]);
+        assert_eq!(file.disk_reads(), 1, "one syscall for the whole run");
+        assert_eq!(cache.stats().misses, 4);
+
+        // A resident row in the middle splits the run: rows 0..=2 cold,
+        // 5 warm, 6 warm — reads only cover 0..=2 (one run) plus the
+        // still-cold 8.
+        file.reset_disk_reads();
+        let got = s.get(&FeatureKey::default_x(), &[0, 1, 2, 5, 8]).unwrap();
+        assert_eq!(got.row(3), &[15.0, 16.0, 17.0]);
+        assert_eq!(got.row(4), &[24.0, 25.0, 26.0]);
+        assert_eq!(file.disk_reads(), 2, "run 0..=2 and row 8");
+    }
+
+    #[test]
+    fn distinct_shards_sharing_a_cache_do_not_collide() {
+        let f0 = shard("s0.pygf", 4, 2);
+        let f1 = shard("s1.pygf", 4, 2);
+        let cache = Arc::new(RowCache::new(LruConfig::default()));
+        let s0 = PagedFeatureStore::new(f0, Arc::clone(&cache), 0).unwrap();
+        let s1 = PagedFeatureStore::new(f1, Arc::clone(&cache), 1).unwrap();
+        // Same (group, row) in both shards; values must stay per-shard.
+        let a = s0.get(&FeatureKey::default_x(), &[1]).unwrap();
+        let b = s1.get(&FeatureKey::default_x(), &[1]).unwrap();
+        assert_eq!(a.data(), b.data()); // identical content by construction
+        assert_eq!(cache.stats().entries, 2, "one entry per (shard, row)");
+    }
+
+    #[test]
+    fn get_into_honours_the_padding_contract() {
+        let s = PagedFeatureStore::new(
+            shard("pad.pygf", 6, 2),
+            Arc::new(RowCache::new(LruConfig::default())),
+            0,
+        )
+        .unwrap();
+        let mut out = Tensor::full(vec![3, 2], 9.0);
+        s.get_into(&FeatureKey::default_x(), &[5], &mut out).unwrap();
+        assert_eq!(out.row(0), &[10.0, 11.0]);
+        assert_eq!(out.row(1), &[0.0, 0.0]);
+        assert_eq!(out.row(2), &[0.0, 0.0]);
+        // Errors leave the buffer untouched.
+        let mut out = Tensor::full(vec![2, 2], 5.0);
+        assert!(s.get_into(&FeatureKey::default_x(), &[0, 6], &mut out).is_err());
+        assert!(out.data().iter().all(|&x| x == 5.0));
+        let mut narrow = Tensor::zeros(vec![2, 3]);
+        assert!(s.get_into(&FeatureKey::default_x(), &[0], &mut narrow).is_err());
+        assert!(s.get(&FeatureKey::new("ghost", "x"), &[0]).is_err());
+    }
+
+    #[test]
+    fn shard_id_space_is_enforced() {
+        let file = shard("ids.pygf", 2, 2);
+        let cache = Arc::new(RowCache::new(LruConfig::default()));
+        assert!(PagedFeatureStore::new(Arc::clone(&file), Arc::clone(&cache), MAX_SHARDS).is_err());
+        assert!(PagedFeatureStore::new(file, cache, MAX_SHARDS - 1).is_ok());
+    }
+}

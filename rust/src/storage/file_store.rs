@@ -1,10 +1,18 @@
 //! File-backed feature store — the "embedded database" backend of §2.3.
 //!
-//! Features are persisted in a simple binary format (`.pygf`): a JSON-ish
+//! Features are persisted in a simple binary format (`.pygf`): a JSON
 //! header with group metadata followed by raw little-endian f32 blocks.
-//! Reads use positioned I/O (`pread`-style seek + read per row batch), so
-//! memory stays O(batch), exactly what a remote backend needs when the
-//! graph's features do not fit in RAM.
+//! Reads use positioned I/O (`pread`-style, one syscall per contiguous
+//! row run), so memory stays O(batch), exactly what a remote backend
+//! needs when the graph's features do not fit in RAM. On Unix the reads
+//! go through `read_exact_at`, so concurrent batch fetches from
+//! different loader workers never serialize on a lock; non-Unix
+//! platforms fall back to a seek lock.
+//!
+//! This is also the shard format of the [`crate::persist`] partition
+//! bundles: every `(node_type, partition)` feature shard of an
+//! out-of-core mount is one `.pygf` file, demand-paged through the
+//! bounded [`crate::persist::RowCache`].
 
 use super::feature_store::{FeatureKey, FeatureStore};
 use crate::error::{Error, Result};
@@ -12,9 +20,9 @@ use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 8] = b"PYGFEAT1";
 
@@ -42,35 +50,28 @@ impl FileFeatureWriter {
     }
 
     pub fn finish(self) -> Result<()> {
+        // Duplicate keys would produce a file open() permanently
+        // rejects ("duplicate group"); fail here, where the bug is.
+        let mut seen = std::collections::BTreeSet::new();
+        for (key, _) in &self.groups {
+            if !seen.insert(key) {
+                return Err(Error::Storage(format!("duplicate feature group {key:?}")));
+            }
+        }
         // Header JSON: {"groups": [{"group","attr","rows","cols","offset"}]}
+        // with offsets relative to the data start (MAGIC + 8-byte
+        // header_len + header bytes).
         let mut metas = Vec::new();
-        // First pass to compute offsets: header size depends on the JSON,
-        // so write data at a fixed offset after a length-prefixed header.
-        let mut data_sizes = Vec::new();
-        for (_, t) in &self.groups {
-            data_sizes.push((t.rows(), t.cols(), t.numel() * 4));
-        }
-        // Build header with placeholder offsets, then fix up: compute
-        // header length with final integer offsets by iterating to a fixed
-        // point (offsets are computed from a fixed data start instead).
-        // Simpler: data starts at MAGIC + 8-byte header_len + header bytes.
-        // We compute header with offsets relative to data start, then add.
         let mut rel = 0u64;
-        let mut rel_offsets = Vec::new();
-        for (_, _, bytes) in &data_sizes {
-            rel_offsets.push(rel);
-            rel += *bytes as u64;
-        }
-        for ((key, _), ((rows, cols, _), rel_off)) in
-            self.groups.iter().zip(data_sizes.iter().zip(&rel_offsets))
-        {
+        for (key, t) in &self.groups {
             metas.push(Json::obj(vec![
                 ("group", Json::str(key.group.clone())),
                 ("attr", Json::str(key.attr.clone())),
-                ("rows", Json::num(*rows as f64)),
-                ("cols", Json::num(*cols as f64)),
-                ("offset", Json::num(*rel_off as f64)),
+                ("rows", Json::num(t.rows() as f64)),
+                ("cols", Json::num(t.cols() as f64)),
+                ("offset", Json::num(rel as f64)),
             ]));
+            rel += (t.numel() * 4) as u64;
         }
         let header = Json::obj(vec![("groups", Json::Arr(metas))]).to_string();
         let mut f = File::create(&self.path)?;
@@ -86,60 +87,137 @@ impl FileFeatureWriter {
     }
 }
 
-/// Read-side store. Thread-safe via an internal mutex around the file
-/// handle (positioned reads; contention is visible in loader benches and
-/// is part of what the partitioned store amortizes).
+/// Parse a required non-negative integer field of a group header entry
+/// (the shared strict-size validation of [`json::uint_field`]).
+fn meta_uint(g: &Json, field: &str) -> Result<u64> {
+    json::uint_field(g, field).map_err(|e| Error::Storage(format!("feature header: {e}")))
+}
+
+/// Read-side store. Thread-safe without a shared lock: every read is a
+/// positioned `pread` (Unix `read_exact_at`), so concurrent batch
+/// fetches from different threads proceed independently. Disk reads are
+/// counted ([`FileFeatureStore::disk_reads`]) so caches layered on top
+/// (halo replicas, the [`crate::persist::RowCache`]) can prove they
+/// reduce I/O.
 pub struct FileFeatureStore {
-    file: Mutex<File>,
+    file: File,
+    #[cfg(not(unix))]
+    seek_lock: std::sync::Mutex<()>,
     data_start: u64,
     groups: BTreeMap<FeatureKey, GroupMeta>,
+    /// Positioned reads issued (one per contiguous row run).
+    reads: AtomicU64,
 }
 
 impl FileFeatureStore {
+    /// Open and validate a `.pygf` file. Truncated headers, a bad magic,
+    /// malformed metadata, and group blocks extending past the end of
+    /// the file are all [`Error`]s — corrupt input must never panic.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
-        let mut f = File::open(path.as_ref())?;
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            return Err(Error::Storage(format!(
-                "{} is not a pyg2 feature file",
-                path.as_ref().display()
-            )));
+        let path = path.as_ref();
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let bad = |what: &str| {
+            Error::Storage(format!("{}: {what}", path.display()))
+        };
+        if file_len < 16 {
+            return Err(bad("not a pyg2 feature file (too short)"));
         }
-        let mut len_bytes = [0u8; 8];
-        f.read_exact(&mut len_bytes)?;
-        let header_len = u64::from_le_bytes(len_bytes);
+        let mut head = [0u8; 16];
+        pread_raw(&file, 0, &mut head)?;
+        if &head[..8] != MAGIC {
+            return Err(bad("not a pyg2 feature file (bad magic)"));
+        }
+        let header_len = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        if header_len > file_len - 16 {
+            return Err(bad("truncated header"));
+        }
         let mut header = vec![0u8; header_len as usize];
-        f.read_exact(&mut header)?;
+        pread_raw(&file, 16, &mut header)?;
         let header_str = String::from_utf8(header)
-            .map_err(|e| Error::Storage(format!("bad header utf8: {e}")))?;
-        let doc = json::parse(&header_str).map_err(Error::Storage)?;
-        let data_start = 8 + 8 + header_len;
+            .map_err(|e| bad(&format!("bad header utf8: {e}")))?;
+        let doc = json::parse(&header_str)
+            .map_err(|e| bad(&format!("bad header json: {e}")))?;
+        let data_start = 16 + header_len;
         let mut groups = BTreeMap::new();
+        let mut blocks: Vec<(u64, u128)> = Vec::new();
         for g in doc
             .get("groups")
             .and_then(|g| g.as_arr())
-            .ok_or_else(|| Error::Storage("missing groups".into()))?
+            .ok_or_else(|| bad("header has no groups array"))?
         {
             let key = FeatureKey::new(
-                g.get("group").and_then(|v| v.as_str()).unwrap_or_default(),
-                g.get("attr").and_then(|v| v.as_str()).unwrap_or_default(),
+                g.get("group")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| bad("group entry missing name"))?,
+                g.get("attr")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| bad("group entry missing attr"))?,
             );
-            groups.insert(
-                key,
-                GroupMeta {
-                    rows: g.get("rows").and_then(|v| v.as_usize()).unwrap_or(0),
-                    cols: g.get("cols").and_then(|v| v.as_usize()).unwrap_or(0),
-                    offset: data_start + g.get("offset").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
-                },
-            );
+            let rows = meta_uint(g, "rows")? as usize;
+            let cols = meta_uint(g, "cols")? as usize;
+            let offset = meta_uint(g, "offset")?;
+            // The block must fit inside the file: offset + rows*cols*4
+            // past file_len means truncation or header tampering.
+            let bytes = (rows as u128) * (cols as u128) * 4;
+            let end = data_start as u128 + offset as u128 + bytes;
+            if end > file_len as u128 {
+                return Err(bad(&format!(
+                    "group {key:?} claims bytes {offset}..{end} past file end {file_len}"
+                )));
+            }
+            blocks.push((offset, bytes));
+            if groups
+                .insert(key.clone(), GroupMeta { rows, cols, offset: data_start + offset })
+                .is_some()
+            {
+                return Err(bad(&format!("duplicate group {key:?}")));
+            }
         }
-        Ok(Self { file: Mutex::new(f), data_start, groups })
+        // Blocks must tile the data region exactly — no gaps, no
+        // overlaps, no trailing bytes. Sorting by offset and walking a
+        // cursor rejects tampered headers that alias one block under two
+        // groups or leave unaccounted bytes.
+        blocks.sort_unstable();
+        let mut cursor = 0u128;
+        for (offset, bytes) in blocks {
+            if offset as u128 != cursor {
+                return Err(bad(&format!(
+                    "group block at offset {offset} does not tile the data region \
+                     (expected offset {cursor})"
+                )));
+            }
+            cursor += bytes;
+        }
+        if data_start as u128 + cursor != file_len as u128 {
+            return Err(bad(&format!(
+                "data ends at byte {}, file holds {file_len}",
+                data_start as u128 + cursor
+            )));
+        }
+        Ok(Self {
+            file,
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+            data_start,
+            groups,
+            reads: AtomicU64::new(0),
+        })
     }
 
     /// Byte offset where feature blocks begin (diagnostics).
     pub fn data_start(&self) -> u64 {
         self.data_start
+    }
+
+    /// Positioned reads issued so far (one per contiguous row run).
+    pub fn disk_reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+
+    /// Zero the read counter (benches measure per-phase I/O).
+    pub fn reset_disk_reads(&self) {
+        self.reads.store(0, Ordering::Relaxed);
     }
 
     fn meta(&self, key: &FeatureKey) -> Result<&GroupMeta> {
@@ -148,32 +226,148 @@ impl FileFeatureStore {
             .ok_or_else(|| Error::Storage(format!("no feature group {key:?}")))
     }
 
-    /// Read one row's bytes. Coalesces nothing — the benchmark story for
-    /// why bulk/partitioned stores exist.
-    fn read_row(&self, meta: &GroupMeta, row: usize, buf: &mut [f32]) -> Result<()> {
-        let mut f = self.file.lock().unwrap();
-        let byte_off = meta.offset + (row * meta.cols * 4) as u64;
-        f.seek(SeekFrom::Start(byte_off))?;
-        let mut bytes = vec![0u8; meta.cols * 4];
-        f.read_exact(&mut bytes)?;
-        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-            buf[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    /// One positioned read, counted.
+    fn pread(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        #[cfg(unix)]
+        {
+            pread_raw(&self.file, offset, buf)?;
+        }
+        #[cfg(not(unix))]
+        {
+            let _guard = self.seek_lock.lock().unwrap();
+            pread_raw(&self.file, offset, buf)?;
+        }
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read rows `start..start + (out.len() / cols)` of a group into
+    /// `out` with a single positioned read.
+    fn read_run(&self, meta: &GroupMeta, start: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(out.len() % meta.cols.max(1), 0);
+        let byte_off = meta.offset + (start * meta.cols * 4) as u64;
+        let mut bytes = vec![0u8; out.len() * 4];
+        self.pread(byte_off, &mut bytes)?;
+        for (dst, chunk) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(chunk.try_into().unwrap());
         }
         Ok(())
     }
+
+    /// Read one row of `key` into `dst` (`[cols]`) — the demand-paging
+    /// primitive of the [`crate::persist::PagedFeatureStore`].
+    pub fn read_row_into(&self, key: &FeatureKey, row: usize, dst: &mut [f32]) -> Result<()> {
+        let meta = self.meta(key)?;
+        if row >= meta.rows {
+            return Err(Error::Storage(format!("row {row} out of {}", meta.rows)));
+        }
+        if dst.len() != meta.cols {
+            return Err(Error::Shape(format!(
+                "destination holds {} values, row has {}",
+                dst.len(),
+                meta.cols
+            )));
+        }
+        self.read_run(meta, row, dst)
+    }
+
+    /// Read the contiguous rows `start..start + dst.len() / cols` of
+    /// `key` into `dst` with a **single** positioned read — how the
+    /// [`crate::persist::PagedFeatureStore`] turns a run of consecutive
+    /// cache misses into one syscall instead of one per row.
+    pub fn read_rows_into(&self, key: &FeatureKey, start: usize, dst: &mut [f32]) -> Result<()> {
+        let meta = self.meta(key)?;
+        if meta.cols == 0 {
+            return if dst.is_empty() {
+                Ok(())
+            } else {
+                Err(Error::Shape("destination for a zero-column group must be empty".into()))
+            };
+        }
+        if dst.len() % meta.cols != 0 {
+            return Err(Error::Shape(format!(
+                "destination holds {} values, not a multiple of {} cols",
+                dst.len(),
+                meta.cols
+            )));
+        }
+        let rows = dst.len() / meta.cols;
+        if start + rows > meta.rows {
+            return Err(Error::Storage(format!(
+                "rows {start}..{} out of {}",
+                start + rows,
+                meta.rows
+            )));
+        }
+        self.read_run(meta, start, dst)
+    }
+
+    /// Fetch `idx` into the first `idx.len()` rows of `out`'s data,
+    /// coalescing maximal contiguous index runs (`…, r, r+1, …`) into
+    /// single positioned reads. All indices are validated before the
+    /// first write, so a failed call leaves `out` untouched.
+    fn fetch(&self, meta: &GroupMeta, idx: &[usize], out: &mut [f32]) -> Result<()> {
+        if let Some(&oor) = idx.iter().find(|&&i| i >= meta.rows) {
+            return Err(Error::Storage(format!("row {oor} out of {}", meta.rows)));
+        }
+        let cols = meta.cols;
+        let mut k = 0usize;
+        while k < idx.len() {
+            let mut run = 1usize;
+            while k + run < idx.len() && idx[k + run] == idx[k] + run {
+                run += 1;
+            }
+            self.read_run(meta, idx[k], &mut out[k * cols..(k + run) * cols])?;
+            k += run;
+        }
+        Ok(())
+    }
+}
+
+/// Positioned read against a raw file handle. On Unix this is `pread`
+/// (no shared seek cursor, no lock); elsewhere callers must serialize
+/// (the store holds a seek lock for that case).
+fn pread_raw(file: &File, offset: u64, buf: &mut [u8]) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset)?;
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)?;
+    }
+    Ok(())
 }
 
 impl FeatureStore for FileFeatureStore {
     fn get(&self, key: &FeatureKey, idx: &[usize]) -> Result<Tensor> {
         let meta = self.meta(key)?.clone();
         let mut out = Tensor::zeros(vec![idx.len(), meta.cols]);
-        for (r, &i) in idx.iter().enumerate() {
-            if i >= meta.rows {
-                return Err(Error::Storage(format!("row {i} out of {}", meta.rows)));
-            }
-            self.read_row(&meta, i, out.row_mut(r))?;
-        }
+        self.fetch(&meta, idx, out.data_mut())?;
         Ok(out)
+    }
+
+    fn get_into(&self, key: &FeatureKey, idx: &[usize], out: &mut Tensor) -> Result<()> {
+        let meta = self.meta(key)?.clone();
+        if out.cols() != meta.cols {
+            return Err(Error::Shape(format!("cols {} != {}", out.cols(), meta.cols)));
+        }
+        if idx.len() > out.rows() {
+            return Err(Error::Shape(format!(
+                "{} rows > capacity {}",
+                idx.len(),
+                out.rows()
+            )));
+        }
+        let cols = meta.cols;
+        self.fetch(&meta, idx, out.data_mut())?;
+        // Padding contract: rows past idx.len() are zeroed.
+        out.data_mut()[idx.len() * cols..].fill(0.0);
+        Ok(())
     }
 
     fn feature_dim(&self, key: &FeatureKey) -> Result<usize> {
@@ -216,10 +410,53 @@ mod tests {
         assert_eq!(emb.data(), &[7.0; 4]);
         assert_eq!(s.feature_dim(&FeatureKey::new("item", "emb")).unwrap(), 4);
         assert_eq!(s.num_rows(&FeatureKey::default_x()).unwrap(), 3);
-        assert_eq!(s.data_start, 8 + 8 + {
-            // header length is whatever was written; sanity only
-            s.data_start - 16
-        });
+        assert!(s.data_start() >= 16);
+    }
+
+    #[test]
+    fn contiguous_rows_coalesce_into_one_read() {
+        let path = tmpfile("coalesce.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        let data: Vec<f32> = (0..20 * 3).map(|i| i as f32).collect();
+        w.put(FeatureKey::default_x(), Tensor::new(vec![20, 3], data.clone()).unwrap());
+        w.finish().unwrap();
+        let s = FileFeatureStore::open(&path).unwrap();
+
+        // One ascending run: one positioned read.
+        let got = s.get(&FeatureKey::default_x(), &[4, 5, 6, 7]).unwrap();
+        assert_eq!(got.data(), &data[4 * 3..8 * 3]);
+        assert_eq!(s.disk_reads(), 1, "contiguous run coalesces");
+
+        // Three runs: 0..=1, 5, 9..=10.
+        s.reset_disk_reads();
+        let got = s.get(&FeatureKey::default_x(), &[0, 1, 5, 9, 10]).unwrap();
+        assert_eq!(got.row(2), &data[5 * 3..6 * 3]);
+        assert_eq!(s.disk_reads(), 3);
+    }
+
+    #[test]
+    fn read_row_into_validates_width_and_bounds() {
+        let path = tmpfile("rowinto.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        w.put(FeatureKey::default_x(), Tensor::full(vec![4, 3], 2.0));
+        w.finish().unwrap();
+        let s = FileFeatureStore::open(&path).unwrap();
+        let mut row = [0.0f32; 3];
+        s.read_row_into(&FeatureKey::default_x(), 2, &mut row).unwrap();
+        assert_eq!(row, [2.0; 3]);
+        assert!(s.read_row_into(&FeatureKey::default_x(), 4, &mut row).is_err());
+        let mut narrow = [0.0f32; 2];
+        assert!(s.read_row_into(&FeatureKey::default_x(), 0, &mut narrow).is_err());
+        assert!(s.read_row_into(&FeatureKey::new("ghost", "x"), 0, &mut row).is_err());
+    }
+
+    #[test]
+    fn writer_rejects_duplicate_groups() {
+        let path = tmpfile("dupwrite.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        w.put(FeatureKey::default_x(), Tensor::zeros(vec![2, 2]));
+        w.put(FeatureKey::default_x(), Tensor::zeros(vec![2, 2]));
+        assert!(w.finish().is_err(), "open() would reject the file; fail at write time");
     }
 
     #[test]
@@ -236,6 +473,104 @@ mod tests {
     fn rejects_non_feature_file() {
         let path = tmpfile("bad.pygf");
         std::fs::write(&path, b"definitely not a feature file").unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+        // Shorter than the fixed header.
+        std::fs::write(&path, b"PYG").unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    /// A valid file for the corruption tests below.
+    fn valid_file(name: &str) -> PathBuf {
+        let path = tmpfile(name);
+        let mut w = FileFeatureWriter::new(&path);
+        let data: Vec<f32> = (0..8 * 4).map(|i| i as f32).collect();
+        w.put(FeatureKey::default_x(), Tensor::new(vec![8, 4], data).unwrap());
+        w.finish().unwrap();
+        path
+    }
+
+    #[test]
+    fn truncated_data_block_rejected_at_open() {
+        let path = valid_file("trunc.pygf");
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut the last feature row off: the header now claims more data
+        // than the file holds.
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected_at_open() {
+        let path = valid_file("trailing.pygf");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0u8; 3]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn overlapping_group_blocks_rejected_at_open() {
+        // Two groups aliasing the same data block: individually in
+        // bounds, but they do not tile the data region.
+        let path = tmpfile("overlap.pygf");
+        let header = concat!(
+            r#"{"groups":[{"attr":"x","cols":2,"group":"a","offset":0,"rows":2},"#,
+            r#"{"attr":"x","cols":2,"group":"b","offset":0,"rows":2}]}"#
+        );
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PYGFEAT1");
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 16]); // one 2x2 block, claimed twice
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_header_rejected_at_open() {
+        let path = valid_file("trunchdr.pygf");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..20]).unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn oversized_header_length_rejected_without_allocating() {
+        let path = valid_file("hugehdr.pygf");
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Claim a header far past the end of the file.
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn bit_flipped_magic_and_header_rejected() {
+        for (name, flip) in [("flipmagic.pygf", 3usize), ("fliphdr.pygf", 20)] {
+            let path = valid_file(name);
+            let mut bytes = std::fs::read(&path).unwrap();
+            bytes[flip] ^= 0xff;
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(
+                FileFeatureStore::open(&path).is_err(),
+                "byte {flip} flipped must not open"
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_range_offset_in_header_rejected() {
+        let path = valid_file("badoff.pygf");
+        let bytes = std::fs::read(&path).unwrap();
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let header = String::from_utf8(bytes[16..16 + header_len].to_vec()).unwrap();
+        // Push the group's offset past the end of the file, keeping the
+        // header length identical so only the offset field changes.
+        let evil = header.replace("\"offset\":0", "\"offset\":9");
+        assert_eq!(evil.len(), header.len());
+        let mut out = bytes.clone();
+        out[16..16 + header_len].copy_from_slice(evil.as_bytes());
+        std::fs::write(&path, &out).unwrap();
         assert!(FileFeatureStore::open(&path).is_err());
     }
 
@@ -261,5 +596,6 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        assert_eq!(s.disk_reads(), 200, "one read per single-row fetch");
     }
 }

@@ -139,6 +139,21 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// A required non-negative integral "size" field of a JSON object:
+/// present, numeric, finite, fraction-free, and small enough to be
+/// exact in an f64. The one validator behind every size read from
+/// untrusted metadata (`.pygf` headers, partition-bundle manifests).
+pub fn uint_field(v: &Json, field: &str) -> Result<u64, String> {
+    let n = v
+        .get(field)
+        .and_then(|f| f.as_f64())
+        .ok_or_else(|| format!("missing numeric field {field}"))?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > (1u64 << 52) as f64 {
+        return Err(format!("field {field}={n} is not a valid size"));
+    }
+    Ok(n as u64)
+}
+
 /// Parse a JSON document. Strict except that it allows trailing whitespace.
 pub fn parse(input: &str) -> Result<Json, String> {
     let bytes = input.as_bytes();
@@ -354,5 +369,15 @@ mod tests {
     fn integer_formatting_is_exact() {
         assert_eq!(Json::num(42.0).to_string(), "42");
         assert_eq!(Json::num(2.5).to_string(), "2.5");
+    }
+
+    #[test]
+    fn uint_field_accepts_sizes_and_rejects_everything_else() {
+        let v = parse(r#"{"n":80,"zero":0,"neg":-1,"frac":2.5,"big":1e300,"s":"80"}"#).unwrap();
+        assert_eq!(uint_field(&v, "n"), Ok(80));
+        assert_eq!(uint_field(&v, "zero"), Ok(0));
+        for bad in ["neg", "frac", "big", "s", "absent"] {
+            assert!(uint_field(&v, bad).is_err(), "{bad} must be rejected");
+        }
     }
 }

@@ -5,7 +5,9 @@
 //! buffer, and column mismatches are rejected.
 
 use pyg2::dist::{PartitionRouter, PartitionedFeatureStore};
+use pyg2::graph::{EdgeIndex, Graph};
 use pyg2::partition::Partitioning;
+use pyg2::persist::{write_bundle, LruConfig};
 use pyg2::storage::{
     FeatureKey, FeatureStore, FileFeatureStore, FileFeatureWriter, InMemoryFeatureStore,
 };
@@ -20,22 +22,46 @@ fn source_tensor() -> Tensor {
     Tensor::new(vec![N, F], data).unwrap()
 }
 
-/// All three backends over identical data: in-memory, file-backed,
-/// 3-way partitioned.
+fn padding_partitioning() -> Partitioning {
+    Partitioning {
+        assignment: (0..N).map(|v| (v % 3) as u32).collect(),
+        num_parts: 3,
+    }
+}
+
+/// Per-call unique scratch id: tests run concurrently, so disk-backed
+/// fixtures must not share paths.
+fn unique_id() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The mounted (out-of-core) store: the same rows written as a
+/// partition bundle and demand-paged back through the bounded LRU.
+fn mounted_store() -> PartitionedFeatureStore {
+    let dir = std::env::temp_dir()
+        .join("pyg2_padding_contract_bundle")
+        .join(format!("b{}", unique_id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let edges = EdgeIndex::new(vec![0, 3, 7], vec![1, 4, 2], N).unwrap();
+    let g = Graph::new(edges, source_tensor()).unwrap();
+    let bundle = write_bundle(&dir, &g, &padding_partitioning()).unwrap();
+    PartitionedFeatureStore::mount(&bundle, 0, LruConfig::default()).unwrap()
+}
+
+/// All four backends over identical data: in-memory, file-backed,
+/// 3-way partitioned, and 3-way partitioned mounted from disk.
 fn backends() -> Vec<(&'static str, Box<dyn FeatureStore>)> {
     let mem = InMemoryFeatureStore::from_tensor(source_tensor());
 
-    let path = std::env::temp_dir().join("pyg2_padding_contract.pygf");
+    let path = std::env::temp_dir().join(format!("pyg2_padding_contract_{}.pygf", unique_id()));
     let mut w = FileFeatureWriter::new(&path);
     w.put(FeatureKey::default_x(), source_tensor());
     w.finish().unwrap();
     let file = FileFeatureStore::open(&path).unwrap();
 
-    let partitioning = Partitioning {
-        assignment: (0..N).map(|v| (v % 3) as u32).collect(),
-        num_parts: 3,
-    };
-    let router = Arc::new(PartitionRouter::new(&partitioning, 0).unwrap());
+    let router = Arc::new(PartitionRouter::new(&padding_partitioning(), 0).unwrap());
     let part = PartitionedFeatureStore::partition(
         &InMemoryFeatureStore::from_tensor(source_tensor()),
         router,
@@ -46,6 +72,7 @@ fn backends() -> Vec<(&'static str, Box<dyn FeatureStore>)> {
         ("in-memory", Box::new(mem)),
         ("file-backed", Box::new(file)),
         ("partitioned", Box::new(part)),
+        ("mounted", Box::new(mounted_store())),
     ]
 }
 

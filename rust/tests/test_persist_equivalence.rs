@@ -1,0 +1,480 @@
+//! Out-of-core equivalence (the persist subsystem's correctness
+//! anchor): a distributed pipeline **mounted from a partition bundle on
+//! disk** must yield batches *identical* — node ids, edge index,
+//! features, labels, padding — to the in-memory distributed pipeline
+//! (and hence to the single-store pipeline) under the same loader
+//! config, for the homogeneous and the heterogeneous loaders, with and
+//! without async routing + halo caching. On top, the bounded LRU row
+//! cache must keep its byte accounting under the configured budget
+//! while strictly reducing disk reads on the second epoch.
+
+use pyg2::coordinator::{
+    hetero_mounted_loader, hetero_partitioned_loader_with, mounted_loader,
+    multi_rank_epoch, multi_rank_epoch_mounted, partitioned_loader_with, DistOptions,
+};
+use pyg2::datasets::hetero::{self, HeteroSbmConfig};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::loader::{Batch, HeteroBatch, HeteroLoaderConfig, LoaderConfig, NeighborLoader};
+use pyg2::partition::{ldg_partition, TypedPartitioning};
+use pyg2::persist::{write_bundle, write_bundle_hetero, LruConfig};
+use pyg2::sampler::{HeteroSamplerConfig, NeighborSamplerConfig};
+use pyg2::storage::{InMemoryFeatureStore, InMemoryGraphStore};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pyg2_persist_equivalence").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sbm_graph() -> pyg2::graph::Graph {
+    sbm::generate(&SbmConfig { num_nodes: 500, seed: 77, ..Default::default() }).unwrap()
+}
+
+fn loader_cfg(workers: usize) -> LoaderConfig {
+    LoaderConfig {
+        batch_size: 16,
+        num_workers: workers,
+        shuffle: true,
+        seed: 13,
+        sampler: NeighborSamplerConfig { fanouts: vec![5, 3], seed: 4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn assert_batches_identical(a: &Batch, b: &Batch) {
+    assert_eq!(a.sub.nodes, b.sub.nodes, "global node ids");
+    assert_eq!(a.sub.row, b.sub.row, "local edge sources");
+    assert_eq!(a.sub.col, b.sub.col, "local edge destinations");
+    assert_eq!(a.sub.edge_ids, b.sub.edge_ids, "global edge ids");
+    assert_eq!(a.sub.node_offsets, b.sub.node_offsets);
+    assert_eq!(a.sub.edge_offsets, b.sub.edge_offsets);
+    assert_eq!(a.x.data(), b.x.data(), "features");
+    assert_eq!(a.row, b.row, "padded rows");
+    assert_eq!(a.col, b.col, "padded cols");
+    assert_eq!(a.ew, b.ew, "edge weights");
+    assert_eq!(a.mask, b.mask);
+    assert_eq!(a.labels, b.labels, "labels");
+    assert_eq!(a.seed_mask, b.seed_mask);
+    assert_eq!(a.node_pos, b.node_pos);
+}
+
+#[test]
+fn mounted_pipeline_matches_in_memory_dist_and_single_store() {
+    let g = sbm_graph();
+    let labels = g.y.clone().unwrap();
+    let seeds: Vec<u32> = (0..200).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_sync"), &g, &partitioning).unwrap();
+    assert!(!bundle.is_typed());
+
+    let single = NeighborLoader::new(
+        Arc::new(InMemoryGraphStore::from_graph(&g)),
+        Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone())),
+        seeds.clone(),
+        loader_cfg(2),
+    )
+    .with_labels(labels);
+    let in_mem = partitioned_loader_with(
+        &g,
+        &partitioning,
+        0,
+        seeds.clone(),
+        loader_cfg(3),
+        DistOptions::default(),
+    )
+    .unwrap();
+    let mounted = mounted_loader(
+        &bundle,
+        0,
+        seeds,
+        loader_cfg(2),
+        DistOptions::default(),
+        LruConfig::default(),
+    )
+    .unwrap();
+
+    for epoch in 0..2u64 {
+        let a: Vec<Batch> = single.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        let b: Vec<Batch> = in_mem.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        let c: Vec<Batch> = mounted.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        assert_eq!(a.len(), 13); // ceil(200/16)
+        assert_eq!(b.len(), c.len());
+        for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+            x.sub.check_invariants().unwrap();
+            assert_batches_identical(x, y);
+            assert_batches_identical(y, z);
+        }
+    }
+
+    // Not vacuous: the mounted epoch crossed partitions and hit disk,
+    // with traffic identical to the in-memory distributed pipeline.
+    assert_eq!(mounted.router_stats(), in_mem.router_stats());
+    assert!(mounted.router_stats().remote_msgs > 0);
+    assert!(mounted.features().disk_reads().unwrap() > 0, "rows came from disk");
+    let rc = mounted.features().row_cache_stats().unwrap();
+    assert!(rc.hits > 0, "repeated rows were served from the LRU: {rc}");
+}
+
+#[test]
+fn mounted_async_halo_cached_pipeline_matches_single_store_loader() {
+    // The full stack out-of-core: bounded LRU under the shards, halo
+    // replica filtering the remote path, async router overlapping the
+    // RPCs that remain, nonzero simulated latency — still seed-for-seed
+    // identical to the single-store loader, from a non-zero rank.
+    let g = sbm_graph();
+    let labels = g.y.clone().unwrap();
+    let seeds: Vec<u32> = (0..200).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_async"), &g, &partitioning).unwrap();
+
+    let single = NeighborLoader::new(
+        Arc::new(InMemoryGraphStore::from_graph(&g)),
+        Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone())),
+        seeds.clone(),
+        loader_cfg(2),
+    )
+    .with_labels(labels);
+    let opts = DistOptions {
+        halo_cache: true,
+        async_fetch: true,
+        async_workers: 2,
+        latency: std::time::Duration::from_micros(20),
+    };
+    let mounted =
+        mounted_loader(&bundle, 1, seeds, loader_cfg(3), opts, LruConfig::default()).unwrap();
+
+    for epoch in 0..2u64 {
+        let a: Vec<Batch> = single.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        let b: Vec<Batch> = mounted.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_batches_identical(x, y);
+        }
+    }
+
+    // All three cache/overlap layers actually engaged.
+    let halo = mounted.cache_stats().expect("halo cache installed");
+    assert!(halo.hits > 0, "halo rows served without an RPC: {halo}");
+    assert!(mounted.features().is_async());
+    assert!(mounted.router_stats().remote_msgs > 0, "misses still routed");
+    assert!(mounted.features().disk_reads().unwrap() > 0);
+}
+
+fn hetero_graph() -> pyg2::graph::HeteroGraph {
+    hetero::generate(&HeteroSbmConfig {
+        num_users: 400,
+        num_items: 300,
+        num_tags: 80,
+        seed: 77,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn hetero_cfg(workers: usize) -> HeteroLoaderConfig {
+    HeteroLoaderConfig {
+        batch_size: 16,
+        num_workers: workers,
+        shuffle: true,
+        seed: 13,
+        sampler: HeteroSamplerConfig {
+            default_fanouts: vec![5, 3],
+            seed: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn assert_hetero_batches_identical(a: &HeteroBatch, b: &HeteroBatch) {
+    assert_eq!(a.sub.nodes, b.sub.nodes, "per-type global node ids");
+    assert_eq!(a.sub.seed_type, b.sub.seed_type);
+    assert_eq!(a.sub.num_seeds, b.sub.num_seeds);
+    assert_eq!(a.sub.node_offsets, b.sub.node_offsets);
+    assert_eq!(a.sub.batch, b.sub.batch);
+    assert_eq!(
+        a.sub.edges.keys().collect::<Vec<_>>(),
+        b.sub.edges.keys().collect::<Vec<_>>(),
+        "edge type sets"
+    );
+    for (et, ea) in &a.sub.edges {
+        let eb = &b.sub.edges[et];
+        assert_eq!(ea.row, eb.row, "{} rows", et.key());
+        assert_eq!(ea.col, eb.col, "{} cols", et.key());
+        assert_eq!(ea.edge_ids, eb.edge_ids, "{} edge ids", et.key());
+    }
+    for (nt, xa) in &a.x {
+        assert_eq!(xa.data(), b.x[nt].data(), "{nt} features");
+    }
+    assert_eq!(a.labels, b.labels, "labels");
+}
+
+#[test]
+fn mounted_hetero_pipeline_matches_in_memory_dist_loader() {
+    let g = hetero_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let tp = TypedPartitioning::ldg_hetero(&g, 3, 1.1).unwrap();
+    let bundle = write_bundle_hetero(tmp("hetero_sync"), &g, &tp).unwrap();
+    assert!(bundle.is_typed());
+    assert_eq!(bundle.manifest().node_types.len(), 3);
+    assert_eq!(bundle.manifest().edge_types.len(), 4);
+
+    let in_mem = hetero_partitioned_loader_with(
+        &g,
+        &tp,
+        0,
+        "user",
+        seeds.clone(),
+        hetero_cfg(2),
+        DistOptions::default(),
+    )
+    .unwrap();
+    let mounted = hetero_mounted_loader(
+        &bundle,
+        0,
+        "user",
+        seeds,
+        hetero_cfg(3),
+        DistOptions::default(),
+        LruConfig::default(),
+    )
+    .unwrap();
+
+    for epoch in 0..2u64 {
+        let a: Vec<HeteroBatch> = in_mem.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        let b: Vec<HeteroBatch> = mounted.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), 13); // ceil(200/16)
+        for (x, y) in a.iter().zip(&b) {
+            x.check_invariants().unwrap();
+            assert_hetero_batches_identical(x, y);
+        }
+    }
+
+    assert_eq!(mounted.router_stats(), in_mem.router_stats());
+    assert!(mounted.router_stats().remote_msgs > 0, "typed epoch crossed partitions");
+    assert!(mounted.features().disk_reads().unwrap() > 0);
+    // Unknown seed types are rejected up front.
+    assert!(hetero_mounted_loader(
+        &bundle,
+        0,
+        "ghost",
+        vec![0],
+        hetero_cfg(1),
+        DistOptions::default(),
+        LruConfig::default(),
+    )
+    .is_err());
+}
+
+#[test]
+fn mounted_hetero_async_typed_halo_pipeline_matches_in_memory() {
+    let g = hetero_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let tp = TypedPartitioning::ldg_hetero(&g, 4, 1.1).unwrap();
+    let bundle = write_bundle_hetero(tmp("hetero_async"), &g, &tp).unwrap();
+    let opts = DistOptions {
+        halo_cache: true,
+        async_fetch: true,
+        async_workers: 2,
+        latency: std::time::Duration::from_micros(20),
+    };
+
+    let in_mem =
+        hetero_partitioned_loader_with(&g, &tp, 1, "user", seeds.clone(), hetero_cfg(2), opts)
+            .unwrap();
+    let mounted =
+        hetero_mounted_loader(&bundle, 1, "user", seeds, hetero_cfg(3), opts, LruConfig::default())
+            .unwrap();
+
+    for epoch in 0..2u64 {
+        let a: Vec<HeteroBatch> = in_mem.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        let b: Vec<HeteroBatch> = mounted.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_hetero_batches_identical(x, y);
+        }
+    }
+
+    // Per-type halo replicas built *from disk* behave exactly like the
+    // in-memory ones: same per-type hit/miss counters.
+    assert_eq!(mounted.cache_stats(), in_mem.cache_stats());
+    assert!(
+        mounted.cache_stats().values().map(|c| c.hits).sum::<u64>() > 0,
+        "typed halo rows served locally"
+    );
+    assert!(mounted.features().is_async());
+}
+
+#[test]
+fn lru_byte_accounting_stays_under_budget_and_equivalence_survives() {
+    let g = sbm_graph();
+    let labels = g.y.clone().unwrap();
+    let seeds: Vec<u32> = (0..128).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_budget"), &g, &partitioning).unwrap();
+
+    // A budget of ~40 feature rows for a 500-node graph: constant
+    // thrashing, which must change I/O counts only, never batch bytes.
+    let row_bytes = (g.x.cols() * 4) as u64;
+    let budget = LruConfig { capacity_bytes: 40 * row_bytes };
+    let mounted =
+        mounted_loader(&bundle, 0, seeds.clone(), loader_cfg(2), DistOptions::default(), budget)
+            .unwrap();
+    let single = NeighborLoader::new(
+        Arc::new(InMemoryGraphStore::from_graph(&g)),
+        Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone())),
+        seeds,
+        loader_cfg(2),
+    )
+    .with_labels(labels);
+
+    let a: Vec<Batch> = single.iter_epoch(0).map(|b| b.unwrap()).collect();
+    let b: Vec<Batch> = mounted.iter_epoch(0).map(|b| b.unwrap()).collect();
+    for (x, y) in a.iter().zip(&b) {
+        assert_batches_identical(x, y);
+    }
+
+    let rc = mounted.features().row_cache_stats().unwrap();
+    assert!(rc.bytes_cached <= budget.capacity_bytes, "{rc}");
+    assert!(rc.peak_bytes <= budget.capacity_bytes, "budget is a hard ceiling: {rc}");
+    assert!(rc.evictions > 0, "a 40-row budget over 500 nodes must thrash: {rc}");
+    let reads = mounted.features().disk_reads().unwrap();
+    assert!(reads > 0);
+    assert!(
+        reads <= rc.misses,
+        "every positioned read serves at least one miss (runs coalesce): \
+         {reads} reads vs {} misses",
+        rc.misses
+    );
+}
+
+#[test]
+fn second_epoch_strictly_reduces_disk_reads() {
+    let g = sbm_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_warm"), &g, &partitioning).unwrap();
+
+    // Roomy budget: the whole working set stays resident.
+    let mounted = mounted_loader(
+        &bundle,
+        0,
+        seeds,
+        loader_cfg(2),
+        DistOptions::default(),
+        LruConfig::default(),
+    )
+    .unwrap();
+    let fs = mounted.features();
+
+    for b in mounted.iter_epoch(0) {
+        b.unwrap();
+    }
+    let cold = fs.disk_reads().unwrap();
+    assert!(cold > 0, "first epoch pages rows in from disk");
+
+    // A different epoch shuffles differently but revisits mostly the
+    // same rows: strictly fewer reads.
+    for b in mounted.iter_epoch(1) {
+        b.unwrap();
+    }
+    let warm = fs.disk_reads().unwrap() - cold;
+    assert!(
+        warm < cold,
+        "second epoch must strictly reduce disk reads: {warm} vs {cold}"
+    );
+
+    // Replaying the *same* epoch touches exactly the already-resident
+    // rows: zero disk reads.
+    let before = fs.disk_reads().unwrap();
+    for b in mounted.iter_epoch(1) {
+        b.unwrap();
+    }
+    assert_eq!(fs.disk_reads().unwrap(), before, "fully warm epoch reads nothing");
+    let rc = fs.row_cache_stats().unwrap();
+    assert!(rc.hit_rate() > 0.5, "warm epochs dominate: {rc}");
+}
+
+#[test]
+fn mounted_multi_rank_matches_in_memory_multi_rank() {
+    let g = sbm::generate(&SbmConfig { num_nodes: 400, seed: 3, ..Default::default() }).unwrap();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_ranks"), &g, &partitioning).unwrap();
+    let cfg = LoaderConfig {
+        batch_size: 32,
+        num_workers: 1,
+        shuffle: false,
+        sampler: NeighborSamplerConfig { fanouts: vec![4, 2], ..Default::default() },
+        ..Default::default()
+    };
+    let opts = DistOptions { halo_cache: true, async_fetch: true, ..Default::default() };
+
+    let in_mem = multi_rank_epoch(&g, &partitioning, 4, &cfg, opts, 1).unwrap();
+    let mounted =
+        multi_rank_epoch_mounted(&bundle, 4, &cfg, opts, LruConfig::default(), 1).unwrap();
+
+    assert_eq!(mounted.batches, in_mem.batches);
+    assert_eq!(mounted.sampled_nodes, in_mem.sampled_nodes);
+    for r in 0..4 {
+        for p in 0..4 {
+            assert_eq!(
+                mounted.matrix.msgs(r, p),
+                in_mem.matrix.msgs(r, p),
+                "traffic cell ({r}, {p})"
+            );
+            assert_eq!(mounted.matrix.rows(r, p), in_mem.matrix.rows(r, p));
+        }
+    }
+    for (rank, (a, b)) in mounted.halo.iter().zip(&in_mem.cache).enumerate() {
+        assert_eq!(a, b, "rank {rank} halo counters");
+    }
+    for (rank, (rc, reads)) in mounted.row_cache.iter().zip(&mounted.disk_reads).enumerate() {
+        assert!(*reads > 0, "rank {rank} paged rows from disk");
+        assert!(*reads <= rc.misses, "rank {rank}: reads never exceed misses");
+    }
+    assert_eq!(mounted.rank_seconds.len(), 4);
+    assert!(mounted.skew().imbalance() >= 1.0);
+
+    // Bad rank counts and typed bundles are rejected.
+    assert!(multi_rank_epoch_mounted(&bundle, 0, &cfg, opts, LruConfig::default(), 1).is_err());
+    assert!(multi_rank_epoch_mounted(&bundle, 5, &cfg, opts, LruConfig::default(), 1).is_err());
+    let hg = hetero_graph();
+    let tp = TypedPartitioning::ldg_hetero(&hg, 2, 1.2).unwrap();
+    let typed = write_bundle_hetero(tmp("typed_ranks"), &hg, &tp).unwrap();
+    assert!(multi_rank_epoch_mounted(&typed, 2, &cfg, opts, LruConfig::default(), 1).is_err());
+    assert!(mounted_loader(
+        &typed,
+        0,
+        vec![0],
+        cfg,
+        DistOptions::default(),
+        LruConfig::default()
+    )
+    .is_err());
+}
+
+#[test]
+fn mount_rejects_mismatched_bundles() {
+    // A bundle mounted with a router that disagrees on partition count
+    // or node counts must be rejected, as must unknown ranks.
+    let g = sbm::generate(&SbmConfig { num_nodes: 100, seed: 5, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+    let bundle = write_bundle(tmp("mismatch"), &g, &p).unwrap();
+    assert!(pyg2::dist::PartitionedGraphStore::mount(&bundle, 2).is_err(), "rank 2 of 2");
+    assert!(pyg2::dist::PartitionedFeatureStore::mount(&bundle, 2, LruConfig::default()).is_err());
+    // A router over a different partitioning shape is rejected.
+    let other = ldg_partition(&g.edge_index, 3, 1.1).unwrap();
+    let router = pyg2::dist::TypedRouter::single(
+        pyg2::storage::DEFAULT_GROUP,
+        Arc::new(pyg2::dist::PartitionRouter::new(&other, 0).unwrap()),
+    );
+    assert!(pyg2::dist::PartitionedFeatureStore::mount_with_router(
+        &bundle,
+        router,
+        LruConfig::default()
+    )
+    .is_err());
+}
