@@ -14,6 +14,11 @@
 //! * **bounded-budget behaviour** — a deliberately tiny budget must
 //!   keep its byte ceiling (asserted) while the pipeline still runs;
 //!   evictions and the degraded hit rate are reported.
+//! * **paged adjacency** (`--page-adj`) — the same mounts with the
+//!   topology demand-paged instead of decoded: cold/warm adjacency
+//!   read counters at 2/4/8 partitions, with warm epochs asserted to
+//!   read strictly less adjacency than cold ones and the row+adjacency
+//!   caches asserted to stay jointly under the shared budget.
 //!
 //! Runs under `PYG2_BENCH_QUICK` in CI (bench-smoke job) with bundles
 //! written to a scratch directory under the system temp dir.
@@ -116,6 +121,63 @@ fn main() {
                 std::hint::black_box(b.unwrap());
             }
         });
+
+        // Paged-adjacency series: the same bundle with the topology
+        // demand-paged per neighbor list (--page-adj). Cold pages both
+        // features and adjacency in; warm epochs must re-read strictly
+        // less adjacency, and the two caches share one budget.
+        let lru = LruConfig { page_adjacency: true, ..Default::default() };
+        let paged = mounted_loader(
+            &bundle,
+            0,
+            seeds.clone(),
+            cfg(),
+            DistOptions::default(),
+            lru,
+        )
+        .unwrap();
+        let (pfs, pgs) = (paged.features(), paged.graph());
+        let t = Instant::now();
+        for b in paged.iter_epoch(0) {
+            std::hint::black_box(b.unwrap());
+        }
+        let paged_cold_ms = t.elapsed().as_secs_f64() * 1e3;
+        let adj_cold = pgs.adj_disk_reads().unwrap();
+        assert!(adj_cold > 0, "{parts}p: cold epoch must page adjacency from disk");
+        suite.record_metric(format!("paged_cold_epoch_ms/{parts}p"), paged_cold_ms);
+        suite.record_metric(format!("paged_cold_adj_reads/{parts}p"), adj_cold as f64);
+
+        pfs.reset_io_stats();
+        pgs.reset_adj_io_stats();
+        let t = Instant::now();
+        for b in paged.iter_epoch(0) {
+            std::hint::black_box(b.unwrap());
+        }
+        let paged_warm_ms = t.elapsed().as_secs_f64() * 1e3;
+        let adj_warm = pgs.adj_disk_reads().unwrap();
+        assert!(
+            adj_warm < adj_cold,
+            "{parts}p: warm epoch must read strictly less adjacency \
+             ({adj_warm} vs {adj_cold})"
+        );
+        let rows = pfs.row_cache_stats().unwrap();
+        let adj = pgs.adj_cache_stats().unwrap();
+        assert!(
+            rows.bytes_cached + adj.bytes_cached <= lru.capacity_bytes,
+            "row + adjacency residency must stay under the shared budget"
+        );
+        suite.record_metric(format!("paged_warm_adj_reads/{parts}p"), adj_warm as f64);
+        suite.record_metric(format!("paged_adj_hit_rate/{parts}p"), adj.hit_rate());
+        println!(
+            "  {parts} partitions paged-adj: cold {paged_cold_ms:.1} ms / {adj_cold} adj reads \
+             -> warm {paged_warm_ms:.1} ms / {adj_warm} adj reads ({:.1}% adj hits)",
+            100.0 * adj.hit_rate()
+        );
+        suite.bench(format!("epoch_1024_seeds/mounted_{parts}p_paged_adj_warm"), || {
+            for b in paged.iter_epoch(0) {
+                std::hint::black_box(b.unwrap());
+            }
+        });
     }
 
     // Bounded budget: ~256 rows of a 10k-node graph. The ceiling must
@@ -123,7 +185,7 @@ fn main() {
     {
         let bundle = Bundle::open(scratch.join("4p")).unwrap();
         let row_bytes = (g.x.cols() * 4) as u64;
-        let budget = LruConfig { capacity_bytes: 256 * row_bytes };
+        let budget = LruConfig { capacity_bytes: 256 * row_bytes, ..Default::default() };
         let loader = mounted_loader(
             &bundle,
             0,
@@ -195,8 +257,9 @@ fn main() {
 
     suite.finish();
     println!(
-        "\nD2: mounted runs produce batches identical to the in-memory dist pipeline \
-         (tests/test_persist_equivalence.rs); the cold/warm series above quantify what \
-         the bounded row cache saves once the working set is resident."
+        "\nD2: mounted runs — resident or paged adjacency — produce batches identical \
+         to the in-memory dist pipeline (tests/test_persist_equivalence.rs); the \
+         cold/warm series above quantify what the bounded row and adjacency caches \
+         save once the working set is resident."
     );
 }

@@ -88,6 +88,12 @@ COMMANDS:
                                 (typed bundles auto-detected): topology
                                 from binary adjacency shards, feature
                                 rows demand-paged through a bounded LRU
+              --page-adj        demand-page the adjacency too: neighbor
+                                lists pread per touch through a bounded
+                                block cache sharing the --cache-mb
+                                budget, so topology stays O(batch)
+              --adj-cache-mb M  adjacency share of the budget (default:
+                                a quarter of --cache-mb)
               --rank R --cache-mb M --seed-type T  (mount knobs)
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)

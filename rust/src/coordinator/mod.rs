@@ -620,9 +620,13 @@ fn build_hetero_partitioned_loader(
 
 /// Wire a mounted [`crate::persist::Bundle`] through the full
 /// out-of-core distributed stack, viewed from `local_rank`: the
-/// topology comes from the bundle's binary adjacency shards
-/// ([`crate::dist::PartitionedGraphStore::mount`]), feature rows are
-/// demand-paged from its `.pygf` shards through the bounded LRU
+/// topology comes from the bundle's binary adjacency shards — decoded
+/// at mount ([`crate::dist::PartitionedGraphStore::mount`]) or, with
+/// `lru.page_adjacency`, demand-paged per neighbor list through the
+/// bounded adjacency cache
+/// ([`crate::dist::PartitionedGraphStore::mount_paged`], sharing the
+/// mount's byte budget) — feature rows are demand-paged from its
+/// `.pygf` shards through the bounded LRU
 /// ([`crate::dist::PartitionedFeatureStore::mount_with_router`], budget
 /// from `lru`), and labels come from the bundle. Yields batches
 /// identical to [`partitioned_loader_with`] over the original graph
@@ -644,10 +648,7 @@ pub fn mounted_loader(
     opts: DistOptions,
     lru: crate::persist::LruConfig,
 ) -> Result<crate::dist::DistNeighborLoader> {
-    use crate::dist::{
-        AsyncRouter, DistNeighborLoader, HaloCache, PartitionedFeatureStore,
-        PartitionedGraphStore,
-    };
+    use crate::dist::{AsyncRouter, DistNeighborLoader, HaloCache, PartitionedFeatureStore};
     use crate::error::Error;
     use crate::storage::DEFAULT_GROUP;
     use std::sync::Arc;
@@ -657,7 +658,8 @@ pub fn mounted_loader(
             "bundle is typed (heterogeneous): use hetero_mounted_loader".into(),
         ));
     }
-    let gs = Arc::new(PartitionedGraphStore::mount(bundle, local_rank)?);
+    lru.validate()?;
+    let gs = Arc::new(mount_graph_store(bundle, local_rank, lru)?);
     let mut fs =
         PartitionedFeatureStore::mount_with_router(bundle, gs.typed_router().clone(), lru)?
             .with_latency(opts.latency);
@@ -688,16 +690,38 @@ pub fn mounted_loader(
     }
     // Replica construction read its rows off disk (bypassing the row
     // cache); zero the I/O ledgers so they report epoch costs only.
+    // (Paged-adjacency setup streams shards through uncounted reads,
+    // but reset its ledgers too so both halves start from zero.)
     loader.features().reset_io_stats();
+    loader.graph().reset_adj_io_stats();
     Ok(loader)
+}
+
+/// Mount a bundle's topology honouring the [`crate::persist::LruConfig`]
+/// paging mode: resident decode, or demand-paged shards behind a fresh
+/// [`crate::persist::AdjCache`] sized to the budget's adjacency share.
+fn mount_graph_store(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    lru: crate::persist::LruConfig,
+) -> Result<crate::dist::PartitionedGraphStore> {
+    use std::sync::Arc;
+    if lru.page_adjacency {
+        let cache = Arc::new(crate::persist::AdjCache::new(lru.adj_budget()));
+        crate::dist::PartitionedGraphStore::mount_paged(bundle, local_rank, cache)
+    } else {
+        crate::dist::PartitionedGraphStore::mount(bundle, local_rank)
+    }
 }
 
 /// The typed counterpart of [`mounted_loader`]: mount a heterogeneous
 /// bundle and drive the [`crate::dist::HeteroDistNeighborLoader`] over
-/// it, seeding on `seed_type`. Homogeneous bundles work too (their one
-/// `_default` type is the single-type special case). Batch content is
-/// identical to [`hetero_partitioned_loader_with`] over the original
-/// graph (`tests/test_persist_equivalence.rs`).
+/// it, seeding on `seed_type` (adjacency resident or demand-paged per
+/// `lru.page_adjacency`, exactly as in [`mounted_loader`]).
+/// Homogeneous bundles work too (their one `_default` type is the
+/// single-type special case). Batch content is identical to
+/// [`hetero_partitioned_loader_with`] over the original graph
+/// (`tests/test_persist_equivalence.rs`).
 pub fn hetero_mounted_loader(
     bundle: &crate::persist::Bundle,
     local_rank: u32,
@@ -707,34 +731,36 @@ pub fn hetero_mounted_loader(
     opts: DistOptions,
     lru: crate::persist::LruConfig,
 ) -> Result<crate::dist::HeteroDistNeighborLoader> {
-    use crate::dist::{
-        AsyncRouter, HaloCache, HeteroDistNeighborLoader, PartitionedFeatureStore,
-        PartitionedGraphStore,
-    };
+    use crate::dist::{AsyncRouter, HaloCache, HeteroDistNeighborLoader, PartitionedFeatureStore};
     use crate::storage::{FeatureKey, FeatureStore, DEFAULT_ATTR};
     use std::collections::BTreeMap;
     use std::sync::Arc;
 
     bundle.node_type(seed_type)?; // validate the seed type early
-    let gs = Arc::new(PartitionedGraphStore::mount(bundle, local_rank)?);
+    lru.validate()?;
+    let gs = Arc::new(mount_graph_store(bundle, local_rank, lru)?);
     let mut fs =
         PartitionedFeatureStore::mount_with_router(bundle, gs.typed_router().clone(), lru)?
             .with_latency(opts.latency);
     if opts.halo_cache {
         let mut caches = BTreeMap::new();
+        // One edge sweep computes every node type's halo (on a paged
+        // mount this streams each shard file once, not once per
+        // adjacent type).
+        let halos = gs.halos()?;
         for nt in &bundle.manifest().node_types {
             // Gather the typed halo rows straight off the shard files
             // (cache/latency/counter-free raw view) — the same bytes a
             // routed fetch would return, so hits stay bit-identical to
             // the uncached path, without polluting the bounded row
             // cache with rows the replica will intercept forever after.
-            let halo = gs.halo_nodes(&nt.name)?;
+            let halo = &halos[&nt.name];
             let idx: Vec<usize> = halo.iter().map(|&v| v as usize).collect();
             let key = FeatureKey::new(&nt.name, DEFAULT_ATTR);
             let rows = fs.raw_reader().expect("mounted store").get(&key, &idx)?;
             caches.insert(
                 nt.name.clone(),
-                Arc::new(HaloCache::from_group(key, &halo, rows, nt.num_nodes, local_rank)?),
+                Arc::new(HaloCache::from_group(key, halo, rows, nt.num_nodes, local_rank)?),
             );
         }
         fs = fs.with_halo_caches(caches)?;
@@ -754,6 +780,7 @@ pub fn hetero_mounted_loader(
     // Replica construction read its rows off disk (bypassing the row
     // cache); zero the I/O ledgers so they report epoch costs only.
     loader.features().reset_io_stats();
+    loader.graph().reset_adj_io_stats();
     Ok(loader)
 }
 
@@ -768,14 +795,30 @@ pub struct MountedMultiRankReport {
     pub halo: Vec<Option<crate::dist::CacheStats>>,
     /// Per-rank bounded-LRU row cache counters.
     pub row_cache: Vec<crate::persist::RowCacheStats>,
-    /// Per-rank positioned disk reads over the bundle's shard files.
+    /// Per-rank adjacency block cache counters (`None` unless the
+    /// mount pages adjacency — `--page-adj`). Together with
+    /// `row_cache` this is the [`crate::persist::MountCacheStats`]
+    /// split of the shared budget.
+    pub adj_cache: Vec<Option<crate::persist::RowCacheStats>>,
+    /// Per-rank positioned disk reads over the bundle's feature shards.
     pub disk_reads: Vec<u64>,
+    /// Per-rank positioned disk reads over the adjacency shards (zero
+    /// when the topology is resident).
+    pub adj_disk_reads: Vec<u64>,
     pub rank_seconds: Vec<f64>,
     pub batches: usize,
     pub sampled_nodes: usize,
 }
 
 impl MountedMultiRankReport {
+    /// The row/adjacency cache split of one rank's shared budget.
+    pub fn mount_cache_stats(&self, rank: usize) -> crate::persist::MountCacheStats {
+        crate::persist::MountCacheStats {
+            rows: self.row_cache[rank],
+            adj: self.adj_cache[rank],
+        }
+    }
+
     /// Min/max/mean of [`MountedMultiRankReport::rank_seconds`].
     pub fn skew(&self) -> RankSkew {
         RankSkew::from_seconds(&self.rank_seconds)
@@ -787,11 +830,11 @@ impl MountedMultiRankReport {
 /// bundle from its own rank's view and training on the seeds its
 /// partition owns — the full distributed pipeline with **no rank ever
 /// holding the unpartitioned feature matrix in memory** (feature rows
-/// are demand-paged; adjacency shards, compact next to features, are
-/// loaded at mount — see the ROADMAP's demand-paged-adjacency
-/// follow-up). Aggregates every rank's traffic row into a
-/// [`crate::dist::TrafficMatrix`] alongside the per-rank cache and
-/// disk-I/O ledgers.
+/// are demand-paged; adjacency shards are decoded at mount, or with
+/// `lru.page_adjacency` demand-paged too, so O(batch) memory covers
+/// features *and* topology). Aggregates every rank's traffic row into
+/// a [`crate::dist::TrafficMatrix`] alongside the per-rank cache and
+/// disk-I/O ledgers (row and adjacency halves reported separately).
 pub fn multi_rank_epoch_mounted(
     bundle: &crate::persist::Bundle,
     ranks: usize,
@@ -820,7 +863,9 @@ pub fn multi_rank_epoch_mounted(
     let mut matrix = crate::dist::TrafficMatrix::new(ranks, parts);
     let mut halo = Vec::with_capacity(ranks);
     let mut row_cache = Vec::with_capacity(ranks);
+    let mut adj_cache = Vec::with_capacity(ranks);
     let mut disk_reads = Vec::with_capacity(ranks);
+    let mut adj_disk_reads = Vec::with_capacity(ranks);
     let mut rank_seconds = Vec::with_capacity(ranks);
     let mut batches = 0usize;
     let mut sampled_nodes = 0usize;
@@ -844,13 +889,17 @@ pub fn multi_rank_epoch_mounted(
         matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
         halo.push(loader.cache_stats());
         row_cache.push(loader.features().row_cache_stats().expect("mounted store"));
+        adj_cache.push(loader.graph().adj_cache_stats());
         disk_reads.push(loader.features().disk_reads().expect("mounted store"));
+        adj_disk_reads.push(loader.graph().adj_disk_reads().unwrap_or(0));
     }
     Ok(MountedMultiRankReport {
         matrix,
         halo,
         row_cache,
+        adj_cache,
         disk_reads,
+        adj_disk_reads,
         rank_seconds,
         batches,
         sampled_nodes,

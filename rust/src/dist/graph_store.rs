@@ -14,6 +14,16 @@
 //! local/distributed equivalence rests on, for the homogeneous and the
 //! heterogeneous pipeline alike.
 //!
+//! A shard's backing is a [`Topology`]: **resident** (decoded CSC/CSR
+//! halves, built in memory or loaded whole off a bundle) or **paged**
+//! (a [`crate::persist::PagedAdjacency`] per partition serving
+//! neighbor lists by positioned reads through the mount's bounded
+//! [`crate::persist::AdjCache`] — `pyg2 dist --mount DIR --page-adj`,
+//! the ROADMAP's demand-paged-adjacency item). Both are read through
+//! [`EdgeShards::read_in`] / [`EdgeShards::read_out`], which return
+//! slices that are byte-identical across backings, so the samplers are
+//! backing-agnostic and seed-for-seed equivalence holds out of the box.
+//!
 //! The homogeneous store is the **single-type special case**: one node
 //! type (`_default`), one edge type, one router — not a parallel code
 //! path. [`PartitionedGraphStore::from_edge_index`] simply wraps the
@@ -23,11 +33,14 @@
 //! The store also implements [`GraphStore`] by serving merged global
 //! views per edge type, so non-partition-aware components (plain
 //! `NeighborSampler`, `HeteroNeighborSampler`, the inference server) can
-//! run over it unchanged.
+//! run over it unchanged. (Merged views need the COO resident, so they
+//! are unavailable — a clean [`Error`], not a silent materialization —
+//! on paged mounts.)
 
 use super::{PartitionRouter, RouterStats, TypedRouter};
 use crate::error::{Error, Result};
 use crate::graph::{Compressed, EdgeIndex, EdgeType, HeteroGraph};
+use crate::persist::{AdjBuf, AdjCache, PagedAdjacency, PagedEdgeTime};
 use crate::storage::graph_store::compress_bipartite;
 use crate::storage::{default_edge_type, GraphStore, DEFAULT_GROUP};
 use std::collections::BTreeMap;
@@ -45,16 +58,35 @@ struct GraphShard {
     csr: Compressed,
 }
 
-/// One edge type's sharded topology: per-partition shards, the original
-/// COO (for the merged views), and per-edge-type traffic counters.
+/// How one edge type's shards are backed (see the module docs).
+enum Topology {
+    /// Decoded in RAM, with the original COO kept for merged views.
+    Resident {
+        shards: Vec<GraphShard>,
+        src: Vec<u32>,
+        dst: Vec<u32>,
+    },
+    /// Demand-paged off `.pyga` shard files; neighbor lists flow
+    /// through the mount's shared [`AdjCache`], timestamps through the
+    /// optional block-paged reader.
+    Paged {
+        shards: Vec<Arc<PagedAdjacency>>,
+        time: Option<Arc<PagedEdgeTime>>,
+    },
+}
+
+/// One edge type's sharded topology: per-partition shards (resident or
+/// paged) and per-edge-type traffic counters.
 pub struct EdgeShards {
     src_router: Arc<PartitionRouter>,
     dst_router: Arc<PartitionRouter>,
-    shards: Vec<GraphShard>,
-    src: Vec<u32>,
-    dst: Vec<u32>,
+    topo: Topology,
     n_src: usize,
     n_dst: usize,
+    num_edges: usize,
+    /// Resident edge timestamps (global edge-id order). Paged mounts
+    /// serve timestamps per candidate instead (see
+    /// [`EdgeShards::read_in_timed`]).
     edge_time: Option<Arc<Vec<i64>>>,
     global_csr: OnceLock<Arc<Compressed>>,
     global_csc: OnceLock<Arc<Compressed>>,
@@ -123,14 +155,14 @@ impl EdgeShards {
             shards.push(GraphShard { csc, csr });
         }
 
+        let num_edges = src.len();
         Ok(Self {
             src_router,
             dst_router,
-            shards,
-            src,
-            dst,
+            topo: Topology::Resident { shards, src, dst },
             n_src,
             n_dst,
+            num_edges,
             edge_time,
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
@@ -141,23 +173,77 @@ impl EdgeShards {
     }
 
     /// In-neighbors of dst node `v` served by its owning shard:
-    /// `(type-global src ids, type-global edge ids)`. Does **not** touch
-    /// the traffic counters — the caller decides how accesses coalesce
-    /// into messages (see [`EdgeShards::record_hop`]).
-    pub fn in_slice(&self, v: u32) -> (&[u32], &[u32]) {
-        let shard = &self.shards[self.dst_router.owner(v) as usize];
-        let (lo, hi) = (shard.csc.indptr[v as usize], shard.csc.indptr[v as usize + 1]);
-        (&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi])
+    /// `(type-global src ids, type-global edge ids)`. Resident shards
+    /// return borrowed slices; paged shards fill `buf` through the
+    /// adjacency cache — either way the slices are byte-identical, the
+    /// invariant the seed-for-seed equivalence rests on. Does **not**
+    /// touch the traffic counters — the caller decides how accesses
+    /// coalesce into messages (see [`EdgeShards::record_hop`]).
+    pub fn read_in<'a>(&'a self, v: u32, buf: &'a mut AdjBuf) -> Result<(&'a [u32], &'a [u32])> {
+        match &self.topo {
+            Topology::Resident { shards, .. } => {
+                let shard = &shards[self.dst_router.owner(v) as usize];
+                let (lo, hi) = (shard.csc.indptr[v as usize], shard.csc.indptr[v as usize + 1]);
+                Ok((&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi]))
+            }
+            Topology::Paged { shards, .. } => {
+                shards[self.dst_router.owner(v) as usize].in_list(v, buf)?;
+                Ok((&*buf).nbrs_eids())
+            }
+        }
     }
 
-    /// Out-neighbors of src node `v` served by its owning shard.
-    pub fn out_slice(&self, v: u32) -> (&[u32], &[u32]) {
-        let shard = &self.shards[self.src_router.owner(v) as usize];
-        let (lo, hi) = (shard.csr.indptr[v as usize], shard.csr.indptr[v as usize + 1]);
-        (&shard.csr.indices[lo..hi], &shard.csr.perm[lo..hi])
+    /// [`EdgeShards::read_in`] resolving per-candidate edge timestamps
+    /// too, for the temporal sampling path: resident shards return
+    /// `None` (the caller filters through the resident global array —
+    /// [`EdgeShards::resident_edge_time`]); paged shards with a
+    /// timestamp file return times aligned with the neighbor slice,
+    /// paged in blocks through the same cache budget.
+    pub fn read_in_timed<'a>(
+        &'a self,
+        v: u32,
+        buf: &'a mut AdjBuf,
+        want_times: bool,
+    ) -> Result<(&'a [u32], &'a [u32], Option<&'a [i64]>)> {
+        match &self.topo {
+            Topology::Resident { shards, .. } => {
+                let shard = &shards[self.dst_router.owner(v) as usize];
+                let (lo, hi) = (shard.csc.indptr[v as usize], shard.csc.indptr[v as usize + 1]);
+                Ok((&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi], None))
+            }
+            Topology::Paged { shards, time } => {
+                shards[self.dst_router.owner(v) as usize].in_list(v, buf)?;
+                let timed = match (want_times, time) {
+                    (true, Some(t)) => {
+                        buf.resolve_times(t)?;
+                        true
+                    }
+                    _ => false,
+                };
+                let buf: &'a AdjBuf = buf;
+                let (nbrs, eids) = buf.nbrs_eids();
+                Ok((nbrs, eids, timed.then(|| buf.times())))
+            }
+        }
     }
 
-    /// Owning partition of dst node `v` (the shard `in_slice` reads).
+    /// Out-neighbors of src node `v` served by its owning shard (see
+    /// [`EdgeShards::read_in`]).
+    pub fn read_out<'a>(&'a self, v: u32, buf: &'a mut AdjBuf) -> Result<(&'a [u32], &'a [u32])> {
+        match &self.topo {
+            Topology::Resident { shards, .. } => {
+                let shard = &shards[self.src_router.owner(v) as usize];
+                let (lo, hi) = (shard.csr.indptr[v as usize], shard.csr.indptr[v as usize + 1]);
+                Ok((&shard.csr.indices[lo..hi], &shard.csr.perm[lo..hi]))
+            }
+            Topology::Paged { shards, .. } => {
+                shards[self.src_router.owner(v) as usize].out_list(v, buf)?;
+                Ok((&*buf).nbrs_eids())
+            }
+        }
+    }
+
+    /// Owning partition of dst node `v` (the shard `read_in` reads).
     pub fn dst_owner(&self, v: u32) -> u32 {
         self.dst_router.owner(v)
     }
@@ -166,6 +252,13 @@ impl EdgeShards {
     /// it — the in-edges live with the destination's owner).
     pub fn dst_router(&self) -> &Arc<PartitionRouter> {
         &self.dst_router
+    }
+
+    /// Resident edge timestamps, if this backing holds them (`None` on
+    /// paged mounts, whose timestamps flow per candidate through
+    /// [`EdgeShards::read_in_timed`]).
+    pub fn resident_edge_time(&self) -> Option<&Arc<Vec<i64>>> {
+        self.edge_time.as_ref()
     }
 
     /// Account one hop's shard accesses for this edge type: the local
@@ -206,8 +299,16 @@ impl EdgeShards {
 
     /// The per-partition `(csc, csr)` halves, in partition order — what
     /// the [`crate::persist`] bundle writer serializes shard for shard.
-    pub(crate) fn shard_views(&self) -> Vec<(&Compressed, &Compressed)> {
-        self.shards.iter().map(|s| (&s.csc, &s.csr)).collect()
+    /// Only resident backings can be written back out.
+    pub(crate) fn shard_views(&self) -> Result<Vec<(&Compressed, &Compressed)>> {
+        match &self.topo {
+            Topology::Resident { shards, .. } => {
+                Ok(shards.iter().map(|s| (&s.csc, &s.csr)).collect())
+            }
+            Topology::Paged { .. } => Err(Error::Storage(
+                "paged adjacency shards cannot be re-serialized (copy the bundle instead)".into(),
+            )),
+        }
     }
 
     /// `(n_src, n_dst)` of this edge type's id spaces.
@@ -215,9 +316,87 @@ impl EdgeShards {
         (self.n_src, self.n_dst)
     }
 
-    /// Edge timestamps in global edge-id order, if present.
+    /// Edge timestamps in global edge-id order, if resident.
     pub(crate) fn edge_time_slice(&self) -> Option<&[i64]> {
         self.edge_time.as_ref().map(|t| t.as_slice())
+    }
+
+    /// The resident COO (merged-view backing); an [`Error`] on paged
+    /// mounts, which never materialize it.
+    fn coo(&self) -> Result<(&[u32], &[u32])> {
+        match &self.topo {
+            Topology::Resident { src, dst, .. } => Ok((src, dst)),
+            Topology::Paged { .. } => Err(Error::Storage(
+                "merged global adjacency views are unavailable on a paged mount \
+                 (--page-adj keeps the COO on disk)"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Visit every edge `(src, dst)` of this type exactly once. The
+    /// resident backing walks its COO; the paged backing streams the
+    /// in-edge shards (which tile the edge set) with chunked, uncounted
+    /// reads and O(chunk) memory — the setup path behind halo
+    /// computation and cut-edge counts on a paged mount.
+    pub(crate) fn for_each_edge(&self, f: &mut dyn FnMut(u32, u32)) -> Result<()> {
+        match &self.topo {
+            Topology::Resident { src, dst, .. } => {
+                for (&s, &d) in src.iter().zip(dst) {
+                    f(s, d);
+                }
+                Ok(())
+            }
+            Topology::Paged { shards, .. } => {
+                for shard in shards {
+                    shard.stream(false, |d, srcs| {
+                        for &s in srcs {
+                            f(s, d);
+                        }
+                    })?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Per-partition `(in_edges, out_edges)` stored by each shard —
+    /// from the decoded halves when resident, from the shard headers
+    /// when paged.
+    fn shard_sizes(&self) -> Vec<(usize, usize)> {
+        match &self.topo {
+            Topology::Resident { shards, .. } => shards
+                .iter()
+                .map(|s| (s.csc.num_edges(), s.csr.num_edges()))
+                .collect(),
+            Topology::Paged { shards, .. } => shards
+                .iter()
+                .map(|s| (s.csc_nnz(), s.csr_nnz()))
+                .collect(),
+        }
+    }
+
+    /// Demand-paged disk reads of this edge type's shards (and its
+    /// timestamp file); zero when resident.
+    fn paged_disk_reads(&self) -> u64 {
+        match &self.topo {
+            Topology::Resident { .. } => 0,
+            Topology::Paged { shards, time } => {
+                shards.iter().map(|s| s.disk_reads()).sum::<u64>()
+                    + time.as_ref().map_or(0, |t| t.disk_reads())
+            }
+        }
+    }
+
+    fn reset_paged_disk_reads(&self) {
+        if let Topology::Paged { shards, time } = &self.topo {
+            for s in shards {
+                s.reset_disk_reads();
+            }
+            if let Some(t) = time {
+                t.reset_disk_reads();
+            }
+        }
     }
 
     /// Rebuild from shard halves loaded off a [`crate::persist::Bundle`]
@@ -329,11 +508,10 @@ impl EdgeShards {
         Ok(Self {
             src_router,
             dst_router,
-            shards,
-            src,
-            dst,
+            topo: Topology::Resident { shards, src, dst },
             n_src,
             n_dst,
+            num_edges,
             edge_time,
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
@@ -343,18 +521,82 @@ impl EdgeShards {
         })
     }
 
+    /// Build the demand-paged backing over opened shard readers (one
+    /// per partition, in partition order). Validation is O(nodes), not
+    /// O(edges) decoded: each reader has already stamp- and
+    /// checksum-verified its file at open; here the per-shard `indptr`s
+    /// are stream-checked for monotonicity, span, and ownership (a
+    /// structurally valid shard from a *different* partitioning fails
+    /// here, not with silently wrong neighbors), and the shard nnz
+    /// sums must tile the edge set exactly.
+    pub(crate) fn from_paged(
+        shards: Vec<Arc<PagedAdjacency>>,
+        time: Option<Arc<PagedEdgeTime>>,
+        n_src: usize,
+        n_dst: usize,
+        num_edges: usize,
+        src_router: Arc<PartitionRouter>,
+        dst_router: Arc<PartitionRouter>,
+    ) -> Result<Self> {
+        if shards.len() != dst_router.num_parts() {
+            return Err(Error::Storage(format!(
+                "{} adjacency shards for {} partitions",
+                shards.len(),
+                dst_router.num_parts()
+            )));
+        }
+        if src_router.num_nodes() != n_src || dst_router.num_nodes() != n_dst {
+            return Err(Error::Storage(
+                "adjacency shard dimensions do not match the routers".into(),
+            ));
+        }
+        let (mut in_total, mut out_total) = (0usize, 0usize);
+        for shard in &shards {
+            in_total += shard.csc_nnz();
+            out_total += shard.csr_nnz();
+            let dst_owner = |v: u32| dst_router.owner(v);
+            let src_owner = |v: u32| src_router.owner(v);
+            shard.validate_indptr(false, &dst_owner)?;
+            shard.validate_indptr(true, &src_owner)?;
+        }
+        if in_total != num_edges || out_total != num_edges {
+            return Err(Error::Storage(format!(
+                "adjacency shards hold {in_total} in-edges / {out_total} out-edges, \
+                 edge type has {num_edges} (shards must tile the edge set)"
+            )));
+        }
+        Ok(Self {
+            src_router,
+            dst_router,
+            topo: Topology::Paged { shards, time },
+            n_src,
+            n_dst,
+            num_edges,
+            edge_time: None,
+            global_csr: OnceLock::new(),
+            global_csc: OnceLock::new(),
+            local_msgs: AtomicU64::new(0),
+            remote_msgs: AtomicU64::new(0),
+            remote_rows: AtomicU64::new(0),
+        })
+    }
+
     pub fn num_edges(&self) -> usize {
-        self.src.len()
+        self.num_edges
     }
 
     /// Edges whose endpoints live on different partitions (under the
-    /// src/dst types' respective partitionings).
-    pub fn num_cut_edges(&self) -> usize {
-        self.src
-            .iter()
-            .zip(&self.dst)
-            .filter(|(&s, &d)| self.src_router.owner(s) != self.dst_router.owner(d))
-            .count()
+    /// src/dst types' respective partitionings). Fallible because a
+    /// paged backing walks its shard files to count.
+    pub fn num_cut_edges(&self) -> Result<usize> {
+        let mut cut = 0usize;
+        let (sr, dr) = (Arc::clone(&self.src_router), Arc::clone(&self.dst_router));
+        self.for_each_edge(&mut |s, d| {
+            if sr.owner(s) != dr.owner(d) {
+                cut += 1;
+            }
+        })?;
+        Ok(cut)
     }
 }
 
@@ -365,6 +607,9 @@ pub struct PartitionedGraphStore {
     num_nodes: BTreeMap<String, usize>,
     node_time: BTreeMap<String, Arc<Vec<i64>>>,
     edges: BTreeMap<EdgeType, EdgeShards>,
+    /// The shared adjacency block cache of a paged mount (`None` when
+    /// the topology is resident).
+    adj_cache: Option<Arc<AdjCache>>,
 }
 
 impl PartitionedGraphStore {
@@ -397,6 +642,7 @@ impl PartitionedGraphStore {
             num_nodes,
             node_time: BTreeMap::new(),
             edges: edge_map,
+            adj_cache: None,
         })
     }
 
@@ -449,19 +695,16 @@ impl PartitionedGraphStore {
             )?;
             edges.insert(et.clone(), shards);
         }
-        Ok(Self { router, num_nodes, node_time, edges })
+        Ok(Self { router, num_nodes, node_time, edges, adj_cache: None })
     }
 
-    /// Mount a [`crate::persist::Bundle`]'s topology, viewed from
-    /// `local_rank`: per-type routers come from the bundle's ownership
-    /// vectors, and every `(edge_type, partition)` CSC/CSR shard is
-    /// loaded from its binary shard file — no original dataset, no
-    /// re-partitioning. Shard slices are bit-identical to what
-    /// [`PartitionedGraphStore::from_graph`] /
-    /// [`PartitionedGraphStore::from_hetero`] build in memory, so the
-    /// mounted sampler pipeline is seed-for-seed identical
-    /// (`tests/test_persist_equivalence.rs`).
-    pub fn mount(bundle: &crate::persist::Bundle, local_rank: u32) -> Result<Self> {
+    /// Per-type routers, node counts and node timestamps of a bundle —
+    /// the shared first half of both mount paths.
+    #[allow(clippy::type_complexity)]
+    fn mount_routers(
+        bundle: &crate::persist::Bundle,
+        local_rank: u32,
+    ) -> Result<(TypedRouter, BTreeMap<String, usize>, BTreeMap<String, Arc<Vec<i64>>>)> {
         let m = bundle.manifest();
         let mut routers = BTreeMap::new();
         let mut num_nodes = BTreeMap::new();
@@ -481,9 +724,22 @@ impl PartitionedGraphStore {
                 node_time.insert(nt.name.clone(), Arc::new(t));
             }
         }
-        let router = TypedRouter::from_routers(routers)?;
+        Ok((TypedRouter::from_routers(routers)?, num_nodes, node_time))
+    }
+
+    /// Mount a [`crate::persist::Bundle`]'s topology, viewed from
+    /// `local_rank`: per-type routers come from the bundle's ownership
+    /// vectors, and every `(edge_type, partition)` CSC/CSR shard is
+    /// loaded from its binary shard file — no original dataset, no
+    /// re-partitioning. Shard slices are bit-identical to what
+    /// [`PartitionedGraphStore::from_graph`] /
+    /// [`PartitionedGraphStore::from_hetero`] build in memory, so the
+    /// mounted sampler pipeline is seed-for-seed identical
+    /// (`tests/test_persist_equivalence.rs`).
+    pub fn mount(bundle: &crate::persist::Bundle, local_rank: u32) -> Result<Self> {
+        let (router, num_nodes, node_time) = Self::mount_routers(bundle, local_rank)?;
         let mut edges = BTreeMap::new();
-        for et in &m.edge_types {
+        for et in &bundle.manifest().edge_types {
             let shards = bundle.load_adjacency(&et.ty)?;
             let es = EdgeShards::from_mounted(
                 shards,
@@ -496,7 +752,68 @@ impl PartitionedGraphStore {
             )?;
             edges.insert(et.ty.clone(), es);
         }
-        Ok(Self { router, num_nodes, node_time, edges })
+        Ok(Self { router, num_nodes, node_time, edges, adj_cache: None })
+    }
+
+    /// [`PartitionedGraphStore::mount`] in **demand-paged** mode
+    /// (`pyg2 dist --mount DIR --page-adj`): adjacency shards are
+    /// opened for positioned reads instead of decoded — neighbor lists
+    /// are `pread` per touch and held by `cache`, the bounded
+    /// [`AdjCache`] sharing the mount's byte budget with the feature
+    /// [`crate::persist::RowCache`] — so resident topology stays
+    /// O(cache budget) no matter how many edges the bundle holds, and
+    /// the whole distributed pipeline runs with O(batch) memory for
+    /// features *and* topology. Serves byte-identical neighbor lists
+    /// (`tests/test_paged_adjacency.rs`), so the pipeline stays
+    /// seed-for-seed identical to the resident and in-memory paths.
+    pub fn mount_paged(
+        bundle: &crate::persist::Bundle,
+        local_rank: u32,
+        cache: Arc<AdjCache>,
+    ) -> Result<Self> {
+        let (router, num_nodes, node_time) = Self::mount_routers(bundle, local_rank)?;
+        let parts = bundle.num_parts();
+        let n_et = bundle.manifest().edge_types.len();
+        // Namespace this mount's readers within the cache: one id per
+        // (edge type, partition) shard plus one per timestamp file, so
+        // a cache shared across mounts (one budget, several bundles)
+        // can never serve one bundle's neighbor lists for another's.
+        let base = cache.reserve_ids((n_et * parts + n_et) as u32)?;
+        let mut edges = BTreeMap::new();
+        for (ei, et) in bundle.manifest().edge_types.iter().enumerate() {
+            let mut shards = Vec::with_capacity(parts);
+            for p in 0..parts {
+                shards.push(Arc::new(PagedAdjacency::open(
+                    bundle.adjacency_shard_path(&et.ty, p)?,
+                    crate::persist::AdjStamp { et_index: ei as u64, partition: p as u64 },
+                    num_nodes[&et.ty.src],
+                    num_nodes[&et.ty.dst],
+                    et.num_edges,
+                    base + (ei * parts + p) as u32,
+                    Arc::clone(&cache),
+                )?));
+            }
+            let time = match bundle.edge_time_path(&et.ty)? {
+                Some(path) => Some(Arc::new(PagedEdgeTime::open(
+                    path,
+                    et.num_edges,
+                    base + (n_et * parts + ei) as u32,
+                    Arc::clone(&cache),
+                )?)),
+                None => None,
+            };
+            let es = EdgeShards::from_paged(
+                shards,
+                time,
+                num_nodes[&et.ty.src],
+                num_nodes[&et.ty.dst],
+                et.num_edges,
+                Arc::clone(router.router(&et.ty.src)?),
+                Arc::clone(router.router(&et.ty.dst)?),
+            )?;
+            edges.insert(et.ty.clone(), es);
+        }
+        Ok(Self { router, num_nodes, node_time, edges, adj_cache: Some(cache) })
     }
 
     /// The local rank's 1-hop halo of one node type, computed from the
@@ -507,7 +824,8 @@ impl PartitionedGraphStore {
     /// [`crate::partition::TypedPartitioning::halo_nodes`] /
     /// [`crate::partition::Partitioning::halo_nodes`] without needing
     /// the original graph, which is what the mounted pipeline has to
-    /// work with.
+    /// work with. Paged mounts stream the shard files (O(chunk)
+    /// memory, uncounted reads) instead of walking a resident COO.
     pub fn halo_nodes(&self, node_type: &str) -> Result<Vec<u32>> {
         let own = self.router.router(node_type)?;
         let rank = own.local_rank();
@@ -516,21 +834,80 @@ impl PartitionedGraphStore {
             if et.src != node_type && et.dst != node_type {
                 continue;
             }
-            for (&s, &d) in es.src.iter().zip(&es.dst) {
-                let (os, od) = (es.src_router.owner(s), es.dst_router.owner(d));
-                if et.src == node_type && od == rank && os != rank {
+            let (sr, dr) = (Arc::clone(&es.src_router), Arc::clone(&es.dst_router));
+            let (src_is_nt, dst_is_nt) = (et.src == node_type, et.dst == node_type);
+            es.for_each_edge(&mut |s, d| {
+                let (os, od) = (sr.owner(s), dr.owner(d));
+                if src_is_nt && od == rank && os != rank {
                     in_halo[s as usize] = true;
                 }
-                if et.dst == node_type && os == rank && od != rank {
+                if dst_is_nt && os == rank && od != rank {
                     in_halo[d as usize] = true;
                 }
-            }
+            })?;
         }
         Ok(in_halo
             .iter()
             .enumerate()
             .filter(|(_, &h)| h)
             .map(|(v, _)| v as u32)
+            .collect())
+    }
+
+    /// Every node type's 1-hop halo in **one pass over each edge type**
+    /// — equals calling [`PartitionedGraphStore::halo_nodes`] per type,
+    /// but on a paged mount each shard file is streamed once instead of
+    /// once per adjacent node type (the edge walk already visits both
+    /// endpoints). This is what the typed mounted loader uses to build
+    /// its per-type halo replicas.
+    pub fn halos(&self) -> Result<BTreeMap<String, Vec<u32>>> {
+        let mut flags: BTreeMap<String, Vec<bool>> = self
+            .num_nodes
+            .iter()
+            .map(|(nt, &n)| (nt.clone(), vec![false; n]))
+            .collect();
+        for (et, es) in &self.edges {
+            let (sr, dr) = (Arc::clone(&es.src_router), Arc::clone(&es.dst_router));
+            let rank = dr.local_rank();
+            if et.src == et.dst {
+                let f = flags.get_mut(&et.src).expect("node type known");
+                es.for_each_edge(&mut |s, d| {
+                    let (os, od) = (sr.owner(s), dr.owner(d));
+                    if od == rank && os != rank {
+                        f[s as usize] = true;
+                    }
+                    if os == rank && od != rank {
+                        f[d as usize] = true;
+                    }
+                })?;
+            } else {
+                // Two distinct map entries need simultaneous mutation:
+                // take the src flags out for the walk, put them back.
+                let mut sf = std::mem::take(flags.get_mut(&et.src).expect("node type known"));
+                let df = flags.get_mut(&et.dst).expect("node type known");
+                es.for_each_edge(&mut |s, d| {
+                    let (os, od) = (sr.owner(s), dr.owner(d));
+                    if od == rank && os != rank {
+                        sf[s as usize] = true;
+                    }
+                    if os == rank && od != rank {
+                        df[d as usize] = true;
+                    }
+                })?;
+                *flags.get_mut(&et.src).expect("node type known") = sf;
+            }
+        }
+        Ok(flags
+            .into_iter()
+            .map(|(nt, f)| {
+                let halo = f
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &h)| h)
+                    .map(|(v, _)| v as u32)
+                    .collect();
+                (nt, halo)
+            })
             .collect())
     }
 
@@ -556,6 +933,42 @@ impl PartitionedGraphStore {
             .ok_or_else(|| Error::Storage(format!("unknown edge type {}", et.key())))
     }
 
+    /// Whether the topology is served by demand paging (`--page-adj`).
+    pub fn is_paged(&self) -> bool {
+        self.adj_cache.is_some()
+    }
+
+    /// The shared adjacency block cache of a paged mount.
+    pub fn adj_cache(&self) -> Option<&Arc<AdjCache>> {
+        self.adj_cache.as_ref()
+    }
+
+    /// Hit/miss/evict/byte counters of the adjacency cache (`None` on
+    /// resident topologies) — the adjacency half of the
+    /// [`crate::persist::MountCacheStats`] split.
+    pub fn adj_cache_stats(&self) -> Option<crate::persist::RowCacheStats> {
+        self.adj_cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Demand-paged positioned reads over every adjacency shard (and
+    /// timestamp file) of a paged mount; `None` when resident.
+    pub fn adj_disk_reads(&self) -> Option<u64> {
+        self.adj_cache.as_ref()?;
+        Some(self.edges.values().map(|es| es.paged_disk_reads()).sum())
+    }
+
+    /// Zero the paged-adjacency I/O counters — cache stats and
+    /// per-shard disk reads — without dropping cached blocks (benches
+    /// measure cold-vs-warm phases).
+    pub fn reset_adj_io_stats(&self) {
+        if let Some(cache) = &self.adj_cache {
+            cache.reset_stats();
+            for es in self.edges.values() {
+                es.reset_paged_disk_reads();
+            }
+        }
+    }
+
     /// Per-partition `(in_edges, out_edges)` shard sizes summed over edge
     /// types — the storage each simulated node actually holds. Together
     /// with [`crate::dist::HaloCache::replicated_bytes`] this is the
@@ -564,18 +977,23 @@ impl PartitionedGraphStore {
     pub fn shard_edge_counts(&self) -> Vec<(usize, usize)> {
         let mut counts = vec![(0usize, 0usize); self.num_parts()];
         for es in self.edges.values() {
-            for (p, shard) in es.shards.iter().enumerate() {
-                counts[p].0 += shard.csc.num_edges();
-                counts[p].1 += shard.csr.num_edges();
+            for (p, (in_e, out_e)) in es.shard_sizes().into_iter().enumerate() {
+                counts[p].0 += in_e;
+                counts[p].1 += out_e;
             }
         }
         counts
     }
 
     /// Edges whose endpoints live on different partitions, summed over
-    /// edge types (the traffic-generating edges).
-    pub fn num_cut_edges(&self) -> usize {
-        self.edges.values().map(|es| es.num_cut_edges()).sum()
+    /// edge types (the traffic-generating edges). Fallible on paged
+    /// mounts, which walk their shard files to count.
+    pub fn num_cut_edges(&self) -> Result<usize> {
+        let mut total = 0usize;
+        for es in self.edges.values() {
+            total += es.num_cut_edges()?;
+        }
+        Ok(total)
     }
 
     /// Per-edge-type traffic snapshot (messages attributed to the
@@ -610,15 +1028,17 @@ impl GraphStore for PartitionedGraphStore {
 
     fn csr(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
         let es = self.edges_of(et)?;
+        let (src, dst) = es.coo()?;
         Ok(Arc::clone(es.global_csr.get_or_init(|| {
-            Arc::new(compress_bipartite(&es.src, &es.dst, es.n_src))
+            Arc::new(compress_bipartite(src, dst, es.n_src))
         })))
     }
 
     fn csc(&self, et: &EdgeType) -> Result<Arc<Compressed>> {
         let es = self.edges_of(et)?;
+        let (src, dst) = es.coo()?;
         Ok(Arc::clone(es.global_csc.get_or_init(|| {
-            Arc::new(compress_bipartite(&es.dst, &es.src, es.n_dst))
+            Arc::new(compress_bipartite(dst, src, es.n_dst))
         })))
     }
 
@@ -666,11 +1086,12 @@ mod tests {
         let csc = mem.csc(&default_edge_type()).unwrap();
         let csr = mem.csr(&default_edge_type()).unwrap();
         let es = part.edges_of(&default_edge_type()).unwrap();
+        let mut buf = AdjBuf::default();
         for v in 0..300u32 {
-            let (nbrs, eids) = es.in_slice(v);
+            let (nbrs, eids) = es.read_in(v, &mut buf).unwrap();
             assert_eq!(nbrs, csc.neighbors(v as usize), "in-nbrs of {v}");
             assert_eq!(eids, csc.edge_ids(v as usize), "in-eids of {v}");
-            let (nbrs, eids) = es.out_slice(v);
+            let (nbrs, eids) = es.read_out(v, &mut buf).unwrap();
             assert_eq!(nbrs, csr.neighbors(v as usize), "out-nbrs of {v}");
             assert_eq!(eids, csr.edge_ids(v as usize), "out-eids of {v}");
         }
@@ -706,7 +1127,7 @@ mod tests {
         let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
         let part = PartitionedGraphStore::from_edge_index(&g.edge_index, router).unwrap();
         let expect = (p.edge_cut(&g.edge_index) * g.num_edges() as f64).round() as usize;
-        assert_eq!(part.num_cut_edges(), expect);
+        assert_eq!(part.num_cut_edges().unwrap(), expect);
     }
 
     #[test]
@@ -716,7 +1137,7 @@ mod tests {
         let p = Partitioning { assignment: vec![0; 50], num_parts: 1 };
         let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
         let part = PartitionedGraphStore::from_graph(&g, router).unwrap();
-        assert_eq!(part.num_cut_edges(), 0);
+        assert_eq!(part.num_cut_edges().unwrap(), 0);
         let csc = part.csc(&default_edge_type()).unwrap();
         assert_eq!(csc.num_edges(), g.num_edges());
     }
@@ -736,6 +1157,66 @@ mod tests {
         let p = Partitioning { assignment: vec![0; 49], num_parts: 1 };
         let router = Arc::new(PartitionRouter::new(&p, 0).unwrap());
         assert!(PartitionedGraphStore::from_edge_index(&g.edge_index, router).is_err());
+    }
+
+    #[test]
+    fn paged_mount_serves_identical_slices_with_bounded_residency() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 250, seed: 8, ..Default::default() })
+            .unwrap();
+        let p = ldg_partition(&g.edge_index, 3, 1.1).unwrap();
+        let dir = std::env::temp_dir().join("pyg2_graph_store_paged");
+        let _ = std::fs::remove_dir_all(&dir);
+        let bundle = crate::persist::write_bundle(&dir, &g, &p).unwrap();
+
+        let resident = PartitionedGraphStore::mount(&bundle, 0).unwrap();
+        let cache = Arc::new(AdjCache::new(64 * 1024));
+        let paged = PartitionedGraphStore::mount_paged(&bundle, 0, cache).unwrap();
+        assert!(paged.is_paged() && !resident.is_paged());
+
+        let et = default_edge_type();
+        let (res_es, pag_es) = (resident.edges_of(&et).unwrap(), paged.edges_of(&et).unwrap());
+        assert_eq!(res_es.num_edges(), pag_es.num_edges());
+        let mut rb = AdjBuf::default();
+        let mut pb = AdjBuf::default();
+        for v in 0..250u32 {
+            assert_eq!(
+                res_es.read_in(v, &mut rb).unwrap(),
+                pag_es.read_in(v, &mut pb).unwrap(),
+                "in-slices of {v}"
+            );
+            assert_eq!(
+                res_es.read_out(v, &mut rb).unwrap(),
+                pag_es.read_out(v, &mut pb).unwrap(),
+                "out-slices of {v}"
+            );
+        }
+        // Setup and equality sweep charged the demand-paged counters,
+        // resident residency never exceeded the budget.
+        assert!(paged.adj_disk_reads().unwrap() > 0);
+        let stats = paged.adj_cache_stats().unwrap();
+        assert!(stats.bytes_cached <= 64 * 1024);
+        assert!(stats.peak_bytes <= 64 * 1024);
+        assert_eq!(resident.adj_disk_reads(), None);
+
+        // Structural summaries agree across backings.
+        assert_eq!(paged.shard_edge_counts(), resident.shard_edge_counts());
+        assert_eq!(paged.num_cut_edges().unwrap(), resident.num_cut_edges().unwrap());
+        assert_eq!(
+            paged.halo_nodes(DEFAULT_GROUP).unwrap(),
+            resident.halo_nodes(DEFAULT_GROUP).unwrap()
+        );
+
+        // Merged global views are a clean error on the paged mount.
+        assert!(paged.csc(&et).is_err());
+        assert!(paged.csr(&et).is_err());
+        assert!(resident.csc(&et).is_ok());
+
+        // Warm replay of the same slices reads nothing new.
+        paged.reset_adj_io_stats();
+        for v in 0..250u32 {
+            pag_es.read_in(v, &mut pb).unwrap();
+        }
+        assert_eq!(paged.adj_disk_reads().unwrap(), 0, "warm slices are cache hits");
     }
 
     /// users --rates--> items (bipartite, typed ownership).
@@ -773,13 +1254,14 @@ mod tests {
         let csc = mem.csc(&et).unwrap();
         let csr = mem.csr(&et).unwrap();
         let es = part.edges_of(&et).unwrap();
+        let mut buf = AdjBuf::default();
         for v in 0..3u32 {
-            let (nbrs, eids) = es.in_slice(v);
+            let (nbrs, eids) = es.read_in(v, &mut buf).unwrap();
             assert_eq!(nbrs, csc.neighbors(v as usize), "in-nbrs of item {v}");
             assert_eq!(eids, csc.edge_ids(v as usize), "in-eids of item {v}");
         }
         for v in 0..4u32 {
-            let (nbrs, eids) = es.out_slice(v);
+            let (nbrs, eids) = es.read_out(v, &mut buf).unwrap();
             assert_eq!(nbrs, csr.neighbors(v as usize), "out-nbrs of user {v}");
             assert_eq!(eids, csr.edge_ids(v as usize), "out-eids of user {v}");
         }
@@ -790,7 +1272,7 @@ mod tests {
         // Cut edges under typed ownership: user0(p0)->item2(p1),
         // user2(p1)->item... user2(p1)->item2(p1) local; user3(p1)->item0(p0) cut;
         // user1(p0)->item1(p1) cut.
-        assert_eq!(part.num_cut_edges(), 3);
+        assert_eq!(part.num_cut_edges().unwrap(), 3);
     }
 
     #[test]

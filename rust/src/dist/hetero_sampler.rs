@@ -3,8 +3,11 @@
 //! Mirrors [`crate::sampler::HeteroNeighborSampler`] hop for hop and
 //! edge type for edge type, but every frontier node's adjacency slice is
 //! fetched from the shard of its *owning* partition
-//! ([`crate::dist::EdgeShards::in_slice`], keyed by
-//! `(edge_type, partition)`) with local-first fan-out: the local
+//! ([`crate::dist::EdgeShards::read_in_timed`], keyed by
+//! `(edge_type, partition)` — resident or demand-paged off a mounted
+//! bundle, byte-identical either way, with paged mounts resolving edge
+//! timestamps per candidate instead of holding the global array) with
+//! local-first fan-out: the local
 //! partition is served in-process while each remote partition touched by
 //! an edge type in a hop costs one coalesced simulated RPC (payload =
 //! edges pulled from it), accounted on the destination type's
@@ -24,7 +27,8 @@
 use super::graph_store::PartitionedGraphStore;
 use crate::error::{Error, Result};
 use crate::graph::EdgeType;
-use crate::sampler::hetero::filter_pick;
+use crate::persist::AdjBuf;
+use crate::sampler::hetero::{filter_pick, EdgeTimeView};
 use crate::sampler::{HeteroSampledSubgraph, HeteroSamplerConfig};
 use crate::storage::GraphStore;
 use crate::util::Rng;
@@ -164,6 +168,9 @@ impl HeteroDistNeighborSampler {
         let parts = self.store.num_parts();
         let mut hop_edges = vec![0u64; parts];
         let mut hop_touched = vec![false; parts];
+        // One reusable adjacency buffer: resident shards never touch it,
+        // paged shards fill it (lists and timestamps) per frontier node.
+        let mut abuf = AdjBuf::default();
 
         for hop in 0..self.num_hops() {
             let mut next_frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
@@ -196,12 +203,21 @@ impl HeteroDistNeighborSampler {
                     // hetero samplers draw from).
                     let owner = es.dst_owner(dst_global) as usize;
                     hop_touched[owner] = true;
-                    let (nbrs, eids) = es.in_slice(dst_global);
+                    let (nbrs, eids, ptimes) =
+                        es.read_in_timed(dst_global, &mut abuf, seed_times.is_some())?;
+                    // Resident stores filter through the global array;
+                    // paged mounts through the per-candidate times just
+                    // resolved — same constraints, same RNG stream.
+                    let etime_view = match (edge_time.as_deref(), ptimes) {
+                        (Some(g), _) => Some(EdgeTimeView::Global(&g[..])),
+                        (None, Some(t)) => Some(EdgeTimeView::PerCandidate(t)),
+                        (None, None) => None,
+                    };
                     let picks = filter_pick(
                         nbrs,
                         eids,
                         t_seed,
-                        edge_time.as_deref().map(|v| &v[..]),
+                        etime_view,
                         node_time.as_deref().map(|v| &v[..]),
                         fanout,
                         &mut rng,

@@ -2,7 +2,8 @@
 //!
 //! Mirrors [`crate::sampler::NeighborSampler`] hop for hop, but every
 //! frontier node's adjacency slice is fetched from the shard of its
-//! *owning* partition ([`crate::dist::EdgeShards::in_slice`]) with
+//! *owning* partition ([`crate::dist::EdgeShards::read_in`] — resident
+//! or demand-paged off a mounted bundle, byte-identical either way) with
 //! local-first fan-out: the local partition is served in-process while
 //! each remote partition touched in a hop costs one coalesced simulated
 //! RPC (payload = edges pulled from it), accounted on the shared
@@ -19,6 +20,7 @@
 
 use super::graph_store::PartitionedGraphStore;
 use crate::error::{Error, Result};
+use crate::persist::AdjBuf;
 use crate::sampler::neighbor::sample_from;
 use crate::sampler::{Direction, NeighborSamplerConfig, SampledSubgraph};
 use crate::storage::default_edge_type;
@@ -94,6 +96,9 @@ impl DistNeighborSampler {
 
         let mut frontier: Vec<u32> = (0..seeds.len() as u32).collect();
         let mut scratch: Vec<u32> = Vec::new();
+        // One reusable adjacency buffer: resident shards never touch it,
+        // paged shards fill it per frontier node.
+        let mut abuf = AdjBuf::default();
 
         // Per-hop routing ledger: which partitions served this hop's
         // expansions and how many edges each shipped.
@@ -110,7 +115,7 @@ impl DistNeighborSampler {
                 let tree = batch_vec[dst_local as usize];
                 let owner = router.owner(dst_global) as usize;
                 // In-neighbors from the owning shard.
-                let (nbrs, eids) = es.in_slice(dst_global);
+                let (nbrs, eids) = es.read_in(dst_global, &mut abuf)?;
                 sample_from(
                     nbrs,
                     eids,
@@ -138,7 +143,7 @@ impl DistNeighborSampler {
                 }
                 // Out-neighbors (bidirectional mode), same shard routing.
                 if bidirectional {
-                    let (nbrs, eids) = es.out_slice(dst_global);
+                    let (nbrs, eids) = es.read_out(dst_global, &mut abuf)?;
                     sample_from(
                         nbrs,
                         eids,

@@ -298,14 +298,19 @@ fn cmd_dist_mounted(
     let rank = args.get_usize("rank", 0) as u32;
     let lru = pyg2::persist::LruConfig {
         capacity_bytes: args.get_usize("cache-mb", 64) as u64 * 1024 * 1024,
+        page_adjacency: args.get_bool("page-adj"),
+        adj_capacity_bytes: args.get_usize("adj-cache-mb", 0) as u64 * 1024 * 1024,
     };
     log::info!(
         "mounted bundle {dir}: {} partitions, {} node types, {} edge types, \
-         row-cache budget {} bytes",
+         cache budget {} bytes ({} rows / {} adjacency{})",
         bundle.num_parts(),
         bundle.manifest().node_types.len(),
         bundle.manifest().edge_types.len(),
-        lru.capacity_bytes
+        lru.capacity_bytes,
+        lru.row_budget(),
+        lru.adj_budget(),
+        if lru.page_adjacency { ", adjacency demand-paged" } else { "" }
     );
 
     if let Some(ranks) = args.get("ranks") {
@@ -336,7 +341,12 @@ fn cmd_dist_mounted(
         println!("{}", report.skew());
         for (r, rc) in report.row_cache.iter().enumerate() {
             println!("rank {r} row cache: {rc}");
-            println!("rank {r} disk reads: {}", report.disk_reads[r]);
+            println!("rank {r} feature disk reads: {}", report.disk_reads[r]);
+            if let Some(ac) = &report.adj_cache[r] {
+                println!("rank {r} adjacency cache: {ac}");
+                println!("rank {r} adjacency disk reads: {}", report.adj_disk_reads[r]);
+                println!("rank {r} cache budget split: {}", report.mount_cache_stats(r));
+            }
             if let Some(h) = &report.halo[r] {
                 println!("rank {r} halo cache: {h}");
             }
@@ -381,12 +391,7 @@ fn cmd_dist_mounted(
         for (nt, stats) in loader.cache_stats() {
             println!("{nt} halo cache: {stats}");
         }
-        if let Some(rc) = loader.features().row_cache_stats() {
-            println!("row cache: {rc}");
-        }
-        if let Some(reads) = loader.features().disk_reads() {
-            println!("disk reads: {reads}");
-        }
+        print_mount_io(loader.features(), loader.graph());
     } else {
         let n = bundle.node_type(pyg2::storage::DEFAULT_GROUP)?.num_nodes;
         let cfg = pyg2::loader::LoaderConfig {
@@ -419,14 +424,31 @@ fn cmd_dist_mounted(
         if let Some(cache) = loader.cache_stats() {
             println!("halo cache: {cache}");
         }
-        if let Some(rc) = loader.features().row_cache_stats() {
-            println!("row cache: {rc}");
-        }
-        if let Some(reads) = loader.features().disk_reads() {
-            println!("disk reads: {reads}");
-        }
+        print_mount_io(loader.features(), loader.graph());
     }
     Ok(())
+}
+
+/// Shared mount I/O report: the row-cache / adjacency-cache split of
+/// the budget plus the positioned-read counters of both paged paths.
+fn print_mount_io(
+    fs: &pyg2::dist::PartitionedFeatureStore,
+    gs: &pyg2::dist::PartitionedGraphStore,
+) {
+    if let Some(rc) = fs.row_cache_stats() {
+        println!("row cache: {rc}");
+        if let Some(ac) = gs.adj_cache_stats() {
+            println!("adjacency cache: {ac}");
+            let split = pyg2::persist::MountCacheStats { rows: rc, adj: Some(ac) };
+            println!("cache budget split: {split}");
+        }
+    }
+    if let Some(reads) = fs.disk_reads() {
+        println!("feature disk reads: {reads}");
+    }
+    if let Some(reads) = gs.adj_disk_reads() {
+        println!("adjacency disk reads: {reads}");
+    }
 }
 
 /// The typed distributed pipeline (`pyg2 dist --hetero`): a

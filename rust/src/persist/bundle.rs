@@ -344,18 +344,39 @@ impl Bundle {
         Ok(Some(data))
     }
 
+    /// Position of one edge type in the manifest — the `et_index` half
+    /// of the adjacency shards' identity stamp
+    /// ([`crate::persist::io::AdjStamp`]).
+    pub fn edge_type_index(&self, ty: &EdgeType) -> Result<usize> {
+        self.manifest
+            .edge_types
+            .iter()
+            .position(|et| &et.ty == ty)
+            .ok_or_else(|| Error::Storage(format!("bundle has no edge type {}", ty.key())))
+    }
+
     /// Load and validate every partition's adjacency shard of one edge
     /// type: `(csc, csr)` per partition, in partition order.
     pub fn load_adjacency(
         &self,
         ty: &EdgeType,
     ) -> Result<Vec<(crate::graph::Compressed, crate::graph::Compressed)>> {
+        let ei = self.edge_type_index(ty)?;
         let meta = self.edge_type(ty)?;
         let n_src = self.node_type(&ty.src)?.num_nodes;
         let n_dst = self.node_type(&ty.dst)?.num_nodes;
         meta.shards
             .iter()
-            .map(|p| io::read_adjacency_shard(&self.dir.join(p), n_src, n_dst, meta.num_edges))
+            .enumerate()
+            .map(|(p, rel)| {
+                io::read_adjacency_shard(
+                    &self.dir.join(rel),
+                    io::AdjStamp { et_index: ei as u64, partition: p as u64 },
+                    n_src,
+                    n_dst,
+                    meta.num_edges,
+                )
+            })
             .collect()
     }
 
@@ -366,6 +387,22 @@ impl Bundle {
             Error::Storage(format!("partition {part} out of {}", self.manifest.num_parts))
         })?;
         Ok(self.dir.join(rel))
+    }
+
+    /// Path of the adjacency shard of `(edge_type, partition)` — the
+    /// file a demand-paged mount opens for positioned reads.
+    pub fn adjacency_shard_path(&self, ty: &EdgeType, part: usize) -> Result<PathBuf> {
+        let meta = self.edge_type(ty)?;
+        let rel = meta.shards.get(part).ok_or_else(|| {
+            Error::Storage(format!("partition {part} out of {}", self.manifest.num_parts))
+        })?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Path of one edge type's timestamp file, if the bundle carries
+    /// timestamps for it.
+    pub fn edge_time_path(&self, ty: &EdgeType) -> Result<Option<PathBuf>> {
+        Ok(self.edge_type(ty)?.time.as_deref().map(|rel| self.dir.join(rel)))
     }
 }
 
@@ -526,9 +563,16 @@ fn write_impl(
             sanitize(&ty.dst)
         );
         let mut shard_rels = Vec::with_capacity(num_parts);
-        for (p, (csc, csr)) in es.shard_views().into_iter().enumerate() {
+        for (p, (csc, csr)) in es.shard_views()?.into_iter().enumerate() {
             let rel = format!("adj/{stem}.p{p}.pyga");
-            io::write_adjacency_shard(&dir.join(&rel), n_src, n_dst, csc, csr)?;
+            io::write_adjacency_shard(
+                &dir.join(&rel),
+                io::AdjStamp { et_index: ei as u64, partition: p as u64 },
+                n_src,
+                n_dst,
+                csc,
+                csr,
+            )?;
             shard_rels.push(rel);
         }
         let time_rel = match es.edge_time_slice() {

@@ -6,6 +6,17 @@
 //! an [`Error`] — never a panic or a silent misread (the hardening
 //! contract of the persist subsystem, exercised by
 //! `tests/test_persist_corruption.rs`).
+//!
+//! Adjacency shards additionally carry an **identity stamp**
+//! (`edge_type index, partition` — the `.pyga` analog of the feature
+//! shards' `__bundle_shard` group, so a tampered manifest cannot
+//! re-point a shard slot at another partition's structurally valid
+//! file) and an **FNV-1a payload checksum**. The checksum lets the
+//! demand-paged reader ([`crate::persist::PagedAdjacency`]) reject any
+//! payload corruption *at open* with one streaming pass and O(1)
+//! memory, without decoding the shard — the same every-byte-flip
+//! guarantee the resident path gets from its full structural
+//! cross-validation.
 
 use crate::error::{Error, Result};
 use crate::graph::Compressed;
@@ -15,10 +26,35 @@ use std::path::Path;
 
 const U32_MAGIC: &[u8; 8] = b"PYGU32A1";
 const I64_MAGIC: &[u8; 8] = b"PYGI64A1";
-const ADJ_MAGIC: &[u8; 8] = b"PYGADJ1\0";
+pub(crate) const ADJ_MAGIC: &[u8; 8] = b"PYGADJ2\0";
 
-fn bad(path: &Path, what: &str) -> Error {
+/// Bytes of an adjacency shard header: magic + `(et_index, partition,
+/// n_src, n_dst, csc_nnz, csr_nnz, payload_hash)` as u64 LE.
+pub(crate) const ADJ_HEADER_BYTES: u64 = 8 + 7 * 8;
+
+pub(crate) fn bad(path: &Path, what: &str) -> Error {
     Error::Storage(format!("{}: {what}", path.display()))
+}
+
+/// Streaming FNV-1a over byte chunks (64-bit).
+pub(crate) struct Fnv1a(u64);
+
+impl Fnv1a {
+    #[allow(clippy::new_without_default)]
+    pub(crate) fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub(crate) fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
+    }
 }
 
 /// Read a whole file, verifying its magic and exact length:
@@ -86,26 +122,168 @@ pub fn read_i64_array(path: &Path) -> Result<Vec<i64>> {
         .collect())
 }
 
+/// Open an `i64` array file for positioned reads: validate magic and
+/// exact size, return `(file, count)` with the payload untouched — the
+/// demand-paged edge-time path ([`crate::persist::PagedEdgeTime`]).
+pub(crate) fn open_i64_array(path: &Path) -> Result<(File, usize)> {
+    let mut f = File::open(path)?;
+    let file_len = f.metadata()?.len();
+    if file_len < 16 {
+        return Err(bad(path, "too short for a bundle array file"));
+    }
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head)?;
+    if &head[..8] != I64_MAGIC {
+        return Err(bad(path, "bad magic"));
+    }
+    let count = u64::from_le_bytes(head[8..16].try_into().unwrap());
+    if 16u128 + count as u128 * 8 != file_len as u128 {
+        return Err(bad(
+            path,
+            &format!("claims {count} elements but holds {file_len} bytes"),
+        ));
+    }
+    Ok((f, count as usize))
+}
+
+/// Identity stamp of one adjacency shard: which `(edge type, partition)`
+/// slot of the bundle this file is. Verified on every open (resident
+/// and paged), so re-pointed shards fail before any neighbor list is
+/// served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdjStamp {
+    pub et_index: u64,
+    pub partition: u64,
+}
+
+/// Parsed header + byte offsets of one adjacency shard file — the
+/// shared layout contract between the writer, the resident reader and
+/// the demand-paged reader.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct AdjLayout {
+    pub stamp: AdjStamp,
+    pub n_src: usize,
+    pub n_dst: usize,
+    pub csc_nnz: usize,
+    pub csr_nnz: usize,
+    pub payload_hash: u64,
+    pub file_len: u64,
+}
+
+impl AdjLayout {
+    /// Byte offset of the CSC `indptr` array (`n_dst + 1` u64).
+    pub fn csc_indptr_off(&self) -> u64 {
+        ADJ_HEADER_BYTES
+    }
+
+    /// Byte offset of the CSC `indices` array (`csc_nnz` u32).
+    pub fn csc_indices_off(&self) -> u64 {
+        self.csc_indptr_off() + (self.n_dst as u64 + 1) * 8
+    }
+
+    /// Byte offset of the CSC `perm` array (`csc_nnz` u32).
+    pub fn csc_perm_off(&self) -> u64 {
+        self.csc_indices_off() + self.csc_nnz as u64 * 4
+    }
+
+    /// Byte offset of the CSR `indptr` array (`n_src + 1` u64).
+    pub fn csr_indptr_off(&self) -> u64 {
+        self.csc_perm_off() + self.csc_nnz as u64 * 4
+    }
+
+    /// Byte offset of the CSR `indices` array (`csr_nnz` u32).
+    pub fn csr_indices_off(&self) -> u64 {
+        self.csr_indptr_off() + (self.n_src as u64 + 1) * 8
+    }
+
+    /// Byte offset of the CSR `perm` array (`csr_nnz` u32).
+    pub fn csr_perm_off(&self) -> u64 {
+        self.csr_indices_off() + self.csr_nnz as u64 * 4
+    }
+
+    /// The exact file size the header implies.
+    pub fn expected_len(&self) -> u128 {
+        self.csr_perm_off() as u128 + self.csr_nnz as u128 * 4
+    }
+}
+
+/// Parse and validate one adjacency shard's header against the expected
+/// stamp and type-level dimensions; the payload stays untouched.
+pub(crate) fn read_adj_header(
+    f: &mut File,
+    path: &Path,
+    stamp: AdjStamp,
+    n_src: usize,
+    n_dst: usize,
+    num_edges: usize,
+) -> Result<AdjLayout> {
+    let file_len = f.metadata()?.len();
+    if file_len < ADJ_HEADER_BYTES {
+        return Err(bad(path, "too short for an adjacency shard"));
+    }
+    let mut head = [0u8; ADJ_HEADER_BYTES as usize];
+    f.read_exact(&mut head)?;
+    if &head[..8] != ADJ_MAGIC {
+        return Err(bad(path, "bad adjacency magic"));
+    }
+    let word = |i: usize| u64::from_le_bytes(head[8 + i * 8..16 + i * 8].try_into().unwrap());
+    let layout = AdjLayout {
+        stamp: AdjStamp { et_index: word(0), partition: word(1) },
+        n_src: word(2) as usize,
+        n_dst: word(3) as usize,
+        csc_nnz: word(4) as usize,
+        csr_nnz: word(5) as usize,
+        payload_hash: word(6),
+        file_len,
+    };
+    if layout.stamp != stamp {
+        return Err(bad(
+            path,
+            &format!(
+                "shard is stamped (edge type {}, partition {}), bundle slot expects \
+                 (edge type {}, partition {})",
+                layout.stamp.et_index, layout.stamp.partition, stamp.et_index, stamp.partition
+            ),
+        ));
+    }
+    if layout.n_src != n_src || layout.n_dst != n_dst {
+        return Err(bad(
+            path,
+            &format!(
+                "shard is over {}x{} nodes, manifest says {n_src}x{n_dst}",
+                layout.n_src, layout.n_dst
+            ),
+        ));
+    }
+    if layout.csc_nnz > num_edges || layout.csr_nnz > num_edges {
+        return Err(bad(path, "shard claims more edges than the edge type has"));
+    }
+    if layout.expected_len() != file_len as u128 {
+        return Err(bad(
+            path,
+            &format!("expected {} bytes, file holds {file_len}", layout.expected_len()),
+        ));
+    }
+    Ok(layout)
+}
+
 /// Write one partition's adjacency shard of one edge type: the in-edge
 /// CSC (keyed by type-global dst id) and the out-edge CSR (keyed by
 /// type-global src id), both carrying type-global edge ids in `perm`.
 ///
-/// Layout after the magic: `n_src, n_dst, csc_nnz, csr_nnz` (u64 LE),
-/// then `csc.indptr` (`n_dst + 1` u64), `csc.indices`/`csc.perm`
-/// (`csc_nnz` u32 each), `csr.indptr` (`n_src + 1` u64),
-/// `csr.indices`/`csr.perm` (`csr_nnz` u32 each).
+/// Layout after the magic: the identity stamp `(et_index, partition)`,
+/// then `n_src, n_dst, csc_nnz, csr_nnz` and the FNV-1a hash of the
+/// payload (all u64 LE), then `csc.indptr` (`n_dst + 1` u64),
+/// `csc.indices`/`csc.perm` (`csc_nnz` u32 each), `csr.indptr`
+/// (`n_src + 1` u64), `csr.indices`/`csr.perm` (`csr_nnz` u32 each).
 pub fn write_adjacency_shard(
     path: &Path,
+    stamp: AdjStamp,
     n_src: usize,
     n_dst: usize,
     csc: &Compressed,
     csr: &Compressed,
 ) -> Result<()> {
-    let mut f = File::create(path)?;
-    f.write_all(ADJ_MAGIC)?;
-    for v in [n_src as u64, n_dst as u64, csc.num_edges() as u64, csr.num_edges() as u64] {
-        f.write_all(&v.to_le_bytes())?;
-    }
     let mut buf = Vec::new();
     for compressed in [csc, csr] {
         for &p in &compressed.indptr {
@@ -118,52 +296,50 @@ pub fn write_adjacency_shard(
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
+    let mut hash = Fnv1a::new();
+    hash.update(&buf);
+
+    let mut f = File::create(path)?;
+    f.write_all(ADJ_MAGIC)?;
+    for v in [
+        stamp.et_index,
+        stamp.partition,
+        n_src as u64,
+        n_dst as u64,
+        csc.num_edges() as u64,
+        csr.num_edges() as u64,
+        hash.finish(),
+    ] {
+        f.write_all(&v.to_le_bytes())?;
+    }
     f.write_all(&buf)?;
     f.sync_all()?;
     Ok(())
 }
 
 /// Read and fully validate one adjacency shard written by
-/// [`write_adjacency_shard`]. `n_src` / `n_dst` / `num_edges` are the
-/// expected type-level dimensions from the bundle manifest; any
-/// mismatch, out-of-bounds index, non-monotone `indptr`, or size drift
-/// is an [`Error`].
+/// [`write_adjacency_shard`]. `stamp` is the bundle slot being loaded;
+/// `n_src` / `n_dst` / `num_edges` are the expected type-level
+/// dimensions from the bundle manifest. Any stamp or dimension
+/// mismatch, checksum drift, out-of-bounds index, non-monotone
+/// `indptr`, or size drift is an [`Error`].
 pub fn read_adjacency_shard(
     path: &Path,
+    stamp: AdjStamp,
     n_src: usize,
     n_dst: usize,
     num_edges: usize,
 ) -> Result<(Compressed, Compressed)> {
     let mut f = File::open(path)?;
-    let file_len = f.metadata()?.len();
-    if file_len < 40 {
-        return Err(bad(path, "too short for an adjacency shard"));
-    }
-    let mut head = [0u8; 40];
-    f.read_exact(&mut head)?;
-    if &head[..8] != ADJ_MAGIC {
-        return Err(bad(path, "bad adjacency magic"));
-    }
-    let word = |i: usize| u64::from_le_bytes(head[8 + i * 8..16 + i * 8].try_into().unwrap());
-    let (h_src, h_dst, csc_nnz, csr_nnz) =
-        (word(0) as usize, word(1) as usize, word(2) as usize, word(3) as usize);
-    if h_src != n_src || h_dst != n_dst {
-        return Err(bad(
-            path,
-            &format!("shard is over {h_src}x{h_dst} nodes, manifest says {n_src}x{n_dst}"),
-        ));
-    }
-    if csc_nnz > num_edges || csr_nnz > num_edges {
-        return Err(bad(path, "shard claims more edges than the edge type has"));
-    }
-    let expect = 40u128
-        + ((n_dst + 1) as u128 + (n_src + 1) as u128) * 8
-        + (csc_nnz as u128 + csr_nnz as u128) * 8;
-    if expect != file_len as u128 {
-        return Err(bad(path, &format!("expected {expect} bytes, file holds {file_len}")));
-    }
-    let mut payload = vec![0u8; (file_len - 40) as usize];
+    let layout = read_adj_header(&mut f, path, stamp, n_src, n_dst, num_edges)?;
+    let mut payload = vec![0u8; (layout.file_len - ADJ_HEADER_BYTES) as usize];
     f.read_exact(&mut payload)?;
+    let mut hash = Fnv1a::new();
+    hash.update(&payload);
+    if hash.finish() != layout.payload_hash {
+        return Err(bad(path, "payload checksum mismatch"));
+    }
+    let (csc_nnz, csr_nnz) = (layout.csc_nnz, layout.csr_nnz);
     let mut off = 0usize;
     let csc_indptr = take_u64s(&payload, &mut off, n_dst + 1);
     let csc_indices = take_u32s(&payload, &mut off, csc_nnz);
@@ -235,6 +411,8 @@ mod tests {
         dir.join(name)
     }
 
+    const STAMP: AdjStamp = AdjStamp { et_index: 0, partition: 0 };
+
     #[test]
     fn u32_and_i64_arrays_roundtrip() {
         let p = tmp("a.u32");
@@ -281,8 +459,8 @@ mod tests {
     fn adjacency_shard_roundtrips() {
         let (csc, csr) = toy_shard();
         let p = tmp("shard.pyga");
-        write_adjacency_shard(&p, 2, 3, &csc, &csr).unwrap();
-        let (rc, rr) = read_adjacency_shard(&p, 2, 3, 3).unwrap();
+        write_adjacency_shard(&p, STAMP, 2, 3, &csc, &csr).unwrap();
+        let (rc, rr) = read_adjacency_shard(&p, STAMP, 2, 3, 3).unwrap();
         assert_eq!(rc, csc);
         assert_eq!(rr, csr);
     }
@@ -291,32 +469,54 @@ mod tests {
     fn adjacency_validation_catches_corruption() {
         let (csc, csr) = toy_shard();
         let p = tmp("shard_bad.pyga");
-        write_adjacency_shard(&p, 2, 3, &csc, &csr).unwrap();
+        write_adjacency_shard(&p, STAMP, 2, 3, &csc, &csr).unwrap();
         let bytes = std::fs::read(&p).unwrap();
 
         // Wrong expected dims.
-        assert!(read_adjacency_shard(&p, 2, 4, 3).is_err());
-        assert!(read_adjacency_shard(&p, 3, 3, 3).is_err());
+        assert!(read_adjacency_shard(&p, STAMP, 2, 4, 3).is_err());
+        assert!(read_adjacency_shard(&p, STAMP, 3, 3, 3).is_err());
         // Fewer edges than the perm entries claim.
-        assert!(read_adjacency_shard(&p, 2, 3, 2).is_err());
+        assert!(read_adjacency_shard(&p, STAMP, 2, 3, 2).is_err());
+        // A re-pointed shard: the stamp no longer matches the slot.
+        assert!(read_adjacency_shard(&p, AdjStamp { et_index: 0, partition: 1 }, 2, 3, 3).is_err());
+        assert!(read_adjacency_shard(&p, AdjStamp { et_index: 1, partition: 0 }, 2, 3, 3).is_err());
         // Truncation.
         std::fs::write(&p, &bytes[..bytes.len() - 2]).unwrap();
-        assert!(read_adjacency_shard(&p, 2, 3, 3).is_err());
-        // Bit-flip every byte position in turn: open must error or
-        // return data, never panic; flips in the structural arrays that
-        // parse must be caught by validation when they break bounds.
+        assert!(read_adjacency_shard(&p, STAMP, 2, 3, 3).is_err());
+        // Bit-flip every byte position in turn: the header is stamp-,
+        // dimension- and size-checked, and the payload is checksummed,
+        // so every flip must be rejected — and must never panic.
         for i in 0..bytes.len() {
             let mut evil = bytes.clone();
             evil[i] ^= 0x80;
             std::fs::write(&p, &evil).unwrap();
-            let _ = read_adjacency_shard(&p, 2, 3, 3); // must not panic
+            assert!(
+                read_adjacency_shard(&p, STAMP, 2, 3, 3).is_err(),
+                "byte {i} flipped must not parse"
+            );
         }
-        // A neighbor id pushed out of range is rejected.
+        // A neighbor id pushed out of range is rejected (re-hash the
+        // payload so only the structural validator can catch it).
         let mut evil = bytes.clone();
-        // csc.indices start right after 40-byte header + (3+1)*8 indptr.
-        let idx_off = 40 + 4 * 8;
+        let idx_off = ADJ_HEADER_BYTES as usize + 4 * 8; // csc.indices after 4 indptr u64s
         evil[idx_off..idx_off + 4].copy_from_slice(&99u32.to_le_bytes());
+        let mut hash = Fnv1a::new();
+        hash.update(&evil[ADJ_HEADER_BYTES as usize..]);
+        evil[56..64].copy_from_slice(&hash.finish().to_le_bytes());
         std::fs::write(&p, &evil).unwrap();
-        assert!(read_adjacency_shard(&p, 2, 3, 3).is_err());
+        assert!(read_adjacency_shard(&p, STAMP, 2, 3, 3).is_err());
+    }
+
+    #[test]
+    fn open_i64_array_validates_without_reading_payload() {
+        let p = tmp("paged.i64");
+        write_i64_array(&p, &[1, 2, 3]).unwrap();
+        let (_, count) = open_i64_array(&p).unwrap();
+        assert_eq!(count, 3);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(open_i64_array(&p).is_err(), "truncated time file rejected at open");
+        write_u32_array(&p, &[1, 2, 3]).unwrap();
+        assert!(open_i64_array(&p).is_err(), "wrong-width file rejected at open");
     }
 }

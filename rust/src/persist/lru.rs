@@ -1,28 +1,30 @@
-//! Bounded LRU feature-row cache — the ROADMAP's "adaptive/bounded
-//! caches" item, made concrete for out-of-core mounts.
+//! Bounded LRU caches of a mounted store — the ROADMAP's "adaptive/
+//! bounded caches" item, made concrete for out-of-core mounts.
 //!
 //! A mounted [`crate::dist::PartitionedFeatureStore`] serves every shard
-//! from disk; this cache sits between the shards and their `.pygf` files
-//! and keeps the hottest rows resident under a strict **byte budget**.
-//! One cache is shared by *all* shards of a mount (the budget is
-//! per-process, like a page cache), keyed by `(shard, group, row)`.
-//! Hits copy the resident row; misses fall through to a positioned disk
-//! read and insert the row, evicting from the cold end until the budget
-//! holds again. Hit/miss/eviction/byte counters make the I/O saved and
-//! the memory spent both measurable (`bench_dist_disk`), and
-//! `tests/test_persist_equivalence.rs` pins the byte accounting under
-//! the configured budget while requiring strictly fewer disk reads on a
-//! repeated epoch.
+//! from disk; the [`RowCache`] sits between the shards and their `.pygf`
+//! files and keeps the hottest rows resident under a strict **byte
+//! budget**. A paged-adjacency mount adds an [`AdjCache`] doing the same
+//! for neighbor-list blocks read off `.pyga` shards. One [`LruConfig`]
+//! carries the mount's **single memory budget**: when adjacency paging
+//! is on, the budget is split into a row share and an adjacency share
+//! ([`LruConfig::row_budget`] / [`LruConfig::adj_budget`]), so the two
+//! caches can never jointly exceed the configured total — the split is
+//! reported by [`MountCacheStats`] and pinned by
+//! `tests/test_persist_equivalence.rs`.
 //!
-//! Large caches are **striped**: the budget is split across several
-//! independently locked LRU stripes (keys hashed to stripes), so
-//! concurrent loader workers do not serialize on one mutex — the same
-//! reason [`crate::storage::FileFeatureStore`] reads with lock-free
-//! `pread`. Each stripe enforces its share of the budget, so the total
-//! ceiling still holds; tiny budgets collapse to a single stripe (exact
-//! global LRU order), which is also what the unit tests pin.
+//! Both caches share one striped-LRU core: the budget is split across
+//! several independently locked LRU stripes (keys hashed to stripes),
+//! so concurrent loader workers do not serialize on one mutex — the
+//! same reason [`crate::storage::FileFeatureStore`] reads with
+//! lock-free `pread`. Each stripe enforces its share of the budget, so
+//! the total ceiling still holds; tiny budgets collapse to a single
+//! stripe (exact global LRU order), which is also what the unit tests
+//! pin. Payloads are stored as raw 32-bit words — feature rows as f32
+//! bit patterns, adjacency blocks as u32 ids, timestamps as i64 halves
+//! — so one accounting covers every payload kind.
 //!
-//! The cache *composes* with the [`crate::dist::HaloCache`]: halo hits
+//! The caches *compose* with the [`crate::dist::HaloCache`]: halo hits
 //! never reach the shards at all; everything else — local reads and
 //! remote misses alike — pages through here.
 
@@ -33,45 +35,116 @@ use std::sync::Mutex;
 /// Sentinel for "no slot" in the intrusive list.
 const NIL: usize = usize::MAX;
 
+/// Budget charge of one entry. Zero-length payloads (empty neighbor
+/// lists) are charged one word so they stay evictable and the index
+/// they occupy cannot grow unbounded under the byte budget; everything
+/// else is charged its payload exactly.
+fn charge(words: usize) -> u64 {
+    if words == 0 {
+        4
+    } else {
+        (words * 4) as u64
+    }
+}
+
 /// One stripe per this many budget bytes (up to [`MAX_STRIPES`]): big
 /// caches get concurrency, tiny ones keep exact global LRU order.
 const BYTES_PER_STRIPE: u64 = 4 * 1024 * 1024;
 const MAX_STRIPES: u64 = 8;
 
-/// Tuning knob of a mounted store's row cache.
+/// Memory budget of a mounted store's caches.
 #[derive(Clone, Copy, Debug)]
 pub struct LruConfig {
-    /// Byte budget for resident row payloads (f32 data only; the
-    /// per-entry index overhead is not charged). Rows wider than a
-    /// stripe's share of the budget are served straight from disk and
-    /// never cached.
+    /// Total byte budget for resident payloads (f32 row data and, when
+    /// adjacency paging is on, u32 neighbor-list/timestamp blocks; the
+    /// per-entry index overhead is not charged). Entries wider than a
+    /// stripe's share of their cache's budget are served straight from
+    /// disk and never cached.
     pub capacity_bytes: u64,
+    /// Serve bundle adjacency shards by demand paging
+    /// (`pyg2 dist --mount DIR --page-adj`) instead of decoding them
+    /// into RAM at mount. Carves [`LruConfig::adj_budget`] out of
+    /// `capacity_bytes` for the adjacency block cache.
+    pub page_adjacency: bool,
+    /// Bytes of `capacity_bytes` reserved for the adjacency cache when
+    /// paging (`--adj-cache-mb`). `0` defaults to a quarter of the
+    /// total. Ignored unless `page_adjacency` is set.
+    pub adj_capacity_bytes: u64,
 }
 
 impl Default for LruConfig {
     fn default() -> Self {
         // 64 MiB — roomy for the simulated workloads, tiny next to the
         // graphs the out-of-core path exists for.
-        Self { capacity_bytes: 64 * 1024 * 1024 }
+        Self {
+            capacity_bytes: 64 * 1024 * 1024,
+            page_adjacency: false,
+            adj_capacity_bytes: 0,
+        }
     }
 }
 
-/// Snapshot of a [`RowCache`]'s counters.
+impl LruConfig {
+    /// The adjacency cache's share of the budget: `adj_capacity_bytes`
+    /// when set, else a quarter of the total; zero when paging is off.
+    pub fn adj_budget(&self) -> u64 {
+        if !self.page_adjacency {
+            0
+        } else if self.adj_capacity_bytes > 0 {
+            self.adj_capacity_bytes
+        } else {
+            self.capacity_bytes / 4
+        }
+    }
+
+    /// The row cache's share: whatever the adjacency share leaves.
+    pub fn row_budget(&self) -> u64 {
+        self.capacity_bytes.saturating_sub(self.adj_budget())
+    }
+
+    /// Reject splits where the adjacency share swallows the whole
+    /// budget (the row cache must keep a nonzero share), and an
+    /// adjacency share configured with paging off — silently ignoring
+    /// `--adj-cache-mb` would leave the user believing a byte bound
+    /// applies to a fully resident topology.
+    pub fn validate(&self) -> crate::error::Result<()> {
+        if !self.page_adjacency && self.adj_capacity_bytes > 0 {
+            return Err(crate::error::Error::Config(
+                "an adjacency cache share (--adj-cache-mb) only applies with adjacency \
+                 paging on (--page-adj)"
+                    .into(),
+            ));
+        }
+        if self.page_adjacency && self.adj_budget() >= self.capacity_bytes {
+            return Err(crate::error::Error::Config(format!(
+                "adjacency cache share ({} bytes) must be smaller than the total \
+                 cache budget ({} bytes)",
+                self.adj_budget(),
+                self.capacity_bytes
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Snapshot of one bounded LRU's counters ([`RowCache`] or
+/// [`AdjCache`] — both account the same way).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RowCacheStats {
-    /// Row requests served from the cache (no disk read).
+    /// Requests served from the cache (no disk read).
     pub hits: u64,
-    /// Row requests that fell through to a disk read.
+    /// Requests that fell through to a disk read.
     pub misses: u64,
-    /// Rows evicted to stay under the byte budget.
+    /// Entries evicted to stay under the byte budget.
     pub evictions: u64,
-    /// Resident payload bytes right now (summed over stripes).
+    /// Charged resident bytes right now (summed over stripes; empty
+    /// payloads are charged one word — see the insert contract).
     pub bytes_cached: u64,
     /// High-water mark since the last reset: the sum of per-stripe
     /// peaks, an upper bound on simultaneous residency (and still below
     /// the budget).
     pub peak_bytes: u64,
-    /// Resident rows right now.
+    /// Resident entries right now.
     pub entries: u64,
     /// The configured budget.
     pub capacity_bytes: u64,
@@ -82,7 +155,7 @@ impl RowCacheStats {
         self.hits + self.misses
     }
 
-    /// Fraction of row requests served without a disk read.
+    /// Fraction of requests served without a disk read.
     pub fn hit_rate(&self) -> f64 {
         let total = self.total_requests();
         if total == 0 {
@@ -97,7 +170,7 @@ impl std::fmt::Display for RowCacheStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "hits={} misses={} ({:.1}% hit rate), {} rows / {} bytes resident \
+            "hits={} misses={} ({:.1}% hit rate), {} entries / {} bytes resident \
              (peak {} of {} budget), {} evictions",
             self.hits,
             self.misses,
@@ -111,11 +184,62 @@ impl std::fmt::Display for RowCacheStats {
     }
 }
 
+/// The row-cache / adjacency-cache split of one mount's shared budget.
+/// `rows.capacity_bytes + adj.capacity_bytes` never exceeds the
+/// [`LruConfig::capacity_bytes`] the mount was given, so
+/// [`MountCacheStats::bytes_cached`] (and the peak) are bounded by it
+/// too — the joint ceiling `tests/test_persist_equivalence.rs` asserts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MountCacheStats {
+    /// The feature-row cache's counters.
+    pub rows: RowCacheStats,
+    /// The adjacency block cache's counters (`None` when the mount is
+    /// not paging adjacency).
+    pub adj: Option<RowCacheStats>,
+}
+
+impl MountCacheStats {
+    /// Resident bytes across both caches.
+    pub fn bytes_cached(&self) -> u64 {
+        self.rows.bytes_cached + self.adj.map_or(0, |a| a.bytes_cached)
+    }
+
+    /// Combined high-water mark (sum of the two caches' peaks — an
+    /// upper bound on simultaneous residency).
+    pub fn peak_bytes(&self) -> u64 {
+        self.rows.peak_bytes + self.adj.map_or(0, |a| a.peak_bytes)
+    }
+
+    /// Combined configured budget (row share + adjacency share).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.rows.capacity_bytes + self.adj.map_or(0, |a| a.capacity_bytes)
+    }
+}
+
+impl std::fmt::Display for MountCacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.adj {
+            Some(adj) => write!(
+                f,
+                "rows [{}] + adjacency [{}] = {} bytes resident (peak {}) of {} total budget",
+                self.rows,
+                adj,
+                self.bytes_cached(),
+                self.peak_bytes(),
+                self.capacity_bytes()
+            ),
+            None => write!(f, "rows [{}] (adjacency resident, not paged)", self.rows),
+        }
+    }
+}
+
 struct Entry {
     key: u64,
     prev: usize,
     next: usize,
-    data: Box<[f32]>,
+    /// Payload as raw 32-bit words (f32 bit patterns for rows, u32 ids
+    /// for adjacency blocks). Bytes charged: `4 * len`.
+    data: Box<[u32]>,
 }
 
 struct Inner {
@@ -176,7 +300,7 @@ impl Inner {
         debug_assert_ne!(i, NIL, "evict on an empty stripe");
         self.detach(i);
         let e = &mut self.entries[i];
-        self.bytes -= (e.data.len() * 4) as u64;
+        self.bytes -= charge(e.data.len());
         self.map.remove(&e.key);
         e.data = Box::new([]);
         self.free.push(i);
@@ -190,41 +314,30 @@ struct Stripe {
     inner: Mutex<Inner>,
 }
 
-/// Bounded, thread-safe LRU over feature rows, shared by every shard of
-/// one mounted store. Keys are opaque `u64`s packed by the
-/// [`crate::persist::PagedFeatureStore`]s sharing the cache.
-pub struct RowCache {
+/// The shared striped-LRU core both caches wrap: bounded, thread-safe,
+/// keyed by opaque `u64`s packed by the paged stores sharing the cache.
+struct LruCore {
     capacity: u64,
     stripes: Vec<Stripe>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
-impl RowCache {
-    pub fn new(cfg: LruConfig) -> Self {
-        let n = (cfg.capacity_bytes / BYTES_PER_STRIPE).clamp(1, MAX_STRIPES);
+impl LruCore {
+    fn new(capacity_bytes: u64) -> Self {
+        let n = (capacity_bytes / BYTES_PER_STRIPE).clamp(1, MAX_STRIPES);
         let stripes = (0..n)
             .map(|_| Stripe {
-                capacity: cfg.capacity_bytes / n,
+                capacity: capacity_bytes / n,
                 inner: Mutex::new(Inner::new()),
             })
             .collect();
         Self {
-            capacity: cfg.capacity_bytes,
+            capacity: capacity_bytes,
             stripes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
-    }
-
-    /// The configured byte budget.
-    pub fn capacity_bytes(&self) -> u64 {
-        self.capacity
-    }
-
-    /// Lock stripes this cache spreads its budget over.
-    pub fn num_stripes(&self) -> usize {
-        self.stripes.len()
     }
 
     fn stripe(&self, key: u64) -> &Stripe {
@@ -234,31 +347,31 @@ impl RowCache {
         &self.stripes[(h >> 32) as usize % self.stripes.len()]
     }
 
-    /// Copy the cached row for `key` into `dst` and promote it to
-    /// most-recently-used in its stripe. Returns `false` (a counted
-    /// miss) when absent.
-    pub fn try_copy(&self, key: u64, dst: &mut [f32]) -> bool {
+    /// Run `f` over the resident payload for `key` under its stripe
+    /// lock and promote the entry; `None` (a counted miss) when absent.
+    fn with<R>(&self, key: u64, f: impl FnOnce(&[u32]) -> R) -> Option<R> {
         let mut inner = self.stripe(key).inner.lock().unwrap();
         let Some(&slot) = inner.map.get(&key) else {
             drop(inner);
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return false;
+            return None;
         };
-        debug_assert_eq!(inner.entries[slot].data.len(), dst.len());
-        dst.copy_from_slice(&inner.entries[slot].data);
+        let out = f(&inner.entries[slot].data);
         inner.detach(slot);
         inner.push_front(slot);
         drop(inner);
         self.hits.fetch_add(1, Ordering::Relaxed);
-        true
+        Some(out)
     }
 
-    /// Insert a row just read from disk, evicting cold rows from its
-    /// stripe until that stripe's share of the budget holds. Rows wider
-    /// than the stripe share are not cached; a key already present (a
-    /// racing reader beat us) is promoted instead of duplicated.
-    pub fn insert(&self, key: u64, row: &[f32]) {
-        let bytes = (row.len() * 4) as u64;
+    /// Insert a payload just read from disk, evicting cold entries from
+    /// its stripe until that stripe's share of the budget holds.
+    /// Payloads wider than the stripe share are not cached; a key
+    /// already present (a racing reader beat us) is promoted instead of
+    /// duplicated. Charges follow [`charge`]: empty payloads cost one
+    /// word, so even a flood of empty neighbor lists stays bounded.
+    fn insert_words(&self, key: u64, words: Box<[u32]>) {
+        let bytes = charge(words.len());
         let stripe = self.stripe(key);
         if bytes > stripe.capacity {
             return;
@@ -274,11 +387,11 @@ impl RowCache {
         }
         let slot = match inner.free.pop() {
             Some(i) => {
-                inner.entries[i] = Entry { key, prev: NIL, next: NIL, data: row.into() };
+                inner.entries[i] = Entry { key, prev: NIL, next: NIL, data: words };
                 i
             }
             None => {
-                inner.entries.push(Entry { key, prev: NIL, next: NIL, data: row.into() });
+                inner.entries.push(Entry { key, prev: NIL, next: NIL, data: words });
                 inner.entries.len() - 1
             }
         };
@@ -288,8 +401,7 @@ impl RowCache {
         inner.peak_bytes = inner.peak_bytes.max(inner.bytes);
     }
 
-    /// Current counters, aggregated over stripes.
-    pub fn stats(&self) -> RowCacheStats {
+    fn stats(&self) -> RowCacheStats {
         let mut stats = RowCacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -306,10 +418,7 @@ impl RowCache {
         stats
     }
 
-    /// Zero the hit/miss/eviction counters and rebase each stripe's
-    /// peak to its current residency. Cached rows stay resident
-    /// (benches measure warm phases).
-    pub fn reset_stats(&self) {
+    fn reset_stats(&self) {
         for stripe in &self.stripes {
             let mut inner = stripe.inner.lock().unwrap();
             inner.evictions = 0;
@@ -320,12 +429,114 @@ impl RowCache {
     }
 }
 
+/// Bounded, thread-safe LRU over feature rows, shared by every feature
+/// shard of one mounted store. Keys are opaque `u64`s packed by the
+/// [`crate::persist::PagedFeatureStore`]s sharing the cache.
+pub struct RowCache {
+    core: LruCore,
+}
+
+impl RowCache {
+    /// Build over the **row share** of `cfg`'s budget
+    /// ([`LruConfig::row_budget`] — the full budget unless adjacency
+    /// paging carves out its slice).
+    pub fn new(cfg: LruConfig) -> Self {
+        Self { core: LruCore::new(cfg.row_budget()) }
+    }
+
+    /// The configured byte budget (this cache's share).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.core.capacity
+    }
+
+    /// Lock stripes this cache spreads its budget over.
+    pub fn num_stripes(&self) -> usize {
+        self.core.stripes.len()
+    }
+
+    /// Copy the cached row for `key` into `dst` and promote it to
+    /// most-recently-used in its stripe. Returns `false` (a counted
+    /// miss) when absent.
+    pub fn try_copy(&self, key: u64, dst: &mut [f32]) -> bool {
+        self.core
+            .with(key, |words| {
+                debug_assert_eq!(words.len(), dst.len());
+                for (d, &w) in dst.iter_mut().zip(words) {
+                    *d = f32::from_bits(w);
+                }
+            })
+            .is_some()
+    }
+
+    /// Insert a row just read from disk (see [`LruCore::insert_words`]
+    /// for the eviction contract).
+    pub fn insert(&self, key: u64, row: &[f32]) {
+        self.core
+            .insert_words(key, row.iter().map(|v| v.to_bits()).collect());
+    }
+
+    /// Current counters, aggregated over stripes.
+    pub fn stats(&self) -> RowCacheStats {
+        self.core.stats()
+    }
+
+    /// Zero the hit/miss/eviction counters and rebase each stripe's
+    /// peak to its current residency. Cached rows stay resident
+    /// (benches measure warm phases).
+    pub fn reset_stats(&self) {
+        self.core.reset_stats()
+    }
+}
+
+/// Bounded, thread-safe LRU over adjacency blocks — neighbor-list
+/// `[indices.. perm..]` runs and timestamp blocks paged off a bundle's
+/// `.pyga`/`.time` files by [`crate::persist::PagedAdjacency`] /
+/// [`crate::persist::PagedEdgeTime`]. Shares the mount's byte budget
+/// with the [`RowCache`] (see [`LruConfig`]); payloads are u32 words
+/// (i64 timestamps stored as lo/hi halves).
+pub struct AdjCache {
+    core: LruCore,
+}
+
+impl AdjCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self { core: LruCore::new(capacity_bytes) }
+    }
+
+    /// The configured byte budget (this cache's share).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.core.capacity
+    }
+
+    /// Run `f` over the resident block for `key` under its stripe lock
+    /// and promote it; `None` (a counted miss) when absent.
+    pub fn with<R>(&self, key: u64, f: impl FnOnce(&[u32]) -> R) -> Option<R> {
+        self.core.with(key, f)
+    }
+
+    /// Insert a block just read from disk.
+    pub fn insert(&self, key: u64, words: &[u32]) {
+        self.core.insert_words(key, words.into());
+    }
+
+    /// Current counters, aggregated over stripes.
+    pub fn stats(&self) -> RowCacheStats {
+        self.core.stats()
+    }
+
+    /// Zero the counters, keep the contents (see
+    /// [`RowCache::reset_stats`]).
+    pub fn reset_stats(&self) {
+        self.core.reset_stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn cache(budget: u64) -> RowCache {
-        RowCache::new(LruConfig { capacity_bytes: budget })
+        RowCache::new(LruConfig { capacity_bytes: budget, ..Default::default() })
     }
 
     #[test]
@@ -455,5 +666,96 @@ mod tests {
             h.join().unwrap();
         }
         assert!(c.stats().bytes_cached <= 256);
+    }
+
+    #[test]
+    fn adj_cache_blocks_roundtrip_under_budget() {
+        let c = AdjCache::new(32);
+        c.insert(7, &[1, 2, 3, 4]);
+        let got = c.with(7, |w| w.to_vec()).expect("resident");
+        assert_eq!(got, vec![1, 2, 3, 4]);
+        assert!(c.with(8, |_| ()).is_none(), "absent key is a miss");
+        // Overflow evicts from the cold end; the ceiling holds.
+        c.insert(8, &[5, 6, 7, 8]);
+        c.insert(9, &[9, 10, 11, 12]);
+        let s = c.stats();
+        assert!(s.bytes_cached <= 32, "{s}");
+        assert!(s.evictions >= 1);
+        assert_eq!((s.hits, s.misses), (1, 1));
+        c.reset_stats();
+        assert_eq!(c.stats().hits, 0);
+        assert_eq!(c.stats().bytes_cached, 32, "contents survive the reset");
+    }
+
+    #[test]
+    fn empty_payloads_are_charged_and_stay_bounded() {
+        // A flood of empty neighbor lists must not grow the index
+        // unbounded: each empty entry is charged one word, so a 40-byte
+        // budget holds at most 10 of them.
+        let c = AdjCache::new(40);
+        for k in 0..1000u64 {
+            c.insert(k, &[]);
+        }
+        let s = c.stats();
+        assert!(s.entries <= 10, "empty entries bounded by the budget: {s}");
+        assert!(s.bytes_cached <= 40, "{s}");
+        assert!(s.evictions >= 990, "{s}");
+        // The survivors still serve hits as empty blocks.
+        assert_eq!(c.with(999, |w| w.len()), Some(0));
+    }
+
+    #[test]
+    fn budget_split_is_exhaustive_and_validated() {
+        let whole = LruConfig { capacity_bytes: 1000, ..Default::default() };
+        assert_eq!((whole.row_budget(), whole.adj_budget()), (1000, 0));
+        whole.validate().unwrap();
+
+        let paged = LruConfig { capacity_bytes: 1000, page_adjacency: true, adj_capacity_bytes: 0 };
+        assert_eq!((paged.row_budget(), paged.adj_budget()), (750, 250));
+        assert_eq!(paged.row_budget() + paged.adj_budget(), paged.capacity_bytes);
+        paged.validate().unwrap();
+
+        let explicit =
+            LruConfig { capacity_bytes: 1000, page_adjacency: true, adj_capacity_bytes: 600 };
+        assert_eq!((explicit.row_budget(), explicit.adj_budget()), (400, 600));
+        explicit.validate().unwrap();
+
+        let hog = LruConfig { capacity_bytes: 1000, page_adjacency: true, adj_capacity_bytes: 1000 };
+        assert!(hog.validate().is_err(), "adjacency share must not swallow the budget");
+
+        let ignored =
+            LruConfig { capacity_bytes: 1000, page_adjacency: false, adj_capacity_bytes: 100 };
+        assert!(ignored.validate().is_err(), "adjacency share without paging is a misconfig");
+    }
+
+    #[test]
+    fn reserved_id_ranges_are_disjoint_and_bounded() {
+        let c = AdjCache::new(1024);
+        let a = c.reserve_ids(10).unwrap();
+        let b = c.reserve_ids(5).unwrap();
+        assert!(a + 10 <= b, "ranges must not overlap");
+        assert!(c.reserve_ids(u32::MAX).is_err(), "id space is bounded");
+    }
+
+    #[test]
+    fn mount_stats_report_the_split_and_the_joint_ceiling() {
+        let cfg = LruConfig { capacity_bytes: 64, page_adjacency: true, adj_capacity_bytes: 16 };
+        let rows = RowCache::new(cfg);
+        let adj = AdjCache::new(cfg.adj_budget());
+        assert_eq!(rows.capacity_bytes(), 48);
+        assert_eq!(adj.capacity_bytes(), 16);
+        for k in 0..20u64 {
+            rows.insert(k, &[k as f32, 0.0]);
+            adj.insert(k, &[k as u32]);
+        }
+        let combined = MountCacheStats { rows: rows.stats(), adj: Some(adj.stats()) };
+        assert_eq!(combined.capacity_bytes(), cfg.capacity_bytes);
+        assert!(combined.bytes_cached() <= cfg.capacity_bytes);
+        assert!(combined.peak_bytes() <= cfg.capacity_bytes);
+        let shown = combined.to_string();
+        assert!(shown.contains("adjacency"), "{shown}");
+        let unsplit = MountCacheStats { rows: rows.stats(), adj: None };
+        assert_eq!(unsplit.capacity_bytes(), 48);
+        assert!(unsplit.to_string().contains("not paged"));
     }
 }

@@ -15,24 +15,38 @@
 //!   `(edge_type, partition)` so homogeneous and typed partitionings
 //!   share one format. `pyg2 partition --write DIR` produces bundles
 //!   from the CLI.
-//! * [`RowCache`] — a bounded LRU over feature rows with
-//!   hit/miss/evict/byte counters, shared by all shards of a mount (the
-//!   ROADMAP's adaptive/bounded-caches item). It composes with the
-//!   [`crate::dist::HaloCache`]: halo hits never reach a shard, and
-//!   everything else pages through the LRU.
+//! * [`RowCache`] / [`AdjCache`] — bounded LRUs over feature rows and
+//!   adjacency blocks with hit/miss/evict/byte counters, shared by all
+//!   shards of a mount (the ROADMAP's adaptive/bounded-caches item).
+//!   One [`LruConfig`] budget covers both: when adjacency paging is on,
+//!   the adjacency share is carved out of the total and the split is
+//!   reported by [`MountCacheStats`], so feature and topology caching
+//!   can never jointly exceed the configured bytes. Both compose with
+//!   the [`crate::dist::HaloCache`]: halo hits never reach a shard, and
+//!   everything else pages through the LRUs.
 //! * [`PagedFeatureStore`] — one disk shard behind the
 //!   [`crate::storage::FeatureStore`] trait, demand-paging rows through
 //!   the shared cache with O(batch) memory.
+//! * [`PagedAdjacency`] / [`PagedEdgeTime`] — the topology
+//!   counterparts: `.pyga` CSC/CSR shards served by positioned
+//!   `indptr`-pair and `indices`/`perm`-run reads (run-coalesced), plus
+//!   block-paged edge timestamps, so `pyg2 dist --mount DIR --page-adj`
+//!   keeps O(batch) memory for *both* features and topology. Shards are
+//!   identity-stamped and payload-checksummed: corruption fails at open
+//!   or first touch, never as silent wrong neighbors.
 //!
 //! The mount constructors live on the stores they produce —
 //! [`crate::dist::PartitionedFeatureStore::mount`] and
-//! [`crate::dist::PartitionedGraphStore::mount`] — and
+//! [`crate::dist::PartitionedGraphStore::mount`] /
+//! [`crate::dist::PartitionedGraphStore::mount_paged`] — and
 //! [`crate::coordinator::mounted_loader`] wires a full loader from a
-//! bundle. **Correctness anchor:** a mounted pipeline yields batches
-//! identical to the in-memory distributed pipeline (and hence to the
-//! single-store pipeline) for the homogeneous and typed loaders, with
-//! and without async routing + halo caching — enforced end to end by
-//! `tests/test_persist_equivalence.rs`, with corrupt-input hardening in
+//! bundle. **Correctness anchor:** a mounted pipeline — resident or
+//! paged adjacency alike — yields batches identical to the in-memory
+//! distributed pipeline (and hence to the single-store pipeline) for
+//! the homogeneous and typed loaders, with and without async routing +
+//! halo caching — enforced end to end by
+//! `tests/test_persist_equivalence.rs` and
+//! `tests/test_paged_adjacency.rs`, with corrupt-input hardening in
 //! `tests/test_persist_corruption.rs` and cold/warm I/O measured by
 //! `bench_dist_disk`.
 
@@ -42,5 +56,6 @@ pub mod lru;
 pub mod paged;
 
 pub use bundle::{write_bundle, write_bundle_hetero, Bundle, EdgeTypeMeta, Manifest, NodeTypeMeta};
-pub use lru::{LruConfig, RowCache, RowCacheStats};
-pub use paged::PagedFeatureStore;
+pub use io::AdjStamp;
+pub use lru::{AdjCache, LruConfig, MountCacheStats, RowCache, RowCacheStats};
+pub use paged::{AdjBuf, PagedAdjacency, PagedEdgeTime, PagedFeatureStore};

@@ -1,19 +1,36 @@
-//! `PagedFeatureStore` — one on-disk feature shard of a mounted bundle,
-//! served row-by-row through the shared bounded [`RowCache`].
+//! Demand-paged shard readers of a mounted bundle: feature rows and
+//! adjacency, each served through a shared bounded LRU.
 //!
-//! This is the [`FeatureStore`] the mounted
-//! [`crate::dist::PartitionedFeatureStore`] plugs in per
-//! `(node_type, partition)`: `get`/`get_into` keep O(batch) memory — a
-//! row is either copied out of the cache or `pread` from the `.pygf`
-//! shard and inserted (runs of consecutive misses coalesce into one
-//! [`FileFeatureStore::read_rows_into`] call), with the cache's byte
-//! budget bounding total residency across *all* shards of the mount.
+//! * [`PagedFeatureStore`] — one on-disk feature shard, the
+//!   [`FeatureStore`] the mounted
+//!   [`crate::dist::PartitionedFeatureStore`] plugs in per
+//!   `(node_type, partition)`: `get`/`get_into` keep O(batch) memory — a
+//!   row is either copied out of the cache or `pread` from the `.pygf`
+//!   shard and inserted (runs of consecutive misses coalesce into one
+//!   [`FileFeatureStore::read_rows_into`] call), with the cache's byte
+//!   budget bounding total residency across *all* shards of the mount.
+//! * [`PagedAdjacency`] — one on-disk `.pyga` adjacency shard, the
+//!   topology counterpart: a neighbor list is either copied out of the
+//!   [`AdjCache`] or assembled from positioned reads — one `pread` for
+//!   the `indptr` pair, then the `indices` and `perm` runs (coalesced
+//!   into a single read when the gap between them is small) — validated
+//!   against the type-level bounds on every touch, then inserted. The
+//!   whole payload is checksum-verified at open with one streaming
+//!   pass, so corrupt shards fail before any list is served.
+//! * [`PagedEdgeTime`] — block-paged edge timestamps (`adj/<et>.time`),
+//!   resolving per-candidate times for paged temporal sampling through
+//!   the same [`AdjCache`] budget.
 
-use super::lru::RowCache;
+use super::io::{self, AdjLayout, AdjStamp};
+use super::lru::{AdjCache, MAX_ADJ_IDS, RowCache};
 use crate::error::{Error, Result};
-use crate::storage::{FeatureKey, FeatureStore, FileFeatureStore};
+use crate::storage::{pread_raw, FeatureKey, FeatureStore, FileFeatureStore};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Shard ids are packed into the top 24 bits of the cache key.
@@ -179,6 +196,571 @@ impl FeatureStore for PagedFeatureStore {
     }
 }
 
+/// Cache-key direction tags of one adjacency shard's two halves (the
+/// third tag, `2`, is used by [`PagedEdgeTime`] blocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    In = 0,
+    Out = 1,
+}
+
+const TIME_TAG: u64 = 2;
+
+/// Coalesce the `indices` and `perm` runs of one neighbor list into a
+/// single positioned read when the file gap between them is at most
+/// this many bytes (one wasted page beats a second syscall).
+const COALESCE_GAP_BYTES: usize = 4096;
+
+/// Timestamps are paged in blocks of this many edges (4 KiB of i64s).
+const TIME_BLOCK: usize = 512;
+
+/// Positioned-read file handle shared by the paged adjacency readers:
+/// lock-free `pread` on Unix, a seek lock elsewhere, with a read
+/// counter for the demand-paged path.
+struct PagedFile {
+    file: File,
+    path: PathBuf,
+    reads: AtomicU64,
+    #[cfg(not(unix))]
+    seek_lock: std::sync::Mutex<()>,
+}
+
+impl PagedFile {
+    fn new(file: File, path: PathBuf) -> Self {
+        Self {
+            file,
+            path,
+            reads: AtomicU64::new(0),
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+        }
+    }
+
+    /// One positioned read, counted (the demand-paging hot path).
+    fn pread(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        self.pread_uncounted(offset, buf)?;
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// One positioned read that does *not* count as demand-paged I/O —
+    /// open-time validation and setup streaming (halo computation) use
+    /// this so the counters report epoch costs only.
+    fn pread_uncounted(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        #[cfg(unix)]
+        {
+            pread_raw(&self.file, offset, buf)
+        }
+        #[cfg(not(unix))]
+        {
+            let _guard = self.seek_lock.lock().unwrap();
+            pread_raw(&self.file, offset, buf)
+        }
+    }
+}
+
+/// Reusable scratch of one adjacency lookup on a possibly-paged shard:
+/// the neighbor-list block `[indices.. perm..]`, per-candidate
+/// timestamps, and a raw byte buffer for positioned reads. Allocate one
+/// per sampling call and reuse it across frontier nodes.
+#[derive(Default)]
+pub struct AdjBuf {
+    /// `[indices_0..d, perm_0..d]` of the last fetch (even length).
+    block: Vec<u32>,
+    /// Per-candidate timestamps of the last timed fetch.
+    times: Vec<i64>,
+    /// Raw byte scratch for positioned reads.
+    bytes: Vec<u8>,
+    /// Decoded timestamp block most recently touched (persists across
+    /// fetches, so frontier runs landing in one block skip even the
+    /// cache probe). `tblock_key` is its cache key; 0 = none held
+    /// (cache keys always carry a nonzero tag).
+    tblock: Vec<i64>,
+    tblock_key: u64,
+    /// u32-pair scratch for inserting freshly read timestamp blocks.
+    twords: Vec<u32>,
+}
+
+impl AdjBuf {
+    /// The `(neighbors, edge ids)` halves of the last fetch.
+    pub fn nbrs_eids(&self) -> (&[u32], &[u32]) {
+        debug_assert_eq!(self.block.len() % 2, 0);
+        let d = self.block.len() / 2;
+        (&self.block[..d], &self.block[d..])
+    }
+
+    /// Per-candidate timestamps of the last timed fetch (aligned with
+    /// [`AdjBuf::nbrs_eids`]).
+    pub fn times(&self) -> &[i64] {
+        &self.times
+    }
+
+    /// Resolve the timestamps of the last fetch's edge ids into
+    /// [`AdjBuf::times`] through a block-paged reader, reusing this
+    /// buffer's scratch (no per-call allocation on the hot path).
+    pub fn resolve_times(&mut self, t: &PagedEdgeTime) -> Result<()> {
+        let d = self.block.len() / 2;
+        let AdjBuf { block, times, bytes, tblock, tblock_key, twords } = self;
+        t.times_for_into(&block[d..], times, bytes, tblock, tblock_key, twords)
+    }
+}
+
+/// A disk-backed CSC/CSR adjacency shard paging neighbor-list blocks
+/// through a shared [`AdjCache`] — the topology analog of
+/// [`PagedFeatureStore`]. One instance serves one
+/// `(edge_type, partition)` `.pyga` file; the mounted
+/// [`crate::dist::PartitionedGraphStore`] holds one per slot, all
+/// sharing the mount's adjacency cache (and hence its byte budget).
+///
+/// Open validates the header (identity stamp, dimensions, exact size)
+/// and checksum-verifies the whole payload with one streaming pass;
+/// every demand-paged touch re-validates the `indptr` pair and the
+/// neighbor/edge-id bounds, so post-open corruption surfaces as an
+/// [`Error`] on first touch — never a panic or silent wrong neighbors.
+pub struct PagedAdjacency {
+    file: PagedFile,
+    layout: AdjLayout,
+    /// Type-level edge count (edge-id bound for `perm` entries).
+    num_edges: usize,
+    shard_id: u32,
+    cache: Arc<AdjCache>,
+}
+
+impl PagedAdjacency {
+    /// Open and validate one shard file for positioned reads. `stamp`
+    /// is the bundle slot being mounted; `shard_id` must be unique
+    /// among every reader sharing `cache`.
+    pub fn open(
+        path: impl AsRef<Path>,
+        stamp: AdjStamp,
+        n_src: usize,
+        n_dst: usize,
+        num_edges: usize,
+        shard_id: u32,
+        cache: Arc<AdjCache>,
+    ) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if shard_id as u64 >= MAX_ADJ_IDS {
+            return Err(Error::Storage(format!(
+                "shard id {shard_id} exceeds the adjacency cache-key space"
+            )));
+        }
+        let mut file = File::open(&path)?;
+        let layout = io::read_adj_header(&mut file, &path, stamp, n_src, n_dst, num_edges)?;
+        // Streaming checksum over the payload: one sequential pass with
+        // O(1) memory, so any payload corruption — including bit flips
+        // that would still be bounds-valid — fails at open, matching
+        // the resident reader's every-byte-flip guarantee without
+        // decoding the shard into RAM.
+        let mut hash = io::Fnv1a::new();
+        let mut remaining = layout.file_len - io::ADJ_HEADER_BYTES;
+        let mut chunk = vec![0u8; 1 << 20];
+        while remaining > 0 {
+            let take = (remaining as usize).min(chunk.len());
+            file.read_exact(&mut chunk[..take])?;
+            hash.update(&chunk[..take]);
+            remaining -= take as u64;
+        }
+        if hash.finish() != layout.payload_hash {
+            return Err(io::bad(&path, "payload checksum mismatch"));
+        }
+        Ok(Self {
+            file: PagedFile::new(file, path),
+            layout,
+            num_edges,
+            shard_id,
+            cache,
+        })
+    }
+
+    /// In-edge count of this shard (the CSC half's nnz).
+    pub fn csc_nnz(&self) -> usize {
+        self.layout.csc_nnz
+    }
+
+    /// Out-edge count of this shard (the CSR half's nnz).
+    pub fn csr_nnz(&self) -> usize {
+        self.layout.csr_nnz
+    }
+
+    /// Demand-paged positioned reads issued so far (cache misses only;
+    /// open-time validation and setup streaming are not counted).
+    pub fn disk_reads(&self) -> u64 {
+        self.file.reads.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_disk_reads(&self) {
+        self.file.reads.store(0, Ordering::Relaxed);
+    }
+
+    /// `(keyed nodes, other-side nodes, nnz, indptr off, indices off,
+    /// perm off)` of one half.
+    fn half(&self, dir: Dir) -> (usize, usize, usize, u64, u64, u64) {
+        let l = &self.layout;
+        match dir {
+            Dir::In => (
+                l.n_dst,
+                l.n_src,
+                l.csc_nnz,
+                l.csc_indptr_off(),
+                l.csc_indices_off(),
+                l.csc_perm_off(),
+            ),
+            Dir::Out => (
+                l.n_src,
+                l.n_dst,
+                l.csr_nnz,
+                l.csr_indptr_off(),
+                l.csr_indices_off(),
+                l.csr_perm_off(),
+            ),
+        }
+    }
+
+    fn key(&self, dir: Dir, v: u32) -> u64 {
+        ((self.shard_id as u64) << 34) | ((dir as u64) << 32) | v as u64
+    }
+
+    /// In-neighbors of dst node `v`: fill `buf` with the
+    /// `[src ids.. edge ids..]` block, either from the cache or via
+    /// positioned reads (see [`PagedAdjacency::list`]).
+    pub fn in_list(&self, v: u32, buf: &mut AdjBuf) -> Result<()> {
+        self.list(Dir::In, v, buf)
+    }
+
+    /// Out-neighbors of src node `v`.
+    pub fn out_list(&self, v: u32, buf: &mut AdjBuf) -> Result<()> {
+        self.list(Dir::Out, v, buf)
+    }
+
+    fn list(&self, dir: Dir, v: u32, buf: &mut AdjBuf) -> Result<()> {
+        let (n_keyed, n_other, nnz, indptr_off, indices_off, perm_off) = self.half(dir);
+        if v as usize >= n_keyed {
+            return Err(Error::Storage(format!(
+                "{}: node {v} out of the shard's {n_keyed}-node id space",
+                self.file.path.display()
+            )));
+        }
+        let key = self.key(dir, v);
+        if self
+            .cache
+            .with(key, |words| {
+                buf.block.clear();
+                buf.block.extend_from_slice(words);
+            })
+            .is_some()
+        {
+            return Ok(());
+        }
+
+        // Miss: one pread for the indptr pair, then the indices and
+        // perm runs — coalesced into a single read when the gap between
+        // them is small (for d edges the runs sit (nnz - d) * 4 bytes
+        // apart in the file).
+        let mut pair = [0u8; 16];
+        self.file.pread(indptr_off + v as u64 * 8, &mut pair)?;
+        let lo = u64::from_le_bytes(pair[..8].try_into().unwrap()) as usize;
+        let hi = u64::from_le_bytes(pair[8..].try_into().unwrap()) as usize;
+        if lo > hi || hi > nnz {
+            return Err(io::bad(
+                &self.file.path,
+                &format!("indptr of node {v} out of bounds ({lo}..{hi} of {nnz})"),
+            ));
+        }
+        let d = hi - lo;
+        buf.block.clear();
+        buf.block.resize(2 * d, 0);
+        if d > 0 {
+            let gap = (nnz - d) * 4;
+            if gap <= COALESCE_GAP_BYTES {
+                let span = 2 * d * 4 + gap;
+                buf.bytes.clear();
+                buf.bytes.resize(span, 0);
+                self.file.pread(indices_off + lo as u64 * 4, &mut buf.bytes)?;
+                let (head, tail) = (0..d * 4, span - d * 4..span);
+                decode_u32s(&buf.bytes[head], &mut buf.block[..d]);
+                decode_u32s(&buf.bytes[tail], &mut buf.block[d..]);
+            } else {
+                buf.bytes.clear();
+                buf.bytes.resize(d * 4, 0);
+                self.file.pread(indices_off + lo as u64 * 4, &mut buf.bytes)?;
+                decode_u32s(&buf.bytes, &mut buf.block[..d]);
+                self.file.pread(perm_off + lo as u64 * 4, &mut buf.bytes)?;
+                decode_u32s(&buf.bytes, &mut buf.block[d..]);
+            }
+            // First-touch bounds validation: neighbor ids must fit the
+            // other side's id space, edge ids the type's edge count.
+            if buf.block[..d].iter().any(|&n| n as usize >= n_other) {
+                return Err(io::bad(
+                    &self.file.path,
+                    &format!("neighbor id of node {v} out of range ({n_other} nodes)"),
+                ));
+            }
+            if buf.block[d..].iter().any(|&e| e as usize >= self.num_edges) {
+                return Err(io::bad(
+                    &self.file.path,
+                    &format!("edge id of node {v} out of range ({} edges)", self.num_edges),
+                ));
+            }
+        }
+        self.cache.insert(key, &buf.block);
+        Ok(())
+    }
+
+    /// Stream one half's `(node, neighbor ids)` lists in id order with
+    /// chunked, **uncounted** reads and O(chunk) memory — the setup
+    /// path (halo computation, cut-edge counts) over a paged mount.
+    /// Neighbor ids are bounds-checked like the demand-paged reads, so
+    /// a forged or post-open-corrupted shard surfaces as an [`Error`],
+    /// never a downstream index panic.
+    pub(crate) fn stream(
+        &self,
+        out_edges: bool,
+        mut f: impl FnMut(u32, &[u32]),
+    ) -> Result<()> {
+        let dir = if out_edges { Dir::Out } else { Dir::In };
+        let (n_keyed, n_other, nnz, indptr_off, indices_off, _) = self.half(dir);
+        const NODES_PER_CHUNK: usize = 4096;
+        let mut indptr_bytes = Vec::new();
+        let mut indices_bytes = Vec::new();
+        let mut nbrs = Vec::new();
+        let mut start = 0usize;
+        while start < n_keyed {
+            let end = (start + NODES_PER_CHUNK).min(n_keyed);
+            indptr_bytes.clear();
+            indptr_bytes.resize((end - start + 1) * 8, 0);
+            self.file
+                .pread_uncounted(indptr_off + start as u64 * 8, &mut indptr_bytes)?;
+            let ptr: Vec<usize> = indptr_bytes
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+                .collect();
+            let (lo, hi) = (ptr[0], ptr[end - start]);
+            // The same bounds the demand-paged reads enforce: a chunk
+            // end beyond the header's nnz (a post-open forge) must not
+            // size an allocation or spill the read into the perm
+            // region.
+            if lo > hi || hi > nnz {
+                return Err(io::bad(&self.file.path, "indptr out of bounds"));
+            }
+            indices_bytes.clear();
+            indices_bytes.resize((hi - lo) * 4, 0);
+            self.file
+                .pread_uncounted(indices_off + lo as u64 * 4, &mut indices_bytes)?;
+            for (i, w) in ptr.windows(2).enumerate() {
+                if w[0] > w[1] || w[1] > hi {
+                    return Err(io::bad(&self.file.path, "indptr is not monotone"));
+                }
+                nbrs.clear();
+                nbrs.resize(w[1] - w[0], 0);
+                decode_u32s(&indices_bytes[(w[0] - lo) * 4..(w[1] - lo) * 4], &mut nbrs);
+                if nbrs.iter().any(|&n| n as usize >= n_other) {
+                    return Err(io::bad(
+                        &self.file.path,
+                        &format!(
+                            "neighbor id of node {} out of range ({n_other} nodes)",
+                            start + i
+                        ),
+                    ));
+                }
+                f((start + i) as u32, &nbrs);
+            }
+            start = end;
+        }
+        Ok(())
+    }
+
+    /// Open-time structural validation of one half's `indptr`: streamed
+    /// in chunks (O(chunk) memory), it must start at 0, be monotone,
+    /// end at the header's nnz, and only give edges to nodes `owner`
+    /// assigns to this shard's partition — so a structurally valid
+    /// shard from a *different* partitioning (a cross-bundle re-point)
+    /// fails at open, not with silently wrong neighbors.
+    pub(crate) fn validate_indptr(
+        &self,
+        out_edges: bool,
+        owner: &dyn Fn(u32) -> u32,
+    ) -> Result<()> {
+        let dir = if out_edges { Dir::Out } else { Dir::In };
+        let (n_keyed, _, nnz, indptr_off, _, _) = self.half(dir);
+        let part = self.layout.stamp.partition as u32;
+        const CHUNK: usize = 8192;
+        let mut bytes = Vec::new();
+        let mut prev = 0usize;
+        let mut start = 0usize;
+        while start <= n_keyed {
+            let end = (start + CHUNK).min(n_keyed + 1);
+            bytes.clear();
+            bytes.resize((end - start) * 8, 0);
+            self.file
+                .pread_uncounted(indptr_off + start as u64 * 8, &mut bytes)?;
+            for (i, c) in bytes.chunks_exact(8).enumerate() {
+                let cur = u64::from_le_bytes(c.try_into().unwrap()) as usize;
+                let node = start + i;
+                if node == 0 {
+                    if cur != 0 {
+                        return Err(io::bad(&self.file.path, "indptr does not start at 0"));
+                    }
+                } else {
+                    if cur < prev || cur > nnz {
+                        return Err(io::bad(&self.file.path, "indptr is not monotone"));
+                    }
+                    if cur > prev && owner((node - 1) as u32) != part {
+                        return Err(io::bad(
+                            &self.file.path,
+                            &format!(
+                                "shard of partition {part} holds edges of node {}, owned by \
+                                 partition {}",
+                                node - 1,
+                                owner((node - 1) as u32)
+                            ),
+                        ));
+                    }
+                }
+                prev = cur;
+            }
+            start = end;
+        }
+        if prev != nnz {
+            return Err(io::bad(
+                &self.file.path,
+                &format!("indptr ends at {prev}, header claims {nnz} edges"),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn decode_u32s(bytes: &[u8], out: &mut [u32]) {
+    debug_assert_eq!(bytes.len(), out.len() * 4);
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = u32::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+/// Block-paged edge timestamps of one edge type (`adj/<et>.time`,
+/// global edge-id order): resolves per-candidate times for the paged
+/// temporal sampling path, caching [`TIME_BLOCK`]-edge blocks in the
+/// shared [`AdjCache`] (i64s stored as lo/hi u32 halves).
+pub struct PagedEdgeTime {
+    file: PagedFile,
+    num_edges: usize,
+    file_id: u32,
+    cache: Arc<AdjCache>,
+}
+
+impl PagedEdgeTime {
+    /// Open and validate (magic, exact size, count == `num_edges`)
+    /// without reading the payload.
+    pub fn open(
+        path: impl AsRef<Path>,
+        num_edges: usize,
+        file_id: u32,
+        cache: Arc<AdjCache>,
+    ) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if file_id as u64 >= MAX_ADJ_IDS {
+            return Err(Error::Storage(format!(
+                "time file id {file_id} exceeds the adjacency cache-key space"
+            )));
+        }
+        let (file, count) = io::open_i64_array(&path)?;
+        if count != num_edges {
+            return Err(io::bad(
+                &path,
+                &format!("time file holds {count} entries, edge type has {num_edges}"),
+            ));
+        }
+        Ok(Self { file: PagedFile::new(file, path), num_edges, file_id, cache })
+    }
+
+    /// Demand-paged positioned reads issued so far (cache misses only).
+    pub fn disk_reads(&self) -> u64 {
+        self.file.reads.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_disk_reads(&self) {
+        self.file.reads.store(0, Ordering::Relaxed);
+    }
+
+    /// Resolve the timestamps of `eids` into `out` (aligned element for
+    /// element), paging [`TIME_BLOCK`]-edge blocks through the cache.
+    /// Convenience wrapper over [`PagedEdgeTime::times_for_into`] with
+    /// throwaway scratch — the sampler hot path goes through
+    /// [`AdjBuf::resolve_times`] instead, which reuses its buffers.
+    pub fn times_for(&self, eids: &[u32], out: &mut Vec<i64>) -> Result<()> {
+        let (mut bytes, mut tblock, mut twords) = (Vec::new(), Vec::new(), Vec::new());
+        self.times_for_into(eids, out, &mut bytes, &mut tblock, &mut 0, &mut twords)
+    }
+
+    /// [`PagedEdgeTime::times_for`] with caller-owned scratch. The
+    /// decoded block held in `(tblock, tblock_key)` persists across
+    /// calls, so consecutive lookups in one block — the common frontier
+    /// pattern — cost no cache probe, no read and no allocation; a
+    /// block miss costs one positioned read even when the block is too
+    /// wide for a tiny cache budget to retain.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn times_for_into(
+        &self,
+        eids: &[u32],
+        out: &mut Vec<i64>,
+        bytes: &mut Vec<u8>,
+        tblock: &mut Vec<i64>,
+        tblock_key: &mut u64,
+        twords: &mut Vec<u32>,
+    ) -> Result<()> {
+        out.clear();
+        out.reserve(eids.len());
+        for &e in eids {
+            let e = e as usize;
+            if e >= self.num_edges {
+                return Err(io::bad(
+                    &self.file.path,
+                    &format!("edge id {e} out of range ({} edges)", self.num_edges),
+                ));
+            }
+            let block = e / TIME_BLOCK;
+            let slot = e % TIME_BLOCK;
+            let key = ((self.file_id as u64) << 34) | (TIME_TAG << 32) | block as u64;
+            if *tblock_key == key {
+                out.push(tblock[slot]);
+                continue;
+            }
+            let cached = self
+                .cache
+                .with(key, |w| {
+                    tblock.clear();
+                    tblock.extend(w.chunks_exact(2).map(|p| join_i64(p[0], p[1])));
+                })
+                .is_some();
+            if !cached {
+                let start = block * TIME_BLOCK;
+                let len = TIME_BLOCK.min(self.num_edges - start);
+                bytes.clear();
+                bytes.resize(len * 8, 0);
+                // Payload starts after the i64 array file's 16-byte header.
+                self.file.pread(16 + start as u64 * 8, bytes)?;
+                tblock.clear();
+                twords.clear();
+                for c in bytes.chunks_exact(8) {
+                    let t = u64::from_le_bytes(c.try_into().unwrap());
+                    tblock.push(t as i64);
+                    twords.push(t as u32);
+                    twords.push((t >> 32) as u32);
+                }
+                self.cache.insert(key, twords);
+            }
+            *tblock_key = key;
+            out.push(tblock[slot]);
+        }
+        Ok(())
+    }
+}
+
+fn join_i64(lo: u32, hi: u32) -> i64 {
+    (((hi as u64) << 32) | lo as u64) as i64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,5 +863,160 @@ mod tests {
         let cache = Arc::new(RowCache::new(LruConfig::default()));
         assert!(PagedFeatureStore::new(Arc::clone(&file), Arc::clone(&cache), MAX_SHARDS).is_err());
         assert!(PagedFeatureStore::new(file, cache, MAX_SHARDS - 1).is_ok());
+    }
+
+    use crate::graph::Compressed;
+
+    const STAMP: AdjStamp = AdjStamp { et_index: 0, partition: 0 };
+
+    /// 3 dst / 2 src nodes, 3 edges (same toy as the io tests).
+    fn adj_shard(name: &str) -> (PathBuf, Compressed, Compressed) {
+        let dir = std::env::temp_dir().join("pyg2_paged_adj_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let csc = Compressed {
+            indptr: vec![0, 1, 1, 3],
+            indices: vec![0, 1, 0],
+            perm: vec![2, 0, 1],
+        };
+        let csr = Compressed { indptr: vec![0, 2, 3], indices: vec![0, 2, 2], perm: vec![2, 1, 0] };
+        io::write_adjacency_shard(&path, STAMP, 2, 3, &csc, &csr).unwrap();
+        (path, csc, csr)
+    }
+
+    #[test]
+    fn paged_lists_match_the_written_shard_and_warm_reads_skip_disk() {
+        let (path, csc, csr) = adj_shard("lists.pyga");
+        let cache = Arc::new(AdjCache::new(4096));
+        let adj = PagedAdjacency::open(&path, STAMP, 2, 3, 3, 0, Arc::clone(&cache)).unwrap();
+        assert_eq!((adj.csc_nnz(), adj.csr_nnz()), (3, 3));
+        assert_eq!(adj.disk_reads(), 0, "open-time validation is not counted");
+
+        let mut buf = AdjBuf::default();
+        for v in 0..3u32 {
+            adj.in_list(v, &mut buf).unwrap();
+            let (nbrs, eids) = buf.nbrs_eids();
+            assert_eq!(nbrs, csc.neighbors(v as usize), "in-nbrs of {v}");
+            assert_eq!(eids, csc.edge_ids(v as usize), "in-eids of {v}");
+        }
+        for v in 0..2u32 {
+            adj.out_list(v, &mut buf).unwrap();
+            let (nbrs, eids) = buf.nbrs_eids();
+            assert_eq!(nbrs, csr.neighbors(v as usize), "out-nbrs of {v}");
+            assert_eq!(eids, csr.edge_ids(v as usize), "out-eids of {v}");
+        }
+        let cold = adj.disk_reads();
+        assert!(cold > 0, "cold lists were paged from disk");
+        for v in 0..3u32 {
+            adj.in_list(v, &mut buf).unwrap();
+        }
+        assert_eq!(adj.disk_reads(), cold, "warm lists touch no disk");
+        assert!(cache.stats().hits >= 3);
+        assert!(adj.in_list(3, &mut buf).is_err(), "node beyond the id space");
+        adj.reset_disk_reads();
+        assert_eq!(adj.disk_reads(), 0);
+    }
+
+    #[test]
+    fn tiny_budgets_evict_but_stay_correct() {
+        let (path, csc, _) = adj_shard("evict.pyga");
+        // Room for roughly one two-edge block: constant eviction.
+        let cache = Arc::new(AdjCache::new(16));
+        let adj = PagedAdjacency::open(&path, STAMP, 2, 3, 3, 0, Arc::clone(&cache)).unwrap();
+        let mut buf = AdjBuf::default();
+        for _ in 0..4 {
+            for v in (0..3u32).rev() {
+                adj.in_list(v, &mut buf).unwrap();
+                assert_eq!(buf.nbrs_eids().0, csc.neighbors(v as usize));
+            }
+        }
+        let s = cache.stats();
+        assert!(s.bytes_cached <= 16, "{s}");
+        assert!(s.evictions > 0, "a 16-byte budget must evict: {s}");
+    }
+
+    #[test]
+    fn stream_and_validate_cover_the_shard() {
+        let (path, csc, csr) = adj_shard("stream.pyga");
+        let cache = Arc::new(AdjCache::new(4096));
+        let adj = PagedAdjacency::open(&path, STAMP, 2, 3, 3, 0, cache).unwrap();
+        let mut seen = Vec::new();
+        adj.stream(false, |v, nbrs| seen.push((v, nbrs.to_vec()))).unwrap();
+        let expect: Vec<(u32, Vec<u32>)> = (0..3)
+            .map(|v| (v as u32, csc.neighbors(v).to_vec()))
+            .collect();
+        assert_eq!(seen, expect);
+        seen.clear();
+        adj.stream(true, |v, nbrs| seen.push((v, nbrs.to_vec()))).unwrap();
+        assert_eq!(seen[1], (1, csr.neighbors(1).to_vec()));
+        // Every dst with in-edges (0, 2) lives on partition 0 here.
+        adj.validate_indptr(false, &|_| 0).unwrap();
+        adj.validate_indptr(true, &|_| 0).unwrap();
+        // An ownership function that disowns node 2 fails validation.
+        assert!(adj
+            .validate_indptr(false, &|v| if v == 2 { 1 } else { 0 })
+            .is_err());
+    }
+
+    #[test]
+    fn corrupt_shards_fail_at_open_or_first_touch() {
+        let (path, _, _) = adj_shard("corrupt.pyga");
+        let cache = Arc::new(AdjCache::new(4096));
+        let pristine = std::fs::read(&path).unwrap();
+
+        // Wrong stamp (re-pointed slot) and checksum drift fail at open.
+        assert!(PagedAdjacency::open(
+            &path,
+            AdjStamp { et_index: 0, partition: 2 },
+            2,
+            3,
+            3,
+            0,
+            Arc::clone(&cache)
+        )
+        .is_err());
+        let mut evil = pristine.clone();
+        *evil.last_mut().unwrap() ^= 0x01;
+        std::fs::write(&path, &evil).unwrap();
+        assert!(
+            PagedAdjacency::open(&path, STAMP, 2, 3, 3, 0, Arc::clone(&cache)).is_err(),
+            "payload flip must fail the open-time checksum"
+        );
+
+        // Truncation *after* open (mid-run read) fails at first touch.
+        std::fs::write(&path, &pristine).unwrap();
+        let adj = PagedAdjacency::open(&path, STAMP, 2, 3, 3, 0, Arc::clone(&cache)).unwrap();
+        std::fs::write(&path, &pristine[..pristine.len() - 8]).unwrap();
+        let mut buf = AdjBuf::default();
+        let mut failed = false;
+        for v in 0..2u32 {
+            failed |= adj.out_list(v, &mut buf).is_err();
+        }
+        assert!(failed, "truncated indices mid-run must error on first touch");
+        std::fs::write(&path, &pristine).unwrap();
+    }
+
+    #[test]
+    fn paged_edge_time_blocks_roundtrip() {
+        let dir = std::env::temp_dir().join("pyg2_paged_adj_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("et.time");
+        let times: Vec<i64> = (0..1300i64).map(|i| i * 7 - 650 * 7).collect();
+        io::write_i64_array(&path, &times).unwrap();
+        let cache = Arc::new(AdjCache::new(1 << 20));
+        let t = PagedEdgeTime::open(&path, times.len(), 1, Arc::clone(&cache)).unwrap();
+        // Wrong expected count fails at open.
+        assert!(PagedEdgeTime::open(&path, 99, 2, Arc::clone(&cache)).is_err());
+
+        let eids: Vec<u32> = vec![0, 511, 512, 1299, 3, 512];
+        let mut out = Vec::new();
+        t.times_for(&eids, &mut out).unwrap();
+        let expect: Vec<i64> = eids.iter().map(|&e| times[e as usize]).collect();
+        assert_eq!(out, expect, "negative and positive i64s survive the u32 packing");
+        let cold = t.disk_reads();
+        assert!(cold >= 3, "three distinct blocks were paged");
+        t.times_for(&eids, &mut out).unwrap();
+        assert_eq!(t.disk_reads(), cold, "warm blocks touch no disk");
+        assert!(t.times_for(&[1300], &mut out).is_err(), "edge id out of range");
     }
 }

@@ -121,6 +121,21 @@ impl Default for HeteroSamplerConfig {
     }
 }
 
+/// How one expansion's edge timestamps are provided to
+/// [`filter_pick`]: indexed by **global edge id** (the resident array
+/// every in-memory store holds) or **aligned with the candidate
+/// slice** (what a paged mount resolves per neighbor list through
+/// [`crate::persist::PagedEdgeTime`]). Both views describe the same
+/// timestamps, so the filtering — and hence the RNG stream — is
+/// identical across them.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum EdgeTimeView<'a> {
+    /// `times[eid]` is the timestamp of global edge `eid`.
+    Global(&'a [i64]),
+    /// `times[j]` is the timestamp of the `j`-th candidate.
+    PerCandidate(&'a [i64]),
+}
+
 /// Filter one node's in-neighbor slice by the temporal constraints and
 /// pick up to `fanout` of the survivors — **the single definition of
 /// the hetero samplers' RNG-consumption contract**. Both
@@ -135,18 +150,24 @@ pub(crate) fn filter_pick(
     nbrs: &[u32],
     eids: &[u32],
     t_seed: Option<i64>,
-    edge_time: Option<&[i64]>,
+    edge_time: Option<EdgeTimeView<'_>>,
     node_time: Option<&[i64]>,
     fanout: usize,
     rng: &mut Rng,
 ) -> Vec<(u32, u32)> {
+    if let Some(EdgeTimeView::PerCandidate(times)) = edge_time {
+        debug_assert_eq!(times.len(), eids.len(), "per-candidate times misaligned");
+    }
     let mut cands: Vec<usize> = Vec::with_capacity(nbrs.len());
     for (j, (&nbr, &eid)) in nbrs.iter().zip(eids).enumerate() {
         if let Some(ts) = t_seed {
-            if let Some(etimes) = edge_time {
-                if etimes[eid as usize] > ts {
-                    continue;
-                }
+            let et = match edge_time {
+                Some(EdgeTimeView::Global(times)) => Some(times[eid as usize]),
+                Some(EdgeTimeView::PerCandidate(times)) => Some(times[j]),
+                None => None,
+            };
+            if et.is_some_and(|t| t > ts) {
+                continue;
             }
             if let Some(ntimes) = node_time {
                 if ntimes[nbr as usize] > ts {
@@ -307,7 +328,7 @@ impl<G: GraphStore> HeteroNeighborSampler<G> {
                         &csc.indices[lo..hi],
                         &csc.perm[lo..hi],
                         t_seed,
-                        edge_time.as_deref().map(|v| &v[..]),
+                        edge_time.as_deref().map(|v| EdgeTimeView::Global(&v[..])),
                         node_time.as_deref().map(|v| &v[..]),
                         fanout,
                         &mut rng,

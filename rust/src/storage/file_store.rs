@@ -326,8 +326,10 @@ impl FileFeatureStore {
 
 /// Positioned read against a raw file handle. On Unix this is `pread`
 /// (no shared seek cursor, no lock); elsewhere callers must serialize
-/// (the store holds a seek lock for that case).
-fn pread_raw(file: &File, offset: u64, buf: &mut [u8]) -> Result<()> {
+/// (the store holds a seek lock for that case). Shared with the
+/// [`crate::persist::PagedAdjacency`] reader, which pages neighbor-list
+/// runs off bundle shards the same way.
+pub(crate) fn pread_raw(file: &File, offset: u64, buf: &mut [u8]) -> Result<()> {
     #[cfg(unix)]
     {
         use std::os::unix::fs::FileExt;

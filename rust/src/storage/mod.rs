@@ -15,6 +15,7 @@ pub mod graph_store;
 pub mod tensor_frame;
 
 pub use feature_store::{FeatureKey, FeatureStore, InMemoryFeatureStore, DEFAULT_ATTR, DEFAULT_GROUP};
+pub(crate) use file_store::pread_raw;
 pub use file_store::{FileFeatureStore, FileFeatureWriter};
 pub use graph_store::{default_edge_type, GraphStore, InMemoryGraphStore};
 pub use tensor_frame::{ColumnEncoder, TableEncoder};

@@ -1,0 +1,187 @@
+//! Differential/property suite of the demand-paged adjacency path:
+//! for random homogeneous and heterogeneous graphs, neighbor lists
+//! served by a paged mount (`PagedAdjacency` behind
+//! `PartitionedGraphStore::mount_paged`) must be **byte-identical** —
+//! same neighbor order, same edge ids, same timestamps — to the in-RAM
+//! CSC/CSR decode of the same bundle, across random query patterns and
+//! under tiny cache budgets that force constant eviction. The paged
+//! pipeline's seed-for-seed equivalence rests entirely on this
+//! slice-level identity.
+
+use pyg2::datasets::hetero::{self, HeteroSbmConfig};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::dist::PartitionedGraphStore;
+use pyg2::graph::EdgeType;
+use pyg2::partition::{ldg_partition, TypedPartitioning};
+use pyg2::persist::{write_bundle, write_bundle_hetero, AdjBuf, AdjCache};
+use pyg2::storage::{default_edge_type, GraphStore, DEFAULT_GROUP};
+use pyg2::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pyg2_paged_adj_diff").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Query both mounts with the same random node pattern and demand
+/// slice equality, in- and out-direction, including per-candidate
+/// timestamps wherever the resident mount holds a global time array.
+fn assert_identical_lists(
+    resident: &PartitionedGraphStore,
+    paged: &PartitionedGraphStore,
+    et: &EdgeType,
+    num_dst: usize,
+    num_src: usize,
+    queries: usize,
+    rng: &mut Rng,
+) {
+    let res_es = resident.edges_of(et).unwrap();
+    let pag_es = paged.edges_of(et).unwrap();
+    let time = res_es.resident_edge_time().cloned();
+    let mut rb = AdjBuf::default();
+    let mut pb = AdjBuf::default();
+    for q in 0..queries {
+        // Random pattern: mostly random nodes, sprinkled with repeats
+        // of the previous query (cache hits) and id-space edges.
+        let v = match q % 5 {
+            0 => 0,
+            1 => (num_dst - 1) as u32,
+            _ => rng.index(num_dst) as u32,
+        };
+        let (rn, re) = res_es.read_in(v, &mut rb).unwrap();
+        let (pn, pe, pt) = pag_es.read_in_timed(v, &mut pb, time.is_some()).unwrap();
+        assert_eq!(rn, pn, "{}: in-neighbor order of {v}", et.key());
+        assert_eq!(re, pe, "{}: in-edge ids of {v}", et.key());
+        if let Some(times) = &time {
+            let expect: Vec<i64> = re.iter().map(|&e| times[e as usize]).collect();
+            assert_eq!(
+                pt.expect("paged mount resolves timestamps"),
+                &expect[..],
+                "{}: per-candidate timestamps of {v}",
+                et.key()
+            );
+        } else {
+            assert!(pt.is_none());
+        }
+        let u = rng.index(num_src) as u32;
+        let (rn, re) = res_es.read_out(u, &mut rb).unwrap();
+        let (pn, pe) = pag_es.read_out(u, &mut pb).unwrap();
+        assert_eq!(rn, pn, "{}: out-neighbor order of {u}", et.key());
+        assert_eq!(re, pe, "{}: out-edge ids of {u}", et.key());
+    }
+}
+
+#[test]
+fn random_homo_graphs_serve_identical_lists_under_tiny_budgets() {
+    let mut rng = Rng::new(0xADJ0);
+    for case in 0..4u64 {
+        let n = 60 + (case as usize) * 97;
+        let g = sbm::generate(&SbmConfig {
+            num_nodes: n,
+            seed: 1000 + case,
+            ..Default::default()
+        })
+        .unwrap();
+        let parts = 2 + (case as usize % 3);
+        let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let bundle = write_bundle(tmp(&format!("homo_{case}")), &g, &p).unwrap();
+
+        let resident = PartitionedGraphStore::mount(&bundle, 0).unwrap();
+        // A budget of a few dozen bytes: nearly every touch evicts, so
+        // equality must hold straight off the disk path, not just the
+        // cache path.
+        for budget in [48u64, 1 << 20] {
+            let cache = Arc::new(AdjCache::new(budget));
+            let paged =
+                PartitionedGraphStore::mount_paged(&bundle, 0, Arc::clone(&cache)).unwrap();
+            assert_identical_lists(
+                &resident,
+                &paged,
+                &default_edge_type(),
+                n,
+                n,
+                200,
+                &mut rng,
+            );
+            let stats = cache.stats();
+            assert!(stats.bytes_cached <= budget, "budget ceiling: {stats}");
+            assert!(stats.peak_bytes <= budget, "peak ceiling: {stats}");
+            if budget == 48 {
+                assert!(stats.evictions > 0, "tiny budget must evict: {stats}");
+            }
+        }
+    }
+}
+
+#[test]
+fn random_hetero_graphs_with_timestamps_serve_identical_lists() {
+    let mut rng = Rng::new(0xADJ1);
+    for case in 0..3u64 {
+        let mut g = hetero::generate(&HeteroSbmConfig {
+            num_users: 80 + (case as usize) * 40,
+            num_items: 60 + (case as usize) * 25,
+            num_tags: 20,
+            seed: 50 + case,
+            ..Default::default()
+        })
+        .unwrap();
+        // Stamp one relation with deterministic pseudo-random
+        // timestamps so the paged time path is exercised end to end.
+        let timed_et = g.edge_types().next().unwrap().clone();
+        let ne = g.edge_store(&timed_et).unwrap().edge_index.num_edges();
+        let times: Vec<i64> = (0..ne as i64).map(|e| (e * 37 + case as i64 * 11) % 100 - 50).collect();
+        g.set_edge_time(&timed_et, times).unwrap();
+
+        let tp = TypedPartitioning::ldg_hetero(&g, 2 + case as usize, 1.1).unwrap();
+        let bundle = write_bundle_hetero(tmp(&format!("hetero_{case}")), &g, &tp).unwrap();
+
+        let resident = PartitionedGraphStore::mount(&bundle, 0).unwrap();
+        let cache = Arc::new(AdjCache::new(96));
+        let paged = PartitionedGraphStore::mount_paged(&bundle, 0, Arc::clone(&cache)).unwrap();
+        for et in resident.edge_types() {
+            let n_dst = resident.num_nodes(&et.dst).unwrap();
+            let n_src = resident.num_nodes(&et.src).unwrap();
+            assert_identical_lists(&resident, &paged, &et, n_dst, n_src, 120, &mut rng);
+        }
+        let stats = cache.stats();
+        assert!(stats.bytes_cached <= 96 && stats.peak_bytes <= 96, "{stats}");
+        assert!(stats.evictions > 0, "96-byte budget over 4 relations must evict");
+
+        // The one-pass typed halo sweep agrees with both the per-type
+        // computation and the resident decode.
+        let paged_halos = paged.halos().unwrap();
+        for (nt, halo) in resident.halos().unwrap() {
+            assert_eq!(paged_halos[&nt], halo, "{nt} halos");
+            assert_eq!(paged.halo_nodes(&nt).unwrap(), halo, "{nt} per-type halo");
+        }
+    }
+}
+
+#[test]
+fn paged_structural_summaries_match_resident_decode() {
+    let g = sbm::generate(&SbmConfig { num_nodes: 300, seed: 7, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("summaries"), &g, &p).unwrap();
+    let resident = PartitionedGraphStore::mount(&bundle, 1).unwrap();
+    let paged =
+        PartitionedGraphStore::mount_paged(&bundle, 1, Arc::new(AdjCache::new(1 << 20))).unwrap();
+
+    // The streamed (paged) edge walk agrees with the resident COO on
+    // everything derived from it: shard sizes, cut edges, halos.
+    assert_eq!(paged.shard_edge_counts(), resident.shard_edge_counts());
+    assert_eq!(paged.num_cut_edges().unwrap(), resident.num_cut_edges().unwrap());
+    assert_eq!(
+        paged.halo_nodes(DEFAULT_GROUP).unwrap(),
+        resident.halo_nodes(DEFAULT_GROUP).unwrap()
+    );
+    // Halos remain sorted + deduplicated (the HaloCache contract).
+    let halo = paged.halo_nodes(DEFAULT_GROUP).unwrap();
+    assert!(halo.windows(2).all(|w| w[0] < w[1]));
+
+    // Merged global views are a clean error, not a silent decode.
+    let et = default_edge_type();
+    assert!(paged.csc(&et).is_err());
+    assert!(paged.csr(&et).is_err());
+}

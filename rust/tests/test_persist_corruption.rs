@@ -235,3 +235,192 @@ fn missing_shard_files_are_rejected() {
     }
     open_and_mount(bundle.dir()).unwrap();
 }
+
+// ---------------------------------------------------------------------
+// Demand-paged adjacency (`--page-adj`): the same corruption classes
+// must fail **at open or first touch** — never a panic, never silent
+// wrong neighbors — even though the paged path never decodes a shard
+// into RAM.
+// ---------------------------------------------------------------------
+
+use pyg2::persist::{AdjBuf, AdjCache};
+use pyg2::storage::GraphStore;
+use std::sync::Arc;
+
+/// Open + mount a bundle with paged adjacency and *touch every
+/// neighbor list* of every edge type, in and out — exercising both the
+/// open-time validation (header, stamp, checksum, indptr stream) and
+/// the first-touch validation (indptr pair, id bounds) a corrupt byte
+/// could hide behind.
+fn open_and_mount_paged(dir: &Path) -> pyg2::Result<()> {
+    let bundle = Bundle::open(dir)?;
+    let gs = PartitionedGraphStore::mount_paged(&bundle, 0, Arc::new(AdjCache::new(1 << 20)))?;
+    let mut buf = AdjBuf::default();
+    for et in gs.edge_types() {
+        let es = gs.edges_of(&et)?;
+        for v in 0..gs.num_nodes(&et.dst)? {
+            es.read_in_timed(v as u32, &mut buf, true)?;
+        }
+        for v in 0..gs.num_nodes(&et.src)? {
+            es.read_out(v as u32, &mut buf)?;
+        }
+    }
+    PartitionedFeatureStore::mount(&bundle, 0, LruConfig::default())?;
+    bundle.load_labels(DEFAULT_GROUP)?;
+    Ok(())
+}
+
+/// 64-bit FNV-1a (the shard payload checksum) — local copy for forging
+/// "valid-checksum, bad-structure" shards in the tests below.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const ADJ_HEADER: usize = 8 + 7 * 8;
+
+#[test]
+fn pristine_bundle_mounts_paged() {
+    let bundle = toy_bundle("paged_pristine");
+    open_and_mount_paged(bundle.dir()).unwrap();
+}
+
+#[test]
+fn every_adjacency_byte_flip_is_rejected_by_the_paged_mount() {
+    // The paged reader never decodes the payload at mount, but the
+    // open-time streaming checksum gives it the same every-byte-flip
+    // guarantee as the resident reader's structural cross-validation.
+    let g = sbm::generate(&SbmConfig { num_nodes: 30, seed: 4, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+    let bundle = write_bundle(tmp("paged_adj_payload"), &g, &p).unwrap();
+    let shard = bundle.dir().join("adj/0__default__to___default.p0.pyga");
+    let pristine = std::fs::read(&shard).unwrap();
+    for i in 0..pristine.len() {
+        let mut evil = pristine.clone();
+        evil[i] ^= 0x01;
+        std::fs::write(&shard, &evil).unwrap();
+        assert!(
+            open_and_mount_paged(bundle.dir()).is_err(),
+            "adjacency byte {i} of {} flipped must not mount paged",
+            pristine.len()
+        );
+    }
+    std::fs::write(&shard, &pristine).unwrap();
+    open_and_mount_paged(bundle.dir()).unwrap();
+}
+
+#[test]
+fn repointed_adjacency_shards_are_rejected_by_both_mounts() {
+    // Swap two structurally valid shard files: each carries the other
+    // slot's identity stamp, so both the resident and the paged open
+    // must reject the bundle before any neighbor list is served.
+    let bundle = toy_bundle("paged_repoint");
+    let a = bundle.dir().join("adj/0__default__to___default.p0.pyga");
+    let b = bundle.dir().join("adj/0__default__to___default.p1.pyga");
+    let (ba, bb) = (std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    std::fs::write(&a, &bb).unwrap();
+    std::fs::write(&b, &ba).unwrap();
+    assert!(open_and_mount(bundle.dir()).is_err(), "resident mount must reject the swap");
+    assert!(open_and_mount_paged(bundle.dir()).is_err(), "paged mount must reject the swap");
+    std::fs::write(&a, &ba).unwrap();
+    std::fs::write(&b, &bb).unwrap();
+    open_and_mount_paged(bundle.dir()).unwrap();
+}
+
+#[test]
+fn forged_out_of_bounds_indptr_is_rejected_at_paged_open() {
+    // Forge a shard whose checksum is valid but whose csc indptr jumps
+    // past the header's nnz: the open-time indptr stream must catch it
+    // (a checksum alone would wave it through).
+    let bundle = toy_bundle("paged_indptr");
+    let shard = bundle.dir().join("adj/0__default__to___default.p0.pyga");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    // Second csc indptr entry (the first node's list end).
+    let off = ADJ_HEADER + 8;
+    bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    let hash = fnv1a(&bytes[ADJ_HEADER..]);
+    bytes[56..64].copy_from_slice(&hash.to_le_bytes());
+    std::fs::write(&shard, &bytes).unwrap();
+    assert!(open_and_mount_paged(bundle.dir()).is_err());
+}
+
+#[test]
+fn truncated_indices_mid_run_fail_at_first_touch() {
+    // Truncation *after* the mount validated the file: the positioned
+    // read lands past EOF on first touch and must surface as an Error,
+    // never a panic or a short/garbage neighbor list.
+    let bundle = toy_bundle("paged_midrun");
+    let gs = PartitionedGraphStore::mount_paged(&bundle, 0, Arc::new(AdjCache::new(1 << 20)))
+        .unwrap();
+    let shard = bundle.dir().join("adj/0__default__to___default.p0.pyga");
+    let pristine = std::fs::read(&shard).unwrap();
+    std::fs::write(&shard, &pristine[..pristine.len() / 2]).unwrap();
+    let et = pyg2::storage::default_edge_type();
+    let es = gs.edges_of(&et).unwrap();
+    let mut buf = AdjBuf::default();
+    let mut outcomes = (0usize, 0usize); // (served, errored)
+    for v in 0..80u32 {
+        match es.read_in(v, &mut buf) {
+            Ok(_) => outcomes.0 += 1,
+            Err(_) => outcomes.1 += 1,
+        }
+    }
+    assert!(outcomes.1 > 0, "mid-run truncation must error on some first touch");
+    std::fs::write(&shard, &pristine).unwrap();
+}
+
+#[test]
+fn wrong_width_files_are_rejected_at_paged_open() {
+    // A `.pyga` slot pointing at a different-width array file (here an
+    // i64 timestamp array) must die on the magic/size checks, and a
+    // timestamp slot pointing at a u32 file likewise — "wrong-width
+    // reads" can never silently reinterpret bytes.
+    let mut g = sbm::generate(&SbmConfig { num_nodes: 40, seed: 6, ..Default::default() }).unwrap();
+    g.edge_time = Some((0..g.num_edges() as i64).collect());
+    let p = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+    let dir = tmp("paged_width");
+    let bundle = write_bundle(&dir, &g, &p).unwrap();
+    open_and_mount_paged(bundle.dir()).unwrap();
+
+    let shard = bundle.dir().join("adj/0__default__to___default.p0.pyga");
+    let time = bundle.dir().join("adj/0__default__to___default.time");
+    let (shard_bytes, time_bytes) =
+        (std::fs::read(&shard).unwrap(), std::fs::read(&time).unwrap());
+
+    std::fs::write(&shard, &time_bytes).unwrap();
+    assert!(open_and_mount_paged(bundle.dir()).is_err(), "i64 array as .pyga rejected");
+    std::fs::write(&shard, &shard_bytes).unwrap();
+
+    std::fs::write(&time, &shard_bytes).unwrap();
+    assert!(open_and_mount_paged(bundle.dir()).is_err(), ".pyga as time file rejected");
+    // A *truncated* time file is caught by the exact-size check too.
+    std::fs::write(&time, &time_bytes[..time_bytes.len() - 3]).unwrap();
+    assert!(open_and_mount_paged(bundle.dir()).is_err(), "truncated time file rejected");
+    std::fs::write(&time, &time_bytes).unwrap();
+    open_and_mount_paged(bundle.dir()).unwrap();
+}
+
+#[test]
+fn paged_mount_rejects_missing_and_truncated_adjacency_files() {
+    let bundle = toy_bundle("paged_missing");
+    for file in shard_files(bundle.dir()) {
+        if !file.extension().is_some_and(|e| e == "pyga") {
+            continue;
+        }
+        let pristine = std::fs::read(&file).unwrap();
+        std::fs::remove_file(&file).unwrap();
+        assert!(open_and_mount_paged(bundle.dir()).is_err(), "{} missing", file.display());
+        std::fs::write(&file, &pristine[..pristine.len() - 1]).unwrap();
+        assert!(open_and_mount_paged(bundle.dir()).is_err(), "{} truncated", file.display());
+        let mut longer = pristine.clone();
+        longer.push(0);
+        std::fs::write(&file, &longer).unwrap();
+        assert!(open_and_mount_paged(bundle.dir()).is_err(), "{} extended", file.display());
+        std::fs::write(&file, &pristine).unwrap();
+    }
+    open_and_mount_paged(bundle.dir()).unwrap();
+}
