@@ -1,0 +1,243 @@
+//! **S1** (serving): distributed inference throughput vs tail latency.
+//!
+//! Drives [`pyg2::coordinator::DistInferenceServer`] — N server workers
+//! pulling dynamic batches from one shared admission queue over the
+//! partitioned stores — with the closed-loop Zipf traffic fleet and
+//! reports client-observed p50/p95/p99 latency plus throughput:
+//!
+//! * **in-memory leg** (4 partitions): the full
+//!   `max_batch` × `max_wait` × worker-count sweep, showing the
+//!   batching-window/tail-latency trade directly.
+//! * **mounted legs** (2/4/8 partitions): the same server over a
+//!   `--mount`ed partition bundle, resident and with `--page-adj`
+//!   demand-paged adjacency, at two worker counts each — the Zipf skew
+//!   is what lets the bounded row/adjacency LRUs hold the hot head.
+//! * **deadline leg**: a deliberately tight per-request budget over the
+//!   mounted store; rejected-at-dequeue counts land in the report.
+//!
+//! Runs under `PYG2_BENCH_QUICK` in CI (bench-smoke job) with bundles
+//! written to a scratch directory under the system temp dir.
+
+use pyg2::coordinator::{
+    mounted_stores, partitioned_stores, run_traffic, DistInferenceServer, DistOptions,
+    ServeDistConfig, TrafficConfig,
+};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::dist::{PartitionedFeatureStore, PartitionedGraphStore};
+use pyg2::nn::NodeClassifier;
+use pyg2::partition::ldg_partition;
+use pyg2::persist::{write_bundle, LruConfig};
+use pyg2::storage::{FeatureKey, InMemoryFeatureStore};
+use pyg2::util::BenchSuite;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One traffic run against a freshly spawned server; records the
+/// client-observed percentile/throughput metrics under `tag`.
+#[allow(clippy::too_many_arguments)]
+fn serve_leg(
+    suite: &mut BenchSuite,
+    tag: &str,
+    gs: &Arc<PartitionedGraphStore>,
+    fs: &Arc<PartitionedFeatureStore>,
+    model: &Arc<NodeClassifier>,
+    num_nodes: usize,
+    workers: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    clients: usize,
+    requests_per_client: usize,
+    budget: Option<Duration>,
+) {
+    let server = DistInferenceServer::spawn(
+        Arc::clone(gs),
+        Arc::clone(fs),
+        Arc::clone(model),
+        ServeDistConfig { workers, max_batch, max_wait, ..Default::default() },
+    )
+    .unwrap();
+    let report = run_traffic(
+        &server,
+        num_nodes,
+        &TrafficConfig { clients, requests_per_client, budget, ..Default::default() },
+    );
+    let stats = server.stats();
+    assert_eq!(
+        report.completed + report.deadline_rejected + report.errors,
+        (clients * requests_per_client) as u64,
+        "{tag}: lost replies"
+    );
+    assert_eq!(report.errors, 0, "{tag}: serving errors");
+    if report.completed > 0 {
+        suite.record_metric(format!("p50_ms/{tag}"), report.p50_ms());
+        suite.record_metric(format!("p95_ms/{tag}"), report.p95_ms());
+        suite.record_metric(format!("p99_ms/{tag}"), report.p99_ms());
+        suite.record_metric(format!("throughput_rps/{tag}"), report.throughput_rps());
+    }
+    suite.record_metric(format!("mean_batch/{tag}"), stats.mean_batch_size());
+    if report.deadline_rejected > 0 {
+        suite.record_metric(
+            format!("deadline_rejected/{tag}"),
+            report.deadline_rejected as f64,
+        );
+    }
+    println!("  {tag}: {report} (mean batch {:.2})", stats.mean_batch_size());
+}
+
+fn main() {
+    let quick = std::env::var("PYG2_BENCH_QUICK").is_ok_and(|v| {
+        let v = v.trim().to_ascii_lowercase();
+        !v.is_empty() && !matches!(v.as_str(), "0" | "false" | "no" | "off")
+    });
+    let mut suite = BenchSuite::new("S1: dist inference serving");
+
+    let n = if quick { 3_000 } else { 10_000 };
+    let (clients, requests) = if quick { (4usize, 25usize) } else { (8, 100) };
+    let g = sbm::generate(&SbmConfig {
+        num_nodes: n,
+        feature_signal: 2.0,
+        seed: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let labels = g.y.clone().unwrap();
+    let classes = (*labels.iter().max().unwrap() + 1) as usize;
+    // The model only reads feature rows, so fitting from the in-memory
+    // store yields the exact model every serving leg below shares.
+    let model = Arc::new(
+        NodeClassifier::fit(
+            &InMemoryFeatureStore::from_tensor(g.x.clone()),
+            &FeatureKey::default_x(),
+            &labels,
+            classes,
+        )
+        .unwrap(),
+    );
+    let scratch = std::env::temp_dir().join("pyg2_bench_serve_dist");
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    // In-memory leg: the full batching sweep at 4 partitions. max_batch=1
+    // is the no-batching baseline; widening the window trades p50 for
+    // throughput.
+    {
+        let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        let (gs, fs) = partitioned_stores(&g, &p, 0, DistOptions::default()).unwrap();
+        for workers in [1usize, 4] {
+            for (max_batch, wait_ms) in [(1usize, 0u64), (16, 2), (64, 5)] {
+                serve_leg(
+                    &mut suite,
+                    &format!("in_memory_4p_w{workers}_b{max_batch}_wait{wait_ms}ms"),
+                    &gs,
+                    &fs,
+                    &model,
+                    n,
+                    workers,
+                    max_batch,
+                    Duration::from_millis(wait_ms),
+                    clients,
+                    requests,
+                    None,
+                );
+            }
+        }
+        // Single-request service time for the timing table.
+        let server = DistInferenceServer::spawn(
+            Arc::clone(&gs),
+            Arc::clone(&fs),
+            Arc::clone(&model),
+            ServeDistConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut node = 0u32;
+        suite.bench("predict_one/in_memory_4p", || {
+            server.predict(node % n as u32).unwrap();
+            node = node.wrapping_add(1);
+        });
+    }
+
+    // Mounted legs: resident and demand-paged adjacency at 2/4/8
+    // partitions, two worker counts each.
+    for parts in [2usize, 4, 8] {
+        let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+        let bundle = write_bundle(scratch.join(format!("{parts}p")), &g, &p).unwrap();
+
+        let (gs, fs, _) =
+            mounted_stores(&bundle, 0, DistOptions::default(), LruConfig::default()).unwrap();
+        for workers in [1usize, 4] {
+            serve_leg(
+                &mut suite,
+                &format!("mounted_{parts}p_w{workers}_b16_wait2ms"),
+                &gs,
+                &fs,
+                &model,
+                n,
+                workers,
+                16,
+                Duration::from_millis(2),
+                clients,
+                requests,
+                None,
+            );
+        }
+        let rc = fs.row_cache_stats().unwrap();
+        suite.record_metric(format!("mounted_row_hit_rate/{parts}p"), rc.hit_rate());
+
+        let (pgs, pfs, _) = mounted_stores(
+            &bundle,
+            0,
+            DistOptions::default(),
+            LruConfig { page_adjacency: true, ..Default::default() },
+        )
+        .unwrap();
+        for workers in [1usize, 4] {
+            serve_leg(
+                &mut suite,
+                &format!("paged_adj_{parts}p_w{workers}_b16_wait2ms"),
+                &pgs,
+                &pfs,
+                &model,
+                n,
+                workers,
+                16,
+                Duration::from_millis(2),
+                clients,
+                requests,
+                None,
+            );
+        }
+        if let Some(ac) = pgs.adj_cache_stats() {
+            suite.record_metric(format!("paged_adj_hit_rate/{parts}p"), ac.hit_rate());
+        }
+    }
+
+    // Deadline leg: a tight budget over the mounted 4p store with a slow
+    // batching window — requests that back up past their SLO are shed at
+    // dequeue instead of served late.
+    {
+        let bundle = pyg2::persist::Bundle::open(scratch.join("4p")).unwrap();
+        let (gs, fs, _) =
+            mounted_stores(&bundle, 0, DistOptions::default(), LruConfig::default()).unwrap();
+        serve_leg(
+            &mut suite,
+            "budget_2ms_mounted_4p_w1_b64_wait5ms",
+            &gs,
+            &fs,
+            &model,
+            n,
+            1,
+            64,
+            Duration::from_millis(5),
+            clients,
+            requests,
+            Some(Duration::from_millis(2)),
+        );
+    }
+
+    suite.finish();
+    println!(
+        "\nS1: one admission queue, N workers, dynamic batches; predictions are a \
+         pure function of the node (batch_seed = node id), so every leg above — \
+         in-memory, mounted, paged adjacency, any worker count — serves identical \
+         answers (tests/test_serve_dist.rs asserts it)."
+    );
+}

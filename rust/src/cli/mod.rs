@@ -50,6 +50,10 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -95,6 +99,19 @@ COMMANDS:
               --adj-cache-mb M  adjacency share of the budget (default:
                                 a quarter of --cache-mb)
               --rank R --cache-mb M --seed-type T  (mount knobs)
+  serve-dist  multi-worker online inference over the partitioned stores:
+              N server threads pull dynamic batches from one shared
+              admission queue, driven by a closed-loop Zipf client fleet;
+              reports p50/p95/p99 latency + throughput
+              --workers N --max-batch N --max-wait-ms MS
+              --budget-ms MS    per-request latency SLO; requests that
+                                miss it in the queue are rejected with a
+                                deadline error instead of served late
+              --clients N --requests N --zipf EXP --seed S
+              --nodes N --parts K        (in-memory SBM leg)
+              --mount DIR                serve out of a partition bundle
+              --page-adj --cache-mb M --adj-cache-mb M --rank R
+              --halo-cache --async --async-workers N --latency-us U
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
   info        print manifest/artifact summary

@@ -4,8 +4,13 @@
 //! of backend" promised by the FeatureStore/GraphStore split (§2.3).
 
 pub mod serve;
+pub mod serve_dist;
 
 pub use serve::{InferenceServer, Prediction, ServeConfig, ServeStats};
+pub use serve_dist::{
+    run_traffic, DistInferenceServer, ServeDistConfig, ServeDistStats, TrafficConfig,
+    TrafficReport,
+};
 
 use crate::error::Result;
 use crate::loader::{Batch, LoaderConfig, NeighborLoader};
@@ -297,22 +302,42 @@ pub fn partitioned_loader_with(
     build_partitioned_loader(graph, partitioning, local_rank, seeds, cfg, opts, None)
 }
 
-/// Shared builder: `halo` overrides the cache's node list when the
-/// caller already computed it (the multi-rank simulation sweeps every
-/// partition's halo once via [`crate::partition::Partitioning::halos`]
-/// instead of re-scanning the edge list per rank).
-fn build_partitioned_loader(
+/// Assemble the in-memory partitioned store pair viewed from
+/// `local_rank` — one shared [`crate::dist::PartitionRouter`], a
+/// [`crate::dist::PartitionedGraphStore`] over the edge shards, and a
+/// [`crate::dist::PartitionedFeatureStore`] with the
+/// [`DistOptions`] layers (halo replica / async router / simulated
+/// latency) applied — without committing to a consumer. Both the epoch
+/// loaders ([`partitioned_loader_with`]) and the serving path
+/// ([`crate::coordinator::DistInferenceServer`]) build on this.
+pub fn partitioned_stores(
     graph: &crate::graph::Graph,
     partitioning: &crate::partition::Partitioning,
     local_rank: u32,
-    seeds: Vec<u32>,
-    cfg: LoaderConfig,
+    opts: DistOptions,
+) -> Result<(
+    std::sync::Arc<crate::dist::PartitionedGraphStore>,
+    std::sync::Arc<crate::dist::PartitionedFeatureStore>,
+)> {
+    build_partitioned_stores(graph, partitioning, local_rank, opts, None)
+}
+
+/// Shared store builder: `halo` overrides the cache's node list when the
+/// caller already computed it (the multi-rank simulation sweeps every
+/// partition's halo once via [`crate::partition::Partitioning::halos`]
+/// instead of re-scanning the edge list per rank).
+fn build_partitioned_stores(
+    graph: &crate::graph::Graph,
+    partitioning: &crate::partition::Partitioning,
+    local_rank: u32,
     opts: DistOptions,
     halo: Option<&[u32]>,
-) -> Result<crate::dist::DistNeighborLoader> {
+) -> Result<(
+    std::sync::Arc<crate::dist::PartitionedGraphStore>,
+    std::sync::Arc<crate::dist::PartitionedFeatureStore>,
+)> {
     use crate::dist::{
-        AsyncRouter, DistNeighborLoader, HaloCache, PartitionRouter, PartitionedFeatureStore,
-        PartitionedGraphStore,
+        AsyncRouter, HaloCache, PartitionRouter, PartitionedFeatureStore, PartitionedGraphStore,
     };
     use std::sync::Arc;
 
@@ -341,7 +366,21 @@ fn build_partitioned_loader(
         };
         fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
     }
-    let mut loader = DistNeighborLoader::new(gs, Arc::new(fs), seeds, cfg);
+    Ok((gs, Arc::new(fs)))
+}
+
+/// Shared loader builder over [`build_partitioned_stores`].
+fn build_partitioned_loader(
+    graph: &crate::graph::Graph,
+    partitioning: &crate::partition::Partitioning,
+    local_rank: u32,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    opts: DistOptions,
+    halo: Option<&[u32]>,
+) -> Result<crate::dist::DistNeighborLoader> {
+    let (gs, fs) = build_partitioned_stores(graph, partitioning, local_rank, opts, halo)?;
+    let mut loader = crate::dist::DistNeighborLoader::new(gs, fs, seeds, cfg);
     if let Some(y) = &graph.y {
         loader = loader.with_labels(y.clone());
     }
@@ -648,7 +687,33 @@ pub fn mounted_loader(
     opts: DistOptions,
     lru: crate::persist::LruConfig,
 ) -> Result<crate::dist::DistNeighborLoader> {
-    use crate::dist::{AsyncRouter, DistNeighborLoader, HaloCache, PartitionedFeatureStore};
+    let (gs, fs, labels) = mounted_stores(bundle, local_rank, opts, lru)?;
+    let mut loader = crate::dist::DistNeighborLoader::new(gs, fs, seeds, cfg);
+    if let Some(y) = labels {
+        loader = loader.with_labels(y);
+    }
+    Ok(loader)
+}
+
+/// Mount a homogeneous bundle into the partitioned store pair viewed
+/// from `local_rank` (adjacency resident or demand-paged per
+/// `lru.page_adjacency`; feature rows demand-paged through the bounded
+/// LRU), with the [`DistOptions`] layers applied, plus the bundle's
+/// labels if stored. The consumer-neutral half of [`mounted_loader`],
+/// which the distributed inference server mounts its serving stores
+/// through. I/O ledgers (traffic, cache, disk-read counters) are zeroed
+/// after setup so they report workload costs only.
+pub fn mounted_stores(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+) -> Result<(
+    std::sync::Arc<crate::dist::PartitionedGraphStore>,
+    std::sync::Arc<crate::dist::PartitionedFeatureStore>,
+    Option<Vec<i64>>,
+)> {
+    use crate::dist::{AsyncRouter, HaloCache, PartitionedFeatureStore};
     use crate::error::Error;
     use crate::storage::DEFAULT_GROUP;
     use std::sync::Arc;
@@ -684,17 +749,15 @@ pub fn mounted_loader(
         };
         fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
     }
-    let mut loader = DistNeighborLoader::new(gs, Arc::new(fs), seeds, cfg);
-    if let Some(y) = bundle.load_labels(DEFAULT_GROUP)? {
-        loader = loader.with_labels(y);
-    }
+    let labels = bundle.load_labels(DEFAULT_GROUP)?;
     // Replica construction read its rows off disk (bypassing the row
-    // cache); zero the I/O ledgers so they report epoch costs only.
+    // cache); zero the I/O ledgers so they report workload costs only.
     // (Paged-adjacency setup streams shards through uncounted reads,
     // but reset its ledgers too so both halves start from zero.)
-    loader.features().reset_io_stats();
-    loader.graph().reset_adj_io_stats();
-    Ok(loader)
+    let fs = Arc::new(fs);
+    fs.reset_io_stats();
+    gs.reset_adj_io_stats();
+    Ok((gs, fs, labels))
 }
 
 /// Mount a bundle's topology honouring the [`crate::persist::LruConfig`]

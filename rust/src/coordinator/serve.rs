@@ -3,19 +3,40 @@
 //! The deployment half of the blueprint (TorchScript/serving in §2.1):
 //! clients submit single-node classification requests; the server
 //! accumulates them into a batch until `max_batch` seeds or `max_wait`
-//! elapses (whichever first), runs one sampled+padded batch through the
-//! inference HLO, and routes per-seed predictions back to their callers.
-//! The batching policy is the standard dynamic-batching tradeoff
-//! (throughput vs tail latency) of GNN serving systems.
+//! elapses (whichever first), runs the batch through the model, and
+//! routes per-seed predictions back to their callers. The batching
+//! policy is the standard dynamic-batching tradeoff (throughput vs tail
+//! latency) of GNN serving systems.
+//!
+//! Two backends share the serve loop:
+//!
+//! * [`InferenceServer::spawn`] — the compiled inference HLO over AOT
+//!   artifacts (each server thread owns its own `Engine`; PJRT clients
+//!   are not `Send`).
+//! * [`InferenceServer::spawn_model`] — the pure-Rust
+//!   [`NodeClassifier`], which needs no artifacts and therefore runs in
+//!   CI and the offline sandbox. The model path samples each seed's
+//!   neighborhood with `batch_seed = node id`, so a node's prediction is
+//!   a pure function of the node — independent of batch composition,
+//!   worker count, or store backing. The distributed server
+//!   (`serve_dist`) relies on exactly this property for its
+//!   prediction-identity guarantee.
+//!
+//! The admission queue is a bounded MPMC channel; the batching loop
+//! parks in [`BoundedQueue::recv_deadline`] (condvar wait, not a spin
+//! loop), so an idle server burns no CPU. Shutdown closes the inbox and
+//! drains every queued request with an error reply — nothing hangs, and
+//! `submit` after shutdown returns `Err` instead of panicking.
 
 use crate::error::{Error, Result};
-use crate::nn::ParamStore;
+use crate::nn::{NodeClassifier, ParamStore};
 use crate::runtime::Engine;
-use crate::storage::{FeatureStore, GraphStore};
-use crate::tensor::softmax_row;
-use crate::util::BoundedQueue;
-use std::sync::mpsc;
-use std::sync::Arc;
+use crate::sampler::SampledSubgraph;
+use crate::storage::{FeatureKey, FeatureStore, GraphStore};
+use crate::tensor::{argmax_checked, softmax_row};
+use crate::util::{BoundedQueue, RecvDeadline};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -26,7 +47,7 @@ pub struct Request {
 }
 
 /// A served prediction.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Prediction {
     pub node: u32,
     pub class: usize,
@@ -40,20 +61,30 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// …or after this long, whichever comes first.
     pub max_wait: Duration,
+    /// Inference program architecture (HLO backend only).
     pub arch: String,
+    /// Sampling fanouts for the model backend (the HLO backend samples
+    /// with the fanouts baked into its artifact bucket).
+    pub fanouts: Vec<usize>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 16, max_wait: Duration::from_millis(5), arch: "gcn".into() }
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            arch: "gcn".into(),
+            fanouts: vec![10, 5],
+        }
     }
 }
 
 /// Handle to a running inference server.
 pub struct InferenceServer {
     inbox: Arc<BoundedQueue<Request>>,
+    stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
-    pub stats: Arc<std::sync::Mutex<ServeStats>>,
+    pub stats: Arc<Mutex<ServeStats>>,
 }
 
 /// Serving statistics.
@@ -62,6 +93,71 @@ pub struct ServeStats {
     pub requests: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
+}
+
+/// Collect one dynamic batch from `rx`: block for the first request,
+/// then accumulate until `max_batch` or `max_wait`, parking in the
+/// queue's condvar between arrivals. Returns `None` when the queue is
+/// closed and fully drained.
+///
+/// The bool is true if the queue closed mid-collection — the caller must
+/// then reject the batch (shutdown semantics) instead of serving it.
+pub(crate) fn collect_batch<T>(
+    rx: &BoundedQueue<T>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<(Vec<T>, bool)> {
+    let first = rx.recv()?;
+    let mut pending = vec![first];
+    let mut closed = false;
+    let deadline = Instant::now() + max_wait;
+    while pending.len() < max_batch {
+        match rx.recv_deadline(deadline) {
+            RecvDeadline::Item(r) => pending.push(r),
+            RecvDeadline::TimedOut => break,
+            RecvDeadline::Closed => {
+                closed = true;
+                break;
+            }
+        }
+    }
+    Some((pending, closed))
+}
+
+/// Classify one seed from its sampled subgraph with the pure-Rust model:
+/// fetch the seed row and its sampled 1-hop neighborhood, embed, score
+/// against the class prototypes. Non-finite logits (a poisoned model)
+/// become an error reply, never a panic.
+pub(crate) fn model_predict(
+    model: &NodeClassifier,
+    features: &dyn FeatureStore,
+    key: &FeatureKey,
+    sub: &SampledSubgraph,
+) -> Result<Prediction> {
+    let node = *sub.nodes.first().ok_or_else(|| Error::Sampler("empty subgraph".into()))?;
+    let seed_row = features.get(key, &[node as usize])?;
+    let hop1_end = sub.node_offsets.get(1).copied().unwrap_or(sub.nodes.len());
+    let hop1: Vec<usize> =
+        sub.nodes[sub.num_seeds..hop1_end].iter().map(|&n| n as usize).collect();
+    let neighbors = features.get(key, &hop1)?;
+    let emb = NodeClassifier::embed(seed_row.row(0), &neighbors);
+    let logits = model.logits(&emb);
+    let class = argmax_checked(&logits).ok_or_else(|| {
+        Error::Runtime(format!("non-finite logits for node {node}: {logits:?}"))
+    })?;
+    Ok(Prediction { node, class, probabilities: softmax_row(&logits) })
+}
+
+/// Reply `Err` to every request in `pending`, then drain and reject
+/// whatever else is still queued. Used on shutdown and on backend
+/// startup failure so no caller ever blocks forever.
+fn reject_all(pending: Vec<Request>, rx: &BoundedQueue<Request>, why: &str) {
+    for r in pending {
+        let _ = r.reply_to.send(Err(Error::Runtime(why.to_string())));
+    }
+    while let Some(r) = rx.try_recv() {
+        let _ = r.reply_to.send(Err(Error::Runtime(why.to_string())));
+    }
 }
 
 impl InferenceServer {
@@ -84,7 +180,9 @@ impl InferenceServer {
     {
         let inbox: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.max_batch * 8);
         let rx = Arc::clone(&inbox);
-        let stats = Arc::new(std::sync::Mutex::new(ServeStats::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = Arc::clone(&stop);
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
         let stats_t = Arc::clone(&stats);
         let program = format!("{}_infer", cfg.arch);
         // Fail fast on config errors before spawning (bucket check needs
@@ -103,7 +201,11 @@ impl InferenceServer {
                 let engine = match Engine::load(&artifact_dir) {
                     Ok(e) => e,
                     Err(e) => {
+                        // Close the inbox so callers get errors instead of
+                        // queueing into a server that will never serve.
                         log::error!("serve thread could not load engine: {e}");
+                        rx.close();
+                        reject_all(Vec::new(), &rx, &format!("engine load failed: {e}"));
                         return;
                     }
                 };
@@ -117,17 +219,12 @@ impl InferenceServer {
                 );
                 let shape_bucket = bucket.to_shape_bucket();
                 let mut batch_id = 0u64;
-                loop {
-                    // Dynamic batching: block for the first request, then
-                    // drain until max_batch or max_wait.
-                    let Some(first) = rx.recv() else { break };
-                    let mut pending = vec![first];
-                    let deadline = Instant::now() + cfg.max_wait;
-                    while pending.len() < cfg.max_batch && Instant::now() < deadline {
-                        match rx.try_recv() {
-                            Some(r) => pending.push(r),
-                            None => std::thread::yield_now(),
-                        }
+                while let Some((pending, closed)) =
+                    collect_batch(&rx, cfg.max_batch, cfg.max_wait)
+                {
+                    if closed || stop_t.load(Ordering::Relaxed) {
+                        reject_all(pending, &rx, "server shutting down");
+                        continue;
                     }
 
                     let seeds: Vec<u32> = pending.iter().map(|r| r.node).collect();
@@ -138,7 +235,7 @@ impl InferenceServer {
                             crate::loader::Batch::assemble(
                                 sub,
                                 features.as_ref(),
-                                &crate::storage::FeatureKey::default_x(),
+                                &FeatureKey::default_x(),
                                 None,
                                 &shape_bucket,
                             )
@@ -171,18 +268,20 @@ impl InferenceServer {
                                 }
                             };
                             for (i, r) in pending.into_iter().enumerate() {
-                                let probs = softmax_row(logits.row(i));
-                                let class = probs
-                                    .iter()
-                                    .enumerate()
-                                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                                    .map(|(c, _)| c)
-                                    .unwrap_or(0);
-                                let _ = r.reply_to.send(Ok(Prediction {
-                                    node: r.node,
-                                    class,
-                                    probabilities: probs,
-                                }));
+                                // NaN logits are a model bug, but they must
+                                // become an error reply, not a worker abort.
+                                let reply = match argmax_checked(logits.row(i)) {
+                                    Some(class) => Ok(Prediction {
+                                        node: r.node,
+                                        class,
+                                        probabilities: softmax_row(logits.row(i)),
+                                    }),
+                                    None => Err(Error::Runtime(format!(
+                                        "non-finite logits for node {}",
+                                        r.node
+                                    ))),
+                                };
+                                let _ = r.reply_to.send(reply);
                             }
                         }
                         Err(e) => {
@@ -196,21 +295,87 @@ impl InferenceServer {
             })
             .map_err(|e| Error::Runtime(format!("spawn serve thread: {e}")))?;
 
-        Ok(Self { inbox, handle: Some(handle), stats })
+        Ok(Self { inbox, stop, handle: Some(handle), stats })
     }
 
-    /// Submit a request; returns the receiver for the prediction.
-    pub fn submit(&self, node: u32) -> mpsc::Receiver<Result<Prediction>> {
+    /// Spawn the server thread over the pure-Rust [`NodeClassifier`] —
+    /// no AOT artifacts or PJRT runtime required, so this is the backend
+    /// CI and the distributed bench exercise.
+    ///
+    /// Each seed is sampled with `batch_seed = node id`, making its
+    /// prediction deterministic and independent of how requests happen
+    /// to batch together.
+    pub fn spawn_model<G, F>(
+        graph: Arc<G>,
+        features: Arc<F>,
+        model: Arc<NodeClassifier>,
+        cfg: ServeConfig,
+    ) -> Result<Self>
+    where
+        G: GraphStore + 'static,
+        F: FeatureStore + 'static,
+    {
+        if cfg.max_batch == 0 {
+            return Err(Error::Config("max_batch must be > 0".into()));
+        }
+        let inbox: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.max_batch * 8);
+        let rx = Arc::clone(&inbox);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = Arc::clone(&stop);
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats_t = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("pyg2-serve".into())
+            .spawn(move || {
+                let sampler = crate::sampler::NeighborSampler::new(
+                    Arc::clone(&graph),
+                    crate::sampler::NeighborSamplerConfig {
+                        fanouts: cfg.fanouts.clone(),
+                        ..Default::default()
+                    },
+                );
+                let key = FeatureKey::default_x();
+                while let Some((pending, closed)) =
+                    collect_batch(&rx, cfg.max_batch, cfg.max_wait)
+                {
+                    if closed || stop_t.load(Ordering::Relaxed) {
+                        reject_all(pending, &rx, "server shutting down");
+                        continue;
+                    }
+                    {
+                        let mut s = stats_t.lock().unwrap();
+                        s.requests += pending.len() as u64;
+                        s.batches += 1;
+                        s.mean_batch_size = s.requests as f64 / s.batches as f64;
+                    }
+                    for r in pending {
+                        let reply = sampler
+                            .sample(&[r.node], r.node as u64)
+                            .and_then(|sub| {
+                                model_predict(&model, features.as_ref(), &key, &sub)
+                            });
+                        let _ = r.reply_to.send(reply);
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn serve thread: {e}")))?;
+
+        Ok(Self { inbox, stop, handle: Some(handle), stats })
+    }
+
+    /// Submit a request; returns the receiver for the prediction, or
+    /// `Err` if the server has stopped (no more panicking `expect`).
+    pub fn submit(&self, node: u32) -> Result<mpsc::Receiver<Result<Prediction>>> {
         let (tx, rx) = mpsc::channel();
         self.inbox
             .send(Request { node, reply_to: tx })
-            .expect("server stopped");
-        rx
+            .map_err(|_| Error::Runtime("inference server is stopped".into()))?;
+        Ok(rx)
     }
 
     /// Blocking convenience call.
     pub fn predict(&self, node: u32) -> Result<Prediction> {
-        self.submit(node)
+        self.submit(node)?
             .recv()
             .map_err(|_| Error::Runtime("server dropped request".into()))?
     }
@@ -218,6 +383,9 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
+        // Order matters: raise the stop flag before closing so the worker
+        // rejects (rather than serves) anything still queued.
+        self.stop.store(true, Ordering::Relaxed);
         self.inbox.close();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -230,6 +398,111 @@ mod tests {
     use super::*;
     use crate::coordinator::{default_loader, TrainConfig, Trainer};
     use crate::datasets::sbm::{self, SbmConfig};
+    use crate::storage::{InMemoryFeatureStore, InMemoryGraphStore};
+    use crate::tensor::Tensor;
+
+    fn model_server(
+        signal: f32,
+        cfg: ServeConfig,
+    ) -> (InferenceServer, Vec<i64>) {
+        let g = sbm::generate(&SbmConfig {
+            num_nodes: 400,
+            feature_signal: signal,
+            seed: 12,
+            ..Default::default()
+        })
+        .unwrap();
+        let labels = g.y.clone().unwrap();
+        let num_classes = (*labels.iter().max().unwrap() + 1) as usize;
+        let fs = Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone()));
+        let model = Arc::new(
+            NodeClassifier::fit(fs.as_ref(), &FeatureKey::default_x(), &labels, num_classes)
+                .unwrap(),
+        );
+        let gs = Arc::new(InMemoryGraphStore::from_graph(&g));
+        let server = InferenceServer::spawn_model(gs, fs, model, cfg).unwrap();
+        (server, labels)
+    }
+
+    #[test]
+    fn model_backend_serves_batched_predictions() {
+        let (server, labels) =
+            model_server(2.0, ServeConfig { max_batch: 8, ..Default::default() });
+        let mut rxs = Vec::new();
+        for node in 100..140u32 {
+            rxs.push((node, server.submit(node).unwrap()));
+        }
+        let mut correct = 0;
+        for (node, rx) in rxs {
+            let p = rx.recv().unwrap().unwrap();
+            assert_eq!(p.node, node);
+            assert!((p.probabilities.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            if p.class as i64 == labels[node as usize] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 25, "served accuracy too low: {correct}/40");
+        let stats = server.stats.lock().unwrap().clone();
+        assert_eq!(stats.requests, 40);
+        assert!(
+            stats.mean_batch_size > 1.5,
+            "dynamic batching should group requests (mean {})",
+            stats.mean_batch_size
+        );
+    }
+
+    #[test]
+    fn predictions_are_batch_composition_independent() {
+        let cfg = ServeConfig { max_batch: 8, ..Default::default() };
+        let (server, _) = model_server(2.0, cfg.clone());
+        // Serial: every request its own batch.
+        let solo: Vec<Prediction> =
+            (50..66u32).map(|n| server.predict(n).unwrap()).collect();
+        // Concurrent: the same seeds grouped into dynamic batches.
+        let rxs: Vec<_> = (50..66u32).map(|n| server.submit(n).unwrap()).collect();
+        for (rx, want) in rxs.into_iter().zip(&solo) {
+            assert_eq!(&rx.recv().unwrap().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_pending_with_errors_and_submit_fails_after() {
+        // A huge max_wait would park the worker mid-batch for 30s; drop
+        // must still resolve every outstanding request promptly.
+        let (server, _) = model_server(1.0, ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(30),
+            ..Default::default()
+        });
+        let rxs: Vec<_> = (0..5u32).map(|n| server.submit(n).unwrap()).collect();
+        let t = Instant::now();
+        drop(server);
+        for rx in rxs {
+            let reply = rx.recv().expect("reply channel must not just vanish");
+            assert!(reply.is_err(), "shutdown must reject, got {reply:?}");
+        }
+        assert!(t.elapsed() < Duration::from_secs(10), "drop hung on max_wait");
+    }
+
+    #[test]
+    fn nan_model_output_is_an_error_reply_not_a_panic() {
+        let g = sbm::generate(&SbmConfig { num_nodes: 50, seed: 3, ..Default::default() })
+            .unwrap();
+        let dim = g.x.cols();
+        let fs = Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone()));
+        let gs = Arc::new(InMemoryGraphStore::from_graph(&g));
+        // Poisoned prototypes: every logit is NaN.
+        let model = Arc::new(NodeClassifier::from_prototypes(Tensor::full(
+            vec![2, dim],
+            f32::NAN,
+        )));
+        let server =
+            InferenceServer::spawn_model(gs, fs, model, ServeConfig::default()).unwrap();
+        let got = server.predict(7);
+        assert!(got.is_err(), "NaN logits must be an error reply: {got:?}");
+        // The worker survived: the server still answers.
+        assert!(server.predict(8).is_err());
+    }
 
     #[test]
     fn serves_batched_predictions() {
@@ -257,8 +530,8 @@ mod tests {
         .train(&loader)
         .unwrap();
 
-        let gs = Arc::new(crate::storage::InMemoryGraphStore::from_graph(&g));
-        let fs = Arc::new(crate::storage::InMemoryFeatureStore::from_tensor(g.x.clone()));
+        let gs = Arc::new(InMemoryGraphStore::from_graph(&g));
+        let fs = Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone()));
         let server = InferenceServer::spawn(
             "artifacts".into(),
             gs,
@@ -271,7 +544,7 @@ mod tests {
         // Concurrent clients.
         let mut rxs = Vec::new();
         for node in 300..340u32 {
-            rxs.push((node, server.submit(node)));
+            rxs.push((node, server.submit(node).unwrap()));
         }
         let mut correct = 0;
         for (node, rx) in rxs {

@@ -1,0 +1,652 @@
+//! Distributed inference serving: multi-worker dynamic batching over
+//! the partitioned stores.
+//!
+//! This is `coordinator::serve` re-platformed onto the `dist`/`persist`
+//! stack (the production-serving tier of the §2.1 deployment blueprint):
+//!
+//! * **N server workers, one admission queue.** Clients submit into a
+//!   shared bounded [`BoundedQueue`]; every worker thread pulls its own
+//!   dynamic batches from it (`max_batch`/`max_wait`, parked in
+//!   `recv_deadline` — no busy-wait). Workers share the
+//!   [`PartitionedFeatureStore`]/[`PartitionedGraphStore`] pair, so the
+//!   halo replica, the bounded row/adjacency LRUs of a mounted store,
+//!   and the [`crate::dist::AsyncRouter`] fetch pool are all shared
+//!   serving-wide; each worker owns its own
+//!   [`DistNeighborSampler`] (samplers are cheap and stateless).
+//! * **Per-request deadline budgets.** A request may carry a latency
+//!   budget; if it is already past due when a worker dequeues it — the
+//!   queue backed up beyond its SLO — it is rejected with
+//!   [`Error::Deadline`] instead of being served late or queued
+//!   unboundedly.
+//! * **Paged k-hop sampling.** The sampler runs against the
+//!   partition-aware stores directly (resident or `--page-adj`
+//!   demand-paged adjacency); serving never materializes a merged CSR.
+//! * **Prediction identity.** Each seed is sampled with
+//!   `batch_seed = node id`, and [`DistNeighborSampler`] is
+//!   seed-for-seed identical to the in-memory sampler — so predictions
+//!   are a pure function of the node, independent of worker count,
+//!   batch composition, or store backing. The serve tests assert
+//!   multi-worker mounted serving equals the single-store server.
+//!
+//! [`run_traffic`] drives a closed-loop Zipf-skewed client fleet (the
+//! recommendation-serving access pattern, which is what finally makes
+//! the LRU caches earn their keep) and reports p50/p95/p99 latency plus
+//! throughput; `benches/bench_serve_dist.rs` sweeps it across
+//! `max_batch` × `max_wait` × worker count at 2/4/8 partitions.
+
+use super::serve::{collect_batch, model_predict, Prediction};
+use crate::dist::{DistNeighborSampler, PartitionedFeatureStore, PartitionedGraphStore};
+use crate::error::{Error, Result};
+use crate::nn::NodeClassifier;
+use crate::sampler::NeighborSamplerConfig;
+use crate::storage::{FeatureKey, FeatureStore};
+use crate::util::{BoundedQueue, Rng, Samples, Zipf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A classification request for one node, with an optional SLO.
+pub struct DistRequest {
+    pub node: u32,
+    /// Absolute deadline; a worker dequeueing the request after this
+    /// instant rejects it with [`Error::Deadline`].
+    pub deadline: Option<Instant>,
+    pub reply_to: mpsc::Sender<Result<Prediction>>,
+}
+
+/// Distributed-server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeDistConfig {
+    /// Flush a worker's batch at this many pending requests…
+    pub max_batch: usize,
+    /// …or after this long, whichever comes first.
+    pub max_wait: Duration,
+    /// Server worker threads pulling from the shared admission queue.
+    pub workers: usize,
+    /// Sampling fanouts per hop.
+    pub fanouts: Vec<usize>,
+    /// Admission queue capacity (bounds memory under overload; the
+    /// deadline check is what bounds *latency*).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeDistConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            fanouts: vec![10, 5],
+            queue_capacity: 512,
+        }
+    }
+}
+
+/// Aggregate serving counters across all workers.
+#[derive(Clone, Debug, Default)]
+pub struct ServeDistStats {
+    /// Requests served (admitted, sampled, replied — Ok or model error).
+    pub requests: u64,
+    /// Dynamic batches processed.
+    pub batches: u64,
+    /// Requests rejected at dequeue for a missed deadline budget.
+    pub deadline_rejected: u64,
+    /// Error replies (sampler/fetch/model failures; excludes deadline
+    /// rejections and shutdown drains).
+    pub errors: u64,
+}
+
+impl ServeDistStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Handle to a running multi-worker distributed inference server.
+pub struct DistInferenceServer {
+    inbox: Arc<BoundedQueue<DistRequest>>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<ServeDistStats>>,
+    features: Arc<PartitionedFeatureStore>,
+    graph: Arc<PartitionedGraphStore>,
+}
+
+fn reject_all_dist(pending: Vec<DistRequest>, rx: &BoundedQueue<DistRequest>, why: &str) {
+    for r in pending {
+        let _ = r.reply_to.send(Err(Error::Runtime(why.to_string())));
+    }
+    while let Some(r) = rx.try_recv() {
+        let _ = r.reply_to.send(Err(Error::Runtime(why.to_string())));
+    }
+}
+
+impl DistInferenceServer {
+    /// Spawn `cfg.workers` server threads over the shared partitioned
+    /// stores (in-memory, mounted, or mounted with paged adjacency — the
+    /// server never sees the difference) and the shared model.
+    pub fn spawn(
+        graph: Arc<PartitionedGraphStore>,
+        features: Arc<PartitionedFeatureStore>,
+        model: Arc<NodeClassifier>,
+        cfg: ServeDistConfig,
+    ) -> Result<Self> {
+        if cfg.workers == 0 {
+            return Err(Error::Config("serve-dist needs at least one worker".into()));
+        }
+        if cfg.max_batch == 0 {
+            return Err(Error::Config("max_batch must be > 0".into()));
+        }
+        if graph.typed_router().num_node_types() != 1 {
+            return Err(Error::Config(
+                "serve-dist covers homogeneous stores; typed serving is future work".into(),
+            ));
+        }
+        let inbox: Arc<BoundedQueue<DistRequest>> =
+            BoundedQueue::new(cfg.queue_capacity.max(cfg.max_batch * cfg.workers));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(ServeDistStats::default()));
+        // Batched union prefetch only pays off when misses are
+        // expensive and cached afterwards — i.e. on a mounted store
+        // with a row LRU. On an in-memory store it would just double
+        // every fetch (and its router counters).
+        let prefetch = features.row_cache_stats().is_some();
+
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let rx = Arc::clone(&inbox);
+            let stop_t = Arc::clone(&stop);
+            let stats_t = Arc::clone(&stats);
+            let graph_t = Arc::clone(&graph);
+            let features_t = Arc::clone(&features);
+            let model_t = Arc::clone(&model);
+            let cfg_t = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pyg2-serve-{w}"))
+                .spawn(move || {
+                    worker_loop(rx, stop_t, stats_t, graph_t, features_t, model_t, cfg_t, prefetch)
+                })
+                .map_err(|e| Error::Runtime(format!("spawn serve worker {w}: {e}")))?;
+            handles.push(handle);
+        }
+        Ok(Self { inbox, stop, handles, stats, features, graph })
+    }
+
+    /// Submit a request with an optional latency budget; returns the
+    /// reply receiver, or `Err` if the server has stopped.
+    pub fn submit(
+        &self,
+        node: u32,
+        budget: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<Prediction>>> {
+        let (tx, rx) = mpsc::channel();
+        let deadline = budget.map(|b| Instant::now() + b);
+        self.inbox
+            .send(DistRequest { node, deadline, reply_to: tx })
+            .map_err(|_| Error::Runtime("inference server is stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience call without a deadline budget.
+    pub fn predict(&self, node: u32) -> Result<Prediction> {
+        self.predict_within(node, None)
+    }
+
+    /// Blocking call with a latency budget: `Err(Error::Deadline)` if
+    /// the request could not be dequeued within its SLO.
+    pub fn predict_within(&self, node: u32, budget: Option<Duration>) -> Result<Prediction> {
+        self.submit(node, budget)?
+            .recv()
+            .map_err(|_| Error::Runtime("server dropped request".into()))?
+    }
+
+    /// Snapshot of the aggregate serving counters.
+    pub fn stats(&self) -> ServeDistStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// The shared feature store (for cache/IO ledger inspection).
+    pub fn features(&self) -> &Arc<PartitionedFeatureStore> {
+        &self.features
+    }
+
+    /// The shared graph store (for adjacency ledger inspection).
+    pub fn graph(&self) -> &Arc<PartitionedGraphStore> {
+        &self.graph
+    }
+
+    /// Current admission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.inbox.len()
+    }
+}
+
+impl Drop for DistInferenceServer {
+    fn drop(&mut self) {
+        // Stop flag first so workers reject (rather than serve) whatever
+        // is still queued, then close to wake every parked worker.
+        self.stop.store(true, Ordering::Relaxed);
+        self.inbox.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One server worker: pull dynamic batches, enforce deadlines at
+/// dequeue, sample each admitted seed deterministically, warm the shared
+/// caches with one unioned fetch, classify, reply.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: Arc<BoundedQueue<DistRequest>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<Mutex<ServeDistStats>>,
+    graph: Arc<PartitionedGraphStore>,
+    features: Arc<PartitionedFeatureStore>,
+    model: Arc<NodeClassifier>,
+    cfg: ServeDistConfig,
+    prefetch: bool,
+) {
+    let sampler = DistNeighborSampler::new(
+        graph,
+        NeighborSamplerConfig { fanouts: cfg.fanouts.clone(), ..Default::default() },
+    );
+    let key = FeatureKey::default_x();
+    while let Some((pending, closed)) = collect_batch(&rx, cfg.max_batch, cfg.max_wait) {
+        if closed || stop.load(Ordering::Relaxed) {
+            reject_all_dist(pending, &rx, "server shutting down");
+            continue;
+        }
+
+        // Deadline budgets are enforced at dequeue: if the queue backed
+        // up past a request's SLO, serving it late helps nobody — shed
+        // it now so the batch only carries work that can still meet its
+        // budget.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(pending.len());
+        let mut shed = 0u64;
+        for r in pending {
+            if r.deadline.is_some_and(|d| now > d) {
+                shed += 1;
+                let _ = r.reply_to.send(Err(Error::Deadline(format!(
+                    "node {}: request missed its latency budget in the queue",
+                    r.node
+                ))));
+            } else {
+                live.push(r);
+            }
+        }
+
+        {
+            let mut s = stats.lock().unwrap();
+            s.deadline_rejected += shed;
+            if !live.is_empty() {
+                s.requests += live.len() as u64;
+                s.batches += 1;
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+
+        // Per-seed deterministic sampling: batch_seed = node id, so a
+        // node's subgraph (hence its prediction) does not depend on
+        // which requests happened to share its batch or worker.
+        let sampled: Vec<(DistRequest, Result<crate::sampler::SampledSubgraph>)> = live
+            .into_iter()
+            .map(|r| {
+                let sub = sampler.sample(&[r.node], r.node as u64);
+                (r, sub)
+            })
+            .collect();
+
+        // One unioned fetch pulls every distinct row of the batch
+        // through the router — remote partitions coalesced (and
+        // overlapped, when an AsyncRouter is attached) — so the
+        // per-seed classification fetches below hit the warm row LRU.
+        if prefetch {
+            let mut union: Vec<usize> = sampled
+                .iter()
+                .filter_map(|(_, s)| s.as_ref().ok())
+                .flat_map(|s| s.nodes.iter().map(|&n| n as usize))
+                .collect();
+            union.sort_unstable();
+            union.dedup();
+            if !union.is_empty() {
+                let _ = features.get(&key, &union);
+            }
+        }
+
+        let mut errors = 0u64;
+        for (r, sub) in sampled {
+            let reply =
+                sub.and_then(|sub| model_predict(&model, features.as_ref(), &key, &sub));
+            if reply.is_err() {
+                errors += 1;
+            }
+            let _ = r.reply_to.send(reply);
+        }
+        if errors > 0 {
+            stats.lock().unwrap().errors += errors;
+        }
+    }
+}
+
+/// Closed-loop traffic generator configuration.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Concurrent closed-loop clients (each waits for its reply before
+    /// sending the next request).
+    pub clients: usize,
+    /// Requests each client sends.
+    pub requests_per_client: usize,
+    /// Zipf skew of node popularity (0 = uniform; ~1 = classic Zipf —
+    /// the recommendation-serving access pattern).
+    pub zipf_exponent: f64,
+    /// Optional per-request latency budget.
+    pub budget: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            clients: 4,
+            requests_per_client: 64,
+            zipf_exponent: 1.1,
+            budget: None,
+            seed: 0,
+        }
+    }
+}
+
+/// What a traffic run observed, client-side.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub completed: u64,
+    pub deadline_rejected: u64,
+    pub errors: u64,
+    /// End-to-end latency samples (seconds) of completed requests.
+    pub latency: Samples,
+    pub elapsed: Duration,
+}
+
+impl TrafficReport {
+    /// Completed requests per second of wall-clock.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed.as_secs_f64() > 0.0 {
+            self.completed as f64 / self.elapsed.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.percentile(50.0) * 1e3
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.latency.percentile(95.0) * 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.percentile(99.0) * 1e3
+    }
+}
+
+impl std::fmt::Display for TrafficReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ok / {} deadline-rejected / {} errors in {:.2}s ({:.0} req/s) \
+             p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms",
+            self.completed,
+            self.deadline_rejected,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.throughput_rps(),
+            self.p50_ms(),
+            self.p95_ms(),
+            self.p99_ms(),
+        )
+    }
+}
+
+/// Drive a closed-loop client fleet against the server: each client
+/// draws nodes from a shared Zipf popularity distribution over
+/// `[0, num_nodes)` (deterministic per `cfg.seed`/client index), submits
+/// with the configured budget, and blocks for the reply. Returns the
+/// merged latency/outcome report.
+pub fn run_traffic(
+    server: &DistInferenceServer,
+    num_nodes: usize,
+    cfg: &TrafficConfig,
+) -> TrafficReport {
+    struct ClientTally {
+        completed: u64,
+        rejected: u64,
+        errors: u64,
+        latencies: Vec<f64>,
+    }
+
+    let zipf = Zipf::new(num_nodes, cfg.zipf_exponent);
+    let base = Rng::new(cfg.seed);
+    let t0 = Instant::now();
+    let tallies: Vec<ClientTally> = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(cfg.clients);
+        for c in 0..cfg.clients {
+            let mut rng = base.fork(c as u64);
+            let zipf = &zipf;
+            joins.push(scope.spawn(move || {
+                let mut tally = ClientTally {
+                    completed: 0,
+                    rejected: 0,
+                    errors: 0,
+                    latencies: Vec::with_capacity(cfg.requests_per_client),
+                };
+                for _ in 0..cfg.requests_per_client {
+                    let node = zipf.sample(&mut rng) as u32;
+                    let t = Instant::now();
+                    match server.predict_within(node, cfg.budget) {
+                        Ok(_) => {
+                            tally.completed += 1;
+                            tally.latencies.push(t.elapsed().as_secs_f64());
+                        }
+                        Err(Error::Deadline(_)) => tally.rejected += 1,
+                        Err(_) => tally.errors += 1,
+                    }
+                }
+                tally
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("client thread")).collect()
+    });
+    let elapsed = t0.elapsed();
+
+    let mut report = TrafficReport {
+        completed: 0,
+        deadline_rejected: 0,
+        errors: 0,
+        latency: Samples::new(),
+        elapsed,
+    };
+    for t in tallies {
+        report.completed += t.completed;
+        report.deadline_rejected += t.rejected;
+        report.errors += t.errors;
+        for l in t.latencies {
+            report.latency.push(l);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{partitioned_stores, DistOptions};
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::partition::ldg_partition;
+
+    fn sbm_fixture() -> (crate::graph::Graph, crate::partition::Partitioning) {
+        let g = sbm::generate(&SbmConfig {
+            num_nodes: 300,
+            feature_signal: 2.0,
+            seed: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+        (g, p)
+    }
+
+    fn fit_model(g: &crate::graph::Graph) -> Arc<NodeClassifier> {
+        let labels = g.y.clone().unwrap();
+        let classes = (*labels.iter().max().unwrap() + 1) as usize;
+        let fs = crate::storage::InMemoryFeatureStore::from_tensor(g.x.clone());
+        Arc::new(
+            NodeClassifier::fit(&fs, &FeatureKey::default_x(), &labels, classes).unwrap(),
+        )
+    }
+
+    #[test]
+    fn multi_worker_serving_over_partitioned_stores() {
+        let (g, p) = sbm_fixture();
+        let model = fit_model(&g);
+        let (gs, fs) = partitioned_stores(&g, &p, 0, DistOptions::default()).unwrap();
+        let server = DistInferenceServer::spawn(
+            gs,
+            fs,
+            model,
+            ServeDistConfig { workers: 3, max_batch: 8, ..Default::default() },
+        )
+        .unwrap();
+        let rxs: Vec<_> =
+            (0..60u32).map(|n| (n, server.submit(n, None).unwrap())).collect();
+        let labels = g.y.as_ref().unwrap();
+        let mut correct = 0;
+        for (node, rx) in rxs {
+            let pred = rx.recv().unwrap().unwrap();
+            assert_eq!(pred.node, node);
+            if pred.class as i64 == labels[node as usize] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 40, "served accuracy too low: {correct}/60");
+        let stats = server.stats();
+        assert_eq!(stats.requests, 60);
+        assert!(stats.batches > 0);
+        assert_eq!(stats.deadline_rejected, 0);
+    }
+
+    #[test]
+    fn zero_budget_requests_are_rejected_with_deadline_error() {
+        let (g, p) = sbm_fixture();
+        let model = fit_model(&g);
+        let (gs, fs) = partitioned_stores(&g, &p, 0, DistOptions::default()).unwrap();
+        let server = DistInferenceServer::spawn(
+            gs,
+            fs,
+            model,
+            // One worker + a long max_wait: submissions queue behind the
+            // batch window, so an already-expired budget is shed.
+            ServeDistConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait: Duration::from_millis(50),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got = server.predict_within(3, Some(Duration::ZERO));
+        match got {
+            Err(Error::Deadline(_)) => {}
+            other => panic!("expected a deadline rejection, got {other:?}"),
+        }
+        assert!(server.stats().deadline_rejected >= 1);
+        // The server still serves budget-free requests afterwards.
+        assert!(server.predict(3).is_ok());
+    }
+
+    #[test]
+    fn traffic_generator_reports_skewed_closed_loop_run() {
+        let (g, p) = sbm_fixture();
+        let n = g.num_nodes();
+        let model = fit_model(&g);
+        let (gs, fs) = partitioned_stores(&g, &p, 0, DistOptions::default()).unwrap();
+        let server = DistInferenceServer::spawn(
+            gs,
+            fs,
+            model,
+            ServeDistConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let report = run_traffic(
+            &server,
+            n,
+            &TrafficConfig {
+                clients: 3,
+                requests_per_client: 20,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.completed, 60, "{report}");
+        assert_eq!(report.errors, 0, "{report}");
+        assert_eq!(report.latency.len() as u64, report.completed);
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.p50_ms() <= report.p95_ms() && report.p95_ms() <= report.p99_ms());
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests_with_errors() {
+        let (g, p) = sbm_fixture();
+        let model = fit_model(&g);
+        let (gs, fs) = partitioned_stores(&g, &p, 0, DistOptions::default()).unwrap();
+        let server = DistInferenceServer::spawn(
+            gs,
+            fs,
+            model,
+            ServeDistConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait: Duration::from_secs(30),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..6u32).map(|n| server.submit(n, None).unwrap()).collect();
+        let t = Instant::now();
+        drop(server);
+        for rx in rxs {
+            let reply = rx.recv().expect("reply channel must resolve");
+            assert!(reply.is_err(), "shutdown must reject, got {reply:?}");
+        }
+        assert!(t.elapsed() < Duration::from_secs(10), "drop hung on max_wait");
+    }
+
+    #[test]
+    fn spawn_rejects_degenerate_configs() {
+        let (g, p) = sbm_fixture();
+        let model = fit_model(&g);
+        let (gs, fs) = partitioned_stores(&g, &p, 0, DistOptions::default()).unwrap();
+        assert!(DistInferenceServer::spawn(
+            Arc::clone(&gs),
+            Arc::clone(&fs),
+            Arc::clone(&model),
+            ServeDistConfig { workers: 0, ..Default::default() },
+        )
+        .is_err());
+        assert!(DistInferenceServer::spawn(
+            gs,
+            fs,
+            model,
+            ServeDistConfig { max_batch: 0, ..Default::default() },
+        )
+        .is_err());
+    }
+}

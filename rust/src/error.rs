@@ -19,6 +19,9 @@ pub enum Error {
     Config(String),
     Io(std::io::Error),
     Xla(String),
+    /// A serving request missed its latency budget and was rejected
+    /// rather than queued unboundedly.
+    Deadline(String),
 }
 
 impl fmt::Display for Error {
@@ -32,6 +35,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }

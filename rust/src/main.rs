@@ -22,6 +22,7 @@ fn main() {
         "train" => cmd_train(&args),
         "partition" => cmd_partition(&args),
         "dist" => cmd_dist(&args),
+        "serve-dist" => cmd_serve_dist(&args),
         "explain" => cmd_explain(&args),
         "rag" => cmd_rag(&args),
         "info" => cmd_info(&args),
@@ -449,6 +450,115 @@ fn print_mount_io(
     if let Some(reads) = gs.adj_disk_reads() {
         println!("adjacency disk reads: {reads}");
     }
+}
+
+/// Distributed inference serving (`pyg2 serve-dist`): N server workers
+/// pull dynamic batches from one shared admission queue over the
+/// partitioned stores — an in-memory SBM partitioning by default, or a
+/// `--mount`ed bundle (optionally with `--page-adj` demand-paged
+/// adjacency) — while a closed-loop Zipf-skewed client fleet drives
+/// traffic and reports p50/p95/p99 latency plus throughput.
+fn cmd_serve_dist(args: &Args) -> pyg2::Result<()> {
+    use pyg2::coordinator::{run_traffic, DistInferenceServer, ServeDistConfig, TrafficConfig};
+    use pyg2::nn::NodeClassifier;
+    use pyg2::storage::FeatureKey;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let opts = pyg2::coordinator::DistOptions {
+        halo_cache: args.get_bool("halo-cache"),
+        async_fetch: args.get_bool("async"),
+        async_workers: args.get_usize("async-workers", 0),
+        latency: Duration::from_micros(args.get_usize("latency-us", 0) as u64),
+    };
+    let cfg = ServeDistConfig {
+        max_batch: args.get_usize("max-batch", 16),
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+        workers: args.get_usize("workers", 2),
+        ..Default::default()
+    };
+
+    // Assemble the stores + labels from either backing; the server is
+    // oblivious to which one it got.
+    let (gs, fs, labels, num_nodes) = if let Some(dir) = args.get("mount") {
+        let bundle = pyg2::persist::Bundle::open(dir)?;
+        let rank = args.get_usize("rank", 0) as u32;
+        let lru = pyg2::persist::LruConfig {
+            capacity_bytes: args.get_usize("cache-mb", 64) as u64 * 1024 * 1024,
+            page_adjacency: args.get_bool("page-adj"),
+            adj_capacity_bytes: args.get_usize("adj-cache-mb", 0) as u64 * 1024 * 1024,
+        };
+        let n = bundle.node_type(pyg2::storage::DEFAULT_GROUP)?.num_nodes;
+        let (gs, fs, labels) = pyg2::coordinator::mounted_stores(&bundle, rank, opts, lru)?;
+        let labels = labels.ok_or_else(|| {
+            pyg2::error::Error::Config(format!(
+                "bundle {dir} has no labels; serve-dist fits its classifier from them"
+            ))
+        })?;
+        (gs, fs, labels, n)
+    } else {
+        let nodes = args.get_usize("nodes", 5000);
+        let parts = args.get_usize("parts", 4);
+        let g = sbm::generate(&SbmConfig { num_nodes: nodes, seed: 0, ..Default::default() })?;
+        let p = pyg2::partition::ldg_partition(&g.edge_index, parts, 1.1)?;
+        let (gs, fs) = pyg2::coordinator::partitioned_stores(&g, &p, 0, opts)?;
+        let labels = g.y.clone().expect("SBM graphs carry labels");
+        (gs, fs, labels, nodes)
+    };
+
+    let num_classes = (labels.iter().copied().max().unwrap_or(0).max(0) + 1) as usize;
+    let model = Arc::new(NodeClassifier::fit(
+        fs.as_ref(),
+        &FeatureKey::default_x(),
+        &labels,
+        num_classes,
+    )?);
+    // Fitting paged every labeled row through the mounted LRU; zero the
+    // I/O and router ledgers so the report reflects serving alone.
+    fs.reset_io_stats();
+    gs.reset_adj_io_stats();
+    gs.typed_router().reset_with(fs.typed_router());
+
+    log::info!(
+        "serve-dist: {} workers, max_batch {}, max_wait {:?}, {num_classes} classes, \
+         {num_nodes} servable nodes",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.max_wait
+    );
+    let workers = cfg.workers;
+    let server = DistInferenceServer::spawn(Arc::clone(&gs), Arc::clone(&fs), model, cfg)?;
+    let traffic = TrafficConfig {
+        clients: args.get_usize("clients", 4),
+        requests_per_client: args.get_usize("requests", 64),
+        zipf_exponent: args.get_f64("zipf", 1.1),
+        budget: args
+            .get("budget-ms")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis),
+        seed: args.get_usize("seed", 0) as u64,
+    };
+    let report = run_traffic(&server, num_nodes, &traffic);
+    let stats = server.stats();
+    println!(
+        "serve-dist ({workers} workers, {} clients x {} reqs, zipf {:.2}): {report}",
+        traffic.clients, traffic.requests_per_client, traffic.zipf_exponent
+    );
+    println!(
+        "server: {} requests / {} batches (mean batch {:.2}), \
+         {} deadline-rejected, {} errors",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch_size(),
+        stats.deadline_rejected,
+        stats.errors
+    );
+    println!(
+        "cross-partition traffic: {}",
+        gs.typed_router().stats_with(fs.typed_router())
+    );
+    print_mount_io(&fs, &gs);
+    Ok(())
 }
 
 /// The typed distributed pipeline (`pyg2 dist --hetero`): a

@@ -1,0 +1,169 @@
+//! A pure-Rust node classifier for the serving path.
+//!
+//! The compiled HLO engines need AOT artifacts (and a real PJRT runtime)
+//! that are not always present — CI and the offline sandbox have neither.
+//! Serving still needs a real model to push through the distributed
+//! stores, so this implements a nearest-class-mean ("prototype")
+//! classifier: fit once over the labeled feature rows, then score a
+//! seed's embedding (its own row blended with the mean of its sampled
+//! 1-hop neighborhood) against the per-class prototypes by cosine
+//! similarity. It is deterministic, cheap, and depends only on feature
+//! rows — so a mounted multi-worker server and the single-store server
+//! must produce bit-identical predictions for the same seeds, which the
+//! serve tests assert.
+
+use crate::error::{Error, Result};
+use crate::storage::{FeatureKey, FeatureStore};
+use crate::tensor::{cosine_similarity, Tensor};
+
+/// Nearest-class-mean classifier over node feature rows.
+#[derive(Clone, Debug)]
+pub struct NodeClassifier {
+    /// `[num_classes, feature_dim]` class-mean prototypes.
+    prototypes: Tensor,
+}
+
+impl NodeClassifier {
+    /// Wrap precomputed prototypes (`[C, F]`). Exposed so tests can
+    /// inject degenerate models (e.g. NaN prototypes) and assert the
+    /// serve loop turns bad logits into error replies.
+    pub fn from_prototypes(prototypes: Tensor) -> Self {
+        Self { prototypes }
+    }
+
+    /// Fit per-class mean prototypes from every labeled row
+    /// (`labels[i] >= 0`) of feature group `key`. Rows are fetched in
+    /// chunks so a mounted store pages them through its LRU rather than
+    /// materializing the full matrix.
+    pub fn fit(
+        features: &dyn FeatureStore,
+        key: &FeatureKey,
+        labels: &[i64],
+        num_classes: usize,
+    ) -> Result<Self> {
+        if num_classes == 0 {
+            return Err(Error::Config("NodeClassifier needs num_classes > 0".into()));
+        }
+        let dim = features.feature_dim(key)?;
+        let mut sums = vec![0.0f64; num_classes * dim];
+        let mut counts = vec![0usize; num_classes];
+        let labeled: Vec<usize> = labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &y)| y >= 0)
+            .map(|(i, _)| i)
+            .collect();
+        if labeled.is_empty() {
+            return Err(Error::Config("NodeClassifier::fit: no labeled nodes".into()));
+        }
+        for chunk in labeled.chunks(1024) {
+            let rows = features.get(key, chunk)?;
+            for (r, &node) in chunk.iter().enumerate() {
+                let y = labels[node] as usize;
+                if y >= num_classes {
+                    return Err(Error::Config(format!(
+                        "label {y} out of range for {num_classes} classes"
+                    )));
+                }
+                counts[y] += 1;
+                let row = rows.row(r);
+                for (d, &v) in row.iter().enumerate() {
+                    sums[y * dim + d] += v as f64;
+                }
+            }
+        }
+        let data: Vec<f32> = (0..num_classes)
+            .flat_map(|c| {
+                let n = counts[c].max(1) as f64;
+                (0..dim).map(move |d| (sums[c * dim + d] / n) as f32).collect::<Vec<_>>()
+            })
+            .collect();
+        let prototypes = Tensor::new(vec![num_classes, dim], data)?;
+        Ok(Self { prototypes })
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.prototypes.rows()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.prototypes.cols()
+    }
+
+    /// Embed a seed from its own feature row and its sampled 1-hop
+    /// neighborhood (`neighbors` is `[k, F]`, `k` may be 0): the seed row
+    /// blended half-and-half with the neighbor mean — a single fixed
+    /// mean-aggregation GNN layer, evaluated on the host.
+    pub fn embed(seed_row: &[f32], neighbors: &Tensor) -> Vec<f32> {
+        let k = neighbors.rows();
+        if k == 0 {
+            return seed_row.to_vec();
+        }
+        let mut mean = vec![0.0f32; seed_row.len()];
+        for r in 0..k {
+            for (d, &v) in neighbors.row(r).iter().enumerate() {
+                mean[d] += v;
+            }
+        }
+        seed_row
+            .iter()
+            .zip(&mean)
+            .map(|(&s, &m)| 0.5 * s + 0.5 * m / k as f32)
+            .collect()
+    }
+
+    /// Cosine-similarity logits of an embedding against every prototype.
+    pub fn logits(&self, emb: &[f32]) -> Vec<f32> {
+        (0..self.prototypes.rows())
+            .map(|c| cosine_similarity(emb, self.prototypes.row(c)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::InMemoryFeatureStore;
+
+    fn store_2d(rows: Vec<[f32; 2]>) -> InMemoryFeatureStore {
+        let n = rows.len();
+        let data: Vec<f32> = rows.into_iter().flatten().collect();
+        let s = InMemoryFeatureStore::default();
+        s.put(FeatureKey::default_x(), Tensor::new(vec![n, 2], data).unwrap());
+        s
+    }
+
+    #[test]
+    fn fit_recovers_separated_clusters() {
+        // Class 0 hugs the x-axis, class 1 the y-axis.
+        let s = store_2d(vec![[1.0, 0.0], [0.9, 0.1], [0.0, 1.0], [0.1, 0.9], [0.5, 0.5]]);
+        let labels = vec![0i64, 0, 1, 1, -1]; // last node unlabeled
+        let clf = NodeClassifier::fit(&s, &FeatureKey::default_x(), &labels, 2).unwrap();
+        assert_eq!(clf.num_classes(), 2);
+        assert_eq!(clf.feature_dim(), 2);
+        let l0 = clf.logits(&[1.0, 0.05]);
+        assert!(l0[0] > l0[1], "{l0:?}");
+        let l1 = clf.logits(&[0.05, 1.0]);
+        assert!(l1[1] > l1[0], "{l1:?}");
+    }
+
+    #[test]
+    fn embed_blends_seed_and_neighbor_mean() {
+        let seed = [2.0f32, 0.0];
+        let nbrs = Tensor::new(vec![2, 2], vec![0.0, 2.0, 0.0, 4.0]).unwrap();
+        let e = NodeClassifier::embed(&seed, &nbrs);
+        assert!((e[0] - 1.0).abs() < 1e-6, "{e:?}");
+        assert!((e[1] - 1.5).abs() < 1e-6, "{e:?}");
+        // No neighbors: the seed row passes through unchanged.
+        let empty = Tensor::zeros(vec![0, 2]);
+        assert_eq!(NodeClassifier::embed(&seed, &empty), seed.to_vec());
+    }
+
+    #[test]
+    fn fit_rejects_bad_inputs() {
+        let s = store_2d(vec![[1.0, 0.0]]);
+        assert!(NodeClassifier::fit(&s, &FeatureKey::default_x(), &[-1], 2).is_err());
+        assert!(NodeClassifier::fit(&s, &FeatureKey::default_x(), &[5], 2).is_err());
+        assert!(NodeClassifier::fit(&s, &FeatureKey::default_x(), &[0], 0).is_err());
+    }
+}

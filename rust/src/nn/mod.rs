@@ -2,6 +2,10 @@
 //! Python AOT conventions, ordered marshalling into runtime values, and
 //! the update cycle for both execution modes.
 
+pub mod classifier;
+
+pub use classifier::NodeClassifier;
+
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{Manifest, Program, TensorSpec};
 use crate::runtime::Value;

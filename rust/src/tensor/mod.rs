@@ -10,4 +10,4 @@ mod dense;
 mod ops;
 
 pub use dense::{Tensor, TensorI64};
-pub use ops::{argmax_rows, cosine_similarity, l2_normalize_rows, softmax_row, topk};
+pub use ops::{argmax_checked, argmax_rows, cosine_similarity, l2_normalize_rows, softmax_row, topk};

@@ -19,6 +19,20 @@ pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
         .collect()
 }
 
+/// Argmax over one logits row that refuses malformed input: returns
+/// `None` if the slice is empty or any entry is NaN, so callers (the
+/// inference serve loop) can turn a bad model output into an error
+/// reply instead of a panic.
+pub fn argmax_checked(xs: &[f32]) -> Option<usize> {
+    if xs.is_empty() || xs.iter().any(|x| x.is_nan()) {
+        return None;
+    }
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+}
+
 /// In-place row-wise L2 normalization (embedding preprocessing for MIPS).
 pub fn l2_normalize_rows(t: &mut Tensor) {
     for r in 0..t.rows() {
@@ -73,6 +87,16 @@ mod tests {
     fn argmax_per_row() {
         let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 2.0, -1.0, 1.0]).unwrap();
         assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_checked_rejects_nan_and_empty() {
+        assert_eq!(argmax_checked(&[0.1, 0.9, 0.0]), Some(1));
+        assert_eq!(argmax_checked(&[2.0, -1.0]), Some(0));
+        assert_eq!(argmax_checked(&[0.1, f32::NAN]), None);
+        assert_eq!(argmax_checked(&[]), None);
+        // Infinities are orderable, not malformed.
+        assert_eq!(argmax_checked(&[f32::NEG_INFINITY, 3.0, f32::INFINITY]), Some(2));
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod stats;
 pub mod toml;
 
 pub use bench::{BenchConfig, BenchResult, BenchSuite};
-pub use pool::{BoundedQueue, TaskHandle, ThreadPool};
-pub use rng::Rng;
+pub use pool::{BoundedQueue, RecvDeadline, TaskHandle, ThreadPool};
+pub use rng::{Rng, Zipf};
 pub use stats::{Histogram, Samples};

@@ -167,6 +167,52 @@ impl Rng {
     }
 }
 
+/// Zipf-distributed sampler over `[0, n)` for recommendation-style
+/// skewed access patterns (a few hot nodes dominate serving traffic).
+///
+/// Precomputes the cumulative weights `sum_{i<=k} 1/(i+1)^exponent`
+/// once, then draws by inverse-CDF binary search — O(n) setup,
+/// O(log n) per sample, fully deterministic given the caller's [`Rng`].
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` items with the given skew `exponent`
+    /// (0.0 = uniform; ~1.0 = classic Zipf). Panics if `n == 0`.
+    pub fn new(n: usize, exponent: f64) -> Self {
+        assert!(n > 0, "Zipf over an empty domain");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(exponent);
+            cdf.push(acc);
+        }
+        Self { cdf }
+    }
+
+    /// Number of items in the domain.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one index in `[0, n)`; lower indices are hotter.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = *self.cdf.last().unwrap();
+        let target = rng.f64() * total;
+        // First index whose cumulative weight exceeds the target.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&target).unwrap()) {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +295,40 @@ mod tests {
             }
         }
         assert!(hits > 900, "hits={hits}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let zipf = Zipf::new(1000, 1.0);
+        let mut r = Rng::new(21);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..20_000 {
+            let i = zipf.sample(&mut r);
+            assert!(i < 1000);
+            counts[i] += 1;
+        }
+        // Rank 0 must dominate and the head must hold most of the mass.
+        assert!(counts[0] > counts[10], "head={} rank10={}", counts[0], counts[10]);
+        let head: usize = counts[..100].iter().sum();
+        assert!(head > 12_000, "head mass {head} of 20000");
+        // Exponent 0 degenerates to uniform: no such head concentration.
+        let flat = Zipf::new(1000, 0.0);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..20_000 {
+            counts[flat.sample(&mut r)] += 1;
+        }
+        let head: usize = counts[..100].iter().sum();
+        assert!(head < 4_000, "uniform head mass {head} of 20000");
+    }
+
+    #[test]
+    fn zipf_deterministic_for_same_seed() {
+        let zipf = Zipf::new(64, 0.9);
+        let mut a = Rng::new(33);
+        let mut b = Rng::new(33);
+        for _ in 0..200 {
+            assert_eq!(zipf.sample(&mut a), zipf.sample(&mut b));
+        }
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Distributed serving correctness anchors:
+//!
+//! * **Prediction identity** — a multi-worker [`DistInferenceServer`]
+//!   over the partitioned stores (in-memory, mounted, and mounted with
+//!   demand-paged adjacency) must serve predictions *identical* to the
+//!   single-store [`InferenceServer::spawn_model`] for the same seeds,
+//!   model and fanouts. Predictions are a pure function of the node
+//!   (`batch_seed = node id` + the DistNeighborSampler ≡ NeighborSampler
+//!   invariant), so worker count, batch composition and store backing
+//!   must all be invisible.
+//! * **Deadline budgets** — an already-expired budget is rejected with
+//!   [`Error::Deadline`] at dequeue, over a mounted store too.
+//! * **Backend startup failure** — an HLO server whose engine cannot
+//!   load (valid manifest, no runtime/artifacts) must close its inbox
+//!   and reply errors; callers never hang.
+
+use pyg2::coordinator::{
+    mounted_stores, partitioned_stores, DistInferenceServer, DistOptions, InferenceServer,
+    Prediction, ServeConfig, ServeDistConfig,
+};
+use pyg2::error::Error;
+use pyg2::nn::{NodeClassifier, ParamStore};
+use pyg2::partition::ldg_partition;
+use pyg2::persist::{write_bundle, LruConfig};
+use pyg2::storage::{FeatureKey, InMemoryFeatureStore, InMemoryGraphStore};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pyg2_serve_dist").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fixture() -> (pyg2::graph::Graph, Arc<NodeClassifier>) {
+    let g = pyg2::datasets::sbm::generate(&pyg2::datasets::sbm::SbmConfig {
+        num_nodes: 500,
+        feature_signal: 2.0,
+        seed: 77,
+        ..Default::default()
+    })
+    .unwrap();
+    let labels = g.y.clone().unwrap();
+    let classes = (*labels.iter().max().unwrap() + 1) as usize;
+    let fs = InMemoryFeatureStore::from_tensor(g.x.clone());
+    let model = Arc::new(
+        NodeClassifier::fit(&fs, &FeatureKey::default_x(), &labels, classes).unwrap(),
+    );
+    (g, model)
+}
+
+/// Submit all seeds concurrently (so dynamic batching actually mixes
+/// them) and collect the replies in seed order.
+fn serve_all(server: &DistInferenceServer, seeds: &[u32]) -> Vec<Prediction> {
+    let rxs: Vec<_> = seeds.iter().map(|&n| server.submit(n, None).unwrap()).collect();
+    rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect()
+}
+
+#[test]
+fn multi_worker_mounted_serving_matches_single_store_server() {
+    let (g, model) = fixture();
+    let seeds: Vec<u32> = (0..80).collect();
+
+    // Reference: the single-store server (one worker, merged stores).
+    let single = InferenceServer::spawn_model(
+        Arc::new(InMemoryGraphStore::from_graph(&g)),
+        Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone())),
+        Arc::clone(&model),
+        ServeConfig { max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    let want: Vec<Prediction> = seeds.iter().map(|&n| single.predict(n).unwrap()).collect();
+
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+
+    // In-memory partitioned stores, 4 workers.
+    let (gs, fs) = partitioned_stores(&g, &partitioning, 0, DistOptions::default()).unwrap();
+    let dist = DistInferenceServer::spawn(
+        gs,
+        fs,
+        Arc::clone(&model),
+        ServeDistConfig { workers: 4, max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(serve_all(&dist, &seeds), want, "in-memory dist differs");
+
+    // Mounted bundle (resident adjacency), 4 workers.
+    let bundle = write_bundle(tmp("identity"), &g, &partitioning).unwrap();
+    let (gs, fs, labels) =
+        mounted_stores(&bundle, 0, DistOptions::default(), LruConfig::default()).unwrap();
+    assert_eq!(labels.as_deref(), g.y.as_deref(), "bundle labels round-trip");
+    let mounted = DistInferenceServer::spawn(
+        gs,
+        fs,
+        Arc::clone(&model),
+        ServeDistConfig { workers: 4, max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(serve_all(&mounted, &seeds), want, "mounted dist differs");
+    // The mounted server actually paged rows through its LRU.
+    assert!(mounted.features().row_cache_stats().is_some());
+
+    // Mounted with demand-paged adjacency, 2 workers + async routing.
+    let (gs, fs, _) = mounted_stores(
+        &bundle,
+        0,
+        DistOptions { async_fetch: true, ..Default::default() },
+        LruConfig { page_adjacency: true, ..Default::default() },
+    )
+    .unwrap();
+    let paged = DistInferenceServer::spawn(
+        gs,
+        fs,
+        Arc::clone(&model),
+        ServeDistConfig { workers: 2, max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(serve_all(&paged, &seeds), want, "paged-adjacency dist differs");
+    assert!(
+        paged.graph().adj_disk_reads().unwrap_or(0) > 0,
+        "paged serving must have read adjacency from disk"
+    );
+}
+
+#[test]
+fn expired_budget_is_rejected_over_mounted_store() {
+    let (g, model) = fixture();
+    let partitioning = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+    let bundle = write_bundle(tmp("deadline"), &g, &partitioning).unwrap();
+    let (gs, fs, _) =
+        mounted_stores(&bundle, 0, DistOptions::default(), LruConfig::default()).unwrap();
+    let server = DistInferenceServer::spawn(
+        gs,
+        fs,
+        model,
+        // One worker + a long batching window so the zero budget is
+        // guaranteed to be past due by dequeue time.
+        ServeDistConfig {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    match server.predict_within(7, Some(Duration::ZERO)) {
+        Err(Error::Deadline(_)) => {}
+        other => panic!("expected Err(Error::Deadline), got {other:?}"),
+    }
+    assert_eq!(server.stats().deadline_rejected, 1);
+    // Budget-free requests still serve afterwards.
+    assert!(server.predict(7).is_ok());
+}
+
+#[test]
+fn engine_load_failure_errors_instead_of_hanging() {
+    // A structurally valid manifest pointing at nothing: the spawn-time
+    // probe succeeds, then the serve thread's Engine::load fails (no
+    // PJRT runtime / no HLO files) — it must close the inbox and reply
+    // errors rather than strand callers.
+    let dir = tmp("fake_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{
+  "programs": {
+    "gcn_infer": {"kind": "fused", "file": "gcn_infer.hlo",
+                  "params": [], "inputs": [], "outputs": []}
+  },
+  "buckets": {"default": {"s": 64, "fanouts": [10, 5],
+                          "node_cum": [64, 704, 3904],
+                          "edge_cum": [0, 640, 3840],
+                          "f": 64, "h": 32, "c": 7}}
+}"#,
+    )
+    .unwrap();
+
+    let (g, _) = fixture();
+    let manifest = pyg2::runtime::Manifest::load(&dir).unwrap();
+    let params = ParamStore::init_for(&manifest, "gcn_infer", 1).unwrap();
+    let server = InferenceServer::spawn(
+        dir,
+        Arc::new(InMemoryGraphStore::from_graph(&g)),
+        Arc::new(InMemoryFeatureStore::from_tensor(g.x.clone())),
+        params,
+        ServeConfig::default(),
+    )
+    .unwrap();
+
+    // Whether the request was queued before the inbox closed (drained
+    // with an error reply) or submitted after (submit itself errors),
+    // predict must resolve to Err — promptly, not by hanging.
+    let t = Instant::now();
+    assert!(server.predict(0).is_err(), "a dead backend must reply errors");
+    assert!(server.predict(1).is_err());
+    assert!(t.elapsed() < Duration::from_secs(10), "dead-backend predict hung");
+}
