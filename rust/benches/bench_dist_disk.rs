@@ -19,6 +19,11 @@
 //!   read counters at 2/4/8 partitions, with warm epochs asserted to
 //!   read strictly less adjacency than cold ones and the row+adjacency
 //!   caches asserted to stay jointly under the shared budget.
+//! * **pipeline prefetch** (`--prefetch`) — cold-epoch wall-clock with
+//!   batch k+1's rows/in-lists warmed while batch k assembles, plus the
+//!   warm-job counters (one job per batch, zero failures asserted).
+//! * **I/O backend** (`--io-backend mmap`) — the paged cold epoch
+//!   served by mapped reads instead of pread, same content asserted.
 //!
 //! Runs under `PYG2_BENCH_QUICK` in CI (bench-smoke job) with bundles
 //! written to a scratch directory under the system temp dir.
@@ -27,7 +32,7 @@ use pyg2::coordinator::{mounted_loader, partitioned_loader, DistOptions};
 use pyg2::datasets::sbm::{self, SbmConfig};
 use pyg2::loader::LoaderConfig;
 use pyg2::partition::ldg_partition;
-use pyg2::persist::{write_bundle, Bundle, LruConfig};
+use pyg2::persist::{write_bundle, Bundle, IoBackend, LruConfig};
 use pyg2::sampler::NeighborSamplerConfig;
 use pyg2::util::BenchSuite;
 use std::time::Instant;
@@ -178,6 +183,67 @@ fn main() {
                 std::hint::black_box(b.unwrap());
             }
         });
+
+        // Pipeline prefetch (--prefetch): a fresh paged mount that
+        // warms batch k+1's rows + in-lists while batch k assembles.
+        // Batches are byte-identical either way
+        // (tests/test_prefetch_pipeline.rs); the record here is the
+        // cold wall-clock and the warm-job counters.
+        let pre = mounted_loader(
+            &bundle,
+            0,
+            seeds.clone(),
+            cfg(),
+            DistOptions { prefetch: true, ..Default::default() },
+            lru,
+        )
+        .unwrap();
+        let t = Instant::now();
+        let mut pre_nodes = 0usize;
+        for b in pre.iter_epoch(0) {
+            pre_nodes += std::hint::black_box(b.unwrap()).num_real_nodes();
+        }
+        let pre_cold_ms = t.elapsed().as_secs_f64() * 1e3;
+        let pf = pre.prefetch_stats().expect("prefetcher installed");
+        assert_eq!(pf.failed, 0, "{parts}p: cache warming must never fail");
+        assert_eq!(
+            pf.scheduled as usize,
+            seeds.len().div_ceil(cfg().batch_size),
+            "{parts}p: one warm job per batch"
+        );
+        suite.record_metric(format!("prefetch_cold_epoch_ms/{parts}p"), pre_cold_ms);
+        suite.record_metric(format!("prefetch_batches_warmed/{parts}p"), pf.scheduled as f64);
+        println!(
+            "  {parts} partitions paged-adj + prefetch: cold {pre_cold_ms:.1} ms, \
+             {} batches warmed",
+            pf.scheduled
+        );
+
+        // I/O backend (--io-backend mmap): the same paged mount served
+        // by mapped reads instead of pread. Content is byte-identical;
+        // the cold wall-clock is the comparison.
+        let mm = mounted_loader(
+            &bundle,
+            0,
+            seeds.clone(),
+            cfg(),
+            DistOptions { io_backend: IoBackend::Mmap, ..Default::default() },
+            lru,
+        )
+        .unwrap();
+        let t = Instant::now();
+        let mut mm_nodes = 0usize;
+        for b in mm.iter_epoch(0) {
+            mm_nodes += std::hint::black_box(b.unwrap()).num_real_nodes();
+        }
+        let mm_cold_ms = t.elapsed().as_secs_f64() * 1e3;
+        assert!(mm.graph().adj_disk_reads().unwrap() > 0, "{parts}p: mmap mount hit disk");
+        assert_eq!(
+            mm_nodes, pre_nodes,
+            "{parts}p: backend/prefetch change cost only, never content"
+        );
+        suite.record_metric(format!("mmap_cold_epoch_ms/{parts}p"), mm_cold_ms);
+        println!("  {parts} partitions paged-adj via mmap: cold {mm_cold_ms:.1} ms");
     }
 
     // Bounded budget: ~256 rows of a 10k-node graph. The ceiling must

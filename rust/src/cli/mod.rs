@@ -59,6 +59,90 @@ impl Args {
     }
 }
 
+/// The mount knob set shared by `pyg2 dist --mount` and
+/// `pyg2 serve-dist --mount`: one parse-and-validate for the bundle dir,
+/// cache budgets, demand-paged adjacency, pipeline prefetch and the I/O
+/// backend, so the two commands cannot drift apart in which
+/// combinations they accept.
+#[derive(Clone, Debug, Default)]
+pub struct MountOpts {
+    /// The partition-bundle directory (`--mount DIR`); `None` = the
+    /// in-memory leg (every other knob here must then be absent).
+    pub dir: Option<String>,
+    /// Local rank mounting the bundle (`--rank R`).
+    pub rank: u32,
+    /// Total LRU budget in MiB (`--cache-mb M`, default 64).
+    pub cache_mb: usize,
+    /// Adjacency share of the budget in MiB (`--adj-cache-mb M`;
+    /// 0 = a quarter of `--cache-mb`). Requires `--page-adj`.
+    pub adj_cache_mb: usize,
+    /// Demand-page the adjacency too (`--page-adj`).
+    pub page_adj: bool,
+    /// Pipeline prefetch: warm the next batch's rows/in-lists while the
+    /// current batch computes (`--prefetch`).
+    pub prefetch: bool,
+    /// Positioned-read backend for the paged shards
+    /// (`--io-backend pread|mmap`).
+    pub io_backend: crate::persist::IoBackend,
+}
+
+impl MountOpts {
+    /// Flags that only mean something under `--mount`.
+    const MOUNT_ONLY: [&'static str; 7] = [
+        "rank",
+        "cache-mb",
+        "adj-cache-mb",
+        "page-adj",
+        "prefetch",
+        "io-backend",
+        "seed-type",
+    ];
+
+    /// Parse and cross-validate the mount flags. Errors on mount-only
+    /// flags without `--mount`, `--adj-cache-mb` without `--page-adj`,
+    /// and unknown `--io-backend` values.
+    pub fn from_args(args: &Args) -> Result<MountOpts, String> {
+        let dir = args.get("mount").map(str::to_string);
+        if dir.is_none() {
+            if let Some(stray) = Self::MOUNT_ONLY.iter().find(|k| args.get(k).is_some()) {
+                return Err(format!("--{stray} requires --mount DIR"));
+            }
+            return Ok(MountOpts::default());
+        }
+        let page_adj = args.get_bool("page-adj");
+        let adj_cache_mb = args.get_usize("adj-cache-mb", 0);
+        if adj_cache_mb > 0 && !page_adj {
+            return Err("--adj-cache-mb only applies with --page-adj".to_string());
+        }
+        let io_backend = match args.get("io-backend") {
+            Some(s) => crate::persist::IoBackend::parse(s).map_err(|e| e.to_string())?,
+            None => crate::persist::IoBackend::default(),
+        };
+        Ok(MountOpts {
+            dir,
+            rank: args.get_usize("rank", 0) as u32,
+            cache_mb: args.get_usize("cache-mb", 64),
+            adj_cache_mb,
+            page_adj,
+            prefetch: args.get_bool("prefetch"),
+            io_backend,
+        })
+    }
+
+    pub fn mounted(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// The LRU budget these flags describe.
+    pub fn lru(&self) -> crate::persist::LruConfig {
+        crate::persist::LruConfig {
+            capacity_bytes: self.cache_mb as u64 * 1024 * 1024,
+            page_adjacency: self.page_adj,
+            adj_capacity_bytes: self.adj_cache_mb as u64 * 1024 * 1024,
+        }
+    }
+}
+
 /// The CLI help text.
 pub const USAGE: &str = "\
 pyg2 — PyG 2.0 reproduction (Rust + JAX + Pallas)
@@ -98,6 +182,12 @@ COMMANDS:
                                 budget, so topology stays O(batch)
               --adj-cache-mb M  adjacency share of the budget (default:
                                 a quarter of --cache-mb)
+              --prefetch        pipeline prefetch: warm batch k+1's seed
+                                rows + in-edge lists while batch k
+                                computes (cache warming only — batches
+                                are byte-identical either way)
+              --io-backend B    pread (default) or mmap positioned reads
+                                for the paged shards
               --rank R --cache-mb M --seed-type T  (mount knobs)
   serve-dist  multi-worker online inference over the partitioned stores:
               N server threads pull dynamic batches from one shared
@@ -111,6 +201,7 @@ COMMANDS:
               --nodes N --parts K        (in-memory SBM leg)
               --mount DIR                serve out of a partition bundle
               --page-adj --cache-mb M --adj-cache-mb M --rank R
+              --prefetch --io-backend B  (same semantics as pyg2 dist)
               --halo-cache --async --async-workers N --latency-us U
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
@@ -152,5 +243,41 @@ mod tests {
         let a = parse("train");
         assert_eq!(a.get_or("arch", "gcn"), "gcn");
         assert_eq!(a.get_usize("epochs", 3), 3);
+    }
+
+    #[test]
+    fn mount_opts_parse_full_knob_set() {
+        let a = parse(
+            "dist --mount /tmp/b --rank 1 --cache-mb 32 --page-adj \
+             --adj-cache-mb 8 --prefetch --io-backend mmap",
+        );
+        let m = MountOpts::from_args(&a).unwrap();
+        assert_eq!(m.dir.as_deref(), Some("/tmp/b"));
+        assert_eq!((m.rank, m.cache_mb, m.adj_cache_mb), (1, 32, 8));
+        assert!(m.page_adj && m.prefetch && m.mounted());
+        assert_eq!(m.io_backend, crate::persist::IoBackend::Mmap);
+        let lru = m.lru();
+        assert_eq!(lru.capacity_bytes, 32 * 1024 * 1024);
+        assert_eq!(lru.adj_capacity_bytes, 8 * 1024 * 1024);
+        assert!(lru.page_adjacency);
+    }
+
+    #[test]
+    fn mount_opts_default_on_in_memory_leg() {
+        let m = MountOpts::from_args(&parse("dist --nodes 100")).unwrap();
+        assert!(!m.mounted());
+        assert_eq!(m.io_backend, crate::persist::IoBackend::Pread);
+    }
+
+    #[test]
+    fn mount_opts_reject_conflicting_combinations() {
+        // Mount-only knobs without --mount.
+        for bad in ["dist --prefetch", "dist --page-adj", "dist --io-backend mmap"] {
+            assert!(MountOpts::from_args(&parse(bad)).is_err(), "{bad}");
+        }
+        // Adjacency budget without paged adjacency.
+        assert!(MountOpts::from_args(&parse("dist --mount d --adj-cache-mb 8")).is_err());
+        // Unknown backend.
+        assert!(MountOpts::from_args(&parse("dist --mount d --io-backend sync")).is_err());
     }
 }

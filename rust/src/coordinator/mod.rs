@@ -266,6 +266,16 @@ pub struct DistOptions {
     /// *feature* RPC (the payload-heavy path; sampler adjacency reads
     /// are accounted as messages but pay no simulated latency).
     pub latency: std::time::Duration,
+    /// Pipeline prefetch on mounted bundles (`--prefetch`): warm batch
+    /// k+1's seed rows and in-edge lists through a
+    /// [`crate::dist::MountPrefetcher`] while batch k computes. Cache
+    /// warming only — batch content is seed-for-seed unchanged
+    /// (`tests/test_prefetch_pipeline.rs`). Ignored by the in-memory
+    /// (non-mounted) pipelines, which have no disk to hide.
+    pub prefetch: bool,
+    /// Positioned-I/O backend for mounted shard files
+    /// (`--io-backend pread|mmap`); see [`crate::persist::IoBackend`].
+    pub io_backend: crate::persist::IoBackend,
 }
 
 /// The partitioned serving path (§2.3): wire a graph through the full
@@ -688,7 +698,17 @@ pub fn mounted_loader(
     lru: crate::persist::LruConfig,
 ) -> Result<crate::dist::DistNeighborLoader> {
     let (gs, fs, labels) = mounted_stores(bundle, local_rank, opts, lru)?;
-    let mut loader = crate::dist::DistNeighborLoader::new(gs, fs, seeds, cfg);
+    let mut loader = crate::dist::DistNeighborLoader::new(
+        std::sync::Arc::clone(&gs),
+        std::sync::Arc::clone(&fs),
+        seeds,
+        cfg,
+    );
+    if opts.prefetch {
+        loader = loader.with_prefetcher(std::sync::Arc::new(
+            crate::dist::MountPrefetcher::new(gs, fs, crate::storage::DEFAULT_GROUP),
+        ));
+    }
     if let Some(y) = labels {
         loader = loader.with_labels(y);
     }
@@ -724,10 +744,14 @@ pub fn mounted_stores(
         ));
     }
     lru.validate()?;
-    let gs = Arc::new(mount_graph_store(bundle, local_rank, lru)?);
-    let mut fs =
-        PartitionedFeatureStore::mount_with_router(bundle, gs.typed_router().clone(), lru)?
-            .with_latency(opts.latency);
+    let gs = Arc::new(mount_graph_store(bundle, local_rank, lru, opts.io_backend)?);
+    let mut fs = PartitionedFeatureStore::mount_with_router_backend(
+        bundle,
+        gs.typed_router().clone(),
+        lru,
+        opts.io_backend,
+    )?
+    .with_latency(opts.latency);
     if opts.halo_cache {
         let halo = gs.halo_nodes(DEFAULT_GROUP)?;
         let n = bundle.node_type(DEFAULT_GROUP)?.num_nodes;
@@ -767,12 +791,15 @@ fn mount_graph_store(
     bundle: &crate::persist::Bundle,
     local_rank: u32,
     lru: crate::persist::LruConfig,
+    backend: crate::persist::IoBackend,
 ) -> Result<crate::dist::PartitionedGraphStore> {
     use std::sync::Arc;
     if lru.page_adjacency {
         let cache = Arc::new(crate::persist::AdjCache::new(lru.adj_budget()));
-        crate::dist::PartitionedGraphStore::mount_paged(bundle, local_rank, cache)
+        crate::dist::PartitionedGraphStore::mount_paged_with(bundle, local_rank, cache, backend)
     } else {
+        // Resident decode reads each shard once at mount; the backend
+        // knob only matters for the demand-paged readers.
         crate::dist::PartitionedGraphStore::mount(bundle, local_rank)
     }
 }
@@ -801,10 +828,14 @@ pub fn hetero_mounted_loader(
 
     bundle.node_type(seed_type)?; // validate the seed type early
     lru.validate()?;
-    let gs = Arc::new(mount_graph_store(bundle, local_rank, lru)?);
-    let mut fs =
-        PartitionedFeatureStore::mount_with_router(bundle, gs.typed_router().clone(), lru)?
-            .with_latency(opts.latency);
+    let gs = Arc::new(mount_graph_store(bundle, local_rank, lru, opts.io_backend)?);
+    let mut fs = PartitionedFeatureStore::mount_with_router_backend(
+        bundle,
+        gs.typed_router().clone(),
+        lru,
+        opts.io_backend,
+    )?
+    .with_latency(opts.latency);
     if opts.halo_cache {
         let mut caches = BTreeMap::new();
         // One edge sweep computes every node type's halo (on a paged
@@ -836,7 +867,19 @@ pub fn hetero_mounted_loader(
         };
         fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
     }
-    let mut loader = HeteroDistNeighborLoader::new(gs, Arc::new(fs), seed_type, seeds, cfg);
+    let fs = Arc::new(fs);
+    let mut loader = HeteroDistNeighborLoader::new(
+        Arc::clone(&gs),
+        Arc::clone(&fs),
+        seed_type,
+        seeds,
+        cfg,
+    );
+    if opts.prefetch {
+        loader = loader.with_prefetcher(Arc::new(crate::dist::MountPrefetcher::new(
+            gs, fs, seed_type,
+        )));
+    }
     if let Some(y) = bundle.load_labels(seed_type)? {
         loader = loader.with_labels(y);
     }
@@ -868,6 +911,9 @@ pub struct MountedMultiRankReport {
     /// Per-rank positioned disk reads over the adjacency shards (zero
     /// when the topology is resident).
     pub adj_disk_reads: Vec<u64>,
+    /// Per-rank pipeline-prefetcher counters (`None` unless
+    /// [`DistOptions::prefetch`] was on).
+    pub prefetch: Vec<Option<crate::dist::PrefetchStats>>,
     pub rank_seconds: Vec<f64>,
     pub batches: usize,
     pub sampled_nodes: usize,
@@ -929,6 +975,7 @@ pub fn multi_rank_epoch_mounted(
     let mut adj_cache = Vec::with_capacity(ranks);
     let mut disk_reads = Vec::with_capacity(ranks);
     let mut adj_disk_reads = Vec::with_capacity(ranks);
+    let mut prefetch = Vec::with_capacity(ranks);
     let mut rank_seconds = Vec::with_capacity(ranks);
     let mut batches = 0usize;
     let mut sampled_nodes = 0usize;
@@ -955,6 +1002,7 @@ pub fn multi_rank_epoch_mounted(
         adj_cache.push(loader.graph().adj_cache_stats());
         disk_reads.push(loader.features().disk_reads().expect("mounted store"));
         adj_disk_reads.push(loader.graph().adj_disk_reads().unwrap_or(0));
+        prefetch.push(loader.prefetch_stats());
     }
     Ok(MountedMultiRankReport {
         matrix,
@@ -963,6 +1011,7 @@ pub fn multi_rank_epoch_mounted(
         adj_cache,
         disk_reads,
         adj_disk_reads,
+        prefetch,
         rank_seconds,
         batches,
         sampled_nodes,

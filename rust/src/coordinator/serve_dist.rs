@@ -35,7 +35,9 @@
 //! `max_batch` × `max_wait` × worker count at 2/4/8 partitions.
 
 use super::serve::{collect_batch, model_predict, Prediction};
-use crate::dist::{DistNeighborSampler, PartitionedFeatureStore, PartitionedGraphStore};
+use crate::dist::{
+    DistNeighborSampler, MountPrefetcher, PartitionedFeatureStore, PartitionedGraphStore,
+};
 use crate::error::{Error, Result};
 use crate::nn::NodeClassifier;
 use crate::sampler::NeighborSamplerConfig;
@@ -69,6 +71,12 @@ pub struct ServeDistConfig {
     /// Admission queue capacity (bounds memory under overload; the
     /// deadline check is what bounds *latency*).
     pub queue_capacity: usize,
+    /// Pipeline prefetch on mounted stores (`--prefetch`): as soon as a
+    /// dynamic batch is dequeued, a shared [`MountPrefetcher`] warms its
+    /// seeds' feature rows and in-edge lists off the demand path,
+    /// overlapping the per-seed sampling below. Cache warming only —
+    /// predictions are unchanged. Ignored on non-mounted stores.
+    pub prefetch: bool,
 }
 
 impl Default for ServeDistConfig {
@@ -79,6 +87,7 @@ impl Default for ServeDistConfig {
             workers: 2,
             fanouts: vec![10, 5],
             queue_capacity: 512,
+            prefetch: false,
         }
     }
 }
@@ -115,6 +124,7 @@ pub struct DistInferenceServer {
     stats: Arc<Mutex<ServeDistStats>>,
     features: Arc<PartitionedFeatureStore>,
     graph: Arc<PartitionedGraphStore>,
+    prefetcher: Option<Arc<MountPrefetcher>>,
 }
 
 fn reject_all_dist(pending: Vec<DistRequest>, rx: &BoundedQueue<DistRequest>, why: &str) {
@@ -156,6 +166,16 @@ impl DistInferenceServer {
         // with a row LRU. On an in-memory store it would just double
         // every fetch (and its router counters).
         let prefetch = features.row_cache_stats().is_some();
+        // Pipeline prefetch: one warmer shared by every worker, so a
+        // dequeued batch's seed rows and in-lists warm while that
+        // worker samples. No-op warms on non-mounted stores.
+        let prefetcher = cfg.prefetch.then(|| {
+            Arc::new(MountPrefetcher::new(
+                Arc::clone(&graph),
+                Arc::clone(&features),
+                crate::storage::DEFAULT_GROUP,
+            ))
+        });
 
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -166,15 +186,18 @@ impl DistInferenceServer {
             let features_t = Arc::clone(&features);
             let model_t = Arc::clone(&model);
             let cfg_t = cfg.clone();
+            let pf_t = prefetcher.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("pyg2-serve-{w}"))
                 .spawn(move || {
-                    worker_loop(rx, stop_t, stats_t, graph_t, features_t, model_t, cfg_t, prefetch)
+                    worker_loop(
+                        rx, stop_t, stats_t, graph_t, features_t, model_t, cfg_t, prefetch, pf_t,
+                    )
                 })
                 .map_err(|e| Error::Runtime(format!("spawn serve worker {w}: {e}")))?;
             handles.push(handle);
         }
-        Ok(Self { inbox, stop, handles, stats, features, graph })
+        Ok(Self { inbox, stop, handles, stats, features, graph, prefetcher })
     }
 
     /// Submit a request with an optional latency budget; returns the
@@ -224,6 +247,12 @@ impl DistInferenceServer {
     pub fn queue_depth(&self) -> usize {
         self.inbox.len()
     }
+
+    /// Pipeline-prefetch counters, when `cfg.prefetch` installed a
+    /// [`MountPrefetcher`].
+    pub fn prefetch_stats(&self) -> Option<crate::dist::PrefetchStats> {
+        self.prefetcher.as_ref().map(|p| p.stats())
+    }
 }
 
 impl Drop for DistInferenceServer {
@@ -251,6 +280,7 @@ fn worker_loop(
     model: Arc<NodeClassifier>,
     cfg: ServeDistConfig,
     prefetch: bool,
+    prefetcher: Option<Arc<MountPrefetcher>>,
 ) {
     let sampler = DistNeighborSampler::new(
         graph,
@@ -292,6 +322,15 @@ fn worker_loop(
         }
         if live.is_empty() {
             continue;
+        }
+
+        // Pipeline prefetch: hand the freshly dequeued batch's seeds to
+        // the shared warmer so their rows and in-lists stream off disk
+        // while this worker samples them. Warming only — the demand
+        // path below is untouched.
+        if let Some(pf) = &prefetcher {
+            let seeds: Vec<u32> = live.iter().map(|r| r.node).collect();
+            pf.schedule(&seeds);
         }
 
         // Per-seed deterministic sampling: batch_seed = node id, so a

@@ -61,6 +61,10 @@ struct TypeShards {
     /// cache/latency/counter-free construction-time reads
     /// ([`RawMountedReader`]).
     raw_files: Option<Vec<Arc<crate::storage::FileFeatureStore>>>,
+    /// Mounted stores only: the concrete paged shards, for the
+    /// speculative cache-warming path
+    /// ([`PartitionedFeatureStore::prefetch_rows`]).
+    paged: Option<Vec<Arc<crate::persist::PagedFeatureStore>>>,
 }
 
 impl TypeShards {
@@ -143,6 +147,7 @@ impl TypeShards {
             router,
             halo_cache: None,
             raw_files: None,
+            paged: None,
         }
     }
 
@@ -157,11 +162,13 @@ impl TypeShards {
         type_index: usize,
         router: Arc<PartitionRouter>,
         cache: &Arc<crate::persist::RowCache>,
+        backend: crate::persist::IoBackend,
         files: &mut Vec<Arc<crate::storage::FileFeatureStore>>,
     ) -> Result<Self> {
         let (owned, local_row) = Self::ownership(&router);
         let mut shards: Vec<Arc<dyn FeatureStore>> = Vec::with_capacity(router.num_parts());
         let mut type_files = Vec::with_capacity(router.num_parts());
+        let mut type_paged = Vec::with_capacity(router.num_parts());
         // Every shard of the type must expose the same groups with the
         // same feature dims as shard 0 — a stamped, row-aligned shard
         // with a different width would otherwise be read wrongly by
@@ -169,7 +176,7 @@ impl TypeShards {
         let mut schema: Option<BTreeMap<FeatureKey, usize>> = None;
         for (p, idx) in owned.iter().enumerate() {
             let path = bundle.feature_shard_path(node_type, p)?;
-            let file = Arc::new(crate::storage::FileFeatureStore::open(&path)?);
+            let file = Arc::new(crate::storage::FileFeatureStore::open_with(&path, backend)?);
             // The shard's identity stamp must say it really is
             // (node_type, partition) — a tampered manifest pointing at a
             // different (shape-compatible) shard file is caught here.
@@ -213,11 +220,13 @@ impl TypeShards {
             }
             files.push(Arc::clone(&file));
             type_files.push(Arc::clone(&file));
-            shards.push(Arc::new(crate::persist::PagedFeatureStore::new(
+            let paged = Arc::new(crate::persist::PagedFeatureStore::new(
                 file,
                 Arc::clone(cache),
                 (type_index * router.num_parts() + p) as u32,
-            )?));
+            )?);
+            type_paged.push(Arc::clone(&paged));
+            shards.push(paged);
         }
         Ok(Self {
             shards,
@@ -225,6 +234,7 @@ impl TypeShards {
             router,
             halo_cache: None,
             raw_files: Some(type_files),
+            paged: Some(type_paged),
         })
     }
 
@@ -337,6 +347,18 @@ impl PartitionedFeatureStore {
         local_rank: u32,
         lru: crate::persist::LruConfig,
     ) -> Result<Self> {
+        Self::mount_with(bundle, local_rank, lru, crate::persist::IoBackend::default())
+    }
+
+    /// [`PartitionedFeatureStore::mount`] with an explicit
+    /// [`crate::persist::IoBackend`] for the shard files
+    /// (`--io-backend`).
+    pub fn mount_with(
+        bundle: &crate::persist::Bundle,
+        local_rank: u32,
+        lru: crate::persist::LruConfig,
+        backend: crate::persist::IoBackend,
+    ) -> Result<Self> {
         let mut routers = BTreeMap::new();
         for nt in &bundle.manifest().node_types {
             routers.insert(
@@ -348,7 +370,7 @@ impl PartitionedFeatureStore {
                 )?),
             );
         }
-        Self::mount_with_router(bundle, TypedRouter::from_routers(routers)?, lru)
+        Self::mount_with_router_backend(bundle, TypedRouter::from_routers(routers)?, lru, backend)
     }
 
     /// [`PartitionedFeatureStore::mount`] sharing an existing
@@ -359,6 +381,17 @@ impl PartitionedFeatureStore {
         bundle: &crate::persist::Bundle,
         router: TypedRouter,
         lru: crate::persist::LruConfig,
+    ) -> Result<Self> {
+        Self::mount_with_router_backend(bundle, router, lru, crate::persist::IoBackend::default())
+    }
+
+    /// [`PartitionedFeatureStore::mount_with_router`] with an explicit
+    /// [`crate::persist::IoBackend`] for the shard files.
+    pub fn mount_with_router_backend(
+        bundle: &crate::persist::Bundle,
+        router: TypedRouter,
+        lru: crate::persist::LruConfig,
+        backend: crate::persist::IoBackend,
     ) -> Result<Self> {
         let m = bundle.manifest();
         if router.num_parts() != m.num_parts {
@@ -381,7 +414,7 @@ impl PartitionedFeatureStore {
                     nt.num_nodes
                 )));
             }
-            let shards = TypeShards::mount(bundle, &nt.name, ti, r, &cache, &mut files)?;
+            let shards = TypeShards::mount(bundle, &nt.name, ti, r, &cache, backend, &mut files)?;
             types.insert(nt.name.clone(), shards);
         }
         Ok(Self {
@@ -422,6 +455,43 @@ impl PartitionedFeatureStore {
                 f.reset_disk_reads();
             }
         }
+    }
+
+    /// Speculatively warm the mounted row cache with `nodes`
+    /// (type-global ids) of `node_type`, reading each still-uncached row
+    /// straight from its owning shard file — the pipeline-prefetch entry
+    /// point, warming batch k+1's seeds while batch k computes. Warming
+    /// bypasses the routers, halo caches, and simulated latency, so no
+    /// traffic counter moves and no RNG stream is touched: only the
+    /// [`crate::persist::RowCacheStats`] prefetch counters (and the
+    /// shard disk-read ledgers) observe it. A no-op on in-memory stores;
+    /// out-of-range ids are skipped (warming is speculative — the demand
+    /// path is where bad seeds must fail).
+    pub fn prefetch_rows(&self, node_type: &str, nodes: &[u32]) -> Result<()> {
+        if self.mounted.is_none() {
+            return Ok(());
+        }
+        let ts = if self.types.len() == 1 {
+            self.types.values().next().expect("non-empty")
+        } else {
+            self.types.get(node_type).ok_or_else(|| {
+                Error::Storage(format!("no node type {node_type} to prefetch"))
+            })?
+        };
+        let Some(paged) = &ts.paged else { return Ok(()) };
+        let keys = paged[0].keys();
+        let mut scratch = Vec::new();
+        for &v in nodes {
+            if v as usize >= ts.local_row.len() {
+                continue;
+            }
+            let p = ts.router.owner(v) as usize;
+            let row = ts.local_row[v as usize] as usize;
+            for key in &keys {
+                paged[p].warm_row(key, row, &mut scratch)?;
+            }
+        }
+        Ok(())
     }
 
     /// A cache/latency/counter-free view of a mounted store (`None` on

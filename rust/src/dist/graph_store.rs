@@ -33,9 +33,11 @@
 //! The store also implements [`GraphStore`] by serving merged global
 //! views per edge type, so non-partition-aware components (plain
 //! `NeighborSampler`, `HeteroNeighborSampler`, the inference server) can
-//! run over it unchanged. (Merged views need the COO resident, so they
-//! are unavailable — a clean [`Error`], not a silent materialization —
-//! on paged mounts.)
+//! run over it unchanged. Merged views need the COO resident, so on a
+//! paged mount they are an [`Error`] by default — never a silent
+//! materialization — until the caller deliberately opts into the
+//! O(graph)-memory decode with
+//! [`PartitionedGraphStore::materialize_global`].
 
 use super::{PartitionRouter, RouterStats, TypedRouter};
 use crate::error::{Error, Result};
@@ -88,6 +90,11 @@ pub struct EdgeShards {
     /// serve timestamps per candidate instead (see
     /// [`EdgeShards::read_in_timed`]).
     edge_time: Option<Arc<Vec<i64>>>,
+    /// The COO decoded on demand from a paged backing by
+    /// [`EdgeShards::materialize_global`] — the explicit O(graph)-memory
+    /// escape hatch that unlocks the merged views below. Never set
+    /// implicitly.
+    materialized: OnceLock<(Vec<u32>, Vec<u32>)>,
     global_csr: OnceLock<Arc<Compressed>>,
     global_csc: OnceLock<Arc<Compressed>>,
     // Per-edge-type traffic (the bench_dist_hetero breakdown). Routed
@@ -164,6 +171,7 @@ impl EdgeShards {
             n_dst,
             num_edges,
             edge_time,
+            materialized: OnceLock::new(),
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
             local_msgs: AtomicU64::new(0),
@@ -322,16 +330,80 @@ impl EdgeShards {
     }
 
     /// The resident COO (merged-view backing); an [`Error`] on paged
-    /// mounts, which never materialize it.
+    /// mounts until [`EdgeShards::materialize_global`] deliberately
+    /// decodes it.
     fn coo(&self) -> Result<(&[u32], &[u32])> {
         match &self.topo {
             Topology::Resident { src, dst, .. } => Ok((src, dst)),
-            Topology::Paged { .. } => Err(Error::Storage(
-                "merged global adjacency views are unavailable on a paged mount \
-                 (--page-adj keeps the COO on disk)"
-                    .into(),
-            )),
+            Topology::Paged { .. } => match self.materialized.get() {
+                Some((src, dst)) => Ok((src, dst)),
+                None => Err(Error::Storage(
+                    "merged global adjacency views are unavailable on a paged mount \
+                     (--page-adj keeps the COO on disk); call materialize_global() \
+                     to deliberately decode it into O(graph) memory"
+                        .into(),
+                )),
+            },
         }
+    }
+
+    /// Deliberately decode this edge type's full COO from its paged
+    /// shard files into memory, unlocking the merged global views
+    /// ([`GraphStore::csc`] / [`GraphStore::csr`]) that plain samplers
+    /// and `explain` need. This is the **documented O(graph)-memory
+    /// escape hatch** out of the paged mount's O(batch) residency bound
+    /// — `8 * num_edges` bytes for the COO plus the compressed views
+    /// built on first access — so it never happens implicitly.
+    /// Idempotent; a no-op on resident backings. The streaming reads are
+    /// uncounted, like the other setup paths.
+    pub fn materialize_global(&self) -> Result<()> {
+        let Topology::Paged { shards, .. } = &self.topo else {
+            return Ok(());
+        };
+        if self.materialized.get().is_some() {
+            return Ok(());
+        }
+        // Reconstruct by edge id from the in-edge shards, which tile the
+        // edge set (validated at mount): each edge appears in exactly
+        // one, carrying its type-global id.
+        const UNSET: u32 = u32::MAX;
+        let mut src = vec![UNSET; self.num_edges];
+        let mut dst = vec![UNSET; self.num_edges];
+        for shard in shards {
+            shard.stream_with_eids(false, |d, srcs, eids| {
+                for (&s, &e) in srcs.iter().zip(eids) {
+                    src[e as usize] = s;
+                    dst[e as usize] = d;
+                }
+            })?;
+        }
+        if src.iter().any(|&s| s == UNSET) {
+            return Err(Error::Storage(format!(
+                "paged shards do not cover all {} edges (duplicate or missing edge ids)",
+                self.num_edges
+            )));
+        }
+        let _ = self.materialized.set((src, dst));
+        Ok(())
+    }
+
+    /// Speculatively warm the adjacency cache with the in-edge lists of
+    /// `nodes`, reading each still-uncached list straight from its
+    /// owning shard. Warming inserts prefetch-tagged entries (reported
+    /// by the cache's prefetch hit/wasted counters) and touches no
+    /// traffic counter and no RNG stream — the pipeline-prefetch entry
+    /// point for topology, warming batch k+1's seed lists while batch k
+    /// computes. A no-op on resident backings; out-of-range ids are
+    /// skipped (warming is speculative — the demand path is where bad
+    /// seeds must fail).
+    pub fn prefetch_in_lists(&self, nodes: &[u32], buf: &mut AdjBuf) -> Result<()> {
+        if let Topology::Paged { shards, .. } = &self.topo {
+            for &v in nodes {
+                let Some(owner) = self.dst_router.try_owner(v) else { continue };
+                shards[owner as usize].warm_in(v, buf)?;
+            }
+        }
+        Ok(())
     }
 
     /// Visit every edge `(src, dst)` of this type exactly once. The
@@ -513,6 +585,7 @@ impl EdgeShards {
             n_dst,
             num_edges,
             edge_time,
+            materialized: OnceLock::new(),
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
             local_msgs: AtomicU64::new(0),
@@ -573,6 +646,7 @@ impl EdgeShards {
             n_dst,
             num_edges,
             edge_time: None,
+            materialized: OnceLock::new(),
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
             local_msgs: AtomicU64::new(0),
@@ -771,6 +845,18 @@ impl PartitionedGraphStore {
         local_rank: u32,
         cache: Arc<AdjCache>,
     ) -> Result<Self> {
+        Self::mount_paged_with(bundle, local_rank, cache, crate::persist::IoBackend::default())
+    }
+
+    /// [`PartitionedGraphStore::mount_paged`] with an explicit
+    /// [`crate::persist::IoBackend`] for the shard files
+    /// (`--io-backend`).
+    pub fn mount_paged_with(
+        bundle: &crate::persist::Bundle,
+        local_rank: u32,
+        cache: Arc<AdjCache>,
+        backend: crate::persist::IoBackend,
+    ) -> Result<Self> {
         let (router, num_nodes, node_time) = Self::mount_routers(bundle, local_rank)?;
         let parts = bundle.num_parts();
         let n_et = bundle.manifest().edge_types.len();
@@ -783,7 +869,7 @@ impl PartitionedGraphStore {
         for (ei, et) in bundle.manifest().edge_types.iter().enumerate() {
             let mut shards = Vec::with_capacity(parts);
             for p in 0..parts {
-                shards.push(Arc::new(PagedAdjacency::open(
+                shards.push(Arc::new(PagedAdjacency::open_with(
                     bundle.adjacency_shard_path(&et.ty, p)?,
                     crate::persist::AdjStamp { et_index: ei as u64, partition: p as u64 },
                     num_nodes[&et.ty.src],
@@ -791,14 +877,16 @@ impl PartitionedGraphStore {
                     et.num_edges,
                     base + (ei * parts + p) as u32,
                     Arc::clone(&cache),
+                    backend,
                 )?));
             }
             let time = match bundle.edge_time_path(&et.ty)? {
-                Some(path) => Some(Arc::new(PagedEdgeTime::open(
+                Some(path) => Some(Arc::new(PagedEdgeTime::open_with(
                     path,
                     et.num_edges,
                     base + (n_et * parts + ei) as u32,
                     Arc::clone(&cache),
+                    backend,
                 )?)),
                 None => None,
             };
@@ -936,6 +1024,20 @@ impl PartitionedGraphStore {
     /// Whether the topology is served by demand paging (`--page-adj`).
     pub fn is_paged(&self) -> bool {
         self.adj_cache.is_some()
+    }
+
+    /// Deliberately decode every edge type's full COO from the paged
+    /// shard files, unlocking the merged [`GraphStore::csc`] /
+    /// [`GraphStore::csr`] views for plain samplers and `explain` — the
+    /// documented **O(graph)-memory** escape hatch out of the paged
+    /// mount's bounded residency (see
+    /// [`EdgeShards::materialize_global`]). Idempotent; a no-op on
+    /// resident topologies.
+    pub fn materialize_global(&self) -> Result<()> {
+        for es in self.edges.values() {
+            es.materialize_global()?;
+        }
+        Ok(())
     }
 
     /// The shared adjacency block cache of a paged mount.
@@ -1206,10 +1308,37 @@ mod tests {
             resident.halo_nodes(DEFAULT_GROUP).unwrap()
         );
 
-        // Merged global views are a clean error on the paged mount.
+        // Merged global views are a clean error on the paged mount until
+        // the caller opts into the O(graph) decode.
         assert!(paged.csc(&et).is_err());
         assert!(paged.csr(&et).is_err());
         assert!(resident.csc(&et).is_ok());
+        paged.materialize_global().unwrap();
+        paged.materialize_global().unwrap(); // idempotent
+        assert_eq!(*paged.csc(&et).unwrap(), *resident.csc(&et).unwrap());
+        assert_eq!(*paged.csr(&et).unwrap(), *resident.csr(&et).unwrap());
+
+        // On a cold mount, prefetch-warming in-lists does the reads
+        // early and off the demand ledger's hit/miss books: the demand
+        // path's first touch is then a (prefetch-tagged) hit, with no
+        // new disk read.
+        let cold =
+            PartitionedGraphStore::mount_paged(&bundle, 0, Arc::new(AdjCache::new(64 * 1024)))
+                .unwrap();
+        let cold_es = cold.edges_of(&et).unwrap();
+        let warm: Vec<u32> = (0..50).collect();
+        let mut wb = AdjBuf::default();
+        cold_es.prefetch_in_lists(&warm, &mut wb).unwrap();
+        let s = cold.adj_cache_stats().unwrap();
+        assert_eq!((s.hits, s.misses), (0, 0), "warming is not demand traffic");
+        let warmed_reads = cold.adj_disk_reads().unwrap();
+        for v in warm {
+            cold_es.read_in(v, &mut pb).unwrap();
+        }
+        let s = cold.adj_cache_stats().unwrap();
+        assert_eq!(s.misses, 0, "every warmed list is resident");
+        assert_eq!(s.prefetch_hits, 50);
+        assert_eq!(cold.adj_disk_reads().unwrap(), warmed_reads, "no demand reads");
 
         // Warm replay of the same slices reads nothing new.
         paged.reset_adj_io_stats();

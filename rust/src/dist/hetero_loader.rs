@@ -27,6 +27,7 @@
 use super::feature_store::PartitionedFeatureStore;
 use super::graph_store::PartitionedGraphStore;
 use super::hetero_sampler::HeteroDistNeighborSampler;
+use super::prefetch::MountPrefetcher;
 use super::{CacheStats, RouterStats};
 use crate::graph::EdgeType;
 use crate::loader::neighbor_loader::{epoch_seed_batches, spawn_ordered};
@@ -42,6 +43,7 @@ pub struct HeteroDistNeighborLoader {
     seeds: Vec<u32>,
     labels: Option<Arc<Vec<i64>>>,
     cfg: HeteroLoaderConfig,
+    prefetcher: Option<Arc<MountPrefetcher>>,
 }
 
 impl HeteroDistNeighborLoader {
@@ -59,6 +61,7 @@ impl HeteroDistNeighborLoader {
             seeds,
             labels: None,
             cfg,
+            prefetcher: None,
         }
     }
 
@@ -66,6 +69,20 @@ impl HeteroDistNeighborLoader {
     pub fn with_labels(mut self, labels: Vec<i64>) -> Self {
         self.labels = Some(Arc::new(labels));
         self
+    }
+
+    /// Attach a [`MountPrefetcher`] (seeded at this loader's seed type):
+    /// each epoch warms batch 0's seeds up front and batch `i+1`'s as
+    /// batch `i`'s job starts. Cache warming only — batch content is
+    /// untouched (`--prefetch` on the typed mounted pipeline).
+    pub fn with_prefetcher(mut self, pf: Arc<MountPrefetcher>) -> Self {
+        self.prefetcher = Some(pf);
+        self
+    }
+
+    /// The attached prefetcher's counters, when one is installed.
+    pub fn prefetch_stats(&self) -> Option<super::PrefetchStats> {
+        self.prefetcher.as_ref().map(|p| p.stats())
     }
 
     pub fn num_batches(&self) -> usize {
@@ -143,12 +160,26 @@ impl HeteroDistNeighborLoader {
         let features = Arc::clone(&self.features);
         let labels = self.labels.clone();
         let seed_type = self.seed_type.clone();
+        // Pipeline prefetch: warm batch 0 now, batch i+1 when batch i's
+        // job starts — cache warming only, so batch content is
+        // untouched.
+        let lookahead = self.prefetcher.as_ref().map(|pf| {
+            if let Some(first) = batches.first() {
+                pf.schedule(first);
+            }
+            (Arc::clone(pf), Arc::new(batches.clone()))
+        });
         spawn_ordered(
             batches,
             self.cfg.num_workers,
             self.cfg.prefetch,
             epoch,
-            move |seeds, batch_seed| {
+            move |i, seeds, batch_seed| {
+                if let Some((pf, all)) = &lookahead {
+                    if let Some(next) = all.get(i + 1) {
+                        pf.schedule(next);
+                    }
+                }
                 sampler
                     .sample(&seed_type, &seeds, None, batch_seed)
                     .and_then(|sub| {

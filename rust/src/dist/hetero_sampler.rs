@@ -1,7 +1,9 @@
 //! Partition-aware heterogeneous multi-hop neighbor sampling.
 //!
-//! Mirrors [`crate::sampler::HeteroNeighborSampler`] hop for hop and
-//! edge type for edge type, but every frontier node's adjacency slice is
+//! Runs the **same** traversal loop as
+//! [`crate::sampler::HeteroNeighborSampler`] — both call
+//! [`crate::sampler::hetero::traverse`], parameterized over an
+//! adjacency provider — but every frontier node's adjacency slice is
 //! fetched from the shard of its *owning* partition
 //! ([`crate::dist::EdgeShards::read_in_timed`], keyed by
 //! `(edge_type, partition)` — resident or demand-paged off a mounted
@@ -24,16 +26,108 @@
 //! — the correctness anchor of the typed distributed pipeline, enforced
 //! by the unit tests below and `tests/test_dist_hetero_equivalence.rs`.
 
-use super::graph_store::PartitionedGraphStore;
+use super::graph_store::{EdgeShards, PartitionedGraphStore};
 use crate::error::{Error, Result};
 use crate::graph::EdgeType;
 use crate::persist::AdjBuf;
-use crate::sampler::hetero::{filter_pick, EdgeTimeView};
+use crate::sampler::hetero::{traverse, AdjacencySource, EdgeExpansion, EdgeTimeView};
 use crate::sampler::{HeteroSampledSubgraph, HeteroSamplerConfig};
 use crate::storage::GraphStore;
-use crate::util::Rng;
-use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
+
+/// [`AdjacencySource`] over owner-sharded reads: each frontier node's
+/// candidate slice comes from [`EdgeShards::read_in_timed`], with the
+/// partitions-touched / edges-shipped ledgers flushed per
+/// `(hop, edge type)` through [`EdgeShards::record_hop`].
+struct ShardSource<'g>(&'g PartitionedGraphStore);
+
+struct ShardExpansion<'s> {
+    es: &'s EdgeShards,
+    /// Resident global edge timestamps (`None` on paged mounts, whose
+    /// timestamps resolve per candidate into `buf`).
+    edge_time: Option<Arc<Vec<i64>>>,
+    temporal: bool,
+    /// Owner of the last `candidates()` dst — `took` charges it.
+    owner: usize,
+    touched: Vec<bool>,
+    edges: Vec<u64>,
+    /// Resident shards never touch it; paged shards fill it (lists and
+    /// timestamps) per frontier node.
+    buf: AdjBuf,
+}
+
+impl AdjacencySource for ShardSource<'_> {
+    type Expansion<'s>
+        = ShardExpansion<'s>
+    where
+        Self: 's;
+
+    fn edge_types(&self) -> Vec<EdgeType> {
+        self.0.edge_types()
+    }
+
+    fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>> {
+        self.0.node_time(node_type)
+    }
+
+    /// Seeds come from user input; frontier nodes beyond hop 0 are edge
+    /// endpoints and always in range.
+    fn validate_seeds(&self, seed_type: &str, seeds: &[u32]) -> Result<()> {
+        let seed_router = self.0.typed_router().router(seed_type)?;
+        for &s in seeds {
+            if seed_router.try_owner(s).is_none() {
+                return Err(Error::Sampler(format!(
+                    "seed {s} out of range ({} {seed_type} nodes)",
+                    seed_router.num_nodes()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn begin(&self, et: &EdgeType, temporal: bool) -> Result<ShardExpansion<'_>> {
+        let parts = self.0.num_parts();
+        Ok(ShardExpansion {
+            es: self.0.edges_of(et)?,
+            edge_time: self.0.edge_time(et)?,
+            temporal,
+            owner: 0,
+            touched: vec![false; parts],
+            edges: vec![0u64; parts],
+            buf: AdjBuf::default(),
+        })
+    }
+}
+
+impl EdgeExpansion for ShardExpansion<'_> {
+    fn candidates(&mut self, dst: u32) -> Result<(&[u32], &[u32], Option<EdgeTimeView<'_>>)> {
+        // Adjacency from the owning shard — bit-identical to the global
+        // CSC range of this edge type.
+        self.owner = self.es.dst_owner(dst) as usize;
+        self.touched[self.owner] = true;
+        let (nbrs, eids, ptimes) = self.es.read_in_timed(dst, &mut self.buf, self.temporal)?;
+        // Resident stores filter through the global array; paged mounts
+        // through the per-candidate times just resolved — same
+        // constraints, same RNG stream.
+        let etime_view = match (&self.edge_time, ptimes) {
+            (Some(g), _) => Some(EdgeTimeView::Global(&g[..])),
+            (None, Some(t)) => Some(EdgeTimeView::PerCandidate(t)),
+            (None, None) => None,
+        };
+        Ok((nbrs, eids, etime_view))
+    }
+
+    fn took(&mut self, _dst: u32, picked: usize) {
+        self.edges[self.owner] += picked as u64;
+    }
+
+    /// Local-first fan-out accounting, per edge type: one local access
+    /// when the local shard served expansions, one coalesced RPC per
+    /// remote partition touched.
+    fn finish(&mut self) {
+        self.es.record_hop(&self.touched, &self.edges);
+    }
+}
 
 /// Heterogeneous neighbor sampler over a [`PartitionedGraphStore`].
 pub struct HeteroDistNeighborSampler {
@@ -54,28 +148,11 @@ impl HeteroDistNeighborSampler {
         &self.store
     }
 
-    fn fanout(&self, et: &EdgeType, hop: usize) -> usize {
-        let f = self
-            .cfg
-            .fanouts_per_edge_type
-            .get(et)
-            .unwrap_or(&self.cfg.default_fanouts);
-        f.get(hop).copied().unwrap_or(0)
-    }
-
-    fn num_hops(&self) -> usize {
-        self.cfg
-            .fanouts_per_edge_type
-            .values()
-            .map(|f| f.len())
-            .chain(std::iter::once(self.cfg.default_fanouts.len()))
-            .max()
-            .unwrap_or(0)
-    }
-
     /// Sample around seeds of `seed_type`; identical output to
     /// [`crate::sampler::HeteroNeighborSampler::sample`] under the same
-    /// `(config, seeds, seed_times, batch_seed)`.
+    /// `(config, seeds, seed_times, batch_seed)` — both run the shared
+    /// [`traverse`] loop, differing only in the [`AdjacencySource`]
+    /// feeding it.
     pub fn sample(
         &self,
         seed_type: &str,
@@ -83,195 +160,14 @@ impl HeteroDistNeighborSampler {
         seed_times: Option<&[i64]>,
         batch_seed: u64,
     ) -> Result<HeteroSampledSubgraph> {
-        if let Some(times) = seed_times {
-            if times.len() != seeds.len() {
-                return Err(Error::Sampler("seed_times misaligned".into()));
-            }
-            if !self.cfg.disjoint {
-                return Err(Error::Sampler(
-                    "temporal hetero sampling requires disjoint mode (per-seed timestamps)".into(),
-                ));
-            }
-        }
-        let edge_types = self.store.edge_types();
-        let mut rng = Rng::new(self.cfg.seed).fork(batch_seed);
-
-        let mut out = HeteroSampledSubgraph {
-            seed_type: seed_type.to_string(),
-            num_seeds: seeds.len(),
-            ..Default::default()
-        };
-        // Per node type: local assignment keyed by (tree, global id).
-        let mut local: BTreeMap<String, HashMap<(u32, u32), u32>> = BTreeMap::new();
-        let mut batch: BTreeMap<String, Vec<u32>> = BTreeMap::new();
-        // Initialize all node types present in the store — in the same
-        // edge-type-derived order as the in-memory sampler.
-        let mut node_types: Vec<String> = Vec::new();
-        for et in &edge_types {
-            for nt in [&et.src, &et.dst] {
-                if !node_types.contains(nt) {
-                    node_types.push(nt.clone());
-                }
-            }
-        }
-        if !node_types.contains(&seed_type.to_string()) {
-            return Err(Error::Sampler(format!("seed type {seed_type} not in graph")));
-        }
-        // Seeds come from user input; frontier nodes beyond hop 0 are
-        // edge endpoints and always in range.
-        {
-            let seed_router = self.store.typed_router().router(seed_type)?;
-            for &s in seeds {
-                if seed_router.try_owner(s).is_none() {
-                    return Err(Error::Sampler(format!(
-                        "seed {s} out of range ({} {seed_type} nodes)",
-                        seed_router.num_nodes()
-                    )));
-                }
-            }
-        }
-        for nt in &node_types {
-            out.nodes.insert(nt.clone(), Vec::new());
-            out.node_offsets.insert(nt.clone(), Vec::new());
-            local.insert(nt.clone(), HashMap::default());
-            batch.insert(nt.clone(), Vec::new());
-        }
-        for et in &edge_types {
-            out.edges.insert(et.clone(), crate::sampler::hetero::HeteroEdges::default());
-        }
-
-        // Seed placement.
-        {
-            let nv = out.nodes.get_mut(seed_type).unwrap();
-            let lv = local.get_mut(seed_type).unwrap();
-            let bv = batch.get_mut(seed_type).unwrap();
-            for (i, &s) in seeds.iter().enumerate() {
-                let tree = if self.cfg.disjoint { i as u32 } else { 0 };
-                nv.push(s);
-                bv.push(tree);
-                lv.insert((tree, s), i as u32);
-            }
-        }
-        for nt in &node_types {
-            out.node_offsets
-                .get_mut(nt)
-                .unwrap()
-                .push(out.nodes[nt].len());
-        }
-
-        // Typed frontier: node type -> local ids to expand this hop.
-        let mut frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
-        frontier.insert(seed_type.to_string(), (0..seeds.len() as u32).collect());
-
-        // Per-(hop, edge type) routing ledger: which partitions served
-        // the expansions and how many edges each shipped.
-        let parts = self.store.num_parts();
-        let mut hop_edges = vec![0u64; parts];
-        let mut hop_touched = vec![false; parts];
-        // One reusable adjacency buffer: resident shards never touch it,
-        // paged shards fill it (lists and timestamps) per frontier node.
-        let mut abuf = AdjBuf::default();
-
-        for hop in 0..self.num_hops() {
-            let mut next_frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
-            // Expand every edge type whose *destination* type has frontier
-            // nodes (messages flow src -> dst toward the seeds).
-            for et in &edge_types {
-                let Some(front) = frontier.get(&et.dst) else { continue };
-                if front.is_empty() {
-                    continue;
-                }
-                let fanout = self.fanout(et, hop);
-                if fanout == 0 {
-                    continue;
-                }
-                let es = self.store.edges_of(et)?;
-                let edge_time = self.store.edge_time(et)?;
-                let node_time = self.store.node_time(&et.src)?;
-                hop_edges.iter_mut().for_each(|e| *e = 0);
-                hop_touched.iter_mut().for_each(|t| *t = false);
-
-                for &dst_local in front {
-                    let dst_global = out.nodes[&et.dst][dst_local as usize];
-                    let tree = batch[&et.dst][dst_local as usize];
-                    let t_seed = seed_times.map(|t| t[tree as usize]);
-
-                    // Adjacency from the owning shard — bit-identical to
-                    // the global CSC range of this edge type, expanded
-                    // through the shared `filter_pick` helper (the single
-                    // definition of the RNG-consumption contract both
-                    // hetero samplers draw from).
-                    let owner = es.dst_owner(dst_global) as usize;
-                    hop_touched[owner] = true;
-                    let (nbrs, eids, ptimes) =
-                        es.read_in_timed(dst_global, &mut abuf, seed_times.is_some())?;
-                    // Resident stores filter through the global array;
-                    // paged mounts through the per-candidate times just
-                    // resolved — same constraints, same RNG stream.
-                    let etime_view = match (edge_time.as_deref(), ptimes) {
-                        (Some(g), _) => Some(EdgeTimeView::Global(&g[..])),
-                        (None, Some(t)) => Some(EdgeTimeView::PerCandidate(t)),
-                        (None, None) => None,
-                    };
-                    let picks = filter_pick(
-                        nbrs,
-                        eids,
-                        t_seed,
-                        etime_view,
-                        node_time.as_deref().map(|v| &v[..]),
-                        fanout,
-                        &mut rng,
-                    );
-                    if picks.is_empty() {
-                        continue;
-                    }
-                    hop_edges[owner] += picks.len() as u64;
-                    let nv = out.nodes.get_mut(&et.src).unwrap();
-                    let lv = local.get_mut(&et.src).unwrap();
-                    let bv = batch.get_mut(&et.src).unwrap();
-                    let ev = out.edges.get_mut(et).unwrap();
-                    for (nbr, eid) in picks {
-                        let src_local = *lv.entry((tree, nbr)).or_insert_with(|| {
-                            nv.push(nbr);
-                            bv.push(tree);
-                            next_frontier
-                                .entry(et.src.clone())
-                                .or_default()
-                                .push(nv.len() as u32 - 1);
-                            nv.len() as u32 - 1
-                        });
-                        ev.row.push(src_local);
-                        ev.col.push(dst_local);
-                        ev.edge_ids.push(eid);
-                    }
-                }
-                // Local-first fan-out accounting, per edge type: one
-                // local access when the local shard served expansions,
-                // one coalesced RPC per remote partition touched.
-                es.record_hop(&hop_touched, &hop_edges);
-            }
-            for nt in &node_types {
-                out.node_offsets
-                    .get_mut(nt)
-                    .unwrap()
-                    .push(out.nodes[nt].len());
-            }
-            frontier = next_frontier;
-            if frontier.is_empty() {
-                for nt in &node_types {
-                    let off = out.node_offsets.get_mut(nt).unwrap();
-                    let last = *off.last().unwrap();
-                    while off.len() <= self.num_hops() {
-                        off.push(last);
-                    }
-                }
-                break;
-            }
-        }
-
-        if self.cfg.disjoint {
-            out.batch = Some(batch);
-        }
+        let out = traverse(
+            &ShardSource(self.store.as_ref()),
+            &self.cfg,
+            seed_type,
+            seeds,
+            seed_times,
+            batch_seed,
+        )?;
         // Same hot-path guard as the in-memory sampler.
         #[cfg(debug_assertions)]
         if let Err(e) = out.check_invariants() {
@@ -290,6 +186,7 @@ mod tests {
     use crate::sampler::HeteroNeighborSampler;
     use crate::storage::InMemoryGraphStore;
     use crate::tensor::Tensor;
+    use std::collections::BTreeMap;
 
     /// users --writes--> posts, posts --cites--> posts (same topology as
     /// the in-memory sampler's tests).

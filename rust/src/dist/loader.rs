@@ -22,6 +22,7 @@
 
 use super::feature_store::PartitionedFeatureStore;
 use super::graph_store::PartitionedGraphStore;
+use super::prefetch::MountPrefetcher;
 use super::sampler::DistNeighborSampler;
 use super::RouterStats;
 use crate::loader::neighbor_loader::{epoch_seed_batches, spawn_ordered};
@@ -39,6 +40,7 @@ pub struct DistNeighborLoader {
     cfg: LoaderConfig,
     bucket: ShapeBucket,
     transforms: Vec<Transform>,
+    prefetcher: Option<Arc<MountPrefetcher>>,
 }
 
 impl DistNeighborLoader {
@@ -61,12 +63,28 @@ impl DistNeighborLoader {
             cfg,
             bucket,
             transforms: Vec::new(),
+            prefetcher: None,
         }
     }
 
     pub fn with_labels(mut self, labels: Vec<i64>) -> Self {
         self.labels = Some(Arc::new(labels));
         self
+    }
+
+    /// Attach a [`MountPrefetcher`]: each epoch warms batch 0's seeds up
+    /// front and batch `i+1`'s as batch `i`'s job starts, overlapping
+    /// disk I/O with compute. Warming never changes batch content (it
+    /// touches no RNG and no router), so this is purely a latency knob
+    /// (`--prefetch` on `pyg2 dist --mount`).
+    pub fn with_prefetcher(mut self, pf: Arc<MountPrefetcher>) -> Self {
+        self.prefetcher = Some(pf);
+        self
+    }
+
+    /// The attached prefetcher's counters, when one is installed.
+    pub fn prefetch_stats(&self) -> Option<super::PrefetchStats> {
+        self.prefetcher.as_ref().map(|p| p.stats())
     }
 
     pub fn with_feature_key(mut self, key: FeatureKey) -> Self {
@@ -143,12 +161,26 @@ impl DistNeighborLoader {
         let labels = self.labels.clone();
         let bucket = self.bucket.clone();
         let transforms = self.transforms.clone();
+        // Pipeline prefetch: warm batch 0 now, batch i+1 when batch i's
+        // job starts — cache warming only, so batch content is
+        // untouched.
+        let lookahead = self.prefetcher.as_ref().map(|pf| {
+            if let Some(first) = batches.first() {
+                pf.schedule(first);
+            }
+            (Arc::clone(pf), Arc::new(batches.clone()))
+        });
         spawn_ordered(
             batches,
             self.cfg.num_workers,
             self.cfg.prefetch,
             epoch,
-            move |seeds, batch_seed| {
+            move |i, seeds, batch_seed| {
+                if let Some((pf, all)) = &lookahead {
+                    if let Some(next) = all.get(i + 1) {
+                        pf.schedule(next);
+                    }
+                }
                 sampler.sample(&seeds, batch_seed).and_then(|sub| {
                     Batch::assemble(
                         sub,

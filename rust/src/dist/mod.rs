@@ -55,6 +55,7 @@ pub mod halo_cache;
 pub mod hetero_loader;
 pub mod hetero_sampler;
 pub mod loader;
+pub mod prefetch;
 pub mod sampler;
 
 pub use async_router::{AsyncRouter, FetchPlan, PendingFetch};
@@ -64,6 +65,7 @@ pub use halo_cache::{CacheStats, HaloCache};
 pub use hetero_loader::HeteroDistNeighborLoader;
 pub use hetero_sampler::HeteroDistNeighborSampler;
 pub use loader::DistNeighborLoader;
+pub use prefetch::{MountPrefetcher, PrefetchStats};
 pub use sampler::DistNeighborSampler;
 
 use crate::error::{Error, Result};

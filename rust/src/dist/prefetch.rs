@@ -1,0 +1,186 @@
+//! Pipelined cache warming for paged mounts: overlap batch k+1's disk
+//! I/O with batch k's compute.
+//!
+//! The mounted loaders know the whole epoch's seed batches up front
+//! (deterministic shuffle, see
+//! [`crate::loader::neighbor_loader::epoch_seed_batches`]), so while the
+//! workers sample/assemble batch k, a [`MountPrefetcher`] can already
+//! warm the shared [`crate::persist::RowCache`] / [`crate::persist::AdjCache`]
+//! with batch k+1's seed feature rows and seed in-edge lists. Warming
+//! goes **straight to the owning shard files** — it bypasses the
+//! routers, halo caches and simulated RPC latency, moves no traffic
+//! counter, and consumes no RNG — so a prefetching pipeline yields
+//! byte-identical batches to a non-prefetching one (pinned by
+//! `tests/test_prefetch_pipeline.rs`); only the cache's prefetch
+//! hit/wasted counters and the disk-read ledgers observe it.
+//!
+//! Warm jobs run on a dedicated single-worker [`ThreadPool`] (distinct
+//! from the loader's sampling workers, so warming never steals a compute
+//! slot) and are **best-effort**: I/O errors are counted, not raised —
+//! the demand path is where reads must fail loudly.
+
+use super::feature_store::PartitionedFeatureStore;
+use super::graph_store::PartitionedGraphStore;
+use crate::graph::EdgeType;
+use crate::persist::AdjBuf;
+use crate::storage::GraphStore;
+use crate::util::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counters of one prefetcher: batches scheduled and warm jobs that hit
+/// an I/O error (and were dropped — warming is best-effort).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    pub scheduled: u64,
+    pub failed: u64,
+}
+
+/// Speculative warmer for one mounted pipeline's caches.
+///
+/// Holds the pipeline's stores and a fixed seed node type; each
+/// [`MountPrefetcher::schedule`] call enqueues one background job that
+/// warms that batch's seed rows ([`PartitionedFeatureStore::prefetch_rows`])
+/// and seed in-edge lists
+/// ([`super::EdgeShards::prefetch_in_lists`] of every edge type whose
+/// destination is the seed type — the lists hop 1 reads first). On
+/// resident (non-paged) stores every warm is a no-op, so wiring a
+/// prefetcher unconditionally is safe.
+pub struct MountPrefetcher {
+    graph: Arc<PartitionedGraphStore>,
+    features: Arc<PartitionedFeatureStore>,
+    seed_type: String,
+    /// Edge types expanded from seed-type frontiers (dst == seed type);
+    /// the homogeneous single-edge-type case always qualifies.
+    warm_edges: Vec<EdgeType>,
+    pool: ThreadPool,
+    scheduled: AtomicU64,
+    failed: Arc<AtomicU64>,
+}
+
+impl MountPrefetcher {
+    /// Warm-job queue depth: deep enough that an epoch's schedule calls
+    /// (one per batch, issued at most one batch ahead) never block the
+    /// loader worker behind a slow disk.
+    const QUEUE_DEPTH: usize = 256;
+
+    /// Build a prefetcher for the pipeline over `graph` + `features`
+    /// seeded at `seed_type` nodes (the homogeneous pipelines pass the
+    /// bundle's `_default` type).
+    pub fn new(
+        graph: Arc<PartitionedGraphStore>,
+        features: Arc<PartitionedFeatureStore>,
+        seed_type: &str,
+    ) -> Self {
+        let all = graph.edge_types();
+        let warm_edges = if all.len() == 1 {
+            all
+        } else {
+            all.into_iter().filter(|et| et.dst == seed_type).collect()
+        };
+        Self {
+            graph,
+            features,
+            seed_type: seed_type.to_string(),
+            warm_edges,
+            pool: ThreadPool::with_queue_capacity(1, Self::QUEUE_DEPTH),
+            scheduled: AtomicU64::new(0),
+            failed: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Enqueue one background warm job for a batch's `seeds`. Returns
+    /// immediately (blocking only if [`MountPrefetcher::QUEUE_DEPTH`]
+    /// jobs are already queued); the job's I/O errors are counted in
+    /// [`PrefetchStats::failed`] rather than surfaced.
+    pub fn schedule(&self, seeds: &[u32]) {
+        if seeds.is_empty() {
+            return;
+        }
+        self.scheduled.fetch_add(1, Ordering::Relaxed);
+        let graph = Arc::clone(&self.graph);
+        let features = Arc::clone(&self.features);
+        let failed = Arc::clone(&self.failed);
+        let seed_type = self.seed_type.clone();
+        let warm_edges = self.warm_edges.clone();
+        let seeds = seeds.to_vec();
+        self.pool.submit(move || {
+            let mut ok = features.prefetch_rows(&seed_type, &seeds).is_ok();
+            let mut buf = AdjBuf::default();
+            for et in &warm_edges {
+                ok &= graph
+                    .edges_of(et)
+                    .and_then(|es| es.prefetch_in_lists(&seeds, &mut buf))
+                    .is_ok();
+            }
+            if !ok {
+                failed.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+
+    /// Block until every scheduled warm job has run — tests and epoch
+    /// teardown; the hot path never waits on warming.
+    pub fn drain(&self) {
+        self.pool.wait_idle();
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        PrefetchStats {
+            scheduled: self.scheduled.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sbm::{self, SbmConfig};
+    use crate::partition::ldg_partition;
+    use crate::persist::{write_bundle, LruConfig};
+
+    #[test]
+    fn warming_is_invisible_to_routers_and_counts_into_prefetch_stats() {
+        let dir = std::env::temp_dir().join("pyg2_prefetch_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = sbm::generate(&SbmConfig { num_nodes: 200, seed: 9, ..Default::default() })
+            .unwrap();
+        let p = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+        let bundle = write_bundle(&dir, &g, &p).unwrap();
+
+        let lru = LruConfig { capacity_bytes: 1 << 20, ..Default::default() };
+        let features = Arc::new(PartitionedFeatureStore::mount(&bundle, 0, lru).unwrap());
+        let graph = Arc::new(
+            PartitionedGraphStore::mount_paged(
+                &bundle,
+                0,
+                Arc::new(crate::persist::AdjCache::new(1 << 20)),
+            )
+            .unwrap(),
+        );
+        let pf = MountPrefetcher::new(Arc::clone(&graph), Arc::clone(&features), "_default");
+
+        let seeds: Vec<u32> = (0..40).collect();
+        pf.schedule(&seeds);
+        pf.schedule(&[]); // empty batches are not scheduled
+        pf.drain();
+        assert_eq!(pf.stats(), PrefetchStats { scheduled: 1, failed: 0 });
+
+        // No router traffic, no demand hits/misses — only prefetch
+        // residency and early disk reads.
+        assert_eq!(features.typed_router().stats().total_msgs(), 0);
+        assert_eq!(graph.typed_router().stats().total_msgs(), 0);
+        let rs = features.row_cache_stats().unwrap();
+        assert_eq!((rs.hits, rs.misses), (0, 0), "row warming is not demand traffic");
+        let asr = graph.adj_cache_stats().unwrap();
+        assert_eq!((asr.hits, asr.misses), (0, 0), "adj warming is not demand traffic");
+        assert!(features.disk_reads().unwrap() > 0);
+        assert!(graph.adj_disk_reads().unwrap() > 0);
+
+        // Out-of-range ids are skipped, not errors (speculative warming).
+        pf.schedule(&[5, 1_000_000]);
+        pf.drain();
+        assert_eq!(pf.stats(), PrefetchStats { scheduled: 2, failed: 0 });
+    }
+}

@@ -213,7 +213,7 @@ impl<G: GraphStore + 'static, F: FeatureStore + 'static> HeteroNeighborLoader<G,
             self.cfg.num_workers,
             self.cfg.prefetch,
             epoch,
-            move |seeds, batch_seed| {
+            move |_i, seeds, batch_seed| {
                 sampler
                     .sample(&seed_type, &seeds, None, batch_seed)
                     .and_then(|sub| {

@@ -75,8 +75,11 @@ pub(crate) fn batch_seed(epoch: u64, i: usize) -> u64 {
 /// in-order iterator over the produced items — the single submission-side
 /// implementation behind every loader variant (homogeneous /
 /// heterogeneous, local / distributed). `job` runs on a worker per
-/// batch, receiving `(seeds, batch_seed)`; delivery order, prefetch
-/// backpressure and clean early-drop shutdown come from [`OrderedIter`].
+/// batch, receiving `(batch_index, seeds, batch_seed)` — the index is
+/// how the mounted loaders look one batch ahead and hand batch `i+1`'s
+/// seeds to a [`crate::dist::MountPrefetcher`] while batch `i` computes;
+/// delivery order, prefetch backpressure and clean early-drop shutdown
+/// come from [`OrderedIter`].
 pub(crate) fn spawn_ordered<T, F>(
     batches: Vec<Vec<u32>>,
     num_workers: usize,
@@ -86,7 +89,7 @@ pub(crate) fn spawn_ordered<T, F>(
 ) -> OrderedIter<T>
 where
     T: Send + 'static,
-    F: Fn(Vec<u32>, u64) -> Result<T> + Send + Sync + 'static,
+    F: Fn(usize, Vec<u32>, u64) -> Result<T> + Send + Sync + 'static,
 {
     let total = batches.len();
     let queue: Arc<BoundedQueue<Result<(usize, T)>>> = BoundedQueue::new(prefetch.max(1));
@@ -97,7 +100,7 @@ where
         let queue = Arc::clone(&queue);
         let seed = batch_seed(epoch, i);
         pool.submit(move || {
-            let result = job(seeds, seed).map(|b| (i, b));
+            let result = job(i, seeds, seed).map(|b| (i, b));
             // Receiver may have been dropped; ignore send failures.
             let _ = queue.send(result);
         });
@@ -182,7 +185,7 @@ impl<G: GraphStore + 'static, F: FeatureStore + 'static> NeighborLoader<G, F> {
             self.cfg.num_workers,
             self.cfg.prefetch,
             epoch,
-            move |seeds, batch_seed| {
+            move |_i, seeds, batch_seed| {
                 sampler.sample(&seeds, batch_seed).and_then(|sub| {
                     Batch::assemble(
                         sub,

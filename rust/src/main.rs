@@ -191,14 +191,17 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
     let batch = args.get_usize("batch", 64);
     let workers = args.get_usize("workers", 2);
     let epochs = args.get_usize("epochs", 1);
+    let mount = pyg2::cli::MountOpts::from_args(args).map_err(pyg2::error::Error::Config)?;
     let opts = pyg2::coordinator::DistOptions {
         halo_cache: args.get_bool("halo-cache"),
         async_fetch: args.get_bool("async"),
         async_workers: args.get_usize("async-workers", 0),
         latency: std::time::Duration::from_micros(args.get_usize("latency-us", 0) as u64),
+        prefetch: mount.prefetch,
+        io_backend: mount.io_backend,
     };
-    if let Some(dir) = args.get("mount") {
-        return cmd_dist_mounted(args, dir, batch, workers, epochs, opts);
+    if mount.mounted() {
+        return cmd_dist_mounted(args, &mount, batch, workers, epochs, opts);
     }
     if args.get_bool("hetero") {
         return cmd_dist_hetero(args, parts, batch, workers, epochs, opts);
@@ -289,29 +292,28 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
 /// simulation over homogeneous bundles.
 fn cmd_dist_mounted(
     args: &Args,
-    dir: &str,
+    mount: &pyg2::cli::MountOpts,
     batch: usize,
     workers: usize,
     epochs: usize,
     opts: pyg2::coordinator::DistOptions,
 ) -> pyg2::Result<()> {
+    let dir = mount.dir.as_deref().expect("cmd_dist_mounted called with --mount");
     let bundle = pyg2::persist::Bundle::open(dir)?;
-    let rank = args.get_usize("rank", 0) as u32;
-    let lru = pyg2::persist::LruConfig {
-        capacity_bytes: args.get_usize("cache-mb", 64) as u64 * 1024 * 1024,
-        page_adjacency: args.get_bool("page-adj"),
-        adj_capacity_bytes: args.get_usize("adj-cache-mb", 0) as u64 * 1024 * 1024,
-    };
+    let rank = mount.rank;
+    let lru = mount.lru();
     log::info!(
         "mounted bundle {dir}: {} partitions, {} node types, {} edge types, \
-         cache budget {} bytes ({} rows / {} adjacency{})",
+         cache budget {} bytes ({} rows / {} adjacency{}), {} backend{}",
         bundle.num_parts(),
         bundle.manifest().node_types.len(),
         bundle.manifest().edge_types.len(),
         lru.capacity_bytes,
         lru.row_budget(),
         lru.adj_budget(),
-        if lru.page_adjacency { ", adjacency demand-paged" } else { "" }
+        if lru.page_adjacency { ", adjacency demand-paged" } else { "" },
+        mount.io_backend,
+        if mount.prefetch { ", pipeline prefetch" } else { "" }
     );
 
     if let Some(ranks) = args.get("ranks") {
@@ -350,6 +352,12 @@ fn cmd_dist_mounted(
             }
             if let Some(h) = &report.halo[r] {
                 println!("rank {r} halo cache: {h}");
+            }
+            if let Some(pf) = &report.prefetch[r] {
+                println!(
+                    "rank {r} prefetch: {} batches warmed, {} failed",
+                    pf.scheduled, pf.failed
+                );
             }
         }
         return Ok(());
@@ -393,6 +401,7 @@ fn cmd_dist_mounted(
             println!("{nt} halo cache: {stats}");
         }
         print_mount_io(loader.features(), loader.graph());
+        print_prefetch(loader.prefetch_stats());
     } else {
         let n = bundle.node_type(pyg2::storage::DEFAULT_GROUP)?.num_nodes;
         let cfg = pyg2::loader::LoaderConfig {
@@ -426,8 +435,17 @@ fn cmd_dist_mounted(
             println!("halo cache: {cache}");
         }
         print_mount_io(loader.features(), loader.graph());
+        print_prefetch(loader.prefetch_stats());
     }
     Ok(())
+}
+
+/// Pipeline-prefetch counters (installed by `--prefetch`), with the
+/// row/adjacency cache provenance that tells how much warming paid off.
+fn print_prefetch(stats: Option<pyg2::dist::PrefetchStats>) {
+    if let Some(pf) = stats {
+        println!("prefetch: {} batches warmed, {} failed", pf.scheduled, pf.failed);
+    }
 }
 
 /// Shared mount I/O report: the row-cache / adjacency-cache split of
@@ -465,31 +483,30 @@ fn cmd_serve_dist(args: &Args) -> pyg2::Result<()> {
     use std::sync::Arc;
     use std::time::Duration;
 
+    let mount = pyg2::cli::MountOpts::from_args(args).map_err(pyg2::error::Error::Config)?;
     let opts = pyg2::coordinator::DistOptions {
         halo_cache: args.get_bool("halo-cache"),
         async_fetch: args.get_bool("async"),
         async_workers: args.get_usize("async-workers", 0),
         latency: Duration::from_micros(args.get_usize("latency-us", 0) as u64),
+        prefetch: mount.prefetch,
+        io_backend: mount.io_backend,
     };
     let cfg = ServeDistConfig {
         max_batch: args.get_usize("max-batch", 16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
         workers: args.get_usize("workers", 2),
+        prefetch: mount.prefetch,
         ..Default::default()
     };
 
     // Assemble the stores + labels from either backing; the server is
     // oblivious to which one it got.
-    let (gs, fs, labels, num_nodes) = if let Some(dir) = args.get("mount") {
+    let (gs, fs, labels, num_nodes) = if let Some(dir) = mount.dir.as_deref() {
         let bundle = pyg2::persist::Bundle::open(dir)?;
-        let rank = args.get_usize("rank", 0) as u32;
-        let lru = pyg2::persist::LruConfig {
-            capacity_bytes: args.get_usize("cache-mb", 64) as u64 * 1024 * 1024,
-            page_adjacency: args.get_bool("page-adj"),
-            adj_capacity_bytes: args.get_usize("adj-cache-mb", 0) as u64 * 1024 * 1024,
-        };
         let n = bundle.node_type(pyg2::storage::DEFAULT_GROUP)?.num_nodes;
-        let (gs, fs, labels) = pyg2::coordinator::mounted_stores(&bundle, rank, opts, lru)?;
+        let (gs, fs, labels) =
+            pyg2::coordinator::mounted_stores(&bundle, mount.rank, opts, mount.lru())?;
         let labels = labels.ok_or_else(|| {
             pyg2::error::Error::Config(format!(
                 "bundle {dir} has no labels; serve-dist fits its classifier from them"
@@ -558,6 +575,7 @@ fn cmd_serve_dist(args: &Args) -> pyg2::Result<()> {
         gs.typed_router().stats_with(fs.typed_router())
     );
     print_mount_io(&fs, &gs);
+    print_prefetch(server.prefetch_stats());
     Ok(())
 }
 

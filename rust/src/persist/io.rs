@@ -20,9 +20,11 @@
 
 use crate::error::{Error, Result};
 use crate::graph::Compressed;
+use crate::storage::pread_raw;
 use std::fs::File;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const U32_MAGIC: &[u8; 8] = b"PYGU32A1";
 const I64_MAGIC: &[u8; 8] = b"PYGI64A1";
@@ -54,6 +56,252 @@ impl Fnv1a {
 
     pub(crate) fn finish(&self) -> u64 {
         self.0
+    }
+}
+
+/// One segment of a batched positioned read: fill `buf` from byte
+/// `offset` of the source.
+pub struct IoSeg<'a> {
+    pub offset: u64,
+    pub buf: &'a mut [u8],
+}
+
+/// How a read-only, checksum-validated shard issues positioned I/O —
+/// the single seam every demand-paged reader
+/// ([`crate::persist::PagedFeatureStore`] /
+/// [`crate::persist::PagedAdjacency`] / [`crate::persist::PagedEdgeTime`])
+/// reads through, so the pread-vs-mmap choice is one swappable
+/// implementation and coalesced runs within one shard touch can go down
+/// as one batched submission.
+pub trait PageSource: Send + Sync {
+    /// Read exactly `buf.len()` bytes at `offset`.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// One batched submission of several positioned segments. The
+    /// default serves each segment with [`PageSource::read_at`];
+    /// implementations with cheaper per-segment cost (mmap: a memcpy,
+    /// no syscall) inherit it for free.
+    fn read_batch(&self, segs: &mut [IoSeg<'_>]) -> Result<()> {
+        for seg in segs {
+            self.read_at(seg.offset, seg.buf)?;
+        }
+        Ok(())
+    }
+
+    /// Total byte length of the backing file.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The backing file's path (error messages).
+    fn path(&self) -> &Path;
+}
+
+/// Which [`PageSource`] implementation a mount issues its demand-paged
+/// reads through (`--io-backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IoBackend {
+    /// Positioned `pread` syscalls (lock-free on Unix). The default:
+    /// works everywhere, never faults, and the kernel page cache still
+    /// absorbs re-reads.
+    #[default]
+    Pread,
+    /// Map the whole shard read-only and serve reads as memcpys — no
+    /// per-miss syscall. Only for shards that are immutable while
+    /// mounted: the open-time checksum validates the bytes once, but a
+    /// file truncated *after* mapping faults instead of erroring.
+    Mmap,
+}
+
+impl IoBackend {
+    /// Parse a `--io-backend` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pread" => Ok(Self::Pread),
+            "mmap" => Ok(Self::Mmap),
+            other => Err(Error::Config(format!(
+                "unknown io backend {other:?} (expected pread or mmap)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for IoBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Pread => "pread",
+            Self::Mmap => "mmap",
+        })
+    }
+}
+
+/// The default [`PageSource`]: positioned `pread`s against an open file
+/// (a seek-lock fallback keeps non-Unix hosts correct).
+pub struct PreadSource {
+    file: File,
+    path: PathBuf,
+    len: u64,
+    #[cfg(not(unix))]
+    seek_lock: std::sync::Mutex<()>,
+}
+
+impl PreadSource {
+    /// Wrap an already-open (and already-validated) file handle. The
+    /// file cursor is not used — positioned reads only.
+    pub fn new(file: File, path: PathBuf) -> Result<Self> {
+        let len = file.metadata()?.len();
+        Ok(Self {
+            file,
+            path,
+            len,
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+        })
+    }
+}
+
+impl PageSource for PreadSource {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        #[cfg(unix)]
+        {
+            pread_raw(&self.file, offset, buf)
+        }
+        #[cfg(not(unix))]
+        {
+            let _guard = self.seek_lock.lock().unwrap();
+            pread_raw(&self.file, offset, buf)
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(unix)]
+mod mmap_sys {
+    use std::ffi::c_void;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+    /// Identical on Linux and the BSDs/macOS.
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+}
+
+/// Read-only `mmap` [`PageSource`]: the whole shard is mapped private
+/// and every read is a bounds-checked memcpy. See [`IoBackend::Mmap`]
+/// for the immutability caveat.
+#[cfg(unix)]
+pub struct MmapSource {
+    ptr: *const u8,
+    len: usize,
+    path: PathBuf,
+    /// Held so the descriptor outlives the mapping (not strictly
+    /// required by POSIX, but keeps `/proc` maps attributable).
+    _file: File,
+}
+
+// The mapping is immutable after construction; concurrent reads of the
+// mapped bytes are safe.
+#[cfg(unix)]
+unsafe impl Send for MmapSource {}
+#[cfg(unix)]
+unsafe impl Sync for MmapSource {}
+
+#[cfg(unix)]
+impl MmapSource {
+    pub fn new(file: File, path: PathBuf) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            // mmap(len=0) is EINVAL; an empty source serves no reads.
+            return Ok(Self { ptr: std::ptr::null(), len: 0, path, _file: file });
+        }
+        let ptr = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mmap_sys::PROT_READ,
+                mmap_sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(bad(&path, "mmap failed"));
+        }
+        Ok(Self { ptr: ptr as *const u8, len, path, _file: file })
+    }
+
+    fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            unsafe {
+                mmap_sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl PageSource for MmapSource {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let end = offset as usize + buf.len();
+        if end > self.len {
+            return Err(bad(
+                &self.path,
+                &format!("read of {end} bytes past the {}-byte mapping", self.len),
+            ));
+        }
+        buf.copy_from_slice(&self.bytes()[offset as usize..end]);
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.len as u64
+    }
+
+    fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Wrap an already-open, already-validated shard file in the chosen
+/// [`PageSource`] backend.
+pub fn page_source(file: File, path: PathBuf, backend: IoBackend) -> Result<Arc<dyn PageSource>> {
+    match backend {
+        IoBackend::Pread => Ok(Arc::new(PreadSource::new(file, path)?)),
+        #[cfg(unix)]
+        IoBackend::Mmap => Ok(Arc::new(MmapSource::new(file, path)?)),
+        #[cfg(not(unix))]
+        IoBackend::Mmap => Err(Error::Config(
+            "the mmap io backend is only available on Unix hosts".into(),
+        )),
     }
 }
 
@@ -505,6 +753,43 @@ mod tests {
         evil[56..64].copy_from_slice(&hash.finish().to_le_bytes());
         std::fs::write(&p, &evil).unwrap();
         assert!(read_adjacency_shard(&p, STAMP, 2, 3, 3).is_err());
+    }
+
+    #[test]
+    fn page_source_backends_read_identically() {
+        let p = tmp("src.u32");
+        write_u32_array(&p, &(0..100u32).collect::<Vec<_>>()).unwrap();
+        let expect = std::fs::read(&p).unwrap();
+        let mut backends = vec![IoBackend::Pread];
+        if cfg!(unix) {
+            backends.push(IoBackend::Mmap);
+        }
+        for backend in backends {
+            let src = page_source(File::open(&p).unwrap(), p.clone(), backend).unwrap();
+            assert_eq!(src.len(), expect.len() as u64, "{backend}");
+            assert!(!src.is_empty());
+            let mut buf = vec![0u8; 40];
+            src.read_at(16, &mut buf).unwrap();
+            assert_eq!(&buf[..], &expect[16..56], "{backend}");
+            // Batched segments land exactly like single reads.
+            let mut a = [0u8; 8];
+            let mut b = [0u8; 12];
+            let mut segs = [
+                IoSeg { offset: 0, buf: &mut a },
+                IoSeg { offset: 100, buf: &mut b },
+            ];
+            src.read_batch(&mut segs).unwrap();
+            assert_eq!(&a[..], &expect[..8], "{backend}");
+            assert_eq!(&b[..], &expect[100..112], "{backend}");
+            // Reads past EOF error on every backend, never fault.
+            let mut big = vec![0u8; expect.len() + 1];
+            assert!(src.read_at(0, &mut big).is_err(), "{backend}");
+            assert!(src.read_at(src.len() - 1, &mut [0u8; 2]).is_err(), "{backend}");
+        }
+        assert_eq!(IoBackend::parse("pread").unwrap(), IoBackend::Pread);
+        assert_eq!(IoBackend::parse("mmap").unwrap(), IoBackend::Mmap);
+        assert!(IoBackend::parse("uring").is_err());
+        assert_eq!(IoBackend::default(), IoBackend::Pread);
     }
 
     #[test]

@@ -35,6 +35,12 @@ use std::sync::Mutex;
 /// Sentinel for "no slot" in the intrusive list.
 const NIL: usize = usize::MAX;
 
+/// Upper bound on the paged-file ids one [`AdjCache`] hands out via
+/// [`AdjCache::reserve_ids`]. Cache keys pack the file id into the high
+/// bits above a 2-bit direction tag and a 32-bit vertex/block index
+/// (`id << 34 | tag << 32 | index`), leaving 30 bits for the id.
+pub const MAX_ADJ_IDS: u64 = 1 << 30;
+
 /// Budget charge of one entry. Zero-length payloads (empty neighbor
 /// lists) are charged one word so they stay evictable and the index
 /// they occupy cannot grow unbounded under the byte budget; everything
@@ -148,6 +154,12 @@ pub struct RowCacheStats {
     pub entries: u64,
     /// The configured budget.
     pub capacity_bytes: u64,
+    /// Hits served from an entry the prefetcher warmed (counted once
+    /// per warmed entry: the tag clears on first touch).
+    pub prefetch_hits: u64,
+    /// Prefetched entries evicted before the hot path ever touched
+    /// them — reads the pipeline paid for and nobody consumed.
+    pub prefetch_wasted: u64,
 }
 
 impl RowCacheStats {
@@ -180,7 +192,15 @@ impl std::fmt::Display for RowCacheStats {
             self.peak_bytes,
             self.capacity_bytes,
             self.evictions
-        )
+        )?;
+        if self.prefetch_hits > 0 || self.prefetch_wasted > 0 {
+            write!(
+                f,
+                ", prefetch {} hit / {} wasted",
+                self.prefetch_hits, self.prefetch_wasted
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -240,6 +260,10 @@ struct Entry {
     /// Payload as raw 32-bit words (f32 bit patterns for rows, u32 ids
     /// for adjacency blocks). Bytes charged: `4 * len`.
     data: Box<[u32]>,
+    /// Set when the prefetcher inserted this entry and the hot path has
+    /// not touched it yet; cleared on first hit (counted as a prefetch
+    /// hit) or eviction (counted as a wasted prefetch read).
+    prefetched: bool,
 }
 
 struct Inner {
@@ -253,6 +277,8 @@ struct Inner {
     bytes: u64,
     peak_bytes: u64,
     evictions: u64,
+    prefetch_hits: u64,
+    prefetch_wasted: u64,
 }
 
 impl Inner {
@@ -266,6 +292,8 @@ impl Inner {
             bytes: 0,
             peak_bytes: 0,
             evictions: 0,
+            prefetch_hits: 0,
+            prefetch_wasted: 0,
         }
     }
 
@@ -299,12 +327,17 @@ impl Inner {
         let i = self.tail;
         debug_assert_ne!(i, NIL, "evict on an empty stripe");
         self.detach(i);
+        let wasted = self.entries[i].prefetched;
         let e = &mut self.entries[i];
         self.bytes -= charge(e.data.len());
         self.map.remove(&e.key);
         e.data = Box::new([]);
+        e.prefetched = false;
         self.free.push(i);
         self.evictions += 1;
+        if wasted {
+            self.prefetch_wasted += 1;
+        }
     }
 }
 
@@ -357,11 +390,22 @@ impl LruCore {
             return None;
         };
         let out = f(&inner.entries[slot].data);
+        if inner.entries[slot].prefetched {
+            inner.entries[slot].prefetched = false;
+            inner.prefetch_hits += 1;
+        }
         inner.detach(slot);
         inner.push_front(slot);
         drop(inner);
         self.hits.fetch_add(1, Ordering::Relaxed);
         Some(out)
+    }
+
+    /// Whether `key` is resident right now, without counting a hit or
+    /// miss, promoting the entry, or clearing its prefetch tag — the
+    /// prefetcher's probe before paying for a disk read.
+    fn contains(&self, key: u64) -> bool {
+        self.stripe(key).inner.lock().unwrap().map.contains_key(&key)
     }
 
     /// Insert a payload just read from disk, evicting cold entries from
@@ -370,7 +414,7 @@ impl LruCore {
     /// already present (a racing reader beat us) is promoted instead of
     /// duplicated. Charges follow [`charge`]: empty payloads cost one
     /// word, so even a flood of empty neighbor lists stays bounded.
-    fn insert_words(&self, key: u64, words: Box<[u32]>) {
+    fn insert_words(&self, key: u64, words: Box<[u32]>, prefetched: bool) {
         let bytes = charge(words.len());
         let stripe = self.stripe(key);
         if bytes > stripe.capacity {
@@ -378,6 +422,8 @@ impl LruCore {
         }
         let mut inner = stripe.inner.lock().unwrap();
         if let Some(&slot) = inner.map.get(&key) {
+            // A racing reader beat us: promote, keep the existing tag
+            // (a prefetch landing second must not re-tag a hot entry).
             inner.detach(slot);
             inner.push_front(slot);
             return;
@@ -387,11 +433,13 @@ impl LruCore {
         }
         let slot = match inner.free.pop() {
             Some(i) => {
-                inner.entries[i] = Entry { key, prev: NIL, next: NIL, data: words };
+                inner.entries[i] = Entry { key, prev: NIL, next: NIL, data: words, prefetched };
                 i
             }
             None => {
-                inner.entries.push(Entry { key, prev: NIL, next: NIL, data: words });
+                inner
+                    .entries
+                    .push(Entry { key, prev: NIL, next: NIL, data: words, prefetched });
                 inner.entries.len() - 1
             }
         };
@@ -414,6 +462,8 @@ impl LruCore {
             stats.bytes_cached += inner.bytes;
             stats.peak_bytes += inner.peak_bytes;
             stats.entries += inner.map.len() as u64;
+            stats.prefetch_hits += inner.prefetch_hits;
+            stats.prefetch_wasted += inner.prefetch_wasted;
         }
         stats
     }
@@ -423,6 +473,8 @@ impl LruCore {
             let mut inner = stripe.inner.lock().unwrap();
             inner.evictions = 0;
             inner.peak_bytes = inner.bytes;
+            inner.prefetch_hits = 0;
+            inner.prefetch_wasted = 0;
         }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
@@ -472,7 +524,22 @@ impl RowCache {
     /// for the eviction contract).
     pub fn insert(&self, key: u64, row: &[f32]) {
         self.core
-            .insert_words(key, row.iter().map(|v| v.to_bits()).collect());
+            .insert_words(key, row.iter().map(|v| v.to_bits()).collect(), false);
+    }
+
+    /// Insert a row the pipeline prefetcher read speculatively. Tagged
+    /// so [`RowCacheStats::prefetch_hits`] / `prefetch_wasted` can
+    /// report whether the speculation paid off.
+    pub fn insert_prefetched(&self, key: u64, row: &[f32]) {
+        self.core
+            .insert_words(key, row.iter().map(|v| v.to_bits()).collect(), true);
+    }
+
+    /// Residency probe: no hit/miss accounting, no promotion. Lets the
+    /// prefetcher skip keys the hot path (or an earlier prefetch)
+    /// already paid for.
+    pub fn contains(&self, key: u64) -> bool {
+        self.core.contains(key)
     }
 
     /// Current counters, aggregated over stripes.
@@ -496,11 +563,40 @@ impl RowCache {
 /// (i64 timestamps stored as lo/hi halves).
 pub struct AdjCache {
     core: LruCore,
+    /// Next unreserved paged-file id (see [`AdjCache::reserve_ids`]).
+    next_id: AtomicU64,
 }
 
 impl AdjCache {
     pub fn new(capacity_bytes: u64) -> Self {
-        Self { core: LruCore::new(capacity_bytes) }
+        Self { core: LruCore::new(capacity_bytes), next_id: AtomicU64::new(0) }
+    }
+
+    /// Reserve `n` contiguous paged-file ids for key packing and return
+    /// the base of the range. Every [`crate::persist::PagedAdjacency`] /
+    /// [`crate::persist::PagedEdgeTime`] sharing this cache gets its own
+    /// id, so their packed keys can never collide. Errors once the
+    /// 30-bit id space ([`MAX_ADJ_IDS`]) would be exceeded.
+    pub fn reserve_ids(&self, n: u32) -> crate::error::Result<u32> {
+        let mut cur = self.next_id.load(Ordering::Relaxed);
+        loop {
+            let end = cur + n as u64;
+            if end > MAX_ADJ_IDS {
+                return Err(crate::error::Error::Config(format!(
+                    "adjacency cache id space exhausted: {n} ids requested with {cur} \
+                     already reserved (max {MAX_ADJ_IDS})"
+                )));
+            }
+            match self.next_id.compare_exchange_weak(
+                cur,
+                end,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(cur as u32),
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// The configured byte budget (this cache's share).
@@ -516,7 +612,19 @@ impl AdjCache {
 
     /// Insert a block just read from disk.
     pub fn insert(&self, key: u64, words: &[u32]) {
-        self.core.insert_words(key, words.into());
+        self.core.insert_words(key, words.into(), false);
+    }
+
+    /// Insert a block the pipeline prefetcher read speculatively (see
+    /// [`RowCache::insert_prefetched`]).
+    pub fn insert_prefetched(&self, key: u64, words: &[u32]) {
+        self.core.insert_words(key, words.into(), true);
+    }
+
+    /// Residency probe without accounting or promotion (see
+    /// [`RowCache::contains`]).
+    pub fn contains(&self, key: u64) -> bool {
+        self.core.contains(key)
     }
 
     /// Current counters, aggregated over stripes.
@@ -726,6 +834,32 @@ mod tests {
         let ignored =
             LruConfig { capacity_bytes: 1000, page_adjacency: false, adj_capacity_bytes: 100 };
         assert!(ignored.validate().is_err(), "adjacency share without paging is a misconfig");
+    }
+
+    #[test]
+    fn prefetch_tags_count_hits_and_waste() {
+        let c = cache(24); // room for three 2-f32 rows
+        c.insert_prefetched(0, &[0.0, 0.0]);
+        let mut buf = [0.0f32; 2];
+        assert!(c.try_copy(0, &mut buf)); // first touch: a prefetch hit
+        assert!(c.try_copy(0, &mut buf)); // tag cleared: plain hit only
+        c.insert_prefetched(1, &[1.0, 0.0]);
+        // Overflow so untouched prefetched row 1 is evicted (row 0 was
+        // consumed first — its eviction is not waste).
+        c.insert(2, &[2.0, 0.0]);
+        c.insert(3, &[3.0, 0.0]);
+        c.insert(4, &[4.0, 0.0]);
+        let s = c.stats();
+        assert_eq!(s.prefetch_hits, 1, "{s}");
+        assert_eq!(s.prefetch_wasted, 1, "{s}");
+        assert!(s.to_string().contains("prefetch"), "{s}");
+        // The residency probe changes no counters.
+        assert!(c.contains(4));
+        assert!(!c.contains(0));
+        assert_eq!(c.stats(), s);
+        c.reset_stats();
+        let z = c.stats();
+        assert_eq!((z.prefetch_hits, z.prefetch_wasted), (0, 0));
     }
 
     #[test]

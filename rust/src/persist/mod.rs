@@ -28,12 +28,17 @@
 //!   [`crate::storage::FeatureStore`] trait, demand-paging rows through
 //!   the shared cache with O(batch) memory.
 //! * [`PagedAdjacency`] / [`PagedEdgeTime`] — the topology
-//!   counterparts: `.pyga` CSC/CSR shards served by positioned
-//!   `indptr`-pair and `indices`/`perm`-run reads (run-coalesced), plus
-//!   block-paged edge timestamps, so `pyg2 dist --mount DIR --page-adj`
-//!   keeps O(batch) memory for *both* features and topology. Shards are
-//!   identity-stamped and payload-checksummed: corruption fails at open
-//!   or first touch, never as silent wrong neighbors.
+//!   counterparts: `.pyga` CSC/CSR shards with resident `indptr` and
+//!   positioned `indices`/`perm`-run reads (run-coalesced, batched when
+//!   split), plus block-paged edge timestamps, so
+//!   `pyg2 dist --mount DIR --page-adj` keeps O(batch) memory for
+//!   *both* features and topology. Shards are identity-stamped and
+//!   payload-checksummed: corruption fails at open or first touch,
+//!   never as silent wrong neighbors.
+//! * [`PageSource`] / [`IoBackend`] — the single positioned-I/O seam
+//!   every paged reader issues reads through: `pread` syscalls by
+//!   default, or a read-only `mmap` of the checksum-validated shard
+//!   (`--io-backend mmap`), with coalesced runs submitted as one batch.
 //!
 //! The mount constructors live on the stores they produce —
 //! [`crate::dist::PartitionedFeatureStore::mount`] and
@@ -56,6 +61,6 @@ pub mod lru;
 pub mod paged;
 
 pub use bundle::{write_bundle, write_bundle_hetero, Bundle, EdgeTypeMeta, Manifest, NodeTypeMeta};
-pub use io::AdjStamp;
+pub use io::{page_source, AdjStamp, IoBackend, IoSeg, PageSource, PreadSource};
 pub use lru::{AdjCache, LruConfig, MountCacheStats, RowCache, RowCacheStats};
 pub use paged::{AdjBuf, PagedAdjacency, PagedEdgeTime, PagedFeatureStore};

@@ -11,20 +11,27 @@
 //!   budget bounding total residency across *all* shards of the mount.
 //! * [`PagedAdjacency`] — one on-disk `.pyga` adjacency shard, the
 //!   topology counterpart: a neighbor list is either copied out of the
-//!   [`AdjCache`] or assembled from positioned reads — one `pread` for
-//!   the `indptr` pair, then the `indices` and `perm` runs (coalesced
-//!   into a single read when the gap between them is small) — validated
+//!   [`AdjCache`] or assembled from positioned reads. The tiny `indptr`
+//!   arrays are kept resident (captured during the open-time checksum
+//!   pass), so a miss costs only the `indices` and `perm` runs —
+//!   coalesced into a single read when the gap between them is small,
+//!   issued as one batched two-segment submission otherwise — validated
 //!   against the type-level bounds on every touch, then inserted. The
 //!   whole payload is checksum-verified at open with one streaming
 //!   pass, so corrupt shards fail before any list is served.
+//!
+//! All positioned reads flow through the [`PageSource`] seam
+//! (`--io-backend`: pread syscalls or a read-only mmap), and both
+//! caches accept prefetch-tagged inserts from the pipeline prefetcher
+//! (`warm_row` / `warm_in`) whose payoff the cache stats report.
 //! * [`PagedEdgeTime`] — block-paged edge timestamps (`adj/<et>.time`),
 //!   resolving per-candidate times for paged temporal sampling through
 //!   the same [`AdjCache`] budget.
 
-use super::io::{self, AdjLayout, AdjStamp};
+use super::io::{self, AdjLayout, AdjStamp, IoBackend, IoSeg, PageSource};
 use super::lru::{AdjCache, MAX_ADJ_IDS, RowCache};
 use crate::error::{Error, Result};
-use crate::storage::{pread_raw, FeatureKey, FeatureStore, FileFeatureStore};
+use crate::storage::{FeatureKey, FeatureStore, FileFeatureStore};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -83,6 +90,29 @@ impl PagedFeatureStore {
     /// The underlying shard file (disk-read counters live there).
     pub fn file(&self) -> &Arc<FileFeatureStore> {
         &self.file
+    }
+
+    /// Speculatively warm `row` of `key`'s group: if it is not
+    /// resident, read it and insert it prefetch-tagged (see
+    /// [`RowCache::insert_prefetched`]). The residency probe touches no
+    /// hit/miss counters, and the whole call touches no RNG — the
+    /// pipeline prefetcher may warm any upcoming seed's row without
+    /// perturbing the batch stream. `scratch` is reused across calls.
+    pub fn warm_row(&self, key: &FeatureKey, row: usize, scratch: &mut Vec<f32>) -> Result<()> {
+        let group = self.group_id(key)?;
+        let k = self.cache_key(group, row);
+        if self.cache.contains(k) {
+            return Ok(());
+        }
+        if row >= self.file.num_rows(key)? {
+            return Err(Error::Storage(format!("row {row} out of range")));
+        }
+        let cols = self.file.feature_dim(key)?;
+        scratch.clear();
+        scratch.resize(cols, 0.0);
+        self.file.read_rows_into(key, row, scratch)?;
+        self.cache.insert_prefetched(k, scratch);
+        Ok(())
     }
 
     fn cache_key(&self, group: u8, row: usize) -> u64 {
@@ -214,32 +244,42 @@ const COALESCE_GAP_BYTES: usize = 4096;
 /// Timestamps are paged in blocks of this many edges (4 KiB of i64s).
 const TIME_BLOCK: usize = 512;
 
-/// Positioned-read file handle shared by the paged adjacency readers:
-/// lock-free `pread` on Unix, a seek lock elsewhere, with a read
-/// counter for the demand-paged path.
+/// Counted positioned-read handle shared by the paged adjacency
+/// readers: every byte flows through one swappable [`PageSource`]
+/// (pread or mmap — the mount's `--io-backend`), with a read-segment
+/// ledger for the demand-paged path. Prefetch warms issue their reads
+/// through the same ledger: a read is a read, wherever it was
+/// triggered — the prefetch hit/wasted counters in the caches report
+/// whether speculative reads paid off.
 struct PagedFile {
-    file: File,
-    path: PathBuf,
+    src: Arc<dyn PageSource>,
     reads: AtomicU64,
-    #[cfg(not(unix))]
-    seek_lock: std::sync::Mutex<()>,
 }
 
 impl PagedFile {
-    fn new(file: File, path: PathBuf) -> Self {
-        Self {
-            file,
-            path,
-            reads: AtomicU64::new(0),
-            #[cfg(not(unix))]
-            seek_lock: std::sync::Mutex::new(()),
-        }
+    fn new(src: Arc<dyn PageSource>) -> Self {
+        Self { src, reads: AtomicU64::new(0) }
+    }
+
+    fn path(&self) -> &Path {
+        self.src.path()
     }
 
     /// One positioned read, counted (the demand-paging hot path).
     fn pread(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
-        self.pread_uncounted(offset, buf)?;
+        self.src.read_at(offset, buf)?;
         self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// One batched submission of several segments; each segment counts
+    /// on the read ledger (the ledger tracks how much positioned I/O
+    /// the epoch demanded, not how many syscalls a backend happened to
+    /// spend on it — keeping pread and mmap series comparable).
+    fn pread_batch(&self, segs: &mut [IoSeg<'_>]) -> Result<()> {
+        let n = segs.len() as u64;
+        self.src.read_batch(segs)?;
+        self.reads.fetch_add(n, Ordering::Relaxed);
         Ok(())
     }
 
@@ -247,15 +287,7 @@ impl PagedFile {
     /// open-time validation and setup streaming (halo computation) use
     /// this so the counters report epoch costs only.
     fn pread_uncounted(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
-        #[cfg(unix)]
-        {
-            pread_raw(&self.file, offset, buf)
-        }
-        #[cfg(not(unix))]
-        {
-            let _guard = self.seek_lock.lock().unwrap();
-            pread_raw(&self.file, offset, buf)
-        }
+        self.src.read_at(offset, buf)
     }
 }
 
@@ -324,12 +356,19 @@ pub struct PagedAdjacency {
     num_edges: usize,
     shard_id: u32,
     cache: Arc<AdjCache>,
+    /// Resident CSC/CSR `indptr` arrays, captured during the open-time
+    /// checksum pass. They cost `(n_dst + n_src + 2) * 8` bytes — tiny
+    /// next to the indices/perm payload the cache budget governs — and
+    /// turn every neighbor-list miss from an indptr pread plus data
+    /// reads into the data reads alone (ROADMAP's "indptr residency").
+    csc_indptr: Vec<u64>,
+    csr_indptr: Vec<u64>,
 }
 
 impl PagedAdjacency {
-    /// Open and validate one shard file for positioned reads. `stamp`
-    /// is the bundle slot being mounted; `shard_id` must be unique
-    /// among every reader sharing `cache`.
+    /// Open and validate one shard file for positioned reads with the
+    /// default pread backend. `stamp` is the bundle slot being mounted;
+    /// `shard_id` must be unique among every reader sharing `cache`.
     pub fn open(
         path: impl AsRef<Path>,
         stamp: AdjStamp,
@@ -338,6 +377,22 @@ impl PagedAdjacency {
         num_edges: usize,
         shard_id: u32,
         cache: Arc<AdjCache>,
+    ) -> Result<Self> {
+        Self::open_with(path, stamp, n_src, n_dst, num_edges, shard_id, cache, IoBackend::Pread)
+    }
+
+    /// [`PagedAdjacency::open`] with an explicit [`IoBackend`] for the
+    /// demand-paged reads (`--io-backend`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_with(
+        path: impl AsRef<Path>,
+        stamp: AdjStamp,
+        n_src: usize,
+        n_dst: usize,
+        num_edges: usize,
+        shard_id: u32,
+        cache: Arc<AdjCache>,
+        backend: IoBackend,
     ) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         if shard_id as u64 >= MAX_ADJ_IDS {
@@ -351,25 +406,55 @@ impl PagedAdjacency {
         // O(1) memory, so any payload corruption — including bit flips
         // that would still be bounds-valid — fails at open, matching
         // the resident reader's every-byte-flip guarantee without
-        // decoding the shard into RAM.
+        // decoding the shard into RAM. The same pass captures the two
+        // indptr arrays for residency, so they cost no extra read.
+        let csc_span = (layout.csc_indptr_off() - io::ADJ_HEADER_BYTES, (n_dst + 1) * 8);
+        let csr_span = (layout.csr_indptr_off() - io::ADJ_HEADER_BYTES, (n_src + 1) * 8);
+        let mut csc_bytes = vec![0u8; csc_span.1];
+        let mut csr_bytes = vec![0u8; csr_span.1];
         let mut hash = io::Fnv1a::new();
         let mut remaining = layout.file_len - io::ADJ_HEADER_BYTES;
+        let mut pos = 0u64;
         let mut chunk = vec![0u8; 1 << 20];
         while remaining > 0 {
             let take = (remaining as usize).min(chunk.len());
             file.read_exact(&mut chunk[..take])?;
             hash.update(&chunk[..take]);
+            capture_span(csc_span.0, &mut csc_bytes, pos, &chunk[..take]);
+            capture_span(csr_span.0, &mut csr_bytes, pos, &chunk[..take]);
+            pos += take as u64;
             remaining -= take as u64;
         }
         if hash.finish() != layout.payload_hash {
             return Err(io::bad(&path, "payload checksum mismatch"));
         }
+        let decode = |bytes: &[u8]| -> Vec<u64> {
+            bytes
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        let csc_indptr = decode(&csc_bytes);
+        let csr_indptr = decode(&csr_bytes);
+        for (name, ip, nnz) in [
+            ("csc", &csc_indptr, layout.csc_nnz),
+            ("csr", &csr_indptr, layout.csr_nnz),
+        ] {
+            if ip.first() != Some(&0)
+                || ip.last() != Some(&(nnz as u64))
+                || ip.windows(2).any(|w| w[0] > w[1])
+            {
+                return Err(io::bad(&path, &format!("{name} indptr does not span 0..{nnz}")));
+            }
+        }
         Ok(Self {
-            file: PagedFile::new(file, path),
+            file: PagedFile::new(io::page_source(file, path, backend)?),
             layout,
             num_edges,
             shard_id,
             cache,
+            csc_indptr,
+            csr_indptr,
         })
     }
 
@@ -421,6 +506,14 @@ impl PagedAdjacency {
         ((self.shard_id as u64) << 34) | ((dir as u64) << 32) | v as u64
     }
 
+    /// The resident indptr array of one half.
+    fn indptr(&self, dir: Dir) -> &[u64] {
+        match dir {
+            Dir::In => &self.csc_indptr,
+            Dir::Out => &self.csr_indptr,
+        }
+    }
+
     /// In-neighbors of dst node `v`: fill `buf` with the
     /// `[src ids.. edge ids..]` block, either from the cache or via
     /// positioned reads (see [`PagedAdjacency::list`]).
@@ -433,16 +526,36 @@ impl PagedAdjacency {
         self.list(Dir::Out, v, buf)
     }
 
+    /// Speculatively warm the in-list of `v`: if it is not resident,
+    /// read it and insert it prefetch-tagged, so the cache's prefetch
+    /// hit/wasted counters report whether the speculation paid off.
+    /// Touches no hit/miss counters and — critically — no RNG: the
+    /// prefetcher may call this for any upcoming seed without
+    /// perturbing the batch stream.
+    pub fn warm_in(&self, v: u32, buf: &mut AdjBuf) -> Result<()> {
+        self.fetch(Dir::In, v, buf, true)
+    }
+
     fn list(&self, dir: Dir, v: u32, buf: &mut AdjBuf) -> Result<()> {
-        let (n_keyed, n_other, nnz, indptr_off, indices_off, perm_off) = self.half(dir);
+        self.fetch(dir, v, buf, false)
+    }
+
+    fn fetch(&self, dir: Dir, v: u32, buf: &mut AdjBuf, prefetch: bool) -> Result<()> {
+        let (n_keyed, n_other, nnz, _, indices_off, perm_off) = self.half(dir);
         if v as usize >= n_keyed {
             return Err(Error::Storage(format!(
                 "{}: node {v} out of the shard's {n_keyed}-node id space",
-                self.file.path.display()
+                self.file.path().display()
             )));
         }
         let key = self.key(dir, v);
-        if self
+        if prefetch {
+            // Probe without accounting: a resident list needs no warm,
+            // and the probe must not pollute the hot path's hit rate.
+            if self.cache.contains(key) {
+                return Ok(());
+            }
+        } else if self
             .cache
             .with(key, |words| {
                 buf.block.clear();
@@ -453,17 +566,17 @@ impl PagedAdjacency {
             return Ok(());
         }
 
-        // Miss: one pread for the indptr pair, then the indices and
-        // perm runs — coalesced into a single read when the gap between
-        // them is small (for d edges the runs sit (nnz - d) * 4 bytes
-        // apart in the file).
-        let mut pair = [0u8; 16];
-        self.file.pread(indptr_off + v as u64 * 8, &mut pair)?;
-        let lo = u64::from_le_bytes(pair[..8].try_into().unwrap()) as usize;
-        let hi = u64::from_le_bytes(pair[8..].try_into().unwrap()) as usize;
+        // Miss. The indptr pair is resident (captured at open), so the
+        // miss costs only the data reads: the indices and perm runs —
+        // one coalesced read when the file gap between them is small
+        // (for d edges the runs sit (nnz - d) * 4 bytes apart), one
+        // batched two-segment submission otherwise. Empty lists cost no
+        // read at all.
+        let ip = self.indptr(dir);
+        let (lo, hi) = (ip[v as usize] as usize, ip[v as usize + 1] as usize);
         if lo > hi || hi > nnz {
             return Err(io::bad(
-                &self.file.path,
+                self.file.path(),
                 &format!("indptr of node {v} out of bounds ({lo}..{hi} of {nnz})"),
             ));
         }
@@ -482,28 +595,36 @@ impl PagedAdjacency {
                 decode_u32s(&buf.bytes[tail], &mut buf.block[d..]);
             } else {
                 buf.bytes.clear();
-                buf.bytes.resize(d * 4, 0);
-                self.file.pread(indices_off + lo as u64 * 4, &mut buf.bytes)?;
-                decode_u32s(&buf.bytes, &mut buf.block[..d]);
-                self.file.pread(perm_off + lo as u64 * 4, &mut buf.bytes)?;
-                decode_u32s(&buf.bytes, &mut buf.block[d..]);
+                buf.bytes.resize(2 * d * 4, 0);
+                let (ib, pb) = buf.bytes.split_at_mut(d * 4);
+                let mut segs = [
+                    IoSeg { offset: indices_off + lo as u64 * 4, buf: ib },
+                    IoSeg { offset: perm_off + lo as u64 * 4, buf: pb },
+                ];
+                self.file.pread_batch(&mut segs)?;
+                decode_u32s(&buf.bytes[..d * 4], &mut buf.block[..d]);
+                decode_u32s(&buf.bytes[d * 4..], &mut buf.block[d..]);
             }
             // First-touch bounds validation: neighbor ids must fit the
             // other side's id space, edge ids the type's edge count.
             if buf.block[..d].iter().any(|&n| n as usize >= n_other) {
                 return Err(io::bad(
-                    &self.file.path,
+                    self.file.path(),
                     &format!("neighbor id of node {v} out of range ({n_other} nodes)"),
                 ));
             }
             if buf.block[d..].iter().any(|&e| e as usize >= self.num_edges) {
                 return Err(io::bad(
-                    &self.file.path,
+                    self.file.path(),
                     &format!("edge id of node {v} out of range ({} edges)", self.num_edges),
                 ));
             }
         }
-        self.cache.insert(key, &buf.block);
+        if prefetch {
+            self.cache.insert_prefetched(key, &buf.block);
+        } else {
+            self.cache.insert(key, &buf.block);
+        }
         Ok(())
     }
 
@@ -519,44 +640,29 @@ impl PagedAdjacency {
         mut f: impl FnMut(u32, &[u32]),
     ) -> Result<()> {
         let dir = if out_edges { Dir::Out } else { Dir::In };
-        let (n_keyed, n_other, nnz, indptr_off, indices_off, _) = self.half(dir);
+        let (n_keyed, n_other, _, _, indices_off, _) = self.half(dir);
+        let ip = self.indptr(dir);
         const NODES_PER_CHUNK: usize = 4096;
-        let mut indptr_bytes = Vec::new();
         let mut indices_bytes = Vec::new();
         let mut nbrs = Vec::new();
         let mut start = 0usize;
         while start < n_keyed {
             let end = (start + NODES_PER_CHUNK).min(n_keyed);
-            indptr_bytes.clear();
-            indptr_bytes.resize((end - start + 1) * 8, 0);
-            self.file
-                .pread_uncounted(indptr_off + start as u64 * 8, &mut indptr_bytes)?;
-            let ptr: Vec<usize> = indptr_bytes
-                .chunks_exact(8)
-                .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-                .collect();
-            let (lo, hi) = (ptr[0], ptr[end - start]);
-            // The same bounds the demand-paged reads enforce: a chunk
-            // end beyond the header's nnz (a post-open forge) must not
-            // size an allocation or spill the read into the perm
-            // region.
-            if lo > hi || hi > nnz {
-                return Err(io::bad(&self.file.path, "indptr out of bounds"));
-            }
+            // The indptr is resident (validated monotone at open); only
+            // the indices run of the chunk is read from disk.
+            let (lo, hi) = (ip[start] as usize, ip[end] as usize);
             indices_bytes.clear();
             indices_bytes.resize((hi - lo) * 4, 0);
             self.file
                 .pread_uncounted(indices_off + lo as u64 * 4, &mut indices_bytes)?;
-            for (i, w) in ptr.windows(2).enumerate() {
-                if w[0] > w[1] || w[1] > hi {
-                    return Err(io::bad(&self.file.path, "indptr is not monotone"));
-                }
+            for i in 0..end - start {
+                let (a, b) = (ip[start + i] as usize, ip[start + i + 1] as usize);
                 nbrs.clear();
-                nbrs.resize(w[1] - w[0], 0);
-                decode_u32s(&indices_bytes[(w[0] - lo) * 4..(w[1] - lo) * 4], &mut nbrs);
+                nbrs.resize(b - a, 0);
+                decode_u32s(&indices_bytes[(a - lo) * 4..(b - lo) * 4], &mut nbrs);
                 if nbrs.iter().any(|&n| n as usize >= n_other) {
                     return Err(io::bad(
-                        &self.file.path,
+                        self.file.path(),
                         &format!(
                             "neighbor id of node {} out of range ({n_other} nodes)",
                             start + i
@@ -570,64 +676,110 @@ impl PagedAdjacency {
         Ok(())
     }
 
-    /// Open-time structural validation of one half's `indptr`: streamed
-    /// in chunks (O(chunk) memory), it must start at 0, be monotone,
-    /// end at the header's nnz, and only give edges to nodes `owner`
-    /// assigns to this shard's partition — so a structurally valid
-    /// shard from a *different* partitioning (a cross-bundle re-point)
-    /// fails at open, not with silently wrong neighbors.
+    /// [`PagedAdjacency::stream`] also carrying each list's type-global
+    /// edge ids — the reconstruction path behind the paged mount's
+    /// explicit `materialize_global()` escape hatch, which needs the COO
+    /// back in edge-id order. Reads stay chunked and uncounted; edge ids
+    /// are bounds-checked against the type's edge count like the
+    /// demand-paged reads.
+    pub(crate) fn stream_with_eids(
+        &self,
+        out_edges: bool,
+        mut f: impl FnMut(u32, &[u32], &[u32]),
+    ) -> Result<()> {
+        let dir = if out_edges { Dir::Out } else { Dir::In };
+        let (n_keyed, n_other, _, _, indices_off, perm_off) = self.half(dir);
+        let ip = self.indptr(dir);
+        const NODES_PER_CHUNK: usize = 4096;
+        let mut indices_bytes = Vec::new();
+        let mut perm_bytes = Vec::new();
+        let mut nbrs = Vec::new();
+        let mut eids = Vec::new();
+        let mut start = 0usize;
+        while start < n_keyed {
+            let end = (start + NODES_PER_CHUNK).min(n_keyed);
+            let (lo, hi) = (ip[start] as usize, ip[end] as usize);
+            indices_bytes.clear();
+            indices_bytes.resize((hi - lo) * 4, 0);
+            self.file
+                .pread_uncounted(indices_off + lo as u64 * 4, &mut indices_bytes)?;
+            perm_bytes.clear();
+            perm_bytes.resize((hi - lo) * 4, 0);
+            self.file
+                .pread_uncounted(perm_off + lo as u64 * 4, &mut perm_bytes)?;
+            for i in 0..end - start {
+                let (a, b) = (ip[start + i] as usize, ip[start + i + 1] as usize);
+                nbrs.clear();
+                nbrs.resize(b - a, 0);
+                decode_u32s(&indices_bytes[(a - lo) * 4..(b - lo) * 4], &mut nbrs);
+                eids.clear();
+                eids.resize(b - a, 0);
+                decode_u32s(&perm_bytes[(a - lo) * 4..(b - lo) * 4], &mut eids);
+                if nbrs.iter().any(|&n| n as usize >= n_other) {
+                    return Err(io::bad(
+                        self.file.path(),
+                        &format!(
+                            "neighbor id of node {} out of range ({n_other} nodes)",
+                            start + i
+                        ),
+                    ));
+                }
+                if eids.iter().any(|&e| e as usize >= self.num_edges) {
+                    return Err(io::bad(
+                        self.file.path(),
+                        &format!(
+                            "edge id of node {} out of range ({} edges)",
+                            start + i,
+                            self.num_edges
+                        ),
+                    ));
+                }
+                f((start + i) as u32, &nbrs, &eids);
+            }
+            start = end;
+        }
+        Ok(())
+    }
+
+    /// Open-time structural validation of one half's `indptr` — now a
+    /// walk of the resident array (monotonicity and span were already
+    /// checked when it was captured at open): every node with edges
+    /// must be one `owner` assigns to this shard's partition, so a
+    /// structurally valid shard from a *different* partitioning (a
+    /// cross-bundle re-point) fails at open, not with silently wrong
+    /// neighbors.
     pub(crate) fn validate_indptr(
         &self,
         out_edges: bool,
         owner: &dyn Fn(u32) -> u32,
     ) -> Result<()> {
         let dir = if out_edges { Dir::Out } else { Dir::In };
-        let (n_keyed, _, nnz, indptr_off, _, _) = self.half(dir);
         let part = self.layout.stamp.partition as u32;
-        const CHUNK: usize = 8192;
-        let mut bytes = Vec::new();
-        let mut prev = 0usize;
-        let mut start = 0usize;
-        while start <= n_keyed {
-            let end = (start + CHUNK).min(n_keyed + 1);
-            bytes.clear();
-            bytes.resize((end - start) * 8, 0);
-            self.file
-                .pread_uncounted(indptr_off + start as u64 * 8, &mut bytes)?;
-            for (i, c) in bytes.chunks_exact(8).enumerate() {
-                let cur = u64::from_le_bytes(c.try_into().unwrap()) as usize;
-                let node = start + i;
-                if node == 0 {
-                    if cur != 0 {
-                        return Err(io::bad(&self.file.path, "indptr does not start at 0"));
-                    }
-                } else {
-                    if cur < prev || cur > nnz {
-                        return Err(io::bad(&self.file.path, "indptr is not monotone"));
-                    }
-                    if cur > prev && owner((node - 1) as u32) != part {
-                        return Err(io::bad(
-                            &self.file.path,
-                            &format!(
-                                "shard of partition {part} holds edges of node {}, owned by \
-                                 partition {}",
-                                node - 1,
-                                owner((node - 1) as u32)
-                            ),
-                        ));
-                    }
-                }
-                prev = cur;
+        for (node, w) in self.indptr(dir).windows(2).enumerate() {
+            if w[1] > w[0] && owner(node as u32) != part {
+                return Err(io::bad(
+                    self.file.path(),
+                    &format!(
+                        "shard of partition {part} holds edges of node {node}, owned by \
+                         partition {}",
+                        owner(node as u32)
+                    ),
+                ));
             }
-            start = end;
-        }
-        if prev != nnz {
-            return Err(io::bad(
-                &self.file.path,
-                &format!("indptr ends at {prev}, header claims {nnz} edges"),
-            ));
         }
         Ok(())
+    }
+}
+
+/// Copy the overlap of streaming-pass chunk `[pos, pos + chunk.len())`
+/// into the captured span starting at payload offset `span_off` —
+/// chunk boundaries may split a span (or even one u64) arbitrarily.
+fn capture_span(span_off: u64, span: &mut [u8], pos: u64, chunk: &[u8]) {
+    let start = pos.max(span_off);
+    let end = (pos + chunk.len() as u64).min(span_off + span.len() as u64);
+    if start < end {
+        span[(start - span_off) as usize..(end - span_off) as usize]
+            .copy_from_slice(&chunk[(start - pos) as usize..(end - pos) as usize]);
     }
 }
 
@@ -651,12 +803,23 @@ pub struct PagedEdgeTime {
 
 impl PagedEdgeTime {
     /// Open and validate (magic, exact size, count == `num_edges`)
-    /// without reading the payload.
+    /// without reading the payload, with the default pread backend.
     pub fn open(
         path: impl AsRef<Path>,
         num_edges: usize,
         file_id: u32,
         cache: Arc<AdjCache>,
+    ) -> Result<Self> {
+        Self::open_with(path, num_edges, file_id, cache, IoBackend::Pread)
+    }
+
+    /// [`PagedEdgeTime::open`] with an explicit [`IoBackend`].
+    pub fn open_with(
+        path: impl AsRef<Path>,
+        num_edges: usize,
+        file_id: u32,
+        cache: Arc<AdjCache>,
+        backend: IoBackend,
     ) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         if file_id as u64 >= MAX_ADJ_IDS {
@@ -671,7 +834,12 @@ impl PagedEdgeTime {
                 &format!("time file holds {count} entries, edge type has {num_edges}"),
             ));
         }
-        Ok(Self { file: PagedFile::new(file, path), num_edges, file_id, cache })
+        Ok(Self {
+            file: PagedFile::new(io::page_source(file, path, backend)?),
+            num_edges,
+            file_id,
+            cache,
+        })
     }
 
     /// Demand-paged positioned reads issued so far (cache misses only).
@@ -715,7 +883,7 @@ impl PagedEdgeTime {
             let e = e as usize;
             if e >= self.num_edges {
                 return Err(io::bad(
-                    &self.file.path,
+                    self.file.path(),
                     &format!("edge id {e} out of range ({} edges)", self.num_edges),
                 ));
             }

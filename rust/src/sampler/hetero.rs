@@ -121,6 +121,27 @@ impl Default for HeteroSamplerConfig {
     }
 }
 
+impl HeteroSamplerConfig {
+    /// Fanout of `et` at `hop` (0 = don't expand this edge type here).
+    pub fn fanout(&self, et: &EdgeType, hop: usize) -> usize {
+        let f = self
+            .fanouts_per_edge_type
+            .get(et)
+            .unwrap_or(&self.default_fanouts);
+        f.get(hop).copied().unwrap_or(0)
+    }
+
+    /// Number of hops: the longest fanout list any edge type uses.
+    pub fn num_hops(&self) -> usize {
+        self.fanouts_per_edge_type
+            .values()
+            .map(|f| f.len())
+            .chain(std::iter::once(self.default_fanouts.len()))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
 /// How one expansion's edge timestamps are provided to
 /// [`filter_pick`]: indexed by **global edge id** (the resident array
 /// every in-memory store holds) or **aligned with the candidate
@@ -194,6 +215,267 @@ pub(crate) fn filter_pick(
         .collect()
 }
 
+/// Where a hetero traversal gets its adjacency from — the seam between
+/// **one** multi-hop expansion loop ([`traverse`]) and its two backings:
+/// the global per-edge-type CSC of any [`GraphStore`] ([`CscSource`])
+/// and the owner-sharded, traffic-accounted reads of
+/// [`crate::dist::PartitionedGraphStore`] (its `ShardSource`). The
+/// provider only answers "what are `dst`'s in-edge candidates" and
+/// observes what was taken; every RNG draw stays inside [`traverse`] /
+/// [`filter_pick`], which is what keeps the two samplers seed-for-seed
+/// interchangeable by construction instead of by parallel maintenance.
+pub(crate) trait AdjacencySource {
+    type Expansion<'s>: EdgeExpansion
+    where
+        Self: 's;
+
+    /// Edge types, in the store's sorted order (drives hop iteration
+    /// order, hence the RNG stream).
+    fn edge_types(&self) -> Vec<EdgeType>;
+
+    /// Per-node timestamps of `node_type`, if temporal.
+    fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>>;
+
+    /// Reject bad seeds up front (the distributed source errors on
+    /// out-of-range ids; the in-memory source keeps its historical
+    /// contract and lets the CSC indexing catch them).
+    fn validate_seeds(&self, seed_type: &str, seeds: &[u32]) -> Result<()>;
+
+    /// Start expanding one `(hop, edge type)`: everything per-edge-type
+    /// state (CSC view, timestamps, shard routing ledgers) lives on the
+    /// returned expansion.
+    fn begin(&self, et: &EdgeType, temporal: bool) -> Result<Self::Expansion<'_>>;
+}
+
+/// One `(hop, edge type)` expansion handed out by an
+/// [`AdjacencySource`].
+pub(crate) trait EdgeExpansion {
+    /// `dst`'s candidate in-neighbors: `(src ids, edge ids, timestamp
+    /// view)`, bit-identical across sources for the same store content.
+    /// May account the access (shard-touched ledgers) — called exactly
+    /// once per frontier node, picked or not.
+    fn candidates(&mut self, dst: u32) -> Result<(&[u32], &[u32], Option<EdgeTimeView<'_>>)>;
+
+    /// `picked` edges were kept from the last `candidates(dst)` slice
+    /// (only called when non-zero) — payload accounting.
+    fn took(&mut self, dst: u32, picked: usize);
+
+    /// The `(hop, edge type)` loop is done: flush accounting (one local
+    /// message + one coalesced RPC per remote partition touched, on the
+    /// distributed source).
+    fn finish(&mut self);
+}
+
+/// [`AdjacencySource`] over any [`GraphStore`]'s global CSC views — the
+/// in-memory backing of [`HeteroNeighborSampler`].
+pub(crate) struct CscSource<'g, G: GraphStore + ?Sized>(pub &'g G);
+
+pub(crate) struct CscExpansion {
+    csc: Arc<crate::graph::Compressed>,
+    edge_time: Option<Arc<Vec<i64>>>,
+}
+
+impl<G: GraphStore + ?Sized> AdjacencySource for CscSource<'_, G> {
+    type Expansion<'s>
+        = CscExpansion
+    where
+        Self: 's;
+
+    fn edge_types(&self) -> Vec<EdgeType> {
+        self.0.edge_types()
+    }
+
+    fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>> {
+        self.0.node_time(node_type)
+    }
+
+    fn validate_seeds(&self, _seed_type: &str, _seeds: &[u32]) -> Result<()> {
+        Ok(())
+    }
+
+    fn begin(&self, et: &EdgeType, _temporal: bool) -> Result<CscExpansion> {
+        Ok(CscExpansion { csc: self.0.csc(et)?, edge_time: self.0.edge_time(et)? })
+    }
+}
+
+impl EdgeExpansion for CscExpansion {
+    fn candidates(&mut self, dst: u32) -> Result<(&[u32], &[u32], Option<EdgeTimeView<'_>>)> {
+        let lo = self.csc.indptr[dst as usize];
+        let hi = self.csc.indptr[dst as usize + 1];
+        Ok((
+            &self.csc.indices[lo..hi],
+            &self.csc.perm[lo..hi],
+            self.edge_time.as_ref().map(|t| EdgeTimeView::Global(&t[..])),
+        ))
+    }
+
+    fn took(&mut self, _dst: u32, _picked: usize) {}
+
+    fn finish(&mut self) {}
+}
+
+/// The hetero multi-hop traversal both samplers run: typed frontiers
+/// expanded per edge type per hop over whatever adjacency `source`
+/// provides, with every temporal filter and RNG draw funneled through
+/// [`filter_pick`]. Frontier nodes expand in discovery order, edge
+/// types in their sorted store order — the RNG-consumption contract
+/// `tests/test_dist_hetero_equivalence.rs` pins across backings.
+pub(crate) fn traverse<S: AdjacencySource>(
+    source: &S,
+    cfg: &HeteroSamplerConfig,
+    seed_type: &str,
+    seeds: &[u32],
+    seed_times: Option<&[i64]>,
+    batch_seed: u64,
+) -> Result<HeteroSampledSubgraph> {
+    if let Some(times) = seed_times {
+        if times.len() != seeds.len() {
+            return Err(Error::Sampler("seed_times misaligned".into()));
+        }
+        if !cfg.disjoint {
+            return Err(Error::Sampler(
+                "temporal hetero sampling requires disjoint mode (per-seed timestamps)".into(),
+            ));
+        }
+    }
+    let edge_types = source.edge_types();
+    let mut rng = Rng::new(cfg.seed).fork(batch_seed);
+
+    let mut out = HeteroSampledSubgraph {
+        seed_type: seed_type.to_string(),
+        num_seeds: seeds.len(),
+        ..Default::default()
+    };
+    // Per node type: local assignment keyed by (tree, global id).
+    let mut local: BTreeMap<String, HashMap<(u32, u32), u32>> = BTreeMap::new();
+    let mut batch: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+    // Initialize all node types present in the store.
+    let mut node_types: Vec<String> = Vec::new();
+    for et in &edge_types {
+        for nt in [&et.src, &et.dst] {
+            if !node_types.contains(nt) {
+                node_types.push(nt.clone());
+            }
+        }
+    }
+    if !node_types.contains(&seed_type.to_string()) {
+        return Err(Error::Sampler(format!("seed type {seed_type} not in graph")));
+    }
+    source.validate_seeds(seed_type, seeds)?;
+    for nt in &node_types {
+        out.nodes.insert(nt.clone(), Vec::new());
+        out.node_offsets.insert(nt.clone(), Vec::new());
+        local.insert(nt.clone(), HashMap::default());
+        batch.insert(nt.clone(), Vec::new());
+    }
+    for et in &edge_types {
+        out.edges.insert(et.clone(), HeteroEdges::default());
+    }
+
+    // Seed placement.
+    {
+        let nv = out.nodes.get_mut(seed_type).unwrap();
+        let lv = local.get_mut(seed_type).unwrap();
+        let bv = batch.get_mut(seed_type).unwrap();
+        for (i, &s) in seeds.iter().enumerate() {
+            let tree = if cfg.disjoint { i as u32 } else { 0 };
+            nv.push(s);
+            bv.push(tree);
+            lv.insert((tree, s), i as u32);
+        }
+    }
+    for nt in &node_types {
+        out.node_offsets
+            .get_mut(nt)
+            .unwrap()
+            .push(out.nodes[nt].len());
+    }
+
+    // Typed frontier: node type -> local ids to expand this hop.
+    let mut frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+    frontier.insert(seed_type.to_string(), (0..seeds.len() as u32).collect());
+
+    for hop in 0..cfg.num_hops() {
+        let mut next_frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+        // Expand every edge type whose *destination* type has frontier
+        // nodes (messages flow src -> dst toward the seeds).
+        for et in &edge_types {
+            let Some(front) = frontier.get(&et.dst) else { continue };
+            if front.is_empty() {
+                continue;
+            }
+            let fanout = cfg.fanout(et, hop);
+            if fanout == 0 {
+                continue;
+            }
+            let node_time = source.node_time(&et.src)?;
+            let mut exp = source.begin(et, seed_times.is_some())?;
+
+            for &dst_local in front {
+                let dst_global = out.nodes[&et.dst][dst_local as usize];
+                let tree = batch[&et.dst][dst_local as usize];
+                let t_seed = seed_times.map(|t| t[tree as usize]);
+
+                let (nbrs, eids, etime_view) = exp.candidates(dst_global)?;
+                let picks = filter_pick(
+                    nbrs,
+                    eids,
+                    t_seed,
+                    etime_view,
+                    node_time.as_deref().map(|v| &v[..]),
+                    fanout,
+                    &mut rng,
+                );
+                if picks.is_empty() {
+                    continue;
+                }
+                exp.took(dst_global, picks.len());
+                let nv = out.nodes.get_mut(&et.src).unwrap();
+                let lv = local.get_mut(&et.src).unwrap();
+                let bv = batch.get_mut(&et.src).unwrap();
+                let ev = out.edges.get_mut(et).unwrap();
+                for (nbr, eid) in picks {
+                    let src_local = *lv.entry((tree, nbr)).or_insert_with(|| {
+                        nv.push(nbr);
+                        bv.push(tree);
+                        next_frontier
+                            .entry(et.src.clone())
+                            .or_default()
+                            .push(nv.len() as u32 - 1);
+                        nv.len() as u32 - 1
+                    });
+                    ev.row.push(src_local);
+                    ev.col.push(dst_local);
+                    ev.edge_ids.push(eid);
+                }
+            }
+            exp.finish();
+        }
+        for nt in &node_types {
+            out.node_offsets
+                .get_mut(nt)
+                .unwrap()
+                .push(out.nodes[nt].len());
+        }
+        frontier = next_frontier;
+        if frontier.is_empty() {
+            for nt in &node_types {
+                let off = out.node_offsets.get_mut(nt).unwrap();
+                let last = *off.last().unwrap();
+                while off.len() <= cfg.num_hops() {
+                    off.push(last);
+                }
+            }
+            break;
+        }
+    }
+
+    if cfg.disjoint {
+        out.batch = Some(batch);
+    }
+    Ok(out)
+}
+
 /// Heterogeneous neighbor sampler.
 pub struct HeteroNeighborSampler<G: GraphStore> {
     store: Arc<G>,
@@ -205,28 +487,11 @@ impl<G: GraphStore> HeteroNeighborSampler<G> {
         Self { store, cfg }
     }
 
-    fn fanout(&self, et: &EdgeType, hop: usize) -> usize {
-        let f = self
-            .cfg
-            .fanouts_per_edge_type
-            .get(et)
-            .unwrap_or(&self.cfg.default_fanouts);
-        f.get(hop).copied().unwrap_or(0)
-    }
-
-    fn num_hops(&self) -> usize {
-        self.cfg
-            .fanouts_per_edge_type
-            .values()
-            .map(|f| f.len())
-            .chain(std::iter::once(self.cfg.default_fanouts.len()))
-            .max()
-            .unwrap_or(0)
-    }
-
     /// Sample around seeds of `seed_type`. If `seed_times` is provided the
     /// sampler enforces temporal constraints (requires disjoint mode) and
     /// skips constraints for untimed node/edge types, per the paper.
+    /// Runs the shared [`traverse`] loop over the store's global CSC
+    /// views ([`CscSource`]).
     pub fn sample(
         &self,
         seed_type: &str,
@@ -234,150 +499,14 @@ impl<G: GraphStore> HeteroNeighborSampler<G> {
         seed_times: Option<&[i64]>,
         batch_seed: u64,
     ) -> Result<HeteroSampledSubgraph> {
-        if let Some(times) = seed_times {
-            if times.len() != seeds.len() {
-                return Err(Error::Sampler("seed_times misaligned".into()));
-            }
-            if !self.cfg.disjoint {
-                return Err(Error::Sampler(
-                    "temporal hetero sampling requires disjoint mode (per-seed timestamps)".into(),
-                ));
-            }
-        }
-        let edge_types = self.store.edge_types();
-        let mut rng = Rng::new(self.cfg.seed).fork(batch_seed);
-
-        let mut out = HeteroSampledSubgraph {
-            seed_type: seed_type.to_string(),
-            num_seeds: seeds.len(),
-            ..Default::default()
-        };
-        // Per node type: local assignment keyed by (tree, global id).
-        let mut local: BTreeMap<String, HashMap<(u32, u32), u32>> = BTreeMap::new();
-        let mut batch: BTreeMap<String, Vec<u32>> = BTreeMap::new();
-        // Initialize all node types present in the store.
-        let mut node_types: Vec<String> = Vec::new();
-        for et in &edge_types {
-            for nt in [&et.src, &et.dst] {
-                if !node_types.contains(nt) {
-                    node_types.push(nt.clone());
-                }
-            }
-        }
-        if !node_types.contains(&seed_type.to_string()) {
-            return Err(Error::Sampler(format!("seed type {seed_type} not in graph")));
-        }
-        for nt in &node_types {
-            out.nodes.insert(nt.clone(), Vec::new());
-            out.node_offsets.insert(nt.clone(), Vec::new());
-            local.insert(nt.clone(), HashMap::default());
-            batch.insert(nt.clone(), Vec::new());
-        }
-        for et in &edge_types {
-            out.edges.insert(et.clone(), HeteroEdges::default());
-        }
-
-        // Seed placement.
-        {
-            let nv = out.nodes.get_mut(seed_type).unwrap();
-            let lv = local.get_mut(seed_type).unwrap();
-            let bv = batch.get_mut(seed_type).unwrap();
-            for (i, &s) in seeds.iter().enumerate() {
-                let tree = if self.cfg.disjoint { i as u32 } else { 0 };
-                nv.push(s);
-                bv.push(tree);
-                lv.insert((tree, s), i as u32);
-            }
-        }
-        for nt in &node_types {
-            out.node_offsets
-                .get_mut(nt)
-                .unwrap()
-                .push(out.nodes[nt].len());
-        }
-
-        // Typed frontier: node type -> local ids to expand this hop.
-        let mut frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
-        frontier.insert(seed_type.to_string(), (0..seeds.len() as u32).collect());
-
-        for hop in 0..self.num_hops() {
-            let mut next_frontier: BTreeMap<String, Vec<u32>> = BTreeMap::new();
-            // Expand every edge type whose *destination* type has frontier
-            // nodes (messages flow src -> dst toward the seeds).
-            for et in &edge_types {
-                let Some(front) = frontier.get(&et.dst) else { continue };
-                if front.is_empty() {
-                    continue;
-                }
-                let fanout = self.fanout(et, hop);
-                if fanout == 0 {
-                    continue;
-                }
-                let csc = self.store.csc(et)?;
-                let edge_time = self.store.edge_time(et)?;
-                let node_time = self.store.node_time(&et.src)?;
-
-                for &dst_local in front {
-                    let dst_global = out.nodes[&et.dst][dst_local as usize];
-                    let tree = batch[&et.dst][dst_local as usize];
-                    let t_seed = seed_times.map(|t| t[tree as usize]);
-
-                    let lo = csc.indptr[dst_global as usize];
-                    let hi = csc.indptr[dst_global as usize + 1];
-                    let picks = filter_pick(
-                        &csc.indices[lo..hi],
-                        &csc.perm[lo..hi],
-                        t_seed,
-                        edge_time.as_deref().map(|v| EdgeTimeView::Global(&v[..])),
-                        node_time.as_deref().map(|v| &v[..]),
-                        fanout,
-                        &mut rng,
-                    );
-                    if picks.is_empty() {
-                        continue;
-                    }
-                    let nv = out.nodes.get_mut(&et.src).unwrap();
-                    let lv = local.get_mut(&et.src).unwrap();
-                    let bv = batch.get_mut(&et.src).unwrap();
-                    let ev = out.edges.get_mut(et).unwrap();
-                    for (nbr, eid) in picks {
-                        let src_local = *lv.entry((tree, nbr)).or_insert_with(|| {
-                            nv.push(nbr);
-                            bv.push(tree);
-                            next_frontier
-                                .entry(et.src.clone())
-                                .or_default()
-                                .push(nv.len() as u32 - 1);
-                            nv.len() as u32 - 1
-                        });
-                        ev.row.push(src_local);
-                        ev.col.push(dst_local);
-                        ev.edge_ids.push(eid);
-                    }
-                }
-            }
-            for nt in &node_types {
-                out.node_offsets
-                    .get_mut(nt)
-                    .unwrap()
-                    .push(out.nodes[nt].len());
-            }
-            frontier = next_frontier;
-            if frontier.is_empty() {
-                for nt in &node_types {
-                    let off = out.node_offsets.get_mut(nt).unwrap();
-                    let last = *off.last().unwrap();
-                    while off.len() <= self.num_hops() {
-                        off.push(last);
-                    }
-                }
-                break;
-            }
-        }
-
-        if self.cfg.disjoint {
-            out.batch = Some(batch);
-        }
+        let out = traverse(
+            &CscSource(self.store.as_ref()),
+            &self.cfg,
+            seed_type,
+            seeds,
+            seed_times,
+            batch_seed,
+        )?;
         // Debug builds verify every sampled subgraph on the hot path
         // (release builds skip the scan; the property tests keep it
         // honest there).

@@ -2,12 +2,13 @@
 //!
 //! Features are persisted in a simple binary format (`.pygf`): a JSON
 //! header with group metadata followed by raw little-endian f32 blocks.
-//! Reads use positioned I/O (`pread`-style, one syscall per contiguous
-//! row run), so memory stays O(batch), exactly what a remote backend
-//! needs when the graph's features do not fit in RAM. On Unix the reads
-//! go through `read_exact_at`, so concurrent batch fetches from
-//! different loader workers never serialize on a lock; non-Unix
-//! platforms fall back to a seek lock.
+//! Reads use positioned I/O (one read per contiguous row run, with the
+//! runs of a multi-run fetch submitted as a single batch), so memory
+//! stays O(batch), exactly what a remote backend needs when the graph's
+//! features do not fit in RAM. All reads go through the
+//! [`crate::persist::PageSource`] seam, so the same store can be served
+//! by lock-free `pread` syscalls (the default) or a read-only `mmap` of
+//! the shard ([`FileFeatureStore::open_with`]).
 //!
 //! This is also the shard format of the [`crate::persist`] partition
 //! bundles: every `(node_type, partition)` feature shard of an
@@ -16,6 +17,7 @@
 
 use super::feature_store::{FeatureKey, FeatureStore};
 use crate::error::{Error, Result};
+use crate::persist::{page_source, IoBackend, IoSeg, PageSource};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
@@ -23,6 +25,7 @@ use std::fs::File;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"PYGFEAT1";
 
@@ -93,27 +96,34 @@ fn meta_uint(g: &Json, field: &str) -> Result<u64> {
     json::uint_field(g, field).map_err(|e| Error::Storage(format!("feature header: {e}")))
 }
 
-/// Read-side store. Thread-safe without a shared lock: every read is a
-/// positioned `pread` (Unix `read_exact_at`), so concurrent batch
+/// Read-side store. Thread-safe without a shared lock: every read is
+/// positioned ([`crate::persist::PageSource`]), so concurrent batch
 /// fetches from different threads proceed independently. Disk reads are
 /// counted ([`FileFeatureStore::disk_reads`]) so caches layered on top
 /// (halo replicas, the [`crate::persist::RowCache`]) can prove they
 /// reduce I/O.
 pub struct FileFeatureStore {
-    file: File,
-    #[cfg(not(unix))]
-    seek_lock: std::sync::Mutex<()>,
+    src: Arc<dyn PageSource>,
     data_start: u64,
     groups: BTreeMap<FeatureKey, GroupMeta>,
-    /// Positioned reads issued (one per contiguous row run).
+    /// Positioned reads issued (one per contiguous row run — the ledger
+    /// counts row runs demanded, not syscalls, so pread and mmap
+    /// backings report comparable series).
     reads: AtomicU64,
 }
 
 impl FileFeatureStore {
-    /// Open and validate a `.pygf` file. Truncated headers, a bad magic,
-    /// malformed metadata, and group blocks extending past the end of
-    /// the file are all [`Error`]s — corrupt input must never panic.
+    /// Open and validate a `.pygf` file with the default `pread`
+    /// backend. Truncated headers, a bad magic, malformed metadata, and
+    /// group blocks extending past the end of the file are all
+    /// [`Error`]s — corrupt input must never panic.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(path, IoBackend::default())
+    }
+
+    /// Open with an explicit [`IoBackend`] (`--io-backend`): `pread`
+    /// syscalls, or a read-only `mmap` of the validated file.
+    pub fn open_with(path: impl AsRef<Path>, backend: IoBackend) -> Result<Self> {
         let path = path.as_ref();
         let file = File::open(path)?;
         let file_len = file.metadata()?.len();
@@ -196,9 +206,7 @@ impl FileFeatureStore {
             )));
         }
         Ok(Self {
-            file,
-            #[cfg(not(unix))]
-            seek_lock: std::sync::Mutex::new(()),
+            src: page_source(file, path.to_path_buf(), backend)?,
             data_start,
             groups,
             reads: AtomicU64::new(0),
@@ -228,15 +236,7 @@ impl FileFeatureStore {
 
     /// One positioned read, counted.
     fn pread(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
-        #[cfg(unix)]
-        {
-            pread_raw(&self.file, offset, buf)?;
-        }
-        #[cfg(not(unix))]
-        {
-            let _guard = self.seek_lock.lock().unwrap();
-            pread_raw(&self.file, offset, buf)?;
-        }
+        self.src.read_at(offset, buf)?;
         self.reads.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -304,21 +304,37 @@ impl FileFeatureStore {
 
     /// Fetch `idx` into the first `idx.len()` rows of `out`'s data,
     /// coalescing maximal contiguous index runs (`…, r, r+1, …`) into
-    /// single positioned reads. All indices are validated before the
-    /// first write, so a failed call leaves `out` untouched.
+    /// single positioned segments and submitting all segments of the
+    /// fetch as **one** batched read. All indices are validated before
+    /// the first write, so a failed call leaves `out` untouched. The
+    /// ledger still counts one read per run.
     fn fetch(&self, meta: &GroupMeta, idx: &[usize], out: &mut [f32]) -> Result<()> {
         if let Some(&oor) = idx.iter().find(|&&i| i >= meta.rows) {
             return Err(Error::Storage(format!("row {oor} out of {}", meta.rows)));
         }
         let cols = meta.cols;
+        let mut bytes = vec![0u8; idx.len() * cols * 4];
+        let mut segs = Vec::new();
+        let mut rest = bytes.as_mut_slice();
         let mut k = 0usize;
         while k < idx.len() {
             let mut run = 1usize;
             while k + run < idx.len() && idx[k + run] == idx[k] + run {
                 run += 1;
             }
-            self.read_run(meta, idx[k], &mut out[k * cols..(k + run) * cols])?;
+            let (head, tail) = rest.split_at_mut(run * cols * 4);
+            segs.push(IoSeg {
+                offset: meta.offset + (idx[k] * cols * 4) as u64,
+                buf: head,
+            });
+            rest = tail;
             k += run;
+        }
+        let runs = segs.len() as u64;
+        self.src.read_batch(&mut segs)?;
+        self.reads.fetch_add(runs, Ordering::Relaxed);
+        for (dst, chunk) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(chunk.try_into().unwrap());
         }
         Ok(())
     }
@@ -574,6 +590,25 @@ mod tests {
         out[16..16 + header_len].copy_from_slice(evil.as_bytes());
         std::fs::write(&path, &out).unwrap();
         assert!(FileFeatureStore::open(&path).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_backend_reads_identically() {
+        let path = tmpfile("mmapeq.pygf");
+        let mut w = FileFeatureWriter::new(&path);
+        let data: Vec<f32> = (0..30 * 5).map(|i| i as f32).collect();
+        w.put(FeatureKey::default_x(), Tensor::new(vec![30, 5], data).unwrap());
+        w.finish().unwrap();
+        let pread = FileFeatureStore::open(&path).unwrap();
+        let mmap = FileFeatureStore::open_with(&path, IoBackend::Mmap).unwrap();
+        let idx = [7usize, 8, 9, 2, 29, 0, 1];
+        let a = pread.get(&FeatureKey::default_x(), &idx).unwrap();
+        let b = mmap.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(a.data(), b.data());
+        // The ledger counts row runs demanded, so the backends agree.
+        assert_eq!(pread.disk_reads(), mmap.disk_reads());
+        assert!(mmap.get(&FeatureKey::default_x(), &[30]).is_err());
     }
 
     #[test]

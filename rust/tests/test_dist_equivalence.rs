@@ -143,6 +143,7 @@ fn async_and_halo_cached_pipeline_matches_single_store_loader() {
             async_fetch: true,
             async_workers: 2,
             latency: std::time::Duration::from_micros(20),
+            ..Default::default()
         },
     )
     .unwrap();

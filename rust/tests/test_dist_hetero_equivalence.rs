@@ -199,6 +199,7 @@ fn async_and_typed_halo_cached_pipeline_matches_in_memory_loader() {
             async_fetch: true,
             async_workers: 2,
             latency: std::time::Duration::from_micros(20),
+            ..Default::default()
         },
     )
     .unwrap();

@@ -243,7 +243,7 @@ fn missing_shard_files_are_rejected() {
 // into RAM.
 // ---------------------------------------------------------------------
 
-use pyg2::persist::{AdjBuf, AdjCache};
+use pyg2::persist::{AdjBuf, AdjCache, IoBackend};
 use pyg2::storage::GraphStore;
 use std::sync::Arc;
 
@@ -253,8 +253,19 @@ use std::sync::Arc;
 /// the first-touch validation (indptr pair, id bounds) a corrupt byte
 /// could hide behind.
 fn open_and_mount_paged(dir: &Path) -> pyg2::Result<()> {
+    open_and_mount_paged_via(dir, IoBackend::Pread)
+}
+
+/// [`open_and_mount_paged`] under a chosen positioned-read backend —
+/// `--io-backend mmap` must reject exactly what pread rejects.
+fn open_and_mount_paged_via(dir: &Path, backend: IoBackend) -> pyg2::Result<()> {
     let bundle = Bundle::open(dir)?;
-    let gs = PartitionedGraphStore::mount_paged(&bundle, 0, Arc::new(AdjCache::new(1 << 20)))?;
+    let gs = PartitionedGraphStore::mount_paged_with(
+        &bundle,
+        0,
+        Arc::new(AdjCache::new(1 << 20)),
+        backend,
+    )?;
     let mut buf = AdjBuf::default();
     for et in gs.edge_types() {
         let es = gs.edges_of(&et)?;
@@ -286,7 +297,9 @@ const ADJ_HEADER: usize = 8 + 7 * 8;
 #[test]
 fn pristine_bundle_mounts_paged() {
     let bundle = toy_bundle("paged_pristine");
-    open_and_mount_paged(bundle.dir()).unwrap();
+    for backend in [IoBackend::Pread, IoBackend::Mmap] {
+        open_and_mount_paged_via(bundle.dir(), backend).unwrap();
+    }
 }
 
 #[test]
@@ -325,7 +338,12 @@ fn repointed_adjacency_shards_are_rejected_by_both_mounts() {
     std::fs::write(&a, &bb).unwrap();
     std::fs::write(&b, &ba).unwrap();
     assert!(open_and_mount(bundle.dir()).is_err(), "resident mount must reject the swap");
-    assert!(open_and_mount_paged(bundle.dir()).is_err(), "paged mount must reject the swap");
+    for backend in [IoBackend::Pread, IoBackend::Mmap] {
+        assert!(
+            open_and_mount_paged_via(bundle.dir(), backend).is_err(),
+            "paged mount ({backend}) must reject the swap"
+        );
+    }
     std::fs::write(&a, &ba).unwrap();
     std::fs::write(&b, &bb).unwrap();
     open_and_mount_paged(bundle.dir()).unwrap();
@@ -345,7 +363,9 @@ fn forged_out_of_bounds_indptr_is_rejected_at_paged_open() {
     let hash = fnv1a(&bytes[ADJ_HEADER..]);
     bytes[56..64].copy_from_slice(&hash.to_le_bytes());
     std::fs::write(&shard, &bytes).unwrap();
-    assert!(open_and_mount_paged(bundle.dir()).is_err());
+    for backend in [IoBackend::Pread, IoBackend::Mmap] {
+        assert!(open_and_mount_paged_via(bundle.dir(), backend).is_err(), "{backend}");
+    }
 }
 
 #[test]
@@ -407,20 +427,62 @@ fn wrong_width_files_are_rejected_at_paged_open() {
 #[test]
 fn paged_mount_rejects_missing_and_truncated_adjacency_files() {
     let bundle = toy_bundle("paged_missing");
-    for file in shard_files(bundle.dir()) {
-        if !file.extension().is_some_and(|e| e == "pyga") {
-            continue;
+    for backend in [IoBackend::Pread, IoBackend::Mmap] {
+        for file in shard_files(bundle.dir()) {
+            if !file.extension().is_some_and(|e| e == "pyga") {
+                continue;
+            }
+            let pristine = std::fs::read(&file).unwrap();
+            std::fs::remove_file(&file).unwrap();
+            assert!(
+                open_and_mount_paged_via(bundle.dir(), backend).is_err(),
+                "{} missing ({backend})",
+                file.display()
+            );
+            std::fs::write(&file, &pristine[..pristine.len() - 1]).unwrap();
+            assert!(
+                open_and_mount_paged_via(bundle.dir(), backend).is_err(),
+                "{} truncated ({backend})",
+                file.display()
+            );
+            let mut longer = pristine.clone();
+            longer.push(0);
+            std::fs::write(&file, &longer).unwrap();
+            assert!(
+                open_and_mount_paged_via(bundle.dir(), backend).is_err(),
+                "{} extended ({backend})",
+                file.display()
+            );
+            std::fs::write(&file, &pristine).unwrap();
         }
-        let pristine = std::fs::read(&file).unwrap();
-        std::fs::remove_file(&file).unwrap();
-        assert!(open_and_mount_paged(bundle.dir()).is_err(), "{} missing", file.display());
-        std::fs::write(&file, &pristine[..pristine.len() - 1]).unwrap();
-        assert!(open_and_mount_paged(bundle.dir()).is_err(), "{} truncated", file.display());
-        let mut longer = pristine.clone();
-        longer.push(0);
-        std::fs::write(&file, &longer).unwrap();
-        assert!(open_and_mount_paged(bundle.dir()).is_err(), "{} extended", file.display());
-        std::fs::write(&file, &pristine).unwrap();
+        open_and_mount_paged_via(bundle.dir(), backend).unwrap();
     }
-    open_and_mount_paged(bundle.dir()).unwrap();
+}
+
+#[test]
+fn mmap_backend_rejects_header_flips_and_serves_pristine_lists() {
+    // The mmap backend shares every open-time validator with pread —
+    // spot-check the structural header flips (the cheap, load-bearing
+    // prefix) and the checksum tail under `--io-backend mmap`, then
+    // confirm a pristine mount still serves every neighbor list.
+    let g = sbm::generate(&SbmConfig { num_nodes: 30, seed: 4, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+    let bundle = write_bundle(tmp("mmap_header_flip"), &g, &p).unwrap();
+    let shard = bundle.dir().join("adj/0__default__to___default.p0.pyga");
+    let pristine = std::fs::read(&shard).unwrap();
+    // Every header byte, plus a stride through the payload (the
+    // streaming checksum covers it byte-for-byte).
+    let flips = (0..ADJ_HEADER.min(pristine.len()))
+        .chain((ADJ_HEADER..pristine.len()).step_by(7));
+    for i in flips {
+        let mut evil = pristine.clone();
+        evil[i] ^= 0x01;
+        std::fs::write(&shard, &evil).unwrap();
+        assert!(
+            open_and_mount_paged_via(bundle.dir(), IoBackend::Mmap).is_err(),
+            "mmap mount must reject byte {i} flipped"
+        );
+    }
+    std::fs::write(&shard, &pristine).unwrap();
+    open_and_mount_paged_via(bundle.dir(), IoBackend::Mmap).unwrap();
 }

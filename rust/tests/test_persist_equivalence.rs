@@ -145,6 +145,7 @@ fn mounted_async_halo_cached_pipeline_matches_single_store_loader() {
         async_fetch: true,
         async_workers: 2,
         latency: std::time::Duration::from_micros(20),
+        ..Default::default()
     };
     let mounted =
         mounted_loader(&bundle, 1, seeds, loader_cfg(3), opts, LruConfig::default()).unwrap();
@@ -284,6 +285,7 @@ fn mounted_hetero_async_typed_halo_pipeline_matches_in_memory() {
         async_fetch: true,
         async_workers: 2,
         latency: std::time::Duration::from_micros(20),
+        ..Default::default()
     };
 
     let in_mem =
@@ -517,6 +519,7 @@ fn paged_adjacency_pipeline_matches_in_memory_dist_for_homo_sync_and_async_halo(
                 async_fetch: true,
                 async_workers: 2,
                 latency: std::time::Duration::from_micros(20),
+                ..Default::default()
             },
         ),
     ];
@@ -571,6 +574,7 @@ fn paged_adjacency_hetero_pipeline_matches_in_memory_dist() {
                 async_fetch: true,
                 async_workers: 2,
                 latency: std::time::Duration::from_micros(20),
+                ..Default::default()
             },
         ),
     ];

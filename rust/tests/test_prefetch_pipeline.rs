@@ -1,0 +1,270 @@
+//! Pipeline-prefetch equivalence and I/O-ledger suite.
+//!
+//! Pins the tentpole contracts of the prefetch + batched-I/O work:
+//!
+//! 1. **Prefetch is invisible.** `--prefetch` only warms caches — it
+//!    touches no RNG and no router — so every mounted pipeline leg
+//!    (homogeneous + hetero, sync + async/halo-cached) must yield
+//!    byte-identical batch streams with it on and off.
+//! 2. **Indptr residency bounds reads.** With the tiny indptr arrays
+//!    resident, an adjacency-cache miss costs at most ONE positioned
+//!    read (the neighbor-list payload), never an extra indptr read:
+//!    `adj_disk_reads <= adj misses` on every cold epoch.
+//! 3. **Backends agree.** `--io-backend pread` and `mmap` serve the
+//!    same bytes, hence the same batches.
+
+use pyg2::coordinator::{
+    hetero_mounted_loader, mounted_loader, mounted_stores, multi_rank_epoch_mounted,
+    DistInferenceServer, DistOptions, ServeDistConfig,
+};
+use pyg2::datasets::hetero::{self, HeteroSbmConfig};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::loader::{HeteroLoaderConfig, LoaderConfig};
+use pyg2::nn::NodeClassifier;
+use pyg2::partition::{ldg_partition, TypedPartitioning};
+use pyg2::persist::{write_bundle, write_bundle_hetero, Bundle, IoBackend, LruConfig};
+use pyg2::sampler::{HeteroSamplerConfig, NeighborSamplerConfig};
+use pyg2::storage::FeatureKey;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pyg2_prefetch_pipeline").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A homogeneous 2-partition bundle on disk.
+fn homo_bundle(name: &str) -> Bundle {
+    let g = sbm::generate(&SbmConfig { num_nodes: 240, seed: 5, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, 2, 1.1).unwrap();
+    write_bundle(tmp(name), &g, &p).unwrap()
+}
+
+/// A typed user/item/tag 2-partition bundle on disk.
+fn hetero_bundle(name: &str) -> Bundle {
+    let g = hetero::generate(&HeteroSbmConfig {
+        num_users: 80,
+        num_items: 60,
+        num_tags: 20,
+        seed: 7,
+        ..Default::default()
+    })
+    .unwrap();
+    let tp = TypedPartitioning::ldg_hetero(&g, 2, 1.1).unwrap();
+    write_bundle_hetero(tmp(name), &g, &tp).unwrap()
+}
+
+fn paged_lru() -> LruConfig {
+    LruConfig {
+        capacity_bytes: 1 << 20,
+        page_adjacency: true,
+        adj_capacity_bytes: 0,
+    }
+}
+
+fn loader_cfg() -> LoaderConfig {
+    LoaderConfig {
+        batch_size: 32,
+        num_workers: 2,
+        sampler: NeighborSamplerConfig { fanouts: vec![4, 2], ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The full observable content of one homogeneous batch.
+type HomoKey = (Vec<u32>, Vec<f32>, Vec<i32>);
+
+fn homo_epochs(bundle: &Bundle, opts: DistOptions, epochs: u64) -> (Vec<HomoKey>, Option<pyg2::dist::PrefetchStats>) {
+    let loader =
+        mounted_loader(bundle, 0, (0..240).collect(), loader_cfg(), opts, paged_lru()).unwrap();
+    let mut out = Vec::new();
+    for e in 0..epochs {
+        for b in loader.iter_epoch(e) {
+            let b = b.unwrap();
+            out.push((b.sub.nodes.clone(), b.x.data().to_vec(), b.labels.clone()));
+        }
+    }
+    (out, loader.prefetch_stats())
+}
+
+#[test]
+fn prefetch_on_off_batch_streams_identical_homogeneous() {
+    let bundle = homo_bundle("homo_eq");
+    let legs = [
+        DistOptions::default(),
+        DistOptions {
+            halo_cache: true,
+            async_fetch: true,
+            async_workers: 2,
+            ..Default::default()
+        },
+    ];
+    for (i, base) in legs.into_iter().enumerate() {
+        let (off, off_stats) = homo_epochs(&bundle, base, 2);
+        let (on, on_stats) =
+            homo_epochs(&bundle, DistOptions { prefetch: true, ..base }, 2);
+        assert_eq!(off, on, "leg {i}: prefetch changed batch content");
+        assert!(off_stats.is_none(), "leg {i}: no prefetcher without --prefetch");
+        let on_stats = on_stats.expect("prefetcher installed");
+        // One warm job per batch per epoch: ceil(240/32) = 8, x2 epochs.
+        assert_eq!(on_stats.scheduled, 16, "leg {i}");
+        assert_eq!(on_stats.failed, 0, "leg {i}: warming must never fail");
+    }
+}
+
+/// The full observable content of one hetero batch.
+type HeteroKey = (
+    std::collections::BTreeMap<String, Vec<u32>>,
+    Vec<(String, Vec<u32>, Vec<u32>, Vec<u32>)>,
+    Vec<(String, Vec<f32>)>,
+);
+
+fn hetero_epochs(bundle: &Bundle, opts: DistOptions, epochs: u64) -> (Vec<HeteroKey>, Option<pyg2::dist::PrefetchStats>) {
+    let cfg = HeteroLoaderConfig {
+        batch_size: 16,
+        num_workers: 2,
+        sampler: HeteroSamplerConfig { default_fanouts: vec![3, 2], ..Default::default() },
+        ..Default::default()
+    };
+    let loader =
+        hetero_mounted_loader(bundle, 0, "user", (0..80).collect(), cfg, opts, paged_lru())
+            .unwrap();
+    let mut out = Vec::new();
+    for e in 0..epochs {
+        for b in loader.iter_epoch(e) {
+            let b = b.unwrap();
+            let edges = b
+                .sub
+                .edges
+                .iter()
+                .map(|(et, e)| (et.key(), e.row.clone(), e.col.clone(), e.edge_ids.clone()))
+                .collect();
+            let x = b.x.iter().map(|(nt, t)| (nt.clone(), t.data().to_vec())).collect();
+            out.push((b.sub.nodes.clone(), edges, x));
+        }
+    }
+    (out, loader.prefetch_stats())
+}
+
+#[test]
+fn prefetch_on_off_batch_streams_identical_hetero() {
+    let bundle = hetero_bundle("hetero_eq");
+    let legs = [
+        DistOptions::default(),
+        DistOptions {
+            halo_cache: true,
+            async_fetch: true,
+            async_workers: 2,
+            ..Default::default()
+        },
+    ];
+    for (i, base) in legs.into_iter().enumerate() {
+        let (off, off_stats) = hetero_epochs(&bundle, base, 2);
+        let (on, on_stats) =
+            hetero_epochs(&bundle, DistOptions { prefetch: true, ..base }, 2);
+        assert_eq!(off, on, "leg {i}: prefetch changed hetero batch content");
+        assert!(off_stats.is_none(), "leg {i}");
+        let on_stats = on_stats.expect("prefetcher installed");
+        assert_eq!(on_stats.scheduled, 10, "leg {i}: ceil(80/16) x 2 epochs");
+        assert_eq!(on_stats.failed, 0, "leg {i}");
+    }
+}
+
+#[test]
+fn indptr_residency_bounds_adjacency_reads_by_misses() {
+    let bundle = homo_bundle("residency");
+    let loader = mounted_loader(
+        &bundle,
+        0,
+        (0..240).collect(),
+        loader_cfg(),
+        DistOptions::default(),
+        paged_lru(),
+    )
+    .unwrap();
+    let n: usize = loader.iter_epoch(0).map(|b| b.unwrap().num_real_nodes()).sum();
+    assert!(n > 0);
+    let gs = loader.graph();
+    let stats = gs.adj_cache_stats().expect("paged adjacency");
+    let reads = gs.adj_disk_reads().expect("paged adjacency");
+    assert!(stats.misses > 0, "cold epoch must miss");
+    // Resident indptr: a miss costs at most one coalesced positioned
+    // read — never a second read to locate the list.
+    assert!(
+        reads <= stats.misses,
+        "{reads} disk reads for {} misses: indptr residency lost",
+        stats.misses
+    );
+}
+
+#[test]
+fn pread_and_mmap_backends_serve_identical_batches() {
+    let bundle = homo_bundle("backends");
+    let (pread, _) = homo_epochs(&bundle, DistOptions::default(), 1);
+    let (mmap, _) = homo_epochs(
+        &bundle,
+        DistOptions { io_backend: IoBackend::Mmap, ..Default::default() },
+        1,
+    );
+    assert_eq!(pread, mmap, "io backends must be byte-identical");
+}
+
+#[test]
+fn multi_rank_mounted_reports_prefetch_per_rank() {
+    let bundle = homo_bundle("multi_rank");
+    let run = |prefetch: bool| {
+        multi_rank_epoch_mounted(
+            &bundle,
+            2,
+            &loader_cfg(),
+            DistOptions { prefetch, ..Default::default() },
+            paged_lru(),
+            1,
+        )
+        .unwrap()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.batches, on.batches);
+    assert_eq!(off.sampled_nodes, on.sampled_nodes, "warming changed sampling");
+    assert!(off.prefetch.iter().all(|p| p.is_none()));
+    for (r, p) in on.prefetch.iter().enumerate() {
+        let p = p.as_ref().expect("per-rank prefetch stats");
+        assert!(p.scheduled > 0, "rank {r} scheduled nothing");
+        assert_eq!(p.failed, 0, "rank {r}");
+    }
+}
+
+#[test]
+fn serve_dist_prefetch_leaves_predictions_unchanged() {
+    let bundle = homo_bundle("serve");
+    let predict_all = |prefetch: bool| {
+        let opts = DistOptions { prefetch, ..Default::default() };
+        let (gs, fs, labels) = mounted_stores(&bundle, 0, opts, paged_lru()).unwrap();
+        let labels = labels.expect("SBM bundles carry labels");
+        let classes = (*labels.iter().max().unwrap() + 1) as usize;
+        let model = Arc::new(
+            NodeClassifier::fit(fs.as_ref(), &FeatureKey::default_x(), &labels, classes)
+                .unwrap(),
+        );
+        let server = DistInferenceServer::spawn(
+            gs,
+            fs,
+            model,
+            ServeDistConfig { workers: 2, prefetch, ..Default::default() },
+        )
+        .unwrap();
+        let preds: Vec<usize> =
+            (0..40u32).map(|n| server.predict(n).unwrap().class).collect();
+        let stats = server.prefetch_stats();
+        (preds, stats)
+    };
+    let (off, off_stats) = predict_all(false);
+    let (on, on_stats) = predict_all(true);
+    assert_eq!(off, on, "prefetch changed served predictions");
+    assert!(off_stats.is_none());
+    let on_stats = on_stats.expect("server-side prefetcher installed");
+    assert!(on_stats.scheduled > 0);
+    assert_eq!(on_stats.failed, 0);
+}
