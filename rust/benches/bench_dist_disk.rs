@@ -24,6 +24,12 @@
 //!   warm-job counters (one job per batch, zero failures asserted).
 //! * **I/O backend** (`--io-backend mmap`) — the paged cold epoch
 //!   served by mapped reads instead of pread, same content asserted.
+//! * **adjacency halo tier** (`--halo-adj`) — the same paged mounts
+//!   with the boundary in-lists replicated once at mount time: 2-hop
+//!   cold-epoch adjacency reads and router messages, tier off vs on
+//!   at 2/4/8 partitions. At 4 and 8 partitions the tier must read
+//!   strictly less adjacency and never add router traffic, with the
+//!   pinned replica + both LRUs under the shared ceiling (asserted).
 //!
 //! Runs under `PYG2_BENCH_QUICK` in CI (bench-smoke job) with bundles
 //! written to a scratch directory under the system temp dir.
@@ -244,6 +250,74 @@ fn main() {
         );
         suite.record_metric(format!("mmap_cold_epoch_ms/{parts}p"), mm_cold_ms);
         println!("  {parts} partitions paged-adj via mmap: cold {mm_cold_ms:.1} ms");
+
+        // Adjacency halo tier (--halo-adj): a fresh paged mount that
+        // replicates the boundary in-lists once at mount time, under
+        // the same shared budget. The 2-hop expansion of halo
+        // frontiers is then served from the pinned tier: cold-epoch
+        // adjacency reads must drop and router traffic must never
+        // grow (asserted at 4 and 8 partitions, where the cut is
+        // large enough for the contrast to be deterministic).
+        let run_halo = |halo_adj: bool| {
+            let loader = mounted_loader(
+                &bundle,
+                0,
+                seeds.clone(),
+                cfg(),
+                DistOptions { halo_adj, ..Default::default() },
+                lru,
+            )
+            .unwrap();
+            let t = Instant::now();
+            for b in loader.iter_epoch(0) {
+                std::hint::black_box(b.unwrap());
+            }
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            let gs = loader.graph();
+            (
+                ms,
+                gs.adj_disk_reads().unwrap(),
+                loader.router_stats().remote_msgs,
+                gs.adj_halo_stats(),
+                gs.adj_cache_stats().unwrap(),
+                loader.features().row_cache_stats().unwrap(),
+            )
+        };
+        let (off_ms, off_adj_reads, off_msgs, off_tier, _, _) = run_halo(false);
+        assert!(off_tier.is_none(), "{parts}p: no halo tier without --halo-adj");
+        let (on_ms, on_adj_reads, on_msgs, tier, adj_lru, row_lru) = run_halo(true);
+        let tier = tier.expect("--halo-adj replicates the boundary in-lists");
+        assert!(tier.pinned_entries > 0, "{parts}p: halo tier pinned nothing");
+        assert!(
+            row_lru.peak_bytes + adj_lru.peak_bytes + tier.pinned_bytes
+                <= lru.capacity_bytes,
+            "{parts}p: halo tier + both LRUs must stay under the shared ceiling"
+        );
+        if parts >= 4 {
+            assert!(
+                on_adj_reads < off_adj_reads,
+                "{parts}p: halo tier must cut cold adjacency reads \
+                 ({on_adj_reads} vs {off_adj_reads})"
+            );
+            assert!(
+                on_msgs <= off_msgs,
+                "{parts}p: halo tier must never add router traffic \
+                 ({on_msgs} vs {off_msgs})"
+            );
+        }
+        suite.record_metric(format!("halo_adj_cold_adj_reads_off/{parts}p"), off_adj_reads as f64);
+        suite.record_metric(format!("halo_adj_cold_adj_reads_on/{parts}p"), on_adj_reads as f64);
+        suite.record_metric(format!("halo_adj_router_msgs_off/{parts}p"), off_msgs as f64);
+        suite.record_metric(format!("halo_adj_router_msgs_on/{parts}p"), on_msgs as f64);
+        suite.record_metric(format!("halo_adj_pinned_entries/{parts}p"), tier.pinned_entries as f64);
+        suite.record_metric(format!("halo_adj_tier_hit_rate/{parts}p"), tier.hit_rate());
+        println!(
+            "  {parts} partitions halo-adj 2-hop: {off_ms:.1} ms / {off_adj_reads} adj reads / \
+             {off_msgs} msgs off -> {on_ms:.1} ms / {on_adj_reads} adj reads / {on_msgs} msgs on \
+             ({} in-lists pinned, {:.1}% tier hits)",
+            tier.pinned_entries,
+            100.0 * tier.hit_rate()
+        );
     }
 
     // Bounded budget: ~256 rows of a 10k-node graph. The ceiling must

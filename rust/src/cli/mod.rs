@@ -78,6 +78,12 @@ pub struct MountOpts {
     pub adj_cache_mb: usize,
     /// Demand-page the adjacency too (`--page-adj`).
     pub page_adj: bool,
+    /// Replicate halo in-edge lists into a pinned tier at mount time
+    /// (`--halo-adj`). Requires `--page-adj`.
+    pub halo_adj: bool,
+    /// Halo-tier share of the budget in MiB (`--halo-adj-mb M`;
+    /// 0 = a quarter of `--cache-mb`). Requires `--halo-adj`.
+    pub halo_adj_mb: usize,
     /// Pipeline prefetch: warm the next batch's rows/in-lists while the
     /// current batch computes (`--prefetch`).
     pub prefetch: bool,
@@ -88,19 +94,22 @@ pub struct MountOpts {
 
 impl MountOpts {
     /// Flags that only mean something under `--mount`.
-    const MOUNT_ONLY: [&'static str; 7] = [
+    const MOUNT_ONLY: [&'static str; 9] = [
         "rank",
         "cache-mb",
         "adj-cache-mb",
         "page-adj",
+        "halo-adj",
+        "halo-adj-mb",
         "prefetch",
         "io-backend",
         "seed-type",
     ];
 
     /// Parse and cross-validate the mount flags. Errors on mount-only
-    /// flags without `--mount`, `--adj-cache-mb` without `--page-adj`,
-    /// and unknown `--io-backend` values.
+    /// flags without `--mount`, `--adj-cache-mb`/`--halo-adj` without
+    /// `--page-adj`, `--halo-adj-mb` without `--halo-adj`, and unknown
+    /// `--io-backend` values.
     pub fn from_args(args: &Args) -> Result<MountOpts, String> {
         let dir = args.get("mount").map(str::to_string);
         if dir.is_none() {
@@ -114,6 +123,14 @@ impl MountOpts {
         if adj_cache_mb > 0 && !page_adj {
             return Err("--adj-cache-mb only applies with --page-adj".to_string());
         }
+        let halo_adj = args.get_bool("halo-adj");
+        if halo_adj && !page_adj {
+            return Err("--halo-adj only applies with --page-adj".to_string());
+        }
+        let halo_adj_mb = args.get_usize("halo-adj-mb", 0);
+        if halo_adj_mb > 0 && !halo_adj {
+            return Err("--halo-adj-mb only applies with --halo-adj".to_string());
+        }
         let io_backend = match args.get("io-backend") {
             Some(s) => crate::persist::IoBackend::parse(s).map_err(|e| e.to_string())?,
             None => crate::persist::IoBackend::default(),
@@ -124,6 +141,8 @@ impl MountOpts {
             cache_mb: args.get_usize("cache-mb", 64),
             adj_cache_mb,
             page_adj,
+            halo_adj,
+            halo_adj_mb,
             prefetch: args.get_bool("prefetch"),
             io_backend,
         })
@@ -139,6 +158,8 @@ impl MountOpts {
             capacity_bytes: self.cache_mb as u64 * 1024 * 1024,
             page_adjacency: self.page_adj,
             adj_capacity_bytes: self.adj_cache_mb as u64 * 1024 * 1024,
+            halo_adj: self.halo_adj,
+            halo_adj_capacity_bytes: self.halo_adj_mb as u64 * 1024 * 1024,
         }
     }
 }
@@ -182,6 +203,14 @@ COMMANDS:
                                 budget, so topology stays O(batch)
               --adj-cache-mb M  adjacency share of the budget (default:
                                 a quarter of --cache-mb)
+              --halo-adj        replicate halo in-edge lists (and edge
+                                timestamps) into a pinned tier at mount
+                                time, so halo expansion is served locally
+                                with zero disk reads and zero router
+                                messages; coldest entries spill into the
+                                adjacency LRU when the tier overflows
+              --halo-adj-mb M   halo-tier share of the budget (default:
+                                a quarter of --cache-mb)
               --prefetch        pipeline prefetch: warm batch k+1's seed
                                 rows + in-edge lists while batch k
                                 computes (cache warming only — batches
@@ -201,6 +230,7 @@ COMMANDS:
               --nodes N --parts K        (in-memory SBM leg)
               --mount DIR                serve out of a partition bundle
               --page-adj --cache-mb M --adj-cache-mb M --rank R
+              --halo-adj --halo-adj-mb M
               --prefetch --io-backend B  (same semantics as pyg2 dist)
               --halo-cache --async --async-workers N --latency-us U
   explain     train then explain predictions (fidelity report)
@@ -249,17 +279,23 @@ mod tests {
     fn mount_opts_parse_full_knob_set() {
         let a = parse(
             "dist --mount /tmp/b --rank 1 --cache-mb 32 --page-adj \
-             --adj-cache-mb 8 --prefetch --io-backend mmap",
+             --adj-cache-mb 8 --halo-adj --halo-adj-mb 4 --prefetch \
+             --io-backend mmap",
         );
         let m = MountOpts::from_args(&a).unwrap();
         assert_eq!(m.dir.as_deref(), Some("/tmp/b"));
         assert_eq!((m.rank, m.cache_mb, m.adj_cache_mb), (1, 32, 8));
         assert!(m.page_adj && m.prefetch && m.mounted());
+        assert!(m.halo_adj);
+        assert_eq!(m.halo_adj_mb, 4);
         assert_eq!(m.io_backend, crate::persist::IoBackend::Mmap);
         let lru = m.lru();
         assert_eq!(lru.capacity_bytes, 32 * 1024 * 1024);
         assert_eq!(lru.adj_capacity_bytes, 8 * 1024 * 1024);
         assert!(lru.page_adjacency);
+        assert!(lru.halo_adj);
+        assert_eq!(lru.halo_adj_capacity_bytes, 4 * 1024 * 1024);
+        assert_eq!(lru.halo_budget(), 4 * 1024 * 1024);
     }
 
     #[test]
@@ -272,11 +308,23 @@ mod tests {
     #[test]
     fn mount_opts_reject_conflicting_combinations() {
         // Mount-only knobs without --mount.
-        for bad in ["dist --prefetch", "dist --page-adj", "dist --io-backend mmap"] {
+        for bad in [
+            "dist --prefetch",
+            "dist --page-adj",
+            "dist --io-backend mmap",
+            "dist --halo-adj",
+        ] {
             assert!(MountOpts::from_args(&parse(bad)).is_err(), "{bad}");
         }
         // Adjacency budget without paged adjacency.
         assert!(MountOpts::from_args(&parse("dist --mount d --adj-cache-mb 8")).is_err());
+        // Halo replication needs the paged adjacency it replicates from.
+        assert!(MountOpts::from_args(&parse("dist --mount d --halo-adj")).is_err());
+        // Halo budget without the halo tier.
+        assert!(MountOpts::from_args(
+            &parse("dist --mount d --page-adj --halo-adj-mb 4")
+        )
+        .is_err());
         // Unknown backend.
         assert!(MountOpts::from_args(&parse("dist --mount d --io-backend sync")).is_err());
     }

@@ -276,6 +276,14 @@ pub struct DistOptions {
     /// Positioned-I/O backend for mounted shard files
     /// (`--io-backend pread|mmap`); see [`crate::persist::IoBackend`].
     pub io_backend: crate::persist::IoBackend,
+    /// Adjacency halo replication on paged mounts (`--halo-adj`):
+    /// pin the in-edge lists (and edge timestamps) of the rank's halo
+    /// nodes under the [`crate::persist::LruConfig::halo_budget`] share,
+    /// spilling what the share cannot hold into the ordinary LRU — see
+    /// [`crate::dist::PartitionedGraphStore::build_adj_halo`]. A no-op
+    /// on resident topologies and in-memory pipelines (their in-lists
+    /// are already local). Batch content is seed-for-seed unchanged.
+    pub halo_adj: bool,
 }
 
 /// The partitioned serving path (§2.3): wire a graph through the full
@@ -743,8 +751,20 @@ pub fn mounted_stores(
             "bundle is typed (heterogeneous): use hetero_mounted_loader".into(),
         ));
     }
+    // `--halo-adj` carves the halo tier's share out of the budget;
+    // either the option or a pre-configured LruConfig activates it.
+    let mut lru = lru;
+    lru.halo_adj = lru.halo_adj || opts.halo_adj;
     lru.validate()?;
     let gs = Arc::new(mount_graph_store(bundle, local_rank, lru, opts.io_backend)?);
+    // Adjacency halo replication: pin the hottest halo in-lists under
+    // the budget's halo share before the epoch starts (spilling the
+    // rest into the AdjCache LRU); None on resident topologies.
+    let adj_halo = if lru.halo_budget() > 0 {
+        gs.build_adj_halo(lru.halo_budget())?
+    } else {
+        None
+    };
     let mut fs = PartitionedFeatureStore::mount_with_router_backend(
         bundle,
         gs.typed_router().clone(),
@@ -753,8 +773,48 @@ pub fn mounted_stores(
     )?
     .with_latency(opts.latency);
     if opts.halo_cache {
-        let halo = gs.halo_nodes(DEFAULT_GROUP)?;
         let n = bundle.node_type(DEFAULT_GROUP)?.num_nodes;
+        // Under an active halo share (--halo-adj on a paged mount) the
+        // feature replica is bounded by whatever the pinned adjacency
+        // tier left of it: same ranking (partition-time cut-edge
+        // counts), same strict-prefix policy — so the two halo tiers
+        // jointly stay inside one share of the `--cache-mb` ceiling.
+        // Rows the share cannot hold are warmed into the ordinary
+        // bounded RowCache below instead of pinned. Without a halo
+        // share the replica stays complete (the documented
+        // `--halo-cache`-only behaviour).
+        let (halo, spilled) = match &adj_halo {
+            Some(tier) => {
+                let remaining = lru.halo_budget().saturating_sub(tier.pinned_bytes);
+                let raw = fs.raw_reader().expect("mounted store");
+                let mut row_bytes = 0u64;
+                for key in raw.keys() {
+                    row_bytes += raw.feature_dim(&key)? as u64 * 4;
+                }
+                let mut ranked = gs
+                    .halos_ranked()?
+                    .remove(DEFAULT_GROUP)
+                    .unwrap_or_default();
+                ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                let (mut kept, mut spill) = (Vec::new(), Vec::new());
+                let (mut used, mut pinning) = (0u64, true);
+                for (v, _) in ranked {
+                    if pinning && used + row_bytes > remaining {
+                        pinning = false;
+                    }
+                    if pinning {
+                        used += row_bytes;
+                        kept.push(v);
+                    } else {
+                        spill.push(v);
+                    }
+                }
+                // The HaloCache contract wants ascending node ids.
+                kept.sort_unstable();
+                (kept, spill)
+            }
+            None => (gs.halo_nodes(DEFAULT_GROUP)?, Vec::new()),
+        };
         // Build the replica through the raw (cache/latency/counter-free)
         // view: halo rows are intercepted by the replica forever after,
         // so inserting them into the bounded row cache would only evict
@@ -764,6 +824,11 @@ pub fn mounted_stores(
             HaloCache::build(&halo, &raw, n, local_rank)?
         };
         fs = fs.with_halo_cache(Arc::new(cache))?;
+        if !spilled.is_empty() {
+            // Spilled halo rows seed the ordinary bounded RowCache (a
+            // prefetch-tagged warm the LRU is free to evict).
+            fs.prefetch_rows(DEFAULT_GROUP, &spilled)?;
+        }
     }
     if opts.async_fetch {
         let workers = if opts.async_workers > 0 {
@@ -827,8 +892,21 @@ pub fn hetero_mounted_loader(
     use std::sync::Arc;
 
     bundle.node_type(seed_type)?; // validate the seed type early
+    // `--halo-adj` carves the halo tier's share out of the budget;
+    // either the option or a pre-configured LruConfig activates it.
+    let mut lru = lru;
+    lru.halo_adj = lru.halo_adj || opts.halo_adj;
     lru.validate()?;
     let gs = Arc::new(mount_graph_store(bundle, local_rank, lru, opts.io_backend)?);
+    // Adjacency halo replication: pin the hottest halo in-lists, per
+    // (edge type, rank), under the budget's halo share before the
+    // epoch starts (spilling the rest into the AdjCache LRU); None on
+    // resident topologies.
+    let adj_halo = if lru.halo_budget() > 0 {
+        gs.build_adj_halo(lru.halo_budget())?
+    } else {
+        None
+    };
     let mut fs = PartitionedFeatureStore::mount_with_router_backend(
         bundle,
         gs.typed_router().clone(),
@@ -838,10 +916,62 @@ pub fn hetero_mounted_loader(
     .with_latency(opts.latency);
     if opts.halo_cache {
         let mut caches = BTreeMap::new();
-        // One edge sweep computes every node type's halo (on a paged
-        // mount this streams each shard file once, not once per
-        // adjacent type).
-        let halos = gs.halos()?;
+        // One edge sweep computes every node type's halo with its
+        // cut-edge counts (on a paged mount this streams each shard
+        // file once, not once per adjacent type).
+        let ranked = gs.halos_ranked()?;
+        // Under an active halo share (--halo-adj on a paged mount) the
+        // typed feature replicas are bounded by what the pinned
+        // adjacency tier left of it: one global ranking across node
+        // types by cut-edge count, same strict-prefix policy, so both
+        // halo tiers jointly stay inside one share of the `--cache-mb`
+        // ceiling. Rows the share cannot hold are warmed into the
+        // ordinary bounded RowCache after the replicas install.
+        let mut spilled: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+        let halos: BTreeMap<String, Vec<u32>> = match &adj_halo {
+            Some(tier) => {
+                let remaining = lru.halo_budget().saturating_sub(tier.pinned_bytes);
+                let raw = fs.raw_reader().expect("mounted store");
+                let mut row_bytes = BTreeMap::new();
+                let mut cands = Vec::new();
+                for nt in &bundle.manifest().node_types {
+                    let key = FeatureKey::new(&nt.name, DEFAULT_ATTR);
+                    row_bytes.insert(nt.name.clone(), raw.feature_dim(&key)? as u64 * 4);
+                    for &(v, count) in &ranked[&nt.name] {
+                        cands.push((count, nt.name.as_str(), v));
+                    }
+                }
+                cands.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(b.1)).then(a.2.cmp(&b.2)));
+                let mut kept: BTreeMap<String, Vec<u32>> = bundle
+                    .manifest()
+                    .node_types
+                    .iter()
+                    .map(|nt| (nt.name.clone(), Vec::new()))
+                    .collect();
+                let (mut used, mut pinning) = (0u64, true);
+                for (_, nt, v) in cands {
+                    let bytes = row_bytes[nt];
+                    if pinning && used + bytes > remaining {
+                        pinning = false;
+                    }
+                    if pinning {
+                        used += bytes;
+                        kept.get_mut(nt).expect("manifest type").push(v);
+                    } else {
+                        spilled.entry(nt.to_string()).or_default().push(v);
+                    }
+                }
+                // The HaloCache contract wants ascending node ids.
+                for l in kept.values_mut() {
+                    l.sort_unstable();
+                }
+                kept
+            }
+            None => ranked
+                .into_iter()
+                .map(|(nt, r)| (nt, r.into_iter().map(|(v, _)| v).collect()))
+                .collect(),
+        };
         for nt in &bundle.manifest().node_types {
             // Gather the typed halo rows straight off the shard files
             // (cache/latency/counter-free raw view) — the same bytes a
@@ -858,6 +988,11 @@ pub fn hetero_mounted_loader(
             );
         }
         fs = fs.with_halo_caches(caches)?;
+        for (nt, nodes) in &spilled {
+            // Spilled halo rows seed the ordinary bounded RowCache (a
+            // prefetch-tagged warm the LRU is free to evict).
+            fs.prefetch_rows(nt, nodes)?;
+        }
     }
     if opts.async_fetch {
         let workers = if opts.async_workers > 0 {
@@ -906,6 +1041,10 @@ pub struct MountedMultiRankReport {
     /// `row_cache` this is the [`crate::persist::MountCacheStats`]
     /// split of the shared budget.
     pub adj_cache: Vec<Option<crate::persist::RowCacheStats>>,
+    /// Per-rank adjacency halo tier counters (`None` unless the mount
+    /// replicated halo in-lists — `--halo-adj` with `--page-adj`): the
+    /// pinned third of the [`crate::persist::MountCacheStats`] split.
+    pub adj_halo: Vec<Option<crate::persist::HaloTierStats>>,
     /// Per-rank positioned disk reads over the bundle's feature shards.
     pub disk_reads: Vec<u64>,
     /// Per-rank positioned disk reads over the adjacency shards (zero
@@ -920,11 +1059,12 @@ pub struct MountedMultiRankReport {
 }
 
 impl MountedMultiRankReport {
-    /// The row/adjacency cache split of one rank's shared budget.
+    /// The row/adjacency/halo cache split of one rank's shared budget.
     pub fn mount_cache_stats(&self, rank: usize) -> crate::persist::MountCacheStats {
         crate::persist::MountCacheStats {
             rows: self.row_cache[rank],
             adj: self.adj_cache[rank],
+            halo: self.adj_halo[rank],
         }
     }
 
@@ -973,6 +1113,7 @@ pub fn multi_rank_epoch_mounted(
     let mut halo = Vec::with_capacity(ranks);
     let mut row_cache = Vec::with_capacity(ranks);
     let mut adj_cache = Vec::with_capacity(ranks);
+    let mut adj_halo = Vec::with_capacity(ranks);
     let mut disk_reads = Vec::with_capacity(ranks);
     let mut adj_disk_reads = Vec::with_capacity(ranks);
     let mut prefetch = Vec::with_capacity(ranks);
@@ -1000,6 +1141,7 @@ pub fn multi_rank_epoch_mounted(
         halo.push(loader.cache_stats());
         row_cache.push(loader.features().row_cache_stats().expect("mounted store"));
         adj_cache.push(loader.graph().adj_cache_stats());
+        adj_halo.push(loader.graph().adj_halo_stats());
         disk_reads.push(loader.features().disk_reads().expect("mounted store"));
         adj_disk_reads.push(loader.graph().adj_disk_reads().unwrap_or(0));
         prefetch.push(loader.prefetch_stats());
@@ -1009,6 +1151,7 @@ pub fn multi_rank_epoch_mounted(
         halo,
         row_cache,
         adj_cache,
+        adj_halo,
         disk_reads,
         adj_disk_reads,
         prefetch,

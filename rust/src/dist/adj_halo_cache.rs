@@ -1,0 +1,279 @@
+//! Adjacency halo replication: pre-replicate the **in-edge lists** (and
+//! edge timestamps, where the edge type carries them) of a partition's
+//! halo nodes, so multi-hop expansion of a halo frontier is served
+//! locally — zero disk reads, zero router messages.
+//!
+//! This is the topology analog of [`super::HaloCache`] (which replicates
+//! halo *feature rows*): on a paged mount every 2-hop expansion of a
+//! halo frontier misses the [`crate::persist::AdjCache`] cold and pays
+//! adjacency preads plus a coalesced remote message per foreign
+//! partition touched. The 1-hop halo is exactly the set of foreign
+//! nodes a local expansion reaches, so replicating their in-lists makes
+//! the *second* hop local too — the locality/replication trade PyG
+//! 2.0's distributed design (§2.3) and TF-GNN's worker-shard
+//! materialization both rely on.
+//!
+//! The tier is **adaptive under the mount's single byte budget**
+//! ([`crate::persist::LruConfig::halo_budget`]): the planner ranks halo
+//! candidates by a cheap touch-frequency estimate (their partition-time
+//! cut-edge counts — how many locally owned sources point at them) and
+//! pins the hottest prefix that fits the share. The cold remainder is
+//! marked [`SPILLED`] here and seeded into the ordinary
+//! [`crate::persist::AdjCache`] LRU instead (still bounded by *its*
+//! share), so the three tiers — halo pin → LRU →
+//! [`crate::persist::PageSource`] — jointly never exceed `--cache-mb`.
+//!
+//! A hit fills the caller's [`AdjBuf`] with bytes **identical** to what
+//! the owning shard's demand-paged read would return (the replica is
+//! extracted from the same shard files at mount, property-tested in
+//! `tests/test_paged_adjacency.rs`), and the tier touches no RNG — so
+//! batch streams are seed-for-seed identical with the tier on or off.
+
+use crate::error::{Error, Result};
+use crate::persist::AdjBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::halo_cache::CacheStats;
+
+/// Sentinel for "not a halo node" in the slot map: reads of such nodes
+/// are the ordinary local path and are not accounted here.
+const NOT_CACHED: u32 = u32::MAX;
+
+/// Sentinel for "halo node the budget could not pin": its entry was
+/// spilled into the ordinary LRU, and reads of it count as tier misses
+/// (halo frontier work the pinned share failed to absorb).
+const SPILLED: u32 = u32::MAX - 1;
+
+/// Replicated halo in-edge lists of one `(edge type, rank)` —
+/// one instance per [`super::EdgeShards`] of a `--halo-adj` mount.
+pub struct AdjHaloCache {
+    local_rank: u32,
+    /// State of dst node `v`: [`NOT_CACHED`], [`SPILLED`], or the index
+    /// of its pinned entry.
+    slot: Vec<u32>,
+    /// Entry `i` spans `nbrs/eids[offsets[i]..offsets[i + 1]]` (and the
+    /// same span of `times` when timed).
+    offsets: Vec<u32>,
+    /// Concatenated in-neighbor ids, per entry in shard order.
+    nbrs: Vec<u32>,
+    /// Concatenated type-global edge ids, aligned with `nbrs`.
+    eids: Vec<u32>,
+    /// Concatenated per-edge timestamps, aligned with `nbrs`; empty
+    /// when the edge type is not temporal.
+    times: Vec<i64>,
+    timed: bool,
+    spilled: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_served: AtomicU64,
+}
+
+impl AdjHaloCache {
+    /// An empty replica over a `num_nodes`-wide dst id space. `timed`
+    /// pins per-edge timestamps alongside each entry (set it when the
+    /// edge type has a `.time` file, so temporal sampling is served
+    /// whole from the tier).
+    pub fn new(num_nodes: usize, timed: bool, local_rank: u32) -> Self {
+        Self {
+            local_rank,
+            slot: vec![NOT_CACHED; num_nodes],
+            offsets: vec![0],
+            nbrs: Vec::new(),
+            eids: Vec::new(),
+            times: Vec::new(),
+            timed,
+            spilled: 0,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+        }
+    }
+
+    /// Pin the complete in-list of halo node `v`. `times` must be the
+    /// per-edge timestamps aligned with `nbrs`/`eids` iff the cache is
+    /// timed. Build-time only (the serve path takes `&self`).
+    pub fn pin(&mut self, v: u32, nbrs: &[u32], eids: &[u32], times: &[i64]) -> Result<()> {
+        let slot = self
+            .slot
+            .get_mut(v as usize)
+            .ok_or_else(|| Error::Storage(format!("halo node {v} out of the dst id space")))?;
+        if *slot != NOT_CACHED {
+            return Err(Error::Storage(format!("halo node {v} pinned or spilled twice")));
+        }
+        if nbrs.len() != eids.len() || (self.timed && times.len() != nbrs.len()) {
+            return Err(Error::Storage(format!(
+                "halo entry of node {v}: {} neighbors / {} edge ids / {} times",
+                nbrs.len(),
+                eids.len(),
+                times.len()
+            )));
+        }
+        *slot = self.offsets.len() as u32 - 1;
+        self.nbrs.extend_from_slice(nbrs);
+        self.eids.extend_from_slice(eids);
+        if self.timed {
+            self.times.extend_from_slice(times);
+        }
+        self.offsets.push(self.nbrs.len() as u32);
+        Ok(())
+    }
+
+    /// Record that halo node `v`'s entry did not fit the pinned share
+    /// and was spilled into the ordinary LRU — reads of it will count
+    /// as tier misses. Build-time only.
+    pub fn mark_spilled(&mut self, v: u32) -> Result<()> {
+        let slot = self
+            .slot
+            .get_mut(v as usize)
+            .ok_or_else(|| Error::Storage(format!("halo node {v} out of the dst id space")))?;
+        if *slot != NOT_CACHED {
+            return Err(Error::Storage(format!("halo node {v} pinned or spilled twice")));
+        }
+        *slot = SPILLED;
+        self.spilled += 1;
+        Ok(())
+    }
+
+    /// The rank whose halo this replica serves.
+    pub fn local_rank(&self) -> u32 {
+        self.local_rank
+    }
+
+    /// Number of dst nodes the slot map covers.
+    pub fn num_nodes(&self) -> usize {
+        self.slot.len()
+    }
+
+    /// Whether this replica pins per-edge timestamps.
+    pub fn timed(&self) -> bool {
+        self.timed
+    }
+
+    /// Whether node `v`'s in-list is pinned here (spilled entries are
+    /// *not* resident — they live in the LRU, subject to eviction).
+    pub fn contains(&self, v: u32) -> bool {
+        self.slot.get(v as usize).is_some_and(|&s| s != NOT_CACHED && s != SPILLED)
+    }
+
+    /// Pinned entries.
+    pub fn pinned_entries(&self) -> u64 {
+        (self.offsets.len() - 1) as u64
+    }
+
+    /// Halo entries spilled into the ordinary LRU at build.
+    pub fn spilled_entries(&self) -> u64 {
+        self.spilled
+    }
+
+    /// Resident payload bytes of the pinned entries (neighbor ids +
+    /// edge ids, plus timestamps when timed) — the tier's constant
+    /// charge against its budget share.
+    pub fn pinned_bytes(&self) -> u64 {
+        (self.nbrs.len() * 4 + self.eids.len() * 4 + self.times.len() * 8) as u64
+    }
+
+    /// Try to serve the in-list of node `v` from the pinned replica,
+    /// filling `buf` exactly as the owning shard's demand-paged read
+    /// would (timestamps included when timed). `true` on a hit; a
+    /// [`SPILLED`] node counts a miss and falls through; a non-halo
+    /// node falls through unaccounted (it is the ordinary local path,
+    /// not halo traffic).
+    pub fn try_serve(&self, v: u32, buf: &mut AdjBuf) -> bool {
+        let slot = self.slot.get(v as usize).copied().unwrap_or(NOT_CACHED);
+        if slot == NOT_CACHED {
+            return false;
+        }
+        if slot == SPILLED {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let (lo, hi) = (self.offsets[slot as usize] as usize, self.offsets[slot as usize + 1] as usize);
+        buf.fill(&self.nbrs[lo..hi], &self.eids[lo..hi]);
+        let mut bytes = (hi - lo) * 8;
+        if self.timed {
+            buf.fill_times(&self.times[lo..hi]);
+            bytes += (hi - lo) * 8;
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
+        true
+    }
+
+    /// Current hit/miss/bytes counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_served: self.bytes_served.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the counters (benches measure per-phase behaviour).
+    pub fn reset_stats(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.bytes_served.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_entries_serve_lists_and_account() {
+        let mut c = AdjHaloCache::new(10, false, 0);
+        c.pin(3, &[1, 4, 7], &[10, 11, 12], &[]).unwrap();
+        c.pin(5, &[], &[], &[]).unwrap();
+        c.mark_spilled(8).unwrap();
+        assert_eq!(c.pinned_entries(), 2);
+        assert_eq!(c.spilled_entries(), 1);
+        assert_eq!(c.pinned_bytes(), 3 * 8);
+        assert!(c.contains(3) && c.contains(5));
+        assert!(!c.contains(8), "spilled entries are not resident");
+        assert!(!c.contains(0));
+
+        let mut buf = AdjBuf::default();
+        assert!(c.try_serve(3, &mut buf));
+        assert_eq!(buf.nbrs_eids(), (&[1u32, 4, 7][..], &[10u32, 11, 12][..]));
+        assert!(c.try_serve(5, &mut buf), "empty pinned list is a hit");
+        assert_eq!(buf.nbrs_eids(), (&[][..], &[][..]));
+        assert!(!c.try_serve(8, &mut buf), "spilled entry falls through");
+        assert!(!c.try_serve(0, &mut buf), "non-halo node falls through");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (2, 1), "non-halo reads unaccounted");
+        assert_eq!(s.bytes_served, 24);
+        c.reset_stats();
+        assert_eq!(c.stats(), CacheStats::default());
+        assert_eq!(c.local_rank(), 0);
+        assert_eq!(c.num_nodes(), 10);
+    }
+
+    #[test]
+    fn timed_entries_carry_timestamps() {
+        let mut c = AdjHaloCache::new(4, true, 1);
+        assert!(c.timed());
+        c.pin(2, &[0, 1], &[5, 6], &[100, 200]).unwrap();
+        assert_eq!(c.pinned_bytes(), 2 * 8 + 2 * 8);
+        let mut buf = AdjBuf::default();
+        assert!(c.try_serve(2, &mut buf));
+        assert_eq!(buf.nbrs_eids(), (&[0u32, 1][..], &[5u32, 6][..]));
+        assert_eq!(buf.times(), &[100, 200]);
+        // A timed hit serves both the list and the timestamps.
+        assert_eq!(c.stats().bytes_served, 2 * 8 + 2 * 8);
+        // Misaligned timestamps are rejected at build.
+        assert!(c.pin(3, &[0], &[1], &[]).is_err());
+    }
+
+    #[test]
+    fn double_pin_and_out_of_range_rejected() {
+        let mut c = AdjHaloCache::new(3, false, 0);
+        c.pin(1, &[0], &[0], &[]).unwrap();
+        assert!(c.pin(1, &[0], &[0], &[]).is_err());
+        assert!(c.mark_spilled(1).is_err());
+        assert!(c.pin(3, &[0], &[0], &[]).is_err());
+        assert!(c.mark_spilled(9).is_err());
+        // Mismatched nbrs/eids rejected.
+        assert!(c.pin(2, &[0, 1], &[0], &[]).is_err());
+    }
+}

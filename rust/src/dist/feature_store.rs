@@ -466,10 +466,13 @@ impl PartitionedFeatureStore {
     /// [`crate::persist::RowCacheStats`] prefetch counters (and the
     /// shard disk-read ledgers) observe it. A no-op on in-memory stores;
     /// out-of-range ids are skipped (warming is speculative — the demand
-    /// path is where bad seeds must fail).
-    pub fn prefetch_rows(&self, node_type: &str, nodes: &[u32]) -> Result<()> {
+    /// path is where bad seeds must fail). Returns how many nodes were
+    /// skipped because an installed halo replica already pins their rows
+    /// resident — warming those would only duplicate bytes into the LRU
+    /// ([`crate::dist::PrefetchStats::skipped`]).
+    pub fn prefetch_rows(&self, node_type: &str, nodes: &[u32]) -> Result<u64> {
         if self.mounted.is_none() {
-            return Ok(());
+            return Ok(0);
         }
         let ts = if self.types.len() == 1 {
             self.types.values().next().expect("non-empty")
@@ -478,11 +481,16 @@ impl PartitionedFeatureStore {
                 Error::Storage(format!("no node type {node_type} to prefetch"))
             })?
         };
-        let Some(paged) = &ts.paged else { return Ok(()) };
+        let Some(paged) = &ts.paged else { return Ok(0) };
         let keys = paged[0].keys();
         let mut scratch = Vec::new();
+        let mut skipped = 0u64;
         for &v in nodes {
             if v as usize >= ts.local_row.len() {
+                continue;
+            }
+            if ts.halo_cache.as_ref().is_some_and(|c| c.contains(v)) {
+                skipped += 1;
                 continue;
             }
             let p = ts.router.owner(v) as usize;
@@ -491,7 +499,7 @@ impl PartitionedFeatureStore {
                 paged[p].warm_row(key, row, &mut scratch)?;
             }
         }
-        Ok(())
+        Ok(skipped)
     }
 
     /// A cache/latency/counter-free view of a mounted store (`None` on

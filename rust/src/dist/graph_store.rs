@@ -39,10 +39,11 @@
 //! O(graph)-memory decode with
 //! [`PartitionedGraphStore::materialize_global`].
 
+use super::adj_halo_cache::AdjHaloCache;
 use super::{PartitionRouter, RouterStats, TypedRouter};
 use crate::error::{Error, Result};
 use crate::graph::{Compressed, EdgeIndex, EdgeType, HeteroGraph};
-use crate::persist::{AdjBuf, AdjCache, PagedAdjacency, PagedEdgeTime};
+use crate::persist::{AdjBuf, AdjCache, HaloTierStats, PagedAdjacency, PagedEdgeTime};
 use crate::storage::graph_store::compress_bipartite;
 use crate::storage::{default_edge_type, GraphStore, DEFAULT_GROUP};
 use std::collections::BTreeMap;
@@ -97,6 +98,11 @@ pub struct EdgeShards {
     materialized: OnceLock<(Vec<u32>, Vec<u32>)>,
     global_csr: OnceLock<Arc<Compressed>>,
     global_csc: OnceLock<Arc<Compressed>>,
+    /// The pinned halo-replica tier of a `--halo-adj` paged mount,
+    /// installed once by
+    /// [`PartitionedGraphStore::build_adj_halo`]. Probed *before* the
+    /// LRU on every paged in-read (halo tier → LRU → `PageSource`).
+    halo: OnceLock<Arc<AdjHaloCache>>,
     // Per-edge-type traffic (the bench_dist_hetero breakdown). Routed
     // messages are *also* recorded on the dst-type router; these counters
     // attribute them to the relation that caused them.
@@ -174,6 +180,7 @@ impl EdgeShards {
             materialized: OnceLock::new(),
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
+            halo: OnceLock::new(),
             local_msgs: AtomicU64::new(0),
             remote_msgs: AtomicU64::new(0),
             remote_rows: AtomicU64::new(0),
@@ -195,6 +202,15 @@ impl EdgeShards {
                 Ok((&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi]))
             }
             Topology::Paged { shards, .. } => {
+                // Lookup order: halo tier → LRU → PageSource. A pinned
+                // halo entry serves the identical block with no disk
+                // read (and the sampler skips the remote message — see
+                // EdgeShards::halo_served).
+                if let Some(halo) = self.halo.get() {
+                    if halo.try_serve(v, buf) {
+                        return Ok((&*buf).nbrs_eids());
+                    }
+                }
                 shards[self.dst_router.owner(v) as usize].in_list(v, buf)?;
                 Ok((&*buf).nbrs_eids())
             }
@@ -220,6 +236,18 @@ impl EdgeShards {
                 Ok((&shard.csc.indices[lo..hi], &shard.csc.perm[lo..hi], None))
             }
             Topology::Paged { shards, time } => {
+                // Halo tier first (see EdgeShards::read_in): a timed
+                // replica pins the per-edge timestamps alongside each
+                // entry, so a temporal hit costs no time-block read
+                // either.
+                if let Some(halo) = self.halo.get() {
+                    if halo.try_serve(v, buf) {
+                        let timed = want_times && halo.timed();
+                        let buf: &'a AdjBuf = buf;
+                        let (nbrs, eids) = buf.nbrs_eids();
+                        return Ok((nbrs, eids, timed.then(|| buf.times())));
+                    }
+                }
                 shards[self.dst_router.owner(v) as usize].in_list(v, buf)?;
                 let timed = match (want_times, time) {
                     (true, Some(t)) => {
@@ -254,6 +282,32 @@ impl EdgeShards {
     /// Owning partition of dst node `v` (the shard `read_in` reads).
     pub fn dst_owner(&self, v: u32) -> u32 {
         self.dst_router.owner(v)
+    }
+
+    /// Whether an in-read of dst node `v` is served by the pinned halo
+    /// replica — locally, with zero disk reads. The samplers consult
+    /// this to skip the remote message such a read would otherwise
+    /// cost: halo nodes are by construction foreign, so served reads
+    /// only ever remove *remote* traffic, never local accounting.
+    /// Deliberately `false` for spilled entries (they live in the
+    /// evictable LRU, so counting them local would make traffic depend
+    /// on cache state and non-deterministic).
+    pub fn halo_served(&self, v: u32) -> bool {
+        self.halo.get().is_some_and(|h| h.contains(v))
+    }
+
+    /// The pinned halo-replica tier, if one was built
+    /// ([`PartitionedGraphStore::build_adj_halo`]).
+    pub fn adj_halo(&self) -> Option<&Arc<AdjHaloCache>> {
+        self.halo.get()
+    }
+
+    /// Install the pinned halo tier (once; a second install is a wiring
+    /// bug).
+    fn install_halo(&self, halo: Arc<AdjHaloCache>) -> Result<()> {
+        self.halo
+            .set(halo)
+            .map_err(|_| Error::Storage("adjacency halo tier installed twice".into()))
     }
 
     /// The destination type's router (adjacency reads are accounted on
@@ -395,15 +449,24 @@ impl EdgeShards {
     /// point for topology, warming batch k+1's seed lists while batch k
     /// computes. A no-op on resident backings; out-of-range ids are
     /// skipped (warming is speculative — the demand path is where bad
-    /// seeds must fail).
-    pub fn prefetch_in_lists(&self, nodes: &[u32], buf: &mut AdjBuf) -> Result<()> {
+    /// seeds must fail). Nodes whose in-list the pinned halo tier
+    /// already replicates are skipped too — warming them would re-read
+    /// bytes the tier already holds — and the count of such skips is
+    /// returned (surfaced as [`super::PrefetchStats::skipped`]).
+    pub fn prefetch_in_lists(&self, nodes: &[u32], buf: &mut AdjBuf) -> Result<u64> {
+        let mut skipped = 0u64;
         if let Topology::Paged { shards, .. } = &self.topo {
+            let halo = self.halo.get();
             for &v in nodes {
                 let Some(owner) = self.dst_router.try_owner(v) else { continue };
+                if halo.is_some_and(|h| h.contains(v)) {
+                    skipped += 1;
+                    continue;
+                }
                 shards[owner as usize].warm_in(v, buf)?;
             }
         }
-        Ok(())
+        Ok(skipped)
     }
 
     /// Visit every edge `(src, dst)` of this type exactly once. The
@@ -588,6 +651,7 @@ impl EdgeShards {
             materialized: OnceLock::new(),
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
+            halo: OnceLock::new(),
             local_msgs: AtomicU64::new(0),
             remote_msgs: AtomicU64::new(0),
             remote_rows: AtomicU64::new(0),
@@ -649,6 +713,7 @@ impl EdgeShards {
             materialized: OnceLock::new(),
             global_csr: OnceLock::new(),
             global_csc: OnceLock::new(),
+            halo: OnceLock::new(),
             local_msgs: AtomicU64::new(0),
             remote_msgs: AtomicU64::new(0),
             remote_rows: AtomicU64::new(0),
@@ -684,6 +749,9 @@ pub struct PartitionedGraphStore {
     /// The shared adjacency block cache of a paged mount (`None` when
     /// the topology is resident).
     adj_cache: Option<Arc<AdjCache>>,
+    /// Byte share granted to the adjacency halo tier, set once by
+    /// [`PartitionedGraphStore::build_adj_halo`] (`--halo-adj`).
+    adj_halo_capacity: OnceLock<u64>,
 }
 
 impl PartitionedGraphStore {
@@ -717,6 +785,7 @@ impl PartitionedGraphStore {
             node_time: BTreeMap::new(),
             edges: edge_map,
             adj_cache: None,
+            adj_halo_capacity: OnceLock::new(),
         })
     }
 
@@ -769,7 +838,14 @@ impl PartitionedGraphStore {
             )?;
             edges.insert(et.clone(), shards);
         }
-        Ok(Self { router, num_nodes, node_time, edges, adj_cache: None })
+        Ok(Self {
+            router,
+            num_nodes,
+            node_time,
+            edges,
+            adj_cache: None,
+            adj_halo_capacity: OnceLock::new(),
+        })
     }
 
     /// Per-type routers, node counts and node timestamps of a bundle —
@@ -826,7 +902,14 @@ impl PartitionedGraphStore {
             )?;
             edges.insert(et.ty.clone(), es);
         }
-        Ok(Self { router, num_nodes, node_time, edges, adj_cache: None })
+        Ok(Self {
+            router,
+            num_nodes,
+            node_time,
+            edges,
+            adj_cache: None,
+            adj_halo_capacity: OnceLock::new(),
+        })
     }
 
     /// [`PartitionedGraphStore::mount`] in **demand-paged** mode
@@ -901,7 +984,14 @@ impl PartitionedGraphStore {
             )?;
             edges.insert(et.ty.clone(), es);
         }
-        Ok(Self { router, num_nodes, node_time, edges, adj_cache: Some(cache) })
+        Ok(Self {
+            router,
+            num_nodes,
+            node_time,
+            edges,
+            adj_cache: Some(cache),
+            adj_halo_capacity: OnceLock::new(),
+        })
     }
 
     /// The local rank's 1-hop halo of one node type, computed from the
@@ -949,52 +1039,70 @@ impl PartitionedGraphStore {
     /// endpoints). This is what the typed mounted loader uses to build
     /// its per-type halo replicas.
     pub fn halos(&self) -> Result<BTreeMap<String, Vec<u32>>> {
-        let mut flags: BTreeMap<String, Vec<bool>> = self
+        Ok(self
+            .halos_ranked()?
+            .into_iter()
+            .map(|(nt, ranked)| (nt, ranked.into_iter().map(|(v, _)| v).collect()))
+            .collect())
+    }
+
+    /// [`PartitionedGraphStore::halos`] also carrying each halo node's
+    /// **cut-edge count** — how many boundary edges (summed over edge
+    /// types, either direction) connect it to the local partition. The
+    /// count is a cheap partition-time touch-frequency estimate: a halo
+    /// node with many local neighbors enters sampled frontiers
+    /// proportionally often, so the halo-replication planner
+    /// ([`PartitionedGraphStore::build_adj_halo`]) pins the
+    /// highest-count entries first when the budget cannot hold the full
+    /// replica. Same ordering contract as `halos()`: ascending node id,
+    /// deduplicated.
+    pub fn halos_ranked(&self) -> Result<BTreeMap<String, Vec<(u32, u32)>>> {
+        let mut counts: BTreeMap<String, Vec<u32>> = self
             .num_nodes
             .iter()
-            .map(|(nt, &n)| (nt.clone(), vec![false; n]))
+            .map(|(nt, &n)| (nt.clone(), vec![0u32; n]))
             .collect();
         for (et, es) in &self.edges {
             let (sr, dr) = (Arc::clone(&es.src_router), Arc::clone(&es.dst_router));
             let rank = dr.local_rank();
             if et.src == et.dst {
-                let f = flags.get_mut(&et.src).expect("node type known");
+                let c = counts.get_mut(&et.src).expect("node type known");
                 es.for_each_edge(&mut |s, d| {
                     let (os, od) = (sr.owner(s), dr.owner(d));
                     if od == rank && os != rank {
-                        f[s as usize] = true;
+                        c[s as usize] = c[s as usize].saturating_add(1);
                     }
                     if os == rank && od != rank {
-                        f[d as usize] = true;
+                        c[d as usize] = c[d as usize].saturating_add(1);
                     }
                 })?;
             } else {
                 // Two distinct map entries need simultaneous mutation:
-                // take the src flags out for the walk, put them back.
-                let mut sf = std::mem::take(flags.get_mut(&et.src).expect("node type known"));
-                let df = flags.get_mut(&et.dst).expect("node type known");
+                // take the src counts out for the walk, put them back.
+                let mut sc = std::mem::take(counts.get_mut(&et.src).expect("node type known"));
+                let dc = counts.get_mut(&et.dst).expect("node type known");
                 es.for_each_edge(&mut |s, d| {
                     let (os, od) = (sr.owner(s), dr.owner(d));
                     if od == rank && os != rank {
-                        sf[s as usize] = true;
+                        sc[s as usize] = sc[s as usize].saturating_add(1);
                     }
                     if os == rank && od != rank {
-                        df[d as usize] = true;
+                        dc[d as usize] = dc[d as usize].saturating_add(1);
                     }
                 })?;
-                *flags.get_mut(&et.src).expect("node type known") = sf;
+                *counts.get_mut(&et.src).expect("node type known") = sc;
             }
         }
-        Ok(flags
+        Ok(counts
             .into_iter()
-            .map(|(nt, f)| {
-                let halo = f
+            .map(|(nt, c)| {
+                let ranked = c
                     .iter()
                     .enumerate()
-                    .filter(|(_, &h)| h)
-                    .map(|(v, _)| v as u32)
+                    .filter(|(_, &n)| n > 0)
+                    .map(|(v, &n)| (v as u32, n))
                     .collect();
-                (nt, halo)
+                (nt, ranked)
             })
             .collect())
     }
@@ -1059,6 +1167,148 @@ impl PartitionedGraphStore {
         Some(self.edges.values().map(|es| es.paged_disk_reads()).sum())
     }
 
+    /// Build the **adjacency halo tier** (`--halo-adj`) of a paged
+    /// mount: replicate each edge type's in-edge lists (and per-edge
+    /// timestamps, where the type carries them) of the local rank's
+    /// halo nodes, so multi-hop expansion of halo frontiers is served
+    /// locally — zero disk reads, zero router messages. The replica is
+    /// **adaptive under `budget`** (the halo share of the mount's
+    /// single byte budget, [`crate::persist::LruConfig::halo_budget`]):
+    /// candidates are ranked globally by their partition-time cut-edge
+    /// counts — a cheap touch-frequency estimate, see
+    /// [`PartitionedGraphStore::halos_ranked`] — and the hottest prefix
+    /// that fits is pinned; once one entry overflows the share,
+    /// everything colder is spilled into the ordinary [`AdjCache`] LRU
+    /// instead (still bounded by *its* share and subject to eviction),
+    /// so all tiers jointly stay under `--cache-mb`. The strict-prefix
+    /// cut keeps the pinned set a deterministic function of the ranking
+    /// alone.
+    ///
+    /// `Ok(None)` on resident topologies (every in-list is already
+    /// local; replication would buy nothing). Extraction streams the
+    /// candidate-owning foreign shard files once per edge type with
+    /// uncounted reads, so the epoch I/O ledgers stay clean. Errors if
+    /// a tier was already built for this store.
+    pub fn build_adj_halo(&self, budget: u64) -> Result<Option<HaloTierStats>> {
+        if self.adj_cache.is_none() {
+            return Ok(None);
+        }
+        self.adj_halo_capacity
+            .set(budget)
+            .map_err(|_| Error::Storage("adjacency halo tier built twice".into()))?;
+        let ranked = self.halos_ranked()?;
+        // Global candidate list: every (edge type, halo dst node) with
+        // its cut-edge count and exact pinned-entry cost.
+        struct Cand {
+            count: u32,
+            ei: usize,
+            v: u32,
+            bytes: u64,
+        }
+        let mut cands = Vec::new();
+        for (ei, (et, es)) in self.edges.iter().enumerate() {
+            let Topology::Paged { shards, time } = &es.topo else { continue };
+            let per_edge = if time.is_some() { 16u64 } else { 8 };
+            for &(v, count) in &ranked[&et.dst] {
+                let d = shards[es.dst_router.owner(v) as usize].in_degree(v) as u64;
+                cands.push(Cand { count, ei, v, bytes: d * per_edge });
+            }
+        }
+        cands.sort_by(|a, b| b.count.cmp(&a.count).then(a.ei.cmp(&b.ei)).then(a.v.cmp(&b.v)));
+        const PIN: u8 = 1;
+        const SPILL: u8 = 2;
+        let mut actions: Vec<Vec<u8>> =
+            self.edges.values().map(|es| vec![0u8; es.n_dst]).collect();
+        let (mut used, mut pinning) = (0u64, true);
+        for c in &cands {
+            if pinning && used + c.bytes > budget {
+                pinning = false;
+            }
+            if pinning {
+                used += c.bytes;
+                actions[c.ei][c.v as usize] = PIN;
+            } else {
+                actions[c.ei][c.v as usize] = SPILL;
+            }
+        }
+        let mut stats = HaloTierStats { capacity_bytes: budget, ..Default::default() };
+        for (ei, es) in self.edges.values().enumerate() {
+            let Topology::Paged { shards, time } = &es.topo else { continue };
+            let act = &actions[ei];
+            let rank = es.dst_router.local_rank();
+            let mut halo = AdjHaloCache::new(es.n_dst, time.is_some(), rank);
+            // Candidates' in-lists live with their owners: stream only
+            // the foreign shard files that actually hold one.
+            let mut part_has = vec![false; shards.len()];
+            for (v, &a) in act.iter().enumerate() {
+                if a != 0 {
+                    part_has[es.dst_router.owner(v as u32) as usize] = true;
+                }
+            }
+            let (mut blk, mut times) = (Vec::new(), Vec::new());
+            for (p, shard) in shards.iter().enumerate() {
+                if p as u32 == rank || !part_has[p] {
+                    continue;
+                }
+                let mut res = Ok(());
+                shard.stream_with_eids(false, |v, nbrs, eids| {
+                    if res.is_err() || act[v as usize] == 0 {
+                        return;
+                    }
+                    // Only the owner's shard holds v's in-list; the
+                    // other shards' rows for v are empty.
+                    if es.dst_router.owner(v) != p as u32 {
+                        return;
+                    }
+                    res = (|| {
+                        if act[v as usize] == PIN {
+                            times.clear();
+                            if let Some(t) = time {
+                                t.times_for_uncounted(eids, &mut times)?;
+                            }
+                            halo.pin(v, nbrs, eids, &times)
+                        } else {
+                            // Spilled entries seed the ordinary LRU
+                            // under the exact demand key (an ordinary
+                            // accounted insert — the LRU may evict it).
+                            blk.clear();
+                            blk.extend_from_slice(nbrs);
+                            blk.extend_from_slice(eids);
+                            shard.insert_in_block(v, &blk);
+                            halo.mark_spilled(v)
+                        }
+                    })();
+                })?;
+                res?;
+            }
+            stats.pinned_entries += halo.pinned_entries();
+            stats.pinned_bytes += halo.pinned_bytes();
+            stats.spilled_entries += halo.spilled_entries();
+            es.install_halo(Arc::new(halo))?;
+        }
+        Ok(Some(stats))
+    }
+
+    /// The adjacency halo tier's aggregate residency and traffic
+    /// counters, summed over edge types (`None` until
+    /// [`PartitionedGraphStore::build_adj_halo`] ran) — the halo third
+    /// of the [`crate::persist::MountCacheStats`] split.
+    pub fn adj_halo_stats(&self) -> Option<HaloTierStats> {
+        let cap = *self.adj_halo_capacity.get()?;
+        let mut s = HaloTierStats { capacity_bytes: cap, ..Default::default() };
+        for es in self.edges.values() {
+            if let Some(h) = es.adj_halo() {
+                s.pinned_entries += h.pinned_entries();
+                s.pinned_bytes += h.pinned_bytes();
+                s.spilled_entries += h.spilled_entries();
+                let cs = h.stats();
+                s.hits += cs.hits;
+                s.misses += cs.misses;
+            }
+        }
+        Some(s)
+    }
+
     /// Zero the paged-adjacency I/O counters — cache stats and
     /// per-shard disk reads — without dropping cached blocks (benches
     /// measure cold-vs-warm phases).
@@ -1067,6 +1317,9 @@ impl PartitionedGraphStore {
             cache.reset_stats();
             for es in self.edges.values() {
                 es.reset_paged_disk_reads();
+                if let Some(h) = es.adj_halo() {
+                    h.reset_stats();
+                }
             }
         }
     }

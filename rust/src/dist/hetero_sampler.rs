@@ -49,6 +49,9 @@ struct ShardExpansion<'s> {
     temporal: bool,
     /// Owner of the last `candidates()` dst — `took` charges it.
     owner: usize,
+    /// Whether the last `candidates()` dst was served by a pinned halo
+    /// replica — such expansions cost no message and no payload.
+    served: bool,
     touched: Vec<bool>,
     edges: Vec<u64>,
     /// Resident shards never touch it; paged shards fill it (lists and
@@ -92,6 +95,7 @@ impl AdjacencySource for ShardSource<'_> {
             edge_time: self.0.edge_time(et)?,
             temporal,
             owner: 0,
+            served: false,
             touched: vec![false; parts],
             edges: vec![0u64; parts],
             buf: AdjBuf::default(),
@@ -104,7 +108,13 @@ impl EdgeExpansion for ShardExpansion<'_> {
         // Adjacency from the owning shard — bit-identical to the global
         // CSC range of this edge type.
         self.owner = self.es.dst_owner(dst) as usize;
-        self.touched[self.owner] = true;
+        // A pinned halo replica serves this foreign in-list in-process:
+        // no message to its owner, no payload (`--halo-adj`). Sampling
+        // itself is unchanged — the replica is byte-identical.
+        self.served = self.es.halo_served(dst);
+        if !self.served {
+            self.touched[self.owner] = true;
+        }
         let (nbrs, eids, ptimes) = self.es.read_in_timed(dst, &mut self.buf, self.temporal)?;
         // Resident stores filter through the global array; paged mounts
         // through the per-candidate times just resolved — same
@@ -118,7 +128,9 @@ impl EdgeExpansion for ShardExpansion<'_> {
     }
 
     fn took(&mut self, _dst: u32, picked: usize) {
-        self.edges[self.owner] += picked as u64;
+        if !self.served {
+            self.edges[self.owner] += picked as u64;
+        }
     }
 
     /// Local-first fan-out accounting, per edge type: one local access

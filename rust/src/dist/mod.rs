@@ -48,6 +48,7 @@
 //! `tests/test_dist_equivalence.rs` (homogeneous) and
 //! `tests/test_dist_hetero_equivalence.rs` (typed).
 
+pub mod adj_halo_cache;
 pub mod async_router;
 pub mod feature_store;
 pub mod graph_store;
@@ -58,6 +59,7 @@ pub mod loader;
 pub mod prefetch;
 pub mod sampler;
 
+pub use adj_halo_cache::AdjHaloCache;
 pub use async_router::{AsyncRouter, FetchPlan, PendingFetch};
 pub use feature_store::{PartitionedFeatureStore, PartitionedStoreConfig};
 pub use graph_store::{EdgeShards, PartitionedGraphStore};

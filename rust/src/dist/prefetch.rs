@@ -28,12 +28,16 @@ use crate::util::ThreadPool;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Counters of one prefetcher: batches scheduled and warm jobs that hit
-/// an I/O error (and were dropped — warming is best-effort).
+/// Counters of one prefetcher: batches scheduled, warm jobs that hit
+/// an I/O error (and were dropped — warming is best-effort), and
+/// rows/edge-lists skipped because a halo tier already pins them
+/// resident (`--halo-cache` feature rows, `--halo-adj` in-edge lists —
+/// warming those would only duplicate bytes into the LRU).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PrefetchStats {
     pub scheduled: u64,
     pub failed: u64,
+    pub skipped: u64,
 }
 
 /// Speculative warmer for one mounted pipeline's caches.
@@ -56,6 +60,7 @@ pub struct MountPrefetcher {
     pool: ThreadPool,
     scheduled: AtomicU64,
     failed: Arc<AtomicU64>,
+    skipped: Arc<AtomicU64>,
 }
 
 impl MountPrefetcher {
@@ -86,6 +91,7 @@ impl MountPrefetcher {
             pool: ThreadPool::with_queue_capacity(1, Self::QUEUE_DEPTH),
             scheduled: AtomicU64::new(0),
             failed: Arc::new(AtomicU64::new(0)),
+            skipped: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -101,17 +107,29 @@ impl MountPrefetcher {
         let graph = Arc::clone(&self.graph);
         let features = Arc::clone(&self.features);
         let failed = Arc::clone(&self.failed);
+        let skipped = Arc::clone(&self.skipped);
         let seed_type = self.seed_type.clone();
         let warm_edges = self.warm_edges.clone();
         let seeds = seeds.to_vec();
         self.pool.submit(move || {
-            let mut ok = features.prefetch_rows(&seed_type, &seeds).is_ok();
+            let mut ok = true;
+            let mut skips = 0u64;
+            match features.prefetch_rows(&seed_type, &seeds) {
+                Ok(s) => skips += s,
+                Err(_) => ok = false,
+            }
             let mut buf = AdjBuf::default();
             for et in &warm_edges {
-                ok &= graph
+                match graph
                     .edges_of(et)
                     .and_then(|es| es.prefetch_in_lists(&seeds, &mut buf))
-                    .is_ok();
+                {
+                    Ok(s) => skips += s,
+                    Err(_) => ok = false,
+                }
+            }
+            if skips > 0 {
+                skipped.fetch_add(skips, Ordering::Relaxed);
             }
             if !ok {
                 failed.fetch_add(1, Ordering::Relaxed);
@@ -129,6 +147,7 @@ impl MountPrefetcher {
         PrefetchStats {
             scheduled: self.scheduled.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            skipped: self.skipped.load(Ordering::Relaxed),
         }
     }
 }
@@ -165,7 +184,7 @@ mod tests {
         pf.schedule(&seeds);
         pf.schedule(&[]); // empty batches are not scheduled
         pf.drain();
-        assert_eq!(pf.stats(), PrefetchStats { scheduled: 1, failed: 0 });
+        assert_eq!(pf.stats(), PrefetchStats { scheduled: 1, failed: 0, skipped: 0 });
 
         // No router traffic, no demand hits/misses — only prefetch
         // residency and early disk reads.
@@ -181,6 +200,6 @@ mod tests {
         // Out-of-range ids are skipped, not errors (speculative warming).
         pf.schedule(&[5, 1_000_000]);
         pf.drain();
-        assert_eq!(pf.stats(), PrefetchStats { scheduled: 2, failed: 0 });
+        assert_eq!(pf.stats(), PrefetchStats { scheduled: 2, failed: 0, skipped: 0 });
     }
 }

@@ -114,6 +114,11 @@ impl DistNeighborSampler {
                 let dst_global = out.nodes[dst_local as usize];
                 let tree = batch_vec[dst_local as usize];
                 let owner = router.owner(dst_global) as usize;
+                // A pinned halo replica serves this foreign in-list
+                // in-process: no message to its owner, no payload — the
+                // replication trade `--halo-adj` buys. (Sampling itself
+                // is unchanged: the replica is byte-identical.)
+                let served = es.halo_served(dst_global);
                 // In-neighbors from the owning shard.
                 let (nbrs, eids) = es.read_in(dst_global, &mut abuf)?;
                 sample_from(
@@ -126,8 +131,10 @@ impl DistNeighborSampler {
                     &mut rng,
                     &mut scratch,
                 );
-                hop_touched[owner] = true;
-                hop_edges[owner] += (scratch.len() / 2) as u64;
+                if !served {
+                    hop_touched[owner] = true;
+                    hop_edges[owner] += (scratch.len() / 2) as u64;
+                }
                 for k in 0..scratch.len() / 2 {
                     let nbr = scratch[k * 2];
                     let eid = scratch[k * 2 + 1];
@@ -142,6 +149,9 @@ impl DistNeighborSampler {
                     out.edge_ids.push(eid);
                 }
                 // Out-neighbors (bidirectional mode), same shard routing.
+                // The halo tier replicates in-lists only, so this read
+                // always goes to the owner: mark it touched even when
+                // the in-read above was halo-served.
                 if bidirectional {
                     let (nbrs, eids) = es.read_out(dst_global, &mut abuf)?;
                     sample_from(
@@ -154,6 +164,7 @@ impl DistNeighborSampler {
                         &mut rng,
                         &mut scratch,
                     );
+                    hop_touched[owner] = true;
                     hop_edges[owner] += (scratch.len() / 2) as u64;
                     for k in 0..scratch.len() / 2 {
                         let nbr = scratch[k * 2];

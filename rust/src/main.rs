@@ -199,6 +199,7 @@ fn cmd_dist(args: &Args) -> pyg2::Result<()> {
         latency: std::time::Duration::from_micros(args.get_usize("latency-us", 0) as u64),
         prefetch: mount.prefetch,
         io_backend: mount.io_backend,
+        halo_adj: mount.halo_adj,
     };
     if mount.mounted() {
         return cmd_dist_mounted(args, &mount, batch, workers, epochs, opts);
@@ -304,14 +305,17 @@ fn cmd_dist_mounted(
     let lru = mount.lru();
     log::info!(
         "mounted bundle {dir}: {} partitions, {} node types, {} edge types, \
-         cache budget {} bytes ({} rows / {} adjacency{}), {} backend{}",
+         cache budget {} bytes ({} rows / {} adjacency / {} halo tier{}{}), \
+         {} backend{}",
         bundle.num_parts(),
         bundle.manifest().node_types.len(),
         bundle.manifest().edge_types.len(),
         lru.capacity_bytes,
         lru.row_budget(),
         lru.adj_budget(),
+        lru.halo_budget(),
         if lru.page_adjacency { ", adjacency demand-paged" } else { "" },
+        if mount.halo_adj { ", halo in-lists replicated" } else { "" },
         mount.io_backend,
         if mount.prefetch { ", pipeline prefetch" } else { "" }
     );
@@ -350,13 +354,16 @@ fn cmd_dist_mounted(
                 println!("rank {r} adjacency disk reads: {}", report.adj_disk_reads[r]);
                 println!("rank {r} cache budget split: {}", report.mount_cache_stats(r));
             }
+            if let Some(ht) = &report.adj_halo[r] {
+                println!("rank {r} adjacency halo tier: {ht}");
+            }
             if let Some(h) = &report.halo[r] {
                 println!("rank {r} halo cache: {h}");
             }
             if let Some(pf) = &report.prefetch[r] {
                 println!(
-                    "rank {r} prefetch: {} batches warmed, {} failed",
-                    pf.scheduled, pf.failed
+                    "rank {r} prefetch: {} batches warmed, {} failed, {} halo skips",
+                    pf.scheduled, pf.failed, pf.skipped
                 );
             }
         }
@@ -444,12 +451,15 @@ fn cmd_dist_mounted(
 /// row/adjacency cache provenance that tells how much warming paid off.
 fn print_prefetch(stats: Option<pyg2::dist::PrefetchStats>) {
     if let Some(pf) = stats {
-        println!("prefetch: {} batches warmed, {} failed", pf.scheduled, pf.failed);
+        println!(
+            "prefetch: {} batches warmed, {} failed, {} halo skips",
+            pf.scheduled, pf.failed, pf.skipped
+        );
     }
 }
 
-/// Shared mount I/O report: the row-cache / adjacency-cache split of
-/// the budget plus the positioned-read counters of both paged paths.
+/// Shared mount I/O report: the halo / row-cache / adjacency-cache split
+/// of the budget plus the positioned-read counters of both paged paths.
 fn print_mount_io(
     fs: &pyg2::dist::PartitionedFeatureStore,
     gs: &pyg2::dist::PartitionedGraphStore,
@@ -458,7 +468,11 @@ fn print_mount_io(
         println!("row cache: {rc}");
         if let Some(ac) = gs.adj_cache_stats() {
             println!("adjacency cache: {ac}");
-            let split = pyg2::persist::MountCacheStats { rows: rc, adj: Some(ac) };
+            let halo = gs.adj_halo_stats();
+            if let Some(ht) = &halo {
+                println!("adjacency halo tier: {ht}");
+            }
+            let split = pyg2::persist::MountCacheStats { rows: rc, adj: Some(ac), halo };
             println!("cache budget split: {split}");
         }
     }
@@ -491,6 +505,7 @@ fn cmd_serve_dist(args: &Args) -> pyg2::Result<()> {
         latency: Duration::from_micros(args.get_usize("latency-us", 0) as u64),
         prefetch: mount.prefetch,
         io_backend: mount.io_backend,
+        halo_adj: mount.halo_adj,
     };
     let cfg = ServeDistConfig {
         max_batch: args.get_usize("max-batch", 16),

@@ -76,6 +76,18 @@ pub struct LruConfig {
     /// paging (`--adj-cache-mb`). `0` defaults to a quarter of the
     /// total. Ignored unless `page_adjacency` is set.
     pub adj_capacity_bytes: u64,
+    /// Replicate halo in-edge lists (and their timestamps) into a
+    /// pinned [`crate::dist::AdjHaloCache`] tier at mount
+    /// (`pyg2 dist --mount DIR --page-adj --halo-adj`). Carves
+    /// [`LruConfig::halo_budget`] out of `capacity_bytes`; entries the
+    /// share cannot pin spill into the ordinary [`AdjCache`] LRU. A
+    /// no-op on resident (non-paged) mounts, where the whole topology
+    /// is already local.
+    pub halo_adj: bool,
+    /// Bytes of `capacity_bytes` reserved for the pinned halo tier
+    /// (`--halo-adj-mb`). `0` defaults to a quarter of the total.
+    /// Ignored unless `halo_adj` and `page_adjacency` are both set.
+    pub halo_adj_capacity_bytes: u64,
 }
 
 impl Default for LruConfig {
@@ -86,6 +98,8 @@ impl Default for LruConfig {
             capacity_bytes: 64 * 1024 * 1024,
             page_adjacency: false,
             adj_capacity_bytes: 0,
+            halo_adj: false,
+            halo_adj_capacity_bytes: 0,
         }
     }
 }
@@ -103,16 +117,34 @@ impl LruConfig {
         }
     }
 
-    /// The row cache's share: whatever the adjacency share leaves.
-    pub fn row_budget(&self) -> u64 {
-        self.capacity_bytes.saturating_sub(self.adj_budget())
+    /// The pinned halo tier's share: `halo_adj_capacity_bytes` when
+    /// set, else a quarter of the total; zero unless both adjacency
+    /// paging and halo replication are on (a resident mount's topology
+    /// is already local, so the tier pins nothing there).
+    pub fn halo_budget(&self) -> u64 {
+        if !self.page_adjacency || !self.halo_adj {
+            0
+        } else if self.halo_adj_capacity_bytes > 0 {
+            self.halo_adj_capacity_bytes
+        } else {
+            self.capacity_bytes / 4
+        }
     }
 
-    /// Reject splits where the adjacency share swallows the whole
-    /// budget (the row cache must keep a nonzero share), and an
-    /// adjacency share configured with paging off — silently ignoring
-    /// `--adj-cache-mb` would leave the user believing a byte bound
-    /// applies to a fully resident topology.
+    /// The row cache's share: whatever the adjacency and halo shares
+    /// leave.
+    pub fn row_budget(&self) -> u64 {
+        self.capacity_bytes
+            .saturating_sub(self.adj_budget())
+            .saturating_sub(self.halo_budget())
+    }
+
+    /// Reject splits where the adjacency + halo shares swallow the
+    /// whole budget (the row cache must keep a nonzero share), and
+    /// shares that would be silently ignored — `--adj-cache-mb`
+    /// without paging, `--halo-adj-mb` without an active halo tier —
+    /// which would leave the user believing a byte bound applies where
+    /// none does.
     pub fn validate(&self) -> crate::error::Result<()> {
         if !self.page_adjacency && self.adj_capacity_bytes > 0 {
             return Err(crate::error::Error::Config(
@@ -121,11 +153,20 @@ impl LruConfig {
                     .into(),
             ));
         }
-        if self.page_adjacency && self.adj_budget() >= self.capacity_bytes {
+        if self.halo_adj_capacity_bytes > 0 && self.halo_budget() == 0 {
+            return Err(crate::error::Error::Config(
+                "a halo tier share (--halo-adj-mb) only applies with halo replication \
+                 on a paged mount (--halo-adj --page-adj)"
+                    .into(),
+            ));
+        }
+        if self.page_adjacency && self.adj_budget() + self.halo_budget() >= self.capacity_bytes
+        {
             return Err(crate::error::Error::Config(format!(
-                "adjacency cache share ({} bytes) must be smaller than the total \
-                 cache budget ({} bytes)",
+                "adjacency ({}) + halo ({}) cache shares must be smaller than the \
+                 total cache budget ({} bytes)",
                 self.adj_budget(),
+                self.halo_budget(),
                 self.capacity_bytes
             )));
         }
@@ -204,11 +245,70 @@ impl std::fmt::Display for RowCacheStats {
     }
 }
 
-/// The row-cache / adjacency-cache split of one mount's shared budget.
-/// `rows.capacity_bytes + adj.capacity_bytes` never exceeds the
-/// [`LruConfig::capacity_bytes`] the mount was given, so
-/// [`MountCacheStats::bytes_cached`] (and the peak) are bounded by it
-/// too — the joint ceiling `tests/test_persist_equivalence.rs` asserts.
+/// Counters of one mount's pinned halo tier (the
+/// [`crate::dist::AdjHaloCache`] replicas, plus the bounded feature
+/// halo when both halo tiers are on): replication is decided once at
+/// mount, so residency is a constant `pinned_bytes`, and entries the
+/// budget could not pin are `spilled_entries` warming the ordinary
+/// LRUs instead.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HaloTierStats {
+    /// Halo entries pinned in the tier (edge lists and feature rows).
+    pub pinned_entries: u64,
+    /// Bytes those pinned entries hold resident — constant after
+    /// mount, charged against the tier's budget share.
+    pub pinned_bytes: u64,
+    /// Halo entries the budget could not pin, spilled into the
+    /// ordinary LRU caches (still bounded by *their* shares).
+    pub spilled_entries: u64,
+    /// Requests served from the pinned tier (no LRU probe, no disk).
+    pub hits: u64,
+    /// Requests for halo entries the tier does not pin (they fall
+    /// through to the LRU → disk path).
+    pub misses: u64,
+    /// The tier's configured budget share.
+    pub capacity_bytes: u64,
+}
+
+impl HaloTierStats {
+    pub fn total_requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of halo requests the pinned tier absorbed.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total_requests();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for HaloTierStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} pinned entries / {} bytes (of {} budget), {} spilled, hits={} misses={} \
+             ({:.1}% hit rate)",
+            self.pinned_entries,
+            self.pinned_bytes,
+            self.capacity_bytes,
+            self.spilled_entries,
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate()
+        )
+    }
+}
+
+/// The halo-tier / row-cache / adjacency-cache split of one mount's
+/// shared budget. `halo.capacity_bytes + rows.capacity_bytes +
+/// adj.capacity_bytes` never exceeds the [`LruConfig::capacity_bytes`]
+/// the mount was given, so [`MountCacheStats::bytes_cached`] (and the
+/// peak) are bounded by it too — the joint ceiling
+/// `tests/test_persist_equivalence.rs` asserts.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MountCacheStats {
     /// The feature-row cache's counters.
@@ -216,38 +316,53 @@ pub struct MountCacheStats {
     /// The adjacency block cache's counters (`None` when the mount is
     /// not paging adjacency).
     pub adj: Option<RowCacheStats>,
+    /// The pinned halo tier's counters (`None` unless `--halo-adj` is
+    /// active on a paged mount).
+    pub halo: Option<HaloTierStats>,
 }
 
 impl MountCacheStats {
-    /// Resident bytes across both caches.
+    /// Resident bytes across every tier (pinned halo replicas included
+    /// — they are resident payload under the same mount budget).
     pub fn bytes_cached(&self) -> u64 {
-        self.rows.bytes_cached + self.adj.map_or(0, |a| a.bytes_cached)
+        self.rows.bytes_cached
+            + self.adj.map_or(0, |a| a.bytes_cached)
+            + self.halo.map_or(0, |h| h.pinned_bytes)
     }
 
-    /// Combined high-water mark (sum of the two caches' peaks — an
-    /// upper bound on simultaneous residency).
+    /// Combined high-water mark (sum of the tiers' peaks — an upper
+    /// bound on simultaneous residency; the pinned tier's residency is
+    /// constant, so its peak is its `pinned_bytes`).
     pub fn peak_bytes(&self) -> u64 {
-        self.rows.peak_bytes + self.adj.map_or(0, |a| a.peak_bytes)
+        self.rows.peak_bytes
+            + self.adj.map_or(0, |a| a.peak_bytes)
+            + self.halo.map_or(0, |h| h.pinned_bytes)
     }
 
-    /// Combined configured budget (row share + adjacency share).
+    /// Combined configured budget (row + adjacency + halo shares).
     pub fn capacity_bytes(&self) -> u64 {
-        self.rows.capacity_bytes + self.adj.map_or(0, |a| a.capacity_bytes)
+        self.rows.capacity_bytes
+            + self.adj.map_or(0, |a| a.capacity_bytes)
+            + self.halo.map_or(0, |h| h.capacity_bytes)
     }
 }
 
 impl std::fmt::Display for MountCacheStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match &self.adj {
-            Some(adj) => write!(
-                f,
-                "rows [{}] + adjacency [{}] = {} bytes resident (peak {}) of {} total budget",
-                self.rows,
-                adj,
-                self.bytes_cached(),
-                self.peak_bytes(),
-                self.capacity_bytes()
-            ),
+            Some(adj) => {
+                write!(f, "rows [{}] + adjacency [{}]", self.rows, adj)?;
+                if let Some(halo) = &self.halo {
+                    write!(f, " + halo [{halo}]")?;
+                }
+                write!(
+                    f,
+                    " = {} bytes resident (peak {}) of {} total budget",
+                    self.bytes_cached(),
+                    self.peak_bytes(),
+                    self.capacity_bytes()
+                )
+            }
             None => write!(f, "rows [{}] (adjacency resident, not paged)", self.rows),
         }
     }
@@ -818,22 +933,106 @@ mod tests {
         assert_eq!((whole.row_budget(), whole.adj_budget()), (1000, 0));
         whole.validate().unwrap();
 
-        let paged = LruConfig { capacity_bytes: 1000, page_adjacency: true, adj_capacity_bytes: 0 };
+        let paged =
+            LruConfig { capacity_bytes: 1000, page_adjacency: true, ..Default::default() };
         assert_eq!((paged.row_budget(), paged.adj_budget()), (750, 250));
         assert_eq!(paged.row_budget() + paged.adj_budget(), paged.capacity_bytes);
         paged.validate().unwrap();
 
-        let explicit =
-            LruConfig { capacity_bytes: 1000, page_adjacency: true, adj_capacity_bytes: 600 };
+        let explicit = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: true,
+            adj_capacity_bytes: 600,
+            ..Default::default()
+        };
         assert_eq!((explicit.row_budget(), explicit.adj_budget()), (400, 600));
         explicit.validate().unwrap();
 
-        let hog = LruConfig { capacity_bytes: 1000, page_adjacency: true, adj_capacity_bytes: 1000 };
+        let hog = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: true,
+            adj_capacity_bytes: 1000,
+            ..Default::default()
+        };
         assert!(hog.validate().is_err(), "adjacency share must not swallow the budget");
 
-        let ignored =
-            LruConfig { capacity_bytes: 1000, page_adjacency: false, adj_capacity_bytes: 100 };
+        let ignored = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: false,
+            adj_capacity_bytes: 100,
+            ..Default::default()
+        };
         assert!(ignored.validate().is_err(), "adjacency share without paging is a misconfig");
+    }
+
+    #[test]
+    fn halo_share_stacks_under_the_same_ceiling() {
+        // Defaulted shares: a quarter each for adjacency and halo, the
+        // rest to rows — still exhaustive.
+        let tiered = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: true,
+            halo_adj: true,
+            ..Default::default()
+        };
+        assert_eq!(
+            (tiered.row_budget(), tiered.adj_budget(), tiered.halo_budget()),
+            (500, 250, 250)
+        );
+        assert_eq!(
+            tiered.row_budget() + tiered.adj_budget() + tiered.halo_budget(),
+            tiered.capacity_bytes
+        );
+        tiered.validate().unwrap();
+
+        let explicit = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: true,
+            adj_capacity_bytes: 100,
+            halo_adj: true,
+            halo_adj_capacity_bytes: 300,
+            ..Default::default()
+        };
+        assert_eq!(
+            (explicit.row_budget(), explicit.adj_budget(), explicit.halo_budget()),
+            (600, 100, 300)
+        );
+        explicit.validate().unwrap();
+
+        // Halo replication without paging is a no-op: zero share, rows
+        // keep the remainder, and validate accepts the flag alone.
+        let resident =
+            LruConfig { capacity_bytes: 1000, halo_adj: true, ..Default::default() };
+        assert_eq!((resident.row_budget(), resident.halo_budget()), (1000, 0));
+        resident.validate().unwrap();
+
+        // ...but an explicit halo share that would be silently ignored
+        // is a misconfig, like --adj-cache-mb without --page-adj.
+        let ignored = LruConfig {
+            capacity_bytes: 1000,
+            halo_adj: true,
+            halo_adj_capacity_bytes: 100,
+            ..Default::default()
+        };
+        assert!(ignored.validate().is_err(), "halo share without a paged mount is ignored");
+        let no_flag = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: true,
+            halo_adj_capacity_bytes: 100,
+            ..Default::default()
+        };
+        assert!(no_flag.validate().is_err(), "halo share without --halo-adj is ignored");
+
+        // The three shares jointly must leave rows a nonzero slice.
+        let hog = LruConfig {
+            capacity_bytes: 1000,
+            page_adjacency: true,
+            adj_capacity_bytes: 500,
+            halo_adj: true,
+            halo_adj_capacity_bytes: 500,
+            ..Default::default()
+        };
+        assert!(hog.validate().is_err(), "adj + halo must not swallow the budget");
     }
 
     #[test]
@@ -873,7 +1072,12 @@ mod tests {
 
     #[test]
     fn mount_stats_report_the_split_and_the_joint_ceiling() {
-        let cfg = LruConfig { capacity_bytes: 64, page_adjacency: true, adj_capacity_bytes: 16 };
+        let cfg = LruConfig {
+            capacity_bytes: 64,
+            page_adjacency: true,
+            adj_capacity_bytes: 16,
+            ..Default::default()
+        };
         let rows = RowCache::new(cfg);
         let adj = AdjCache::new(cfg.adj_budget());
         assert_eq!(rows.capacity_bytes(), 48);
@@ -882,14 +1086,51 @@ mod tests {
             rows.insert(k, &[k as f32, 0.0]);
             adj.insert(k, &[k as u32]);
         }
-        let combined = MountCacheStats { rows: rows.stats(), adj: Some(adj.stats()) };
+        let combined =
+            MountCacheStats { rows: rows.stats(), adj: Some(adj.stats()), halo: None };
         assert_eq!(combined.capacity_bytes(), cfg.capacity_bytes);
         assert!(combined.bytes_cached() <= cfg.capacity_bytes);
         assert!(combined.peak_bytes() <= cfg.capacity_bytes);
         let shown = combined.to_string();
         assert!(shown.contains("adjacency"), "{shown}");
-        let unsplit = MountCacheStats { rows: rows.stats(), adj: None };
+        let unsplit = MountCacheStats { rows: rows.stats(), adj: None, halo: None };
         assert_eq!(unsplit.capacity_bytes(), 48);
         assert!(unsplit.to_string().contains("not paged"));
+    }
+
+    #[test]
+    fn mount_stats_charge_the_pinned_halo_tier() {
+        let cfg = LruConfig {
+            capacity_bytes: 128,
+            page_adjacency: true,
+            adj_capacity_bytes: 16,
+            halo_adj: true,
+            halo_adj_capacity_bytes: 32,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let rows = RowCache::new(cfg);
+        let adj = AdjCache::new(cfg.adj_budget());
+        rows.insert(0, &[1.0, 2.0]);
+        adj.insert(0, &[1, 2]);
+        let halo = HaloTierStats {
+            pinned_entries: 3,
+            pinned_bytes: 24,
+            spilled_entries: 2,
+            hits: 9,
+            misses: 1,
+            capacity_bytes: cfg.halo_budget(),
+        };
+        assert!((halo.hit_rate() - 0.9).abs() < 1e-12);
+        let combined =
+            MountCacheStats { rows: rows.stats(), adj: Some(adj.stats()), halo: Some(halo) };
+        // Shares are exhaustive and the pinned bytes count as resident
+        // under the same ceiling the LRU tiers answer to.
+        assert_eq!(combined.capacity_bytes(), cfg.capacity_bytes);
+        assert_eq!(combined.bytes_cached(), 8 + 8 + 24);
+        assert!(combined.peak_bytes() <= cfg.capacity_bytes);
+        let shown = combined.to_string();
+        assert!(shown.contains("halo"), "{shown}");
+        assert!(shown.contains("2 spilled"), "{shown}");
     }
 }

@@ -335,6 +335,24 @@ impl AdjBuf {
         let AdjBuf { block, times, bytes, tblock, tblock_key, twords } = self;
         t.times_for_into(&block[d..], times, bytes, tblock, tblock_key, twords)
     }
+
+    /// Fill the buffer from an already-decoded `(neighbors, edge ids)`
+    /// pair — the halo-replica serve path, which holds blocks outside
+    /// any paged shard but must hand them out through the same
+    /// [`AdjBuf::nbrs_eids`] view the demand-paged reads use.
+    pub fn fill(&mut self, nbrs: &[u32], eids: &[u32]) {
+        debug_assert_eq!(nbrs.len(), eids.len());
+        self.block.clear();
+        self.block.extend_from_slice(nbrs);
+        self.block.extend_from_slice(eids);
+    }
+
+    /// Fill [`AdjBuf::times`] from already-resolved per-candidate
+    /// timestamps (aligned with the last [`AdjBuf::fill`]).
+    pub fn fill_times(&mut self, times: &[i64]) {
+        self.times.clear();
+        self.times.extend_from_slice(times);
+    }
 }
 
 /// A disk-backed CSC/CSR adjacency shard paging neighbor-list blocks
@@ -534,6 +552,24 @@ impl PagedAdjacency {
     /// perturbing the batch stream.
     pub fn warm_in(&self, v: u32, buf: &mut AdjBuf) -> Result<()> {
         self.fetch(Dir::In, v, buf, true)
+    }
+
+    /// In-degree of dst node `v`, answered from the resident CSC
+    /// `indptr` — no I/O. The halo-replication planner uses this to
+    /// size candidate entries before deciding what to pin.
+    pub fn in_degree(&self, v: u32) -> usize {
+        let ip = &self.csc_indptr;
+        (ip[v as usize + 1] - ip[v as usize]) as usize
+    }
+
+    /// Seed the shared [`AdjCache`] with an already-decoded in-list
+    /// block of `v` under the exact key a demand-paged
+    /// [`PagedAdjacency::in_list`] would probe — the spill path of the
+    /// halo tier, which warms cold halo entries into the ordinary LRU
+    /// instead of pinning them. Ordinary (non-prefetch-tagged) insert:
+    /// spilled entries count as cache residency, not speculation.
+    pub fn insert_in_block(&self, v: u32, block: &[u32]) {
+        self.cache.insert(self.key(Dir::In, v), block);
     }
 
     fn list(&self, dir: Dir, v: u32, buf: &mut AdjBuf) -> Result<()> {
@@ -920,6 +956,30 @@ impl PagedEdgeTime {
             }
             *tblock_key = key;
             out.push(tblock[slot]);
+        }
+        Ok(())
+    }
+
+    /// Resolve the timestamps of `eids` into `out` without touching the
+    /// read ledger **or the cache** — setup-time extraction (the halo
+    /// replication planner) uses this so mounting neither skews the
+    /// epoch I/O counters nor floods the LRU with blocks the epoch may
+    /// never revisit.
+    pub(crate) fn times_for_uncounted(&self, eids: &[u32], out: &mut Vec<i64>) -> Result<()> {
+        out.clear();
+        out.reserve(eids.len());
+        let mut bytes = [0u8; 8];
+        for &e in eids {
+            let e = e as usize;
+            if e >= self.num_edges {
+                return Err(io::bad(
+                    self.file.path(),
+                    &format!("edge id {e} out of range ({} edges)", self.num_edges),
+                ));
+            }
+            // Payload starts after the i64 array file's 16-byte header.
+            self.file.pread_uncounted(16 + e as u64 * 8, &mut bytes)?;
+            out.push(u64::from_le_bytes(bytes) as i64);
         }
         Ok(())
     }

@@ -185,3 +185,135 @@ fn paged_structural_summaries_match_resident_decode() {
     assert!(paged.csc(&et).is_err());
     assert!(paged.csr(&et).is_err());
 }
+
+#[test]
+fn halo_tier_serves_byte_identical_lists_with_pins_and_spills() {
+    // The halo-replication property: every halo in-list a tiered mount
+    // serves — pinned in the AdjHaloCache or spilled into the AdjCache
+    // LRU — is byte-identical to the resident decode, and pinned
+    // entries are served with ZERO disk reads.
+    let mut rng = Rng::new(0x4A10);
+    let g = sbm::generate(&SbmConfig { num_nodes: 200, seed: 21, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("halo_homo"), &g, &p).unwrap();
+    let resident = PartitionedGraphStore::mount(&bundle, 1).unwrap();
+    let halos = resident.halo_nodes(DEFAULT_GROUP).unwrap();
+    assert!(!halos.is_empty(), "a 4-part SBM cut must produce halo nodes");
+
+    // A 256-byte share forces spills; 1 MiB pins the whole replica.
+    for budget in [256u64, 1 << 20] {
+        let tiered =
+            PartitionedGraphStore::mount_paged(&bundle, 1, Arc::new(AdjCache::new(1 << 20)))
+                .unwrap();
+        let stats = tiered.build_adj_halo(budget).unwrap().expect("paged mounts build a tier");
+        assert_eq!(
+            stats.pinned_entries + stats.spilled_entries,
+            halos.len() as u64,
+            "every halo node is either pinned or spilled"
+        );
+        assert!(stats.pinned_bytes <= budget, "pin bytes respect the share: {stats}");
+        if budget == 256 {
+            assert!(stats.spilled_entries > 0, "256 bytes cannot hold the replica: {stats}");
+            assert!(stats.pinned_entries > 0, "the hottest entries still pin: {stats}");
+        } else {
+            assert_eq!(stats.spilled_entries, 0, "1 MiB pins everything: {stats}");
+        }
+
+        let et = default_edge_type();
+        let res_es = resident.edges_of(&et).unwrap();
+        let tier_es = tiered.edges_of(&et).unwrap();
+        let mut rb = AdjBuf::default();
+        let mut pb = AdjBuf::default();
+        let mut pinned_seen = 0u64;
+        for &v in &halos {
+            let before = tiered.adj_disk_reads().unwrap();
+            let (rn, re) = res_es.read_in(v, &mut rb).unwrap();
+            let (pn, pe) = tier_es.read_in(v, &mut pb).unwrap();
+            assert_eq!(rn, pn, "halo in-neighbors of {v}");
+            assert_eq!(re, pe, "halo in-edge ids of {v}");
+            if tier_es.halo_served(v) {
+                pinned_seen += 1;
+                assert_eq!(
+                    tiered.adj_disk_reads().unwrap(),
+                    before,
+                    "pinned halo {v} must be served without a disk read"
+                );
+            }
+        }
+        assert_eq!(pinned_seen, stats.pinned_entries, "halo_served ⇔ pinned");
+        // Non-halo nodes and out-lists fall through untouched.
+        assert_identical_lists(&resident, &tiered, &et, 200, 200, 150, &mut rng);
+    }
+}
+
+#[test]
+fn halo_tier_replicates_typed_timestamps_byte_identically() {
+    let mut rng = Rng::new(0x4A11);
+    let mut g = hetero::generate(&HeteroSbmConfig {
+        num_users: 100,
+        num_items: 70,
+        num_tags: 25,
+        seed: 31,
+        ..Default::default()
+    })
+    .unwrap();
+    // Stamp one relation so the tier's timestamp replication (and the
+    // spill path's eid-based time resolution) is exercised end to end.
+    let timed_et = g.edge_types().next().unwrap().clone();
+    let ne = g.edge_store(&timed_et).unwrap().edge_index.num_edges();
+    let times: Vec<i64> = (0..ne as i64).map(|e| (e * 53 + 7) % 200 - 100).collect();
+    g.set_edge_time(&timed_et, times).unwrap();
+    let tp = TypedPartitioning::ldg_hetero(&g, 3, 1.1).unwrap();
+    let bundle = write_bundle_hetero(tmp("halo_hetero"), &g, &tp).unwrap();
+    let resident = PartitionedGraphStore::mount(&bundle, 1).unwrap();
+    let halos = resident.halos().unwrap();
+
+    for budget in [512u64, 1 << 20] {
+        let tiered =
+            PartitionedGraphStore::mount_paged(&bundle, 1, Arc::new(AdjCache::new(1 << 20)))
+                .unwrap();
+        let stats = tiered.build_adj_halo(budget).unwrap().expect("typed tier built");
+        assert!(stats.pinned_bytes <= budget, "{stats}");
+        if budget == 512 {
+            assert!(stats.spilled_entries > 0, "{stats}");
+        } else {
+            assert_eq!(stats.spilled_entries, 0, "{stats}");
+        }
+
+        for et in resident.edge_types() {
+            let res_es = resident.edges_of(&et).unwrap();
+            let tier_es = tiered.edges_of(&et).unwrap();
+            let time = res_es.resident_edge_time().cloned();
+            let mut rb = AdjBuf::default();
+            let mut pb = AdjBuf::default();
+            for &v in &halos[&et.dst] {
+                let before = tiered.adj_disk_reads().unwrap();
+                let (rn, re) = res_es.read_in(v, &mut rb).unwrap();
+                let (pn, pe, pt) =
+                    tier_es.read_in_timed(v, &mut pb, time.is_some()).unwrap();
+                assert_eq!(rn, pn, "{}: halo in-neighbors of {v}", et.key());
+                assert_eq!(re, pe, "{}: halo in-edge ids of {v}", et.key());
+                if let Some(times) = &time {
+                    let expect: Vec<i64> = re.iter().map(|&e| times[e as usize]).collect();
+                    assert_eq!(
+                        pt.expect("timed relation resolves timestamps"),
+                        &expect[..],
+                        "{}: replicated timestamps of {v}",
+                        et.key()
+                    );
+                }
+                if tier_es.halo_served(v) {
+                    assert_eq!(
+                        tiered.adj_disk_reads().unwrap(),
+                        before,
+                        "{}: pinned halo {v} served without disk (timestamps included)",
+                        et.key()
+                    );
+                }
+            }
+            let n_dst = resident.num_nodes(&et.dst).unwrap();
+            let n_src = resident.num_nodes(&et.src).unwrap();
+            assert_identical_lists(&resident, &tiered, &et, n_dst, n_src, 80, &mut rng);
+        }
+    }
+}

@@ -636,6 +636,7 @@ fn paged_adjacency_budget_is_a_hard_ceiling_and_warm_epochs_read_less() {
         capacity_bytes: LruConfig::default().capacity_bytes,
         page_adjacency: true,
         adj_capacity_bytes: 512,
+        ..Default::default()
     };
     let mounted =
         mounted_loader(&bundle, 0, seeds, loader_cfg(2), DistOptions::default(), lru).unwrap();
@@ -734,7 +735,251 @@ fn adjacency_share_swallowing_the_budget_is_rejected() {
         capacity_bytes: 1024,
         page_adjacency: true,
         adj_capacity_bytes: 1024,
+        ..Default::default()
     };
     assert!(mounted_loader(&bundle, 0, vec![0], loader_cfg(1), DistOptions::default(), lru)
         .is_err());
+}
+
+/// The tiered paged mount: `--page-adj --halo-adj` under the default
+/// shared budget, whose halo share is roomy enough to pin every halo
+/// in-list of the small test graphs.
+fn halo_adj_lru() -> LruConfig {
+    LruConfig { page_adjacency: true, halo_adj: true, ..Default::default() }
+}
+
+#[test]
+fn adjacency_halo_tier_is_seed_for_seed_invisible_homogeneous() {
+    // The house rule for the halo tier: batches are byte-identical with
+    // the tier on or off — sync and async/halo-cached, paged and
+    // resident — because the tier only changes *where* in-list bytes
+    // come from, never which bytes.
+    let g = sbm_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_halo_adj"), &g, &partitioning).unwrap();
+
+    let legs = [
+        DistOptions::default(),
+        DistOptions {
+            halo_cache: true,
+            async_fetch: true,
+            async_workers: 2,
+            latency: std::time::Duration::from_micros(20),
+            ..Default::default()
+        },
+    ];
+    for (i, base) in legs.into_iter().enumerate() {
+        let off =
+            mounted_loader(&bundle, 1, seeds.clone(), loader_cfg(2), base, paged_lru())
+                .unwrap();
+        let on = mounted_loader(
+            &bundle,
+            1,
+            seeds.clone(),
+            loader_cfg(3),
+            DistOptions { halo_adj: true, ..base },
+            paged_lru(),
+        )
+        .unwrap();
+        // A resident mount already holds the whole topology locally:
+        // --halo-adj must be an accepted no-op there.
+        let resident = mounted_loader(
+            &bundle,
+            1,
+            seeds.clone(),
+            loader_cfg(2),
+            DistOptions { halo_adj: true, ..base },
+            LruConfig::default(),
+        )
+        .unwrap();
+        for epoch in 0..2u64 {
+            let a: Vec<Batch> = off.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+            let b: Vec<Batch> = on.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+            let c: Vec<Batch> = resident.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+            assert_eq!(a.len(), b.len(), "leg {i}");
+            assert_eq!(a.len(), c.len(), "leg {i}");
+            for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+                assert_batches_identical(x, y);
+                assert_batches_identical(x, z);
+            }
+        }
+
+        // The tier exists exactly where it should and actually served.
+        assert!(off.graph().adj_halo_stats().is_none(), "leg {i}: no tier without --halo-adj");
+        assert!(
+            resident.graph().adj_halo_stats().is_none(),
+            "leg {i}: no tier on resident mounts"
+        );
+        let tier = on.graph().adj_halo_stats().expect("tier built on the paged mount");
+        assert!(tier.pinned_entries > 0, "leg {i}: {tier}");
+        assert_eq!(tier.spilled_entries, 0, "leg {i}: the default share pins everything");
+        assert!(tier.hits > 0, "leg {i}: halo expansions served from the pin: {tier}");
+
+        // Pinned in-lists leave the disk out of halo expansion.
+        let (on_reads, off_reads) =
+            (on.graph().adj_disk_reads().unwrap(), off.graph().adj_disk_reads().unwrap());
+        assert!(
+            on_reads < off_reads,
+            "leg {i}: the tier must strictly cut adjacency disk reads: {on_reads} vs {off_reads}"
+        );
+        if !base.halo_cache {
+            // ...and the router out of halo traffic accounting. (The
+            // async leg bounds its feature-halo replica under the same
+            // budget, so its total message count is not comparable.)
+            assert!(
+                on.router_stats().remote_msgs < off.router_stats().remote_msgs,
+                "leg {i}: halo-served expansion must not be billed as remote traffic"
+            );
+        }
+    }
+}
+
+#[test]
+fn adjacency_halo_tier_is_seed_for_seed_invisible_hetero() {
+    let g = hetero_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let tp = TypedPartitioning::ldg_hetero(&g, 3, 1.1).unwrap();
+    let bundle = write_bundle_hetero(tmp("hetero_halo_adj"), &g, &tp).unwrap();
+
+    let legs = [
+        DistOptions::default(),
+        DistOptions {
+            halo_cache: true,
+            async_fetch: true,
+            async_workers: 2,
+            latency: std::time::Duration::from_micros(20),
+            ..Default::default()
+        },
+    ];
+    for (i, base) in legs.into_iter().enumerate() {
+        let off = hetero_mounted_loader(
+            &bundle,
+            1,
+            "user",
+            seeds.clone(),
+            hetero_cfg(2),
+            base,
+            paged_lru(),
+        )
+        .unwrap();
+        let on = hetero_mounted_loader(
+            &bundle,
+            1,
+            "user",
+            seeds.clone(),
+            hetero_cfg(3),
+            DistOptions { halo_adj: true, ..base },
+            halo_adj_lru(),
+        )
+        .unwrap();
+        let resident = hetero_mounted_loader(
+            &bundle,
+            1,
+            "user",
+            seeds.clone(),
+            hetero_cfg(2),
+            DistOptions { halo_adj: true, ..base },
+            LruConfig::default(),
+        )
+        .unwrap();
+        for epoch in 0..2u64 {
+            let a: Vec<HeteroBatch> = off.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+            let b: Vec<HeteroBatch> = on.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+            let c: Vec<HeteroBatch> = resident.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+            assert_eq!(a.len(), b.len(), "leg {i}");
+            assert_eq!(a.len(), c.len(), "leg {i}");
+            for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+                assert_hetero_batches_identical(x, y);
+                assert_hetero_batches_identical(x, z);
+            }
+        }
+
+        assert!(off.graph().adj_halo_stats().is_none(), "leg {i}");
+        assert!(resident.graph().adj_halo_stats().is_none(), "leg {i}");
+        let tier = on.graph().adj_halo_stats().expect("typed tier built");
+        assert!(tier.pinned_entries > 0, "leg {i}: {tier}");
+        assert!(tier.hits > 0, "leg {i}: typed halo expansions served from the pin: {tier}");
+        assert!(
+            on.graph().adj_disk_reads().unwrap() < off.graph().adj_disk_reads().unwrap(),
+            "leg {i}: typed tier must strictly cut adjacency disk reads"
+        );
+        if !base.halo_cache {
+            assert!(
+                on.router_stats().remote_msgs < off.router_stats().remote_msgs,
+                "leg {i}: typed halo-served expansion must not be billed as remote traffic"
+            );
+        }
+    }
+}
+
+#[test]
+fn halo_tier_and_both_lrus_jointly_respect_the_budget_under_pressure() {
+    use pyg2::persist::MountCacheStats;
+
+    let g = sbm_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_halo_budget"), &g, &partitioning).unwrap();
+
+    // Shares sized so every tier works for a living: a ~40-row feature
+    // share that evicts constantly, a 512-byte adjacency LRU that
+    // thrashes, and a 1 KiB halo share that can pin only part of the
+    // replica — the rest spills into that thrashing LRU.
+    let row_bytes = (g.x.cols() * 4) as u64;
+    let lru = LruConfig {
+        capacity_bytes: 40 * row_bytes + 512 + 1024,
+        page_adjacency: true,
+        adj_capacity_bytes: 512,
+        halo_adj: true,
+        halo_adj_capacity_bytes: 1024,
+    };
+    let plain_lru = LruConfig {
+        capacity_bytes: lru.capacity_bytes,
+        page_adjacency: true,
+        adj_capacity_bytes: 512,
+        ..Default::default()
+    };
+    let tiered =
+        mounted_loader(&bundle, 0, seeds.clone(), loader_cfg(2), DistOptions::default(), lru)
+            .unwrap();
+    let plain =
+        mounted_loader(&bundle, 0, seeds, loader_cfg(2), DistOptions::default(), plain_lru)
+            .unwrap();
+
+    // Eviction pressure changes I/O counts only — never batch bytes.
+    for epoch in 0..2u64 {
+        let a: Vec<Batch> = plain.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        let b: Vec<Batch> = tiered.iter_epoch(epoch).map(|b| b.unwrap()).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_batches_identical(x, y);
+        }
+    }
+
+    let tier = tiered.graph().adj_halo_stats().expect("tier built");
+    assert!(tier.pinned_entries > 0, "{tier}");
+    assert!(tier.pinned_bytes <= 1024, "pin share is a hard ceiling: {tier}");
+    assert!(tier.spilled_entries > 0, "a 1 KiB share over a 4-part halo must spill: {tier}");
+    assert!(tier.total_requests() > 0, "the tier was probed: {tier}");
+    let rows = tiered.features().row_cache_stats().unwrap();
+    let adj = tiered.graph().adj_cache_stats().unwrap();
+    assert!(rows.evictions > 0, "the row share must thrash: {rows}");
+    assert!(adj.evictions > 0, "the adjacency share must thrash: {adj}");
+
+    // The three tiers tile the single budget, and joint peak residency
+    // never exceeds it.
+    assert_eq!(
+        rows.capacity_bytes + adj.capacity_bytes + tier.capacity_bytes,
+        lru.capacity_bytes,
+        "shares tile the budget"
+    );
+    assert!(
+        rows.peak_bytes + adj.peak_bytes + tier.pinned_bytes <= lru.capacity_bytes,
+        "joint peak over budget: {rows} / {adj} / {tier}"
+    );
+    let combined = MountCacheStats { rows, adj: Some(adj), halo: Some(tier) };
+    assert_eq!(combined.capacity_bytes(), lru.capacity_bytes);
+    assert!(combined.peak_bytes() <= combined.capacity_bytes(), "{combined}");
+    assert!(combined.bytes_cached() <= combined.capacity_bytes(), "{combined}");
 }

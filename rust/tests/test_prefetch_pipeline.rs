@@ -60,6 +60,7 @@ fn paged_lru() -> LruConfig {
         capacity_bytes: 1 << 20,
         page_adjacency: true,
         adj_capacity_bytes: 0,
+        ..Default::default()
     }
 }
 
