@@ -73,6 +73,11 @@ fn main() {
         });
     }
 
+    // Stage tracing on for the mounted series: each paged cold epoch
+    // below reports its sample / feature_fetch / adj_read breakdown.
+    // (The in-memory baseline above ran without telemetry.)
+    pyg2::obs::set_enabled(true);
+
     for parts in [2usize, 4, 8] {
         let partitioning = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
         let dir = scratch.join(format!("{parts}p"));
@@ -148,6 +153,7 @@ fn main() {
         )
         .unwrap();
         let (pfs, pgs) = (paged.features(), paged.graph());
+        pyg2::obs::reset_traces();
         let t = Instant::now();
         for b in paged.iter_epoch(0) {
             std::hint::black_box(b.unwrap());
@@ -157,6 +163,14 @@ fn main() {
         assert!(adj_cold > 0, "{parts}p: cold epoch must page adjacency from disk");
         suite.record_metric(format!("paged_cold_epoch_ms/{parts}p"), paged_cold_ms);
         suite.record_metric(format!("paged_cold_adj_reads/{parts}p"), adj_cold as f64);
+        // Where the cold epoch's time went, from the span histograms.
+        for (stage, h) in pyg2::obs::stage_report() {
+            if h.count > 0 {
+                let tag = format!("{stage}/{parts}p");
+                suite.record_metric(format!("paged_cold_stage_p50_us/{tag}"), h.p50 as f64);
+                suite.record_metric(format!("paged_cold_stage_p95_us/{tag}"), h.p95 as f64);
+            }
+        }
 
         pfs.reset_io_stats();
         pgs.reset_adj_io_stats();
@@ -396,6 +410,16 @@ fn main() {
     }
 
     suite.finish();
+
+    // One JSONL snapshot of the whole run's registry on request (CI's
+    // bench-smoke job sets PYG2_METRICS_OUT and validates the file with
+    // `pyg2 obs-check` before uploading it).
+    if let Some(path) = std::env::var("PYG2_METRICS_OUT").ok().filter(|p| !p.is_empty()) {
+        pyg2::obs::Exporter::start(std::path::Path::new(&path), None)
+            .and_then(|ex| ex.finish())
+            .unwrap();
+        println!("telemetry snapshot written to {path}");
+    }
     println!(
         "\nD2: mounted runs — resident or paged adjacency — produce batches identical \
          to the in-memory dist pipeline (tests/test_persist_equivalence.rs); the \

@@ -49,6 +49,11 @@ fn serve_leg(
     requests_per_client: usize,
     budget: Option<Duration>,
 ) {
+    // Per-leg stage attribution: zero the trace.* histograms so the
+    // breakdown recorded below covers exactly this leg.
+    if pyg2::obs::enabled() {
+        pyg2::obs::reset_traces();
+    }
     let server = DistInferenceServer::spawn(
         Arc::clone(gs),
         Arc::clone(fs),
@@ -82,6 +87,17 @@ fn serve_leg(
         );
     }
     println!("  {tag}: {report} (mean batch {:.2})", stats.mean_batch_size());
+    // Per-stage latency breakdown (sample / feature_fetch / queue_wait /
+    // infer / reply / ...) from the span histograms, when tracing is on.
+    if pyg2::obs::enabled() {
+        for (stage, h) in pyg2::obs::stage_report() {
+            if h.count > 0 {
+                suite.record_metric(format!("stage_p50_us/{stage}/{tag}"), h.p50 as f64);
+                suite.record_metric(format!("stage_p95_us/{stage}/{tag}"), h.p95 as f64);
+                suite.record_metric(format!("stage_p99_us/{stage}/{tag}"), h.p99 as f64);
+            }
+        }
+    }
 }
 
 fn main() {
@@ -155,8 +171,26 @@ fn main() {
         });
     }
 
+    // Span cost: the hot-path guarantee the obs layer leans on is that a
+    // disabled span is one relaxed atomic load — the in-memory sweep
+    // above ran with tracing off, so its throughput IS the no-telemetry
+    // baseline. Measured batched (1M spans per timing) so harness
+    // Instant overhead doesn't drown the number.
+    let span_cost_ns = |iters: u64| {
+        let t = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(pyg2::obs::span("sample"));
+        }
+        t.elapsed().as_nanos() as f64 / iters as f64
+    };
+    assert!(!pyg2::obs::enabled(), "in-memory sweep must run without tracing");
+    suite.record_metric("span_disabled_ns", span_cost_ns(1_000_000));
+    pyg2::obs::set_enabled(true);
+    suite.record_metric("span_enabled_ns", span_cost_ns(1_000_000));
+
     // Mounted legs: resident and demand-paged adjacency at 2/4/8
-    // partitions, two worker counts each.
+    // partitions, two worker counts each — with stage tracing on, so
+    // each leg also reports its per-stage latency breakdown.
     for parts in [2usize, 4, 8] {
         let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
         let bundle = write_bundle(scratch.join(format!("{parts}p")), &g, &p).unwrap();
@@ -234,6 +268,16 @@ fn main() {
     }
 
     suite.finish();
+
+    // One JSONL snapshot of the whole run's registry on request (CI's
+    // bench-smoke job sets PYG2_METRICS_OUT and validates the file with
+    // `pyg2 obs-check` before uploading it).
+    if let Some(path) = std::env::var("PYG2_METRICS_OUT").ok().filter(|p| !p.is_empty()) {
+        pyg2::obs::Exporter::start(std::path::Path::new(&path), None)
+            .and_then(|ex| ex.finish())
+            .unwrap();
+        println!("telemetry snapshot written to {path}");
+    }
     println!(
         "\nS1: one admission queue, N workers, dynamic batches; predictions are a \
          pure function of the node (batch_seed = node id), so every leg above — \

@@ -164,6 +164,49 @@ impl MountOpts {
     }
 }
 
+/// Telemetry export knobs shared by `pyg2 dist` and `pyg2 serve-dist`
+/// (the benches write one end-of-run snapshot via `PYG2_METRICS_OUT`
+/// instead): `--metrics-out FILE` turns span tracing on and writes
+/// JSONL registry snapshots there; `--metrics-every SECS` adds
+/// periodic snapshots between the start and the end-of-run report.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsOpts {
+    /// JSONL output path (`--metrics-out FILE`); `None` = telemetry off.
+    pub out: Option<String>,
+    /// Periodic snapshot interval in seconds (`--metrics-every SECS`;
+    /// 0 = end-of-run report only).
+    pub every_secs: f64,
+}
+
+impl MetricsOpts {
+    /// Parse and cross-validate: `--metrics-every` without
+    /// `--metrics-out` is an error (there would be nowhere to write).
+    pub fn from_args(args: &Args) -> Result<MetricsOpts, String> {
+        let out = args.get("metrics-out").map(str::to_string);
+        if out.is_none() && args.get("metrics-every").is_some() {
+            return Err("--metrics-every requires --metrics-out FILE".to_string());
+        }
+        let every_secs = args.get_f64("metrics-every", 0.0);
+        if every_secs < 0.0 {
+            return Err("--metrics-every must be >= 0".to_string());
+        }
+        Ok(MetricsOpts { out, every_secs })
+    }
+
+    /// Enable span tracing and start the JSONL exporter (`None` when
+    /// `--metrics-out` is absent). The caller should `finish()` the
+    /// exporter after the run; drop also writes the final report.
+    pub fn start(&self) -> crate::error::Result<Option<crate::obs::Exporter>> {
+        let Some(path) = &self.out else {
+            return Ok(None);
+        };
+        crate::obs::set_enabled(true);
+        let every = (self.every_secs > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(self.every_secs));
+        Ok(Some(crate::obs::Exporter::start(std::path::Path::new(path), every)?))
+    }
+}
+
 /// The CLI help text.
 pub const USAGE: &str = "\
 pyg2 — PyG 2.0 reproduction (Rust + JAX + Pallas)
@@ -218,6 +261,12 @@ COMMANDS:
               --io-backend B    pread (default) or mmap positioned reads
                                 for the paged shards
               --rank R --cache-mb M --seed-type T  (mount knobs)
+              --metrics-out FILE  export JSONL telemetry snapshots
+                                (registry counters/gauges/histograms +
+                                per-stage trace.*_us latency) to FILE;
+                                also enables stage-span timing
+              --metrics-every S   periodic snapshot interval in seconds
+                                (default: end-of-run report only)
   serve-dist  multi-worker online inference over the partitioned stores:
               N server threads pull dynamic batches from one shared
               admission queue, driven by a closed-loop Zipf client fleet;
@@ -233,6 +282,13 @@ COMMANDS:
               --halo-adj --halo-adj-mb M
               --prefetch --io-backend B  (same semantics as pyg2 dist)
               --halo-cache --async --async-workers N --latency-us U
+              --metrics-out FILE --metrics-every S  (JSONL telemetry;
+                                same semantics as pyg2 dist — one
+                                snapshot covers router, cache, prefetch,
+                                queue, and per-stage serve latency)
+  obs-check   validate a JSONL telemetry file emitted by --metrics-out
+              (every line parses and carries the snapshot schema);
+              prints the snapshot count     pyg2 obs-check FILE
   explain     train then explain predictions (fidelity report)
   rag         run the GraphRAG KGQA benchmark (baseline vs GraphRAG)
   info        print manifest/artifact summary
@@ -303,6 +359,19 @@ mod tests {
         let m = MountOpts::from_args(&parse("dist --nodes 100")).unwrap();
         assert!(!m.mounted());
         assert_eq!(m.io_backend, crate::persist::IoBackend::Pread);
+    }
+
+    #[test]
+    fn metrics_opts_parse_and_validate() {
+        let a = parse("dist --metrics-out /tmp/m.jsonl --metrics-every 2");
+        let m = MetricsOpts::from_args(&a).unwrap();
+        assert_eq!(m.out.as_deref(), Some("/tmp/m.jsonl"));
+        assert_eq!(m.every_secs, 2.0);
+        // Interval without a destination is a contradiction, not a no-op.
+        assert!(MetricsOpts::from_args(&parse("dist --metrics-every 2")).is_err());
+        let off = MetricsOpts::from_args(&parse("dist --nodes 100")).unwrap();
+        assert!(off.out.is_none());
+        assert_eq!(off.every_secs, 0.0);
     }
 
     #[test]

@@ -452,6 +452,16 @@ impl std::fmt::Display for RankSkew {
     }
 }
 
+/// Mirror one rank's epoch wall-clock into the registry (gauge
+/// `dist.rank{r}.epoch_us`, last run wins) so `--metrics-out` exports
+/// the same per-rank timings the reports' [`RankSkew`] summarizes. The
+/// reports keep their own `rank_seconds` vector — gauges are global and
+/// a concurrent simulation (e.g. parallel tests) would stomp them, so
+/// `skew()` must stay a view over the report-local measurements.
+fn record_rank_epoch(rank: u32, secs: f64) {
+    crate::obs::gauge(&format!("dist.rank{rank}.epoch_us")).set((secs * 1e6) as i64);
+}
+
 /// Result of a [`multi_rank_epoch`] simulation: the `rank × partition`
 /// traffic matrix plus per-rank cache counters, wall-clock, and epoch
 /// totals.
@@ -534,7 +544,9 @@ pub fn multi_rank_epoch(
                 sampled_nodes += b.num_real_nodes();
             }
         }
-        rank_seconds.push(t_rank.elapsed().as_secs_f64());
+        let rank_secs = t_rank.elapsed().as_secs_f64();
+        record_rank_epoch(rank, rank_secs);
+        rank_seconds.push(rank_secs);
         matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
         cache.push(loader.cache_stats());
         if rank == 0 {
@@ -1136,7 +1148,9 @@ pub fn multi_rank_epoch_mounted(
                 sampled_nodes += b.num_real_nodes();
             }
         }
-        rank_seconds.push(t_rank.elapsed().as_secs_f64());
+        let rank_secs = t_rank.elapsed().as_secs_f64();
+        record_rank_epoch(rank, rank_secs);
+        rank_seconds.push(rank_secs);
         matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
         halo.push(loader.cache_stats());
         row_cache.push(loader.features().row_cache_stats().expect("mounted store"));
@@ -1254,7 +1268,9 @@ pub fn multi_rank_epoch_hetero(
                 sampled_nodes += b.total_nodes();
             }
         }
-        rank_seconds.push(t_rank.elapsed().as_secs_f64());
+        let rank_secs = t_rank.elapsed().as_secs_f64();
+        record_rank_epoch(rank, rank_secs);
+        rank_seconds.push(rank_secs);
         let router = loader.graph().typed_router();
         matrix.set_rank(rank as usize, &router.traffic_by_partition())?;
         for (nt, traffic) in router.traffic_by_type() {

@@ -40,11 +40,12 @@ use crate::dist::{
 };
 use crate::error::{Error, Result};
 use crate::nn::NodeClassifier;
+use crate::obs;
 use crate::sampler::NeighborSamplerConfig;
 use crate::storage::{FeatureKey, FeatureStore};
 use crate::util::{BoundedQueue, Rng, Samples, Zipf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,6 +55,9 @@ pub struct DistRequest {
     /// Absolute deadline; a worker dequeueing the request after this
     /// instant rejects it with [`Error::Deadline`].
     pub deadline: Option<Instant>,
+    /// Admission timestamp feeding the `queue_wait` stage histogram at
+    /// dequeue; `None` while telemetry is disabled (no clock read).
+    pub admitted: Option<Instant>,
     pub reply_to: mpsc::Sender<Result<Prediction>>,
 }
 
@@ -92,7 +96,9 @@ impl Default for ServeDistConfig {
     }
 }
 
-/// Aggregate serving counters across all workers.
+/// Aggregate serving counters across all workers — a view assembled
+/// from the server's scoped `serve.*` registry counters by
+/// [`DistInferenceServer::stats`].
 #[derive(Clone, Debug, Default)]
 pub struct ServeDistStats {
     /// Requests served (admitted, sampled, replied — Ok or model error).
@@ -116,12 +122,43 @@ impl ServeDistStats {
     }
 }
 
+/// Registry handles of one server instance (scope `serve`), shared by
+/// its workers; [`DistInferenceServer::stats`] reads through them.
+#[derive(Clone)]
+struct ServeCounters {
+    requests: Arc<obs::Counter>,
+    batches: Arc<obs::Counter>,
+    deadline_rejected: Arc<obs::Counter>,
+    errors: Arc<obs::Counter>,
+}
+
+impl ServeCounters {
+    fn register() -> Self {
+        let scope = obs::Scope::new("serve");
+        Self {
+            requests: scope.counter("requests"),
+            batches: scope.counter("batches"),
+            deadline_rejected: scope.counter("deadline_rejected"),
+            errors: scope.counter("errors"),
+        }
+    }
+
+    fn stats(&self) -> ServeDistStats {
+        ServeDistStats {
+            requests: self.requests.get(),
+            batches: self.batches.get(),
+            deadline_rejected: self.deadline_rejected.get(),
+            errors: self.errors.get(),
+        }
+    }
+}
+
 /// Handle to a running multi-worker distributed inference server.
 pub struct DistInferenceServer {
     inbox: Arc<BoundedQueue<DistRequest>>,
     stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
-    stats: Arc<Mutex<ServeDistStats>>,
+    counters: ServeCounters,
     features: Arc<PartitionedFeatureStore>,
     graph: Arc<PartitionedGraphStore>,
     prefetcher: Option<Arc<MountPrefetcher>>,
@@ -157,10 +194,12 @@ impl DistInferenceServer {
                 "serve-dist covers homogeneous stores; typed serving is future work".into(),
             ));
         }
-        let inbox: Arc<BoundedQueue<DistRequest>> =
-            BoundedQueue::new(cfg.queue_capacity.max(cfg.max_batch * cfg.workers));
+        let inbox: Arc<BoundedQueue<DistRequest>> = BoundedQueue::new_observed(
+            cfg.queue_capacity.max(cfg.max_batch * cfg.workers),
+            "serve.queue",
+        );
         let stop = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(Mutex::new(ServeDistStats::default()));
+        let counters = ServeCounters::register();
         // Batched union prefetch only pays off when misses are
         // expensive and cached afterwards — i.e. on a mounted store
         // with a row LRU. On an in-memory store it would just double
@@ -181,7 +220,7 @@ impl DistInferenceServer {
         for w in 0..cfg.workers {
             let rx = Arc::clone(&inbox);
             let stop_t = Arc::clone(&stop);
-            let stats_t = Arc::clone(&stats);
+            let stats_t = counters.clone();
             let graph_t = Arc::clone(&graph);
             let features_t = Arc::clone(&features);
             let model_t = Arc::clone(&model);
@@ -197,7 +236,7 @@ impl DistInferenceServer {
                 .map_err(|e| Error::Runtime(format!("spawn serve worker {w}: {e}")))?;
             handles.push(handle);
         }
-        Ok(Self { inbox, stop, handles, stats, features, graph, prefetcher })
+        Ok(Self { inbox, stop, handles, counters, features, graph, prefetcher })
     }
 
     /// Submit a request with an optional latency budget; returns the
@@ -209,8 +248,9 @@ impl DistInferenceServer {
     ) -> Result<mpsc::Receiver<Result<Prediction>>> {
         let (tx, rx) = mpsc::channel();
         let deadline = budget.map(|b| Instant::now() + b);
+        let admitted = obs::enabled().then(Instant::now);
         self.inbox
-            .send(DistRequest { node, deadline, reply_to: tx })
+            .send(DistRequest { node, deadline, admitted, reply_to: tx })
             .map_err(|_| Error::Runtime("inference server is stopped".into()))?;
         Ok(rx)
     }
@@ -228,9 +268,10 @@ impl DistInferenceServer {
             .map_err(|_| Error::Runtime("server dropped request".into()))?
     }
 
-    /// Snapshot of the aggregate serving counters.
+    /// Snapshot of the aggregate serving counters (a view over the
+    /// server's registry reads).
     pub fn stats(&self) -> ServeDistStats {
-        self.stats.lock().unwrap().clone()
+        self.counters.stats()
     }
 
     /// The shared feature store (for cache/IO ledger inspection).
@@ -274,7 +315,7 @@ impl Drop for DistInferenceServer {
 fn worker_loop(
     rx: Arc<BoundedQueue<DistRequest>>,
     stop: Arc<AtomicBool>,
-    stats: Arc<Mutex<ServeDistStats>>,
+    stats: ServeCounters,
     graph: Arc<PartitionedGraphStore>,
     features: Arc<PartitionedFeatureStore>,
     model: Arc<NodeClassifier>,
@@ -308,21 +349,19 @@ fn worker_loop(
                     r.node
                 ))));
             } else {
+                if let Some(t) = r.admitted {
+                    obs::record_stage("queue_wait", t.elapsed().as_micros() as u64);
+                }
                 live.push(r);
             }
         }
 
-        {
-            let mut s = stats.lock().unwrap();
-            s.deadline_rejected += shed;
-            if !live.is_empty() {
-                s.requests += live.len() as u64;
-                s.batches += 1;
-            }
-        }
+        stats.deadline_rejected.add(shed);
         if live.is_empty() {
             continue;
         }
+        stats.requests.add(live.len() as u64);
+        stats.batches.inc();
 
         // Pipeline prefetch: hand the freshly dequeued batch's seeds to
         // the shared warmer so their rows and in-lists stream off disk
@@ -357,21 +396,25 @@ fn worker_loop(
             union.sort_unstable();
             union.dedup();
             if !union.is_empty() {
+                let _span = obs::span("feature_fetch");
                 let _ = features.get(&key, &union);
             }
         }
 
         let mut errors = 0u64;
         for (r, sub) in sampled {
-            let reply =
-                sub.and_then(|sub| model_predict(&model, features.as_ref(), &key, &sub));
+            let reply = sub.and_then(|sub| {
+                let _span = obs::span("infer");
+                model_predict(&model, features.as_ref(), &key, &sub)
+            });
             if reply.is_err() {
                 errors += 1;
             }
+            let _span = obs::span("reply");
             let _ = r.reply_to.send(reply);
         }
         if errors > 0 {
-            stats.lock().unwrap().errors += errors;
+            stats.errors.add(errors);
         }
     }
 }

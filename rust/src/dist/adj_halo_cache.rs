@@ -31,9 +31,8 @@
 
 use crate::error::{Error, Result};
 use crate::persist::AdjBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::halo_cache::CacheStats;
+use super::halo_cache::{CacheCounters, CacheStats};
 
 /// Sentinel for "not a halo node" in the slot map: reads of such nodes
 /// are the ordinary local path and are not accounted here.
@@ -63,9 +62,7 @@ pub struct AdjHaloCache {
     times: Vec<i64>,
     timed: bool,
     spilled: u64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    bytes_served: AtomicU64,
+    counters: CacheCounters,
 }
 
 impl AdjHaloCache {
@@ -83,9 +80,7 @@ impl AdjHaloCache {
             times: Vec::new(),
             timed,
             spilled: 0,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            bytes_served: AtomicU64::new(0),
+            counters: CacheCounters::register("dist.adj_halo"),
         }
     }
 
@@ -184,7 +179,7 @@ impl AdjHaloCache {
             return false;
         }
         if slot == SPILLED {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.counters.miss();
             return false;
         }
         let (lo, hi) = (self.offsets[slot as usize] as usize, self.offsets[slot as usize + 1] as usize);
@@ -194,25 +189,18 @@ impl AdjHaloCache {
             buf.fill_times(&self.times[lo..hi]);
             bytes += (hi - lo) * 8;
         }
-        self.hits.fetch_add(1, Ordering::Relaxed);
-        self.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.counters.hit(bytes as u64);
         true
     }
 
-    /// Current hit/miss/bytes counters.
+    /// Current hit/miss/bytes counters (a view over registry reads).
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            bytes_served: self.bytes_served.load(Ordering::Relaxed),
-        }
+        self.counters.stats()
     }
 
     /// Zero the counters (benches measure per-phase behaviour).
     pub fn reset_stats(&self) {
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
-        self.bytes_served.store(0, Ordering::Relaxed);
+        self.counters.reset();
     }
 }
 

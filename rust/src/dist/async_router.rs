@@ -24,6 +24,7 @@
 //! they always drain.
 
 use crate::error::Result;
+use crate::obs;
 use crate::storage::{FeatureKey, FeatureStore};
 use crate::tensor::Tensor;
 use crate::util::{TaskHandle, ThreadPool};
@@ -51,9 +52,14 @@ pub struct PendingFetch {
 
 impl PendingFetch {
     /// Block until the fetch lands and scatter its rows into `out`
-    /// (row `k` of the fetched tensor → `out` row `positions[k]`).
+    /// (row `k` of the fetched tensor → `out` row `positions[k]`). The
+    /// wait is timed as the `router_wait` stage — with overlap working,
+    /// its histogram sits near zero because the fetch already landed.
     pub fn join_into(self, out: &mut Tensor) -> Result<()> {
-        let fetched = self.handle.join()?;
+        let fetched = {
+            let _span = obs::span("router_wait");
+            self.handle.join()?
+        };
         for (k, &pos) in self.positions.iter().enumerate() {
             out.row_mut(pos).copy_from_slice(fetched.row(k));
         }
@@ -64,6 +70,7 @@ impl PendingFetch {
 /// Serves [`FetchPlan`]s asynchronously on a dedicated worker pool.
 pub struct AsyncRouter {
     pool: ThreadPool,
+    dispatched: Arc<obs::Counter>,
 }
 
 impl AsyncRouter {
@@ -71,7 +78,10 @@ impl AsyncRouter {
     /// near the remote-partition count so one batch's plans can all be
     /// in flight at once.
     pub fn new(workers: usize) -> Self {
-        Self { pool: ThreadPool::new(workers) }
+        Self {
+            pool: ThreadPool::new(workers),
+            dispatched: obs::counter("dist.async_router.dispatched"),
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -90,6 +100,7 @@ impl AsyncRouter {
         latency: Duration,
     ) -> PendingFetch {
         let FetchPlan { part: _, positions, shard_idx } = plan;
+        self.dispatched.inc();
         let handle = self.pool.spawn(move || {
             let fetched = shard.get(&key, &shard_idx);
             if !latency.is_zero() {

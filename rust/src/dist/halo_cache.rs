@@ -15,13 +15,57 @@
 //! (`bench_dist_partition` reports cached vs uncached series).
 
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::storage::{FeatureKey, FeatureStore};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Sentinel for "node not cached" in the slot map.
 const NOT_CACHED: u32 = u32::MAX;
+
+/// The hit/miss/bytes counter triple every cache tier registers
+/// (scoped, so each live cache instance keeps its own ledger).
+/// [`CacheStats`] is the view assembled from these registry reads.
+pub(crate) struct CacheCounters {
+    hits: Arc<obs::Counter>,
+    misses: Arc<obs::Counter>,
+    bytes_served: Arc<obs::Counter>,
+}
+
+impl CacheCounters {
+    pub(crate) fn register(prefix: &str) -> Self {
+        let scope = obs::Scope::new(prefix);
+        Self {
+            hits: scope.counter("hits"),
+            misses: scope.counter("misses"),
+            bytes_served: scope.counter("bytes_served"),
+        }
+    }
+
+    pub(crate) fn hit(&self, bytes: u64) {
+        self.hits.inc();
+        self.bytes_served.add(bytes);
+    }
+
+    pub(crate) fn miss(&self) {
+        self.misses.inc();
+    }
+
+    pub(crate) fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            bytes_served: self.bytes_served.get(),
+        }
+    }
+
+    pub(crate) fn reset(&self) {
+        self.hits.reset();
+        self.misses.reset();
+        self.bytes_served.reset();
+    }
+}
 
 /// Snapshot of a cache's hit/miss/bytes counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -73,9 +117,7 @@ pub struct HaloCache {
     num_cached: usize,
     /// Replicated rows per feature group, in halo order.
     rows: BTreeMap<FeatureKey, Tensor>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    bytes_served: AtomicU64,
+    counters: CacheCounters,
 }
 
 impl HaloCache {
@@ -114,9 +156,7 @@ impl HaloCache {
             slot,
             num_cached: halo.len(),
             rows,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            bytes_served: AtomicU64::new(0),
+            counters: CacheCounters::register("dist.halo_cache"),
         })
     }
 
@@ -157,9 +197,7 @@ impl HaloCache {
             slot,
             num_cached: halo.len(),
             rows: groups,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            bytes_served: AtomicU64::new(0),
+            counters: CacheCounters::register("dist.halo_cache"),
         })
     }
 
@@ -208,7 +246,7 @@ impl HaloCache {
     pub fn try_serve(&self, key: &FeatureKey, v: u32, dst: &mut [f32]) -> Result<bool> {
         let slot = self.slot.get(v as usize).copied().unwrap_or(NOT_CACHED);
         if slot == NOT_CACHED {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.counters.miss();
             return Ok(false);
         }
         let t = self
@@ -224,26 +262,18 @@ impl HaloCache {
             )));
         }
         dst.copy_from_slice(row);
-        self.hits.fetch_add(1, Ordering::Relaxed);
-        self.bytes_served
-            .fetch_add((row.len() * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+        self.counters.hit((row.len() * std::mem::size_of::<f32>()) as u64);
         Ok(true)
     }
 
-    /// Current hit/miss/bytes counters.
+    /// Current hit/miss/bytes counters (a view over registry reads).
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            bytes_served: self.bytes_served.load(Ordering::Relaxed),
-        }
+        self.counters.stats()
     }
 
     /// Zero the counters (benches measure per-phase behaviour).
     pub fn reset_stats(&self) {
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
-        self.bytes_served.store(0, Ordering::Relaxed);
+        self.counters.reset();
     }
 }
 

@@ -183,6 +183,9 @@ impl HeteroDistNeighborLoader {
                 sampler
                     .sample(&seed_type, &seeds, None, batch_seed)
                     .and_then(|sub| {
+                        // Assembly is dominated by the routed per-type
+                        // feature fetch: the `feature_fetch` stage.
+                        let _span = crate::obs::span("feature_fetch");
                         HeteroBatch::assemble(
                             sub,
                             features.as_ref(),

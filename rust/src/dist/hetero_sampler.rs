@@ -29,6 +29,7 @@
 use super::graph_store::{EdgeShards, PartitionedGraphStore};
 use crate::error::{Error, Result};
 use crate::graph::EdgeType;
+use crate::obs;
 use crate::persist::AdjBuf;
 use crate::sampler::hetero::{traverse, AdjacencySource, EdgeExpansion, EdgeTimeView};
 use crate::sampler::{HeteroSampledSubgraph, HeteroSamplerConfig};
@@ -39,10 +40,21 @@ use std::sync::Arc;
 /// candidate slice comes from [`EdgeShards::read_in_timed`], with the
 /// partitions-touched / edges-shipped ledgers flushed per
 /// `(hop, edge type)` through [`EdgeShards::record_hop`].
-struct ShardSource<'g>(&'g PartitionedGraphStore);
+struct ShardSource<'g> {
+    store: &'g PartitionedGraphStore,
+    /// Shared `dist.sampler.*` counter handles (resolved once per
+    /// sampler, cloned per expansion — the hot path never locks the
+    /// registry).
+    hops: Arc<obs::Counter>,
+    touched_parts: Arc<obs::Counter>,
+    sampled_edges: Arc<obs::Counter>,
+}
 
 struct ShardExpansion<'s> {
     es: &'s EdgeShards,
+    hops: Arc<obs::Counter>,
+    touched_parts: Arc<obs::Counter>,
+    sampled_edges: Arc<obs::Counter>,
     /// Resident global edge timestamps (`None` on paged mounts, whose
     /// timestamps resolve per candidate into `buf`).
     edge_time: Option<Arc<Vec<i64>>>,
@@ -66,17 +78,17 @@ impl AdjacencySource for ShardSource<'_> {
         Self: 's;
 
     fn edge_types(&self) -> Vec<EdgeType> {
-        self.0.edge_types()
+        self.store.edge_types()
     }
 
     fn node_time(&self, node_type: &str) -> Result<Option<Arc<Vec<i64>>>> {
-        self.0.node_time(node_type)
+        self.store.node_time(node_type)
     }
 
     /// Seeds come from user input; frontier nodes beyond hop 0 are edge
     /// endpoints and always in range.
     fn validate_seeds(&self, seed_type: &str, seeds: &[u32]) -> Result<()> {
-        let seed_router = self.0.typed_router().router(seed_type)?;
+        let seed_router = self.store.typed_router().router(seed_type)?;
         for &s in seeds {
             if seed_router.try_owner(s).is_none() {
                 return Err(Error::Sampler(format!(
@@ -89,10 +101,13 @@ impl AdjacencySource for ShardSource<'_> {
     }
 
     fn begin(&self, et: &EdgeType, temporal: bool) -> Result<ShardExpansion<'_>> {
-        let parts = self.0.num_parts();
+        let parts = self.store.num_parts();
         Ok(ShardExpansion {
-            es: self.0.edges_of(et)?,
-            edge_time: self.0.edge_time(et)?,
+            es: self.store.edges_of(et)?,
+            hops: Arc::clone(&self.hops),
+            touched_parts: Arc::clone(&self.touched_parts),
+            sampled_edges: Arc::clone(&self.sampled_edges),
+            edge_time: self.store.edge_time(et)?,
             temporal,
             owner: 0,
             served: false,
@@ -138,18 +153,34 @@ impl EdgeExpansion for ShardExpansion<'_> {
     /// remote partition touched.
     fn finish(&mut self) {
         self.es.record_hop(&self.touched, &self.edges);
+        self.hops.inc();
+        self.touched_parts.add(self.touched.iter().filter(|&&t| t).count() as u64);
+        self.sampled_edges.add(self.edges.iter().sum::<u64>());
     }
 }
 
 /// Heterogeneous neighbor sampler over a [`PartitionedGraphStore`].
+///
+/// Every sample runs under an `obs` span (stage `sample`) and each
+/// `(hop, edge type)` ledger flush lands on the shared `dist.sampler.*`
+/// counters, resolved once at construction.
 pub struct HeteroDistNeighborSampler {
     store: Arc<PartitionedGraphStore>,
     cfg: HeteroSamplerConfig,
+    hops: Arc<obs::Counter>,
+    touched_parts: Arc<obs::Counter>,
+    sampled_edges: Arc<obs::Counter>,
 }
 
 impl HeteroDistNeighborSampler {
     pub fn new(store: Arc<PartitionedGraphStore>, cfg: HeteroSamplerConfig) -> Self {
-        Self { store, cfg }
+        Self {
+            store,
+            cfg,
+            hops: obs::counter("dist.sampler.hops"),
+            touched_parts: obs::counter("dist.sampler.touched_parts"),
+            sampled_edges: obs::counter("dist.sampler.sampled_edges"),
+        }
     }
 
     pub fn config(&self) -> &HeteroSamplerConfig {
@@ -172,14 +203,14 @@ impl HeteroDistNeighborSampler {
         seed_times: Option<&[i64]>,
         batch_seed: u64,
     ) -> Result<HeteroSampledSubgraph> {
-        let out = traverse(
-            &ShardSource(self.store.as_ref()),
-            &self.cfg,
-            seed_type,
-            seeds,
-            seed_times,
-            batch_seed,
-        )?;
+        let _span = obs::span("sample");
+        let source = ShardSource {
+            store: self.store.as_ref(),
+            hops: Arc::clone(&self.hops),
+            touched_parts: Arc::clone(&self.touched_parts),
+            sampled_edges: Arc::clone(&self.sampled_edges),
+        };
+        let out = traverse(&source, &self.cfg, seed_type, seeds, seed_times, batch_seed)?;
         // Same hot-path guard as the in-memory sampler.
         #[cfg(debug_assertions)]
         if let Err(e) = out.check_invariants() {

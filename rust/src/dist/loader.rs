@@ -182,6 +182,9 @@ impl DistNeighborLoader {
                     }
                 }
                 sampler.sample(&seeds, batch_seed).and_then(|sub| {
+                    // Assembly is dominated by the routed feature fetch,
+                    // so the whole call is the `feature_fetch` stage.
+                    let _span = crate::obs::span("feature_fetch");
                     Batch::assemble(
                         sub,
                         features.as_ref(),

@@ -71,10 +71,10 @@ pub use prefetch::{MountPrefetcher, PrefetchStats};
 pub use sampler::DistNeighborSampler;
 
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::partition::{Partitioning, TypedPartitioning};
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Snapshot of a router's traffic counters.
@@ -135,18 +135,23 @@ impl fmt::Display for RouterStats {
 /// One router instance is shared by the partitioned feature store, graph
 /// store and sampler of a pipeline, so [`PartitionRouter::stats`] reports
 /// the pipeline's total cross-partition traffic.
+///
+/// The counters live in the [`crate::obs`] metrics registry (scope
+/// `dist.router`, `#n`-suffixed for later instances): [`RouterStats`]
+/// and [`PartitionTraffic`] are views assembled from registry reads,
+/// and the same numbers appear in `--metrics-out` JSONL snapshots.
 pub struct PartitionRouter {
     assignment: Arc<Vec<u32>>,
     num_parts: usize,
     local_rank: u32,
-    local_msgs: AtomicU64,
-    remote_msgs: AtomicU64,
-    remote_rows: AtomicU64,
+    local_msgs: Arc<obs::Counter>,
+    remote_msgs: Arc<obs::Counter>,
+    remote_rows: Arc<obs::Counter>,
     /// Per-destination-partition breakdown of the remote counters
     /// (`msgs_to[local_rank]` / `rows_to[local_rank]` stay zero; local
     /// accesses are tracked by `local_msgs`).
-    msgs_to: Vec<AtomicU64>,
-    rows_to: Vec<AtomicU64>,
+    msgs_to: Vec<Arc<obs::Counter>>,
+    rows_to: Vec<Arc<obs::Counter>>,
 }
 
 /// Per-destination-partition traffic snapshot of one router, the row a
@@ -190,15 +195,16 @@ impl PartitionRouter {
                 "assignment references partition {bad} (only {num_parts} exist)"
             )));
         }
+        let scope = obs::Scope::new("dist.router");
         Ok(Self {
             assignment,
             num_parts,
             local_rank,
-            local_msgs: AtomicU64::new(0),
-            remote_msgs: AtomicU64::new(0),
-            remote_rows: AtomicU64::new(0),
-            msgs_to: (0..num_parts).map(|_| AtomicU64::new(0)).collect(),
-            rows_to: (0..num_parts).map(|_| AtomicU64::new(0)).collect(),
+            local_msgs: scope.counter("local_msgs"),
+            remote_msgs: scope.counter("remote_msgs"),
+            remote_rows: scope.counter("remote_rows"),
+            msgs_to: (0..num_parts).map(|p| scope.counter(&format!("to{p}.msgs"))).collect(),
+            rows_to: (0..num_parts).map(|p| scope.counter(&format!("to{p}.rows"))).collect(),
         })
     }
 
@@ -231,24 +237,24 @@ impl PartitionRouter {
 
     /// Account one access served by the local partition.
     pub fn record_local(&self) {
-        self.local_msgs.fetch_add(1, Ordering::Relaxed);
+        self.local_msgs.inc();
     }
 
     /// Account one simulated RPC to remote partition `part` carrying
     /// `payload_rows` rows/edges.
     pub fn record_remote_to(&self, part: u32, payload_rows: u64) {
-        self.remote_msgs.fetch_add(1, Ordering::Relaxed);
-        self.remote_rows.fetch_add(payload_rows, Ordering::Relaxed);
-        self.msgs_to[part as usize].fetch_add(1, Ordering::Relaxed);
-        self.rows_to[part as usize].fetch_add(payload_rows, Ordering::Relaxed);
+        self.remote_msgs.inc();
+        self.remote_rows.add(payload_rows);
+        self.msgs_to[part as usize].inc();
+        self.rows_to[part as usize].add(payload_rows);
     }
 
-    /// Current traffic counters.
+    /// Current traffic counters (a view over registry reads).
     pub fn stats(&self) -> RouterStats {
         RouterStats {
-            local_msgs: self.local_msgs.load(Ordering::Relaxed),
-            remote_msgs: self.remote_msgs.load(Ordering::Relaxed),
-            remote_rows: self.remote_rows.load(Ordering::Relaxed),
+            local_msgs: self.local_msgs.get(),
+            remote_msgs: self.remote_msgs.get(),
+            remote_rows: self.remote_rows.get(),
         }
     }
 
@@ -256,21 +262,19 @@ impl PartitionRouter {
     /// `rank × partition` matrix). The local rank's slot reports the
     /// local access count with zero payload.
     pub fn traffic_by_partition(&self) -> PartitionTraffic {
-        let mut msgs: Vec<u64> =
-            self.msgs_to.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let rows: Vec<u64> =
-            self.rows_to.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        msgs[self.local_rank as usize] = self.local_msgs.load(Ordering::Relaxed);
+        let mut msgs: Vec<u64> = self.msgs_to.iter().map(|c| c.get()).collect();
+        let rows: Vec<u64> = self.rows_to.iter().map(|c| c.get()).collect();
+        msgs[self.local_rank as usize] = self.local_msgs.get();
         PartitionTraffic { local_rank: self.local_rank, msgs, rows }
     }
 
     /// Zero the traffic counters (benches measure per-phase traffic).
     pub fn reset_stats(&self) {
-        self.local_msgs.store(0, Ordering::Relaxed);
-        self.remote_msgs.store(0, Ordering::Relaxed);
-        self.remote_rows.store(0, Ordering::Relaxed);
+        self.local_msgs.reset();
+        self.remote_msgs.reset();
+        self.remote_rows.reset();
         for c in self.msgs_to.iter().chain(&self.rows_to) {
-            c.store(0, Ordering::Relaxed);
+            c.reset();
         }
     }
 

@@ -22,10 +22,10 @@
 use super::feature_store::PartitionedFeatureStore;
 use super::graph_store::PartitionedGraphStore;
 use crate::graph::EdgeType;
+use crate::obs;
 use crate::persist::AdjBuf;
 use crate::storage::GraphStore;
 use crate::util::ThreadPool;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Counters of one prefetcher: batches scheduled, warm jobs that hit
@@ -58,9 +58,9 @@ pub struct MountPrefetcher {
     /// the homogeneous single-edge-type case always qualifies.
     warm_edges: Vec<EdgeType>,
     pool: ThreadPool,
-    scheduled: AtomicU64,
-    failed: Arc<AtomicU64>,
-    skipped: Arc<AtomicU64>,
+    scheduled: Arc<obs::Counter>,
+    failed: Arc<obs::Counter>,
+    skipped: Arc<obs::Counter>,
 }
 
 impl MountPrefetcher {
@@ -83,15 +83,16 @@ impl MountPrefetcher {
         } else {
             all.into_iter().filter(|et| et.dst == seed_type).collect()
         };
+        let scope = obs::Scope::new("dist.prefetch");
         Self {
             graph,
             features,
             seed_type: seed_type.to_string(),
             warm_edges,
             pool: ThreadPool::with_queue_capacity(1, Self::QUEUE_DEPTH),
-            scheduled: AtomicU64::new(0),
-            failed: Arc::new(AtomicU64::new(0)),
-            skipped: Arc::new(AtomicU64::new(0)),
+            scheduled: scope.counter("scheduled"),
+            failed: scope.counter("failed"),
+            skipped: scope.counter("skipped"),
         }
     }
 
@@ -103,7 +104,7 @@ impl MountPrefetcher {
         if seeds.is_empty() {
             return;
         }
-        self.scheduled.fetch_add(1, Ordering::Relaxed);
+        self.scheduled.inc();
         let graph = Arc::clone(&self.graph);
         let features = Arc::clone(&self.features);
         let failed = Arc::clone(&self.failed);
@@ -112,6 +113,7 @@ impl MountPrefetcher {
         let warm_edges = self.warm_edges.clone();
         let seeds = seeds.to_vec();
         self.pool.submit(move || {
+            let _span = obs::span("prefetch");
             let mut ok = true;
             let mut skips = 0u64;
             match features.prefetch_rows(&seed_type, &seeds) {
@@ -129,10 +131,10 @@ impl MountPrefetcher {
                 }
             }
             if skips > 0 {
-                skipped.fetch_add(skips, Ordering::Relaxed);
+                skipped.add(skips);
             }
             if !ok {
-                failed.fetch_add(1, Ordering::Relaxed);
+                failed.inc();
             }
         });
     }
@@ -143,11 +145,12 @@ impl MountPrefetcher {
         self.pool.wait_idle();
     }
 
+    /// Current counters (a view over registry reads).
     pub fn stats(&self) -> PrefetchStats {
         PrefetchStats {
-            scheduled: self.scheduled.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
-            skipped: self.skipped.load(Ordering::Relaxed),
+            scheduled: self.scheduled.get(),
+            failed: self.failed.get(),
+            skipped: self.skipped.get(),
         }
     }
 }

@@ -20,6 +20,7 @@
 
 use super::graph_store::PartitionedGraphStore;
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::persist::AdjBuf;
 use crate::sampler::neighbor::sample_from;
 use crate::sampler::{Direction, NeighborSamplerConfig, SampledSubgraph};
@@ -29,14 +30,27 @@ use rustc_hash::FxHashMap as HashMap;
 use std::sync::Arc;
 
 /// Uniform neighbor sampler over a [`PartitionedGraphStore`].
+///
+/// Every sample runs under an `obs` span (stage `sample`) and flushes a
+/// per-hop ledger into the shared `dist.sampler.*` counters; the handles
+/// are resolved once here so the hot path never locks the registry.
 pub struct DistNeighborSampler {
     store: Arc<PartitionedGraphStore>,
     cfg: NeighborSamplerConfig,
+    hops: Arc<obs::Counter>,
+    touched_parts: Arc<obs::Counter>,
+    sampled_edges: Arc<obs::Counter>,
 }
 
 impl DistNeighborSampler {
     pub fn new(store: Arc<PartitionedGraphStore>, cfg: NeighborSamplerConfig) -> Self {
-        Self { store, cfg }
+        Self {
+            store,
+            cfg,
+            hops: obs::counter("dist.sampler.hops"),
+            touched_parts: obs::counter("dist.sampler.touched_parts"),
+            sampled_edges: obs::counter("dist.sampler.sampled_edges"),
+        }
     }
 
     pub fn config(&self) -> &NeighborSamplerConfig {
@@ -50,6 +64,7 @@ impl DistNeighborSampler {
     /// Sample the multi-hop subgraph around `seeds`; identical output to
     /// `NeighborSampler::sample` under the same `(config, batch_seed)`.
     pub fn sample(&self, seeds: &[u32], batch_seed: u64) -> Result<SampledSubgraph> {
+        let _span = obs::span("sample");
         // The homogeneous sampler is the single-type special case: a
         // multi-type store must go through HeteroDistNeighborSampler
         // (clean error, not the TypedRouter::sole panic).
@@ -186,6 +201,9 @@ impl DistNeighborSampler {
             // partition touched costs one coalesced RPC with its payload
             // — recorded on the router and the per-edge-type counters.
             es.record_hop(&hop_touched, &hop_edges);
+            self.hops.inc();
+            self.touched_parts.add(hop_touched.iter().filter(|&&t| t).count() as u64);
+            self.sampled_edges.add(hop_edges.iter().sum::<u64>());
             out.node_offsets.push(out.nodes.len());
             out.edge_offsets.push(out.row.len());
             frontier = next_frontier;

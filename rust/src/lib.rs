@@ -30,6 +30,7 @@ pub mod rdl;
 pub mod dist;
 pub mod loader;
 pub mod nn;
+pub mod obs;
 pub mod partition;
 pub mod persist;
 pub mod runtime;

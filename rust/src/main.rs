@@ -21,8 +21,9 @@ fn main() {
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
         "partition" => cmd_partition(&args),
-        "dist" => cmd_dist(&args),
-        "serve-dist" => cmd_serve_dist(&args),
+        "dist" => with_metrics(&args, cmd_dist),
+        "serve-dist" => with_metrics(&args, cmd_serve_dist),
+        "obs-check" => cmd_obs_check(&args),
         "explain" => cmd_explain(&args),
         "rag" => cmd_rag(&args),
         "info" => cmd_info(&args),
@@ -39,6 +40,35 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// Run `cmd` under the `--metrics-out` / `--metrics-every` telemetry
+/// knobs: parse them, enable span tracing and start the JSONL exporter
+/// when requested, and finish the exporter (end-of-run snapshot) after
+/// the command returns. On a command error the exporter's drop still
+/// writes a best-effort final report.
+fn with_metrics(args: &Args, cmd: fn(&Args) -> pyg2::Result<()>) -> pyg2::Result<()> {
+    let metrics = pyg2::cli::MetricsOpts::from_args(args).map_err(pyg2::error::Error::Config)?;
+    let exporter = metrics.start()?;
+    let result = cmd(args);
+    if result.is_ok() {
+        if let Some(ex) = exporter {
+            ex.finish()?;
+        }
+    }
+    result
+}
+
+/// Validate a JSONL telemetry file (`pyg2 obs-check FILE`) — what CI
+/// runs on every `--metrics-out` artifact before uploading it.
+fn cmd_obs_check(args: &Args) -> pyg2::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| pyg2::error::Error::Config("usage: pyg2 obs-check FILE".to_string()))?;
+    let n = pyg2::obs::check_file(std::path::Path::new(path))?;
+    println!("{path}: {n} telemetry snapshots ok");
+    Ok(())
 }
 
 fn load_config(args: &Args) -> pyg2::Result<RunConfig> {
@@ -591,6 +621,14 @@ fn cmd_serve_dist(args: &Args) -> pyg2::Result<()> {
     );
     print_mount_io(&fs, &gs);
     print_prefetch(server.prefetch_stats());
+    if pyg2::obs::enabled() {
+        for (stage, h) in pyg2::obs::stage_report() {
+            println!(
+                "stage {stage}: n={} p50={}us p95={}us p99={}us max={}us",
+                h.count, h.p50, h.p95, h.p99, h.max
+            );
+        }
+    }
     Ok(())
 }
 

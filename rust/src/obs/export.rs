@@ -1,0 +1,246 @@
+//! JSONL telemetry export: periodic registry snapshots plus a final
+//! end-of-run report, one JSON document per line.
+//!
+//! Wired as `--metrics-out FILE` / `--metrics-every SECS` on
+//! `pyg2 dist` and `pyg2 serve-dist` (and consumed by the benches via
+//! `PYG2_METRICS_OUT`). Each line is a complete snapshot:
+//!
+//! ```json
+//! {"seq":0,"ts_ms":1042,"final":false,
+//!  "counters":{"dist.router.remote_msgs":96,...},
+//!  "gauges":{"persist.row_cache.bytes_cached":524288,...},
+//!  "histograms":{"trace.sample_us":{"count":64,"sum":81920,
+//!                "p50":1279,"p90":1535,"p95":1535,"p99":2047,"max":2047}}}
+//! ```
+//!
+//! Timestamps are milliseconds since the exporter started (monotonic
+//! clock), so output is reproducible modulo timing. Validation lives in
+//! `pyg2 obs-check FILE`, which CI runs on every emitted file.
+
+use super::registry;
+use crate::error::Result;
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One registry snapshot as a JSON document. `seq`/`ts_ms` stamp the
+/// line's position in the run; `fin` marks the end-of-run report.
+pub fn snapshot_json(seq: u64, ts_ms: u64, fin: bool) -> Json {
+    let (counters, gauges, hists) = registry::read_all();
+    let counters =
+        Json::Obj(counters.into_iter().map(|(k, v)| (k, Json::num(v as f64))).collect());
+    let gauges =
+        Json::Obj(gauges.into_iter().map(|(k, v)| (k, Json::num(v as f64))).collect());
+    let hists = Json::Obj(
+        hists
+            .into_iter()
+            .map(|(k, s)| {
+                (
+                    k,
+                    Json::obj(vec![
+                        ("count", Json::num(s.count as f64)),
+                        ("sum", Json::num(s.sum as f64)),
+                        ("p50", Json::num(s.p50 as f64)),
+                        ("p90", Json::num(s.p90 as f64)),
+                        ("p95", Json::num(s.p95 as f64)),
+                        ("p99", Json::num(s.p99 as f64)),
+                        ("max", Json::num(s.max as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("seq", Json::num(seq as f64)),
+        ("ts_ms", Json::num(ts_ms as f64)),
+        ("final", Json::Bool(fin)),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", hists),
+    ])
+}
+
+fn append_line(file: &mut File, line: &Json) -> std::io::Result<()> {
+    file.write_all(line.to_string().as_bytes())?;
+    file.write_all(b"\n")?;
+    file.flush()
+}
+
+/// Periodic + final JSONL snapshot writer. `start` truncates the file;
+/// [`Exporter::finish`] (or drop) writes the end-of-run report.
+pub struct Exporter {
+    path: PathBuf,
+    started: Instant,
+    seq: Arc<AtomicU64>,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    ticker: Option<JoinHandle<()>>,
+    finished: bool,
+}
+
+impl Exporter {
+    /// Begin exporting to `path`. With `every = Some(d)`, a background
+    /// thread appends a snapshot line each period until `finish`.
+    pub fn start(path: &Path, every: Option<Duration>) -> Result<Self> {
+        File::create(path)?; // truncate up front so a crash leaves no stale run
+        let started = Instant::now();
+        let seq = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let ticker = match every {
+            None => None,
+            Some(period) => {
+                let (path, seq, stop) = (path.to_path_buf(), Arc::clone(&seq), Arc::clone(&stop));
+                Some(std::thread::spawn(move || {
+                    let mut file = match OpenOptions::new().append(true).open(&path) {
+                        Ok(f) => f,
+                        Err(_) => return,
+                    };
+                    let (lock, cv) = &*stop;
+                    let mut stopped = lock.lock().unwrap();
+                    loop {
+                        let (guard, timeout) = cv.wait_timeout(stopped, period).unwrap();
+                        stopped = guard;
+                        if *stopped {
+                            return;
+                        }
+                        if timeout.timed_out() {
+                            let line = snapshot_json(
+                                seq.fetch_add(1, Ordering::Relaxed),
+                                started.elapsed().as_millis() as u64,
+                                false,
+                            );
+                            let _ = append_line(&mut file, &line);
+                        }
+                    }
+                }))
+            }
+        };
+        Ok(Self { path: path.to_path_buf(), started, seq, stop, ticker, finished: false })
+    }
+
+    fn stop_ticker(&mut self) {
+        if let Some(h) = self.ticker.take() {
+            let (lock, cv) = &*self.stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+            let _ = h.join();
+        }
+    }
+
+    fn write_final(&self) -> std::io::Result<()> {
+        let mut file = OpenOptions::new().append(true).open(&self.path)?;
+        let line = snapshot_json(
+            self.seq.fetch_add(1, Ordering::Relaxed),
+            self.started.elapsed().as_millis() as u64,
+            true,
+        );
+        append_line(&mut file, &line)
+    }
+
+    /// Stop the ticker and append the end-of-run report.
+    pub fn finish(mut self) -> Result<()> {
+        self.stop_ticker();
+        self.finished = true; // drop must not write a second report
+        self.write_final()?;
+        Ok(())
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        // Best-effort final report if `finish` was never called.
+        self.stop_ticker();
+        if !self.finished {
+            let _ = self.write_final();
+        }
+    }
+}
+
+/// Validate a JSONL telemetry file: non-empty, every line parses, and
+/// every line carries the snapshot schema keys. Returns the line count
+/// (what `pyg2 obs-check` prints). Errors name the offending line.
+pub fn check_file(path: &Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = crate::util::json::parse(line).map_err(|e| {
+            crate::error::Error::Storage(format!("{}:{}: bad JSON: {e}", path.display(), i + 1))
+        })?;
+        for key in ["seq", "ts_ms", "final", "counters", "gauges", "histograms"] {
+            if v.get(key).is_none() {
+                return Err(crate::error::Error::Storage(format!(
+                    "{}:{}: snapshot missing key {key:?}",
+                    path.display(),
+                    i + 1
+                )));
+            }
+        }
+        lines += 1;
+    }
+    if lines == 0 {
+        return Err(crate::error::Error::Storage(format!(
+            "{}: no telemetry snapshots",
+            path.display()
+        )));
+    }
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        registry::counter("test.export.c").add(7);
+        registry::histogram("test.export.h").record(100);
+        let v = snapshot_json(3, 1234, true);
+        let r = crate::util::json::parse(&v.to_string()).unwrap();
+        assert_eq!(r.get("seq").unwrap().as_f64(), Some(3.0));
+        assert_eq!(r.get("final").unwrap().as_bool(), Some(true));
+        let c = r.get("counters").unwrap().get("test.export.c").unwrap();
+        assert!(c.as_f64().unwrap() >= 7.0);
+        let h = r.get("histograms").unwrap().get("test.export.h").unwrap();
+        assert!(h.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(h.get("p99").is_some() && h.get("p50").is_some());
+    }
+
+    #[test]
+    fn exporter_writes_final_line_and_check_accepts_it() {
+        let dir = std::env::temp_dir().join(format!("pyg2_obs_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        let ex = Exporter::start(&path, None).unwrap();
+        registry::counter("test.export.final").inc();
+        ex.finish().unwrap();
+        let n = check_file(&path).unwrap();
+        assert_eq!(n, 1, "one final snapshot line");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("final").unwrap().as_bool(), Some(true));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn check_rejects_empty_and_garbage() {
+        let dir = std::env::temp_dir().join(format!("pyg2_obs_check_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let empty = dir.join("empty.jsonl");
+        std::fs::write(&empty, "").unwrap();
+        assert!(check_file(&empty).is_err());
+        let garbage = dir.join("garbage.jsonl");
+        std::fs::write(&garbage, "not json\n").unwrap();
+        assert!(check_file(&garbage).is_err());
+        let missing = dir.join("missing.jsonl");
+        std::fs::write(&missing, "{\"seq\":0}\n").unwrap();
+        assert!(check_file(&missing).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

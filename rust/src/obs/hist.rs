@@ -1,0 +1,245 @@
+//! Fixed log-bucket histogram math and the one quantile definition.
+//!
+//! Two consumers share the bucket layout: the atomic [`Histogram`]
+//! below (hot-path recording via `fetch_add`, deterministic quantile
+//! readout for telemetry snapshots) and the non-atomic
+//! [`crate::util::stats::Histogram`] (single-threaded pipeline
+//! instrumentation). Likewise [`percentile_sorted`] is the single
+//! definition of a percentile over exact samples — `util::stats::Samples`
+//! (and through it `TrafficReport::p99_ms` etc.) delegates here, so
+//! "p99" means one thing everywhere in the codebase.
+//!
+//! Bucket layout: values below [`LINEAR_MAX`] get exact unit buckets;
+//! above that, each power-of-two octave is split into [`SUB_PER_OCTAVE`]
+//! sub-buckets, bounding the relative quantile error at
+//! `1 / SUB_PER_OCTAVE` (6.25%). All readouts return the *inclusive
+//! upper bound* of the selected bucket, so quantiles are deterministic
+//! functions of the recorded counts — no sampling, no interpolation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power-of-two octave (16 → ≤6.25% relative error).
+const SUB_PER_OCTAVE: u64 = 16;
+/// log2 of [`SUB_PER_OCTAVE`].
+const SUB_BITS: u32 = 4;
+/// Values below this get exact unit-width buckets.
+const LINEAR_MAX: u64 = SUB_PER_OCTAVE;
+/// Total bucket count: 16 linear + 16 per octave for octaves 4..=63.
+pub const NUM_BUCKETS: usize = (LINEAR_MAX + (64 - SUB_BITS as u64) * SUB_PER_OCTAVE) as usize;
+
+/// Bucket index of value `v`. Exact below [`LINEAR_MAX`], log-bucketed
+/// with [`SUB_PER_OCTAVE`] sub-buckets per octave above.
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        v as usize
+    } else {
+        let exp = 63 - v.leading_zeros(); // >= SUB_BITS
+        let sub = (v >> (exp - SUB_BITS)) & (SUB_PER_OCTAVE - 1);
+        (LINEAR_MAX + (exp - SUB_BITS) as u64 * SUB_PER_OCTAVE + sub) as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `idx` — what quantile readouts report.
+pub fn bucket_upper_bound(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        idx as u64
+    } else {
+        let oct = (idx - LINEAR_MAX as usize) as u64 / SUB_PER_OCTAVE;
+        let sub = (idx - LINEAR_MAX as usize) as u64 % SUB_PER_OCTAVE;
+        let width = 1u64 << oct; // sub-bucket width in octave `oct + SUB_BITS`
+        let lower = (SUB_PER_OCTAVE + sub) << oct;
+        lower + (width - 1)
+    }
+}
+
+/// Upper bound of the bucket holding the q-quantile (`q` in 0..=1) of
+/// the counts, using the nearest-rank convention `ceil(q * n)` (min 1).
+/// Returns 0 on an empty histogram. Deterministic given the counts.
+pub fn quantile_from_counts(counts: &[u64], q: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return bucket_upper_bound(i);
+        }
+    }
+    bucket_upper_bound(counts.len() - 1)
+}
+
+/// Percentile (`p` in 0..=100) of `xs` via linear interpolation on the
+/// sorted copy — the single exact-sample percentile definition
+/// (`util::stats::Samples::percentile` delegates here). NaN when empty.
+pub fn percentile_sorted(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// A lock-free histogram: fixed log buckets of [`AtomicU64`], recorded
+/// into with one relaxed `fetch_add` per sample. ~7.6 KiB per instance.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let buckets = (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Self { buckets, sum: AtomicU64::new(0) }
+    }
+
+    /// Record one sample (histograms hold raw `u64`s — by convention
+    /// microseconds for latency stages, unitless for sizes/depths).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough copy of the bucket counts (relaxed loads).
+    fn counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Quantile readout (`q` in 0..=1): deterministic bucket upper bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        quantile_from_counts(&self.counts(), q)
+    }
+
+    /// Zero every bucket (bench legs measure per-phase behaviour).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum.store(0, Ordering::Relaxed);
+    }
+
+    /// Point-in-time summary used by snapshots and bench reports.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts = self.counts();
+        let count: u64 = counts.iter().sum();
+        let max = counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(bucket_upper_bound)
+            .unwrap_or(0);
+        HistSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            p50: quantile_from_counts(&counts, 0.50),
+            p90: quantile_from_counts(&counts, 0.90),
+            p95: quantile_from_counts(&counts, 0.95),
+            p99: quantile_from_counts(&counts, 0.99),
+            max,
+        }
+    }
+}
+
+/// Deterministic summary of a [`Histogram`] at one point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_exact_below_linear_max_and_monotone_above() {
+        for v in 0..LINEAR_MAX {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_upper_bound(bucket_index(v)), v);
+        }
+        let mut prev = 0;
+        for v in [16u64, 17, 31, 32, 1000, 1 << 20, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket index must be monotone in v");
+            prev = idx;
+            let ub = bucket_upper_bound(idx);
+            assert!(ub >= v, "upper bound {ub} must cover {v}");
+            // Relative error of reading the upper bound is <= 1/16.
+            assert!(ub - v <= v / SUB_PER_OCTAVE, "bound {ub} too far from {v}");
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_are_pinned_on_known_distributions() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        // Deterministic pins: rank 500 -> value 500 lives in bucket
+        // [496, 511]; rank 990 -> 990 in [960, 991]; rank 1000 -> 1000
+        // in [992, 1023].
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.quantile(0.5), 511);
+        assert_eq!(h.quantile(0.99), 991);
+        assert_eq!(h.quantile(1.0), 1023);
+        let s = h.snapshot();
+        assert_eq!((s.p50, s.p99, s.max), (511, 991, 1023));
+        assert_eq!(s.sum, 500_500);
+        assert!((s.mean() - 500.5).abs() < 1e-9);
+        h.reset();
+        assert_eq!(h.snapshot(), HistSnapshot::default());
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.snapshot(), HistSnapshot::default());
+    }
+
+    #[test]
+    fn percentile_sorted_is_pinned() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile_sorted(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile_sorted(&xs, 99.0) - 99.01).abs() < 1e-9);
+        assert!((percentile_sorted(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile_sorted(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+    }
+}

@@ -1,0 +1,39 @@
+//! Unified observability layer for the dist/persist/serve stack.
+//!
+//! Three pieces, one registry:
+//!
+//! - **Metrics registry** ([`registry`]): process-global named
+//!   [`Counter`]s, [`Gauge`]s, and fixed log-bucket [`Histogram`]s.
+//!   Components resolve handles once (through a [`Scope`], so multiple
+//!   live instances keep distinct names) and update via relaxed
+//!   atomics on hot paths. The pre-existing stat structs
+//!   (`RouterStats`, `CacheStats`, `RowCacheStats`, `ServeDistStats`,
+//!   ...) are now *views over registry reads* — there is no second set
+//!   of counters behind them.
+//! - **Stage-span tracing** ([`span`]): `obs::span("sample")` times a
+//!   pipeline stage into `trace.sample_us`. Off by default; a disabled
+//!   span costs one relaxed atomic load. `--metrics-out` (and the
+//!   benches' stage-breakdown legs) turn it on.
+//! - **JSONL telemetry export** ([`Exporter`]): periodic snapshots plus
+//!   an end-of-run report, one JSON document per line, validated by
+//!   `pyg2 obs-check`.
+//!
+//! Metric naming convention: `<layer>.<component>.<field>`, e.g.
+//! `dist.router.remote_msgs`, `persist.row_cache.hits`,
+//! `serve.requests`, `persist.io.read_us`, `trace.queue_wait_us`.
+//! See the observability section of `rust/README.md` for the full
+//! glossary and the JSONL schema.
+//!
+//! Nothing in this module consumes RNG state or reorders pipeline
+//! work, so batch and prediction streams are seed-for-seed identical
+//! with telemetry on or off (pinned by `tests/test_obs.rs`).
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use export::{check_file, snapshot_json, Exporter};
+pub use hist::{percentile_sorted, HistSnapshot, Histogram};
+pub use registry::{counter, gauge, histogram, read_all, reset_traces, Counter, Gauge, Scope};
+pub use span::{enabled, record_stage, set_enabled, span, stage_report, Span};

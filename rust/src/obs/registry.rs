@@ -1,0 +1,216 @@
+//! Process-global metrics registry: named counters, gauges, and
+//! log-bucket histograms, registered once and updated via relaxed
+//! atomics on hot paths.
+//!
+//! Components do **not** look metrics up by name on the hot path: they
+//! resolve [`Counter`]/[`Gauge`]/[`Histogram`] handles (plain `Arc`s)
+//! at construction and update through those. The registry mutex is
+//! only taken at registration and snapshot time.
+//!
+//! Because several live instances of one component are routine (one
+//! `PartitionRouter` per rank and edge type, one `RowCache` per mount,
+//! parallel unit tests in one process), components register through a
+//! [`Scope`]: the first instance of a prefix owns the canonical plain
+//! names (`dist.router.remote_msgs`), later instances get a
+//! disambiguating `#n` suffix on the prefix (`dist.router#2.*`). Each
+//! instance keeps its own handles, so per-instance `stats()` views and
+//! `reset_stats()` behave exactly as before the registry existed.
+
+use super::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotone event counter (resettable for per-phase bench readings).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time signed value (cache occupancy, queue depth, ...),
+/// updated by delta so concurrent writers compose.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, delta: i64) {
+        self.0.fetch_sub(delta, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    hists: BTreeMap<String, Arc<Histogram>>,
+    /// Live instance count per scope prefix, for `#n` disambiguation.
+    scopes: BTreeMap<String, u64>,
+}
+
+fn registry() -> &'static Mutex<Inner> {
+    static REGISTRY: OnceLock<Mutex<Inner>> = OnceLock::new();
+    REGISTRY.get_or_init(Mutex::default)
+}
+
+/// Get-or-register the counter `name`. Same name → same handle.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut r = registry().lock().unwrap();
+    Arc::clone(r.counters.entry(name.to_string()).or_default())
+}
+
+/// Get-or-register the gauge `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut r = registry().lock().unwrap();
+    Arc::clone(r.gauges.entry(name.to_string()).or_default())
+}
+
+/// Get-or-register the histogram `name`.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut r = registry().lock().unwrap();
+    Arc::clone(r.hists.entry(name.to_string()).or_default())
+}
+
+/// One component instance's naming scope. See the module docs for the
+/// canonical-name / `#n`-suffix convention.
+pub struct Scope {
+    prefix: String,
+}
+
+impl Scope {
+    /// Claim the next instance of `prefix` (e.g. `"persist.row_cache"`).
+    pub fn new(prefix: &str) -> Self {
+        let n = {
+            let mut r = registry().lock().unwrap();
+            let slot = r.scopes.entry(prefix.to_string()).or_insert(0);
+            *slot += 1;
+            *slot
+        };
+        let prefix =
+            if n == 1 { prefix.to_string() } else { format!("{prefix}#{n}") };
+        Self { prefix }
+    }
+
+    /// The resolved (possibly `#n`-suffixed) prefix.
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    pub fn counter(&self, field: &str) -> Arc<Counter> {
+        counter(&format!("{}.{field}", self.prefix))
+    }
+
+    pub fn gauge(&self, field: &str) -> Arc<Gauge> {
+        gauge(&format!("{}.{field}", self.prefix))
+    }
+
+    pub fn histogram(&self, field: &str) -> Arc<Histogram> {
+        histogram(&format!("{}.{field}", self.prefix))
+    }
+}
+
+/// Relaxed point-in-time copy of every registered metric, in name
+/// order: `(counters, gauges, histogram snapshots)`.
+#[allow(clippy::type_complexity)]
+pub fn read_all() -> (
+    Vec<(String, u64)>,
+    Vec<(String, i64)>,
+    Vec<(String, super::hist::HistSnapshot)>,
+) {
+    let r = registry().lock().unwrap();
+    let counters = r.counters.iter().map(|(k, v)| (k.clone(), v.get())).collect();
+    let gauges = r.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect();
+    let hists = r.hists.iter().map(|(k, v)| (k.clone(), v.snapshot())).collect();
+    (counters, gauges, hists)
+}
+
+/// Zero every `trace.*` stage histogram (bench legs measure per-phase
+/// stage breakdowns). Counters and gauges are left alone — counters
+/// belong to component instances (reset via their `reset_stats()`),
+/// and gauges carry live occupancy state that must not be clobbered.
+pub fn reset_traces() {
+    let r = registry().lock().unwrap();
+    for (name, h) in r.hists.iter() {
+        if name.starts_with("trace.") {
+            h.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_returns_same_handle() {
+        let a = counter("test.registry.same_name");
+        let b = counter("test.registry.same_name");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert!(Arc::ptr_eq(&a, &b));
+        a.reset();
+        assert_eq!(b.get(), 0);
+    }
+
+    #[test]
+    fn gauge_deltas_compose() {
+        let g = gauge("test.registry.gauge");
+        g.add(10);
+        g.sub(3);
+        assert_eq!(g.get(), 7);
+        g.set(-1);
+        assert_eq!(g.get(), -1);
+    }
+
+    #[test]
+    fn scopes_disambiguate_instances() {
+        let a = Scope::new("test.registry.scoped");
+        let b = Scope::new("test.registry.scoped");
+        assert_eq!(a.prefix(), "test.registry.scoped");
+        assert_eq!(b.prefix(), "test.registry.scoped#2");
+        let ca = a.counter("hits");
+        let cb = b.counter("hits");
+        assert!(!Arc::ptr_eq(&ca, &cb), "instances must not share counters");
+        ca.inc();
+        assert_eq!((ca.get(), cb.get()), (1, 0));
+    }
+
+    #[test]
+    fn read_all_sees_registered_metrics() {
+        counter("test.registry.read_all.c").add(5);
+        gauge("test.registry.read_all.g").set(9);
+        histogram("test.registry.read_all.h").record(100);
+        let (cs, gs, hs) = read_all();
+        assert!(cs.iter().any(|(k, v)| k == "test.registry.read_all.c" && *v >= 5));
+        assert!(gs.iter().any(|(k, v)| k == "test.registry.read_all.g" && *v == 9));
+        assert!(hs.iter().any(|(k, s)| k == "test.registry.read_all.h" && s.count >= 1));
+    }
+}

@@ -20,11 +20,13 @@
 
 use crate::error::{Error, Result};
 use crate::graph::Compressed;
+use crate::obs;
 use crate::storage::pread_raw;
 use std::fs::File;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 const U32_MAGIC: &[u8; 8] = b"PYGU32A1";
 const I64_MAGIC: &[u8; 8] = b"PYGI64A1";
@@ -291,18 +293,84 @@ impl PageSource for MmapSource {
     }
 }
 
-/// Wrap an already-open, already-validated shard file in the chosen
-/// [`PageSource`] backend.
-pub fn page_source(file: File, path: PathBuf, backend: IoBackend) -> Result<Arc<dyn PageSource>> {
-    match backend {
-        IoBackend::Pread => Ok(Arc::new(PreadSource::new(file, path)?)),
-        #[cfg(unix)]
-        IoBackend::Mmap => Ok(Arc::new(MmapSource::new(file, path)?)),
-        #[cfg(not(unix))]
-        IoBackend::Mmap => Err(Error::Config(
-            "the mmap io backend is only available on Unix hosts".into(),
-        )),
+/// [`PageSource`] decorator accounting every positioned read into the
+/// shared `persist.io.*` registry metrics: single reads, batched
+/// submissions and their segments (coalesced runs), bytes moved, and —
+/// only while telemetry is enabled — a per-call latency histogram.
+/// Every source built by [`page_source`] is wrapped, so all shard files
+/// of a mount aggregate into one ledger; with telemetry disabled a read
+/// costs two relaxed counter adds and no clock read.
+struct ObservedSource {
+    inner: Arc<dyn PageSource>,
+    reads: Arc<obs::Counter>,
+    batch_calls: Arc<obs::Counter>,
+    batched_runs: Arc<obs::Counter>,
+    bytes: Arc<obs::Counter>,
+    read_us: Arc<obs::Histogram>,
+}
+
+impl ObservedSource {
+    fn new(inner: Arc<dyn PageSource>) -> Self {
+        Self {
+            inner,
+            reads: obs::counter("persist.io.reads"),
+            batch_calls: obs::counter("persist.io.batch_calls"),
+            batched_runs: obs::counter("persist.io.batched_runs"),
+            bytes: obs::counter("persist.io.bytes"),
+            read_us: obs::histogram("persist.io.read_us"),
+        }
     }
+}
+
+impl PageSource for ObservedSource {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let started = obs::enabled().then(Instant::now);
+        self.inner.read_at(offset, buf)?;
+        self.reads.inc();
+        self.bytes.add(buf.len() as u64);
+        if let Some(t) = started {
+            self.read_us.record(t.elapsed().as_micros() as u64);
+        }
+        Ok(())
+    }
+
+    fn read_batch(&self, segs: &mut [IoSeg<'_>]) -> Result<()> {
+        let started = obs::enabled().then(Instant::now);
+        self.inner.read_batch(segs)?;
+        self.batch_calls.inc();
+        self.batched_runs.add(segs.len() as u64);
+        self.bytes.add(segs.iter().map(|s| s.buf.len() as u64).sum());
+        if let Some(t) = started {
+            self.read_us.record(t.elapsed().as_micros() as u64);
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn path(&self) -> &Path {
+        self.inner.path()
+    }
+}
+
+/// Wrap an already-open, already-validated shard file in the chosen
+/// [`PageSource`] backend (plus the `persist.io.*` accounting
+/// decorator).
+pub fn page_source(file: File, path: PathBuf, backend: IoBackend) -> Result<Arc<dyn PageSource>> {
+    let raw: Arc<dyn PageSource> = match backend {
+        IoBackend::Pread => Arc::new(PreadSource::new(file, path)?),
+        #[cfg(unix)]
+        IoBackend::Mmap => Arc::new(MmapSource::new(file, path)?),
+        #[cfg(not(unix))]
+        IoBackend::Mmap => {
+            return Err(Error::Config(
+                "the mmap io backend is only available on Unix hosts".into(),
+            ))
+        }
+    };
+    Ok(Arc::new(ObservedSource::new(raw)))
 }
 
 /// Read a whole file, verifying its magic and exact length:

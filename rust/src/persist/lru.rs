@@ -28,9 +28,10 @@
 //! never reach the shards at all; everything else — local reads and
 //! remote misses alike — pages through here.
 
+use crate::obs;
 use rustc_hash::FxHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Sentinel for "no slot" in the intrusive list.
 const NIL: usize = usize::MAX;
@@ -381,6 +382,41 @@ struct Entry {
     prefetched: bool,
 }
 
+/// Registry handles of one cache instance (scope `persist.row_cache`
+/// or `persist.adj_cache`): counters for the monotone events, gauges
+/// for residency. [`LruCore::stats`] is a view over these reads — the
+/// stripes keep only the operational state eviction needs.
+struct CoreObs {
+    hits: Arc<obs::Counter>,
+    misses: Arc<obs::Counter>,
+    evictions: Arc<obs::Counter>,
+    prefetch_hits: Arc<obs::Counter>,
+    prefetch_wasted: Arc<obs::Counter>,
+    /// Charged resident bytes, summed over stripes (each stripe moves
+    /// it by delta under its lock).
+    bytes: Arc<obs::Gauge>,
+    entries: Arc<obs::Gauge>,
+    /// Sum of the per-stripe peaks: each stripe pushes its peak
+    /// advances (and reset rebases) as deltas.
+    peak_bytes: Arc<obs::Gauge>,
+}
+
+impl CoreObs {
+    fn register(prefix: &str) -> Self {
+        let scope = obs::Scope::new(prefix);
+        Self {
+            hits: scope.counter("hits"),
+            misses: scope.counter("misses"),
+            evictions: scope.counter("evictions"),
+            prefetch_hits: scope.counter("prefetch_hits"),
+            prefetch_wasted: scope.counter("prefetch_wasted"),
+            bytes: scope.gauge("bytes_cached"),
+            entries: scope.gauge("entries"),
+            peak_bytes: scope.gauge("peak_bytes"),
+        }
+    }
+}
+
 struct Inner {
     map: FxHashMap<u64, usize>,
     entries: Vec<Entry>,
@@ -391,9 +427,6 @@ struct Inner {
     tail: usize,
     bytes: u64,
     peak_bytes: u64,
-    evictions: u64,
-    prefetch_hits: u64,
-    prefetch_wasted: u64,
 }
 
 impl Inner {
@@ -406,9 +439,6 @@ impl Inner {
             tail: NIL,
             bytes: 0,
             peak_bytes: 0,
-            evictions: 0,
-            prefetch_hits: 0,
-            prefetch_wasted: 0,
         }
     }
 
@@ -438,20 +468,23 @@ impl Inner {
         }
     }
 
-    fn evict_tail(&mut self) {
+    fn evict_tail(&mut self, obs: &CoreObs) {
         let i = self.tail;
         debug_assert_ne!(i, NIL, "evict on an empty stripe");
         self.detach(i);
         let wasted = self.entries[i].prefetched;
         let e = &mut self.entries[i];
-        self.bytes -= charge(e.data.len());
+        let freed = charge(e.data.len());
+        self.bytes -= freed;
         self.map.remove(&e.key);
         e.data = Box::new([]);
         e.prefetched = false;
         self.free.push(i);
-        self.evictions += 1;
+        obs.bytes.sub(freed as i64);
+        obs.entries.sub(1);
+        obs.evictions.inc();
         if wasted {
-            self.prefetch_wasted += 1;
+            obs.prefetch_wasted.inc();
         }
     }
 }
@@ -467,12 +500,11 @@ struct Stripe {
 struct LruCore {
     capacity: u64,
     stripes: Vec<Stripe>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    obs: CoreObs,
 }
 
 impl LruCore {
-    fn new(capacity_bytes: u64) -> Self {
+    fn new(capacity_bytes: u64, prefix: &str) -> Self {
         let n = (capacity_bytes / BYTES_PER_STRIPE).clamp(1, MAX_STRIPES);
         let stripes = (0..n)
             .map(|_| Stripe {
@@ -480,12 +512,7 @@ impl LruCore {
                 inner: Mutex::new(Inner::new()),
             })
             .collect();
-        Self {
-            capacity: capacity_bytes,
-            stripes,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+        Self { capacity: capacity_bytes, stripes, obs: CoreObs::register(prefix) }
     }
 
     fn stripe(&self, key: u64) -> &Stripe {
@@ -501,18 +528,18 @@ impl LruCore {
         let mut inner = self.stripe(key).inner.lock().unwrap();
         let Some(&slot) = inner.map.get(&key) else {
             drop(inner);
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.obs.misses.inc();
             return None;
         };
         let out = f(&inner.entries[slot].data);
         if inner.entries[slot].prefetched {
             inner.entries[slot].prefetched = false;
-            inner.prefetch_hits += 1;
+            self.obs.prefetch_hits.inc();
         }
         inner.detach(slot);
         inner.push_front(slot);
         drop(inner);
-        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.obs.hits.inc();
         Some(out)
     }
 
@@ -544,7 +571,7 @@ impl LruCore {
             return;
         }
         while inner.bytes + bytes > stripe.capacity {
-            inner.evict_tail();
+            inner.evict_tail(&self.obs);
         }
         let slot = match inner.free.pop() {
             Some(i) => {
@@ -561,38 +588,44 @@ impl LruCore {
         inner.map.insert(key, slot);
         inner.push_front(slot);
         inner.bytes += bytes;
-        inner.peak_bytes = inner.peak_bytes.max(inner.bytes);
+        self.obs.bytes.add(bytes as i64);
+        self.obs.entries.add(1);
+        if inner.bytes > inner.peak_bytes {
+            self.obs.peak_bytes.add((inner.bytes - inner.peak_bytes) as i64);
+            inner.peak_bytes = inner.bytes;
+        }
     }
 
+    /// Current counters — a view over the registry handles (the gauges
+    /// are maintained by delta under the stripe locks, so a quiescent
+    /// read equals the sum over stripes exactly).
     fn stats(&self) -> RowCacheStats {
-        let mut stats = RowCacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+        RowCacheStats {
+            hits: self.obs.hits.get(),
+            misses: self.obs.misses.get(),
+            evictions: self.obs.evictions.get(),
+            bytes_cached: self.obs.bytes.get() as u64,
+            peak_bytes: self.obs.peak_bytes.get() as u64,
+            entries: self.obs.entries.get() as u64,
             capacity_bytes: self.capacity,
-            ..Default::default()
-        };
-        for stripe in &self.stripes {
-            let inner = stripe.inner.lock().unwrap();
-            stats.evictions += inner.evictions;
-            stats.bytes_cached += inner.bytes;
-            stats.peak_bytes += inner.peak_bytes;
-            stats.entries += inner.map.len() as u64;
-            stats.prefetch_hits += inner.prefetch_hits;
-            stats.prefetch_wasted += inner.prefetch_wasted;
+            prefetch_hits: self.obs.prefetch_hits.get(),
+            prefetch_wasted: self.obs.prefetch_wasted.get(),
         }
-        stats
     }
 
     fn reset_stats(&self) {
         for stripe in &self.stripes {
             let mut inner = stripe.inner.lock().unwrap();
-            inner.evictions = 0;
+            // Rebase this stripe's peak to its residency; the aggregate
+            // gauge drops by the same delta, staying the sum of peaks.
+            self.obs.peak_bytes.sub((inner.peak_bytes - inner.bytes) as i64);
             inner.peak_bytes = inner.bytes;
-            inner.prefetch_hits = 0;
-            inner.prefetch_wasted = 0;
         }
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
+        self.obs.hits.reset();
+        self.obs.misses.reset();
+        self.obs.evictions.reset();
+        self.obs.prefetch_hits.reset();
+        self.obs.prefetch_wasted.reset();
     }
 }
 
@@ -608,7 +641,7 @@ impl RowCache {
     /// ([`LruConfig::row_budget`] — the full budget unless adjacency
     /// paging carves out its slice).
     pub fn new(cfg: LruConfig) -> Self {
-        Self { core: LruCore::new(cfg.row_budget()) }
+        Self { core: LruCore::new(cfg.row_budget(), "persist.row_cache") }
     }
 
     /// The configured byte budget (this cache's share).
@@ -684,7 +717,10 @@ pub struct AdjCache {
 
 impl AdjCache {
     pub fn new(capacity_bytes: u64) -> Self {
-        Self { core: LruCore::new(capacity_bytes), next_id: AtomicU64::new(0) }
+        Self {
+            core: LruCore::new(capacity_bytes, "persist.adj_cache"),
+            next_id: AtomicU64::new(0),
+        }
     }
 
     /// Reserve `n` contiguous paged-file ids for key packing and return

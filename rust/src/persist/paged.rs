@@ -31,6 +31,7 @@
 use super::io::{self, AdjLayout, AdjStamp, IoBackend, IoSeg, PageSource};
 use super::lru::{AdjCache, MAX_ADJ_IDS, RowCache};
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::storage::{FeatureKey, FeatureStore, FileFeatureStore};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
@@ -608,6 +609,7 @@ impl PagedAdjacency {
         // (for d edges the runs sit (nnz - d) * 4 bytes apart), one
         // batched two-segment submission otherwise. Empty lists cost no
         // read at all.
+        let _span = obs::span("adj_read");
         let ip = self.indptr(dir);
         let (lo, hi) = (ip[v as usize] as usize, ip[v as usize + 1] as usize);
         if lo > hi || hi > nnz {

@@ -29,7 +29,10 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        // Module path of the log site (falls back to the target, which
+        // defaults to the module path anyway for bare `log!` calls).
+        let module = record.module_path().unwrap_or_else(|| record.target());
+        eprintln!("[{t:9.3}s {lvl} {module}] {}", record.args());
     }
 
     fn flush(&self) {}
@@ -37,15 +40,24 @@ impl log::Log for StderrLogger {
 
 static LOGGER: StderrLogger = StderrLogger;
 
-/// Install the logger once; level from `PYG2_LOG` (error|warn|info|debug|trace).
-pub fn init() {
-    let level = match std::env::var("PYG2_LOG").ok().as_deref() {
+/// The level filter a `PYG2_LOG` value selects (case-insensitive;
+/// `off` silences everything; unset or unrecognized → the default,
+/// `info`).
+pub fn level_from_env(value: Option<&str>) -> LevelFilter {
+    match value.map(|v| v.trim().to_ascii_lowercase()).as_deref() {
+        Some("off") => LevelFilter::Off,
         Some("error") => LevelFilter::Error,
         Some("warn") => LevelFilter::Warn,
+        Some("info") => LevelFilter::Info,
         Some("debug") => LevelFilter::Debug,
         Some("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
-    };
+    }
+}
+
+/// Install the logger once; level from `PYG2_LOG` (error|warn|info|debug|trace).
+pub fn init() {
+    let level = level_from_env(std::env::var("PYG2_LOG").ok().as_deref());
     // Ignore the error if a logger is already set (tests call init repeatedly).
     let _ = log::set_logger(&LOGGER).map(|()| log::set_max_level(level));
     start();
@@ -53,10 +65,28 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use log::LevelFilter;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn env_levels_parse_case_insensitively_with_info_default() {
+        for (v, want) in [
+            (Some("error"), LevelFilter::Error),
+            (Some("WARN"), LevelFilter::Warn),
+            (Some("info"), LevelFilter::Info),
+            (Some(" Debug "), LevelFilter::Debug),
+            (Some("TRACE"), LevelFilter::Trace),
+            (Some("off"), LevelFilter::Off),
+            (Some("bogus"), LevelFilter::Info),
+            (None, LevelFilter::Info),
+        ] {
+            assert_eq!(super::level_from_env(v), want, "PYG2_LOG={v:?}");
+        }
     }
 }

@@ -26,6 +26,12 @@ pub enum RecvDeadline<T> {
     Closed,
 }
 
+/// Registry handles of an observed queue ([`BoundedQueue::new_observed`]).
+struct QueueObs {
+    depth: Arc<crate::obs::Gauge>,
+    wait_us: Arc<crate::obs::Histogram>,
+}
+
 /// A bounded multi-producer multi-consumer channel.
 ///
 /// `send` blocks while full (backpressure); `recv` blocks while empty and
@@ -35,6 +41,7 @@ pub struct BoundedQueue<T> {
     not_full: Condvar,
     not_empty: Condvar,
     cap: usize,
+    obs: Option<QueueObs>,
 }
 
 struct QueueInner<T> {
@@ -50,7 +57,47 @@ impl<T> BoundedQueue<T> {
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             cap,
+            obs: None,
         })
+    }
+
+    /// A queue publishing to the metrics registry under `prefix`:
+    /// `{prefix}.depth` (gauge, always maintained — one relaxed add per
+    /// send/receive) and `{prefix}.wait_us` (histogram of receiver wait
+    /// times, only timed while stage tracing is enabled). Generic
+    /// queues (e.g. the thread-pool job queue) stay unobserved; the
+    /// serve inbox opts in.
+    pub fn new_observed(cap: usize, prefix: &str) -> Arc<Self> {
+        assert!(cap > 0, "queue capacity must be positive");
+        let scope = crate::obs::Scope::new(prefix);
+        Arc::new(Self {
+            inner: Mutex::new(QueueInner { q: VecDeque::with_capacity(cap), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+            obs: Some(QueueObs {
+                depth: scope.gauge("depth"),
+                wait_us: scope.histogram("wait_us"),
+            }),
+        })
+    }
+
+    /// Start of a receiver-wait measurement (observed queue + tracing on).
+    fn wait_clock(&self) -> Option<Instant> {
+        match &self.obs {
+            Some(_) if crate::obs::enabled() => Some(Instant::now()),
+            _ => None,
+        }
+    }
+
+    /// Close out a successful receive: depth gauge down, wait recorded.
+    fn note_recv(&self, started: Option<Instant>) {
+        if let Some(obs) = &self.obs {
+            obs.depth.sub(1);
+            if let Some(t0) = started {
+                obs.wait_us.record(t0.elapsed().as_micros() as u64);
+            }
+        }
     }
 
     /// Blocking send. Errors if the channel was closed.
@@ -63,16 +110,22 @@ impl<T> BoundedQueue<T> {
             return Err(SendError);
         }
         g.q.push_back(item);
+        if let Some(obs) = &self.obs {
+            obs.depth.add(1);
+        }
         self.not_empty.notify_one();
         Ok(())
     }
 
     /// Blocking receive; `None` when closed and drained.
     pub fn recv(&self) -> Option<T> {
+        let started = self.wait_clock();
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.q.pop_front() {
                 self.not_full.notify_one();
+                drop(g);
+                self.note_recv(started);
                 return Some(item);
             }
             if g.closed {
@@ -90,10 +143,13 @@ impl<T> BoundedQueue<T> {
     /// burning a core, unlike the `try_recv` + `yield_now` loop it
     /// replaces.
     pub fn recv_deadline(&self, deadline: Instant) -> RecvDeadline<T> {
+        let started = self.wait_clock();
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.q.pop_front() {
                 self.not_full.notify_one();
+                drop(g);
+                self.note_recv(started);
                 return RecvDeadline::Item(item);
             }
             if g.closed {
@@ -116,6 +172,8 @@ impl<T> BoundedQueue<T> {
         let item = g.q.pop_front();
         if item.is_some() {
             self.not_full.notify_one();
+            drop(g);
+            self.note_recv(None);
         }
         item
     }
@@ -381,6 +439,20 @@ mod tests {
     #[cfg(target_os = "linux")]
     extern "C" {
         fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+
+    #[test]
+    fn observed_queue_tracks_depth() {
+        let q = BoundedQueue::new_observed(4, "test.pool.queue");
+        // Read through the queue's own handle: the scope may be `#n`-
+        // suffixed if a parallel test claimed the prefix first.
+        let depth = Arc::clone(&q.obs.as_ref().unwrap().depth);
+        q.send(1u32).unwrap();
+        q.send(2u32).unwrap();
+        assert_eq!(depth.get(), 2);
+        assert_eq!(q.recv(), Some(1));
+        assert_eq!(q.try_recv(), Some(2));
+        assert_eq!(depth.get(), 0);
     }
 
     #[test]

@@ -53,22 +53,11 @@ impl Samples {
         self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Percentile via linear interpolation on the sorted samples.
+    /// Percentile of the samples — delegates to the codebase's single
+    /// percentile definition in [`crate::obs::hist::percentile_sorted`]
+    /// (linear interpolation on the sorted samples).
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.xs.is_empty() {
-            return f64::NAN;
-        }
-        let mut sorted = self.xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        if lo == hi {
-            sorted[lo]
-        } else {
-            let frac = rank - lo as f64;
-            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
-        }
+        crate::obs::hist::percentile_sorted(&self.xs, p)
     }
 
     pub fn median(&self) -> f64 {
@@ -89,8 +78,11 @@ impl Samples {
     }
 }
 
-/// Online counter histogram with power-of-two buckets; cheap enough for
-/// hot-loop instrumentation (loader queue depths, batch sizes, ...).
+/// Online counter histogram over the shared log-bucket layout of
+/// [`crate::obs::hist`]; cheap enough for hot-loop instrumentation
+/// (loader queue depths, batch sizes, ...). The atomic multi-thread
+/// variant is [`crate::obs::Histogram`]; both share one bucket layout
+/// and one quantile definition.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     buckets: Vec<u64>,
@@ -106,12 +98,11 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        Self { buckets: vec![0; 64], count: 0, sum: 0.0 }
+        Self { buckets: vec![0; crate::obs::hist::NUM_BUCKETS], count: 0, sum: 0.0 }
     }
 
     pub fn record(&mut self, v: u64) {
-        let b = (64 - v.leading_zeros()).min(63) as usize;
-        self.buckets[b] += 1;
+        self.buckets[crate::obs::hist::bucket_index(v)] += 1;
         self.count += 1;
         self.sum += v as f64;
     }
@@ -128,17 +119,14 @@ impl Histogram {
         }
     }
 
-    /// Upper bound of the bucket containing the q-quantile.
+    /// Upper bound of the bucket containing the q-quantile (`q` in
+    /// 0..=1) — the shared deterministic readout of
+    /// [`crate::obs::hist::quantile_from_counts`].
     pub fn quantile_upper_bound(&self, q: f64) -> u64 {
-        let target = (q * self.count as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target && self.count > 0 {
-                return if i == 0 { 0 } else { 1u64 << i };
-            }
+        if self.count == 0 {
+            return u64::MAX;
         }
-        u64::MAX
+        crate::obs::hist::quantile_from_counts(&self.buckets, q)
     }
 }
 
@@ -180,6 +168,31 @@ mod tests {
         assert!((h.mean() - 499.5).abs() < 1e-9);
         assert!(h.quantile_upper_bound(0.5) >= 256);
         assert!(h.quantile_upper_bound(1.0) >= 512);
+    }
+
+    #[test]
+    fn percentiles_pin_the_shared_definition() {
+        // `Samples::percentile` delegates to obs::hist::percentile_sorted;
+        // pin exact values so the two can never drift apart silently.
+        let mut s = Samples::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+        assert!((s.percentile(95.0) - 95.05).abs() < 1e-9);
+        assert_eq!(
+            s.percentile(99.0),
+            crate::obs::hist::percentile_sorted(&(1..=100).map(f64::from).collect::<Vec<_>>(), 99.0)
+        );
+        // The histogram side shares one bucket layout: quantiles of a
+        // known distribution are pinned to exact bucket upper bounds.
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile_upper_bound(0.5), 511);
+        assert_eq!(h.quantile_upper_bound(0.99), 991);
+        assert_eq!(h.quantile_upper_bound(1.0), 1023);
     }
 
     #[test]

@@ -1,0 +1,392 @@
+//! The observability layer's correctness anchor: registry semantics,
+//! span tracing on/off, the JSONL snapshot schema — and the invariant
+//! everything else leans on: **telemetry must never change results**.
+//! Batch streams (homogeneous + heterogeneous, mounted resident +
+//! demand-paged adjacency) and serving predictions must be seed-for-seed
+//! identical with `--metrics-out` tracing on or off, because nothing in
+//! the obs layer consumes RNG state or reorders pipeline work.
+//!
+//! The tracing switch is process-global, so every test that flips it
+//! serializes on one mutex and restores "off" before releasing it;
+//! tests that only read counters need no coordination (counters are
+//! always on, and scoped instances get distinct names).
+
+use pyg2::coordinator::{
+    hetero_mounted_loader, hetero_partitioned_loader_with, mounted_loader, mounted_stores,
+    partitioned_loader_with, DistInferenceServer, DistOptions, ServeDistConfig,
+};
+use pyg2::datasets::hetero::{self, HeteroSbmConfig};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::loader::{Batch, HeteroBatch, HeteroLoaderConfig, LoaderConfig};
+use pyg2::nn::NodeClassifier;
+use pyg2::obs;
+use pyg2::partition::{ldg_partition, TypedPartitioning};
+use pyg2::persist::{write_bundle, write_bundle_hetero, LruConfig};
+use pyg2::sampler::{HeteroSamplerConfig, NeighborSamplerConfig};
+use pyg2::storage::FeatureKey;
+use pyg2::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Serializes the tests that flip the process-global tracing switch.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pyg2_test_obs").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn registry_counters_gauges_histograms() {
+    let c = obs::counter("test.obs.reg.count");
+    c.inc();
+    c.add(4);
+    assert_eq!(c.get(), 5);
+    assert!(Arc::ptr_eq(&c, &obs::counter("test.obs.reg.count")), "one handle per name");
+    c.reset();
+    assert_eq!(c.get(), 0);
+
+    let g = obs::gauge("test.obs.reg.depth");
+    g.add(10);
+    g.sub(3);
+    assert_eq!(g.get(), 7);
+    g.set(-2);
+    assert_eq!(g.get(), -2);
+
+    // The pinned quantile contract: nearest-rank over log buckets,
+    // reported as the inclusive bucket upper bound.
+    let h = obs::histogram("test.obs.reg.lat");
+    for v in 1..=1000u64 {
+        h.record(v);
+    }
+    let s = h.snapshot();
+    assert_eq!((s.count, s.sum), (1000, 500500));
+    assert_eq!((s.p50, s.p99, s.max), (511, 991, 1023));
+
+    let (counters, gauges, hists) = obs::read_all();
+    assert!(counters.iter().any(|(k, _)| k == "test.obs.reg.count"));
+    assert!(gauges.iter().any(|(k, v)| k == "test.obs.reg.depth" && *v == -2));
+    assert!(hists.iter().any(|(k, s)| k == "test.obs.reg.lat" && s.count == 1000));
+}
+
+#[test]
+fn scoped_instances_keep_distinct_names() {
+    let a = obs::Scope::new("test.obs.scope");
+    let b = obs::Scope::new("test.obs.scope");
+    assert_ne!(a.prefix(), b.prefix(), "second instance must be disambiguated");
+    a.counter("hits").add(3);
+    b.counter("hits").add(8);
+    assert_eq!(a.counter("hits").get(), 3);
+    assert_eq!(b.counter("hits").get(), 8);
+}
+
+#[test]
+fn span_switch_gates_recording() {
+    let _guard = TRACE_LOCK.lock().unwrap();
+    let h = obs::histogram("trace.obs_gate_us");
+    obs::set_enabled(false);
+    {
+        let s = obs::span("obs_gate");
+        assert!(!s.is_live(), "disabled span must be a no-op guard");
+    }
+    obs::record_stage("obs_gate", 9);
+    assert_eq!(h.count(), 0, "disabled tracing must record nothing");
+
+    obs::set_enabled(true);
+    {
+        let _outer = obs::span("obs_gate");
+        drop(obs::span("obs_gate")); // nested same-stage span times itself
+    }
+    obs::record_stage("obs_gate", 9);
+    obs::set_enabled(false);
+    assert_eq!(h.count(), 3, "outer + nested + manual all recorded");
+    assert!(obs::stage_report().iter().any(|(s, _)| s == "obs_gate"));
+
+    obs::reset_traces();
+    assert_eq!(h.count(), 0, "reset_traces zeroes trace.* histograms");
+}
+
+#[test]
+fn jsonl_snapshot_schema_roundtrips_and_exporter_validates() {
+    obs::counter("test.obs.jsonl.c").add(11);
+    obs::gauge("test.obs.jsonl.g").set(-4);
+    obs::histogram("test.obs.jsonl.h").record(100);
+
+    let line = obs::snapshot_json(2, 55, true).to_string();
+    let v = pyg2::util::json::parse(&line).unwrap();
+    assert_eq!(v.get("seq").unwrap().as_f64(), Some(2.0));
+    assert_eq!(v.get("ts_ms").unwrap().as_f64(), Some(55.0));
+    assert_eq!(v.get("final").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("counters").unwrap().get("test.obs.jsonl.c").unwrap().as_f64(), Some(11.0));
+    assert_eq!(v.get("gauges").unwrap().get("test.obs.jsonl.g").unwrap().as_f64(), Some(-4.0));
+    let h = v.get("histograms").unwrap().get("test.obs.jsonl.h").unwrap();
+    for key in ["count", "sum", "p50", "p90", "p95", "p99", "max"] {
+        assert!(h.get(key).is_some(), "histogram snapshot missing {key}");
+    }
+
+    let dir = tmp("exporter");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+    let ex = obs::Exporter::start(&path, None).unwrap();
+    ex.finish().unwrap();
+    assert_eq!(obs::check_file(&path).unwrap(), 1, "one final snapshot");
+    std::fs::write(&path, "{\"seq\":0}\n").unwrap();
+    assert!(obs::check_file(&path).is_err(), "schema violations must be rejected");
+}
+
+fn loader_cfg(workers: usize) -> LoaderConfig {
+    LoaderConfig {
+        batch_size: 16,
+        num_workers: workers,
+        shuffle: true,
+        seed: 13,
+        sampler: NeighborSamplerConfig { fanouts: vec![5, 3], seed: 4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn assert_batches_identical(a: &Batch, b: &Batch) {
+    assert_eq!(a.sub.nodes, b.sub.nodes, "global node ids");
+    assert_eq!(a.sub.row, b.sub.row);
+    assert_eq!(a.sub.col, b.sub.col);
+    assert_eq!(a.sub.edge_ids, b.sub.edge_ids);
+    assert_eq!(a.x.data(), b.x.data(), "features");
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.mask, b.mask);
+}
+
+/// Run two epochs through `loader` and collect every batch.
+fn collect_epochs(loader: &pyg2::dist::DistNeighborLoader) -> Vec<Batch> {
+    (0..2u64)
+        .flat_map(|e| loader.iter_epoch(e).map(|b| b.unwrap()))
+        .collect()
+}
+
+#[test]
+fn telemetry_leaves_homo_batches_seed_for_seed_identical() {
+    let g = sbm::generate(&SbmConfig { num_nodes: 400, seed: 77, ..Default::default() }).unwrap();
+    let seeds: Vec<u32> = (0..150).collect();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let bundle = write_bundle(tmp("homo_bundle"), &g, &partitioning).unwrap();
+    let paged = LruConfig { page_adjacency: true, ..Default::default() };
+
+    // Baseline streams with tracing off: in-memory, mounted resident
+    // adjacency, mounted demand-paged adjacency.
+    let run_all = || {
+        let in_mem = partitioned_loader_with(
+            &g,
+            &partitioning,
+            0,
+            seeds.clone(),
+            loader_cfg(2),
+            DistOptions::default(),
+        )
+        .unwrap();
+        let mounted = mounted_loader(
+            &bundle,
+            0,
+            seeds.clone(),
+            loader_cfg(2),
+            DistOptions::default(),
+            LruConfig::default(),
+        )
+        .unwrap();
+        let paged_loader = mounted_loader(
+            &bundle,
+            0,
+            seeds.clone(),
+            loader_cfg(3),
+            DistOptions { prefetch: true, ..Default::default() },
+            paged,
+        )
+        .unwrap();
+        (collect_epochs(&in_mem), collect_epochs(&mounted), collect_epochs(&paged_loader))
+    };
+
+    let _guard = TRACE_LOCK.lock().unwrap();
+    obs::set_enabled(false);
+    let (base_mem, base_mount, base_paged) = run_all();
+
+    // Same streams with tracing on and the exporter running.
+    let dir = tmp("homo_jsonl");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+    obs::set_enabled(true);
+    let ex = obs::Exporter::start(&path, None).unwrap();
+    let (traced_mem, traced_mount, traced_paged) = run_all();
+    ex.finish().unwrap();
+    obs::set_enabled(false);
+
+    for (base, traced) in [
+        (&base_mem, &traced_mem),
+        (&base_mount, &traced_mount),
+        (&base_paged, &traced_paged),
+    ] {
+        assert_eq!(base.len(), traced.len(), "batch counts");
+        for (a, b) in base.iter().zip(traced.iter()) {
+            assert_batches_identical(a, b);
+        }
+    }
+    assert!(obs::check_file(&path).unwrap() >= 1, "exporter left a valid JSONL file");
+}
+
+#[test]
+fn telemetry_leaves_hetero_batches_seed_for_seed_identical() {
+    let g = hetero::generate(&HeteroSbmConfig {
+        num_users: 300,
+        num_items: 200,
+        num_tags: 60,
+        seed: 77,
+        ..Default::default()
+    })
+    .unwrap();
+    let seeds: Vec<u32> = (0..120).collect();
+    let tp = TypedPartitioning::ldg_hetero(&g, 3, 1.1).unwrap();
+    let bundle = write_bundle_hetero(tmp("hetero_bundle"), &g, &tp).unwrap();
+    let cfg = HeteroLoaderConfig {
+        batch_size: 16,
+        num_workers: 2,
+        shuffle: true,
+        seed: 13,
+        sampler: HeteroSamplerConfig {
+            default_fanouts: vec![5, 3],
+            seed: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let run_all = || {
+        let in_mem = hetero_partitioned_loader_with(
+            &g,
+            &tp,
+            0,
+            "user",
+            seeds.clone(),
+            cfg.clone(),
+            DistOptions::default(),
+        )
+        .unwrap();
+        let mounted = hetero_mounted_loader(
+            &bundle,
+            0,
+            "user",
+            seeds.clone(),
+            cfg.clone(),
+            DistOptions::default(),
+            LruConfig::default(),
+        )
+        .unwrap();
+        let collect = |l: &pyg2::dist::HeteroDistNeighborLoader| -> Vec<HeteroBatch> {
+            (0..2u64)
+                .flat_map(|e| l.iter_epoch(e).map(|b| b.unwrap()))
+                .collect()
+        };
+        (collect(&in_mem), collect(&mounted))
+    };
+
+    let _guard = TRACE_LOCK.lock().unwrap();
+    obs::set_enabled(false);
+    let (base_mem, base_mount) = run_all();
+    obs::set_enabled(true);
+    let (traced_mem, traced_mount) = run_all();
+    obs::set_enabled(false);
+
+    for (base, traced) in [(&base_mem, &traced_mem), (&base_mount, &traced_mount)] {
+        assert_eq!(base.len(), traced.len(), "batch counts");
+        for (a, b) in base.iter().zip(traced.iter()) {
+            assert_eq!(a.sub.nodes, b.sub.nodes, "per-type node ids");
+            assert_eq!(
+                a.sub.edges.keys().collect::<Vec<_>>(),
+                b.sub.edges.keys().collect::<Vec<_>>()
+            );
+            for (et, ea) in &a.sub.edges {
+                let eb = &b.sub.edges[et];
+                assert_eq!((&ea.row, &ea.col, &ea.edge_ids), (&eb.row, &eb.col, &eb.edge_ids));
+            }
+            for (nt, xa) in &a.x {
+                assert_eq!(xa.data(), b.x[nt].data(), "{nt} features");
+            }
+            assert_eq!(a.labels, b.labels);
+        }
+    }
+}
+
+#[test]
+fn serving_snapshot_is_one_document_and_predictions_match() {
+    let g = sbm::generate(&SbmConfig {
+        num_nodes: 600,
+        feature_signal: 2.0,
+        seed: 9,
+        ..Default::default()
+    })
+    .unwrap();
+    let labels = g.y.clone().unwrap();
+    let partitioning = ldg_partition(&g.edge_index, 3, 1.1).unwrap();
+    let bundle = write_bundle(tmp("serve_bundle"), &g, &partitioning).unwrap();
+    // Mounted stores with prefetch so the snapshot carries cache and
+    // prefetch metrics alongside router, queue and stage latency.
+    let (gs, fs, _) = mounted_stores(
+        &bundle,
+        0,
+        DistOptions { prefetch: true, ..Default::default() },
+        LruConfig::default(),
+    )
+    .unwrap();
+    let classes = (*labels.iter().max().unwrap() + 1) as usize;
+    let model = Arc::new(
+        NodeClassifier::fit(fs.as_ref(), &FeatureKey::default_x(), &labels, classes).unwrap(),
+    );
+
+    let spawn = || {
+        DistInferenceServer::spawn(
+            Arc::clone(&gs),
+            Arc::clone(&fs),
+            Arc::clone(&model),
+            ServeDistConfig { workers: 2, max_batch: 8, prefetch: true, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let nodes: Vec<u32> = (0..40u32).collect();
+
+    let _guard = TRACE_LOCK.lock().unwrap();
+    obs::set_enabled(false);
+    let server = spawn();
+    let base: Vec<_> = nodes.iter().map(|&n| server.predict(n).unwrap()).collect();
+    drop(server);
+
+    obs::set_enabled(true);
+    let server = spawn();
+    let traced: Vec<_> = nodes.iter().map(|&n| server.predict(n).unwrap()).collect();
+    let snapshot = obs::snapshot_json(0, 0, true).to_string();
+    obs::set_enabled(false);
+    drop(server);
+
+    for (a, b) in base.iter().zip(traced.iter()) {
+        assert_eq!(a.node, b.node);
+        assert_eq!(a.class, b.class, "node {}: telemetry changed the prediction", a.node);
+        assert_eq!(a.probabilities, b.probabilities, "node {}: probabilities drifted", a.node);
+    }
+
+    // The acceptance shape: ONE JSON document carrying router, cache,
+    // prefetch, queue, and per-stage latency metrics together.
+    let v = pyg2::util::json::parse(&snapshot).unwrap();
+    let counters = v.get("counters").unwrap().as_obj().unwrap();
+    let gauges = v.get("gauges").unwrap().as_obj().unwrap();
+    let hists = v.get("histograms").unwrap().as_obj().unwrap();
+    fn has_prefix(m: &BTreeMap<String, Json>, p: &str) -> bool {
+        m.keys().any(|k| k.starts_with(p))
+    }
+    assert!(has_prefix(counters, "dist.router"), "router metrics");
+    assert!(has_prefix(counters, "persist.row_cache"), "cache metrics");
+    assert!(has_prefix(counters, "dist.prefetch"), "prefetch metrics");
+    assert!(has_prefix(gauges, "serve.queue"), "queue depth gauge");
+    assert!(has_prefix(hists, "serve.queue"), "queue wait histogram");
+    assert!(
+        hists.keys().any(|k| k.starts_with("trace.") && k.ends_with("_us")),
+        "per-stage latency histograms"
+    );
+    assert!(has_prefix(counters, "serve."), "serve request counters");
+}
