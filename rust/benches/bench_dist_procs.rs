@@ -1,0 +1,94 @@
+//! Multi-process ranks vs the sequential multi-rank simulation: what
+//! real OS-process overlap buys over `--ranks` (which runs the same
+//! per-rank epochs one after another in one process).
+//!
+//! Writes a 4-partition bundle, then:
+//!
+//! * **simulated ranks** — `multi_rank_epoch_mounted` with 2 ranks,
+//!   measured as one sequential wall-clock;
+//! * **real processes** — `run_parent` spawning 2 `pyg2 dist-worker`
+//!   processes over the same bundle, peer feature fetches over unix
+//!   sockets; reports the parent's wall-clock and the measured overlap
+//!   factor (sum of per-rank epoch seconds over the parallel window).
+//!
+//! Batch digests are asserted identical between the two, so the numbers
+//! compare the same work. Runs under `PYG2_BENCH_QUICK` in CI with the
+//! bundle in a scratch directory.
+
+use pyg2::coordinator::{multi_rank_epoch_mounted, DistOptions, DistProcsConfig};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::loader::LoaderConfig;
+use pyg2::partition::ldg_partition;
+use pyg2::persist::{write_bundle, LruConfig};
+use pyg2::util::BenchSuite;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let mut suite = BenchSuite::new("dist: real multi-process ranks");
+
+    let g = sbm::generate(&SbmConfig { num_nodes: 4000, seed: 3, ..Default::default() }).unwrap();
+    let partitioning = ldg_partition(&g.edge_index, 4, 1.1).unwrap();
+    let scratch = std::env::temp_dir().join("pyg2_bench_dist_procs");
+    let _ = std::fs::remove_dir_all(&scratch);
+    let bundle = write_bundle(&scratch, &g, &partitioning).unwrap();
+    let cfg = LoaderConfig { batch_size: 64, num_workers: 2, ..Default::default() };
+    let procs = 2usize;
+
+    // Sequential simulation baseline (also pins the digest streams).
+    let t0 = Instant::now();
+    let sim = multi_rank_epoch_mounted(
+        &bundle,
+        procs,
+        &cfg,
+        DistOptions::default(),
+        LruConfig::default(),
+        1,
+    )
+    .unwrap();
+    let sim_secs = t0.elapsed().as_secs_f64();
+    println!("simulated {procs} ranks (sequential): {sim_secs:.3}s, {} batches", sim.batches);
+
+    suite.bench("epoch_4p/simulated_2_ranks", || {
+        let r = multi_rank_epoch_mounted(
+            &bundle,
+            procs,
+            &cfg,
+            DistOptions::default(),
+            LruConfig::default(),
+            1,
+        )
+        .unwrap();
+        std::hint::black_box(r.batches);
+    });
+
+    // The real thing: worker processes + socket transport.
+    let pcfg = DistProcsConfig {
+        bin: PathBuf::from(env!("CARGO_BIN_EXE_pyg2")),
+        mount: bundle.dir().to_path_buf(),
+        procs,
+        forward: vec!["--batch=64".into(), "--workers=2".into(), "--epochs=1".into()],
+        deadline: Duration::from_secs(120),
+        metrics_out: None,
+    };
+    let real = pyg2::coordinator::run_parent(&pcfg).unwrap();
+    assert_eq!(real.digests, sim.digests, "real run must reproduce the simulated batches");
+    println!(
+        "real {procs} processes: wall {:.3}s, sum(rank secs) {:.3}s, overlap {:.2}x",
+        real.wall_seconds,
+        real.rank_seconds.iter().sum::<f64>(),
+        real.overlap()
+    );
+
+    suite.bench("epoch_4p/real_2_processes", || {
+        let r = pyg2::coordinator::run_parent(&pcfg).unwrap();
+        std::hint::black_box(r.batches);
+    });
+
+    if let Some(speedup) = suite.speedup("epoch_4p/simulated_2_ranks", "epoch_4p/real_2_processes")
+    {
+        println!("real processes vs sequential simulation: {speedup:.2}x");
+    }
+    suite.finish();
+    let _ = std::fs::remove_dir_all(&scratch);
+}

@@ -94,7 +94,7 @@ pub struct MountOpts {
 
 impl MountOpts {
     /// Flags that only mean something under `--mount`.
-    const MOUNT_ONLY: [&'static str; 9] = [
+    const MOUNT_ONLY: [&'static str; 10] = [
         "rank",
         "cache-mb",
         "adj-cache-mb",
@@ -104,6 +104,7 @@ impl MountOpts {
         "prefetch",
         "io-backend",
         "seed-type",
+        "procs",
     ];
 
     /// Parse and cross-validate the mount flags. Errors on mount-only
@@ -236,6 +237,18 @@ COMMANDS:
               --ranks N         one loader per rank over its own seed
                                 shard; prints the rank x partition
                                 traffic matrix + per-rank wall-clock skew
+              --procs N         real multi-process ranks (requires
+                                --mount): spawn N `pyg2 dist-worker`
+                                processes that each mount the bundle
+                                read-only and fetch foreign feature rows
+                                from each other over unix-socket RPC;
+                                prints the same traffic matrix as
+                                --ranks plus the measured wall-clock
+                                overlap
+              --deadline-secs S launcher deadline for worker handshake,
+                                reports and teardown (default 120); a
+                                worker that dies mid-epoch surfaces as a
+                                typed error within it
               --mount DIR       run out-of-core over a partition bundle
                                 (typed bundles auto-detected): topology
                                 from binary adjacency shards, feature
@@ -267,6 +280,10 @@ COMMANDS:
                                 also enables stage-span timing
               --metrics-every S   periodic snapshot interval in seconds
                                 (default: end-of-run report only)
+  dist-worker one rank of a `pyg2 dist --procs N` run (spawned by the
+              launcher, not meant to be invoked by hand)
+              --rank R --world N --mount DIR --sock-dir DIR
+              + the same loader/mount knobs as pyg2 dist
   serve-dist  multi-worker online inference over the partitioned stores:
               N server threads pull dynamic batches from one shared
               admission queue, driven by a closed-loop Zipf client fleet;
@@ -382,6 +399,7 @@ mod tests {
             "dist --page-adj",
             "dist --io-backend mmap",
             "dist --halo-adj",
+            "dist --procs 2",
         ] {
             assert!(MountOpts::from_args(&parse(bad)).is_err(), "{bad}");
         }

@@ -3,9 +3,14 @@
 //! This is the Rust-side "training loop that looks identical regardless
 //! of backend" promised by the FeatureStore/GraphStore split (§2.3).
 
+pub mod procs;
 pub mod serve;
 pub mod serve_dist;
 
+pub use procs::{
+    batch_digest, hetero_batch_digest, run_parent, run_worker, DistProcsConfig, DistProcsReport,
+    WorkerConfig,
+};
 pub use serve::{InferenceServer, Prediction, ServeConfig, ServeStats};
 pub use serve_dist::{
     run_traffic, DistInferenceServer, ServeDistConfig, ServeDistStats, TrafficConfig,
@@ -458,7 +463,7 @@ impl std::fmt::Display for RankSkew {
 /// reports keep their own `rank_seconds` vector — gauges are global and
 /// a concurrent simulation (e.g. parallel tests) would stomp them, so
 /// `skew()` must stay a view over the report-local measurements.
-fn record_rank_epoch(rank: u32, secs: f64) {
+pub(crate) fn record_rank_epoch(rank: u32, secs: f64) {
     crate::obs::gauge(&format!("dist.rank{rank}.epoch_us")).set((secs * 1e6) as i64);
 }
 
@@ -717,7 +722,23 @@ pub fn mounted_loader(
     opts: DistOptions,
     lru: crate::persist::LruConfig,
 ) -> Result<crate::dist::DistNeighborLoader> {
-    let (gs, fs, labels) = mounted_stores(bundle, local_rank, opts, lru)?;
+    mounted_loader_with_transport(bundle, local_rank, seeds, cfg, opts, lru, None)
+}
+
+/// [`mounted_loader`] with an optional real RPC [`crate::dist::Transport`]
+/// installed on the feature store's remote path — how `pyg2 dist-worker`
+/// ranks fetch foreign rows from their peers instead of their own local
+/// shard replicas.
+pub fn mounted_loader_with_transport(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    seeds: Vec<u32>,
+    cfg: LoaderConfig,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+    transport: Option<std::sync::Arc<dyn crate::dist::Transport>>,
+) -> Result<crate::dist::DistNeighborLoader> {
+    let (gs, fs, labels) = mounted_stores_with_transport(bundle, local_rank, opts, lru, transport)?;
     let mut loader = crate::dist::DistNeighborLoader::new(
         std::sync::Arc::clone(&gs),
         std::sync::Arc::clone(&fs),
@@ -748,6 +769,22 @@ pub fn mounted_stores(
     local_rank: u32,
     opts: DistOptions,
     lru: crate::persist::LruConfig,
+) -> Result<(
+    std::sync::Arc<crate::dist::PartitionedGraphStore>,
+    std::sync::Arc<crate::dist::PartitionedFeatureStore>,
+    Option<Vec<i64>>,
+)> {
+    mounted_stores_with_transport(bundle, local_rank, opts, lru, None)
+}
+
+/// [`mounted_stores`] with an optional real RPC
+/// [`crate::dist::Transport`] on the feature store's remote path.
+pub fn mounted_stores_with_transport(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+    transport: Option<std::sync::Arc<dyn crate::dist::Transport>>,
 ) -> Result<(
     std::sync::Arc<crate::dist::PartitionedGraphStore>,
     std::sync::Arc<crate::dist::PartitionedFeatureStore>,
@@ -798,7 +835,9 @@ pub fn mounted_stores(
         let (halo, spilled) = match &adj_halo {
             Some(tier) => {
                 let remaining = lru.halo_budget().saturating_sub(tier.pinned_bytes);
-                let raw = fs.raw_reader().expect("mounted store");
+                let raw = fs.raw_reader().ok_or_else(|| {
+                    Error::Mount("halo ranking needs a mounted store's raw view".into())
+                })?;
                 let mut row_bytes = 0u64;
                 for key in raw.keys() {
                     row_bytes += raw.feature_dim(&key)? as u64 * 4;
@@ -832,7 +871,9 @@ pub fn mounted_stores(
         // so inserting them into the bounded row cache would only evict
         // capacity from rows that can still miss.
         let cache = {
-            let raw = fs.raw_reader().expect("mounted store");
+            let raw = fs.raw_reader().ok_or_else(|| {
+                Error::Mount("halo replica construction needs a mounted store's raw view".into())
+            })?;
             HaloCache::build(&halo, &raw, n, local_rank)?
         };
         fs = fs.with_halo_cache(Arc::new(cache))?;
@@ -849,6 +890,9 @@ pub fn mounted_stores(
             bundle.num_parts().saturating_sub(1).max(1)
         };
         fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
+    }
+    if let Some(t) = transport {
+        fs = fs.with_transport(t);
     }
     let labels = bundle.load_labels(DEFAULT_GROUP)?;
     // Replica construction read its rows off disk (bypassing the row
@@ -898,6 +942,22 @@ pub fn hetero_mounted_loader(
     opts: DistOptions,
     lru: crate::persist::LruConfig,
 ) -> Result<crate::dist::HeteroDistNeighborLoader> {
+    hetero_mounted_loader_with_transport(bundle, local_rank, seed_type, seeds, cfg, opts, lru, None)
+}
+
+/// [`hetero_mounted_loader`] with an optional real RPC
+/// [`crate::dist::Transport`] on the typed feature store's remote path.
+#[allow(clippy::too_many_arguments)]
+pub fn hetero_mounted_loader_with_transport(
+    bundle: &crate::persist::Bundle,
+    local_rank: u32,
+    seed_type: &str,
+    seeds: Vec<u32>,
+    cfg: crate::loader::HeteroLoaderConfig,
+    opts: DistOptions,
+    lru: crate::persist::LruConfig,
+    transport: Option<std::sync::Arc<dyn crate::dist::Transport>>,
+) -> Result<crate::dist::HeteroDistNeighborLoader> {
     use crate::dist::{AsyncRouter, HaloCache, HeteroDistNeighborLoader, PartitionedFeatureStore};
     use crate::storage::{FeatureKey, FeatureStore, DEFAULT_ATTR};
     use std::collections::BTreeMap;
@@ -943,7 +1003,11 @@ pub fn hetero_mounted_loader(
         let halos: BTreeMap<String, Vec<u32>> = match &adj_halo {
             Some(tier) => {
                 let remaining = lru.halo_budget().saturating_sub(tier.pinned_bytes);
-                let raw = fs.raw_reader().expect("mounted store");
+                let raw = fs.raw_reader().ok_or_else(|| {
+                    crate::error::Error::Mount(
+                        "typed halo ranking needs a mounted store's raw view".into(),
+                    )
+                })?;
                 let mut row_bytes = BTreeMap::new();
                 let mut cands = Vec::new();
                 for nt in &bundle.manifest().node_types {
@@ -993,7 +1057,14 @@ pub fn hetero_mounted_loader(
             let halo = &halos[&nt.name];
             let idx: Vec<usize> = halo.iter().map(|&v| v as usize).collect();
             let key = FeatureKey::new(&nt.name, DEFAULT_ATTR);
-            let rows = fs.raw_reader().expect("mounted store").get(&key, &idx)?;
+            let rows = fs
+                .raw_reader()
+                .ok_or_else(|| {
+                    crate::error::Error::Mount(
+                        "typed halo replica construction needs a mounted store's raw view".into(),
+                    )
+                })?
+                .get(&key, &idx)?;
             caches.insert(
                 nt.name.clone(),
                 Arc::new(HaloCache::from_group(key, halo, rows, nt.num_nodes, local_rank)?),
@@ -1013,6 +1084,9 @@ pub fn hetero_mounted_loader(
             bundle.num_parts().saturating_sub(1).max(1)
         };
         fs = fs.with_async_router(Arc::new(AsyncRouter::new(workers)));
+    }
+    if let Some(t) = transport {
+        fs = fs.with_transport(t);
     }
     let fs = Arc::new(fs);
     let mut loader = HeteroDistNeighborLoader::new(
@@ -1065,6 +1139,10 @@ pub struct MountedMultiRankReport {
     /// Per-rank pipeline-prefetcher counters (`None` unless
     /// [`DistOptions::prefetch`] was on).
     pub prefetch: Vec<Option<crate::dist::PrefetchStats>>,
+    /// Per-rank content digests ([`batch_digest`]) of every batch the
+    /// rank produced, in epoch order — what a real multi-process run
+    /// (`pyg2 dist --procs N`) must reproduce seed-for-seed.
+    pub digests: Vec<Vec<u64>>,
     pub rank_seconds: Vec<f64>,
     pub batches: usize,
     pub sampled_nodes: usize,
@@ -1129,6 +1207,7 @@ pub fn multi_rank_epoch_mounted(
     let mut disk_reads = Vec::with_capacity(ranks);
     let mut adj_disk_reads = Vec::with_capacity(ranks);
     let mut prefetch = Vec::with_capacity(ranks);
+    let mut digests = Vec::with_capacity(ranks);
     let mut rank_seconds = Vec::with_capacity(ranks);
     let mut batches = 0usize;
     let mut sampled_nodes = 0usize;
@@ -1140,12 +1219,14 @@ pub fn multi_rank_epoch_mounted(
             .map(|(v, _)| v as u32)
             .collect();
         let loader = mounted_loader(bundle, rank, seeds, cfg.clone(), opts, lru)?;
+        let mut rank_digests = Vec::new();
         let t_rank = Instant::now();
         for epoch in 0..epochs {
             for batch in loader.iter_epoch(epoch) {
                 let b = batch?;
                 batches += 1;
                 sampled_nodes += b.num_real_nodes();
+                rank_digests.push(batch_digest(&b));
             }
         }
         let rank_secs = t_rank.elapsed().as_secs_f64();
@@ -1153,12 +1234,16 @@ pub fn multi_rank_epoch_mounted(
         rank_seconds.push(rank_secs);
         matrix.set_rank(rank as usize, &loader.graph().router().traffic_by_partition())?;
         halo.push(loader.cache_stats());
-        row_cache.push(loader.features().row_cache_stats().expect("mounted store"));
+        // Stat collection must not panic if a future caller wires a
+        // resident store through here: the mount ledgers just read as
+        // empty.
+        row_cache.push(loader.features().row_cache_stats().unwrap_or_default());
         adj_cache.push(loader.graph().adj_cache_stats());
         adj_halo.push(loader.graph().adj_halo_stats());
-        disk_reads.push(loader.features().disk_reads().expect("mounted store"));
+        disk_reads.push(loader.features().disk_reads().unwrap_or(0));
         adj_disk_reads.push(loader.graph().adj_disk_reads().unwrap_or(0));
         prefetch.push(loader.prefetch_stats());
+        digests.push(rank_digests);
     }
     Ok(MountedMultiRankReport {
         matrix,
@@ -1169,6 +1254,7 @@ pub fn multi_rank_epoch_mounted(
         disk_reads,
         adj_disk_reads,
         prefetch,
+        digests,
         rank_seconds,
         batches,
         sampled_nodes,

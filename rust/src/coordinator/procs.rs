@@ -1,0 +1,832 @@
+//! True multi-process ranks over a shared bundle directory (ROADMAP
+//! item 2): `run_parent` launches N `pyg2 dist-worker` OS processes,
+//! each mounting the shared bundle read-only with its own cache budget
+//! and fetching foreign feature rows from its peers over the
+//! unix-socket [`crate::dist::SocketTransport`] instead of its local
+//! shard replicas. The parent coordinates the run over a length-prefixed
+//! control socket, collects per-rank batch digests and traffic rows,
+//! aggregates them into the same [`crate::dist::TrafficMatrix`] the
+//! sequential [`super::multi_rank_epoch_mounted`] simulation reports,
+//! and measures real wall-clock overlap.
+//!
+//! Lifecycle (all frames are 4-byte-LE length-prefixed JSON on
+//! `{sock_dir}/ctl.sock`; the feature-row data plane runs on binary
+//! frames over `{sock_dir}/peer{rank}.sock`, see
+//! [`crate::dist::transport`]):
+//!
+//! 1. parent binds the control socket, spawns the workers;
+//! 2. each worker mounts the bundle, binds its peer socket, connects to
+//!    the control socket and sends `{"type":"hello","rank":R}`;
+//! 3. once every rank checked in the parent fans out `{"type":"go"}`
+//!    and starts the wall clock — workers run their epochs truly
+//!    concurrently, serving each other's row fetches as they go;
+//! 4. each worker reports `{"type":"report",...}` (batch digests,
+//!    per-partition traffic, epoch seconds) or `{"type":"error",...}`;
+//! 5. the parent replies `{"type":"bye"}`, the workers tear down their
+//!    peer servers and exit, and the parent merges their telemetry.
+//!
+//! Crash semantics: every parent-side wait polls the children — a
+//! worker dying mid-epoch (or never checking in) surfaces as a typed
+//! [`Error::Worker`] at the parent within the deadline, never a hang;
+//! the remaining workers are killed and reaped before `run_parent`
+//! returns. On the data plane a dead peer shows up as a broken socket,
+//! which the victim worker reports as its own typed error.
+
+use super::{record_rank_epoch, DistOptions};
+use crate::dist::transport::write_frame;
+use crate::dist::{PeerServer, SocketTransport, TrafficMatrix, Transport};
+use crate::error::{Error, Result};
+use crate::loader::{Batch, HeteroBatch, HeteroLoaderConfig, LoaderConfig};
+use crate::util::json::{self, Json};
+use std::io::Read;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Control-plane socket name inside the shared socket directory.
+pub const CTL_SOCK: &str = "ctl.sock";
+
+// --- batch digests ------------------------------------------------------
+
+/// FNV-1a 64 accumulator (same polynomial as the persist checksums).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Self(0xcbf29ce484222325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn u32s(&mut self, vals: &[u32]) {
+        for &v in vals {
+            self.write(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Order-sensitive content digest of one homogeneous batch: sampled
+/// node ids, feature bytes, padded edge index, edge weights and labels.
+/// Two pipelines that produce the same digest stream produced the same
+/// batches — how a real multi-process run is pinned against the
+/// sequential simulation.
+pub fn batch_digest(b: &Batch) -> u64 {
+    let mut h = Fnv::new();
+    h.u32s(&b.sub.nodes);
+    for &v in b.x.data() {
+        h.write(&v.to_bits().to_le_bytes());
+    }
+    for &v in &b.row {
+        h.write(&v.to_le_bytes());
+    }
+    for &v in &b.col {
+        h.write(&v.to_le_bytes());
+    }
+    for &v in &b.ew {
+        h.write(&v.to_bits().to_le_bytes());
+    }
+    for &v in &b.labels {
+        h.write(&v.to_le_bytes());
+    }
+    h.0
+}
+
+/// [`batch_digest`] for typed batches: per-type node ids and feature
+/// bytes, per-edge-type COO columns, seed labels.
+pub fn hetero_batch_digest(b: &HeteroBatch) -> u64 {
+    let mut h = Fnv::new();
+    for (nt, nodes) in &b.sub.nodes {
+        h.write(nt.as_bytes());
+        h.u32s(nodes);
+        if let Some(x) = b.x.get(nt) {
+            for &v in x.data() {
+                h.write(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+    for (et, e) in &b.sub.edges {
+        h.write(et.key().as_bytes());
+        h.u32s(&e.row);
+        h.u32s(&e.col);
+        h.u32s(&e.edge_ids);
+    }
+    if let Some(labels) = &b.labels {
+        for &l in labels {
+            h.write(&l.to_le_bytes());
+        }
+    }
+    h.0
+}
+
+// --- control-plane plumbing ---------------------------------------------
+
+fn send_json(stream: &mut UnixStream, msg: &Json) -> Result<()> {
+    write_frame(stream, msg.to_string().as_bytes())
+}
+
+/// Fill `buf` from the stream, tolerating read timeouts: every timeout
+/// re-checks the deadline and the caller's liveness probe (child
+/// processes on the parent, nothing on the worker), so a dead
+/// counterpart becomes a typed error instead of a hang. The stream must
+/// have a short read timeout installed.
+fn fill_deadline(
+    stream: &mut UnixStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    check: &mut dyn FnMut() -> Result<()>,
+) -> Result<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        if Instant::now() >= deadline {
+            return Err(Error::Worker("control channel deadline exceeded".into()));
+        }
+        check()?;
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Err(Error::Worker("control channel closed".into())),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn read_json_frame(
+    stream: &mut UnixStream,
+    deadline: Instant,
+    check: &mut dyn FnMut() -> Result<()>,
+) -> Result<Json> {
+    let mut len = [0u8; 4];
+    fill_deadline(stream, &mut len, deadline, check)?;
+    let n = u32::from_le_bytes(len);
+    if n > crate::dist::transport::MAX_FRAME {
+        return Err(Error::Worker(format!("oversized control frame ({n} bytes)")));
+    }
+    let mut buf = vec![0u8; n as usize];
+    fill_deadline(stream, &mut buf, deadline, check)?;
+    let text = String::from_utf8(buf)
+        .map_err(|_| Error::Worker("non-utf8 control frame".into()))?;
+    json::parse(&text).map_err(|e| Error::Worker(format!("bad control frame: {e}")))
+}
+
+fn msg_type(msg: &Json) -> Option<&str> {
+    msg.get("type").and_then(|j| j.as_str())
+}
+
+// --- worker side --------------------------------------------------------
+
+/// Configuration of one `pyg2 dist-worker` rank.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub rank: u32,
+    pub world: usize,
+    /// Directory holding the control and peer sockets.
+    pub sock_dir: PathBuf,
+    pub epochs: u64,
+    pub batch_size: usize,
+    pub num_workers: usize,
+    /// Seed node type for typed bundles (defaults to the manifest's
+    /// first type).
+    pub seed_type: Option<String>,
+    pub opts: DistOptions,
+    pub lru: crate::persist::LruConfig,
+    /// Deadline for every control-plane wait and peer dial.
+    pub deadline: Duration,
+    /// Crash-test hook: exit abruptly after this many batches.
+    pub fail_after: Option<usize>,
+}
+
+enum RankLoader {
+    Homo(crate::dist::DistNeighborLoader),
+    Hetero(crate::dist::HeteroDistNeighborLoader),
+}
+
+/// Seeds a rank owns: the node ids `assignment` maps to it — the same
+/// formula [`super::multi_rank_epoch_mounted`] uses, so a worker's
+/// batch stream reproduces its simulated rank seed for seed.
+fn owned_seeds(assignment: &[u32], rank: u32) -> Vec<u32> {
+    assignment
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| a == rank)
+        .map(|(v, _)| v as u32)
+        .collect()
+}
+
+fn connect_ctl(sock_dir: &Path, deadline: Duration) -> Result<UnixStream> {
+    let path = sock_dir.join(CTL_SOCK);
+    let by = Instant::now() + deadline;
+    loop {
+        match UnixStream::connect(&path) {
+            Ok(s) => {
+                s.set_read_timeout(Some(Duration::from_millis(100)))?;
+                s.set_write_timeout(Some(deadline))?;
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() >= by {
+                    return Err(Error::Worker(format!(
+                        "control socket {} unreachable: {e}",
+                        path.display()
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// One worker rank's whole life: mount the bundle with a socket
+/// transport on the remote feature path, serve peers, run the epochs,
+/// report, and tear down on `bye`. Any failure is reported to the
+/// parent in-band (best effort) before it becomes this process's error
+/// exit.
+pub fn run_worker(bundle: &crate::persist::Bundle, wc: &WorkerConfig) -> Result<()> {
+    if wc.world == 0 || wc.rank as usize >= wc.world {
+        return Err(Error::Config(format!(
+            "rank {} outside world of {}",
+            wc.rank, wc.world
+        )));
+    }
+    // Tag this process's telemetry so merged metrics self-identify.
+    crate::obs::gauge("dist.worker.rank").set(wc.rank as i64);
+    let mut ctl = connect_ctl(&wc.sock_dir, wc.deadline)?;
+    match run_worker_inner(bundle, wc, &mut ctl) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = send_json(
+                &mut ctl,
+                &Json::obj(vec![
+                    ("type", Json::str("error")),
+                    ("rank", Json::num(wc.rank as f64)),
+                    ("message", Json::str(e.to_string())),
+                ]),
+            );
+            Err(e)
+        }
+    }
+}
+
+fn run_worker_inner(
+    bundle: &crate::persist::Bundle,
+    wc: &WorkerConfig,
+    ctl: &mut UnixStream,
+) -> Result<()> {
+    let transport = Arc::new(SocketTransport::new(&wc.sock_dir, wc.world, wc.deadline));
+    let dyn_transport = Arc::clone(&transport) as Arc<dyn Transport>;
+    let loader = if bundle.is_typed() {
+        let seed_type = match &wc.seed_type {
+            Some(st) => st.clone(),
+            None => bundle.manifest().node_types[0].name.clone(),
+        };
+        let seeds = owned_seeds(&bundle.load_assignment(&seed_type)?, wc.rank);
+        let cfg = HeteroLoaderConfig {
+            batch_size: wc.batch_size,
+            num_workers: wc.num_workers,
+            ..Default::default()
+        };
+        RankLoader::Hetero(super::hetero_mounted_loader_with_transport(
+            bundle,
+            wc.rank,
+            &seed_type,
+            seeds,
+            cfg,
+            wc.opts,
+            wc.lru,
+            Some(dyn_transport),
+        )?)
+    } else {
+        let assignment = bundle.load_assignment(crate::storage::DEFAULT_GROUP)?;
+        let seeds = owned_seeds(&assignment, wc.rank);
+        let cfg = LoaderConfig {
+            batch_size: wc.batch_size,
+            num_workers: wc.num_workers,
+            ..Default::default()
+        };
+        RankLoader::Homo(super::mounted_loader_with_transport(
+            bundle,
+            wc.rank,
+            seeds,
+            cfg,
+            wc.opts,
+            wc.lru,
+            Some(dyn_transport),
+        )?)
+    };
+    // Serve peers from this worker's own mounted store; the server must
+    // be up before any peer starts its epoch, which the hello → go
+    // barrier below guarantees.
+    let fs = match &loader {
+        RankLoader::Homo(l) => Arc::clone(l.features()),
+        RankLoader::Hetero(l) => Arc::clone(l.features()),
+    };
+    let mut server = PeerServer::spawn(
+        SocketTransport::peer_path(&wc.sock_dir, wc.rank as usize),
+        fs,
+    )?;
+
+    send_json(
+        ctl,
+        &Json::obj(vec![
+            ("type", Json::str("hello")),
+            ("rank", Json::num(wc.rank as f64)),
+        ]),
+    )?;
+    let deadline = Instant::now() + wc.deadline;
+    let go = read_json_frame(ctl, deadline, &mut || Ok(()))?;
+    if msg_type(&go) != Some("go") {
+        return Err(Error::Worker(format!("expected go, got {}", go.to_string())));
+    }
+
+    let mut digests: Vec<u64> = Vec::new();
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    let t0 = Instant::now();
+    match &loader {
+        RankLoader::Homo(l) => {
+            for epoch in 0..wc.epochs {
+                for batch in l.iter_epoch(epoch) {
+                    let b = batch?;
+                    batches += 1;
+                    sampled_nodes += b.num_real_nodes();
+                    digests.push(batch_digest(&b));
+                    if wc.fail_after == Some(batches) {
+                        // Crash test: die abruptly mid-epoch, no report.
+                        std::process::exit(17);
+                    }
+                }
+            }
+        }
+        RankLoader::Hetero(l) => {
+            for epoch in 0..wc.epochs {
+                for batch in l.iter_epoch(epoch) {
+                    let b = batch?;
+                    batches += 1;
+                    sampled_nodes += b.total_nodes();
+                    digests.push(hetero_batch_digest(&b));
+                    if wc.fail_after == Some(batches) {
+                        std::process::exit(17);
+                    }
+                }
+            }
+        }
+    }
+    let epoch_secs = t0.elapsed().as_secs_f64();
+    record_rank_epoch(wc.rank, epoch_secs);
+
+    let traffic = match &loader {
+        RankLoader::Homo(l) => l.graph().router().traffic_by_partition(),
+        RankLoader::Hetero(l) => l.graph().typed_router().traffic_by_partition(),
+    };
+    send_json(
+        ctl,
+        &Json::obj(vec![
+            ("type", Json::str("report")),
+            ("rank", Json::num(wc.rank as f64)),
+            ("batches", Json::num(batches as f64)),
+            ("sampled_nodes", Json::num(sampled_nodes as f64)),
+            ("epoch_secs", Json::num(epoch_secs)),
+            (
+                "msgs",
+                Json::Arr(traffic.msgs.iter().map(|&m| Json::num(m as f64)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(traffic.rows.iter().map(|&r| Json::num(r as f64)).collect()),
+            ),
+            (
+                // u64 digests do not fit a JSON f64 exactly: hex strings.
+                "digests",
+                Json::Arr(digests.iter().map(|d| Json::str(format!("{d:016x}"))).collect()),
+            ),
+        ]),
+    )?;
+
+    // Keep serving peers until every rank reported and the parent says
+    // bye — a fast rank tearing down early would break its peers'
+    // remaining fetches.
+    let bye = read_json_frame(ctl, Instant::now() + wc.deadline, &mut || Ok(()))?;
+    if msg_type(&bye) != Some("bye") {
+        return Err(Error::Worker(format!("expected bye, got {}", bye.to_string())));
+    }
+    transport.disconnect();
+    drop(loader);
+    server.shutdown();
+    Ok(())
+}
+
+// --- parent side --------------------------------------------------------
+
+/// Configuration of the `pyg2 dist --procs N` launcher.
+#[derive(Clone, Debug)]
+pub struct DistProcsConfig {
+    /// The `pyg2` binary to spawn workers from (usually
+    /// `std::env::current_exe()`).
+    pub bin: PathBuf,
+    /// Bundle directory every worker mounts read-only.
+    pub mount: PathBuf,
+    /// Number of worker processes (the world size).
+    pub procs: usize,
+    /// Flags forwarded verbatim to every worker (loader and mount
+    /// knobs).
+    pub forward: Vec<String>,
+    /// Whole-run deadline: handshake, epochs, reports and teardown must
+    /// all land inside it.
+    pub deadline: Duration,
+    /// The parent's own `--metrics-out` path, if any: worker telemetry
+    /// is merged into `<path>.workers.jsonl` next to it.
+    pub metrics_out: Option<PathBuf>,
+}
+
+/// Result of a real multi-process run, shaped to compare directly
+/// against [`super::MountedMultiRankReport`].
+#[derive(Debug)]
+pub struct DistProcsReport {
+    pub matrix: TrafficMatrix,
+    /// Per-rank batch digest streams ([`batch_digest`]).
+    pub digests: Vec<Vec<u64>>,
+    /// Per-rank epoch wall-clock, measured concurrently.
+    pub rank_seconds: Vec<f64>,
+    pub batches: usize,
+    pub sampled_nodes: usize,
+    /// Parent wall-clock from `go` to the last report.
+    pub wall_seconds: f64,
+    /// Merged per-worker telemetry file, when the parent exports
+    /// metrics.
+    pub merged_metrics: Option<PathBuf>,
+}
+
+impl DistProcsReport {
+    /// Measured overlap factor: sum of per-rank epoch seconds over the
+    /// parallel wall-clock. 1.0 means fully sequential; `procs` means
+    /// perfectly overlapped ranks.
+    pub fn overlap(&self) -> f64 {
+        let total: f64 = self.rank_seconds.iter().sum();
+        if self.wall_seconds > 0.0 {
+            total / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Min/max/mean of [`DistProcsReport::rank_seconds`].
+    pub fn skew(&self) -> super::RankSkew {
+        super::RankSkew::from_seconds(&self.rank_seconds)
+    }
+}
+
+/// A socket directory no concurrent launcher in this process (or any
+/// other) collides with; unix socket paths are length-limited, so it
+/// lives directly under the system temp dir.
+fn fresh_sock_dir() -> Result<PathBuf> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "pyg2_dist_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Fail with a typed error if any worker process has already exited —
+/// the liveness probe every parent-side wait polls, so a killed worker
+/// surfaces within one poll interval instead of hanging the run.
+fn check_children(children: &mut [Child]) -> Result<()> {
+    for (rank, c) in children.iter_mut().enumerate() {
+        if let Some(status) = c.try_wait()? {
+            return Err(Error::Worker(format!(
+                "worker {rank} exited prematurely ({status})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Launch `procs` worker processes over the shared bundle, coordinate
+/// the epoch, and aggregate their reports. See the module docs for the
+/// lifecycle; on any failure every surviving worker is killed and
+/// reaped before the error returns.
+pub fn run_parent(pc: &DistProcsConfig) -> Result<DistProcsReport> {
+    if pc.procs == 0 {
+        return Err(Error::Config("--procs must be at least 1".into()));
+    }
+    let bundle = crate::persist::Bundle::open(&pc.mount)?;
+    let parts = bundle.num_parts();
+    drop(bundle);
+
+    let sock_dir = fresh_sock_dir()?;
+    let ctl_path = sock_dir.join(CTL_SOCK);
+    let listener = UnixListener::bind(&ctl_path)
+        .map_err(|e| Error::Worker(format!("bind {}: {e}", ctl_path.display())))?;
+    listener.set_nonblocking(true)?;
+
+    let mut children: Vec<Child> = Vec::new();
+    let result = match spawn_workers(pc, &sock_dir, &mut children) {
+        Ok(()) => parent_loop(pc, parts, &sock_dir, &listener, &mut children),
+        Err(e) => Err(e),
+    };
+    // Whatever happened, leave no processes and no socket dir behind
+    // (worker metrics were already merged out by the success path).
+    for c in &mut children {
+        let _ = c.kill();
+    }
+    for c in &mut children {
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_dir_all(&sock_dir);
+    result
+}
+
+fn spawn_workers(
+    pc: &DistProcsConfig,
+    sock_dir: &Path,
+    children: &mut Vec<Child>,
+) -> Result<()> {
+    for rank in 0..pc.procs {
+        let metrics = sock_dir.join(format!("rank{rank}.metrics.jsonl"));
+        let child = Command::new(&pc.bin)
+            .arg("dist-worker")
+            .arg(format!("--rank={rank}"))
+            .arg(format!("--world={}", pc.procs))
+            .arg(format!("--mount={}", pc.mount.display()))
+            .arg(format!("--sock-dir={}", sock_dir.display()))
+            .arg(format!("--metrics-out={}", metrics.display()))
+            .args(&pc.forward)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| Error::Worker(format!("spawn worker {rank}: {e}")))?;
+        children.push(child);
+    }
+    Ok(())
+}
+
+fn parent_loop(
+    pc: &DistProcsConfig,
+    parts: usize,
+    sock_dir: &Path,
+    listener: &UnixListener,
+    children: &mut Vec<Child>,
+) -> Result<DistProcsReport> {
+    let world = pc.procs;
+    let deadline = Instant::now() + pc.deadline;
+
+    // Hello barrier: every rank checks in before anyone runs.
+    let mut pending: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < world {
+        if Instant::now() >= deadline {
+            return Err(Error::Worker(format!(
+                "only {connected}/{world} workers checked in before the deadline"
+            )));
+        }
+        check_children(children)?;
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(Duration::from_millis(100)))?;
+                s.set_write_timeout(Some(pc.deadline))?;
+                let hello = read_json_frame(&mut s, deadline, &mut || check_children(children))?;
+                if msg_type(&hello) != Some("hello") {
+                    return Err(Error::Worker(format!(
+                        "expected hello, got {}",
+                        hello.to_string()
+                    )));
+                }
+                let rank = hello
+                    .get("rank")
+                    .and_then(|j| j.as_usize())
+                    .filter(|&r| r < world)
+                    .ok_or_else(|| Error::Worker("hello with a bad rank".into()))?;
+                if pending[rank].replace(s).is_some() {
+                    return Err(Error::Worker(format!("rank {rank} checked in twice")));
+                }
+                connected += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let mut streams: Vec<UnixStream> =
+        pending.into_iter().map(|s| s.expect("barrier complete")).collect();
+
+    // Go: the epoch starts now, on every rank at once.
+    let go = Json::obj(vec![("type", Json::str("go"))]);
+    for s in &mut streams {
+        send_json(s, &go)?;
+    }
+    let t0 = Instant::now();
+
+    // Collect every rank's report (arrival order does not matter — a
+    // later rank's report just waits buffered in its socket).
+    let mut matrix = TrafficMatrix::new(world, parts);
+    let mut digests = Vec::with_capacity(world);
+    let mut rank_seconds = Vec::with_capacity(world);
+    let mut batches = 0usize;
+    let mut sampled_nodes = 0usize;
+    for (rank, stream) in streams.iter_mut().enumerate() {
+        let msg = read_json_frame(stream, deadline, &mut || check_children(children))?;
+        match msg_type(&msg) {
+            Some("report") => {}
+            Some("error") => {
+                let m = msg
+                    .get("message")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("unknown failure");
+                return Err(Error::Worker(format!("worker {rank}: {m}")));
+            }
+            _ => {
+                return Err(Error::Worker(format!(
+                    "worker {rank}: unexpected control frame {}",
+                    msg.to_string()
+                )))
+            }
+        }
+        batches += msg.get("batches").and_then(|j| j.as_usize()).unwrap_or(0);
+        sampled_nodes += msg
+            .get("sampled_nodes")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(0);
+        let secs = msg.get("epoch_secs").and_then(|j| j.as_f64()).unwrap_or(0.0);
+        record_rank_epoch(rank as u32, secs);
+        rank_seconds.push(secs);
+        let traffic = crate::dist::PartitionTraffic {
+            local_rank: rank as u32,
+            msgs: json_u64s(&msg, "msgs")?,
+            rows: json_u64s(&msg, "rows")?,
+        };
+        matrix.set_rank(rank, &traffic)?;
+        let mut rank_digests = Vec::new();
+        for d in msg
+            .get("digests")
+            .and_then(|j| j.as_arr())
+            .unwrap_or(&[])
+        {
+            let hex = d
+                .as_str()
+                .ok_or_else(|| Error::Worker(format!("worker {rank}: non-string digest")))?;
+            rank_digests.push(
+                u64::from_str_radix(hex, 16)
+                    .map_err(|_| Error::Worker(format!("worker {rank}: bad digest {hex}")))?,
+            );
+        }
+        digests.push(rank_digests);
+    }
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    // Bye: workers tear down their peer servers and exit.
+    let bye = Json::obj(vec![("type", Json::str("bye"))]);
+    for s in &mut streams {
+        let _ = send_json(s, &bye);
+    }
+    let mut waiting: Vec<usize> = (0..world).collect();
+    while !waiting.is_empty() && Instant::now() < deadline {
+        waiting.retain(|&r| !matches!(children[r].try_wait(), Ok(Some(_))));
+        if !waiting.is_empty() {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    // Stragglers are killed by run_parent's cleanup; the run itself
+    // succeeded once every report landed.
+
+    let merged_metrics = match &pc.metrics_out {
+        Some(out) => Some(merge_worker_metrics(out, sock_dir, world)?),
+        None => None,
+    };
+    Ok(DistProcsReport {
+        matrix,
+        digests,
+        rank_seconds,
+        batches,
+        sampled_nodes,
+        wall_seconds,
+        merged_metrics,
+    })
+}
+
+fn json_u64s(msg: &Json, field: &str) -> Result<Vec<u64>> {
+    msg.get(field)
+        .and_then(|j| j.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .map(|j| j.as_f64().unwrap_or(0.0) as u64)
+                .collect()
+        })
+        .ok_or_else(|| Error::Worker(format!("report missing {field}")))
+}
+
+/// Concatenate every worker's JSONL telemetry into one
+/// `<metrics_out>.workers.jsonl` file (each line is a complete snapshot
+/// record tagged with its rank via the `dist.worker.rank` gauge, so the
+/// merged file passes `pyg2 obs-check`).
+fn merge_worker_metrics(metrics_out: &Path, sock_dir: &Path, world: usize) -> Result<PathBuf> {
+    use std::io::Write;
+    let merged = PathBuf::from(format!("{}.workers.jsonl", metrics_out.display()));
+    let mut f = std::fs::File::create(&merged)?;
+    for rank in 0..world {
+        let path = sock_dir.join(format!("rank{rank}.metrics.jsonl"));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for line in text.lines() {
+                if !line.trim().is_empty() {
+                    writeln!(f, "{line}")?;
+                }
+            }
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loader::ShapeBucket;
+    use crate::sampler::SampledSubgraph;
+    use crate::storage::InMemoryFeatureStore;
+    use crate::tensor::Tensor;
+
+    /// A 1-seed, 1-hop batch over the given node ids (all < 4), backed
+    /// by a 4-row feature store with distinct rows.
+    fn tiny_batch(nodes: Vec<u32>) -> Batch {
+        let n = nodes.len();
+        let sub = SampledSubgraph {
+            nodes,
+            row: vec![1],
+            col: vec![0],
+            edge_ids: vec![0],
+            num_seeds: 1,
+            node_offsets: vec![1, n],
+            edge_offsets: vec![1],
+            ..Default::default()
+        };
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let store = InMemoryFeatureStore::from_tensor(Tensor::new(vec![4, 2], x).unwrap());
+        let bucket = ShapeBucket::for_sampling(1, &[3]);
+        Batch::assemble(sub, &store, &crate::storage::FeatureKey::default_x(), None, &bucket)
+            .unwrap()
+    }
+
+    #[test]
+    fn batch_digest_is_content_sensitive() {
+        let a = batch_digest(&tiny_batch(vec![0, 1, 2]));
+        let b = batch_digest(&tiny_batch(vec![0, 1, 2]));
+        let c = batch_digest(&tiny_batch(vec![0, 2, 1]));
+        assert_eq!(a, b, "same content, same digest");
+        assert_ne!(a, c, "different node order, different digest");
+    }
+
+    #[test]
+    fn owned_seeds_matches_simulation_formula() {
+        let assignment = vec![0u32, 1, 0, 2, 1, 0];
+        assert_eq!(owned_seeds(&assignment, 0), vec![0, 2, 5]);
+        assert_eq!(owned_seeds(&assignment, 1), vec![1, 4]);
+        assert_eq!(owned_seeds(&assignment, 2), vec![3]);
+        assert!(owned_seeds(&assignment, 3).is_empty());
+    }
+
+    #[test]
+    fn parent_rejects_zero_procs_and_bad_mount() {
+        let cfg = DistProcsConfig {
+            bin: PathBuf::from("/bin/false"),
+            mount: PathBuf::from("/nonexistent/bundle"),
+            procs: 0,
+            forward: Vec::new(),
+            deadline: Duration::from_secs(1),
+            metrics_out: None,
+        };
+        assert!(matches!(run_parent(&cfg), Err(Error::Config(_))));
+        let cfg = DistProcsConfig { procs: 2, ..cfg };
+        assert!(run_parent(&cfg).is_err(), "bad mount dir must error early");
+    }
+
+    #[test]
+    fn dead_children_fail_the_liveness_probe() {
+        let mut children = vec![Command::new("/bin/true")
+            .stdout(Stdio::null())
+            .spawn()
+            .unwrap()];
+        // /bin/true exits immediately; the probe must notice.
+        std::thread::sleep(Duration::from_millis(50));
+        match check_children(&mut children) {
+            Err(Error::Worker(m)) => assert!(m.contains("exited prematurely")),
+            other => panic!("expected worker error, got {other:?}"),
+        }
+    }
+}

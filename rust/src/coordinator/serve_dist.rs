@@ -453,6 +453,9 @@ pub struct TrafficReport {
     pub completed: u64,
     pub deadline_rejected: u64,
     pub errors: u64,
+    /// Client threads that died (panicked) before reporting their
+    /// tally; their requests are missing from the other counters.
+    pub client_failures: u64,
     /// End-to-end latency samples (seconds) of completed requests.
     pub latency: Samples,
     pub elapsed: Duration,
@@ -495,7 +498,11 @@ impl std::fmt::Display for TrafficReport {
             self.p50_ms(),
             self.p95_ms(),
             self.p99_ms(),
-        )
+        )?;
+        if self.client_failures > 0 {
+            write!(f, " ({} client threads died)", self.client_failures)?;
+        }
+        Ok(())
     }
 }
 
@@ -519,7 +526,7 @@ pub fn run_traffic(
     let zipf = Zipf::new(num_nodes, cfg.zipf_exponent);
     let base = Rng::new(cfg.seed);
     let t0 = Instant::now();
-    let tallies: Vec<ClientTally> = std::thread::scope(|scope| {
+    let tallies: Vec<Option<ClientTally>> = std::thread::scope(|scope| {
         let mut joins = Vec::with_capacity(cfg.clients);
         for c in 0..cfg.clients {
             let mut rng = base.fork(c as u64);
@@ -546,7 +553,10 @@ pub fn run_traffic(
                 tally
             }));
         }
-        joins.into_iter().map(|j| j.join().expect("client thread")).collect()
+        // A client thread panicking (a server bug surfacing client-side)
+        // must not take the whole traffic report down with it: count the
+        // loss and surface it instead.
+        joins.into_iter().map(|j| j.join().ok()).collect()
     });
     let elapsed = t0.elapsed();
 
@@ -554,10 +564,15 @@ pub fn run_traffic(
         completed: 0,
         deadline_rejected: 0,
         errors: 0,
+        client_failures: 0,
         latency: Samples::new(),
         elapsed,
     };
     for t in tallies {
+        let Some(t) = t else {
+            report.client_failures += 1;
+            continue;
+        };
         report.completed += t.completed;
         report.deadline_rejected += t.rejected;
         report.errors += t.errors;
@@ -679,9 +694,16 @@ mod tests {
         );
         assert_eq!(report.completed, 60, "{report}");
         assert_eq!(report.errors, 0, "{report}");
+        assert_eq!(report.client_failures, 0, "{report}");
         assert_eq!(report.latency.len() as u64, report.completed);
         assert!(report.throughput_rps() > 0.0);
         assert!(report.p50_ms() <= report.p95_ms() && report.p95_ms() <= report.p99_ms());
+        // Dead client threads show up in the report, not as a panic of
+        // the whole traffic run.
+        assert!(!format!("{report}").contains("client threads died"));
+        let mut broken = report.clone();
+        broken.client_failures = 2;
+        assert!(format!("{broken}").contains("2 client threads died"));
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use super::async_router::{AsyncRouter, FetchPlan, PendingFetch};
 use super::halo_cache::HaloCache;
+use super::transport::Transport;
 use super::{PartitionRouter, TypedRouter};
 use crate::error::{Error, Result};
 use crate::graph::HeteroGraph;
@@ -280,6 +281,11 @@ pub struct PartitionedFeatureStore {
     /// Optional async fetch service for the remaining remote plans
     /// (shared across node types).
     async_router: Option<Arc<AsyncRouter>>,
+    /// Optional real RPC transport for remote fetches: when installed,
+    /// per-partition miss plans go to the owning peer process instead
+    /// of the local shard replica (and no simulated latency is paid —
+    /// the round trip is real).
+    transport: Option<Arc<dyn Transport>>,
     /// Present on mounted (out-of-core) stores: the shared bounded row
     /// cache and the raw shard files (for disk-read accounting).
     mounted: Option<MountedState>,
@@ -305,6 +311,7 @@ impl PartitionedFeatureStore {
             types,
             latency: Duration::ZERO,
             async_router: None,
+            transport: None,
             mounted: None,
         })
     }
@@ -331,6 +338,7 @@ impl PartitionedFeatureStore {
             types,
             latency: Duration::ZERO,
             async_router: None,
+            transport: None,
             mounted: None,
         })
     }
@@ -422,6 +430,7 @@ impl PartitionedFeatureStore {
             types,
             latency: Duration::ZERO,
             async_router: None,
+            transport: None,
             mounted: Some(MountedState { cache, files }),
         })
     }
@@ -580,6 +589,43 @@ impl PartitionedFeatureStore {
         self
     }
 
+    /// Serve remote fetches through a real [`Transport`] (peer
+    /// processes over sockets, or an in-process peer) instead of the
+    /// local shard replicas. Takes precedence over the async router and
+    /// skips the simulated latency — the round trip is measured, not
+    /// modelled. Traffic accounting is unchanged, so the resulting
+    /// `TrafficMatrix` matches the simulated run by construction.
+    pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Serve shard-local rows of partition `part` on behalf of a peer
+    /// worker: reads go straight to the shard (the raw files on mounted
+    /// stores), bypassing this store's routers, halo caches, row cache
+    /// and simulated latency — the *requester* accounts the traffic, so
+    /// serving a peer leaves every local ledger untouched except the
+    /// disk-read counters.
+    pub fn serve_shard_rows(
+        &self,
+        key: &FeatureKey,
+        part: u32,
+        shard_idx: &[usize],
+    ) -> Result<Tensor> {
+        let ts = self.type_state(key)?;
+        let p = part as usize;
+        if p >= ts.shards.len() {
+            return Err(Error::Storage(format!(
+                "no partition {part} to serve ({} shards)",
+                ts.shards.len()
+            )));
+        }
+        match &ts.raw_files {
+            Some(files) => files[p].get(key, shard_idx),
+            None => ts.shards[p].get(key, shard_idx),
+        }
+    }
+
     /// The shared per-type routing (traffic counters live here).
     pub fn typed_router(&self) -> &TypedRouter {
         &self.router
@@ -699,6 +745,26 @@ impl PartitionedFeatureStore {
                 .map(|&pos| ts.local_row[idx[pos]] as usize)
                 .collect();
             ts.router.record_remote_to(p as u32, miss_positions.len() as u64);
+            if let Some(tr) = &self.transport {
+                // Real RPC: the peer owning partition `p` serves the
+                // shard rows. Accounting already happened above exactly
+                // as on the simulated path, and no simulated latency is
+                // charged — the round trip is the latency.
+                let fetched = tr.fetch_rows(key, p as u32, &shard_idx)?;
+                if fetched.rows() != miss_positions.len() || fetched.cols() != out.cols() {
+                    return Err(Error::Worker(format!(
+                        "peer returned [{}, {}] rows for a [{}, {}] fetch of {key:?}",
+                        fetched.rows(),
+                        fetched.cols(),
+                        miss_positions.len(),
+                        out.cols()
+                    )));
+                }
+                for (k, &pos) in miss_positions.iter().enumerate() {
+                    out.row_mut(pos).copy_from_slice(fetched.row(k));
+                }
+                continue;
+            }
             match &self.async_router {
                 Some(ar) => pending.push(ar.dispatch(
                     Arc::clone(&ts.shards[p]),

@@ -58,6 +58,7 @@ pub mod hetero_sampler;
 pub mod loader;
 pub mod prefetch;
 pub mod sampler;
+pub mod transport;
 
 pub use adj_halo_cache::AdjHaloCache;
 pub use async_router::{AsyncRouter, FetchPlan, PendingFetch};
@@ -69,6 +70,7 @@ pub use hetero_sampler::HeteroDistNeighborSampler;
 pub use loader::DistNeighborLoader;
 pub use prefetch::{MountPrefetcher, PrefetchStats};
 pub use sampler::DistNeighborSampler;
+pub use transport::{InProcessTransport, PeerServer, SocketTransport, Transport};
 
 use crate::error::{Error, Result};
 use crate::obs;

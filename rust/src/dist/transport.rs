@@ -1,0 +1,592 @@
+//! The RPC seam of the distributed feature store: a [`Transport`]
+//! carries one coalesced per-partition row fetch to whichever process
+//! owns the shard and returns the rows.
+//!
+//! Two implementations exist behind the one trait:
+//!
+//! * [`InProcessTransport`] — serves fetches from another
+//!   [`PartitionedFeatureStore`] in the same process; the reference
+//!   implementation the simulated pipeline is equivalent to.
+//! * [`SocketTransport`] + [`PeerServer`] — real inter-process RPC over
+//!   unix domain sockets with 4-byte little-endian length-prefixed
+//!   frames, used by `pyg2 dist-worker` ranks sharing a mounted bundle.
+//!   Each worker binds `peer{rank}.sock` in a shared socket directory
+//!   and serves its peers' fetches while running its own epoch; fetches
+//!   for partition `p` go to peer `p % world` (every worker mounts all
+//!   shards of the shared bundle, so any peer can serve any partition).
+//!
+//! Traffic accounting stays on the *requester* (the router counters
+//! move before the transport is consulted, exactly as on the simulated
+//! path), so the rank × partition `TrafficMatrix` of a real multi-
+//! process run matches the sequential simulation by construction.
+//! Serving a peer touches only the server's disk-read ledger — never
+//! its routers, halo caches, or row-cache counters.
+
+use super::feature_store::PartitionedFeatureStore;
+use crate::error::{Error, Result};
+use crate::obs;
+use crate::storage::FeatureKey;
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on one frame's payload — a desynced or hostile peer
+/// cannot make us allocate unboundedly.
+pub const MAX_FRAME: u32 = 256 << 20;
+
+/// Fetch opcode (request frames start with it).
+const OP_FETCH: u8 = 1;
+/// Response status bytes.
+const ST_OK: u8 = 0;
+const ST_ERR: u8 = 1;
+
+/// One coalesced per-partition remote fetch: return the rows of `key`
+/// at shard-local positions `shard_idx` within partition `part`'s
+/// shard, in order.
+pub trait Transport: Send + Sync {
+    fn fetch_rows(&self, key: &FeatureKey, part: u32, shard_idx: &[usize]) -> Result<Tensor>;
+}
+
+// --- frame codec --------------------------------------------------------
+
+/// Write one `[len: u32 LE][payload]` frame and flush it.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME as usize {
+        return Err(Error::Worker(format!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte cap",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (blocking until complete).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len);
+    if n > MAX_FRAME {
+        return Err(Error::Worker(format!(
+            "incoming frame of {n} bytes exceeds the {MAX_FRAME}-byte cap"
+        )));
+    }
+    let mut buf = vec![0u8; n as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked sequential reader over one frame's payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::Worker("truncated frame".into()))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.bytes(n)?.to_vec())
+            .map_err(|_| Error::Worker("non-utf8 string in frame".into()))
+    }
+}
+
+/// Encode a fetch request: opcode, key group/attr, partition, indices.
+fn encode_fetch(key: &FeatureKey, part: u32, shard_idx: &[usize]) -> Vec<u8> {
+    let mut buf =
+        Vec::with_capacity(17 + key.group.len() + key.attr.len() + 4 * shard_idx.len());
+    buf.push(OP_FETCH);
+    put_str(&mut buf, &key.group);
+    put_str(&mut buf, &key.attr);
+    buf.extend_from_slice(&part.to_le_bytes());
+    buf.extend_from_slice(&(shard_idx.len() as u32).to_le_bytes());
+    for &r in shard_idx {
+        buf.extend_from_slice(&(r as u32).to_le_bytes());
+    }
+    buf
+}
+
+/// Decode + serve a fetch request against `store`'s shard files.
+fn handle_fetch(frame: &[u8], store: &PartitionedFeatureStore) -> Result<Tensor> {
+    let mut r = Reader::new(frame);
+    let op = r.u8()?;
+    if op != OP_FETCH {
+        return Err(Error::Worker(format!("unknown request opcode {op}")));
+    }
+    let group = r.str()?;
+    let attr = r.str()?;
+    let part = r.u32()?;
+    let count = r.u32()? as usize;
+    let mut shard_idx = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        shard_idx.push(r.u32()? as usize);
+    }
+    store.serve_shard_rows(&FeatureKey::new(&group, &attr), part, &shard_idx)
+}
+
+fn encode_ok(t: &Tensor) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(9 + 4 * t.data().len());
+    buf.push(ST_OK);
+    buf.extend_from_slice(&(t.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(t.cols() as u32).to_le_bytes());
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+fn encode_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(5 + msg.len());
+    buf.push(ST_ERR);
+    put_str(&mut buf, msg);
+    buf
+}
+
+fn decode_response(frame: &[u8]) -> Result<Tensor> {
+    let mut r = Reader::new(frame);
+    match r.u8()? {
+        ST_OK => {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            let n = rows
+                .checked_mul(cols)
+                .and_then(|n| n.checked_mul(4))
+                .ok_or_else(|| Error::Worker("response shape overflows".into()))?;
+            let bytes = r.bytes(n)?;
+            let mut data = Vec::with_capacity(rows * cols);
+            for c in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Tensor::new(vec![rows, cols], data)
+        }
+        ST_ERR => Err(Error::Worker(format!("peer error: {}", r.str()?))),
+        st => Err(Error::Worker(format!("bad response status {st}"))),
+    }
+}
+
+// --- in-process transport -----------------------------------------------
+
+/// Serves fetches from a peer store living in the same process — the
+/// reference [`Transport`] the socket shim must be byte-identical to.
+/// The peer must hold the same shard contents (e.g. another mount of
+/// the same bundle, or the same partitioning of the same source).
+pub struct InProcessTransport {
+    peer: Arc<PartitionedFeatureStore>,
+}
+
+impl InProcessTransport {
+    pub fn new(peer: Arc<PartitionedFeatureStore>) -> Self {
+        Self { peer }
+    }
+}
+
+impl Transport for InProcessTransport {
+    fn fetch_rows(&self, key: &FeatureKey, part: u32, shard_idx: &[usize]) -> Result<Tensor> {
+        let _span = obs::span("router_wait");
+        self.peer.serve_shard_rows(key, part, shard_idx)
+    }
+}
+
+// --- socket transport ---------------------------------------------------
+
+/// Client side of the unix-socket RPC: one lazily dialed, cached
+/// connection per peer, round-tripping one frame per fetch. Partition
+/// `p`'s rows are requested from peer `p % world`. An I/O error drops
+/// the cached connection so the next fetch redials (and surfaces a
+/// typed error if the peer is really gone).
+pub struct SocketTransport {
+    sock_dir: PathBuf,
+    world: usize,
+    peers: Vec<Mutex<Option<UnixStream>>>,
+    timeout: Duration,
+}
+
+impl SocketTransport {
+    pub fn new(sock_dir: impl Into<PathBuf>, world: usize, timeout: Duration) -> Self {
+        Self {
+            sock_dir: sock_dir.into(),
+            world,
+            peers: (0..world).map(|_| Mutex::new(None)).collect(),
+            timeout,
+        }
+    }
+
+    /// Socket path of peer `rank` inside a shared socket directory.
+    pub fn peer_path(dir: &Path, rank: usize) -> PathBuf {
+        dir.join(format!("peer{rank}.sock"))
+    }
+
+    /// Drop every cached connection (unblocks peers' serve threads at
+    /// shutdown).
+    pub fn disconnect(&self) {
+        for slot in &self.peers {
+            *slot.lock().unwrap_or_else(|p| p.into_inner()) = None;
+        }
+    }
+
+    /// Dial a peer, retrying until it binds its socket or the timeout
+    /// elapses (workers come up in any order).
+    fn connect(&self, peer: usize) -> Result<UnixStream> {
+        let path = Self::peer_path(&self.sock_dir, peer);
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            match UnixStream::connect(&path) {
+                Ok(s) => {
+                    s.set_read_timeout(Some(self.timeout))?;
+                    s.set_write_timeout(Some(self.timeout))?;
+                    return Ok(s);
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Worker(format!(
+                            "peer {peer} unreachable at {}: {e}",
+                            path.display()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+
+    fn round_trip(&self, peer: usize, request: &[u8]) -> Result<Vec<u8>> {
+        let mut slot = self.peers[peer].lock().unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            *slot = Some(self.connect(peer)?);
+        }
+        let stream = slot.as_mut().expect("just connected");
+        let reply = write_frame(stream, request).and_then(|()| read_frame(stream));
+        if reply.is_err() {
+            // Broken connection: drop it so the next fetch redials.
+            *slot = None;
+        }
+        reply
+    }
+}
+
+impl Transport for SocketTransport {
+    fn fetch_rows(&self, key: &FeatureKey, part: u32, shard_idx: &[usize]) -> Result<Tensor> {
+        if self.world == 0 {
+            return Err(Error::Worker("socket transport with empty world".into()));
+        }
+        let peer = part as usize % self.world;
+        let request = encode_fetch(key, part, shard_idx);
+        // The simulated pipeline's router-wait span becomes a measured
+        // socket round trip here.
+        let _span = obs::span("router_wait");
+        let reply = self.round_trip(peer, &request)?;
+        decode_response(&reply)
+    }
+}
+
+// --- peer server --------------------------------------------------------
+
+/// Server side of the unix-socket RPC: accepts connections on this
+/// rank's socket and serves fetch frames from the worker's own store
+/// (shard files on mounted stores), one thread per connection.
+/// Shutting down (or dropping) stops the accept loop and joins every
+/// connection thread; connection threads exit on peer hang-up or the
+/// shutdown flag.
+pub struct PeerServer {
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl PeerServer {
+    pub fn spawn(path: impl Into<PathBuf>, store: Arc<PartitionedFeatureStore>) -> Result<Self> {
+        let path = path.into();
+        // A stale socket file from a crashed previous run would fail the
+        // bind; this process owns the path now.
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .map_err(|e| Error::Worker(format!("bind {}: {e}", path.display())))?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let accept = std::thread::spawn(move || {
+            let mut conns = Vec::new();
+            while !stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let store = Arc::clone(&store);
+                        let stop = Arc::clone(&stop);
+                        conns.push(std::thread::spawn(move || serve_conn(stream, store, stop)));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(Self { shutdown, accept: Some(accept), path })
+    }
+
+    /// Stop accepting, join every connection thread, unlink the socket.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for PeerServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// `read_exact` that re-checks the shutdown flag on every read timeout
+/// without losing partially read bytes. `Ok(false)` means the peer hung
+/// up cleanly at a frame boundary.
+fn read_exact_interruptible(
+    stream: &mut UnixStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(Error::Worker("peer hung up mid-frame".into()));
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    return Err(Error::Worker("server shutting down".into()));
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+fn serve_conn(mut stream: UnixStream, store: Arc<PartitionedFeatureStore>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    loop {
+        let mut len = [0u8; 4];
+        match read_exact_interruptible(&mut stream, &mut len, &stop) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return,
+        }
+        let n = u32::from_le_bytes(len);
+        if n > MAX_FRAME {
+            return; // desynced peer: drop the connection
+        }
+        let mut frame = vec![0u8; n as usize];
+        match read_exact_interruptible(&mut stream, &mut frame, &stop) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return,
+        }
+        // A bad request (unknown key, out-of-range row) is the peer's
+        // error, reported in-band; this connection keeps serving.
+        let reply = match handle_fetch(&frame, &store) {
+            Ok(t) => encode_ok(&t),
+            Err(e) => encode_err(&e.to_string()),
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::PartitionRouter;
+    use super::*;
+    use crate::partition::Partitioning;
+    use crate::storage::{FeatureStore, InMemoryFeatureStore};
+
+    fn src_store(n: usize, f: usize) -> InMemoryFeatureStore {
+        let data: Vec<f32> = (0..n * f).map(|i| i as f32).collect();
+        InMemoryFeatureStore::from_tensor(Tensor::new(vec![n, f], data).unwrap())
+    }
+
+    fn partitioned(n: usize, parts: usize, rank: u32) -> Arc<PartitionedFeatureStore> {
+        let assignment = (0..n).map(|v| (v % parts) as u32).collect();
+        let p = Partitioning { assignment, num_parts: parts };
+        let router = Arc::new(PartitionRouter::new(&p, rank).unwrap());
+        Arc::new(PartitionedFeatureStore::partition(&src_store(n, 3), router).unwrap())
+    }
+
+    #[test]
+    fn frame_codec_round_trips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello frames").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello frames");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        // Truncated stream errors instead of hanging or panicking.
+        let mut short = &buf[..3];
+        assert!(read_frame(&mut short).is_err());
+        // Oversized length prefix is rejected before allocation.
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+
+    #[test]
+    fn fetch_codec_round_trips() {
+        let key = FeatureKey::new("user", "x");
+        let req = encode_fetch(&key, 3, &[0, 7, 2]);
+        let mut r = Reader::new(&req);
+        assert_eq!(r.u8().unwrap(), OP_FETCH);
+        assert_eq!(r.str().unwrap(), "user");
+        assert_eq!(r.str().unwrap(), "x");
+        assert_eq!(r.u32().unwrap(), 3);
+        assert_eq!(r.u32().unwrap(), 3);
+        // Truncated payload is a typed error.
+        assert!(handle_fetch(&req[..5], &partitioned(6, 2, 0)).is_err());
+    }
+
+    #[test]
+    fn response_codec_round_trips_and_rejects_garbage() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let got = decode_response(&encode_ok(&t)).unwrap();
+        assert_eq!(got.shape(), t.shape());
+        assert_eq!(got.data(), t.data());
+        match decode_response(&encode_err("no such key")) {
+            Err(Error::Worker(m)) => assert!(m.contains("no such key")),
+            other => panic!("expected worker error, got {other:?}"),
+        }
+        assert!(decode_response(&[9, 9, 9]).is_err());
+        assert!(decode_response(&[]).is_err());
+    }
+
+    #[test]
+    fn in_process_transport_matches_inline_path() {
+        let n = 20;
+        let src = src_store(n, 3);
+        let plain = partitioned(n, 4, 0);
+        let peer = partitioned(n, 4, 1); // same shards, any rank's view
+        let routed = PartitionedFeatureStore::partition(
+            &src_store(n, 3),
+            Arc::new(
+                PartitionRouter::new(
+                    &Partitioning {
+                        assignment: (0..n).map(|v| (v % 4) as u32).collect(),
+                        num_parts: 4,
+                    },
+                    0,
+                )
+                .unwrap(),
+            ),
+        )
+        .unwrap()
+        .with_transport(Arc::new(InProcessTransport::new(peer)));
+        let idx = [7usize, 0, 13, 13, 19, 2, 5];
+        let a = plain.get(&FeatureKey::default_x(), &idx).unwrap();
+        let b = routed.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_eq!(a.data(), src.get(&FeatureKey::default_x(), &idx).unwrap().data());
+        // Accounting is identical to the inline path.
+        assert_eq!(plain.router().stats(), routed.router().stats());
+    }
+
+    #[test]
+    fn socket_transport_serves_and_survives_bad_requests() {
+        let dir = std::env::temp_dir().join(format!("pyg2_tsock_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let n = 20;
+        let served = partitioned(n, 4, 1);
+        let mut server =
+            PeerServer::spawn(SocketTransport::peer_path(&dir, 0), served).unwrap();
+
+        let transport =
+            Arc::new(SocketTransport::new(&dir, 1, Duration::from_secs(10)));
+        // A bad request errors in-band and leaves the connection usable.
+        assert!(transport
+            .fetch_rows(&FeatureKey::new("nope", "x"), 2, &[0])
+            .is_err());
+        let plain = partitioned(n, 4, 0);
+        let routed = PartitionedFeatureStore::partition(
+            &src_store(n, 3),
+            Arc::new(
+                PartitionRouter::new(
+                    &Partitioning {
+                        assignment: (0..n).map(|v| (v % 4) as u32).collect(),
+                        num_parts: 4,
+                    },
+                    0,
+                )
+                .unwrap(),
+            ),
+        )
+        .unwrap()
+        .with_transport(Arc::clone(&transport) as Arc<dyn Transport>);
+        let idx = [3usize, 16, 9, 0, 11, 11, 2];
+        let a = plain.get(&FeatureKey::default_x(), &idx).unwrap();
+        let b = routed.get(&FeatureKey::default_x(), &idx).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_eq!(plain.router().stats(), routed.router().stats());
+
+        transport.disconnect();
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dead_peer_is_a_typed_error_not_a_hang() {
+        let dir = std::env::temp_dir().join(format!("pyg2_tdead_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let transport = SocketTransport::new(&dir, 1, Duration::from_millis(50));
+        let start = Instant::now();
+        match transport.fetch_rows(&FeatureKey::default_x(), 0, &[0]) {
+            Err(Error::Worker(m)) => assert!(m.contains("unreachable")),
+            other => panic!("expected worker error, got {other:?}"),
+        }
+        assert!(start.elapsed() < Duration::from_secs(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -22,6 +22,11 @@ pub enum Error {
     /// A serving request missed its latency budget and was rejected
     /// rather than queued unboundedly.
     Deadline(String),
+    /// A mounted-store operation was attempted on a store that is not
+    /// mounted (or whose mount state is unavailable).
+    Mount(String),
+    /// A distributed worker process failed, died, or missed a deadline.
+    Worker(String),
 }
 
 impl fmt::Display for Error {
@@ -36,6 +41,8 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Mount(m) => write!(f, "mount error: {m}"),
+            Error::Worker(m) => write!(f, "worker failure: {m}"),
         }
     }
 }

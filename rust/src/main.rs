@@ -22,6 +22,7 @@ fn main() {
         "train" => cmd_train(&args),
         "partition" => cmd_partition(&args),
         "dist" => with_metrics(&args, cmd_dist),
+        "dist-worker" => with_metrics(&args, cmd_dist_worker),
         "serve-dist" => with_metrics(&args, cmd_serve_dist),
         "obs-check" => cmd_obs_check(&args),
         "explain" => cmd_explain(&args),
@@ -350,6 +351,15 @@ fn cmd_dist_mounted(
         if mount.prefetch { ", pipeline prefetch" } else { "" }
     );
 
+    // Real multi-process ranks: delegate to the launcher, which spawns
+    // `pyg2 dist-worker` processes over this same bundle.
+    if let Some(procs) = args.get("procs") {
+        let procs: usize = procs
+            .parse()
+            .map_err(|_| pyg2::error::Error::Config(format!("bad --procs {procs}")))?;
+        return cmd_dist_procs(args, dir, procs);
+    }
+
     if let Some(ranks) = args.get("ranks") {
         let ranks: usize = ranks
             .parse()
@@ -475,6 +485,109 @@ fn cmd_dist_mounted(
         print_prefetch(loader.prefetch_stats());
     }
     Ok(())
+}
+
+/// Loader/mount flags every `dist-worker` must see verbatim so its
+/// batch stream reproduces the launcher's knobs (launcher-only and
+/// per-worker flags — `--procs`, `--ranks`, `--rank`, `--mount`,
+/// `--sock-dir`, `--metrics-*` — are deliberately absent).
+fn forward_worker_flags(args: &Args) -> Vec<String> {
+    const FORWARD: [&str; 15] = [
+        "batch",
+        "workers",
+        "epochs",
+        "cache-mb",
+        "adj-cache-mb",
+        "page-adj",
+        "halo-adj",
+        "halo-adj-mb",
+        "prefetch",
+        "io-backend",
+        "seed-type",
+        "halo-cache",
+        "async",
+        "async-workers",
+        "fail-after-batches",
+    ];
+    let mut out = Vec::new();
+    for f in FORWARD {
+        if let Some(v) = args.get(f) {
+            out.push(format!("--{f}={v}"));
+        }
+    }
+    out.push(format!("--deadline-secs={}", args.get_usize("deadline-secs", 120)));
+    out
+}
+
+/// `pyg2 dist --procs N --mount DIR`: spawn N real worker processes
+/// over the shared bundle and aggregate their reports.
+fn cmd_dist_procs(args: &Args, dir: &str, procs: usize) -> pyg2::Result<()> {
+    let cfg = pyg2::coordinator::DistProcsConfig {
+        bin: std::env::current_exe()?,
+        mount: std::path::PathBuf::from(dir),
+        procs,
+        forward: forward_worker_flags(args),
+        deadline: std::time::Duration::from_secs(args.get_usize("deadline-secs", 120) as u64),
+        metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
+    };
+    let report = pyg2::coordinator::run_parent(&cfg)?;
+    println!(
+        "multi-process dist: {} batches / {} sampled nodes across {procs} workers \
+         in {:.2}s",
+        report.batches, report.sampled_nodes, report.wall_seconds
+    );
+    println!("traffic matrix (msgs(payload rows) per rank -> partition):");
+    println!("{}", report.matrix);
+    println!("{}", report.skew());
+    let total: f64 = report.rank_seconds.iter().sum();
+    println!(
+        "measured overlap: sum(rank secs) {total:.2} / wall {:.2} = {:.2}x",
+        report.wall_seconds,
+        report.overlap()
+    );
+    if let Some(m) = &report.merged_metrics {
+        println!("worker telemetry merged into {}", m.display());
+    }
+    Ok(())
+}
+
+/// One rank of a `pyg2 dist --procs N` run. Spawned by the launcher —
+/// it mounts the shared bundle read-only, serves its peers' feature
+/// fetches over its unix socket, and reports back over the control
+/// socket.
+fn cmd_dist_worker(args: &Args) -> pyg2::Result<()> {
+    let mount = pyg2::cli::MountOpts::from_args(args).map_err(pyg2::error::Error::Config)?;
+    let dir = mount
+        .dir
+        .as_deref()
+        .ok_or_else(|| pyg2::error::Error::Config("dist-worker requires --mount DIR".into()))?;
+    let sock_dir = args
+        .get("sock-dir")
+        .ok_or_else(|| pyg2::error::Error::Config("dist-worker requires --sock-dir DIR".into()))?;
+    let opts = pyg2::coordinator::DistOptions {
+        halo_cache: args.get_bool("halo-cache"),
+        async_fetch: args.get_bool("async"),
+        async_workers: args.get_usize("async-workers", 0),
+        latency: std::time::Duration::from_micros(args.get_usize("latency-us", 0) as u64),
+        prefetch: mount.prefetch,
+        io_backend: mount.io_backend,
+        halo_adj: mount.halo_adj,
+    };
+    let wc = pyg2::coordinator::WorkerConfig {
+        rank: mount.rank,
+        world: args.get_usize("world", 0),
+        sock_dir: std::path::PathBuf::from(sock_dir),
+        epochs: args.get_usize("epochs", 1) as u64,
+        batch_size: args.get_usize("batch", 64),
+        num_workers: args.get_usize("workers", 2),
+        seed_type: args.get("seed-type").map(str::to_string),
+        opts,
+        lru: mount.lru(),
+        deadline: std::time::Duration::from_secs(args.get_usize("deadline-secs", 120) as u64),
+        fail_after: args.get("fail-after-batches").and_then(|v| v.parse().ok()),
+    };
+    let bundle = pyg2::persist::Bundle::open(dir)?;
+    pyg2::coordinator::run_worker(&bundle, &wc)
 }
 
 /// Pipeline-prefetch counters (installed by `--prefetch`), with the

@@ -165,6 +165,15 @@ impl Drop for Exporter {
 /// (what `pyg2 obs-check` prints). Errors name the offending line.
 pub fn check_file(path: &Path) -> Result<usize> {
     let text = std::fs::read_to_string(path)?;
+    // A writer dying mid-record leaves a final line with no newline;
+    // `lines()` would hand it to the JSON parser looking complete (or,
+    // worse, parsing cleanly as a prefix record), so reject it up front.
+    if !text.is_empty() && !text.ends_with('\n') {
+        return Err(crate::error::Error::Storage(format!(
+            "{}: final line truncated mid-record (no trailing newline)",
+            path.display()
+        )));
+    }
     let mut lines = 0usize;
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
@@ -242,5 +251,31 @@ mod tests {
         std::fs::write(&missing, "{\"seq\":0}\n").unwrap();
         assert!(check_file(&missing).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn check_rejects_final_line_truncated_mid_record() {
+        let dir = std::env::temp_dir().join(format!("pyg2_obs_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        let ex = Exporter::start(&path, None).unwrap();
+        ex.finish().unwrap();
+        assert!(check_file(&path).is_ok(), "intact file must validate");
+        // Chop the trailing bytes off the last record, as a killed
+        // writer would.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 20]).unwrap();
+        let err = check_file(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exporter_start_on_unwritable_path_is_a_clean_error() {
+        let bad = Path::new("/nonexistent-dir/metrics.jsonl");
+        match Exporter::start(bad, None) {
+            Err(crate::error::Error::Io(_)) => {}
+            other => panic!("expected a clean I/O error, got {other:?}"),
+        }
     }
 }

@@ -688,6 +688,48 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_readonly_mounts_see_identical_bytes() {
+        // `pyg2 dist --procs N` has every worker process `Bundle::open`
+        // the same directory simultaneously; model that here with
+        // threads, each holding its own independent handle. Every
+        // mount must decode the same assignment, labels and adjacency
+        // with no interference.
+        let (g, p, bundle) = toy_bundle("concurrent");
+        let dir = bundle.dir().to_path_buf();
+        let baseline_adj: Vec<usize> = bundle
+            .load_adjacency(&bundle.manifest().edge_types[0].ty.clone())
+            .unwrap()
+            .iter()
+            .map(|(csc, _)| csc.num_edges())
+            .collect();
+        let joins: Vec<_> = (0..4)
+            .map(|_| {
+                let dir = dir.clone();
+                let assignment = p.assignment.clone();
+                let labels = g.y.clone();
+                let adj = baseline_adj.clone();
+                std::thread::spawn(move || {
+                    let b = Bundle::open(&dir).unwrap();
+                    assert_eq!(b.num_parts(), 3);
+                    assert_eq!(b.load_assignment(DEFAULT_GROUP).unwrap(), assignment);
+                    assert_eq!(b.load_labels(DEFAULT_GROUP).unwrap(), labels);
+                    let ty = b.manifest().edge_types[0].ty.clone();
+                    let got: Vec<usize> = b
+                        .load_adjacency(&ty)
+                        .unwrap()
+                        .iter()
+                        .map(|(csc, _)| csc.num_edges())
+                        .collect();
+                    assert_eq!(got, adj);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().expect("concurrent mount thread panicked");
+        }
+    }
+
+    #[test]
     fn missing_manifest_and_garbage_rejected() {
         let dir = tmp("absent");
         assert!(Bundle::open(&dir).is_err());

@@ -91,7 +91,10 @@ pub fn parse(input: &str) -> Result<Document, String> {
             return Err(format!("line {}: empty key or value", lineno + 1));
         }
         let value = parse_value(val_src).map_err(|e| format!("line {}: {}", lineno + 1, e))?;
-        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+        // The section table normally exists (created at the header line
+        // or the "" preamble above), but create it here rather than
+        // trust that invariant with an unwrap.
+        doc.entry(section.clone()).or_default().insert(key.to_string(), value);
     }
     Ok(doc)
 }
@@ -211,6 +214,28 @@ mod tests {
     fn rejects_unsupported() {
         assert!(parse("x = 1979-05-27").is_err());
         assert!(parse("[a\nb = 1").is_err());
+    }
+
+    #[test]
+    fn repeated_section_headers_accumulate_without_panicking() {
+        // Re-entering a section (and keys after a section that was first
+        // declared empty) must insert into the existing table — the
+        // regression here was an unwrap on the section lookup.
+        let doc = parse(
+            r#"
+            [a]
+            x = 1
+            [b]
+            [a]
+            y = 2
+            [b]
+            z = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["a"]["x"].as_i64(), Some(1));
+        assert_eq!(doc["a"]["y"].as_i64(), Some(2));
+        assert_eq!(doc["b"]["z"].as_i64(), Some(3));
     }
 
     #[test]

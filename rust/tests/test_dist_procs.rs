@@ -1,0 +1,157 @@
+//! Acceptance anchors for true multi-process ranks (`pyg2 dist --procs`):
+//!
+//! 1. the real run — N worker processes over one shared bundle, feature
+//!    rows fetched peer-to-peer over unix sockets — produces the SAME
+//!    per-rank batch digest streams and the SAME aggregated traffic
+//!    matrix as the sequential `multi_rank_epoch_mounted` simulation,
+//!    seed for seed;
+//! 2. a worker killed mid-epoch surfaces as a typed `Error::Worker` at
+//!    the parent within the deadline — no hang, no panic;
+//! 3. the CLI fails cleanly (exit 1, `error:` on stderr, no panic) on
+//!    an unwritable `--metrics-out` and on a telemetry file truncated
+//!    mid-record.
+
+use pyg2::coordinator::{multi_rank_epoch_mounted, DistOptions, DistProcsConfig};
+use pyg2::datasets::sbm::{self, SbmConfig};
+use pyg2::error::Error;
+use pyg2::loader::LoaderConfig;
+use pyg2::partition::ldg_partition;
+use pyg2::persist::{write_bundle, Bundle, LruConfig};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pyg2_test_procs").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn write_fixture_bundle(name: &str, parts: usize) -> Bundle {
+    let g = sbm::generate(&SbmConfig { num_nodes: 400, seed: 21, ..Default::default() }).unwrap();
+    let p = ldg_partition(&g.edge_index, parts, 1.1).unwrap();
+    write_bundle(tmp(name), &g, &p).unwrap()
+}
+
+fn procs_config(bundle: &Bundle, procs: usize, forward: &[&str]) -> DistProcsConfig {
+    DistProcsConfig {
+        bin: PathBuf::from(env!("CARGO_BIN_EXE_pyg2")),
+        mount: bundle.dir().to_path_buf(),
+        procs,
+        forward: forward.iter().map(|s| s.to_string()).collect(),
+        deadline: Duration::from_secs(60),
+        metrics_out: None,
+    }
+}
+
+#[test]
+fn multi_process_run_matches_simulation_seed_for_seed() {
+    let bundle = write_fixture_bundle("pin_bundle", 4);
+    let procs = 2;
+
+    let sim = multi_rank_epoch_mounted(
+        &bundle,
+        procs,
+        &LoaderConfig { batch_size: 16, num_workers: 2, ..Default::default() },
+        DistOptions::default(),
+        LruConfig::default(),
+        1,
+    )
+    .unwrap();
+
+    let real = pyg2::coordinator::run_parent(&procs_config(
+        &bundle,
+        procs,
+        &["--batch=16", "--workers=2", "--epochs=1"],
+    ))
+    .unwrap();
+
+    // Batch streams: every rank produced the same batches in the same
+    // order, down to feature bytes and edge weights.
+    assert_eq!(real.digests.len(), procs);
+    for (rank, (r, s)) in real.digests.iter().zip(&sim.digests).enumerate() {
+        assert!(!r.is_empty(), "rank {rank} produced no batches");
+        assert_eq!(r, s, "rank {rank}: digest stream diverged from the simulation");
+    }
+    assert_eq!(real.batches, sim.batches);
+    assert_eq!(real.sampled_nodes, sim.sampled_nodes);
+
+    // Traffic: the socket transport sits behind the requester-side
+    // accounting, so the aggregated rank x partition matrix is
+    // identical to the simulated one.
+    assert_eq!(
+        format!("{}", real.matrix),
+        format!("{}", sim.matrix),
+        "traffic matrix diverged from the simulation"
+    );
+
+    // The run actually overlapped: every rank reported wall-clock and
+    // the parent measured a positive window containing all of them.
+    assert_eq!(real.rank_seconds.len(), procs);
+    assert!(real.wall_seconds > 0.0);
+    assert!(real.overlap() > 0.0);
+}
+
+#[test]
+fn killed_worker_is_a_typed_error_within_the_deadline() {
+    let bundle = write_fixture_bundle("kill_bundle", 4);
+    let mut cfg = procs_config(
+        &bundle,
+        2,
+        // Rank 0 and rank 1 both exit abruptly after one batch; the
+        // parent must notice through child liveness, not a timeout.
+        &["--batch=16", "--workers=2", "--fail-after-batches=1"],
+    );
+    cfg.deadline = Duration::from_secs(45);
+    let t0 = Instant::now();
+    match pyg2::coordinator::run_parent(&cfg) {
+        Err(Error::Worker(m)) => {
+            assert!(
+                m.contains("exited prematurely") || m.contains("worker"),
+                "unexpected worker error: {m}"
+            );
+        }
+        Ok(_) => panic!("a killed worker must fail the run"),
+        Err(other) => panic!("expected Error::Worker, got {other}"),
+    }
+    assert!(
+        t0.elapsed() < cfg.deadline + Duration::from_secs(15),
+        "crash detection took {:?}, deadline was {:?}",
+        t0.elapsed(),
+        cfg.deadline
+    );
+}
+
+#[test]
+fn unwritable_metrics_out_is_a_clean_cli_error() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pyg2"))
+        .args([
+            "dist",
+            "--nodes=100",
+            "--parts=2",
+            "--metrics-out=/nonexistent-dir/metrics.jsonl",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "bad --metrics-out must fail");
+    assert_eq!(out.status.code(), Some(1), "clean error exit, not a panic abort");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "stderr was: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr was: {stderr}");
+}
+
+#[test]
+fn obs_check_rejects_file_truncated_mid_record() {
+    let dir = tmp("truncated");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.jsonl");
+    // No trailing newline: the tail of a snapshot record is missing.
+    std::fs::write(&path, "{\"seq\":0,\"ts_ms\":1,\"final\":true,\"counters\":{}").unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pyg2"))
+        .args(["obs-check", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("truncated"), "stderr was: {stderr}");
+}
